@@ -1,0 +1,76 @@
+//! Out-of-core factorization (paper Appendix A): the data lives in an
+//! `.nmfstore` file on disk and the QB compression streams column blocks —
+//! `2 + 2q` sequential passes, never materializing `X` in memory.
+//!
+//! ```sh
+//! cargo run --release --example out_of_core
+//! ```
+
+use randnmf::data::store::{self, NmfStore};
+use randnmf::prelude::*;
+use randnmf::sketch::blocked::{pass_count, qb_blocked};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("target/examples/out_of_core");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("big.nmfstore");
+
+    // Write a 20,000 x 2,000 rank-40 matrix to disk in 256-column blocks
+    // (~320 MB as f64 — generated block-by-block at full paper scale; kept
+    // moderate here so the example runs in seconds).
+    let (m, n, r, block) = (20_000usize, 2_000usize, 40usize, 256usize);
+    {
+        let mut rng = Pcg64::seed_from_u64(0);
+        let u = rng.gaussian_mat(m, r).map(f64::abs);
+        let mut writer = store::NmfStoreWriter::create(&path, m, n, block)?;
+        let mut j0 = 0;
+        while j0 < n {
+            let w = block.min(n - j0);
+            // Stream: generate only this block's V columns.
+            let vb = rng.gaussian_mat(r, w).map(f64::abs);
+            writer.write_block(&randnmf::linalg::gemm::matmul(&u, &vb))?;
+            j0 += w;
+        }
+        writer.finish()?;
+    }
+    let bytes = std::fs::metadata(&path)?.len();
+    println!("wrote {} ({:.1} MB) block={block}", path.display(), bytes as f64 / 1e6);
+
+    // Out-of-core QB: the only full-matrix touches are sequential passes.
+    let store = NmfStore::open(&path)?;
+    let opts = QbOptions::new(40).with_oversample(20).with_power_iters(2);
+    let t0 = std::time::Instant::now();
+    let mut rng = Pcg64::seed_from_u64(1);
+    let factors = qb_blocked(&store, opts, block, &mut rng)?;
+    println!(
+        "blocked QB: {:.2}s over {} sequential passes (q=2), sketch {}x{}",
+        t0.elapsed().as_secs_f64(),
+        pass_count(2),
+        factors.q.rows(),
+        factors.q.cols()
+    );
+
+    // Compressed HALS iterations on B (l x n), no further disk access.
+    let nmf_opts = NmfOptions::new(40).with_max_iter(100).with_seed(2);
+    let solver = RandomizedHals::new(nmf_opts);
+    let sample = store.read_cols(0, 256)?;
+    let x_mean = sample.sum() / sample.len() as f64;
+    let x_norm_est = randnmf::linalg::norms::fro_norm_sq(&factors.b);
+    let fit = solver.iterate_compressed(
+        &factors,
+        x_mean,
+        x_norm_est,
+        std::time::Instant::now(),
+        &mut rng,
+    )?;
+    println!(
+        "compressed rHALS: {} iters in {:.2}s, compressed-estimate error {:.6}",
+        fit.iters, fit.elapsed_s, fit.final_rel_err
+    );
+
+    // Validate against in-memory ground truth (fits in RAM here).
+    let x = store.read_all()?;
+    let true_err = fit.model.relative_error(&x);
+    println!("exact relative error on the full data: {true_err:.6}");
+    Ok(())
+}

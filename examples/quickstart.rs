@@ -1,0 +1,42 @@
+//! Quickstart: factorize a synthetic nonnegative low-rank matrix with
+//! deterministic and randomized HALS and compare.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use randnmf::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 2000×1000 nonnegative matrix of exact rank 20.
+    let mut rng = Pcg64::seed_from_u64(0);
+    let x = synthetic::low_rank_nonneg(2000, 1000, 20, 0.0, &mut rng);
+    println!("data: {}x{}, rank 20", x.rows(), x.cols());
+
+    // Paper defaults: oversampling p = 20, q = 2 subspace iterations.
+    let opts = NmfOptions::new(20).with_max_iter(150).with_seed(7);
+
+    let det = Hals::new(opts.clone()).fit(&x)?;
+    println!(
+        "deterministic HALS : {:>7.2}s  {} iters  err {:.6}",
+        det.elapsed_s, det.iters, det.final_rel_err
+    );
+
+    let rand = RandomizedHals::new(opts).fit(&x)?;
+    println!(
+        "randomized HALS    : {:>7.2}s  {} iters  err {:.6}  (speedup {:.1}x)",
+        rand.elapsed_s,
+        rand.iters,
+        rand.final_rel_err,
+        det.elapsed_s / rand.elapsed_s
+    );
+
+    // The factors are feasible and reusable.
+    assert!(rand.model.w.is_nonneg() && rand.model.h.is_nonneg());
+
+    // Project new data onto the learned basis (nonnegative least squares).
+    let y = synthetic::low_rank_nonneg(2000, 50, 20, 0.0, &mut rng);
+    let codes = rand.model.transform(&y, 100);
+    println!("transformed 50 new columns -> codes {}x{}", codes.rows(), codes.cols());
+    Ok(())
+}

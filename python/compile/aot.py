@@ -1,0 +1,139 @@
+"""AOT lowering: JAX/Pallas (L2/L1) -> HLO text artifacts for the Rust runtime.
+
+HLO *text* — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla_extension
+0.5.1 runtime behind the ``xla`` crate rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Each artifact is one jitted function at one concrete shape. The manifest
+(``artifacts/manifest.json``) records op name, shapes, dtype and file so
+the Rust ``runtime::registry`` can discover what exists.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Idempotent: `make artifacts` skips the build when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# ---------------------------------------------------------------------------
+# Shape variants.
+#
+# One artifact per (op, shape). The variants cover the shapes the examples
+# and the engine-comparison bench run through the XLA engine; anything else
+# falls back to the pure-Rust CpuEngine (runtime::registry handles the
+# dispatch). Keeping this list short keeps `make artifacts` fast.
+# ---------------------------------------------------------------------------
+
+# (name, m, n, k, l, q_iters)
+RHALS_VARIANTS = [
+    ("demo", 2000, 1000, 16, 36, 2),
+    ("quickstart", 500, 400, 8, 28, 2),
+]
+
+HALS_VARIANTS = [
+    ("demo", 2000, 1000, 16),
+    ("quickstart", 500, 400, 8),
+]
+
+QB_VARIANTS = [
+    ("demo", 2000, 1000, 36, 2),
+    ("quickstart", 500, 400, 28, 2),
+]
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    for tag, m, n, k, l, q_iters in RHALS_VARIANTS:
+        fn = jax.jit(model.rhals_iteration)
+        lowered = fn.lower(
+            spec(l, n), spec(m, l), spec(m, k), spec(l, k), spec(n, k)
+        )
+        fname = f"rhals_iter_{m}x{n}_k{k}_l{l}.hlo.txt"
+        _write(out_dir, fname, to_hlo_text(lowered))
+        entries.append({
+            "op": "rhals_iter", "tag": tag, "file": fname, "dtype": "f32",
+            "m": m, "n": n, "k": k, "l": l,
+            "inputs": [[l, n], [m, l], [m, k], [l, k], [n, k]],
+            "outputs": [[m, k], [l, k], [n, k]],
+        })
+
+    for tag, m, n, k in HALS_VARIANTS:
+        fn = jax.jit(model.hals_iteration)
+        lowered = fn.lower(spec(m, n), spec(m, k), spec(n, k))
+        fname = f"hals_iter_{m}x{n}_k{k}.hlo.txt"
+        _write(out_dir, fname, to_hlo_text(lowered))
+        entries.append({
+            "op": "hals_iter", "tag": tag, "file": fname, "dtype": "f32",
+            "m": m, "n": n, "k": k, "l": 0,
+            "inputs": [[m, n], [m, k], [n, k]],
+            "outputs": [[m, k], [n, k]],
+        })
+
+    for tag, m, n, l, q_iters in QB_VARIANTS:
+        fn = jax.jit(functools.partial(model.qb_sketch, q_iters=q_iters))
+        lowered = fn.lower(spec(m, n), spec(n, l))
+        fname = f"qb_sketch_{m}x{n}_l{l}_q{q_iters}.hlo.txt"
+        _write(out_dir, fname, to_hlo_text(lowered))
+        entries.append({
+            "op": "qb_sketch", "tag": tag, "file": fname, "dtype": "f32",
+            "m": m, "n": n, "k": 0, "l": l, "q_iters": q_iters,
+            "inputs": [[m, n], [n, l]],
+            "outputs": [[m, l], [l, n]],
+        })
+
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def _write(out_dir: str, fname: str, text: str) -> None:
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = build_all(args.out_dir)
+    print(f"manifest: {len(manifest['entries'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

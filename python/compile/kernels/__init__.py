@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from . import hals_update, matmul, ref  # noqa: F401

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: the HALS coordinate sweep.
+
+This is the paper's compute hot-spot restructured for TPU semantics (see
+DESIGN.md §7 "Hardware adaptation"):
+
+* The sweep ``for j in 1..k: fac[:,j] <- update`` has a *sequential*
+  dependency over components ``j`` but is *embarrassingly parallel over
+  rows* of the factor panel.
+* BlockSpec therefore tiles the factor along the row dimension into
+  VMEM-resident ``(BR, k)`` panels; the grid walks the panels and the
+  ``j``-loop runs inside the kernel (registers/VMEM only).
+* With ``BR = 256`` and ``k <= 64`` a panel is at most 64 KiB — three
+  live panels (fac, num, out) fit comfortably in a TPU core's ~16 MiB
+  VMEM alongside the broadcast ``k x k`` Gram tile.
+
+The kernel is lowered with ``interpret=True`` (CPU-executable HLO); on a
+real TPU the same BlockSpec schedule maps panels to the VPU lanes. The
+arithmetic intensity is ``O(k)`` flops per loaded element, so for the
+paper's ``k = 16..64`` the sweep is compute-bound on the VPU rather than
+HBM-bound — the analysis the §Perf section of EXPERIMENTS.md records.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DEAD_EPS
+
+# Rows per VMEM panel. 256 x 64 x 4 B = 64 KiB per operand.
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _sweep_kernel(num_ref, gram_ref, fac_in_ref, fac_out_ref, *, k, l1, l2, clamp):
+    """Kernel body: full j-sweep over one (BR, k) panel."""
+    fac = fac_in_ref[...]
+    num = num_ref[...]
+    gram = gram_ref[...]
+
+    def body(j, fac):
+        gcol = jax.lax.dynamic_slice(gram, (0, j), (k, 1))  # (k, 1)
+        gjj = jax.lax.dynamic_slice(gram, (j, j), (1, 1))[0, 0]
+        facj = jax.lax.dynamic_slice(fac, (0, j), (fac.shape[0], 1))[:, 0]
+        numj = jax.lax.dynamic_slice(num, (0, j), (num.shape[0], 1))[:, 0]
+        cross = (fac @ gcol)[:, 0] - gjj * facj
+        val = (l2 * facj + numj - l1 - cross) / (gjj + l2)
+        if clamp:
+            val = jnp.maximum(val, 0.0)
+        val = jnp.where(gjj < DEAD_EPS, facj, val)
+        return jax.lax.dynamic_update_slice(fac, val[:, None], (0, j))
+
+    fac = jax.lax.fori_loop(0, k, body, fac)
+    fac_out_ref[...] = fac
+
+
+@functools.partial(
+    jax.jit, static_argnames=("l1", "l2", "clamp", "block_rows")
+)
+def hals_sweep(fac, num, gram, *, l1=0.0, l2=0.0, clamp=True,
+               block_rows=DEFAULT_BLOCK_ROWS):
+    """One HALS coordinate sweep over a tall-skinny ``(r, k)`` factor panel.
+
+    Drop-in Pallas twin of :func:`..kernels.ref.hals_sweep_ref`; the grid
+    parallelizes over row panels, the sequential component loop runs
+    in-kernel.
+    """
+    r, k = fac.shape
+    assert num.shape == (r, k), (num.shape, (r, k))
+    assert gram.shape == (k, k)
+    br = min(block_rows, r)
+    # Pad rows so the grid divides evenly; padded rows sweep garbage that
+    # is sliced away (they cannot contaminate real rows: rows independent).
+    pad = (-r) % br
+    if pad:
+        fac = jnp.pad(fac, ((0, pad), (0, 0)))
+        num = jnp.pad(num, ((0, pad), (0, 0)))
+    rp = fac.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_sweep_kernel, k=k, l1=l1, l2=l2, clamp=clamp),
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),  # num panel
+            pl.BlockSpec((k, k), lambda i: (0, 0)),   # gram broadcast
+            pl.BlockSpec((br, k), lambda i: (i, 0)),  # fac panel
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, k), fac.dtype),
+        interpret=True,
+    )(num, gram, fac)
+    return out[:r] if pad else out

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: tiled matrix multiply for the QB sketch.
+
+The compression stage's dominant cost is the sketch product ``Y = X @ Omega``
+(and the projection ``B = Q^T X``). On TPU this is MXU work; the kernel
+below is the canonical Pallas matmul schedule:
+
+* grid ``(M/BM, N/BN, K/BK)`` with the K dimension innermost,
+* ``(BM, BK) x (BK, BN)`` VMEM tiles feeding the 128x128 MXU,
+* an output tile that lives in VMEM across the K loop, zero-initialized at
+  ``k == 0`` via ``pl.when`` (accumulator never round-trips to HBM).
+
+With the default 256/256/256 tiles the three live buffers take
+3 * 256KiB = 768 KiB of VMEM and each loaded element is reused 256 times —
+comfortably compute-bound on the MXU (see EXPERIMENTS.md §Perf for the
+arithmetic-intensity table). Lowered with ``interpret=True`` for CPU
+execution; the BlockSpec schedule is what a real TPU would compile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_tiled(a, b, *, bm=256, bn=256, bk=256):
+    """``a @ b`` via the tiled Pallas schedule (MXU-shaped accumulation)."""
+    m, ka = a.shape
+    kb, n = b.shape
+    assert ka == kb, (a.shape, b.shape)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, ka)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    pad_k = (-ka) % bk
+    if pad_m or pad_k:
+        a = jnp.pad(a, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        b = jnp.pad(b, ((0, pad_k), (0, pad_n)))
+    mp, kp = a.shape
+    _, np_ = b.shape
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n] if (pad_m or pad_n) else out

@@ -1,0 +1,175 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+plain `jax.numpy` with no Pallas involvement. The pytest suite asserts
+`assert_allclose(kernel(...), ref(...))` across shape/seed sweeps — this is
+the core L1 correctness signal, mirroring the Rust-side oracle tests
+(`matmul` vs `matmul_naive`, etc.).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEAD_EPS = 1e-12
+
+
+def hals_sweep_ref(fac, num, gram, *, l1=0.0, l2=0.0, clamp=True):
+    """One HALS coordinate sweep over a tall-skinny factor panel.
+
+    Mirrors `randnmf::nmf::hals::sweep_factor` exactly (paper Eqs. 14/15
+    with the regularized Eqs. 30/31/33/34):
+
+        fac[:,j] <- [ (l2*fac[:,j] + num[:,j] - l1 - sum_{i!=j} G[i,j]*fac[:,i])
+                      / (G[j,j] + l2) ]_+
+
+    The j-loop is sequential (components couple through `fac`); rows are
+    independent.
+    """
+    fac = jnp.asarray(fac)
+    num = jnp.asarray(num)
+    gram = jnp.asarray(gram)
+    k = fac.shape[1]
+    for j in range(k):
+        gjj = gram[j, j]
+        cross = fac @ gram[:, j] - gjj * fac[:, j]
+        val = (l2 * fac[:, j] + num[:, j] - l1 - cross) / (gjj + l2)
+        if clamp:
+            val = jnp.maximum(val, 0.0)
+        val = jnp.where(gjj < DEAD_EPS, fac[:, j], val)
+        fac = fac.at[:, j].set(val)
+    return fac
+
+
+def matmul_ref(a, b):
+    """Plain dense product (oracle for the tiled Pallas matmul)."""
+    return jnp.asarray(a) @ jnp.asarray(b)
+
+
+def hals_iteration_ref(x, w, ht, *, l1_w=0.0, l2_w=0.0, l1_h=0.0, l2_h=0.0):
+    """One full deterministic HALS iteration (paper Eqs. 14-15), in the
+    transposed layout used throughout (`ht : n x k`)."""
+    s = w.T @ w
+    at = x.T @ w
+    ht = hals_sweep_ref(ht, at, s, l1=l1_h, l2=l2_h, clamp=True)
+    v = ht.T @ ht
+    t = x @ ht
+    w = hals_sweep_ref(w, t, v, l1=l1_w, l2=l2_w, clamp=True)
+    return w, ht
+
+
+def rhals_iteration_ref(b, q, w, wt, ht, *, l1_w=0.0, l2_w=0.0, l1_h=0.0, l2_h=0.0):
+    """One randomized HALS iteration (paper Algorithm 1 lines 12-22) with
+    the batched projection variant: sweep W~ unclamped, then
+    W = [Q W~ - shrink]_+ and W~ = Q^T W."""
+    r = b.T @ wt
+    s = w.T @ w
+    ht = hals_sweep_ref(ht, r, s, l1=l1_h, l2=l2_h, clamp=True)
+    t = b @ ht
+    v = ht.T @ ht
+    wt = hals_sweep_ref(wt, t, v, l1=0.0, l2=l2_w, clamp=False)
+    w = q @ wt
+    if l1_w != 0.0:
+        denom = jnp.maximum(jnp.diag(v) + l2_w, DEAD_EPS)
+        w = w - l1_w / denom[None, :]
+    w = jnp.maximum(w, 0.0)
+    wt = q.T @ w
+    return w, wt, ht
+
+
+def chol_pure(a, floor=1e-30):
+    """Cholesky factorization built from native HLO ops only.
+
+    `jnp.linalg.cholesky` lowers to the LAPACK custom-call `lapack_spotrf`
+    on the CPU platform, which the xla_extension 0.5.1 runtime behind the
+    Rust `xla` crate cannot resolve. This column-by-column `fori_loop`
+    formulation lowers to a plain While loop over dynamic slices — pure
+    HLO, runnable on any PJRT backend. The factor is `k x k` with
+    `k = l <= 64`, so the sequential loop is negligible next to the sketch
+    GEMMs.
+
+    `floor` guards the pivot `a_jj - s_j`: on (numerically) rank-deficient
+    Grams the f32 subtraction cancels catastrophically, the trailing block
+    goes indefinite, and an unguarded Cholesky amplifies the error until
+    later Grams overflow. When the pivot falls below `floor` the column is
+    treated as **dead**: its diagonal is set to a huge scale-tied value and
+    its off-diagonals to zero, so the subsequent triangular solve returns a
+    ~zero basis column for that direction (exactly the rank-revealing
+    behaviour QB wants) and later columns see no contamination. Callers
+    pass a floor tied to the Gram's scale (the Tikhonov shift).
+    """
+    a = jnp.asarray(a)
+    n = a.shape[0]
+    idx = jnp.arange(n)
+    floor = jnp.asarray(floor, a.dtype)
+    # Finite "infinity": big enough that solved columns vanish, small
+    # enough that its square stays representable in f32.
+    big = jnp.sqrt(jnp.maximum(jnp.trace(a), 1.0)) * jnp.asarray(1e8, a.dtype)
+
+    def body(j, l):
+        row_j = jax.lax.dynamic_slice(l, (j, 0), (1, n))[0]       # L[j, :]
+        s = l @ row_j                                             # sum_{p<j} L[i,p]L[j,p]
+        sj = jax.lax.dynamic_slice(s, (j,), (1,))[0]
+        ajj = jax.lax.dynamic_slice(a, (j, j), (1, 1))[0, 0]
+        piv = ajj - sj
+        dead = piv < floor
+        d = jnp.sqrt(jnp.maximum(piv, floor))
+        acol = jax.lax.dynamic_slice(a, (0, j), (n, 1))[:, 0]
+        col = (acol - s) / d
+        col = jnp.where(idx > j, col, 0.0)
+        col = jnp.where(dead, jnp.zeros_like(col), col)
+        col = jnp.where(idx == j, jnp.where(dead, big, d), col)
+        return jax.lax.dynamic_update_slice(l, col[:, None], (0, j))
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def solve_y_lt_pure(y, l):
+    """Solve `Q L^T = Y` for `Q` (right triangular solve) with native HLO:
+    forward substitution over the `l` columns, each an `O(m·l)` update."""
+    y = jnp.asarray(y)
+    n = y.shape[1]
+
+    def body(j, q):
+        lrow = jax.lax.dynamic_slice(l, (j, 0), (1, n))[0]        # L[j, :]
+        s = q @ lrow                                              # Σ_{p<j} Q[:,p]L[j,p]
+        ljj = jax.lax.dynamic_slice(l, (j, j), (1, 1))[0, 0]
+        ycol = jax.lax.dynamic_slice(y, (0, j), (y.shape[0], 1))[:, 0]
+        col = (ycol - s) / ljj
+        return jax.lax.dynamic_update_slice(q, col[:, None], (0, j))
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(y))
+
+
+def cholqr2_ref(y):
+    """Orthonormalization via two rounds of Cholesky-QR over the pure-HLO
+    kernels above.
+
+    The Gram is Tikhonov-shifted (`G + εI`) so rank-deficient sketches stay
+    factorizable; directions beyond the numerical rank come out as
+    near-zero columns (harmless for QB: they contribute nothing to `QB`,
+    and randomized HALS treats them as dead components)."""
+
+    def one(y):
+        g = y.T @ y
+        eps = 1e-6 * jnp.trace(g) / max(y.shape[1], 1) + 1e-30
+        l = chol_pure(g + eps * jnp.eye(y.shape[1], dtype=y.dtype), floor=eps)
+        return solve_y_lt_pure(y, l)
+
+    q = one(y)
+    return one(q)
+
+
+def qb_sketch_ref(x, omega, q_iters: int):
+    """QB decomposition (paper Algorithm 1 lines 1-9) with CholeskyQR2
+    orthonormalization and `q_iters` stabilized subspace iterations."""
+    y = x @ omega
+    for _ in range(q_iters):
+        q = cholqr2_ref(y)
+        z = x.T @ q
+        qz = cholqr2_ref(z)
+        y = x @ qz
+    q = cholqr2_ref(y)
+    b = q.T @ x
+    return q, b

@@ -1,0 +1,85 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernels.
+
+Three jit-able entry points, each lowered AOT by :mod:`compile.aot` into an
+HLO-text artifact that the Rust runtime executes via PJRT:
+
+* :func:`rhals_iteration` — one randomized-HALS iteration (Algorithm 1
+  lines 12–22, batched projection). Inputs ``(b, q, w, wt, ht)``; outputs
+  the updated ``(w, wt, ht)``.
+* :func:`hals_iteration` — one deterministic HALS iteration (Eqs. 14–15),
+  the XLA-engine baseline.
+* :func:`qb_sketch` — the compression stage (Algorithm 1 lines 1–9) with
+  CholeskyQR2 orthonormalization (native HLO ops only — no LAPACK
+  custom-calls, so the artifact runs on the stock PJRT CPU client).
+
+Shapes are static per artifact; the AOT driver emits one artifact per
+shape variant listed in its manifest. Python never runs at serve time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hals_update import hals_sweep
+from .kernels.matmul import matmul_tiled
+from .kernels.ref import DEAD_EPS, cholqr2_ref as _cholqr2
+
+
+def rhals_iteration(b, q, w, wt, ht, *, l1_w=0.0, l2_w=0.0, l1_h=0.0, l2_h=0.0):
+    """One randomized HALS iteration (batched projection variant).
+
+    Args:
+      b:  ``(l, n)`` compressed surrogate ``Q^T X``.
+      q:  ``(m, l)`` orthonormal range basis.
+      w:  ``(m, k)`` nonnegative high-dimensional basis.
+      wt: ``(l, k)`` compressed basis ``Q^T W``.
+      ht: ``(n, k)`` transposed coefficients.
+
+    Returns:
+      ``(w, wt, ht)`` after the iteration.
+    """
+    # --- H sweep (Eq. 19; high-dimensional Gram for scaling, §3.2) ---
+    r = b.T @ wt                     # (n, k)
+    s = w.T @ w                      # (k, k)
+    ht = hals_sweep(ht, r, s, l1=l1_h, l2=l2_h, clamp=True)
+
+    # --- W~ sweep + projection (Eqs. 20-22) ---
+    t = b @ ht                       # (l, k)
+    v = ht.T @ ht                    # (k, k)
+    wt = hals_sweep(wt, t, v, l1=0.0, l2=l2_w, clamp=False)
+    w = q @ wt                       # (m, k)
+    if l1_w != 0.0:
+        denom = jnp.maximum(jnp.diag(v) + l2_w, DEAD_EPS)
+        w = w - l1_w / denom[None, :]
+    w = jnp.maximum(w, 0.0)
+    wt = q.T @ w                     # (l, k)
+    return w, wt, ht
+
+
+def hals_iteration(x, w, ht, *, l1_w=0.0, l2_w=0.0, l1_h=0.0, l2_h=0.0):
+    """One deterministic HALS iteration (Eqs. 14-15), transposed layout."""
+    s = w.T @ w
+    at = x.T @ w
+    ht = hals_sweep(ht, at, s, l1=l1_h, l2=l2_h, clamp=True)
+    v = ht.T @ ht
+    t = x @ ht
+    w = hals_sweep(w, t, v, l1=l1_w, l2=l2_w, clamp=True)
+    return w, ht
+
+
+def qb_sketch(x, omega, *, q_iters: int = 2):
+    """QB compression (Algorithm 1 lines 1-9): ``(x, omega) -> (q, b)``.
+
+    The sketch products go through the tiled Pallas matmul; the
+    orthonormalizations use CholeskyQR2 (native HLO).
+    """
+    y = matmul_tiled(x, omega)           # (m, l)
+    for _ in range(q_iters):
+        qmat = _cholqr2(y)
+        z = matmul_tiled(x.T, qmat)      # (n, l)
+        qz = _cholqr2(z)
+        y = matmul_tiled(x, qz)
+    qmat = _cholqr2(y)
+    b = matmul_tiled(qmat.T, x)          # (l, n)
+    return qmat, b

@@ -1,0 +1,114 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and seeds; every property mirrors an invariant the
+Rust test suite checks on its side of the stack.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hals_update import hals_sweep
+from compile.kernels.matmul import matmul_tiled
+
+
+def _case(seed, r, k, spd=True):
+    rng = np.random.default_rng(seed)
+    fac = rng.random((r, k), dtype=np.float32)
+    num = rng.standard_normal((r, k)).astype(np.float32)
+    other = rng.random((max(2 * k, 8), k), dtype=np.float32)
+    gram = (other.T @ other).astype(np.float32) if spd else np.eye(k, dtype=np.float32)
+    return jnp.asarray(fac), jnp.asarray(num), jnp.asarray(gram)
+
+
+class TestHalsSweep:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31),
+        r=st.integers(1, 300),
+        k=st.integers(1, 24),
+        block=st.sampled_from([8, 32, 256]),
+    )
+    def test_matches_ref_across_shapes(self, seed, r, k, block):
+        fac, num, gram = _case(seed, r, k)
+        got = hals_sweep(fac, num, gram, block_rows=block)
+        want = ref.hals_sweep_ref(fac, num, gram)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31),
+        l1=st.floats(0.0, 2.0),
+        l2=st.floats(0.0, 2.0),
+        clamp=st.booleans(),
+    )
+    def test_regularized_and_unclamped_variants(self, seed, l1, l2, clamp):
+        fac, num, gram = _case(seed, 64, 6)
+        got = hals_sweep(fac, num, gram, l1=l1, l2=l2, clamp=clamp)
+        want = ref.hals_sweep_ref(fac, num, gram, l1=l1, l2=l2, clamp=clamp)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    def test_clamped_output_nonnegative(self):
+        fac, num, gram = _case(7, 128, 9)
+        out = hals_sweep(fac, num - 10.0, gram)  # adversarial numerators
+        assert float(out.min()) >= 0.0
+
+    def test_dead_component_left_untouched(self):
+        fac, num, gram = _case(11, 40, 5)
+        gram = gram.at[2, :].set(0.0).at[:, 2].set(0.0)  # kill component 2
+        out = hals_sweep(fac, num, gram)
+        want = ref.hals_sweep_ref(fac, num, gram)
+        np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(out[:, 2], fac[:, 2], rtol=0, atol=0)
+
+    def test_fixed_point_at_ls_solution(self):
+        # If fac solves the unconstrained LS (fac = num @ inv(gram)) and is
+        # positive, a sweep is a no-op (same invariant as the Rust test).
+        rng = np.random.default_rng(3)
+        other = rng.random((40, 4), dtype=np.float32) + 0.1
+        gram = jnp.asarray(other.T @ other)
+        fac = jnp.asarray(rng.random((30, 4), dtype=np.float32) + 0.1)
+        num = fac @ gram
+        out = hals_sweep(fac, num, gram)
+        np.testing.assert_allclose(out, fac, rtol=2e-4, atol=2e-4)
+
+    def test_row_padding_harmless(self):
+        # r not divisible by block_rows exercises the padding path.
+        fac, num, gram = _case(13, 257, 7)
+        got = hals_sweep(fac, num, gram, block_rows=64)
+        want = ref.hals_sweep_ref(fac, num, gram)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+class TestMatmulTiled:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31),
+        m=st.integers(1, 200),
+        k=st.integers(1, 120),
+        n=st.integers(1, 200),
+    )
+    def test_matches_ref_across_shapes(self, seed, m, k, n):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        got = matmul_tiled(a, b, bm=64, bn=64, bk=64)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("tiles", [(16, 16, 16), (32, 64, 16), (256, 256, 256)])
+    def test_tile_shape_invariance(self, tiles):
+        bm, bn, bk = tiles
+        rng = np.random.default_rng(5)
+        a = jnp.asarray(rng.random((100, 70), dtype=np.float32))
+        b = jnp.asarray(rng.random((70, 90), dtype=np.float32))
+        got = matmul_tiled(a, b, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, a @ b, rtol=2e-4, atol=2e-4)
+
+    def test_identity(self):
+        a = jnp.eye(33, dtype=jnp.float32)
+        b = jnp.asarray(np.random.default_rng(6).random((33, 21), dtype=np.float32))
+        np.testing.assert_allclose(matmul_tiled(a, b, bm=16, bn=16, bk=16), b,
+                                   rtol=1e-6, atol=1e-6)

@@ -1,0 +1,49 @@
+//! Figs. 5–6 — faces: relative error and projected gradient vs
+//! computational time (Fig. 5) and vs iteration (Fig. 6), for
+//! deterministic HALS, randomized HALS, and both with SVD (NNDSVDa)
+//! initialization.
+//!
+//! Expected shape: the randomized curves reach a given error level in a
+//! fraction of the deterministic wall-clock (lower per-iteration cost);
+//! per-*iteration* curves nearly coincide; SVD init starts lower and
+//! stays slightly ahead of random init.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use randnmf::bench::{banner, bench_scale};
+use randnmf::data::faces::{self, FacesSpec};
+use randnmf::nmf::solver::NmfSolver;
+use randnmf::prelude::*;
+
+fn main() {
+    banner("Figs. 5-6", "faces convergence traces (error + PG vs time/iter)");
+    let s = bench_scale(0.2);
+    let spec = FacesSpec {
+        height: ((192.0 * s) as usize).max(24),
+        width: ((168.0 * s) as usize).max(21),
+        n_images: ((2410.0 * s) as usize).max(80),
+        n_parts: 16,
+        noise: 0.02,
+        seed: 42,
+    };
+    println!("faces: {} x {}", spec.pixels(), spec.n_images);
+    let x = faces::generate(&spec).x;
+    let iters = ((500.0 * s.max(0.2)) as usize).max(100);
+    let base = NmfOptions::new(16).with_max_iter(iters).with_seed(7).with_trace_every(1);
+
+    let solvers: Vec<(String, Box<dyn NmfSolver>)> = vec![
+        ("hals-random-init".into(), Box::new(Hals::new(base.clone()))),
+        ("rhals-random-init".into(), Box::new(RandomizedHals::new(base.clone()))),
+        (
+            "hals-svd-init".into(),
+            Box::new(Hals::new(base.clone().with_init(Init::NndsvdA))),
+        ),
+        (
+            "rhals-svd-init".into(),
+            Box::new(RandomizedHals::new(base.with_init(Init::NndsvdA))),
+        ),
+    ];
+    let fits = common::run_traced("fig05_06_faces", &x, solvers);
+    common::check_speed_quality(&fits, "hals-random-init", "rhals-random-init");
+}

@@ -1,0 +1,71 @@
+//! Fig. 10 — dominant basis images from the digits dataset for
+//! deterministic HALS, randomized HALS and SVD.
+//!
+//! Quantified: NMF bases should be sparse (parts/strokes) and det ≈ rand;
+//! SVD bases dense (holistic). Dumps basis images as PGMs.
+
+use randnmf::bench::{banner, bench_scale, results_dir, write_csv};
+use randnmf::coordinator::metrics::Table;
+use randnmf::data::digits::{self, DigitsSpec, SIDE};
+use randnmf::data::faces::to_pgm;
+use randnmf::linalg::svd::{randomized_svd, RsvdOptions};
+use randnmf::prelude::*;
+
+fn main() {
+    banner("Fig. 10", "digit basis images: strokes vs holistic");
+    let s = bench_scale(0.05);
+    let spec = DigitsSpec {
+        n_train: ((60_000.0 * s) as usize).max(500),
+        n_test: 0,
+        noise: 0.02,
+        seed: 42,
+    };
+    let x = digits::generate(&spec).train_x;
+    let opts = NmfOptions::new(16).with_max_iter(50).with_seed(7);
+
+    let det = Hals::new(opts.clone()).fit(&x).expect("hals");
+    let rand = RandomizedHals::new(opts).fit(&x).expect("rhals");
+    let mut rng = Pcg64::seed_from_u64(7);
+    let svd = randomized_svd(&x, RsvdOptions::new(16), &mut rng);
+    let svd_abs = svd.u.map(f64::abs);
+
+    // Sparsity proxy: fraction of a column's mass in its top-20% pixels
+    // (higher = more localized/parts-like).
+    let locality = |w: &randnmf::linalg::mat::Mat| -> f64 {
+        let mut acc = 0.0;
+        for j in 0..w.cols() {
+            let mut col: Vec<f64> = w.col(j).iter().map(|v| v.abs()).collect();
+            let total: f64 = col.iter().sum::<f64>().max(1e-12);
+            col.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let top: f64 = col[..col.len() / 5].iter().sum();
+            acc += top / total;
+        }
+        acc / w.cols() as f64
+    };
+
+    let mut table = Table::new(&["Basis", "Locality (top-20% mass)", "Zero fraction"]);
+    let mut rows = Vec::new();
+    for (name, w) in [
+        ("Deterministic HALS", &det.model.w),
+        ("Randomized HALS", &rand.model.w),
+        ("SVD (|U|)", &svd_abs),
+    ] {
+        let loc = locality(w);
+        table.row(&[name.into(), format!("{loc:.3}"), format!("{:.3}", w.zero_fraction())]);
+        rows.push(format!("{name},{loc:.4},{:.4}", w.zero_fraction()));
+    }
+    print!("{}", table.render());
+    println!("\nexpected shape: NMF locality > SVD locality (parts vs holistic).");
+
+    let dir = results_dir().join("fig10_basis");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (tag, w) in [("hals", &det.model.w), ("rhals", &rand.model.w), ("svd", &svd_abs)] {
+        for j in 0..8.min(w.cols()) {
+            std::fs::write(dir.join(format!("{tag}_{j}.pgm")), to_pgm(&w.col(j), SIDE, SIDE))
+                .unwrap();
+        }
+    }
+    println!("basis images: {}", dir.display());
+    let p = write_csv("fig10_digits_basis.csv", "method,locality,zero_fraction", &rows);
+    println!("csv: {}", p.display());
+}

@@ -1,0 +1,107 @@
+//! Fig. 11 — computational performance on synthetic rank-40 data:
+//! relative error, time and speedup vs target rank k for
+//! (a) tall-and-skinny 100,000×5,000 and (b) fat 25,000×25,000 matrices,
+//! averaged over multiple runs. HALS/rHALS capped at 200 iterations,
+//! compressed MU at 1,000 (paper setup).
+//!
+//! Expected shape: rHALS 3–25× faster than detHALS at matched error,
+//! speedup growing with problem size/smaller k; compressed MU "patchy" —
+//! fine at small k, fails to converge at larger k on the fat matrix.
+//!
+//! The sweep fans out over the coordinator's worker pool; runs-per-cell
+//! and matrix scale follow RANDNMF_BENCH_SCALE (paper scale = 1.0 uses
+//! 20 runs and full dimensions).
+
+use randnmf::bench::{banner, bench_scale, write_csv};
+use randnmf::coordinator::metrics::{mean, Table};
+use randnmf::coordinator::scheduler;
+use randnmf::nmf::compressed_mu::CompressedMu;
+use randnmf::prelude::*;
+
+struct Cell {
+    time_s: f64,
+    rel_err: f64,
+}
+
+fn main() {
+    banner("Fig. 11", "error/time/speedup vs target rank (synthetic)");
+    let s = bench_scale(0.04);
+    let runs = if s >= 1.0 { 20 } else { 3 };
+    let workers = randnmf::linalg::gemm::num_threads();
+
+    for (panel, m, n) in [
+        ("a: tall-and-skinny", ((100_000.0 * s) as usize).max(800), ((5_000.0 * s) as usize).max(160)),
+        ("b: fat", ((25_000.0 * s) as usize).max(400), ((25_000.0 * s) as usize).max(400)),
+    ] {
+        let r_true = 40.min(n / 4).max(4);
+        println!("\n--- Fig. 11{panel}: {m}x{n}, true rank {r_true}, {runs} runs ---");
+        let ks: Vec<usize> = [10usize, 20, 30, 40, 50, 60, 70]
+            .into_iter()
+            .filter(|&k| k <= n / 2)
+            .collect();
+
+        let mut table = Table::new(&[
+            "k", "hals t(s)", "rhals t(s)", "cmu t(s)", "speedup", "hals err", "rhals err",
+            "cmu err",
+        ]);
+        let mut rows = Vec::new();
+
+        // One task per (k, run, algo) cell, fanned out by the scheduler.
+        let algos = ["hals", "rhals", "cmu"];
+        let mut params = Vec::new();
+        for &k in &ks {
+            for algo in algos {
+                params.push((k, algo));
+            }
+        }
+        let results = scheduler::sweep(&params, runs, 42, workers, |&(k, algo), _run, seed| {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let x = synthetic::low_rank_nonneg(m, n, r_true, 0.0, &mut rng);
+            let opts = NmfOptions::new(k).with_seed(seed).with_max_iter(200);
+            let fit = match algo {
+                "hals" => Hals::new(opts).fit(&x).expect("hals"),
+                "rhals" => RandomizedHals::new(opts).fit(&x).expect("rhals"),
+                _ => CompressedMu::new(opts.with_max_iter(1000)).fit(&x).expect("cmu"),
+            };
+            Cell { time_s: fit.elapsed_s, rel_err: fit.final_rel_err }
+        });
+
+        for (ki, &k) in ks.iter().enumerate() {
+            let get = |algo: &str| -> (f64, f64) {
+                let pi = params
+                    .iter()
+                    .position(|&(pk, pa)| pk == k && pa == algo)
+                    .unwrap();
+                let cells = &results[pi];
+                (
+                    mean(&cells.iter().map(|c| c.time_s).collect::<Vec<_>>()),
+                    mean(&cells.iter().map(|c| c.rel_err).collect::<Vec<_>>()),
+                )
+            };
+            let (ht, he) = get("hals");
+            let (rt, re) = get("rhals");
+            let (ct, ce) = get("cmu");
+            table.row(&[
+                k.to_string(),
+                format!("{ht:.2}"),
+                format!("{rt:.2}"),
+                format!("{ct:.2}"),
+                format!("{:.1}x", ht / rt.max(1e-12)),
+                format!("{he:.2e}"),
+                format!("{re:.2e}"),
+                format!("{ce:.2e}"),
+            ]);
+            rows.push(format!(
+                "{panel},{k},{ht:.4},{rt:.4},{ct:.4},{he:.6e},{re:.6e},{ce:.6e}"
+            ));
+            let _ = ki;
+        }
+        print!("{}", table.render());
+        write_csv(
+            &format!("fig11_{}.csv", if panel.starts_with('a') { "tall" } else { "fat" }),
+            "panel,k,hals_t,rhals_t,cmu_t,hals_err,rhals_err,cmu_err",
+            &rows,
+        );
+    }
+    println!("\nexpected shape: speedup grows with m*n; cMU error blows up at larger k (panel b).");
+}

@@ -1,0 +1,91 @@
+//! Perf P1 — engine comparison: pure-Rust f64 vs AOT JAX/Pallas f32 via
+//! PJRT, per-op and end-to-end, at the `demo` artifact shape
+//! (2000×1000, k=16, l=36).
+//!
+//! Measures: qb_sketch latency, per-iteration rhals latency, end-to-end
+//! fit, plus the marshaling overhead share of the XLA path.
+
+use randnmf::bench::{banner, Bencher};
+use randnmf::coordinator::metrics::Table;
+use randnmf::linalg::gemm;
+use randnmf::prelude::*;
+use randnmf::runtime::engine::{CpuEngine, NmfEngine, XlaEngine};
+use randnmf::runtime::registry::ArtifactRegistry;
+
+fn main() {
+    banner("Perf P1", "CpuEngine vs XlaEngine (PJRT artifacts)");
+    let reg = match ArtifactRegistry::load_default() {
+        Ok(r) => r,
+        Err(e) => {
+            println!("SKIP: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    let xla = XlaEngine::new(reg);
+
+    let (m, n, k, l) = (2000usize, 1000usize, 16usize, 36usize);
+    let mut rng = Pcg64::seed_from_u64(0);
+    let x = synthetic::low_rank_nonneg(m, n, k, 1e-3, &mut rng);
+    let omega = rng.uniform_mat(n, l);
+
+    let bencher = Bencher::new(1, 5);
+    let mut table = Table::new(&["Op", "CPU f64 (ms)", "XLA f32 (ms)", "ratio"]);
+
+    // QB sketch.
+    let cpu_qb = bencher.time(|| CpuEngine.qb_sketch(&x, &omega, 2).unwrap());
+    let xla_qb = bencher.time(|| xla.qb_sketch(&x, &omega, 2).unwrap());
+    table.row(&[
+        "qb_sketch".into(),
+        format!("{:.1}", cpu_qb.median_s * 1e3),
+        format!("{:.1}", xla_qb.median_s * 1e3),
+        format!("{:.2}", xla_qb.median_s / cpu_qb.median_s),
+    ]);
+
+    // One rhals iteration from a fixed state.
+    let factors = CpuEngine.qb_sketch(&x, &omega, 2).unwrap();
+    let opts = NmfOptions::new(k);
+    let (w0, ht0) = randnmf::nmf::init::initialize_from_qb(
+        &factors.q,
+        &factors.b,
+        x.sum() / x.len() as f64,
+        &opts,
+        &mut rng,
+    );
+    let wt0 = gemm::at_b(&factors.q, &w0);
+
+    let cpu_it = bencher.time(|| {
+        let (mut w, mut wt, mut ht) = (w0.clone(), wt0.clone(), ht0.clone());
+        CpuEngine.rhals_iteration(&factors.b, &factors.q, &mut w, &mut wt, &mut ht).unwrap();
+        w
+    });
+    let xla_it = bencher.time(|| {
+        let (mut w, mut wt, mut ht) = (w0.clone(), wt0.clone(), ht0.clone());
+        xla.rhals_iteration(&factors.b, &factors.q, &mut w, &mut wt, &mut ht).unwrap();
+        w
+    });
+    table.row(&[
+        "rhals_iteration".into(),
+        format!("{:.1}", cpu_it.median_s * 1e3),
+        format!("{:.1}", xla_it.median_s * 1e3),
+        format!("{:.2}", xla_it.median_s / cpu_it.median_s),
+    ]);
+
+    // Marshaling share: time literal conversion alone (f64->f32 + copy).
+    let conv = bencher.time(|| {
+        let v = factors.b.to_f32_vec();
+        let w = factors.q.to_f32_vec();
+        (v, w)
+    });
+    table.row(&[
+        "marshal f64->f32 (B+Q)".into(),
+        "-".into(),
+        format!("{:.1}", conv.median_s * 1e3),
+        "-".into(),
+    ]);
+
+    print!("{}", table.render());
+    println!(
+        "\nnote: the XLA path re-enters PJRT per iteration (host round trip);\n\
+         a deployment would fuse multiple iterations per artifact (see DESIGN.md §Perf)."
+    );
+}

@@ -1,0 +1,57 @@
+//! Perf P2 — GEMM microbenchmarks: the HALS hot-path products vs a naive
+//! triple loop, plus effective GFLOP/s (roofline context for §Perf).
+//!
+//! Set `RANDNMF_THREADS` to sweep thread counts.
+
+use randnmf::bench::{banner, bench_scale, write_csv, Bencher};
+use randnmf::coordinator::metrics::Table;
+use randnmf::linalg::gemm;
+use randnmf::prelude::*;
+
+fn main() {
+    banner("Perf P2", "GEMM kernels (HALS hot path)");
+    let s = bench_scale(0.5);
+    let m = ((4_000.0 * s) as usize).max(256);
+    let n = ((2_000.0 * s) as usize).max(128);
+    let k = 32usize;
+    let mut rng = Pcg64::seed_from_u64(0);
+    let x = rng.uniform_mat(m, n);
+    let ht = rng.uniform_mat(n, k);
+    let w = rng.uniform_mat(m, k);
+
+    let bencher = Bencher::new(1, 5);
+    let mut table = Table::new(&["Kernel", "Shape", "Median (ms)", "GFLOP/s"]);
+    let mut rows = Vec::new();
+    let mut push = |name: &str, shape: String, secs: f64, flops: f64| {
+        let gf = flops / secs / 1e9;
+        table.row(&[name.into(), shape.clone(), format!("{:.1}", secs * 1e3), format!("{gf:.2}")]);
+        rows.push(format!("{name},{shape},{secs:.6},{gf:.3}"));
+    };
+
+    let st = bencher.time(|| gemm::matmul(&x, &ht)); // X·Ht : m×n×k
+    push("matmul (X*Ht)", format!("{m}x{n}x{k}"), st.median_s, 2.0 * (m * n * k) as f64);
+
+    let st = bencher.time(|| gemm::at_b(&x, &w)); // XᵀW : n×m×k
+    push("at_b (Xt*W)", format!("{n}x{m}x{k}"), st.median_s, 2.0 * (m * n * k) as f64);
+
+    let st = bencher.time(|| gemm::gram(&ht)); // HtᵀHt
+    push("gram (Ht)", format!("{k}x{n}x{k}"), st.median_s, (n * k * k) as f64);
+
+    let st = bencher.time(|| gemm::a_bt(&w, &ht)); // W·Htᵀ (m×n)
+    push("a_bt (W*Ht^T)", format!("{m}x{k}x{n}"), st.median_s, 2.0 * (m * n * k) as f64);
+
+    // Naive baseline on a smaller slice for contrast.
+    let xs = x.row_block(0, (m / 8).max(16));
+    let st = bencher.time(|| gemm::matmul_naive(&xs, &ht));
+    push(
+        "matmul_naive (1/8 rows)",
+        format!("{}x{n}x{k}", xs.rows()),
+        st.median_s,
+        2.0 * (xs.rows() * n * k) as f64,
+    );
+
+    print!("{}", table.render());
+    println!("threads = {}", gemm::num_threads());
+    let p = write_csv("perf_gemm.csv", "kernel,shape,median_s,gflops", &rows);
+    println!("csv: {}", p.display());
+}

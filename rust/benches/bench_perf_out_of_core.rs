@@ -1,0 +1,87 @@
+//! Perf P3 — out-of-core pass efficiency (paper Appendix A): blocked QB
+//! over the on-disk store vs in-memory QB, and the pass count / block-size
+//! trade-off.
+//!
+//! Expected shape: blocked QB throughput tracks sequential-read bandwidth;
+//! results identical to in-memory; time roughly flat in block size above a
+//! few hundred columns (seek overhead amortized); passes = 2 + 2q.
+
+use randnmf::bench::{banner, bench_scale, write_csv, Bencher};
+use randnmf::coordinator::metrics::Table;
+use randnmf::data::store::{self, NmfStore};
+use randnmf::prelude::*;
+use randnmf::sketch::blocked::{pass_count, qb_blocked, MatSource};
+
+fn main() {
+    banner("Perf P3", "out-of-core QB (pass efficiency)");
+    let s = bench_scale(0.25);
+    let (m, n, r) = (((40_000.0 * s) as usize).max(1000), ((4_000.0 * s) as usize).max(400), 40);
+    let mut rng = Pcg64::seed_from_u64(0);
+    let x = synthetic::low_rank_nonneg(m, n, r, 0.0, &mut rng);
+    let dir = std::env::temp_dir().join("randnmf_bench_ooc");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.nmfstore");
+    store::write_mat(&path, &x, 512).unwrap();
+    let bytes = std::fs::metadata(&path).unwrap().len() as f64;
+    println!("store: {m}x{n} = {:.0} MB on disk", bytes / 1e6);
+
+    let opts = QbOptions::new(r).with_oversample(20).with_power_iters(2);
+    let bencher = Bencher::new(0, 3);
+    let mut table = Table::new(&["Path", "Block", "Median (s)", "MB/s/pass", "Error"]);
+    let mut rows = Vec::new();
+
+    // In-memory reference.
+    let stats = bencher.time(|| {
+        let mut rng = Pcg64::seed_from_u64(7);
+        qb(&x, opts, &mut rng)
+    });
+    let mut rng7 = Pcg64::seed_from_u64(7);
+    let mem_err = qb(&x, opts, &mut rng7).relative_error(&x);
+    table.row(&[
+        "in-memory".into(),
+        "-".into(),
+        format!("{:.2}", stats.median_s),
+        "-".into(),
+        format!("{mem_err:.1e}"),
+    ]);
+    rows.push(format!("in-memory,0,{:.4},{mem_err:.6e}", stats.median_s));
+
+    let passes = pass_count(2) as f64;
+    let store = NmfStore::open(&path).unwrap();
+    for block in [128usize, 512, 2048] {
+        let stats = bencher.time(|| {
+            let mut rng = Pcg64::seed_from_u64(7);
+            qb_blocked(&store, opts, block, &mut rng).unwrap()
+        });
+        let mut rng7 = Pcg64::seed_from_u64(7);
+        let err = qb_blocked(&store, opts, block, &mut rng7).unwrap().relative_error(&x);
+        let mbps = bytes * passes / stats.median_s / 1e6 / passes;
+        table.row(&[
+            "on-disk".into(),
+            block.to_string(),
+            format!("{:.2}", stats.median_s),
+            format!("{mbps:.0}"),
+            format!("{err:.1e}"),
+        ]);
+        rows.push(format!("on-disk,{block},{:.4},{err:.6e}", stats.median_s));
+    }
+
+    // Sanity: in-memory source through the blocked path (isolates I/O).
+    let stats = bencher.time(|| {
+        let mut rng = Pcg64::seed_from_u64(7);
+        qb_blocked(&MatSource(&x), opts, 512, &mut rng).unwrap()
+    });
+    table.row(&[
+        "blocked-no-io".into(),
+        "512".into(),
+        format!("{:.2}", stats.median_s),
+        "-".into(),
+        "-".into(),
+    ]);
+    rows.push(format!("blocked-no-io,512,{:.4},0", stats.median_s));
+
+    print!("{}", table.render());
+    println!("passes over the data: {} (q=2)", pass_count(2));
+    let p = write_csv("perf_out_of_core.csv", "path,block,median_s,err", &rows);
+    println!("csv: {}", p.display());
+}

@@ -1,0 +1,63 @@
+//! Shared helpers for the convergence-trace benches (Figs. 5/6, 8/9,
+//! 12/13): run a set of solvers with per-iteration tracing and emit the
+//! two CSV series the paper plots — error/PG vs wall-clock time and vs
+//! iteration count.
+
+use randnmf::bench::write_csv;
+use randnmf::coordinator::metrics::Table;
+use randnmf::linalg::mat::Mat;
+use randnmf::nmf::model::NmfFit;
+use randnmf::nmf::solver::NmfSolver;
+
+/// Run each `(label, solver)` with tracing and write
+/// `<stem>_traces.csv` with columns
+/// `method,iter,elapsed_s,rel_err,pg_norm_sq`.
+pub fn run_traced(
+    stem: &str,
+    x: &Mat,
+    solvers: Vec<(String, Box<dyn NmfSolver>)>,
+) -> Vec<(String, NmfFit)> {
+    let mut fits = Vec::new();
+    let mut rows = Vec::new();
+    let mut table = Table::new(&["Method", "Time (s)", "Iters", "Final error", "Final ||pg||^2"]);
+    for (label, solver) in solvers {
+        let fit = solver.fit(x).expect("fit");
+        for t in &fit.trace {
+            rows.push(format!(
+                "{label},{},{:.6},{:.9},{:.6e}",
+                t.iter, t.elapsed_s, t.rel_err, t.pg_norm_sq
+            ));
+        }
+        let last_pg = fit.trace.last().map(|t| t.pg_norm_sq).unwrap_or(f64::NAN);
+        table.row(&[
+            label.clone(),
+            format!("{:.2}", fit.elapsed_s),
+            fit.iters.to_string(),
+            format!("{:.6}", fit.final_rel_err),
+            format!("{last_pg:.3e}"),
+        ]);
+        fits.push((label, fit));
+    }
+    print!("{}", table.render());
+    let p = write_csv(
+        &format!("{stem}_traces.csv"),
+        "method,iter,elapsed_s,rel_err,pg_norm_sq",
+        &rows,
+    );
+    println!("csv: {}", p.display());
+    fits
+}
+
+/// Print the qualitative checks the figures make: randomized converges in
+/// a fraction of the deterministic wall-clock at similar error.
+pub fn check_speed_quality(fits: &[(String, NmfFit)], det: &str, rand: &str) {
+    let d = fits.iter().find(|(l, _)| l == det).map(|(_, f)| f);
+    let r = fits.iter().find(|(l, _)| l == rand).map(|(_, f)| f);
+    if let (Some(d), Some(r)) = (d, r) {
+        println!(
+            "\nshape check: rand/det time = {:.2} (want < 1), err gap = {:+.4}",
+            r.elapsed_s / d.elapsed_s.max(1e-12),
+            r.final_rel_err - d.final_rel_err
+        );
+    }
+}

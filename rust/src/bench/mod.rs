@@ -1,0 +1,160 @@
+//! Micro-benchmark harness (the offline substitute for `criterion`).
+//!
+//! Each `rust/benches/*.rs` binary is a `harness = false` bench that uses
+//! this module to time workloads, compute robust statistics, print the
+//! paper-style tables and persist CSV series under
+//! `target/bench-results/`.
+//!
+//! Scaling: every bench honors `RANDNMF_BENCH_SCALE` (0 < s ≤ 1, default
+//! a CI-friendly fraction) so the same binaries run in seconds locally
+//! and at paper scale when asked.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub runs: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let mut v = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            runs: v.len(),
+            mean_s: crate::coordinator::metrics::mean(&v),
+            median_s: crate::coordinator::metrics::median(&v),
+            min_s: v[0],
+            max_s: *v.last().unwrap(),
+            stddev_s: crate::coordinator::metrics::stddev(&v),
+        }
+    }
+}
+
+/// Benchmark runner with warmup.
+pub struct Bencher {
+    pub warmup_runs: usize,
+    pub measured_runs: usize,
+}
+
+impl Bencher {
+    pub fn new(warmup_runs: usize, measured_runs: usize) -> Self {
+        assert!(measured_runs >= 1);
+        Bencher { warmup_runs, measured_runs }
+    }
+
+    /// Time `f`, discarding `warmup_runs` then measuring `measured_runs`.
+    /// The closure's return value is passed through `keep` so the work is
+    /// not optimized away.
+    pub fn time<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup_runs {
+            keep(f());
+        }
+        let mut samples = Vec::with_capacity(self.measured_runs);
+        for _ in 0..self.measured_runs {
+            let t0 = Instant::now();
+            keep(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Stats::from_samples(&samples)
+    }
+}
+
+/// Opaque sink (black_box substitute on stable).
+#[inline]
+pub fn keep<T>(value: T) -> T {
+    // A volatile read of a stack byte defeats dead-code elimination of the
+    // value's computation without perturbing timing measurably.
+    unsafe {
+        let b = &value as *const T as *const u8;
+        std::ptr::read_volatile(b);
+    }
+    value
+}
+
+/// The global bench scale factor (`RANDNMF_BENCH_SCALE`, default `default`).
+pub fn bench_scale(default: f64) -> f64 {
+    std::env::var("RANDNMF_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|s| *s > 0.0 && *s <= 1.0)
+        .unwrap_or(default)
+}
+
+/// Output directory for bench CSV/JSONL artifacts.
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("target/bench-results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a CSV series (header + rows) under the results dir.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> std::path::PathBuf {
+    let path = results_dir().join(name);
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(&path, text).expect("writing bench CSV");
+    path
+}
+
+/// Standard bench banner.
+pub fn banner(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+    let scale = std::env::var("RANDNMF_BENCH_SCALE").unwrap_or_else(|_| "default".into());
+    println!(
+        "(scale={scale}, threads={}; set RANDNMF_BENCH_SCALE=1.0 for paper scale)",
+        crate::linalg::gemm::num_threads()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.runs, 3);
+        assert_eq!(s.median_s, 2.0);
+        assert_eq!(s.mean_s, 2.0);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 3.0);
+    }
+
+    #[test]
+    fn bencher_runs_expected_count() {
+        let mut calls = 0usize;
+        let b = Bencher::new(2, 5);
+        let stats = b.time(|| {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(stats.runs, 5);
+        assert!(stats.min_s >= 0.0);
+    }
+
+    #[test]
+    fn scale_parsing() {
+        // No env set in tests: default comes back.
+        assert_eq!(bench_scale(0.25), 0.25);
+    }
+
+    #[test]
+    fn csv_written() {
+        let p = write_csv("test_series.csv", "a,b", &["1,2".into(), "3,4".into()]);
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+    }
+}

@@ -1,0 +1,182 @@
+//! Argument parsing for the `randnmf` launcher (no `clap` offline — this
+//! is the in-repo substitute).
+//!
+//! Grammar: `randnmf <subcommand> [positional...] [--key value | --flag]`.
+//! `--key=value` is accepted too. Unknown flags are an error, listed
+//! against the declared option set so typos fail fast.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declared option: name, takes-value?, help line.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Parse `argv[1..]` against the declared options.
+pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args> {
+    let mut args = Args::default();
+    let mut iter = argv.iter().peekable();
+    if let Some(sub) = iter.next() {
+        if sub.starts_with('-') {
+            bail!("expected a subcommand, got flag {sub:?}");
+        }
+        args.subcommand = sub.clone();
+    }
+    while let Some(tok) = iter.next() {
+        if let Some(body) = tok.strip_prefix("--") {
+            let (name, inline_val) = match body.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown option --{name} (see --help)"))?;
+            if spec.takes_value {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => iter
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
+                        .clone(),
+                };
+                args.options.insert(name, val);
+            } else {
+                if inline_val.is_some() {
+                    bail!("--{name} does not take a value");
+                }
+                args.flags.push(name);
+            }
+        } else {
+            args.positional.push(tok.clone());
+        }
+    }
+    Ok(args)
+}
+
+/// Render a help screen.
+pub fn help(binary: &str, subcommands: &[(&str, &str)], specs: &[OptSpec]) -> String {
+    let mut out = format!("usage: {binary} <subcommand> [options]\n\nsubcommands:\n");
+    for (name, desc) in subcommands {
+        out.push_str(&format!("  {name:<14} {desc}\n"));
+    }
+    out.push_str("\noptions:\n");
+    for s in specs {
+        let arg = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+        out.push_str(&format!("  {arg:<22} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "rank", takes_value: true, help: "target rank" },
+            OptSpec { name: "seed", takes_value: true, help: "rng seed" },
+            OptSpec { name: "verbose", takes_value: false, help: "chatty" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse(&sv(&["factorize", "data.bin", "--rank", "16", "--verbose"]), &specs())
+            .unwrap();
+        assert_eq!(a.subcommand, "factorize");
+        assert_eq!(a.positional, vec!["data.bin"]);
+        assert_eq!(a.get_usize("rank", 0).unwrap(), 16);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&sv(&["x", "--rank=8"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("rank", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&sv(&["x", "--bogus", "1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&sv(&["x", "--rank"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&sv(&["x", "--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_number_message_names_flag() {
+        let a = parse(&sv(&["x", "--rank", "abc"]), &specs()).unwrap();
+        let err = a.get_usize("rank", 0).unwrap_err().to_string();
+        assert!(err.contains("rank"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&sv(&["x"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("rank", 4).unwrap(), 4);
+        assert_eq!(a.get_f64("seed", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_str("seed", "d"), "d");
+    }
+
+    #[test]
+    fn help_mentions_everything() {
+        let h = help("randnmf", &[("factorize", "run one job")], &specs());
+        assert!(h.contains("factorize"));
+        assert!(h.contains("--rank"));
+        assert!(h.contains("--verbose"));
+    }
+}

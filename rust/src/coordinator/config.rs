@@ -1,0 +1,295 @@
+//! Config-file parser (TOML subset).
+//!
+//! Jobs are described by files like:
+//!
+//! ```toml
+//! # examples/configs/faces.toml
+//! [job]
+//! kind = "compare"            # factorize | compare | sweep
+//! dataset = "faces"
+//! out_dir = "target/runs"
+//!
+//! [data]
+//! rows = 32256
+//! cols = 2410
+//! seed = 42
+//!
+//! [solver]
+//! algorithm = "rhals"
+//! rank = 16
+//! max_iter = 500
+//! oversample = 20
+//! power_iters = 2
+//! l1_w = 0.0
+//! init = "random"
+//! ranks = [10, 20, 30]        # sweep jobs
+//! ```
+//!
+//! Supported grammar: `[table]` headers, `key = value` with string,
+//! integer, float, boolean and flat arrays, `#` comments, blank lines.
+//! (No nested tables/dotted keys — jobs don't need them.)
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A TOML-subset scalar or flat array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    /// Floats accept integer literals too (`tol = 0` is fine).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]` of key/value pairs.
+pub type Section = BTreeMap<String, Value>;
+
+/// A parsed config document.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub sections: BTreeMap<String, Section>,
+}
+
+impl Config {
+    /// Parse a config document.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("config line {}: {raw:?}", lineno + 1);
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("unterminated section header")).with_context(ctx)?;
+                current = name.trim().to_string();
+                if current.is_empty() {
+                    bail!("{}: empty section name", ctx());
+                }
+                cfg.sections.entry(current.clone()).or_default();
+            } else {
+                let (key, val) = line
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("expected key = value")).with_context(ctx)?;
+                let key = key.trim().to_string();
+                if key.is_empty() {
+                    bail!("{}: empty key", ctx());
+                }
+                if current.is_empty() {
+                    bail!("{}: key outside any [section]", ctx());
+                }
+                let parsed = parse_value(val.trim()).with_context(ctx)?;
+                let section = cfg.sections.get_mut(&current).unwrap();
+                if section.insert(key.clone(), parsed).is_some() {
+                    bail!("{}: duplicate key {key:?}", ctx());
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Parse a config file from disk.
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.get(name)
+    }
+
+    /// Lookup `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            bail!("embedded quote in string");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_job_config() {
+        let doc = r#"
+# a job
+[job]
+kind = "compare"          # trailing comment
+dataset = "faces"
+
+[solver]
+rank = 16
+tol = 1e-9
+batched = true
+ranks = [10, 20, 30]
+beta = 0.9
+"#;
+        let cfg = Config::parse(doc).unwrap();
+        assert_eq!(cfg.get_str("job", "kind", ""), "compare");
+        assert_eq!(cfg.get_usize("solver", "rank", 0), 16);
+        assert!((cfg.get_f64("solver", "tol", 0.0) - 1e-9).abs() < 1e-24);
+        assert!(cfg.get_bool("solver", "batched", false));
+        assert!((cfg.get_f64("solver", "beta", 0.0) - 0.9).abs() < 1e-15);
+        let ranks: Vec<usize> = cfg
+            .get("solver", "ranks")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(ranks, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let cfg = Config::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(cfg.get_usize("a", "y", 7), 7);
+        assert_eq!(cfg.get_str("b", "z", "d"), "d");
+    }
+
+    #[test]
+    fn int_is_valid_float() {
+        let cfg = Config::parse("[a]\ntol = 0\n").unwrap();
+        assert_eq!(cfg.get_f64("a", "tol", 1.0), 0.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("[a]\nnoequals\n").is_err());
+        assert!(Config::parse("key_outside = 1\n").is_err());
+        assert!(Config::parse("[a]\nx = \"oops\n").is_err());
+        assert!(Config::parse("[a]\nx = [1, 2\n").is_err());
+        assert!(Config::parse("[a]\nx = what\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(Config::parse("[a]\nx = 1\nx = 2\n").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let cfg = Config::parse("[a]\nx = \"has # inside\"\n").unwrap();
+        assert_eq!(cfg.get_str("a", "x", ""), "has # inside");
+    }
+}

@@ -1,0 +1,329 @@
+//! Job specifications and execution.
+//!
+//! A job is what the launcher runs: a dataset, one or more solvers, and an
+//! output directory for records/traces. Jobs come from config files
+//! ([`crate::coordinator::config`]) or are assembled programmatically by
+//! the examples and benches.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::Config;
+use crate::coordinator::metrics::{self, RunRecord, Table};
+use crate::data;
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Pcg64;
+use crate::nmf::options::{Init, NmfOptions, Regularization, UpdateOrder};
+use crate::nmf::solver::NmfSolver;
+
+/// Which dataset a job runs on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetSpec {
+    /// Yale-B substitute; `scale` shrinks every dimension.
+    Faces { scale: f64 },
+    /// 'urban' substitute.
+    Hyperspectral { scale: f64 },
+    /// MNIST substitute (training split only for factorization jobs).
+    Digits { scale: f64 },
+    /// §4.4 synthetic low-rank.
+    Synthetic { m: usize, n: usize, r: usize, noise: f64 },
+    /// Load from an `.nmfstore` file.
+    Store { path: PathBuf },
+}
+
+impl DatasetSpec {
+    pub fn name(&self) -> String {
+        match self {
+            DatasetSpec::Faces { .. } => "faces".into(),
+            DatasetSpec::Hyperspectral { .. } => "hyperspectral".into(),
+            DatasetSpec::Digits { .. } => "digits".into(),
+            DatasetSpec::Synthetic { m, n, r, .. } => format!("synthetic-{m}x{n}-r{r}"),
+            DatasetSpec::Store { path } => format!("store:{}", path.display()),
+        }
+    }
+
+    /// Materialize the data matrix.
+    pub fn build(&self, seed: u64) -> Result<Mat> {
+        Ok(match self {
+            DatasetSpec::Faces { scale } => {
+                let p = data::faces::FacesSpec::paper();
+                let spec = data::faces::FacesSpec {
+                    height: scaled(p.height, *scale, 16),
+                    width: scaled(p.width, *scale, 14),
+                    n_images: scaled(p.n_images, *scale, 40),
+                    n_parts: p.n_parts,
+                    noise: p.noise,
+                    seed,
+                };
+                data::faces::generate(&spec).x
+            }
+            DatasetSpec::Hyperspectral { scale } => {
+                let p = data::hyperspectral::HyperspectralSpec::paper();
+                let spec = data::hyperspectral::HyperspectralSpec {
+                    bands: scaled(p.bands, scale.max(0.25), 20),
+                    side: scaled(p.side, *scale, 16),
+                    endmembers: p.endmembers,
+                    noise: p.noise,
+                    seed,
+                };
+                data::hyperspectral::generate(&spec).x
+            }
+            DatasetSpec::Digits { scale } => {
+                let p = data::digits::DigitsSpec::paper();
+                let spec = data::digits::DigitsSpec {
+                    n_train: scaled(p.n_train, *scale, 100),
+                    n_test: 0,
+                    noise: p.noise,
+                    seed,
+                };
+                data::digits::generate(&spec).train_x
+            }
+            DatasetSpec::Synthetic { m, n, r, noise } => {
+                let mut rng = Pcg64::seed_from_u64(seed);
+                data::synthetic::low_rank_nonneg(*m, *n, *r, *noise, &mut rng)
+            }
+            DatasetSpec::Store { path } => data::store::NmfStore::open(path)?.read_all()?,
+        })
+    }
+}
+
+fn scaled(value: usize, scale: f64, min: usize) -> usize {
+    ((value as f64 * scale) as usize).max(min)
+}
+
+/// Parse solver options from a `[solver]` config section.
+pub fn options_from_config(cfg: &Config) -> Result<NmfOptions> {
+    let rank = cfg.get_usize("solver", "rank", 16);
+    let mut o = NmfOptions::new(rank)
+        .with_max_iter(cfg.get_usize("solver", "max_iter", 200))
+        .with_tol(cfg.get_f64("solver", "tol", 0.0))
+        .with_seed(cfg.get_usize("solver", "seed", 0) as u64)
+        .with_oversample(cfg.get_usize("solver", "oversample", 20))
+        .with_power_iters(cfg.get_usize("solver", "power_iters", 2))
+        .with_trace_every(cfg.get_usize("solver", "trace_every", 0))
+        .with_batched_projection(cfg.get_bool("solver", "batched_projection", false));
+    o = o.with_init(match cfg.get_str("solver", "init", "random").as_str() {
+        "random" => Init::Random,
+        "nndsvd" => Init::Nndsvd,
+        "nndsvda" => Init::NndsvdA,
+        other => bail!("unknown init {other:?}"),
+    });
+    o = o.with_update_order(match cfg.get_str("solver", "update_order", "blocked").as_str() {
+        "blocked" => UpdateOrder::BlockedCyclic,
+        "interleaved" => UpdateOrder::InterleavedCyclic,
+        "shuffled" => UpdateOrder::Shuffled,
+        other => bail!("unknown update_order {other:?}"),
+    });
+    o = o.with_reg_w(Regularization::elastic_net(
+        cfg.get_f64("solver", "l2_w", 0.0),
+        cfg.get_f64("solver", "l1_w", 0.0),
+    ));
+    o = o.with_reg_h(Regularization::elastic_net(
+        cfg.get_f64("solver", "l2_h", 0.0),
+        cfg.get_f64("solver", "l1_h", 0.0),
+    ));
+    Ok(o)
+}
+
+/// Build a solver by name.
+pub fn solver_by_name(name: &str, opts: NmfOptions) -> Result<Box<dyn NmfSolver>> {
+    Ok(match name {
+        "hals" => Box::new(crate::nmf::hals::Hals::new(opts)),
+        "rhals" => Box::new(crate::nmf::rhals::RandomizedHals::new(opts)),
+        "mu" => Box::new(crate::nmf::mu::Mu::new(opts)),
+        "compressed-mu" | "cmu" => Box::new(crate::nmf::compressed_mu::CompressedMu::new(opts)),
+        "rhals-xla" => {
+            let registry = crate::runtime::registry::ArtifactRegistry::load_default()
+                .context("rhals-xla needs artifacts/ (run `make artifacts`)")?;
+            Box::new(crate::runtime::engine::XlaRandomizedHals::new(opts, registry))
+        }
+        other => bail!("unknown solver {other:?} (hals|rhals|mu|compressed-mu|rhals-xla)"),
+    })
+}
+
+/// Parse a dataset from a `[job]`+`[data]` config.
+pub fn dataset_from_config(cfg: &Config) -> Result<DatasetSpec> {
+    let name = cfg.get_str("job", "dataset", "synthetic");
+    Ok(match name.as_str() {
+        "faces" => DatasetSpec::Faces { scale: cfg.get_f64("data", "scale", 1.0) },
+        "hyperspectral" => DatasetSpec::Hyperspectral { scale: cfg.get_f64("data", "scale", 1.0) },
+        "digits" => DatasetSpec::Digits { scale: cfg.get_f64("data", "scale", 1.0) },
+        "synthetic" => DatasetSpec::Synthetic {
+            m: cfg.get_usize("data", "rows", 5000),
+            n: cfg.get_usize("data", "cols", 5000),
+            r: cfg.get_usize("data", "rank", 40),
+            noise: cfg.get_f64("data", "noise", 0.0),
+        },
+        "store" => DatasetSpec::Store {
+            path: PathBuf::from(cfg.get_str("data", "path", "data.nmfstore")),
+        },
+        other => bail!("unknown dataset {other:?}"),
+    })
+}
+
+/// A fully resolved job.
+pub struct Job {
+    pub dataset: DatasetSpec,
+    pub solvers: Vec<String>,
+    pub opts: NmfOptions,
+    pub data_seed: u64,
+    pub out_dir: PathBuf,
+}
+
+impl Job {
+    pub fn from_config(cfg: &Config) -> Result<Job> {
+        let solvers_raw = cfg.get_str("job", "solvers", "hals,rhals");
+        let solvers: Vec<String> =
+            solvers_raw.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+        anyhow::ensure!(!solvers.is_empty(), "no solvers configured");
+        Ok(Job {
+            dataset: dataset_from_config(cfg)?,
+            solvers,
+            opts: options_from_config(cfg)?,
+            data_seed: cfg.get_usize("data", "seed", 42) as u64,
+            out_dir: PathBuf::from(cfg.get_str("job", "out_dir", "target/runs")),
+        })
+    }
+
+    /// Run every configured solver on the dataset; prints the comparison
+    /// table and writes JSONL records + per-solver traces.
+    pub fn run(&self) -> Result<Vec<RunRecord>> {
+        let x = self.dataset.build(self.data_seed)?;
+        let dataset_name = self.dataset.name();
+        println!("dataset {dataset_name}: {}x{}", x.rows(), x.cols());
+
+        let mut records = Vec::new();
+        let mut table =
+            Table::new(&["Solver", "Time (s)", "Speedup", "Iterations", "Error"]);
+        let mut baseline_time: Option<f64> = None;
+        for name in &self.solvers {
+            let solver = solver_by_name(name, self.opts.clone())?;
+            let fit = solver.fit(&x).with_context(|| format!("running {name}"))?;
+            let rec = RunRecord::from_fit(
+                solver.name(),
+                &dataset_name,
+                self.opts.rank,
+                self.opts.seed,
+                &fit,
+            );
+            let speedup = match baseline_time {
+                None => {
+                    baseline_time = Some(rec.time_s);
+                    "-".to_string()
+                }
+                Some(base) => format!("{:.1}", base / rec.time_s.max(1e-12)),
+            };
+            table.row(&[
+                rec.solver.clone(),
+                metrics::fmt_secs(rec.time_s),
+                speedup,
+                rec.iters.to_string(),
+                format!("{:.4}", rec.rel_err),
+            ]);
+            if self.opts.trace_every > 0 {
+                metrics::write_trace_csv(
+                    &self.out_dir.join(format!("{dataset_name}-{}.trace.csv", rec.solver)),
+                    &fit,
+                )?;
+            }
+            records.push(rec);
+        }
+        print!("{}", table.render());
+        metrics::write_jsonl(&self.out_dir.join("runs.jsonl"), &records)?;
+        Ok(records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_to_job_roundtrip() {
+        let cfg = Config::parse(
+            r#"
+[job]
+kind = "compare"
+dataset = "synthetic"
+solvers = "hals, rhals"
+out_dir = "/tmp/randnmf_jobs_test"
+
+[data]
+rows = 80
+cols = 60
+rank = 4
+seed = 9
+
+[solver]
+rank = 4
+max_iter = 60
+init = "nndsvda"
+update_order = "shuffled"
+l1_w = 0.5
+"#,
+        )
+        .unwrap();
+        let job = Job::from_config(&cfg).unwrap();
+        assert_eq!(job.solvers, vec!["hals", "rhals"]);
+        assert_eq!(job.opts.rank, 4);
+        assert_eq!(job.opts.init, Init::NndsvdA);
+        assert_eq!(job.opts.update_order, UpdateOrder::Shuffled);
+        assert_eq!(job.opts.reg_w.l1, 0.5);
+        assert_eq!(job.data_seed, 9);
+        assert_eq!(
+            job.dataset,
+            DatasetSpec::Synthetic { m: 80, n: 60, r: 4, noise: 0.0 }
+        );
+    }
+
+    #[test]
+    fn job_runs_end_to_end() {
+        let cfg = Config::parse(
+            r#"
+[job]
+dataset = "synthetic"
+solvers = "hals, rhals"
+out_dir = "/tmp/randnmf_jobs_test_run"
+
+[data]
+rows = 60
+cols = 40
+rank = 3
+
+[solver]
+rank = 3
+max_iter = 40
+"#,
+        )
+        .unwrap();
+        let job = Job::from_config(&cfg).unwrap();
+        let recs = job.run().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert!(recs.iter().all(|r| r.rel_err < 0.2));
+        assert!(std::path::Path::new("/tmp/randnmf_jobs_test_run/runs.jsonl").exists());
+    }
+
+    #[test]
+    fn dataset_builders_produce_nonneg() {
+        for spec in [
+            DatasetSpec::Faces { scale: 0.05 },
+            DatasetSpec::Hyperspectral { scale: 0.05 },
+            DatasetSpec::Digits { scale: 0.002 },
+            DatasetSpec::Synthetic { m: 30, n: 20, r: 3, noise: 0.01 },
+        ] {
+            let x = spec.build(1).unwrap();
+            assert!(x.is_nonneg(), "{} not nonneg", spec.name());
+            assert!(x.rows() > 0 && x.cols() > 0);
+        }
+    }
+
+    #[test]
+    fn unknown_names_rejected() {
+        assert!(solver_by_name("bogus", NmfOptions::new(2)).is_err());
+        let cfg = Config::parse("[job]\ndataset = \"bogus\"\n").unwrap();
+        assert!(dataset_from_config(&cfg).is_err());
+        let cfg = Config::parse("[solver]\ninit = \"bogus\"\n").unwrap();
+        assert!(options_from_config(&cfg).is_err());
+    }
+}

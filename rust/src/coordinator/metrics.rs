@@ -1,0 +1,255 @@
+//! Run records, trace writers, and table rendering.
+//!
+//! Every solver run produces a [`RunRecord`]; benches write them as JSON
+//! lines plus CSV convergence traces under `target/bench-results/`, and
+//! render the paper-style comparison tables with [`Table`].
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::json::Json;
+use crate::nmf::model::NmfFit;
+
+/// Summary of one solver run — the row schema of the paper's tables.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub solver: String,
+    pub dataset: String,
+    pub rank: usize,
+    pub seed: u64,
+    pub time_s: f64,
+    pub iters: usize,
+    pub rel_err: f64,
+    pub converged: bool,
+}
+
+impl RunRecord {
+    pub fn from_fit(solver: &str, dataset: &str, rank: usize, seed: u64, fit: &NmfFit) -> Self {
+        RunRecord {
+            solver: solver.to_string(),
+            dataset: dataset.to_string(),
+            rank,
+            seed,
+            time_s: fit.elapsed_s,
+            iters: fit.iters,
+            rel_err: fit.final_rel_err,
+            converged: fit.converged,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("solver".into(), Json::Str(self.solver.clone()));
+        obj.insert("dataset".into(), Json::Str(self.dataset.clone()));
+        obj.insert("rank".into(), Json::Num(self.rank as f64));
+        obj.insert("seed".into(), Json::Num(self.seed as f64));
+        obj.insert("time_s".into(), Json::Num(self.time_s));
+        obj.insert("iters".into(), Json::Num(self.iters as f64));
+        obj.insert("rel_err".into(), Json::Num(self.rel_err));
+        obj.insert("converged".into(), Json::Bool(self.converged));
+        Json::Obj(obj)
+    }
+}
+
+/// Append run records as JSON lines.
+pub fn write_jsonl(path: &Path, records: &[RunRecord]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    for r in records {
+        writeln!(f, "{}", r.to_json())?;
+    }
+    Ok(())
+}
+
+/// Write a convergence trace as CSV (`iter,elapsed_s,rel_err,pg_norm_sq`).
+pub fn write_trace_csv(path: &Path, fit: &NmfFit) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::from("iter,elapsed_s,rel_err,pg_norm_sq\n");
+    for t in &fit.trace {
+        writeln!(out, "{},{:.6},{:.9},{:.6e}", t.iter, t.elapsed_s, t.rel_err, t.pg_norm_sq)?;
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Simple aligned-column table, printed like the paper's Tables 1–4.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{cell:<w$}", w = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds with adaptive precision (`8.93`, `0.0132`).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.4}")
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
+
+    fn dummy_fit() -> NmfFit {
+        NmfFit {
+            model: NmfModel {
+                w: crate::linalg::mat::Mat::zeros(2, 1),
+                h: crate::linalg::mat::Mat::zeros(1, 2),
+            },
+            iters: 3,
+            elapsed_s: 0.5,
+            final_rel_err: 0.25,
+            pg_ratio: 0.1,
+            converged: true,
+            trace: vec![
+                TracePoint { iter: 1, elapsed_s: 0.1, rel_err: 0.5, pg_norm_sq: 1.0 },
+                TracePoint { iter: 2, elapsed_s: 0.2, rel_err: 0.3, pg_norm_sq: 0.5 },
+            ],
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let r = RunRecord::from_fit("hals", "faces", 16, 7, &dummy_fit());
+        let j = r.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("solver").unwrap().as_str(), Some("hals"));
+        assert_eq!(parsed.get("rank").unwrap().as_usize(), Some(16));
+        assert_eq!(parsed.get("converged").unwrap(), &Json::Bool(true));
+    }
+
+    #[test]
+    fn jsonl_and_csv_files() {
+        let dir = std::env::temp_dir().join("randnmf_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let jl = dir.join("runs.jsonl");
+        let r = RunRecord::from_fit("mu", "digits", 4, 1, &dummy_fit());
+        write_jsonl(&jl, &[r.clone()]).unwrap();
+        write_jsonl(&jl, &[r]).unwrap(); // append
+        let text = std::fs::read_to_string(&jl).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            Json::parse(line).unwrap();
+        }
+
+        let csv = dir.join("trace.csv");
+        write_trace_csv(&csv, &dummy_fit()).unwrap();
+        let t = std::fs::read_to_string(&csv).unwrap();
+        assert!(t.starts_with("iter,elapsed_s,rel_err,pg_norm_sq\n"));
+        assert_eq!(t.lines().count(), 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Algo", "Time (s)", "Error"]);
+        t.row(&["Deterministic HALS".into(), "54.26".into(), "0.239".into()]);
+        t.row(&["Randomized HALS".into(), "8.93".into(), "0.239".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("Algo"));
+        assert!(lines[2].starts_with("Deterministic HALS"));
+        // Columns align: "Time" column starts at same offset in all rows.
+        let off = lines[0].find("Time").unwrap();
+        assert_eq!(&lines[2][off..off + 5], "54.26");
+    }
+
+    #[test]
+    fn stats_helpers() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138089935).abs() < 1e-6);
+        assert_eq!(fmt_secs(123.4), "123");
+        assert_eq!(fmt_secs(8.93), "8.93");
+        assert_eq!(fmt_secs(0.01324), "0.0132");
+    }
+}

@@ -1,0 +1,19 @@
+//! The L3 coordinator: everything around the algorithms that makes this a
+//! deployable system rather than a script.
+//!
+//! * [`config`] — TOML-subset config files describing jobs.
+//! * [`cli`] — argument parsing for the `randnmf` launcher binary.
+//! * [`jobs`] — job specifications (factorize / compare / sweep) and their
+//!   execution, wiring datasets → solvers → metrics.
+//! * [`scheduler`] — the worker pool that fans parameter sweeps out over
+//!   threads (Fig. 11 averages 20 runs per configuration).
+//! * [`metrics`] — run records, CSV/JSON trace writers, table rendering.
+//! * [`json`] — minimal JSON support (no serde in the offline crate set).
+
+pub mod cli;
+pub mod config;
+pub mod jobs;
+pub mod json;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;

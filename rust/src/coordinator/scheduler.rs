@@ -1,0 +1,159 @@
+//! Worker-pool scheduler for parameter sweeps.
+//!
+//! Fig. 11 averages 20 runs per (dataset, algorithm, rank) cell; the sweep
+//! scheduler fans those out over a bounded pool of worker threads while
+//! keeping results in submission order and randomness deterministic (each
+//! task derives its own RNG stream from the job seed *before* scheduling,
+//! so timing cannot perturb results).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `tasks` on at most `workers` threads; returns results in
+/// submission order.
+pub fn run_parallel<T, F>(tasks: Vec<F>, workers: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return tasks.into_iter().map(|t| t()).collect();
+    }
+
+    // Work-stealing-free simple design: an atomic cursor over the task
+    // list; each worker claims the next unclaimed index.
+    let tasks: Vec<Mutex<Option<F>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let task = tasks[i].lock().unwrap().take().expect("task claimed twice");
+                let out = task();
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker dropped a result"))
+        .collect()
+}
+
+/// Sweep helper: run `f(param, run_index, derived_seed)` for every
+/// combination of `params × runs`, in parallel, grouping the results per
+/// parameter. Seeds are derived deterministically from `base_seed`.
+pub fn sweep<P, T, F>(
+    params: &[P],
+    runs_per_param: usize,
+    base_seed: u64,
+    workers: usize,
+    f: F,
+) -> Vec<Vec<T>>
+where
+    P: Clone + Send + Sync,
+    T: Send,
+    F: Fn(&P, usize, u64) -> T + Send + Sync,
+{
+    let mut tasks: Vec<Box<dyn FnOnce() -> (usize, T) + Send>> = Vec::new();
+    for (pi, p) in params.iter().enumerate() {
+        for run in 0..runs_per_param {
+            let seed = derive_seed(base_seed, pi as u64, run as u64);
+            let p = p.clone();
+            let f = &f;
+            tasks.push(Box::new(move || (pi, f(&p, run, seed))));
+        }
+    }
+    let flat = run_parallel(tasks, workers);
+    let mut grouped: Vec<Vec<T>> = params.iter().map(|_| Vec::new()).collect();
+    for (pi, t) in flat {
+        grouped[pi].push(t);
+    }
+    grouped
+}
+
+/// SplitMix-style seed derivation: decorrelated, deterministic.
+pub fn derive_seed(base: u64, a: u64, b: u64) -> u64 {
+    let mut z = base
+        .wrapping_add(a.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+        .wrapping_add(b.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_submission_order() {
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..64usize)
+            .map(|i| {
+                Box::new(move || {
+                    // Vary work so completion order scrambles.
+                    std::thread::sleep(std::time::Duration::from_micros((64 - i) as u64 * 10));
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let out = run_parallel(tasks, 8);
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        let out: Vec<usize> = run_parallel(Vec::<Box<dyn FnOnce() -> usize + Send>>::new(), 4);
+        assert!(out.is_empty());
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            vec![Box::new(|| 1), Box::new(|| 2)];
+        assert_eq!(run_parallel(tasks, 1), vec![1, 2]);
+    }
+
+    #[test]
+    fn sweep_groups_and_is_deterministic() {
+        let params = vec![10usize, 20, 30];
+        let f = |p: &usize, run: usize, seed: u64| (*p, run, seed);
+        let a = sweep(&params, 4, 99, 8, f);
+        let b = sweep(&params, 4, 99, 2, f); // different worker count
+        assert_eq!(a, b, "worker count must not change results");
+        assert_eq!(a.len(), 3);
+        for (pi, group) in a.iter().enumerate() {
+            assert_eq!(group.len(), 4);
+            for (run, &(p, r, _)) in group.iter().enumerate() {
+                assert_eq!(p, params[pi]);
+                assert_eq!(r, run);
+            }
+        }
+        // Seeds all distinct.
+        let mut seeds: Vec<u64> = a.iter().flatten().map(|&(_, _, s)| s).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 12);
+    }
+
+    #[test]
+    fn derive_seed_decorrelates() {
+        let s1 = derive_seed(0, 0, 0);
+        let s2 = derive_seed(0, 0, 1);
+        let s3 = derive_seed(0, 1, 0);
+        let s4 = derive_seed(1, 0, 0);
+        let all = [s1, s2, s3, s4];
+        for i in 0..4 {
+            for j in i + 1..4 {
+                assert_ne!(all[i], all[j]);
+            }
+        }
+    }
+}

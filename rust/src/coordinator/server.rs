@@ -1,0 +1,446 @@
+//! Transform service: serve NNLS feature-projection requests over TCP
+//! with dynamic batching.
+//!
+//! Once a basis `W` is fitted (offline, possibly at paper scale with the
+//! randomized solver), downstream consumers need `transform(y) =
+//! argmin_{c≥0} ‖y − Wc‖` at low latency. The service:
+//!
+//! * accepts length-prefixed binary requests (one `m`-vector each),
+//! * **batches** concurrent requests: the solver thread drains whatever
+//!   has queued (up to `max_batch`) and runs one batched HALS-NNLS solve —
+//!   the Gram `WᵀW` is shared across the whole batch, so batching `b`
+//!   requests costs far less than `b` singles,
+//! * responds with the `k`-vector code.
+//!
+//! Wire format (little-endian): request = `u32 m` + `m×f64`; response =
+//! `u32 k` + `k×f64`, or `u32::MAX` + `u32 len` + UTF-8 error message.
+//!
+//! This is the L3 "request loop" of the architecture: a thin, dependency-
+//! free replacement for what tokio+tower would provide.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::nmf::model::NmfModel;
+
+/// A queued request: the input vector and the slot for its reply.
+struct Pending {
+    input: Vec<f64>,
+    reply: std::sync::mpsc::Sender<Result<Vec<f64>, String>>,
+}
+
+/// Shared server state.
+struct Shared {
+    queue: Mutex<Vec<Pending>>,
+    wake: Condvar,
+    stop: AtomicBool,
+    served: AtomicUsize,
+    batches: AtomicUsize,
+}
+
+/// Configuration of the transform service.
+#[derive(Clone, Debug)]
+pub struct ServerOptions {
+    /// Max requests fused into one batched solve.
+    pub max_batch: usize,
+    /// How long the solver waits to accumulate a batch.
+    pub batch_window: Duration,
+    /// HALS-NNLS sweeps per solve.
+    pub nnls_sweeps: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions { max_batch: 64, batch_window: Duration::from_millis(2), nnls_sweeps: 60 }
+    }
+}
+
+/// Handle to a running server (owns the listener thread).
+pub struct TransformServer {
+    addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TransformServer {
+    /// Start serving `model` on `addr` (use port 0 for an OS-chosen port).
+    pub fn start(addr: &str, model: NmfModel, opts: ServerOptions) -> Result<TransformServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            wake: Condvar::new(),
+            stop: AtomicBool::new(false),
+            served: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+        });
+
+        let mut threads = Vec::new();
+
+        // Solver thread: drains the queue into batched NNLS solves.
+        {
+            let shared = shared.clone();
+            let opts = opts.clone();
+            threads.push(std::thread::spawn(move || solver_loop(&shared, &model, &opts)));
+        }
+
+        // Accept loop: one lightweight thread per connection. Connection
+        // threads are *not* joined — they idle on a short read timeout and
+        // exit on their own once `stop` is set or the peer disconnects.
+        {
+            let shared = shared.clone();
+            threads.push(std::thread::spawn(move || {
+                while !shared.stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let shared = shared.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, &shared);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+
+        Ok(TransformServer { addr: local, shared, threads })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Total requests served and batches executed (batching efficiency =
+    /// served / batches).
+    pub fn stats(&self) -> (usize, usize) {
+        (self.shared.served.load(Ordering::Relaxed), self.shared.batches.load(Ordering::Relaxed))
+    }
+
+    /// Signal shutdown and join all threads.
+    pub fn shutdown(self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.wake.notify_all();
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn solver_loop(shared: &Shared, model: &NmfModel, opts: &ServerOptions) {
+    let (m, k) = model.w.shape();
+    // Precompute what every solve shares.
+    let gram = gemm::gram(&model.w); // k×k
+    let order: Vec<usize> = (0..k).collect();
+
+    loop {
+        // Wait for work (or stop).
+        let mut batch: Vec<Pending> = {
+            let guard = shared.queue.lock().unwrap();
+            let (mut guard, _) = shared
+                .wake
+                .wait_timeout_while(guard, Duration::from_millis(50), |q| {
+                    q.is_empty() && !shared.stop.load(Ordering::Relaxed)
+                })
+                .unwrap();
+            if shared.stop.load(Ordering::Relaxed) && guard.is_empty() {
+                return;
+            }
+            if guard.is_empty() {
+                continue;
+            }
+            // Short accumulation window for better batching.
+            drop(guard);
+            std::thread::sleep(opts.batch_window);
+            guard = shared.queue.lock().unwrap();
+            let take = guard.len().min(opts.max_batch);
+            guard.drain(..take).collect()
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.served.fetch_add(batch.len(), Ordering::Relaxed);
+
+        // Validate inputs, assemble Y (m×b).
+        let mut valid = Vec::new();
+        for p in batch.drain(..) {
+            if p.input.len() == m {
+                valid.push(p);
+            } else {
+                let _ = p
+                    .reply
+                    .send(Err(format!("expected {m}-dim input, got {}", p.input.len())));
+            }
+        }
+        if valid.is_empty() {
+            continue;
+        }
+        let b = valid.len();
+        let mut y = Mat::zeros(m, b);
+        for (j, p) in valid.iter().enumerate() {
+            y.set_col(j, &p.input);
+        }
+
+        // Batched NNLS: shared Gram, per-column independence.
+        let at = gemm::at_b(&model.w, &y); // k×b  (WᵀY)
+        let mut ct = at.transpose(); // b×k tall-skinny panel
+        // init: diag-scaled clamp
+        for r in 0..b {
+            for j in 0..k {
+                let d = gram.get(j, j).max(1e-12);
+                let v = (ct.get(r, j) / d).max(0.0);
+                ct.set(r, j, v);
+            }
+        }
+        let num = at.transpose();
+        for _ in 0..opts.nnls_sweeps {
+            crate::nmf::hals::sweep_factor(
+                &mut ct,
+                &num,
+                &gram,
+                crate::nmf::options::Regularization::NONE,
+                &order,
+                true,
+            );
+        }
+        for (j, p) in valid.into_iter().enumerate() {
+            let _ = p.reply.send(Ok(ct.row(j).to_vec()));
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Idle reads wake every 100 ms to observe `stop` (otherwise a
+    // connected-but-silent client would pin this thread past shutdown).
+    stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        // Request: u32 m + m f64s. Clean EOF ends the connection.
+        let mut len_buf = [0u8; 4];
+        match reader.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shared.stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let m = u32::from_le_bytes(len_buf) as usize;
+        anyhow::ensure!(m <= 1 << 24, "absurd request dimension {m}");
+        let mut data = vec![0u8; m * 8];
+        // The payload may arrive across several packets; resume across
+        // read timeouts (unlike `read_exact`, which cannot).
+        read_exact_retry(&mut reader, &mut data, shared)?;
+        let input: Vec<f64> = data
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        {
+            let mut q = shared.queue.lock().unwrap();
+            q.push(Pending { input, reply: tx });
+        }
+        shared.wake.notify_one();
+
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(code)) => {
+                writer.write_all(&(code.len() as u32).to_le_bytes())?;
+                for v in code {
+                    writer.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Ok(Err(msg)) => {
+                writer.write_all(&u32::MAX.to_le_bytes())?;
+                writer.write_all(&(msg.len() as u32).to_le_bytes())?;
+                writer.write_all(msg.as_bytes())?;
+            }
+            Err(_) => anyhow::bail!("solver timeout"),
+        }
+        writer.flush()?;
+    }
+}
+
+/// `read_exact` that survives read timeouts (resumes where it left off)
+/// and aborts on shutdown.
+fn read_exact_retry(r: &mut impl Read, buf: &mut [u8], shared: &Shared) -> Result<()> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => anyhow::bail!("peer closed mid-message"),
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shared.stop.load(Ordering::Relaxed) {
+                    anyhow::bail!("server stopping");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Blocking client for the wire protocol (used by tests, benches and the
+/// CLI).
+pub struct TransformClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl TransformClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<TransformClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(TransformClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Send one vector; receive its nonnegative code.
+    pub fn transform(&mut self, y: &[f64]) -> Result<Vec<f64>> {
+        self.writer.write_all(&(y.len() as u32).to_le_bytes())?;
+        for v in y {
+            self.writer.write_all(&v.to_le_bytes())?;
+        }
+        self.writer.flush()?;
+        let mut len_buf = [0u8; 4];
+        self.reader.read_exact(&mut len_buf)?;
+        let k = u32::from_le_bytes(len_buf);
+        if k == u32::MAX {
+            self.reader.read_exact(&mut len_buf)?;
+            let n = u32::from_le_bytes(len_buf) as usize;
+            let mut msg = vec![0u8; n];
+            self.reader.read_exact(&mut msg)?;
+            anyhow::bail!("server error: {}", String::from_utf8_lossy(&msg));
+        }
+        let mut data = vec![0u8; k as usize * 8];
+        self.reader.read_exact(&mut data)?;
+        Ok(data
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    fn test_model(m: usize, k: usize, seed: u64) -> NmfModel {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        NmfModel { w: rng.uniform_mat(m, k).map(|v| v + 0.05), h: Mat::zeros(k, 1) }
+    }
+
+    #[test]
+    fn serves_correct_codes() {
+        let model = test_model(24, 4, 1);
+        let w = model.w.clone();
+        let server =
+            TransformServer::start("127.0.0.1:0", model, ServerOptions::default()).unwrap();
+        let mut client = TransformClient::connect(server.addr()).unwrap();
+
+        let mut rng = Pcg64::seed_from_u64(2);
+        let c_true: Vec<f64> = (0..4).map(|_| rng.uniform() + 0.1).collect();
+        let y = gemm::matvec(&w, &c_true);
+        let code = client.transform(&y).unwrap();
+        assert_eq!(code.len(), 4);
+        // Reconstruction matches even if the code itself is a different
+        // NNLS solution.
+        let rec = gemm::matvec(&w, &code);
+        let err: f64 = rec
+            .iter()
+            .zip(y.iter())
+            .map(|(a, b)| (a - b).powi(2))
+            .sum::<f64>()
+            .sqrt()
+            / y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(err < 1e-4, "reconstruction err {err}");
+        assert!(code.iter().all(|&v| v >= 0.0));
+        server.shutdown();
+    }
+
+    #[test]
+    fn wrong_dimension_gets_error_reply() {
+        let model = test_model(10, 3, 3);
+        let server =
+            TransformServer::start("127.0.0.1:0", model, ServerOptions::default()).unwrap();
+        let mut client = TransformClient::connect(server.addr()).unwrap();
+        let err = client.transform(&[1.0, 2.0]).unwrap_err().to_string();
+        assert!(err.contains("expected 10-dim"), "{err}");
+        // Connection still usable afterwards.
+        let ok = client.transform(&vec![0.5; 10]).unwrap();
+        assert_eq!(ok.len(), 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_get_batched() {
+        let model = test_model(16, 3, 4);
+        let w = model.w.clone();
+        let opts = ServerOptions {
+            max_batch: 32,
+            batch_window: Duration::from_millis(10),
+            nnls_sweeps: 40,
+        };
+        let server = TransformServer::start("127.0.0.1:0", model, opts).unwrap();
+        let addr = server.addr();
+
+        let nreq = 24;
+        let w = &w;
+        std::thread::scope(|s| {
+            for t in 0..nreq {
+                s.spawn(move || {
+                    let mut client = TransformClient::connect(addr).unwrap();
+                    let mut rng = Pcg64::seed_from_u64(100 + t as u64);
+                    let c: Vec<f64> = (0..3).map(|_| rng.uniform() + 0.1).collect();
+                    let y = gemm::matvec(&w, &c);
+                    let code = client.transform(&y).unwrap();
+                    let rec = gemm::matvec(&w, &code);
+                    let err: f64 = rec
+                        .iter()
+                        .zip(y.iter())
+                        .map(|(a, b)| (a - b).powi(2))
+                        .sum::<f64>()
+                        .sqrt();
+                    assert!(err < 1e-3 * y.len() as f64, "err {err}");
+                });
+            }
+        });
+        let (served, batches) = server.stats();
+        assert_eq!(served, nreq);
+        assert!(
+            batches < nreq,
+            "dynamic batching should fuse requests: {served} served in {batches} batches"
+        );
+        server.shutdown();
+    }
+}

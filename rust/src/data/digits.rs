@@ -1,0 +1,215 @@
+//! Synthetic stroke-digit dataset — substitute for MNIST (paper §4.3,
+//! Tables 3–4, Fig. 10; see DESIGN.md §5).
+//!
+//! The MNIST experiment asks whether randomized-NMF features classify as
+//! well as deterministic-NMF features under kNN. What that needs from the
+//! data is (a) nonnegative images, (b) class structure, (c) parts-based
+//! composition (strokes). Each digit class here is a fixed set of line
+//! segments on a 28×28 grid; samples jitter the segment endpoints,
+//! thickness and intensity and add sensor noise, then images are rendered
+//! with an anti-aliased distance field.
+
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Pcg64;
+
+/// Image side (MNIST-compatible 28).
+pub const SIDE: usize = 28;
+/// Pixels per image.
+pub const PIXELS: usize = SIDE * SIDE;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct DigitsSpec {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl DigitsSpec {
+    /// Paper-scale: 60,000 train + 10,000 test.
+    pub fn paper() -> Self {
+        DigitsSpec { n_train: 60_000, n_test: 10_000, noise: 0.02, seed: 42 }
+    }
+
+    pub fn small() -> Self {
+        DigitsSpec { n_train: 600, n_test: 200, noise: 0.02, seed: 42 }
+    }
+}
+
+/// Generated dataset (column-major samples like the rest of the crate:
+/// `x` is pixels × samples).
+pub struct DigitsData {
+    pub train_x: Mat,
+    pub train_y: Vec<u8>,
+    pub test_x: Mat,
+    pub test_y: Vec<u8>,
+}
+
+/// Segment strokes per class in unit coordinates `(y0, x0, y1, x1)`.
+/// Hand-designed seven-segment-like glyphs for digits 0–9.
+fn class_strokes(digit: u8) -> &'static [(f64, f64, f64, f64)] {
+    const T: (f64, f64, f64, f64) = (0.15, 0.25, 0.15, 0.75); // top
+    const M: (f64, f64, f64, f64) = (0.50, 0.25, 0.50, 0.75); // middle
+    const B: (f64, f64, f64, f64) = (0.85, 0.25, 0.85, 0.75); // bottom
+    const TL: (f64, f64, f64, f64) = (0.15, 0.25, 0.50, 0.25); // top-left
+    const TR: (f64, f64, f64, f64) = (0.15, 0.75, 0.50, 0.75); // top-right
+    const BL: (f64, f64, f64, f64) = (0.50, 0.25, 0.85, 0.25); // bottom-left
+    const BR: (f64, f64, f64, f64) = (0.50, 0.75, 0.85, 0.75); // bottom-right
+    match digit {
+        0 => &[T, TL, TR, BL, BR, B],
+        1 => &[TR, BR],
+        2 => &[T, TR, M, BL, B],
+        3 => &[T, TR, M, BR, B],
+        4 => &[TL, TR, M, BR],
+        5 => &[T, TL, M, BR, B],
+        6 => &[T, TL, M, BL, BR, B],
+        7 => &[T, TR, BR],
+        8 => &[T, TL, TR, M, BL, BR, B],
+        9 => &[T, TL, TR, M, BR, B],
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Render one jittered digit into a pixel column.
+fn render_digit(digit: u8, rng: &mut Pcg64, noise: f64, out: &mut [f64]) {
+    let strokes = class_strokes(digit);
+    // Jitter magnitudes are tuned so raw-pixel 3-NN reaches ~95% accuracy,
+    // matching MNIST's difficulty for the Table 4 experiment.
+    let jy = 0.02 * rng.gaussian();
+    let jx = 0.02 * rng.gaussian();
+    let scale = 0.95 + 0.1 * rng.uniform();
+    let thickness = 0.045 + 0.02 * rng.uniform();
+    let intensity = 0.8 + 0.2 * rng.uniform();
+    out.fill(0.0);
+    for &(y0, x0, y1, x1) in strokes {
+        // per-stroke endpoint jitter
+        let (y0, x0, y1, x1) = (
+            0.5 + (y0 - 0.5) * scale + jy + 0.005 * rng.gaussian(),
+            0.5 + (x0 - 0.5) * scale + jx + 0.005 * rng.gaussian(),
+            0.5 + (y1 - 0.5) * scale + jy + 0.005 * rng.gaussian(),
+            0.5 + (x1 - 0.5) * scale + jx + 0.005 * rng.gaussian(),
+        );
+        for py in 0..SIDE {
+            let y = (py as f64 + 0.5) / SIDE as f64;
+            for px in 0..SIDE {
+                let x = (px as f64 + 0.5) / SIDE as f64;
+                let d = dist_to_segment(y, x, y0, x0, y1, x1);
+                // Anti-aliased falloff around the stroke core.
+                let v = intensity * (1.0 - (d / thickness).powi(2)).max(0.0);
+                let idx = py * SIDE + px;
+                out[idx] = out[idx].max(v);
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        *v = (*v + noise * rng.uniform()).min(1.0);
+    }
+}
+
+fn dist_to_segment(py: f64, px: f64, y0: f64, x0: f64, y1: f64, x1: f64) -> f64 {
+    let (dy, dx) = (y1 - y0, x1 - x0);
+    let len_sq = dy * dy + dx * dx;
+    let t = if len_sq == 0.0 {
+        0.0
+    } else {
+        (((py - y0) * dy + (px - x0) * dx) / len_sq).clamp(0.0, 1.0)
+    };
+    let (cy, cx) = (y0 + t * dy, x0 + t * dx);
+    ((py - cy).powi(2) + (px - cx).powi(2)).sqrt()
+}
+
+/// Generate train and test splits (balanced classes, shuffled order).
+pub fn generate(spec: &DigitsSpec) -> DigitsData {
+    let mut rng = Pcg64::seed_from_u64(spec.seed);
+    let make = |n: usize, rng: &mut Pcg64| -> (Mat, Vec<u8>) {
+        let mut x = Mat::zeros(PIXELS, n);
+        let mut y = Vec::with_capacity(n);
+        let mut buf = vec![0.0f64; PIXELS];
+        for i in 0..n {
+            let digit = (i % 10) as u8;
+            render_digit(digit, rng, spec.noise, &mut buf);
+            x.set_col(i, &buf);
+            y.push(digit);
+        }
+        // Shuffle columns so class order carries no signal.
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let mut xs = Mat::zeros(PIXELS, n);
+        let mut ys = vec![0u8; n];
+        for (new, &old) in perm.iter().enumerate() {
+            xs.set_col(new, &x.col(old));
+            ys[new] = y[old];
+        }
+        (xs, ys)
+    };
+    let (train_x, train_y) = make(spec.n_train, &mut rng);
+    let (test_x, test_y) = make(spec.n_test, &mut rng);
+    DigitsData { train_x, train_y, test_x, test_y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_labels_nonneg() {
+        let d = generate(&DigitsSpec { n_train: 50, n_test: 20, noise: 0.02, seed: 1 });
+        assert_eq!(d.train_x.shape(), (PIXELS, 50));
+        assert_eq!(d.test_x.shape(), (PIXELS, 20));
+        assert_eq!(d.train_y.len(), 50);
+        assert!(d.train_x.is_nonneg());
+        assert!(d.train_x.max() <= 1.0);
+        assert!(d.train_y.iter().all(|&y| y < 10));
+        // Balanced-ish classes.
+        for c in 0..10u8 {
+            assert_eq!(d.train_y.iter().filter(|&&y| y == c).count(), 5);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = DigitsSpec { n_train: 20, n_test: 10, noise: 0.02, seed: 2 };
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.test_y, b.test_y);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Same-class samples must be closer (on average) than cross-class.
+        let d = generate(&DigitsSpec { n_train: 100, n_test: 0, noise: 0.02, seed: 3 });
+        let dist = |a: usize, b: usize| -> f64 {
+            d.train_x
+                .col(a)
+                .iter()
+                .zip(d.train_x.col(b).iter())
+                .map(|(x, y)| (x - y).powi(2))
+                .sum::<f64>()
+        };
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for a in 0..40 {
+            for b in (a + 1)..40 {
+                if d.train_y[a] == d.train_y[b] {
+                    same.push(dist(a, b));
+                } else {
+                    diff.push(dist(a, b));
+                }
+            }
+        }
+        let ms = crate::coordinator::metrics::mean(&same);
+        let md = crate::coordinator::metrics::mean(&diff);
+        // Jittered strokes overlap across classes (7-segment glyphs share
+        // segments), so require a clear but not extreme separation.
+        assert!(ms < md * 0.85, "same-class {ms} vs cross-class {md}");
+    }
+
+    #[test]
+    fn strokes_defined_for_all_digits() {
+        for d in 0..10u8 {
+            assert!(!class_strokes(d).is_empty());
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Synthetic faces dataset — substitute for the cropped Yale face
+//! database B (see DESIGN.md §5).
+//!
+//! The Yale-B experiment (paper §4.1, Table 1, Figs. 4–6) tests whether
+//! NMF recovers **parts-based structure** from a tall dense nonnegative
+//! matrix. This generator produces images that are additive nonnegative
+//! combinations of `n_parts` spatially localized templates (eyes, brows,
+//! nose, mouth, cheeks, jaw — Gaussian blobs at canonical positions), with
+//! per-image illumination scaling and sensor noise, matching the
+//! structural property the experiment measures while staying fully
+//! reproducible from a seed.
+//!
+//! Default dimensions mirror the paper: 192×168 images (32,256 pixels),
+//! 2,410 images.
+
+use crate::linalg::mat::Mat;
+use crate::linalg::norms::vec_norm;
+use crate::linalg::rng::Pcg64;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct FacesSpec {
+    pub height: usize,
+    pub width: usize,
+    pub n_images: usize,
+    /// Number of latent parts (the paper extracts k = 16 features).
+    pub n_parts: usize,
+    /// Relative sensor-noise level.
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl FacesSpec {
+    /// Paper-scale dataset: 32,256 × 2,410.
+    pub fn paper() -> Self {
+        FacesSpec { height: 192, width: 168, n_images: 2410, n_parts: 16, noise: 0.02, seed: 42 }
+    }
+
+    /// Small variant for tests/examples.
+    pub fn small() -> Self {
+        FacesSpec { height: 48, width: 42, n_images: 200, n_parts: 8, noise: 0.02, seed: 42 }
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.height * self.width
+    }
+}
+
+/// Generated dataset: `x` is pixels×images; `parts` the ground-truth
+/// templates (pixels×n_parts), each ℓ2-normalized.
+pub struct FacesData {
+    pub x: Mat,
+    pub parts: Mat,
+    pub spec: FacesSpec,
+}
+
+/// Canonical facial-part anchor positions in unit coordinates
+/// `(row, col, row_sigma, col_sigma)`.
+const ANCHORS: &[(f64, f64, f64, f64)] = &[
+    (0.32, 0.30, 0.05, 0.08), // left eye
+    (0.32, 0.70, 0.05, 0.08), // right eye
+    (0.22, 0.30, 0.03, 0.10), // left brow
+    (0.22, 0.70, 0.03, 0.10), // right brow
+    (0.52, 0.50, 0.10, 0.05), // nose
+    (0.72, 0.50, 0.05, 0.12), // mouth
+    (0.55, 0.18, 0.10, 0.06), // left cheek
+    (0.55, 0.82, 0.10, 0.06), // right cheek
+    (0.88, 0.50, 0.07, 0.18), // jaw
+    (0.08, 0.50, 0.06, 0.20), // forehead
+    (0.40, 0.50, 0.04, 0.04), // nose bridge
+    (0.62, 0.32, 0.05, 0.05), // left nostril area
+    (0.62, 0.68, 0.05, 0.05), // right nostril area
+    (0.80, 0.30, 0.06, 0.07), // left chin
+    (0.80, 0.70, 0.06, 0.07), // right chin
+    (0.45, 0.05, 0.20, 0.04), // left face edge
+    (0.45, 0.95, 0.20, 0.04), // right face edge
+    (0.15, 0.15, 0.06, 0.06), // left temple
+    (0.15, 0.85, 0.06, 0.06), // right temple
+    (0.95, 0.50, 0.04, 0.10), // lower jawline
+];
+
+/// Generate the dataset.
+pub fn generate(spec: &FacesSpec) -> FacesData {
+    let mut rng = Pcg64::seed_from_u64(spec.seed);
+    let p = spec.pixels();
+    let k = spec.n_parts;
+    assert!(k <= ANCHORS.len(), "at most {} parts supported", ANCHORS.len());
+
+    // Templates: Gaussian blobs (slightly jittered per dataset seed).
+    let mut parts = Mat::zeros(p, k);
+    for j in 0..k {
+        let (r0, c0, sr, sc) = ANCHORS[j];
+        let jr = r0 + 0.02 * rng.gaussian();
+        let jc = c0 + 0.02 * rng.gaussian();
+        let mut col = vec![0.0f64; p];
+        for row in 0..spec.height {
+            let y = (row as f64 + 0.5) / spec.height as f64;
+            for cx in 0..spec.width {
+                let x = (cx as f64 + 0.5) / spec.width as f64;
+                let d = ((y - jr) / sr).powi(2) + ((x - jc) / sc).powi(2);
+                col[row * spec.width + cx] = (-0.5 * d).exp();
+            }
+        }
+        let nrm = vec_norm(&col).max(1e-12);
+        for (i, v) in col.iter().enumerate() {
+            parts.set(i, j, v / nrm);
+        }
+    }
+
+    // Images: nonnegative mixtures + global illumination + noise.
+    let mut x = Mat::zeros(p, spec.n_images);
+    for img in 0..spec.n_images {
+        // Sparse-ish nonneg weights: each part present with prob 0.8.
+        let mut weights = vec![0.0f64; k];
+        for w in weights.iter_mut() {
+            if rng.uniform() < 0.8 {
+                *w = 0.3 + rng.uniform();
+            }
+        }
+        let illum = 0.5 + rng.uniform(); // per-image lighting scale
+        for j in 0..k {
+            let wj = weights[j] * illum;
+            if wj > 0.0 {
+                for i in 0..p {
+                    let v = x.get(i, img) + wj * parts.get(i, j);
+                    x.set(i, img, v);
+                }
+            }
+        }
+        for i in 0..p {
+            let v = x.get(i, img) + spec.noise * rng.uniform();
+            x.set(i, img, v);
+        }
+    }
+
+    FacesData { x, parts, spec: spec.clone() }
+}
+
+/// Greedy best-match cosine similarity between learned basis columns and
+/// ground-truth parts, averaged — the "did NMF find the parts?" score used
+/// by `bench_fig04_faces_basis`. 1.0 = perfect recovery.
+pub fn part_recovery_score(learned_w: &Mat, true_parts: &Mat) -> f64 {
+    let k_learn = learned_w.cols();
+    let k_true = true_parts.cols();
+    if k_learn == 0 || k_true == 0 {
+        return 0.0;
+    }
+    let mut used = vec![false; k_learn];
+    let mut total = 0.0;
+    for tj in 0..k_true {
+        let t = true_parts.col(tj);
+        let tn = vec_norm(&t).max(1e-12);
+        let mut best = 0.0;
+        let mut best_i = None;
+        for lj in 0..k_learn {
+            if used[lj] {
+                continue;
+            }
+            let l = learned_w.col(lj);
+            let ln = vec_norm(&l).max(1e-12);
+            let dot: f64 = t.iter().zip(l.iter()).map(|(a, b)| a * b).sum();
+            let cos = dot / (tn * ln);
+            if cos > best {
+                best = cos;
+                best_i = Some(lj);
+            }
+        }
+        if let Some(i) = best_i {
+            used[i] = true;
+        }
+        total += best;
+    }
+    total / k_true as f64
+}
+
+/// Render one basis column as an ASCII-art PGM (P2) image string —
+/// the bench targets dump these so basis images are inspectable without
+/// plotting infrastructure.
+pub fn to_pgm(column: &[f64], height: usize, width: usize) -> String {
+    assert_eq!(column.len(), height * width);
+    let max = column.iter().copied().fold(0.0f64, f64::max).max(1e-12);
+    let mut s = format!("P2\n{width} {height}\n255\n");
+    for r in 0..height {
+        let row: Vec<String> = (0..width)
+            .map(|c| format!("{}", (column[r * width + c] / max * 255.0) as u8))
+            .collect();
+        s.push_str(&row.join(" "));
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_nonnegativity() {
+        let spec = FacesSpec { height: 12, width: 10, n_images: 20, n_parts: 6, noise: 0.01, seed: 1 };
+        let d = generate(&spec);
+        assert_eq!(d.x.shape(), (120, 20));
+        assert_eq!(d.parts.shape(), (120, 6));
+        assert!(d.x.is_nonneg());
+        assert!(d.parts.is_nonneg());
+        assert!(d.x.sum() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = FacesSpec { height: 8, width: 8, n_images: 5, n_parts: 4, noise: 0.01, seed: 7 };
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.x, b.x);
+        let spec2 = FacesSpec { seed: 8, ..spec };
+        assert_ne!(generate(&spec2).x, a.x);
+    }
+
+    #[test]
+    fn effective_rank_close_to_parts() {
+        // Spectrum should drop sharply after n_parts (+1 for illumination).
+        let spec = FacesSpec { height: 16, width: 14, n_images: 60, n_parts: 6, noise: 0.001, seed: 2 };
+        let d = generate(&spec);
+        let svd = crate::linalg::svd::jacobi_svd(&d.x.transpose());
+        let head: f64 = svd.s[..6].iter().map(|s| s * s).sum();
+        let tail: f64 = svd.s[6..].iter().map(|s| s * s).sum();
+        assert!(head / (head + tail) > 0.95, "energy in head = {}", head / (head + tail));
+    }
+
+    #[test]
+    fn perfect_recovery_scores_one() {
+        let spec = FacesSpec { height: 10, width: 10, n_images: 5, n_parts: 5, noise: 0.0, seed: 3 };
+        let d = generate(&spec);
+        let score = part_recovery_score(&d.parts, &d.parts);
+        assert!((score - 1.0).abs() < 1e-9);
+        // Random basis scores much lower.
+        let mut rng = Pcg64::seed_from_u64(4);
+        let random = rng.uniform_mat(100, 5);
+        assert!(part_recovery_score(&random, &d.parts) < 0.9);
+    }
+
+    #[test]
+    fn nmf_recovers_parts_better_than_random_basis() {
+        let spec = FacesSpec { height: 16, width: 14, n_images: 80, n_parts: 5, noise: 0.01, seed: 5 };
+        let d = generate(&spec);
+        let fit = crate::nmf::hals::Hals::new(
+            crate::nmf::options::NmfOptions::new(5).with_max_iter(200).with_seed(6),
+        )
+        .fit(&d.x)
+        .unwrap();
+        let score = part_recovery_score(&fit.model.w, &d.parts);
+        assert!(score > 0.7, "NMF should find the parts: score={score}");
+    }
+
+    #[test]
+    fn pgm_format() {
+        let img = to_pgm(&[0.0, 1.0, 0.5, 0.25], 2, 2);
+        assert!(img.starts_with("P2\n2 2\n255\n"));
+        assert!(img.contains("255"));
+    }
+}

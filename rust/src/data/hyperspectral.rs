@@ -1,0 +1,223 @@
+//! Synthetic hyperspectral scene — substitute for the HYDICE 'urban'
+//! image (paper §4.2, Table 2, Figs. 7–9; see DESIGN.md §5).
+//!
+//! Blind hyperspectral unmixing assumes the **linear mixing model**
+//! `X = W·H`: each pixel's spectrum is a nonnegative combination of a few
+//! pure endmember spectra weighted by abundances. We generate directly
+//! from that model — four endmembers (the paper's asphalt / grass / tree /
+//! roof), smooth Gaussian-bump spectral signatures over 162 bands, and
+//! spatially coherent abundance maps (per-class blobs, simplex-normalized
+//! per pixel) — so recovery is quantitatively checkable via spectral-angle
+//! distance, which the real-data experiment can only eyeball.
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::norms::vec_norm;
+use crate::linalg::rng::Pcg64;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct HyperspectralSpec {
+    /// Spectral bands (paper: 162 after water-vapor channels removed).
+    pub bands: usize,
+    /// Scene side length in pixels (paper: 307 → 94,249 pixels).
+    pub side: usize,
+    /// Endmembers (paper: 4 — asphalt, grass, tree, roof).
+    pub endmembers: usize,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl HyperspectralSpec {
+    /// Paper-scale: 162 × 94,249.
+    pub fn paper() -> Self {
+        HyperspectralSpec { bands: 162, side: 307, endmembers: 4, noise: 0.01, seed: 42 }
+    }
+
+    pub fn small() -> Self {
+        HyperspectralSpec { bands: 40, side: 32, endmembers: 4, noise: 0.01, seed: 42 }
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.side * self.side
+    }
+}
+
+/// Generated scene with ground truth.
+pub struct HyperspectralData {
+    /// bands × pixels data matrix.
+    pub x: Mat,
+    /// Ground-truth endmember spectra, bands × endmembers.
+    pub endmembers: Mat,
+    /// Ground-truth abundances, endmembers × pixels (rows sum ≈ 1 per col).
+    pub abundances: Mat,
+    pub spec: HyperspectralSpec,
+}
+
+/// Generate the scene.
+pub fn generate(spec: &HyperspectralSpec) -> HyperspectralData {
+    let mut rng = Pcg64::seed_from_u64(spec.seed);
+    let k = spec.endmembers;
+    let npix = spec.pixels();
+
+    // --- Endmember spectra: 2-3 smooth Gaussian bumps per signature ---
+    // Each endmember's dominant bump lives in its own region of the
+    // spectrum (materials like asphalt/grass/tree/roof have distinctive
+    // reflectance peaks); secondary bumps may overlap. This keeps the
+    // unmixing identifiable, like real urban endmembers are.
+    let mut endmembers = Mat::zeros(spec.bands, k);
+    for j in 0..k {
+        let mut sig = vec![0.02f64; spec.bands];
+        // dominant bump centered in endmember j's own region
+        let region = spec.bands as f64 / k as f64;
+        let center = (j as f64 + 0.3 + 0.4 * rng.uniform()) * region;
+        let width = (0.4 + 0.3 * rng.uniform()) * region;
+        for (b, s) in sig.iter_mut().enumerate() {
+            *s += (1.0 + 0.3 * rng.uniform())
+                * (-0.5 * ((b as f64 - center) / width).powi(2)).exp();
+        }
+        // 1-2 weaker bumps anywhere
+        for _ in 0..(1 + rng.uniform_usize(2)) {
+            let c2 = rng.uniform() * spec.bands as f64;
+            let w2 = (0.05 + 0.1 * rng.uniform()) * spec.bands as f64;
+            let a2 = 0.1 + 0.2 * rng.uniform();
+            for (b, s) in sig.iter_mut().enumerate() {
+                *s += a2 * (-0.5 * ((b as f64 - c2) / w2).powi(2)).exp();
+            }
+        }
+        let nrm = vec_norm(&sig).max(1e-12);
+        for (b, s) in sig.iter().enumerate() {
+            endmembers.set(b, j, s / nrm);
+        }
+    }
+
+    // --- Abundance maps: per-class spatial Gaussian blobs, normalized ---
+    let mut raw = Mat::zeros(k, npix);
+    for j in 0..k {
+        let blobs = 3 + rng.uniform_usize(4);
+        let mut field = vec![0.02f64; npix];
+        for _ in 0..blobs {
+            let cy = rng.uniform() * spec.side as f64;
+            let cx = rng.uniform() * spec.side as f64;
+            let sy = (0.05 + 0.15 * rng.uniform()) * spec.side as f64;
+            let sx = (0.05 + 0.15 * rng.uniform()) * spec.side as f64;
+            let amp = 0.5 + rng.uniform();
+            for y in 0..spec.side {
+                for x in 0..spec.side {
+                    let d = ((y as f64 - cy) / sy).powi(2) + ((x as f64 - cx) / sx).powi(2);
+                    field[y * spec.side + x] += amp * (-0.5 * d).exp();
+                }
+            }
+        }
+        for (p, f) in field.iter().enumerate() {
+            raw.set(j, p, *f);
+        }
+    }
+    // Sharpen the fields (cube) so most pixels are near-pure — real urban
+    // scenes have large single-material regions, and identifiability of the
+    // unregularized NMF unmixing depends on near-pure pixels existing.
+    let mut abundances = raw;
+    abundances.map_inplace(|v| v * v * v);
+    for p in 0..npix {
+        let total: f64 = (0..k).map(|j| abundances.get(j, p)).sum();
+        if total > 0.0 {
+            for j in 0..k {
+                let v = abundances.get(j, p) / total;
+                abundances.set(j, p, v);
+            }
+        }
+    }
+
+    // --- X = W·H + nonnegative noise ---
+    let mut x = gemm::matmul(&endmembers, &abundances);
+    if spec.noise > 0.0 {
+        let scale = spec.noise * x.sum() / x.len() as f64;
+        for v in x.as_mut_slice() {
+            *v += scale * rng.uniform();
+        }
+    }
+
+    HyperspectralData { x, endmembers, abundances, spec: spec.clone() }
+}
+
+/// Mean spectral-angle distance (radians) between recovered and true
+/// endmembers under the best greedy matching — the quantitative version of
+/// the paper's Fig. 7 visual check. 0 = perfect.
+pub fn spectral_angle_distance(recovered: &Mat, truth: &Mat) -> f64 {
+    let kt = truth.cols();
+    let kr = recovered.cols();
+    if kt == 0 || kr == 0 {
+        return std::f64::consts::FRAC_PI_2;
+    }
+    let mut used = vec![false; kr];
+    let mut total = 0.0;
+    for tj in 0..kt {
+        let t = truth.col(tj);
+        let tn = vec_norm(&t).max(1e-12);
+        let mut best = -1.0;
+        let mut best_i = None;
+        for rj in 0..kr {
+            if used[rj] {
+                continue;
+            }
+            let r = recovered.col(rj);
+            let rn = vec_norm(&r).max(1e-12);
+            let cos: f64 = t.iter().zip(r.iter()).map(|(a, b)| a * b).sum::<f64>() / (tn * rn);
+            if cos > best {
+                best = cos;
+                best_i = Some(rj);
+            }
+        }
+        if let Some(i) = best_i {
+            used[i] = true;
+        }
+        total += best.clamp(-1.0, 1.0).acos();
+    }
+    total / kt as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_simplex() {
+        let d = generate(&HyperspectralSpec { bands: 20, side: 8, endmembers: 4, noise: 0.01, seed: 1 });
+        assert_eq!(d.x.shape(), (20, 64));
+        assert_eq!(d.endmembers.shape(), (20, 4));
+        assert_eq!(d.abundances.shape(), (4, 64));
+        assert!(d.x.is_nonneg());
+        for p in 0..64 {
+            let s: f64 = (0..4).map(|j| d.abundances.get(j, p)).sum();
+            assert!((s - 1.0).abs() < 1e-9, "abundances must sum to 1, got {s}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = HyperspectralSpec::small();
+        assert_eq!(generate(&spec).x, generate(&spec).x);
+    }
+
+    #[test]
+    fn sad_zero_for_exact_match() {
+        let d = generate(&HyperspectralSpec::small());
+        assert!(spectral_angle_distance(&d.endmembers, &d.endmembers) < 1e-6);
+    }
+
+    #[test]
+    fn nmf_recovers_endmembers() {
+        let d = generate(&HyperspectralSpec { bands: 30, side: 16, endmembers: 4, noise: 0.005, seed: 2 });
+        let fit = crate::nmf::hals::Hals::new(
+            crate::nmf::options::NmfOptions::new(4)
+                .with_max_iter(400)
+                .with_seed(3)
+                .with_init(crate::nmf::options::Init::NndsvdA),
+        )
+        .fit(&d.x)
+        .unwrap();
+        let sad = spectral_angle_distance(&fit.model.w, &d.endmembers);
+        // Random spectra pairs are ~60-90° apart; recovery well under 25°.
+        assert!(sad < 0.45, "spectral angle distance {sad} too large");
+    }
+}

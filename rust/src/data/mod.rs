@@ -1,0 +1,17 @@
+//! Datasets and storage.
+//!
+//! Synthetic substitutes for the paper's three real datasets (DESIGN.md §5
+//! documents each substitution) plus the generators for §4.4's synthetic
+//! benchmarks and the out-of-core column-block store:
+//!
+//! * [`synthetic`] — exact-rank nonnegative matrices (paper §4.4).
+//! * [`faces`] — parts-based face images (Yale-B substitute).
+//! * [`hyperspectral`] — linear-mixing-model scene ('urban' substitute).
+//! * [`digits`] — stroke-rendered labeled digits (MNIST substitute).
+//! * [`store`] — `.nmfstore` column-blocked binary format (HDF5 substitute).
+
+pub mod digits;
+pub mod faces;
+pub mod hyperspectral;
+pub mod store;
+pub mod synthetic;

@@ -1,0 +1,285 @@
+//! `.nmfstore` — the column-blocked on-disk matrix store.
+//!
+//! The paper's out-of-core discussion (Appendix A) assumes an HDF5-style
+//! container that can hand back subsets of columns without touching the
+//! rest of the file. This is our substitute: a flat binary format whose
+//! unit of I/O is a **column block**, so the blocked QB algorithm streams
+//! `2 + 2q` sequential passes with `O(m·block)` memory.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic    8 bytes  "NMFSTOR1"
+//! rows     u64
+//! cols     u64
+//! block    u64                  column-block width
+//! data     ⌈cols/block⌉ blocks, each a rows×bw row-major f64 slab
+//! ```
+//!
+//! Reads use `pread` (`FileExt::read_exact_at`), so a shared `&NmfStore`
+//! can serve concurrent readers without seek races.
+
+use std::fs::File;
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::mat::Mat;
+use crate::sketch::blocked::ColumnBlockSource;
+
+const MAGIC: &[u8; 8] = b"NMFSTOR1";
+
+/// Read handle for a `.nmfstore` file.
+pub struct NmfStore {
+    file: File,
+    rows: usize,
+    cols: usize,
+    block: usize,
+}
+
+impl NmfStore {
+    /// Open an existing store.
+    pub fn open(path: &Path) -> Result<NmfStore> {
+        let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let mut header = [0u8; 32];
+        file.read_exact_at(&mut header, 0).context("reading header")?;
+        if &header[0..8] != MAGIC {
+            bail!("{} is not an nmfstore file", path.display());
+        }
+        let rows = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+        let block = u64::from_le_bytes(header[24..32].try_into().unwrap()) as usize;
+        if block == 0 || rows == 0 || cols == 0 {
+            bail!("degenerate store dimensions {rows}x{cols} block {block}");
+        }
+        Ok(NmfStore { file, rows, cols, block })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Native block width (reads at this granularity are single-slab).
+    pub fn block_width(&self) -> usize {
+        self.block
+    }
+
+    /// Byte offset of block `bi` (blocks before it are all full except
+    /// possibly none — only the last block is short).
+    fn block_offset(&self, bi: usize) -> u64 {
+        32 + (bi * self.block * self.rows * 8) as u64
+    }
+
+    fn block_cols_of(&self, bi: usize) -> usize {
+        let j0 = bi * self.block;
+        (self.cols - j0).min(self.block)
+    }
+
+    /// Read one whole native block as a rows×bw matrix.
+    pub fn read_native_block(&self, bi: usize) -> Result<Mat> {
+        let bw = self.block_cols_of(bi);
+        anyhow::ensure!(bw > 0, "block index {bi} out of range");
+        let nbytes = self.rows * bw * 8;
+        let mut buf = vec![0u8; nbytes];
+        self.file
+            .read_exact_at(&mut buf, self.block_offset(bi))
+            .with_context(|| format!("reading block {bi}"))?;
+        let data: Vec<f64> = buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Mat::from_vec(self.rows, bw, data))
+    }
+
+    /// Read an arbitrary column range `[j0, j1)` (slices native blocks).
+    pub fn read_cols(&self, j0: usize, j1: usize) -> Result<Mat> {
+        anyhow::ensure!(j0 < j1 && j1 <= self.cols, "bad column range {j0}..{j1}");
+        let mut out = Mat::zeros(self.rows, j1 - j0);
+        let mut bi = j0 / self.block;
+        loop {
+            let b0 = bi * self.block;
+            if b0 >= j1 {
+                break;
+            }
+            let blk = self.read_native_block(bi)?;
+            let lo = j0.max(b0);
+            let hi = j1.min(b0 + blk.cols());
+            let piece = blk.col_block(lo - b0, hi - b0);
+            out.set_col_block(lo - j0, &piece);
+            bi += 1;
+        }
+        Ok(out)
+    }
+
+    /// Materialize the full matrix (small stores / tests only).
+    pub fn read_all(&self) -> Result<Mat> {
+        self.read_cols(0, self.cols)
+    }
+}
+
+impl ColumnBlockSource for NmfStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn read_block(&self, j0: usize, j1: usize) -> Result<Mat> {
+        self.read_cols(j0, j1)
+    }
+}
+
+/// Incremental writer: blocks are appended in order, so a generator can
+/// stream a matrix to disk without materializing it.
+pub struct NmfStoreWriter {
+    file: File,
+    rows: usize,
+    cols: usize,
+    block: usize,
+    written_cols: usize,
+}
+
+impl NmfStoreWriter {
+    pub fn create(path: &Path, rows: usize, cols: usize, block: usize) -> Result<NmfStoreWriter> {
+        anyhow::ensure!(rows > 0 && cols > 0 && block > 0, "degenerate store shape");
+        let mut file =
+            File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        file.write_all(MAGIC)?;
+        file.write_all(&(rows as u64).to_le_bytes())?;
+        file.write_all(&(cols as u64).to_le_bytes())?;
+        file.write_all(&(block as u64).to_le_bytes())?;
+        Ok(NmfStoreWriter { file, rows, cols, block, written_cols: 0 })
+    }
+
+    /// Append the next column block. Must be `block` wide except the last.
+    pub fn write_block(&mut self, m: &Mat) -> Result<()> {
+        anyhow::ensure!(m.rows() == self.rows, "row mismatch");
+        let expected = (self.cols - self.written_cols).min(self.block);
+        anyhow::ensure!(
+            m.cols() == expected,
+            "block width {} != expected {expected}",
+            m.cols()
+        );
+        let mut buf = Vec::with_capacity(m.len() * 8);
+        for &v in m.as_slice() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.file.write_all(&buf)?;
+        self.written_cols += m.cols();
+        Ok(())
+    }
+
+    /// Finish; errors if the column count is short.
+    pub fn finish(mut self) -> Result<()> {
+        anyhow::ensure!(
+            self.written_cols == self.cols,
+            "store incomplete: {}/{} columns written",
+            self.written_cols,
+            self.cols
+        );
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Write an in-memory matrix as a store (tests and small data).
+pub fn write_mat(path: &Path, m: &Mat, block: usize) -> Result<()> {
+    let mut w = NmfStoreWriter::create(path, m.rows(), m.cols(), block)?;
+    let mut j0 = 0;
+    while j0 < m.cols() {
+        let j1 = (j0 + block).min(m.cols());
+        w.write_block(&m.col_block(j0, j1))?;
+        j0 = j1;
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("randnmf_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let m = rng.uniform_mat(17, 23);
+        let path = tmp("roundtrip.nmfstore");
+        write_mat(&path, &m, 5).unwrap();
+        let store = NmfStore::open(&path).unwrap();
+        assert_eq!(store.rows(), 17);
+        assert_eq!(store.cols(), 23);
+        assert_eq!(store.block_width(), 5);
+        assert_eq!(store.read_all().unwrap(), m);
+    }
+
+    #[test]
+    fn arbitrary_column_ranges() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let m = rng.uniform_mat(9, 31);
+        let path = tmp("ranges.nmfstore");
+        write_mat(&path, &m, 7).unwrap();
+        let store = NmfStore::open(&path).unwrap();
+        for (j0, j1) in [(0, 31), (0, 1), (30, 31), (3, 11), (6, 8), (7, 14), (13, 29)] {
+            assert_eq!(store.read_cols(j0, j1).unwrap(), m.col_block(j0, j1), "{j0}..{j1}");
+        }
+        assert!(store.read_cols(5, 5).is_err());
+        assert!(store.read_cols(0, 32).is_err());
+    }
+
+    #[test]
+    fn streaming_writer_validates() {
+        let path = tmp("stream.nmfstore");
+        let mut w = NmfStoreWriter::create(&path, 4, 10, 4).unwrap();
+        let mut rng = Pcg64::seed_from_u64(3);
+        w.write_block(&rng.uniform_mat(4, 4)).unwrap();
+        // wrong width rejected
+        assert!(w.write_block(&rng.uniform_mat(4, 3)).is_err());
+        w.write_block(&rng.uniform_mat(4, 4)).unwrap();
+        // premature finish rejected
+        let w2 = NmfStoreWriter::create(&tmp("short.nmfstore"), 2, 5, 2).unwrap();
+        assert!(w2.finish().is_err());
+        w.write_block(&rng.uniform_mat(4, 2)).unwrap(); // final short block
+        w.finish().unwrap();
+        assert_eq!(NmfStore::open(&path).unwrap().cols(), 10);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("bad.nmfstore");
+        std::fs::write(&path, b"NOTASTORExxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(NmfStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn out_of_core_qb_matches_in_memory() {
+        use crate::sketch::blocked::{qb_blocked, MatSource};
+        use crate::sketch::qb::QbOptions;
+        let mut rng = Pcg64::seed_from_u64(4);
+        let u = rng.uniform_mat(40, 5);
+        let v = rng.uniform_mat(5, 33);
+        let m = crate::linalg::gemm::matmul(&u, &v);
+        let path = tmp("qb.nmfstore");
+        write_mat(&path, &m, 8).unwrap();
+        let store = NmfStore::open(&path).unwrap();
+        let opts = QbOptions::new(5).with_oversample(6).with_power_iters(1);
+        let mut r1 = Pcg64::seed_from_u64(5);
+        let mut r2 = Pcg64::seed_from_u64(5);
+        let from_disk = qb_blocked(&store, opts, 8, &mut r1).unwrap();
+        let from_mem = qb_blocked(&MatSource(&m), opts, 8, &mut r2).unwrap();
+        assert!(from_disk.q.max_abs_diff(&from_mem.q) < 1e-12);
+        assert!(from_disk.b.max_abs_diff(&from_mem.b) < 1e-12);
+        assert!(from_disk.relative_error(&m) < 1e-8);
+    }
+}

@@ -1,0 +1,123 @@
+//! Synthetic nonnegative low-rank data (paper §4.4).
+//!
+//! The paper's computational benchmarks use "low-rank matrices consisting
+//! of nonnegative elements drawn from the Gaussian distribution": exact
+//! rank-`r` products of nonnegative factors. Three named shapes appear:
+//!
+//! * tall-and-skinny `100,000 × 5,000` (Fig. 11a),
+//! * fat `25,000 × 25,000` (Fig. 11b),
+//! * square `5,000 × 5,000` (Figs. 12–13),
+//!
+//! all of rank 40. The helpers below reproduce those (and scaled-down
+//! variants for CI-speed runs).
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Pcg64;
+
+/// Nonnegative matrix of exact rank `r`: `X = U·V` with `U, V ≥ 0` drawn
+/// as `|N(0,1)|`, plus optional nonnegative noise of relative magnitude
+/// `noise`.
+pub fn low_rank_nonneg(m: usize, n: usize, r: usize, noise: f64, rng: &mut Pcg64) -> Mat {
+    let u = rng.gaussian_mat(m, r).map(f64::abs);
+    let v = rng.gaussian_mat(r, n).map(f64::abs);
+    let mut x = gemm::matmul(&u, &v);
+    if noise > 0.0 {
+        let scale = noise * x.sum() / x.len() as f64;
+        for val in x.as_mut_slice() {
+            *val += scale * rng.uniform();
+        }
+    }
+    x
+}
+
+/// Fig. 11a workload (optionally scaled by `scale ∈ (0, 1]`).
+pub fn tall_and_skinny(scale: f64, rng: &mut Pcg64) -> Mat {
+    let m = ((100_000.0 * scale) as usize).max(64);
+    let n = ((5_000.0 * scale) as usize).max(32);
+    low_rank_nonneg(m, n, 40.min(n / 2).max(2), 0.0, rng)
+}
+
+/// Fig. 11b workload.
+pub fn fat(scale: f64, rng: &mut Pcg64) -> Mat {
+    let s = ((25_000.0 * scale) as usize).max(64);
+    low_rank_nonneg(s, s, 40.min(s / 2).max(2), 0.0, rng)
+}
+
+/// Figs. 12–13 workload.
+pub fn square(scale: f64, rng: &mut Pcg64) -> Mat {
+    let s = ((5_000.0 * scale) as usize).max(64);
+    low_rank_nonneg(s, s, 40.min(s / 2).max(2), 0.0, rng)
+}
+
+/// Matrix with a slowly decaying singular spectrum (`σ_i ∝ i^{-decay}`)
+/// and nonnegative entries — the hard case for sketching without power
+/// iterations, used by the `q` ablation bench.
+pub fn slow_spectrum(m: usize, n: usize, decay: f64, rng: &mut Pcg64) -> Mat {
+    let r = m.min(n);
+    let u = crate::linalg::qr::orthonormalize(&rng.gaussian_mat(m, r));
+    let v = crate::linalg::qr::orthonormalize(&rng.gaussian_mat(n, r));
+    let mut us = u;
+    for j in 0..r {
+        let s = ((j + 1) as f64).powf(-decay);
+        for i in 0..m {
+            let val = us.get(i, j) * s;
+            us.set(i, j, val);
+        }
+    }
+    let mut x = gemm::a_bt(&us, &v);
+    // Shift to nonnegativity (preserves the spectrum's decay profile up to
+    // one rank-1 component).
+    let min = x.min();
+    if min < 0.0 {
+        x.map_inplace(|v| v - min);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::jacobi_svd;
+
+    #[test]
+    fn exact_rank() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let x = low_rank_nonneg(50, 40, 7, 0.0, &mut rng);
+        assert!(x.is_nonneg());
+        let svd = jacobi_svd(&x);
+        for i in 7..svd.s.len() {
+            assert!(svd.s[i] < 1e-8 * svd.s[0], "rank should be exactly 7");
+        }
+    }
+
+    #[test]
+    fn noise_raises_rank() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let x = low_rank_nonneg(40, 30, 4, 0.05, &mut rng);
+        let svd = jacobi_svd(&x);
+        assert!(svd.s[10] > 1e-8 * svd.s[0], "noise should fill the spectrum");
+        assert!(x.is_nonneg());
+    }
+
+    #[test]
+    fn named_workload_shapes() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let t = tall_and_skinny(0.01, &mut rng);
+        assert_eq!(t.shape(), (1000, 50));
+        let f = fat(0.005, &mut rng);
+        assert_eq!(f.shape(), (125, 125));
+        let s = square(0.02, &mut rng);
+        assert_eq!(s.shape(), (100, 100));
+    }
+
+    #[test]
+    fn slow_spectrum_decays_slowly() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let x = slow_spectrum(60, 60, 0.5, &mut rng);
+        assert!(x.is_nonneg());
+        let svd = jacobi_svd(&x);
+        // σ_20 / σ_2 should still be substantial (slow decay).
+        assert!(svd.s[20] / svd.s[2] > 0.2, "ratio {}", svd.s[20] / svd.s[2]);
+    }
+}

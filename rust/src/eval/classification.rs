@@ -1,0 +1,146 @@
+//! Classification metrics: precision / recall / F1 (Table 4's columns).
+//!
+//! The paper reports weighted-average precision, recall and F1 over the
+//! ten MNIST classes (scikit-learn's `classification_report` averages).
+//! Both macro and weighted averages are provided, plus the confusion
+//! matrix for inspection.
+
+/// Per-class and averaged classification metrics.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub classes: Vec<u8>,
+    pub precision: Vec<f64>,
+    pub recall: Vec<f64>,
+    pub f1: Vec<f64>,
+    pub support: Vec<usize>,
+    pub confusion: Vec<Vec<usize>>,
+    pub accuracy: f64,
+}
+
+impl Report {
+    /// Build from parallel true/predicted label slices.
+    pub fn compute(y_true: &[u8], y_pred: &[u8]) -> Report {
+        assert_eq!(y_true.len(), y_pred.len());
+        assert!(!y_true.is_empty(), "empty evaluation set");
+        let mut classes: Vec<u8> = y_true.iter().chain(y_pred.iter()).copied().collect();
+        classes.sort_unstable();
+        classes.dedup();
+        let idx = |c: u8| classes.binary_search(&c).unwrap();
+        let ncls = classes.len();
+
+        let mut confusion = vec![vec![0usize; ncls]; ncls];
+        let mut correct = 0usize;
+        for (&t, &p) in y_true.iter().zip(y_pred.iter()) {
+            confusion[idx(t)][idx(p)] += 1;
+            if t == p {
+                correct += 1;
+            }
+        }
+
+        let mut precision = Vec::with_capacity(ncls);
+        let mut recall = Vec::with_capacity(ncls);
+        let mut f1 = Vec::with_capacity(ncls);
+        let mut support = Vec::with_capacity(ncls);
+        for c in 0..ncls {
+            let tp = confusion[c][c];
+            let pred_c: usize = (0..ncls).map(|t| confusion[t][c]).sum();
+            let true_c: usize = confusion[c].iter().sum();
+            let p = if pred_c == 0 { 0.0 } else { tp as f64 / pred_c as f64 };
+            let r = if true_c == 0 { 0.0 } else { tp as f64 / true_c as f64 };
+            let f = if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) };
+            precision.push(p);
+            recall.push(r);
+            f1.push(f);
+            support.push(true_c);
+        }
+
+        Report {
+            classes,
+            precision,
+            recall,
+            f1,
+            support,
+            confusion,
+            accuracy: correct as f64 / y_true.len() as f64,
+        }
+    }
+
+    fn weighted(&self, xs: &[f64]) -> f64 {
+        let total: usize = self.support.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        xs.iter()
+            .zip(self.support.iter())
+            .map(|(x, &s)| x * s as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Support-weighted averages `(precision, recall, f1)` — the numbers
+    /// the paper's Table 4 prints.
+    pub fn weighted_avg(&self) -> (f64, f64, f64) {
+        (self.weighted(&self.precision), self.weighted(&self.recall), self.weighted(&self.f1))
+    }
+
+    /// Unweighted macro averages `(precision, recall, f1)`.
+    pub fn macro_avg(&self) -> (f64, f64, f64) {
+        let n = self.classes.len() as f64;
+        (
+            self.precision.iter().sum::<f64>() / n,
+            self.recall.iter().sum::<f64>() / n,
+            self.f1.iter().sum::<f64>() / n,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction() {
+        let y = vec![0u8, 1, 2, 0, 1, 2];
+        let r = Report::compute(&y, &y);
+        assert_eq!(r.accuracy, 1.0);
+        let (p, rc, f) = r.weighted_avg();
+        assert_eq!((p, rc, f), (1.0, 1.0, 1.0));
+        for c in 0..3 {
+            assert_eq!(r.confusion[c][c], 2);
+        }
+    }
+
+    #[test]
+    fn known_confusion() {
+        // true: [0,0,1,1]; pred: [0,1,1,1]
+        let r = Report::compute(&[0, 0, 1, 1], &[0, 1, 1, 1]);
+        assert_eq!(r.accuracy, 0.75);
+        // class 0: tp=1, pred_0=1 -> precision 1.0; true_0=2 -> recall 0.5
+        assert_eq!(r.precision[0], 1.0);
+        assert_eq!(r.recall[0], 0.5);
+        // class 1: tp=2, pred_1=3 -> precision 2/3; recall 1.0
+        assert!((r.precision[1] - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.recall[1], 1.0);
+        let f0 = 2.0 * 1.0 * 0.5 / 1.5;
+        assert!((r.f1[0] - f0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_vs_macro_differ_on_imbalance() {
+        // class 0 has 9 samples (all right), class 1 has 1 (wrong).
+        let y_true = vec![0u8, 0, 0, 0, 0, 0, 0, 0, 0, 1];
+        let y_pred = vec![0u8, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        let r = Report::compute(&y_true, &y_pred);
+        let (_, rec_w, _) = r.weighted_avg();
+        let (_, rec_m, _) = r.macro_avg();
+        assert!((rec_w - 0.9).abs() < 1e-12);
+        assert!((rec_m - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_absent_in_pred_has_zero_precision() {
+        let r = Report::compute(&[0, 1], &[0, 0]);
+        assert_eq!(r.precision[1], 0.0);
+        assert_eq!(r.f1[1], 0.0);
+    }
+}

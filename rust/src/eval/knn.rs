@@ -1,0 +1,144 @@
+//! k-nearest-neighbors classifier (the paper uses k = 3 for Table 4).
+//!
+//! Samples are columns of a feature matrix (the NMF codes `H`, or
+//! `W⁺·Y`-style projections of held-out data). Distances are Euclidean;
+//! ties in the vote break toward the nearest neighbor's label, matching
+//! scikit-learn's behaviour closely enough for the comparison.
+
+use crate::linalg::mat::Mat;
+
+/// Fitted (lazy) kNN model: stores the training codes and labels.
+pub struct Knn {
+    k: usize,
+    train: Mat,
+    labels: Vec<u8>,
+}
+
+impl Knn {
+    /// `train` is features×samples; `labels[i]` labels column `i`.
+    pub fn fit(k: usize, train: Mat, labels: Vec<u8>) -> Self {
+        assert!(k >= 1);
+        assert_eq!(train.cols(), labels.len(), "label count mismatch");
+        assert!(!labels.is_empty(), "empty training set");
+        Knn { k, train, labels }
+    }
+
+    /// Predict the label of one feature column.
+    pub fn predict_one(&self, x: &[f64]) -> u8 {
+        assert_eq!(x.len(), self.train.rows());
+        let n = self.train.cols();
+        let k = self.k.min(n);
+        // Partial selection of the k smallest distances.
+        let mut best: Vec<(f64, u8)> = Vec::with_capacity(k + 1);
+        for j in 0..n {
+            let mut d = 0.0;
+            for (i, &xi) in x.iter().enumerate() {
+                let diff = xi - self.train.get(i, j);
+                d += diff * diff;
+            }
+            if best.len() < k || d < best.last().unwrap().0 {
+                let pos = best.partition_point(|&(bd, _)| bd < d);
+                best.insert(pos, (d, self.labels[j]));
+                if best.len() > k {
+                    best.pop();
+                }
+            }
+        }
+        // Majority vote; ties resolve toward the closest neighbor's label.
+        let mut counts = [0usize; 256];
+        for &(_, l) in &best {
+            counts[l as usize] += 1;
+        }
+        let max_count = *counts.iter().max().unwrap();
+        best.iter()
+            .find(|&&(_, l)| counts[l as usize] == max_count)
+            .map(|&(_, l)| l)
+            .unwrap()
+    }
+
+    /// Predict labels for every column of `x` (parallel over columns).
+    pub fn predict(&self, x: &Mat) -> Vec<u8> {
+        let n = x.cols();
+        let nthreads = crate::linalg::gemm::num_threads().min(n.max(1));
+        if nthreads <= 1 || n < 32 {
+            return (0..n).map(|j| self.predict_one(&x.col(j))).collect();
+        }
+        let chunk = n.div_ceil(nthreads);
+        let mut out = vec![0u8; n];
+        let out_chunks: Vec<&mut [u8]> = out.chunks_mut(chunk).collect();
+        std::thread::scope(|s| {
+            for (t, chunk_slice) in out_chunks.into_iter().enumerate() {
+                let j0 = t * chunk;
+                s.spawn(move || {
+                    for (off, slot) in chunk_slice.iter_mut().enumerate() {
+                        *slot = self.predict_one(&x.col(j0 + off));
+                    }
+                });
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn separable_clusters_classified_perfectly() {
+        // Two well-separated Gaussian blobs in 3-D feature space.
+        let mut rng = Pcg64::seed_from_u64(1);
+        let n = 60;
+        let mut train = Mat::zeros(3, n);
+        let mut labels = Vec::new();
+        for j in 0..n {
+            let class = (j % 2) as u8;
+            let center = if class == 0 { 0.0 } else { 10.0 };
+            for i in 0..3 {
+                train.set(i, j, center + rng.gaussian() * 0.5);
+            }
+            labels.push(class);
+        }
+        let knn = Knn::fit(3, train, labels);
+        assert_eq!(knn.predict_one(&[0.1, -0.2, 0.3]), 0);
+        assert_eq!(knn.predict_one(&[9.8, 10.1, 10.0]), 1);
+    }
+
+    #[test]
+    fn k1_returns_nearest_label() {
+        let train = Mat::from_rows(&[&[0.0, 5.0, 10.0]]);
+        let knn = Knn::fit(1, train, vec![7, 8, 9]);
+        assert_eq!(knn.predict_one(&[4.4]), 8);
+        assert_eq!(knn.predict_one(&[11.0]), 9);
+    }
+
+    #[test]
+    fn tie_breaks_toward_nearest() {
+        // k=2 with one neighbor from each class: the closer one wins.
+        let train = Mat::from_rows(&[&[0.0, 1.0]]);
+        let knn = Knn::fit(2, train, vec![0, 1]);
+        assert_eq!(knn.predict_one(&[0.1]), 0);
+        assert_eq!(knn.predict_one(&[0.9]), 1);
+    }
+
+    #[test]
+    fn batch_matches_single_and_is_parallel_safe() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let train = rng.uniform_mat(4, 100);
+        let labels: Vec<u8> = (0..100).map(|i| (i % 5) as u8).collect();
+        let knn = Knn::fit(3, train, labels);
+        let queries = rng.uniform_mat(4, 64);
+        let batch = knn.predict(&queries);
+        for j in 0..64 {
+            assert_eq!(batch[j], knn.predict_one(&queries.col(j)));
+        }
+    }
+
+    #[test]
+    fn k_larger_than_train_set_clamped() {
+        let train = Mat::from_rows(&[&[0.0, 1.0]]);
+        let knn = Knn::fit(10, train, vec![3, 3]);
+        assert_eq!(knn.predict_one(&[0.5]), 3);
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation: the classification pipeline of the paper's Table 4.
+//!
+//! * [`knn`] — k-nearest-neighbors classifier over NMF feature codes.
+//! * [`classification`] — precision / recall / F1 (per class and macro)
+//!   and confusion matrices.
+
+pub mod classification;
+pub mod knn;

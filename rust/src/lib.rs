@@ -1,0 +1,56 @@
+//! # randnmf — Randomized Nonnegative Matrix Factorization
+//!
+//! A production-grade reproduction of *"Randomized Nonnegative Matrix
+//! Factorization"* (Erichson, Mendible, Wihlborn, Kutz; stat.ML 2017,
+//! Pattern Recognition Letters 2018).
+//!
+//! The crate is organized as a three-layer system:
+//!
+//! * **L3 (this crate)** — the coordinator: dataset store, config/CLI,
+//!   sweep scheduler, metrics, evaluation, and the full family of NMF
+//!   algorithms (deterministic HALS, randomized HALS, MU, compressed MU,
+//!   regularized variants) on top of an in-repo dense linear-algebra
+//!   substrate ([`linalg`]) and the randomized QB range finder ([`sketch`]).
+//! * **L2 (JAX, build time)** — `python/compile/model.py` lowers the HALS
+//!   iteration and QB sketch to HLO text artifacts.
+//! * **L1 (Pallas, build time)** — `python/compile/kernels/` author the
+//!   coordinate-sweep and tiled-matmul kernels called by L2.
+//!
+//! At runtime the [`runtime`] module loads the AOT artifacts through PJRT
+//! and exposes them behind the same engine trait as the pure-Rust path, so
+//! Python is never on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use randnmf::prelude::*;
+//!
+//! let mut rng = Pcg64::seed_from_u64(0);
+//! let x = synthetic::low_rank_nonneg(2000, 500, 20, 0.0, &mut rng);
+//! let opts = NmfOptions::new(16).with_max_iter(200).with_seed(7);
+//! let fit = RandomizedHals::new(opts).fit(&x).unwrap();
+//! println!("relative error = {}", fit.relative_error(&x));
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod nmf;
+pub mod runtime;
+pub mod sketch;
+pub mod tensor;
+pub mod testing;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::data::synthetic;
+    pub use crate::linalg::mat::Mat;
+    pub use crate::linalg::rng::Pcg64;
+    pub use crate::nmf::hals::Hals;
+    pub use crate::nmf::model::{NmfFit, NmfModel};
+    pub use crate::nmf::options::{Init, NmfOptions, Regularization, UpdateOrder};
+    pub use crate::nmf::rhals::RandomizedHals;
+    pub use crate::sketch::qb::{qb, QbOptions};
+}

@@ -1,0 +1,502 @@
+//! Row-major dense `f64` matrix.
+//!
+//! `Mat` is the workhorse container for every algorithm in the crate. It is
+//! deliberately simple — contiguous `Vec<f64>`, row-major — because the
+//! GEMM kernels in [`crate::linalg::gemm`] do their own packing, and the
+//! HALS sweeps want cheap row views (`H` is updated row by row) plus
+//! strided column access (`W` is updated column by column).
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// A dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Create a matrix of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Create a matrix filled with `value`.
+    pub fn full(rows: usize, cols: usize, value: f64) -> Self {
+        Mat { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec: length {} != {rows}x{cols}", data.len());
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a slice of rows (mostly for tests).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "Mat::from_rows: ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Total number of entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Underlying row-major storage.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable underlying row-major storage.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the underlying storage.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Unchecked-ish scalar access (debug asserts bounds).
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { *self.data.get_unchecked(i * self.cols + j) }
+    }
+
+    /// Scalar write.
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { *self.data.get_unchecked_mut(i * self.cols + j) = v }
+    }
+
+    /// View of row `i` as a contiguous slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        assert!(i < self.rows, "row {i} out of bounds ({})", self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        assert!(i < self.rows, "row {i} out of bounds ({})", self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j` (column access is strided in row-major layout).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        assert!(j < self.cols, "col {j} out of bounds ({})", self.cols);
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Write `v` into column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self.set(i, j, v[i]);
+        }
+    }
+
+    /// Write `v` into row `i`.
+    pub fn set_row(&mut self, i: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.cols);
+        self.row_mut(i).copy_from_slice(v);
+    }
+
+    /// Explicit transpose (cache-blocked for large matrices).
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        const B: usize = 64;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                let imax = (ib + B).min(self.rows);
+                let jmax = (jb + B).min(self.cols);
+                for i in ib..imax {
+                    for j in jb..jmax {
+                        t.set(j, i, self.get(i, j));
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Copy a contiguous block of columns `[j0, j1)` into a new matrix.
+    pub fn col_block(&self, j0: usize, j1: usize) -> Mat {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        let w = j1 - j0;
+        let mut out = Mat::zeros(self.rows, w);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[j0..j1]);
+        }
+        out
+    }
+
+    /// Copy a contiguous block of rows `[i0, i1)` into a new matrix.
+    pub fn row_block(&self, i0: usize, i1: usize) -> Mat {
+        assert!(i0 <= i1 && i1 <= self.rows);
+        let h = i1 - i0;
+        Mat::from_vec(h, self.cols, self.data[i0 * self.cols..i1 * self.cols].to_vec())
+    }
+
+    /// Overwrite the column block `[j0, j0+src.cols())` with `src`.
+    pub fn set_col_block(&mut self, j0: usize, src: &Mat) {
+        assert_eq!(src.rows(), self.rows);
+        assert!(j0 + src.cols() <= self.cols);
+        for i in 0..self.rows {
+            let w = src.cols();
+            self.row_mut(i)[j0..j0 + w].copy_from_slice(src.row(i));
+        }
+    }
+
+    /// Element-wise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place element-wise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f64) -> f64) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// Clamp every entry to be `>= 0` (the `[·]₊` operator of the paper).
+    pub fn clamp_nonneg(&mut self) {
+        for x in &mut self.data {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+    }
+
+    /// True iff every entry is `>= 0`.
+    pub fn is_nonneg(&self) -> bool {
+        self.data.iter().all(|&x| x >= 0.0)
+    }
+
+    /// True iff any entry is NaN or infinite.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// `self += alpha * other` (same shape).
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `alpha * self` into a new matrix.
+    pub fn scale(&self, alpha: f64) -> Mat {
+        self.map(|x| alpha * x)
+    }
+
+    /// Element-wise difference.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(other.data.iter()).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Element-wise sum.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(other.data.iter()).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Element-wise (Hadamard) product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(other.data.iter()).map(|(a, b)| a * b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Maximum entry (NaN-ignoring); `-inf` for empty.
+    pub fn max(&self) -> f64 {
+        self.data.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Minimum entry (NaN-ignoring); `+inf` for empty.
+    pub fn min(&self) -> f64 {
+        self.data.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Fraction of entries equal to zero (sparsity measure used by the
+    /// ℓ1-regularization experiments, Fig. 7c).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let z = self.data.iter().filter(|&&x| x == 0.0).count();
+        z as f64 / self.data.len() as f64
+    }
+
+    /// Convert to `f32` row-major (the PJRT artifact dtype).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from `f32` row-major data (returning from PJRT).
+    pub fn from_f32_slice(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    /// Maximum absolute element-wise difference against `other`.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "hcat: row mismatch");
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Vertical concatenation `[self ; other]`.
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "vcat: col mismatch");
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(6);
+        for i in 0..show_rows {
+            let show_cols = self.cols.min(8);
+            let row: Vec<String> = (0..show_cols).map(|j| format!("{:>10.4}", self.get(i, j))).collect();
+            let ell = if self.cols > show_cols { ", ..." } else { "" };
+            writeln!(f, "  [{}{}]", row.join(", "), ell)?;
+        }
+        if self.rows > show_rows {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let m = Mat::zeros(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m.len(), 12);
+        assert!(m.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn eye_diagonal() {
+        let m = Mat::eye(4);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(m.get(i, j), if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.as_slice(), &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        assert_eq!(m.get(1, 2), 12.0);
+        assert_eq!(m[(0, 1)], 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_bad_len_panics() {
+        let _ = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn row_col_access() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.col(0), vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn set_row_set_col() {
+        let mut m = Mat::zeros(2, 2);
+        m.set_row(0, &[1.0, 2.0]);
+        m.set_col(1, &[9.0, 8.0]);
+        assert_eq!(m.as_slice(), &[1.0, 9.0, 0.0, 8.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(70, 33, |i, j| (i * 131 + j * 7) as f64);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (33, 70));
+        assert_eq!(t.transpose(), m);
+        for i in 0..70 {
+            for j in 0..33 {
+                assert_eq!(m.get(i, j), t.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn blocks() {
+        let m = Mat::from_fn(5, 6, |i, j| (i * 6 + j) as f64);
+        let cb = m.col_block(2, 5);
+        assert_eq!(cb.shape(), (5, 3));
+        assert_eq!(cb.get(1, 0), m.get(1, 2));
+        let rb = m.row_block(1, 3);
+        assert_eq!(rb.shape(), (2, 6));
+        assert_eq!(rb.row(0), m.row(1));
+
+        let mut big = Mat::zeros(5, 6);
+        big.set_col_block(2, &cb);
+        assert_eq!(big.col_block(2, 5), cb);
+        assert_eq!(big.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn clamp_and_nonneg() {
+        let mut m = Mat::from_rows(&[&[-1.0, 2.0], &[0.5, -0.25]]);
+        assert!(!m.is_nonneg());
+        m.clamp_nonneg();
+        assert!(m.is_nonneg());
+        assert_eq!(m.as_slice(), &[0.0, 2.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn arithmetic_helpers() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[4.0, 3.0], &[2.0, 1.0]]);
+        assert_eq!(a.add(&b).as_slice(), &[5.0, 5.0, 5.0, 5.0]);
+        assert_eq!(a.sub(&b).as_slice(), &[-3.0, -1.0, 1.0, 3.0]);
+        assert_eq!(a.hadamard(&b).as_slice(), &[4.0, 6.0, 6.0, 4.0]);
+        assert_eq!(a.scale(2.0).as_slice(), &[2.0, 4.0, 6.0, 8.0]);
+        let mut c = a.clone();
+        c.axpy(-1.0, &b);
+        assert_eq!(c, a.sub(&b));
+        assert_eq!(a.sum(), 10.0);
+        assert_eq!(a.max(), 4.0);
+        assert_eq!(a.min(), 1.0);
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        let m = Mat::from_rows(&[&[0.0, 1.0], &[0.0, 2.0]]);
+        assert!((m.zero_fraction() - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = Mat::from_fn(3, 3, |i, j| (i + j) as f64 * 0.5);
+        let v = m.to_f32_vec();
+        let back = Mat::from_f32_slice(3, 3, &v);
+        assert!(m.max_abs_diff(&back) < 1e-7);
+    }
+
+    #[test]
+    fn concat() {
+        let a = Mat::from_rows(&[&[1.0], &[2.0]]);
+        let b = Mat::from_rows(&[&[3.0], &[4.0]]);
+        assert_eq!(a.hcat(&b).as_slice(), &[1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(a.vcat(&b).as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,28 @@
+//! Dense linear-algebra substrate.
+//!
+//! The offline build environment ships no BLAS/LAPACK bindings and no
+//! `ndarray`/`nalgebra`, so this module implements the dense kernels the
+//! paper's algorithms need from scratch:
+//!
+//! * [`mat`] — a row-major `f64` matrix type with the slicing/views the
+//!   HALS coordinate sweeps require.
+//! * [`gemm`] — blocked, packed, multithreaded matrix multiplication and
+//!   its transpose variants (the per-iteration hot path of HALS).
+//! * [`qr`] — economic Householder QR (the orthonormalization step of the
+//!   randomized range finder, Algorithm 2 of the paper).
+//! * [`svd`] — one-sided Jacobi SVD plus a randomized SVD built on QB
+//!   (used for NNDSVD/rSVD initialization and the SVD baselines).
+//! * [`rng`] — PCG64 pseudo-random generator with uniform and Gaussian
+//!   sampling (the random test matrices Ω of the sketch).
+//! * [`norms`] — Frobenius norms, relative errors, projected-gradient
+//!   norms shared across the algorithms.
+
+pub mod gemm;
+pub mod mat;
+pub mod norms;
+pub mod qr;
+pub mod rng;
+pub mod svd;
+
+pub use mat::Mat;
+pub use rng::Pcg64;

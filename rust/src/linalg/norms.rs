@@ -1,0 +1,120 @@
+//! Norms and error measures shared across the algorithms.
+
+use super::gemm;
+use super::mat::Mat;
+
+/// Squared Frobenius norm `‖A‖_F²`.
+pub fn fro_norm_sq(a: &Mat) -> f64 {
+    a.as_slice().iter().map(|x| x * x).sum()
+}
+
+/// Frobenius norm `‖A‖_F`.
+pub fn fro_norm(a: &Mat) -> f64 {
+    fro_norm_sq(a).sqrt()
+}
+
+/// ℓ1 norm (sum of absolute values).
+pub fn l1_norm(a: &Mat) -> f64 {
+    a.as_slice().iter().map(|x| x.abs()).sum()
+}
+
+/// Euclidean norm of a vector.
+pub fn vec_norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// `‖X − WH‖_F²` computed **without materializing the m×n residual**, via
+/// the trace expansion
+/// `‖X‖² − 2·tr(Hᵀ(WᵀX)) + tr((WᵀW)(HHᵀ))`.
+///
+/// `WᵀX` costs one `k×n` GEMM — the same order as one HALS iteration — but
+/// only `O(kn + k²)` memory, which matters at the paper's 100,000×5,000
+/// scale. `x_norm_sq` is `‖X‖_F²`, precomputed once per fit.
+pub fn residual_norm_sq_factored(x: &Mat, x_norm_sq: f64, w: &Mat, h: &Mat) -> f64 {
+    let wtx = gemm::at_b(w, x); // k×n
+    let cross: f64 = wtx
+        .as_slice()
+        .iter()
+        .zip(h.as_slice().iter())
+        .map(|(a, b)| a * b)
+        .sum();
+    let wtw = gemm::gram(w); // k×k
+    let hht = gemm::gram_t(h); // k×k
+    let quad: f64 = wtw
+        .as_slice()
+        .iter()
+        .zip(hht.as_slice().iter())
+        .map(|(a, b)| a * b)
+        .sum();
+    // Clamp: floating cancellation can push a tiny true residual negative.
+    (x_norm_sq - 2.0 * cross + quad).max(0.0)
+}
+
+/// Relative reconstruction error `‖X − WH‖_F / ‖X‖_F` — the "Error" column
+/// of the paper's Tables 1–3.
+pub fn relative_error(x: &Mat, w: &Mat, h: &Mat) -> f64 {
+    let xn = fro_norm_sq(x);
+    if xn == 0.0 {
+        return 0.0;
+    }
+    (residual_norm_sq_factored(x, xn, w, h) / xn).sqrt()
+}
+
+/// Explicit-residual relative error (O(mn) memory) — test oracle for
+/// [`relative_error`].
+pub fn relative_error_explicit(x: &Mat, w: &Mat, h: &Mat) -> f64 {
+    let wh = gemm::matmul(w, h);
+    let r = x.sub(&wh);
+    fro_norm(&r) / fro_norm(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn fro_basic() {
+        let m = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 4.0]]);
+        assert!((fro_norm(&m) - 5.0).abs() < 1e-14);
+        assert!((fro_norm_sq(&m) - 25.0).abs() < 1e-14);
+        assert!((l1_norm(&m) - 7.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn vec_norm_pythagoras() {
+        assert!((vec_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-14);
+        assert_eq!(vec_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn factored_residual_matches_explicit() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let x = rng.uniform_mat(40, 30);
+        let w = rng.uniform_mat(40, 5);
+        let h = rng.uniform_mat(5, 30);
+        let explicit = relative_error_explicit(&x, &w, &h);
+        let fast = relative_error(&x, &w, &h);
+        assert!(
+            (explicit - fast).abs() < 1e-10,
+            "explicit={explicit} fast={fast}"
+        );
+    }
+
+    #[test]
+    fn exact_factorization_gives_zero_error() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let w = rng.uniform_mat(25, 4);
+        let h = rng.uniform_mat(4, 18);
+        let x = crate::linalg::gemm::matmul(&w, &h);
+        assert!(relative_error(&x, &w, &h) < 1e-7);
+    }
+
+    #[test]
+    fn zero_matrix_error_is_zero() {
+        let x = Mat::zeros(5, 5);
+        let w = Mat::zeros(5, 2);
+        let h = Mat::zeros(2, 5);
+        assert_eq!(relative_error(&x, &w, &h), 0.0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Economic Householder QR.
+//!
+//! The randomized range finder (paper Algorithm 2, lines 7/10) repeatedly
+//! orthonormalizes a tall skinny sketch `Y (m×l)`; this module provides that
+//! `qr` → `Q` step. The implementation stores reflectors below the diagonal
+//! (LAPACK `geqrf` layout) and forms the thin `Q (m×l)` by backward
+//! accumulation. All inner loops stream matrix **rows**, matching the
+//! row-major storage of [`Mat`].
+
+use super::mat::Mat;
+
+/// Result of an economic QR factorization of an `m×n` matrix with `m ≥ n`.
+pub struct QrFactors {
+    /// Thin orthonormal factor, `m×n`.
+    pub q: Mat,
+    /// Upper-triangular factor, `n×n`.
+    pub r: Mat,
+}
+
+/// Economic QR via Householder reflections. Panics if `m < n`.
+pub fn qr(a: &Mat) -> QrFactors {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr: need m >= n, got {m}x{n}");
+    let mut work = a.clone();
+    let mut taus = vec![0.0f64; n];
+    factor_inplace(&mut work, &mut taus);
+
+    // Extract R (n×n upper triangle).
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r.set(i, j, work.get(i, j));
+        }
+    }
+
+    // Form thin Q by applying H_0 H_1 ... H_{n-1} to the first n columns of
+    // the identity, in reverse order.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for j in (0..n).rev() {
+        apply_reflector(&work, j, taus[j], &mut q);
+    }
+    QrFactors { q, r }
+}
+
+/// Orthonormal basis of the range of `a` — the `orth(Y)` used by the range
+/// finder. Just the `Q` of [`qr`].
+pub fn orthonormalize(a: &Mat) -> Mat {
+    qr(a).q
+}
+
+/// In-place Householder factorization; reflector `j` is stored in column `j`
+/// below the diagonal with the implicit leading 1.
+fn factor_inplace(a: &mut Mat, taus: &mut [f64]) {
+    let (m, n) = a.shape();
+    for j in 0..n {
+        // Norm of the j-th column below (and including) the diagonal.
+        let mut norm_sq = 0.0;
+        for i in j..m {
+            let v = a.get(i, j);
+            norm_sq += v * v;
+        }
+        let norm = norm_sq.sqrt();
+        if norm == 0.0 {
+            taus[j] = 0.0;
+            continue;
+        }
+        let a0 = a.get(j, j);
+        let alpha = if a0 >= 0.0 { -norm } else { norm };
+        // v = x - alpha*e1, normalized so v[0] = 1.
+        let v0 = a0 - alpha;
+        taus[j] = -v0 / alpha; // tau = 2 / (vᵀv) * v0² ... standard LAPACK form
+        let inv_v0 = 1.0 / v0;
+        for i in j + 1..m {
+            let v = a.get(i, j) * inv_v0;
+            a.set(i, j, v);
+        }
+        a.set(j, j, alpha);
+
+        // Apply H = I - tau v vᵀ to the trailing columns j+1..n, streaming
+        // rows: w = (vᵀ A_trail)ᵀ, then A_trail -= tau v wᵀ.
+        if j + 1 < n {
+            let width = n - (j + 1);
+            let mut w = vec![0.0f64; width];
+            // row j contributes with implicit v[j] = 1
+            {
+                let row = &a.row(j)[j + 1..];
+                for (c, wc) in w.iter_mut().enumerate() {
+                    *wc += row[c];
+                }
+            }
+            for i in j + 1..m {
+                let vi = a.get(i, j);
+                if vi != 0.0 {
+                    let row = &a.row(i)[j + 1..];
+                    for (c, wc) in w.iter_mut().enumerate() {
+                        *wc += vi * row[c];
+                    }
+                }
+            }
+            let tau = taus[j];
+            {
+                let row = &mut a.row_mut(j)[j + 1..];
+                for (c, rc) in row.iter_mut().enumerate() {
+                    *rc -= tau * w[c];
+                }
+            }
+            for i in j + 1..m {
+                let vi = a.get(i, j);
+                if vi != 0.0 {
+                    let row = &mut a.row_mut(i)[j + 1..];
+                    let s = tau * vi;
+                    for (c, rc) in row.iter_mut().enumerate() {
+                        *rc -= s * w[c];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Apply reflector `j` (stored in `work`) to all columns of `c`.
+fn apply_reflector(work: &Mat, j: usize, tau: f64, c: &mut Mat) {
+    if tau == 0.0 {
+        return;
+    }
+    let m = work.rows();
+    let n = c.cols();
+    // w = vᵀ C  (v has implicit 1 at position j, entries below from work)
+    let mut w = vec![0.0f64; n];
+    for (col, wc) in w.iter_mut().enumerate() {
+        *wc = c.get(j, col);
+    }
+    for i in j + 1..m {
+        let vi = work.get(i, j);
+        if vi != 0.0 {
+            let row = c.row(i);
+            for (col, wc) in w.iter_mut().enumerate() {
+                *wc += vi * row[col];
+            }
+        }
+    }
+    // C -= tau v wᵀ
+    {
+        let row = c.row_mut(j);
+        for (col, rc) in row.iter_mut().enumerate() {
+            *rc -= tau * w[col];
+        }
+    }
+    for i in j + 1..m {
+        let vi = work.get(i, j);
+        if vi != 0.0 {
+            let s = tau * vi;
+            let row = c.row_mut(i);
+            for (col, rc) in row.iter_mut().enumerate() {
+                *rc -= s * w[col];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::linalg::rng::Pcg64;
+
+    fn check_qr(m: usize, n: usize, seed: u64) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let a = rng.gaussian_mat(m, n);
+        let QrFactors { q, r } = qr(&a);
+        assert_eq!(q.shape(), (m, n));
+        assert_eq!(r.shape(), (n, n));
+        // QR == A
+        let qr_prod = gemm::matmul(&q, &r);
+        assert!(qr_prod.max_abs_diff(&a) < 1e-10, "{m}x{n}: reconstruction");
+        // QᵀQ == I
+        let qtq = gemm::gram(&q);
+        assert!(qtq.max_abs_diff(&Mat::eye(n)) < 1e-10, "{m}x{n}: orthonormality");
+        // R upper triangular
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_various_shapes() {
+        check_qr(8, 8, 1);
+        check_qr(20, 5, 2);
+        check_qr(100, 17, 3);
+        check_qr(3, 1, 4);
+        check_qr(500, 40, 5);
+    }
+
+    #[test]
+    fn qr_rank_deficient_still_orthonormal() {
+        // Rank-2 matrix, 4 columns: Q must still be orthonormal.
+        let mut rng = Pcg64::seed_from_u64(6);
+        let u = rng.gaussian_mat(30, 2);
+        let v = rng.gaussian_mat(2, 4);
+        let a = gemm::matmul(&u, &v);
+        let QrFactors { q, r } = qr(&a);
+        let qr_prod = gemm::matmul(&q, &r);
+        assert!(qr_prod.max_abs_diff(&a) < 1e-10);
+        let qtq = gemm::gram(&q);
+        // With exact rank deficiency Householder still produces orthonormal
+        // columns (trailing reflectors act on ~zero columns).
+        assert!(qtq.max_abs_diff(&Mat::eye(4)) < 1e-8);
+    }
+
+    #[test]
+    fn qr_zero_matrix() {
+        let a = Mat::zeros(10, 3);
+        let QrFactors { q, r } = qr(&a);
+        assert!(gemm::matmul(&q, &r).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    #[should_panic]
+    fn qr_wide_panics() {
+        let a = Mat::zeros(3, 5);
+        let _ = qr(&a);
+    }
+
+    #[test]
+    fn orthonormalize_projector_reproduces_range() {
+        // A ≈ QQᵀA when A has full column rank.
+        let mut rng = Pcg64::seed_from_u64(7);
+        let a = rng.gaussian_mat(50, 6);
+        let q = orthonormalize(&a);
+        let qta = gemm::at_b(&q, &a);
+        let back = gemm::matmul(&q, &qta);
+        assert!(back.max_abs_diff(&a) < 1e-10);
+    }
+}

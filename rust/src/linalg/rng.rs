@@ -1,0 +1,233 @@
+//! Pseudo-random number generation.
+//!
+//! Implements PCG-XSL-RR-128/64 ("PCG64"), the generator used by NumPy's
+//! default `Generator`, plus the samplers the paper's algorithms need:
+//! uniform `[0,1)` entries for the nonnegative random test matrix Ω
+//! (Remark 1 of the paper) and standard Gaussians (Box–Muller) for
+//! synthetic data and Gaussian sketches.
+//!
+//! All randomness in the crate flows through this type so that every
+//! experiment is reproducible from a single `u64` seed recorded in the
+//! metrics output.
+
+use super::mat::Mat;
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// PCG-XSL-RR-128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second Box–Muller variate.
+    gauss_spare: Option<f64>,
+}
+
+impl Pcg64 {
+    /// Seed deterministically from a single `u64` via SplitMix64 expansion.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64 { state: seed };
+        let state = ((sm.next() as u128) << 64) | sm.next() as u128;
+        let seq = ((sm.next() as u128) << 64) | sm.next() as u128;
+        let mut rng = Pcg64 { state: 0, inc: (seq << 1) | 1, gauss_spare: None };
+        rng.state = rng.state.wrapping_add(state);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child stream (used by the sweep scheduler to
+    /// hand each parallel run its own generator).
+    pub fn split(&mut self) -> Pcg64 {
+        Pcg64::seed_from_u64(self.next_u64())
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform `f64` in `[0, 1)` (53-bit resolution).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire rejection.
+    pub fn uniform_usize(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        let n = n as u64;
+        // Rejection sampling to kill modulo bias.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Standard Gaussian via Box–Muller (with spare caching).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Matrix with iid uniform `[0,1)` entries — the paper's nonnegative
+    /// random test matrix (Remark 1).
+    pub fn uniform_mat(&mut self, rows: usize, cols: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.as_mut_slice() {
+            *v = self.uniform();
+        }
+        m
+    }
+
+    /// Matrix with iid standard-Gaussian entries.
+    pub fn gaussian_mat(&mut self, rows: usize, cols: usize) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.as_mut_slice() {
+            *v = self.gaussian();
+        }
+        m
+    }
+
+    /// Fisher–Yates shuffle (used by the shuffled HALS update order).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.uniform_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// SplitMix64 — seeding helper only.
+struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::seed_from_u64(42);
+        let mut b = Pcg64::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_variance() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var={var}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let skew = xs.iter().map(|x| (x - mean).powi(3)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 1e-2, "mean={mean}");
+        assert!((var - 1.0).abs() < 2e-2, "var={var}");
+        assert!(skew.abs() < 3e-2, "skew={skew}");
+    }
+
+    #[test]
+    fn uniform_usize_unbiased_bounds() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.uniform_usize(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 10_000).unsigned_abs() < 600, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>(), "astronomically unlikely to be identity");
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut a = Pcg64::seed_from_u64(6);
+        let mut b = a.split();
+        let mut c = a.split();
+        let av: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        let cv: Vec<u64> = (0..10).map(|_| c.next_u64()).collect();
+        assert_ne!(av, bv);
+        assert_ne!(bv, cv);
+    }
+
+    #[test]
+    fn matrix_fill_shapes() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let u = rng.uniform_mat(5, 9);
+        assert_eq!(u.shape(), (5, 9));
+        assert!(u.is_nonneg());
+        let g = rng.gaussian_mat(4, 4);
+        assert_eq!(g.shape(), (4, 4));
+        assert!(!g.is_nonneg(), "16 Gaussians are essentially never all nonnegative");
+    }
+}

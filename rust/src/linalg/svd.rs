@@ -1,0 +1,280 @@
+//! Singular value decomposition.
+//!
+//! Two entry points:
+//!
+//! * [`jacobi_svd`] — one-sided Jacobi SVD, accurate and simple, intended
+//!   for the *small* matrices that appear after compression (the `l×n`
+//!   surrogate `B`, the `k×k` grams, the NNDSVD initialization).
+//! * [`randomized_svd`] — the Halko-style randomized SVD built on the QB
+//!   decomposition of [`crate::sketch::qb`]; this is the "Deterministic
+//!   SVD" / SVD-initialization baseline of the paper's Tables 3–4 and
+//!   Figs. 4/10, and the engine behind `Init::RandSvd`.
+//!
+//! One-sided Jacobi orthogonalizes the **columns** of `A` by plane
+//! rotations. Because [`Mat`] is row-major we run the rotations on the rows
+//! of `Aᵀ`, which are contiguous.
+
+use super::gemm;
+use super::mat::Mat;
+use super::rng::Pcg64;
+
+/// Thin SVD result: `A ≈ U · diag(s) · Vᵀ`.
+pub struct Svd {
+    /// Left singular vectors, `m×r`.
+    pub u: Mat,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// Right singular vectors, `n×r` (i.e. `Vᵀ` rows are `v.row`s transposed).
+    pub v: Mat,
+}
+
+/// One-sided Jacobi SVD of `a (m×n)`. Returns the thin factorization with
+/// `r = min(m, n)` components, singular values sorted descending.
+pub fn jacobi_svd(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // SVD(Aᵀ) = V S Uᵀ
+        let t = jacobi_svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    // Work on W = Aᵀ (n×m): rows of W are columns of A, contiguous.
+    let mut w = a.transpose();
+    // Accumulate rotations into V (n×n), also stored transposed: rows of
+    // vt are columns of V.
+    let mut vt = Mat::eye(n);
+
+    let eps = 1e-13;
+    let max_sweeps = 42;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0usize;
+        for p in 0..n {
+            for q in p + 1..n {
+                // Gram entries of columns p,q of A == rows p,q of W.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                {
+                    let rp = w.row(p);
+                    let rq = w.row(q);
+                    for i in 0..m {
+                        app += rp[i] * rp[i];
+                        aqq += rq[i] * rq[i];
+                        apq += rp[i] * rq[i];
+                    }
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() + f64::MIN_POSITIVE {
+                    continue;
+                }
+                off += 1;
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate_rows(&mut w, p, q, c, s);
+                rotate_rows(&mut vt, p, q, c, s);
+            }
+        }
+        if off == 0 {
+            break;
+        }
+    }
+
+    // Singular values = row norms of W; U columns = normalized rows of W.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n).map(|i| super::norms::vec_norm(w.row(i))).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut v = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (r, &idx) in order.iter().enumerate() {
+        let sv = norms[idx];
+        s.push(sv);
+        if sv > 0.0 {
+            let inv = 1.0 / sv;
+            for i in 0..m {
+                u.set(i, r, w.get(idx, i) * inv);
+            }
+        }
+        for i in 0..n {
+            v.set(i, r, vt.get(idx, i));
+        }
+    }
+    Svd { u, s, v }
+}
+
+/// Apply the rotation `[c -s; s c]` to rows `p` and `q`.
+#[inline]
+fn rotate_rows(w: &mut Mat, p: usize, q: usize, c: f64, s: f64) {
+    let cols = w.cols();
+    let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+    let data = w.as_mut_slice();
+    let (head, tail) = data.split_at_mut(hi * cols);
+    let row_lo = &mut head[lo * cols..lo * cols + cols];
+    let row_hi = &mut tail[..cols];
+    // With (lo, hi) == (p, q) the update is:
+    //   w_p' = c*w_p - s*w_q ; w_q' = s*w_p + c*w_q
+    // If the caller passed p > q, swap the roles (rotation transposes).
+    let (sp, sq) = if p < q { (-s, s) } else { (s, -s) };
+    for i in 0..cols {
+        let wp = row_lo[i];
+        let wq = row_hi[i];
+        row_lo[i] = c * wp + sp * wq;
+        row_hi[i] = sq * wp + c * wq;
+    }
+}
+
+/// Options for [`randomized_svd`].
+#[derive(Clone, Copy, Debug)]
+pub struct RsvdOptions {
+    /// Target rank `k`.
+    pub rank: usize,
+    /// Oversampling `p` (paper default 20).
+    pub oversample: usize,
+    /// Subspace (power) iterations `q` (paper default 2).
+    pub power_iters: usize,
+}
+
+impl RsvdOptions {
+    pub fn new(rank: usize) -> Self {
+        RsvdOptions { rank, oversample: 20, power_iters: 2 }
+    }
+}
+
+/// Randomized SVD (Halko et al. 2011): QB-compress, exactly decompose the
+/// small `B`, rotate back. Truncated to `opts.rank` components.
+pub fn randomized_svd(a: &Mat, opts: RsvdOptions, rng: &mut Pcg64) -> Svd {
+    let qb = crate::sketch::qb::qb(
+        a,
+        crate::sketch::qb::QbOptions {
+            rank: opts.rank,
+            oversample: opts.oversample,
+            power_iters: opts.power_iters,
+            gaussian: true,
+        },
+        rng,
+    );
+    // B = Q̃ᵀA is l×n with l = k+p ≤ n. SVD(B) = U_B S Vᵀ; U = Q·U_B.
+    let small = jacobi_svd(&qb.b);
+    let k = opts.rank.min(small.s.len());
+    let u_b = small.u.col_block(0, k);
+    let u = gemm::matmul(&qb.q, &u_b);
+    let v = small.v.col_block(0, k);
+    Svd { u, s: small.s[..k].to_vec(), v }
+}
+
+impl Svd {
+    /// Reconstruct `U diag(s) Vᵀ`.
+    pub fn reconstruct(&self) -> Mat {
+        let r = self.s.len();
+        let mut us = self.u.clone();
+        for j in 0..r {
+            for i in 0..us.rows() {
+                let v = us.get(i, j) * self.s[j];
+                us.set(i, j, v);
+            }
+        }
+        gemm::a_bt(&us, &self.v)
+    }
+
+    /// Rank-`k` truncation of this decomposition.
+    pub fn truncate(&self, k: usize) -> Svd {
+        let k = k.min(self.s.len());
+        Svd {
+            u: self.u.col_block(0, k),
+            s: self.s[..k].to_vec(),
+            v: self.v.col_block(0, k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::{fro_norm, relative_error_explicit};
+
+    fn random(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        rng.gaussian_mat(rows, cols)
+    }
+
+    fn check_svd(a: &Mat, tol: f64) {
+        let svd = jacobi_svd(a);
+        let rec = svd.reconstruct();
+        let denom = fro_norm(a).max(1e-300);
+        assert!(
+            fro_norm(&rec.sub(a)) / denom < tol,
+            "reconstruction error too large for {:?}",
+            a.shape()
+        );
+        // U, V orthonormal columns
+        let r = svd.s.len();
+        let utu = gemm::gram(&svd.u);
+        let vtv = gemm::gram(&svd.v);
+        assert!(utu.max_abs_diff(&Mat::eye(r)) < 1e-8, "U not orthonormal");
+        assert!(vtv.max_abs_diff(&Mat::eye(r)) < 1e-8, "V not orthonormal");
+        // Singular values descending and nonnegative
+        for i in 1..r {
+            assert!(svd.s[i - 1] >= svd.s[i] - 1e-12);
+            assert!(svd.s[i] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn jacobi_tall_square_wide() {
+        check_svd(&random(12, 5, 1), 1e-10);
+        check_svd(&random(9, 9, 2), 1e-10);
+        check_svd(&random(4, 11, 3), 1e-10);
+        check_svd(&random(60, 20, 4), 1e-10);
+    }
+
+    #[test]
+    fn jacobi_known_singular_values() {
+        // diag(3, 2, 1) embedded in a rotation-free matrix.
+        let a = Mat::from_rows(&[&[3.0, 0.0, 0.0], &[0.0, 2.0, 0.0], &[0.0, 0.0, 1.0]]);
+        let svd = jacobi_svd(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-12);
+        assert!((svd.s[1] - 2.0).abs() < 1e-12);
+        assert!((svd.s[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_rank_deficient() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let u = rng.gaussian_mat(20, 3);
+        let v = rng.gaussian_mat(3, 15);
+        let a = gemm::matmul(&u, &v);
+        let svd = jacobi_svd(&a);
+        // Only three nonzero singular values.
+        for i in 3..svd.s.len() {
+            assert!(svd.s[i] < 1e-8 * svd.s[0], "s[{i}]={}", svd.s[i]);
+        }
+        check_svd(&a, 1e-9);
+    }
+
+    #[test]
+    fn rsvd_recovers_low_rank() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let u = rng.uniform_mat(200, 8);
+        let v = rng.uniform_mat(8, 90);
+        let a = gemm::matmul(&u, &v);
+        let mut rng2 = Pcg64::seed_from_u64(7);
+        let svd = randomized_svd(&a, RsvdOptions::new(8), &mut rng2);
+        let rec = svd.reconstruct();
+        assert!(
+            relative_error_explicit(&a, &svd.u, &gemm::matmul(&Mat::from_fn(8, 8, |i, j| if i == j { svd.s[i] } else { 0.0 }), &svd.v.transpose())) < 1e-6
+                || fro_norm(&rec.sub(&a)) / fro_norm(&a) < 1e-6
+        );
+    }
+
+    #[test]
+    fn truncation_decreasing_error() {
+        let a = random(40, 30, 8);
+        let svd = jacobi_svd(&a);
+        let e5 = fro_norm(&svd.truncate(5).reconstruct().sub(&a));
+        let e20 = fro_norm(&svd.truncate(20).reconstruct().sub(&a));
+        assert!(e20 <= e5 + 1e-12);
+        // Eckart–Young check: rank-k error² == Σ_{i>k} σᵢ².
+        let e5_expected: f64 = svd.s[5..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((e5 - e5_expected).abs() < 1e-8 * e5_expected.max(1.0));
+    }
+}

@@ -1,0 +1,224 @@
+//! `randnmf` — launcher for the randomized-NMF system.
+//!
+//! Subcommands:
+//!
+//! * `run --config <file>` — execute a job described by a TOML config
+//!   (dataset + solver comparison, the paper's table workflow).
+//! * `factorize <store.nmfstore>` — factorize an on-disk dataset with one
+//!   solver (`--algo`, `--rank`, ...), out-of-core QB when `--blocked`.
+//! * `gen-data --dataset <faces|hyperspectral|digits|synthetic>` — write a
+//!   dataset to an `.nmfstore` file.
+//! * `artifacts` — list the AOT artifact registry.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use randnmf::coordinator::cli::{self, OptSpec};
+use randnmf::coordinator::config::Config;
+use randnmf::coordinator::jobs::{self, Job};
+use randnmf::coordinator::metrics;
+use randnmf::linalg::rng::Pcg64;
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("run", "run a job from a config file"),
+    ("factorize", "factorize an .nmfstore dataset"),
+    ("gen-data", "generate a dataset into an .nmfstore file"),
+    ("artifacts", "list the AOT artifact registry"),
+    ("serve", "serve NNLS transform requests from a saved model"),
+    ("help", "show this help"),
+];
+
+fn opt_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", takes_value: true, help: "job config file (run)" },
+        OptSpec { name: "algo", takes_value: true, help: "solver: hals|rhals|mu|compressed-mu|rhals-xla" },
+        OptSpec { name: "rank", takes_value: true, help: "target rank k" },
+        OptSpec { name: "max-iter", takes_value: true, help: "iteration cap" },
+        OptSpec { name: "tol", takes_value: true, help: "projected-gradient tolerance (Eq. 27)" },
+        OptSpec { name: "seed", takes_value: true, help: "rng seed" },
+        OptSpec { name: "oversample", takes_value: true, help: "sketch oversampling p" },
+        OptSpec { name: "power-iters", takes_value: true, help: "subspace iterations q" },
+        OptSpec { name: "dataset", takes_value: true, help: "dataset name (gen-data)" },
+        OptSpec { name: "scale", takes_value: true, help: "dataset scale factor" },
+        OptSpec { name: "rows", takes_value: true, help: "synthetic rows" },
+        OptSpec { name: "cols", takes_value: true, help: "synthetic cols" },
+        OptSpec { name: "data-rank", takes_value: true, help: "synthetic true rank" },
+        OptSpec { name: "out", takes_value: true, help: "output path (gen-data)" },
+        OptSpec { name: "block", takes_value: true, help: "store column-block width" },
+        OptSpec { name: "blocked", takes_value: false, help: "out-of-core QB compression" },
+        OptSpec { name: "artifacts-dir", takes_value: true, help: "artifact directory (artifacts)" },
+        OptSpec { name: "save-model", takes_value: true, help: "write fitted factors to this path (factorize)" },
+        OptSpec { name: "addr", takes_value: true, help: "listen address (serve), default 127.0.0.1:7878" },
+        OptSpec { name: "max-batch", takes_value: true, help: "dynamic batching cap (serve)" },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = real_main(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main(argv: &[String]) -> Result<()> {
+    let specs = opt_specs();
+    let args = cli::parse(argv, &specs)?;
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print!("{}", cli::help("randnmf", SUBCOMMANDS, &specs));
+            Ok(())
+        }
+        "run" => cmd_run(&args),
+        "factorize" => cmd_factorize(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "serve" => cmd_serve(&args),
+        other => bail!("unknown subcommand {other:?} (try `randnmf help`)"),
+    }
+}
+
+fn cmd_run(args: &cli::Args) -> Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("run requires --config <file>"))?;
+    let cfg = Config::load(Path::new(path))?;
+    let job = Job::from_config(&cfg)?;
+    job.run()?;
+    Ok(())
+}
+
+fn cmd_factorize(args: &cli::Args) -> Result<()> {
+    let store_path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("factorize requires an .nmfstore path"))?;
+    let opts = randnmf::nmf::options::NmfOptions::new(args.get_usize("rank", 16)?)
+        .with_max_iter(args.get_usize("max-iter", 200)?)
+        .with_tol(args.get_f64("tol", 0.0)?)
+        .with_seed(args.get_usize("seed", 0)? as u64)
+        .with_oversample(args.get_usize("oversample", 20)?)
+        .with_power_iters(args.get_usize("power-iters", 2)?);
+    let algo = args.get_str("algo", "rhals");
+
+    let store = randnmf::data::store::NmfStore::open(Path::new(store_path))?;
+    println!("store: {}x{} (block {})", store.rows(), store.cols(), store.block_width());
+
+    let fit = if args.has_flag("blocked") && algo == "rhals" {
+        // Out-of-core: QB streams column blocks; X never fully materializes
+        // for compression. The reported error is the compressed estimate.
+        use randnmf::sketch::blocked::qb_blocked;
+        use randnmf::sketch::qb::QbOptions;
+        let mut rng = Pcg64::seed_from_u64(opts.seed);
+        let qb_opts = QbOptions::new(opts.rank)
+            .with_oversample(opts.oversample)
+            .with_power_iters(opts.power_iters);
+        let factors = qb_blocked(&store, qb_opts, store.block_width(), &mut rng)?;
+        // Estimate the data mean from a leading block sample.
+        let sample = store.read_cols(0, store.cols().min(256))?;
+        let x_mean = sample.sum() / sample.len() as f64;
+        let x_norm_est = randnmf::linalg::norms::fro_norm_sq(&factors.b);
+        let solver = randnmf::nmf::rhals::RandomizedHals::new(opts.clone());
+        solver.iterate_compressed(
+            &factors,
+            x_mean,
+            x_norm_est,
+            std::time::Instant::now(),
+            &mut rng,
+        )?
+    } else {
+        let x = store.read_all()?;
+        let solver = jobs::solver_by_name(&algo, opts.clone())?;
+        solver.fit(&x)?
+    };
+
+    println!(
+        "{algo}: {} iterations, {:.2}s, relative error {:.6}",
+        fit.iters, fit.elapsed_s, fit.final_rel_err
+    );
+    if let Some(path) = args.get("save-model") {
+        randnmf::nmf::persist::save(Path::new(path), &fit.model)?;
+        println!("saved model to {path}");
+    }
+    Ok(())
+}
+
+/// Serve NNLS transform requests over TCP from a saved model (the L3
+/// request loop; see coordinator::server).
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let model_path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("serve requires a .nmfmodel path"))?;
+    let model = randnmf::nmf::persist::load(Path::new(model_path))?;
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let opts = randnmf::coordinator::server::ServerOptions {
+        max_batch: args.get_usize("max-batch", 64)?,
+        ..Default::default()
+    };
+    let (m, k) = model.w.shape();
+    let server = randnmf::coordinator::server::TransformServer::start(&addr, model, opts)?;
+    println!(
+        "serving transform requests on {} (basis {}x{}); Ctrl-C to stop",
+        server.addr(),
+        m,
+        k
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(60));
+        let (served, batches) = server.stats();
+        println!("served {served} requests in {batches} batches");
+    }
+}
+
+fn cmd_gen_data(args: &cli::Args) -> Result<()> {
+    let dataset = args.get_str("dataset", "synthetic");
+    let out = PathBuf::from(args.get_str("out", "data.nmfstore"));
+    let block = args.get_usize("block", 1024)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let scale = args.get_f64("scale", 0.1)?;
+    let spec = match dataset.as_str() {
+        "faces" => jobs::DatasetSpec::Faces { scale },
+        "hyperspectral" => jobs::DatasetSpec::Hyperspectral { scale },
+        "digits" => jobs::DatasetSpec::Digits { scale },
+        "synthetic" => jobs::DatasetSpec::Synthetic {
+            m: args.get_usize("rows", 5000)?,
+            n: args.get_usize("cols", 1000)?,
+            r: args.get_usize("data-rank", 40)?,
+            noise: 0.0,
+        },
+        other => bail!("unknown dataset {other:?}"),
+    };
+    let x = spec.build(seed)?;
+    randnmf::data::store::write_mat(&out, &x, block)?;
+    println!(
+        "wrote {} ({}x{}, block {block}) from dataset {}",
+        out.display(),
+        x.rows(),
+        x.cols(),
+        spec.name()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &cli::Args) -> Result<()> {
+    let dir = args.get_str("artifacts-dir", "artifacts");
+    let reg = randnmf::runtime::registry::ArtifactRegistry::load(Path::new(&dir))
+        .context("loading artifact registry (run `make artifacts`)")?;
+    let mut table = metrics::Table::new(&["Op", "m", "n", "k", "l", "File"]);
+    let mut entries: Vec<_> = reg.entries().collect();
+    entries.sort_by_key(|e| (format!("{:?}", e.op), e.key));
+    for e in entries {
+        table.row(&[
+            format!("{:?}", e.op),
+            e.key.0.to_string(),
+            e.key.1.to_string(),
+            e.key.2.to_string(),
+            e.key.3.to_string(),
+            e.file.file_name().unwrap_or_default().to_string_lossy().to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

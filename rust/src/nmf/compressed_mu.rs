@@ -1,0 +1,172 @@
+//! Compressed multiplicative updates (Tepper & Sapiro 2016) — the prior
+//! randomized-NMF art the paper compares against.
+//!
+//! The idea is **bilateral random projection** (Zhou & Tao 2012): compress
+//! `X` from the left for the `H` update and from the right for the `W`
+//! update,
+//!
+//! ```text
+//! L: Q_L (m×l) with B_L = Q_LᵀX (l×n)      W̃ = Q_LᵀW (l×k)
+//! R: Q_R (n×l) with X_R = X·Q_R (m×l)      H̃ = H·Q_R (k×l)
+//!
+//! H ← H ∘ (W̃ᵀB_L)   ⊘ (W̃ᵀW̃·H)
+//! W ← W ∘ (X_R·H̃ᵀ)  ⊘ (W·H̃H̃ᵀ)
+//! ```
+//!
+//! Each iteration is `O((m+n)·l·k)` — cheaper per iteration than
+//! randomized HALS — but inherits MU's slow convergence, and the bilateral
+//! compression loses the monotonicity guarantee. The paper observes it
+//! "often fails to converge" on fat matrices at larger ranks (Fig. 11b);
+//! `bench_fig11_scaling` reproduces that behaviour.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::norms;
+use crate::nmf::init;
+use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
+use crate::nmf::mu::mu_update;
+use crate::nmf::options::NmfOptions;
+use crate::nmf::solver::NmfSolver;
+use crate::sketch::qb::{qb, QbOptions};
+
+/// Compressed-MU solver.
+pub struct CompressedMu {
+    pub opts: NmfOptions,
+}
+
+impl CompressedMu {
+    pub fn new(opts: NmfOptions) -> Self {
+        CompressedMu { opts }
+    }
+
+    pub fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        let o = &self.opts;
+        let (m, n) = x.shape();
+        o.validate(m, n)?;
+        let start = Instant::now();
+        let mut rng = crate::linalg::rng::Pcg64::seed_from_u64(o.seed);
+
+        // Bilateral compression.
+        let qb_opts = QbOptions::new(o.rank)
+            .with_oversample(o.oversample)
+            .with_power_iters(o.power_iters);
+        let left = qb(x, qb_opts, &mut rng); // Q_L m×l, B_L l×n
+        let xt = x.transpose();
+        let right = qb(&xt, qb_opts, &mut rng); // Q_R n×l, B_R = Q_RᵀXᵀ l×m
+        let x_r = right.b.transpose(); // X·Q_R : m×l
+
+        let (mut w, mut ht) = init::initialize(x, o, &mut rng);
+        let floor = 1e-12;
+        w.map_inplace(|v| v.max(floor));
+        ht.map_inplace(|v| v.max(floor));
+
+        let x_norm_sq = norms::fro_norm_sq(x);
+        let want_trace = o.trace_every > 0;
+        let mut trace = Vec::new();
+        let mut iters = 0usize;
+
+        for iter in 1..=o.max_iter {
+            // --- H update, left-compressed ---
+            let wt = gemm::at_b(&left.q, &w); // l×k  Q_LᵀW
+            let num_h = gemm::at_b(&left.b, &wt); // n×k  B_LᵀW̃
+            let s = gemm::gram(&wt); // k×k  W̃ᵀW̃
+            let denom_h = gemm::matmul(&ht, &s); // n×k
+            mu_update(&mut ht, &num_h, &denom_h);
+
+            // --- W update, right-compressed ---
+            let hrt = gemm::at_b(&right.q, &ht); // l×k  (H·Q_R)ᵀ
+            let num_w = gemm::matmul(&x_r, &hrt); // m×k  X_R·H̃ᵀ
+            let v = gemm::gram(&hrt); // k×k  H̃H̃ᵀ
+            let denom_w = gemm::matmul(&w, &v); // m×k
+            mu_update(&mut w, &num_w, &denom_w);
+
+            iters = iter;
+            if want_trace && iter % o.trace_every == 0 {
+                // Exact error via factored residual (kept cheap by k ≪ n).
+                let err = norms::relative_error(x, &w, &ht.transpose());
+                trace.push(TracePoint {
+                    iter,
+                    elapsed_s: start.elapsed().as_secs_f64(),
+                    rel_err: err,
+                    pg_norm_sq: f64::NAN,
+                });
+            }
+        }
+        let _ = x_norm_sq;
+
+        let model = NmfModel { w, h: ht.transpose() };
+        let final_rel_err = model.relative_error(x);
+        Ok(NmfFit {
+            model,
+            iters,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            final_rel_err,
+            pg_ratio: f64::NAN,
+            converged: false,
+            trace,
+        })
+    }
+}
+
+impl NmfSolver for CompressedMu {
+    fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        CompressedMu::fit(self, x)
+    }
+    fn name(&self) -> &'static str {
+        "compressed-mu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = rng.uniform_mat(m, r);
+        let v = rng.uniform_mat(r, n);
+        gemm::matmul(&u, &v)
+    }
+
+    #[test]
+    fn cmu_fits_easy_low_rank() {
+        let x = low_rank(80, 60, 3, 1);
+        let fit = CompressedMu::new(NmfOptions::new(3).with_max_iter(1500).with_seed(2))
+            .fit(&x)
+            .unwrap();
+        assert!(fit.final_rel_err < 5e-2, "err={}", fit.final_rel_err);
+        assert!(fit.model.w.is_nonneg() && fit.model.h.is_nonneg());
+    }
+
+    #[test]
+    fn cmu_needs_more_iterations_than_rhals() {
+        // The paper's Tables 1–2 finding: at equal iteration counts the
+        // compressed MU error is worse than randomized HALS.
+        let x = low_rank(100, 70, 5, 3);
+        let opts = NmfOptions::new(5).with_max_iter(150).with_seed(4);
+        let cmu = CompressedMu::new(opts.clone()).fit(&x).unwrap();
+        let rhals = crate::nmf::rhals::RandomizedHals::new(opts).fit(&x).unwrap();
+        assert!(
+            rhals.final_rel_err <= cmu.final_rel_err + 1e-9,
+            "rhals={} cmu={}",
+            rhals.final_rel_err,
+            cmu.final_rel_err
+        );
+    }
+
+    #[test]
+    fn cmu_stays_finite_and_nonneg() {
+        let x = low_rank(50, 40, 4, 5);
+        let fit = CompressedMu::new(NmfOptions::new(4).with_max_iter(300).with_seed(6))
+            .fit(&x)
+            .unwrap();
+        assert!(!fit.model.w.has_non_finite());
+        assert!(!fit.model.h.has_non_finite());
+        assert!(fit.model.w.is_nonneg() && fit.model.h.is_nonneg());
+    }
+}

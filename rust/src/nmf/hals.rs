@@ -1,0 +1,532 @@
+//! Deterministic hierarchical alternating least squares (paper §3.1).
+//!
+//! ## Formulation
+//!
+//! HALS minimizes `‖X − WH‖_F²` one component at a time. With the Gram
+//! substitution (paper Eq. 13) the update rules become (Eqs. 14–15)
+//!
+//! ```text
+//! W(:,j) ← [ W(:,j) + ([XHᵀ](:,j) − W[HHᵀ](:,j)) / [HHᵀ](j,j) ]₊
+//! H(j,:) ← [ H(j,:) + ([XᵀW](:,j) − Hᵀ[WᵀW](:,j))ᵀ / [WᵀW](j,j) ]₊
+//! ```
+//!
+//! so one iteration costs two large GEMMs (`XHᵀ`, `XᵀW` — `O(mnk)` each),
+//! two small Grams (`O((m+n)k²)`) and two `O((m+n)k²)` coordinate sweeps.
+//!
+//! ## Layout
+//!
+//! Internally the coefficient factor is stored **transposed** (`Ht : n×k`)
+//! so both factors are tall-skinny row-major matrices and both sweeps share
+//! one kernel, [`sweep_factor`]: each *row* of the factor panel is updated
+//! independently given the `k×k` Gram, which makes the sweep trivially
+//! parallel over rows — the same decomposition the L1 Pallas kernel uses
+//! over column panels (see `python/compile/kernels/hals_update.py`).
+//!
+//! The generalized coordinate update implemented by [`sweep_factor`]
+//! (covering Eqs. 14/15 and the regularized Eqs. 30/31/33/34) is, for each
+//! row `r` and component `j`:
+//!
+//! ```text
+//! fac[r,j] ← clamp( (l2·fac[r,j] + num[r,j] − l1 − Σ_{i≠j} G[i,j]·fac[r,i])
+//!                   / (G[j,j] + l2) )
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::norms;
+use crate::nmf::init;
+use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
+use crate::nmf::options::{NmfOptions, Regularization, UpdateOrder};
+use crate::nmf::solver::NmfSolver;
+use crate::nmf::stopping;
+use crate::nmf::update_order::OrderState;
+
+/// Component with Gram diagonal below this is treated as dead and skipped.
+pub(crate) const DEAD_EPS: f64 = 1e-12;
+
+/// One HALS coordinate sweep over a tall-skinny factor panel.
+///
+/// * `fac` — `r×k` factor (rows updated independently).
+/// * `num` — `r×k` numerator matrix (`XHᵀ`-like product).
+/// * `gram` — `k×k` symmetric Gram of the *other* factor.
+/// * `order` — the component permutation to sweep.
+/// * `clamp` — apply `[·]₊` (true for every high-dimensional factor; the
+///   compressed `W̃` of randomized HALS sweeps unclamped).
+pub fn sweep_factor(
+    fac: &mut Mat,
+    num: &Mat,
+    gram: &Mat,
+    reg: Regularization,
+    order: &[usize],
+    clamp: bool,
+) {
+    let (r, k) = fac.shape();
+    assert_eq!(num.shape(), (r, k), "sweep_factor: numerator shape");
+    assert_eq!(gram.shape(), (k, k), "sweep_factor: gram shape");
+    let work = r.saturating_mul(k).saturating_mul(k);
+    let nthreads = if work < (1 << 18) { 1 } else { gemm::num_threads().min(r.max(1)) };
+    if nthreads <= 1 {
+        sweep_rows(fac.as_mut_slice(), num.as_slice(), gram, reg, order, clamp, k);
+        return;
+    }
+    let chunk_rows = r.div_ceil(nthreads);
+    let fdata = fac.as_mut_slice();
+    std::thread::scope(|s| {
+        for (fchunk, nchunk) in fdata
+            .chunks_mut(chunk_rows * k)
+            .zip(num.as_slice().chunks(chunk_rows * k))
+        {
+            s.spawn(move || sweep_rows(fchunk, nchunk, gram, reg, order, clamp, k));
+        }
+    });
+}
+
+fn sweep_rows(
+    fac: &mut [f64],
+    num: &[f64],
+    gram: &Mat,
+    reg: Regularization,
+    order: &[usize],
+    clamp: bool,
+    k: usize,
+) {
+    let rows = fac.len() / k.max(1);
+    for rr in 0..rows {
+        let frow = &mut fac[rr * k..(rr + 1) * k];
+        let nrow = &num[rr * k..(rr + 1) * k];
+        for &j in order {
+            let gjj = gram.get(j, j);
+            if gjj < DEAD_EPS {
+                continue; // dead component: leave as-is
+            }
+            let grow = gram.row(j);
+            // cross = Σ_{i≠j} G[i,j]·fac[i]  (G symmetric: row j == col j)
+            let mut cross = 0.0;
+            for i in 0..k {
+                cross += grow[i] * frow[i];
+            }
+            cross -= gjj * frow[j];
+            let denom = gjj + reg.l2;
+            let val = (reg.l2 * frow[j] + nrow[j] - reg.l1 - cross) / denom;
+            frow[j] = if clamp { val.max(0.0) } else { val };
+        }
+    }
+}
+
+/// Convenience wrapper used by [`crate::nmf::model::NmfModel::transform`]:
+/// one sweep of the `H` subproblem in the paper's `k×n` orientation.
+pub fn update_h_sweep(h: &mut Mat, a: &Mat, s: &Mat, reg: Regularization, order: &[usize]) {
+    // h: k×n, a = WᵀX : k×n → transpose into the tall-skinny layout.
+    let mut ht = h.transpose();
+    let at = a.transpose();
+    sweep_factor(&mut ht, &at, s, reg, order, true);
+    *h = ht.transpose();
+}
+
+/// Deterministic HALS solver (the paper's baseline, scikit-learn-equivalent).
+pub struct Hals {
+    pub opts: NmfOptions,
+}
+
+impl Hals {
+    pub fn new(opts: NmfOptions) -> Self {
+        Hals { opts }
+    }
+
+    /// Run the factorization.
+    pub fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        let (m, n) = x.shape();
+        self.opts.validate(m, n)?;
+        match self.opts.update_order {
+            UpdateOrder::InterleavedCyclic => self.fit_interleaved(x),
+            _ => self.fit_blocked(x),
+        }
+    }
+
+    /// Blocked-cyclic / shuffled path (Eq. 24): Gram-based sweeps.
+    fn fit_blocked(&self, x: &Mat) -> Result<NmfFit> {
+        let o = &self.opts;
+        let (m, n) = x.shape();
+        let k = o.rank;
+        let start = Instant::now();
+        let mut rng = crate::linalg::rng::Pcg64::seed_from_u64(o.seed);
+
+        let (mut w, mut ht) = init::initialize(x, o, &mut rng);
+        let x_norm_sq = norms::fro_norm_sq(x);
+        let want_pg = o.tol > 0.0 || o.trace_every > 0;
+        let mut order = OrderState::new(k, o.update_order);
+
+        // Initial ∇ᴾ w.r.t. W needs V⁰ = HHᵀ and T⁰ = XHᵀ.
+        let mut pgw_prev = if want_pg {
+            let v0 = gemm::gram(&ht);
+            let t0 = gemm::matmul(x, &ht);
+            let gw0 = gemm::matmul(&w, &v0).sub(&t0);
+            Some(stopping::projected_gradient_norm_sq(&w, &gw0))
+        } else {
+            None
+        };
+
+        let mut trace: Vec<TracePoint> = Vec::new();
+        let mut pg0: Option<f64> = None;
+        let mut pg_ratio = f64::NAN;
+        let mut converged = false;
+        let mut iters = 0usize;
+
+        for iter in 1..=o.max_iter {
+            let s = gemm::gram(&w); // k×k  WᵀW
+            let at = gemm::at_b(x, &w); // n×k  XᵀW  (≙ (WᵀX)ᵀ)
+
+            // Diagnostics for the *previous* iterate (W, Ht) — both grams
+            // are exact for it.
+            if want_pg {
+                let gh = gemm::matmul(&ht, &s).sub(&at);
+                let pgh = stopping::projected_gradient_norm_sq(&ht, &gh);
+                let pg = pgh + pgw_prev.take().unwrap_or(0.0);
+                let pg0v = *pg0.get_or_insert(pg);
+                pg_ratio = if pg0v > 0.0 { pg / pg0v } else { 0.0 };
+                if o.trace_every > 0 && (iter - 1) % o.trace_every == 0 {
+                    let err = stopping::rel_err_from_grams(x_norm_sq, &at, &s, &ht);
+                    trace.push(TracePoint {
+                        iter: iter - 1,
+                        elapsed_s: start.elapsed().as_secs_f64(),
+                        rel_err: err,
+                        pg_norm_sq: pg,
+                    });
+                }
+                if o.tol > 0.0 && pg0v > 0.0 && pg < o.tol * pg0v {
+                    converged = true;
+                    break;
+                }
+            }
+
+            let ord = order.next_order(&mut rng);
+            sweep_factor(&mut ht, &at, &s, o.reg_h, ord, true);
+
+            let v = gemm::gram(&ht); // k×k  HHᵀ
+            let t = gemm::matmul(x, &ht); // m×k  XHᵀ
+            let ord = order.next_order(&mut rng);
+            sweep_factor(&mut w, &t, &v, o.reg_w, ord, true);
+
+            if want_pg {
+                let gw = gemm::matmul(&w, &v).sub(&t);
+                pgw_prev = Some(stopping::projected_gradient_norm_sq(&w, &gw));
+            }
+            iters = iter;
+        }
+
+        let h = ht.transpose();
+        let model = NmfModel { w, h };
+        let final_rel_err = model.relative_error(x);
+        debug_assert!(model.w.is_nonneg() && model.h.is_nonneg());
+        let _ = (m, n);
+        Ok(NmfFit {
+            model,
+            iters,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            final_rel_err,
+            pg_ratio,
+            converged,
+            trace,
+        })
+    }
+
+    /// Interleaved path (Eq. 23): maintains the explicit residual
+    /// `E = X − WH`; `O(mnk)` per iteration. Ablation use only.
+    fn fit_interleaved(&self, x: &Mat) -> Result<NmfFit> {
+        let o = &self.opts;
+        let k = o.rank;
+        let start = Instant::now();
+        let mut rng = crate::linalg::rng::Pcg64::seed_from_u64(o.seed);
+        let (mut w, ht) = init::initialize(x, o, &mut rng);
+        let mut h = ht.transpose(); // k×n, rows contiguous per component
+        let x_norm_sq = norms::fro_norm_sq(x);
+
+        // E = X − WH
+        let mut e = x.sub(&gemm::matmul(&w, &h));
+        let mut trace = Vec::new();
+        let mut iters = 0usize;
+
+        for iter in 1..=o.max_iter {
+            for j in 0..k {
+                // --- W(:,j): R_j = E + w_j h_jᵀ ---
+                let hj = h.row(j).to_vec();
+                let hh = crate::linalg::norms::vec_norm(&hj).powi(2);
+                if hh >= DEAD_EPS {
+                    let ehj = gemm::matvec(&e, &hj); // m
+                    let denom = hh + o.reg_w.l2;
+                    let mut delta = vec![0.0f64; w.rows()];
+                    for i in 0..w.rows() {
+                        let old = w.get(i, j);
+                        // Residual form of Eq. 11 with ℓ2/ℓ1 terms:
+                        // w_j ← [(‖h_j‖²·w_j + E·h_j − β) / (‖h_j‖² + α)]₊
+                        let val = (hh * old + ehj[i] - o.reg_w.l1) / denom;
+                        let newv = val.max(0.0);
+                        delta[i] = old - newv;
+                        w.set(i, j, newv);
+                    }
+                    // E += delta_w · h_jᵀ
+                    for i in 0..e.rows() {
+                        let d = delta[i];
+                        if d != 0.0 {
+                            let erow = e.row_mut(i);
+                            for (c, ec) in erow.iter_mut().enumerate() {
+                                *ec += d * hj[c];
+                            }
+                        }
+                    }
+                }
+                // --- H(j,:): R_j = E + w_j h_jᵀ (with updated w_j) ---
+                let wj = w.col(j);
+                let ww = crate::linalg::norms::vec_norm(&wj).powi(2);
+                if ww >= DEAD_EPS {
+                    let etw = gemm::matvec_t(&e, &wj); // n
+                    let denom = ww + o.reg_h.l2;
+                    let hrow_old = h.row(j).to_vec();
+                    for c in 0..h.cols() {
+                        let old = hrow_old[c];
+                        let val = (ww * old + etw[c] - o.reg_h.l1) / denom;
+                        h.set(j, c, val.max(0.0));
+                    }
+                    // E += w_j (h_old − h_new)ᵀ
+                    let hrow_new = h.row(j).to_vec();
+                    for i in 0..e.rows() {
+                        let wji = wj[i];
+                        if wji != 0.0 {
+                            let erow = e.row_mut(i);
+                            for c in 0..hrow_new.len() {
+                                erow[c] += wji * (hrow_old[c] - hrow_new[c]);
+                            }
+                        }
+                    }
+                }
+            }
+            iters = iter;
+            if o.trace_every > 0 && iter % o.trace_every == 0 {
+                let err = (norms::fro_norm_sq(&e) / x_norm_sq).sqrt();
+                trace.push(TracePoint {
+                    iter,
+                    elapsed_s: start.elapsed().as_secs_f64(),
+                    rel_err: err,
+                    pg_norm_sq: f64::NAN,
+                });
+            }
+        }
+
+        let model = NmfModel { w, h };
+        let final_rel_err = model.relative_error(x);
+        Ok(NmfFit {
+            model,
+            iters,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            final_rel_err,
+            pg_ratio: f64::NAN,
+            converged: false,
+            trace,
+        })
+    }
+}
+
+impl NmfSolver for Hals {
+    fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        Hals::fit(self, x)
+    }
+    fn name(&self) -> &'static str {
+        "hals"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+    use crate::nmf::options::Init;
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = rng.uniform_mat(m, r);
+        let v = rng.uniform_mat(r, n);
+        gemm::matmul(&u, &v)
+    }
+
+    #[test]
+    fn fits_exact_low_rank_to_small_error() {
+        let x = low_rank(60, 45, 4, 1);
+        let fit = Hals::new(NmfOptions::new(4).with_max_iter(400).with_seed(2))
+            .fit(&x)
+            .unwrap();
+        // NMF is nonconvex: random init can land in a near-optimal
+        // local minimum; ~1e-3 relative error on exact-rank data is such a
+        // point (the global optimum is 0).
+        assert!(fit.final_rel_err < 1e-2, "err={}", fit.final_rel_err);
+        assert!(fit.model.w.is_nonneg());
+        assert!(fit.model.h.is_nonneg());
+    }
+
+    #[test]
+    fn objective_monotone_nonincreasing() {
+        let x = low_rank(40, 30, 6, 3);
+        let fit = Hals::new(
+            NmfOptions::new(5).with_max_iter(60).with_seed(4).with_trace_every(1),
+        )
+        .fit(&x)
+        .unwrap();
+        let errs: Vec<f64> = fit.trace.iter().map(|t| t.rel_err).collect();
+        assert!(errs.len() >= 50);
+        for wpair in errs.windows(2) {
+            assert!(
+                wpair[1] <= wpair[0] + 1e-9,
+                "objective increased: {} -> {}",
+                wpair[0],
+                wpair[1]
+            );
+        }
+    }
+
+    #[test]
+    fn converges_by_projected_gradient() {
+        let x = low_rank(50, 35, 3, 5);
+        let fit = Hals::new(
+            NmfOptions::new(3).with_max_iter(5000).with_tol(1e-12).with_seed(6),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(fit.converged, "pg_ratio={}", fit.pg_ratio);
+        assert!(fit.iters < 5000);
+    }
+
+    #[test]
+    fn rank1_known_solution() {
+        // X = u vᵀ exactly; k=1 HALS must find it to machine precision.
+        let mut rng = Pcg64::seed_from_u64(7);
+        let u = rng.uniform_mat(30, 1);
+        let v = rng.uniform_mat(1, 20);
+        let x = gemm::matmul(&u, &v);
+        let fit = Hals::new(NmfOptions::new(1).with_max_iter(100).with_seed(8))
+            .fit(&x)
+            .unwrap();
+        assert!(fit.final_rel_err < 1e-10, "err={}", fit.final_rel_err);
+    }
+
+    #[test]
+    fn l1_regularization_sparsifies_w() {
+        let x = low_rank(60, 40, 8, 9);
+        let base = Hals::new(NmfOptions::new(6).with_max_iter(150).with_seed(10))
+            .fit(&x)
+            .unwrap();
+        let reg = Hals::new(
+            NmfOptions::new(6)
+                .with_max_iter(150)
+                .with_seed(10)
+                .with_reg_w(Regularization::lasso(0.5)),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(
+            reg.model.w.zero_fraction() > base.model.w.zero_fraction(),
+            "l1 should sparsify: {} vs {}",
+            reg.model.w.zero_fraction(),
+            base.model.w.zero_fraction()
+        );
+    }
+
+    #[test]
+    fn l2_regularization_shrinks_norm() {
+        let x = low_rank(40, 30, 5, 11);
+        let base = Hals::new(NmfOptions::new(5).with_max_iter(150).with_seed(12))
+            .fit(&x)
+            .unwrap();
+        let reg = Hals::new(
+            NmfOptions::new(5)
+                .with_max_iter(150)
+                .with_seed(12)
+                .with_reg_w(Regularization::ridge(5.0))
+                .with_reg_h(Regularization::ridge(5.0)),
+        )
+        .fit(&x)
+        .unwrap();
+        let n_base = norms::fro_norm(&base.model.w) * norms::fro_norm(&base.model.h);
+        let n_reg = norms::fro_norm(&reg.model.w) * norms::fro_norm(&reg.model.h);
+        assert!(n_reg < n_base, "ridge should shrink: {n_reg} vs {n_base}");
+    }
+
+    #[test]
+    fn interleaved_order_also_converges() {
+        let x = low_rank(30, 25, 3, 13);
+        let fit = Hals::new(
+            NmfOptions::new(3)
+                .with_max_iter(150)
+                .with_seed(14)
+                .with_update_order(UpdateOrder::InterleavedCyclic),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(fit.final_rel_err < 1e-2, "err={}", fit.final_rel_err);
+        assert!(fit.model.w.is_nonneg() && fit.model.h.is_nonneg());
+    }
+
+    #[test]
+    fn shuffled_order_converges() {
+        let x = low_rank(30, 25, 3, 15);
+        let fit = Hals::new(
+            NmfOptions::new(3)
+                .with_max_iter(200)
+                .with_seed(16)
+                .with_update_order(UpdateOrder::Shuffled),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(fit.final_rel_err < 1e-2, "err={}", fit.final_rel_err);
+    }
+
+    #[test]
+    fn nndsvd_init_not_worse_than_random() {
+        let x = low_rank(80, 50, 6, 17);
+        let rand = Hals::new(NmfOptions::new(6).with_max_iter(30).with_seed(18))
+            .fit(&x)
+            .unwrap();
+        let svd = Hals::new(
+            NmfOptions::new(6).with_max_iter(30).with_seed(18).with_init(Init::NndsvdA),
+        )
+        .fit(&x)
+        .unwrap();
+        // Paper Figs. 6/9: SVD init reaches lower error in fewer iterations.
+        assert!(
+            svd.final_rel_err <= rand.final_rel_err * 1.5,
+            "svd={} rand={}",
+            svd.final_rel_err,
+            rand.final_rel_err
+        );
+    }
+
+    #[test]
+    fn sweep_factor_keeps_nonnegativity() {
+        let mut rng = Pcg64::seed_from_u64(19);
+        let mut fac = rng.uniform_mat(50, 6);
+        let other = rng.uniform_mat(40, 6);
+        let gram = gemm::gram(&other);
+        let num = rng.gaussian_mat(50, 6); // even adversarial numerators
+        let order: Vec<usize> = (0..6).collect();
+        sweep_factor(&mut fac, &num, &gram, Regularization::NONE, &order, true);
+        assert!(fac.is_nonneg());
+    }
+
+    #[test]
+    fn sweep_factor_fixed_point_at_exact_solution() {
+        // If fac already solves the unconstrained LS and is positive, a
+        // sweep leaves it (nearly) unchanged.
+        let mut rng = Pcg64::seed_from_u64(20);
+        let w = rng.uniform_mat(40, 4).map(|v| v + 0.1);
+        let fac_true = rng.uniform_mat(25, 4).map(|v| v + 0.1);
+        let x = gemm::a_bt(&fac_true, &w).transpose(); // (40×25): X = W·Hᵀ...
+        let gram = gemm::gram(&w);
+        let num = gemm::at_b(&x, &w); // 25×4 = XᵀW
+        let mut fac = fac_true.clone();
+        let order: Vec<usize> = (0..4).collect();
+        sweep_factor(&mut fac, &num, &gram, Regularization::NONE, &order, true);
+        assert!(fac.max_abs_diff(&fac_true) < 1e-8);
+    }
+}

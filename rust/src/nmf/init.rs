@@ -1,0 +1,213 @@
+//! Factor initialization (paper Remark 2).
+//!
+//! * `Random` — scaled nonnegative Gaussians, `avg·|N(0,1)|` with
+//!   `avg = √(mean(X)/k)` (the scikit-learn convention, so our
+//!   deterministic baseline matches the paper's).
+//! * `Nndsvd` / `NndsvdA` — the SVD-based scheme of Boutsidis &
+//!   Gallopoulos (2008): each rank-1 SVD term `σ·u·vᵀ` is replaced by the
+//!   dominant of its positive/negative parts. `NndsvdA` back-fills the
+//!   zeros with the data mean to avoid locked entries.
+//!
+//! For the randomized solver the SVD is computed from the *compressed*
+//! factors (`svd(B)` rotated through `Q`) so initialization enjoys the same
+//! compression speedup as the iterations — this is the paper's
+//! "(randomized) singular value decomposition" initialization remark.
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::norms::vec_norm;
+use crate::linalg::rng::Pcg64;
+use crate::linalg::svd::{jacobi_svd, randomized_svd, RsvdOptions, Svd};
+use crate::nmf::options::{Init, NmfOptions};
+
+/// Initialize `(W : m×k, Ht : n×k)` for a full-data solver.
+pub fn initialize(x: &Mat, opts: &NmfOptions, rng: &mut Pcg64) -> (Mat, Mat) {
+    let (m, n) = x.shape();
+    let k = opts.rank;
+    match opts.init {
+        Init::Random => random_init(x, m, n, k, rng),
+        Init::Nndsvd | Init::NndsvdA => {
+            let svd = randomized_svd(
+                x,
+                RsvdOptions { rank: k, oversample: 10.min(m.min(n)), power_iters: 2 },
+                rng,
+            );
+            let fill = if opts.init == Init::NndsvdA {
+                Some(mean_of(x))
+            } else {
+                None
+            };
+            nndsvd_from_svd(&svd, k, fill)
+        }
+    }
+}
+
+/// Initialize `(W : m×k, Ht : n×k)` for the randomized solver from the QB
+/// factors (never touches `X` beyond its mean).
+pub fn initialize_from_qb(
+    q: &Mat,
+    b: &Mat,
+    x_mean: f64,
+    opts: &NmfOptions,
+    rng: &mut Pcg64,
+) -> (Mat, Mat) {
+    let m = q.rows();
+    let n = b.cols();
+    let k = opts.rank;
+    match opts.init {
+        Init::Random => {
+            let avg = (x_mean.max(0.0) / k as f64).sqrt().max(1e-6);
+            let w = rng.gaussian_mat(m, k).map(|v| avg * v.abs());
+            let ht = rng.gaussian_mat(n, k).map(|v| avg * v.abs());
+            (w, ht)
+        }
+        Init::Nndsvd | Init::NndsvdA => {
+            // svd(B) = U_B Σ Vᵀ ⇒ svd(X) ≈ (Q U_B) Σ Vᵀ.
+            let small = jacobi_svd(b);
+            let kk = k.min(small.s.len());
+            let u = gemm::matmul(q, &small.u.col_block(0, kk));
+            let svd = Svd { u, s: small.s[..kk].to_vec(), v: small.v.col_block(0, kk) };
+            let fill = if opts.init == Init::NndsvdA { Some(x_mean) } else { None };
+            nndsvd_from_svd(&svd, k, fill)
+        }
+    }
+}
+
+fn mean_of(x: &Mat) -> f64 {
+    if x.is_empty() {
+        0.0
+    } else {
+        x.sum() / x.len() as f64
+    }
+}
+
+fn random_init(x: &Mat, m: usize, n: usize, k: usize, rng: &mut Pcg64) -> (Mat, Mat) {
+    let avg = (mean_of(x).max(0.0) / k as f64).sqrt().max(1e-6);
+    let w = rng.gaussian_mat(m, k).map(|v| avg * v.abs());
+    let ht = rng.gaussian_mat(n, k).map(|v| avg * v.abs());
+    (w, ht)
+}
+
+/// Boutsidis–Gallopoulos NNDSVD from a (possibly truncated) SVD.
+fn nndsvd_from_svd(svd: &Svd, k: usize, fill_zeros_with: Option<f64>) -> (Mat, Mat) {
+    let m = svd.u.rows();
+    let n = svd.v.rows();
+    let r = svd.s.len().min(k);
+    let mut w = Mat::zeros(m, k);
+    let mut ht = Mat::zeros(n, k);
+
+    if r > 0 {
+        // Leading term: |u₀|, |v₀| are already essentially one-signed.
+        let u0: Vec<f64> = svd.u.col(0).iter().map(|v| v.abs()).collect();
+        let v0: Vec<f64> = svd.v.col(0).iter().map(|v| v.abs()).collect();
+        let s0 = svd.s[0].max(0.0).sqrt();
+        for i in 0..m {
+            w.set(i, 0, s0 * u0[i]);
+        }
+        for i in 0..n {
+            ht.set(i, 0, s0 * v0[i]);
+        }
+    }
+
+    for j in 1..r {
+        let uj = svd.u.col(j);
+        let vj = svd.v.col(j);
+        let up: Vec<f64> = uj.iter().map(|&v| v.max(0.0)).collect();
+        let un: Vec<f64> = uj.iter().map(|&v| (-v).max(0.0)).collect();
+        let vp: Vec<f64> = vj.iter().map(|&v| v.max(0.0)).collect();
+        let vn: Vec<f64> = vj.iter().map(|&v| (-v).max(0.0)).collect();
+        let (nup, nun, nvp, nvn) = (vec_norm(&up), vec_norm(&un), vec_norm(&vp), vec_norm(&vn));
+        let m_pos = nup * nvp;
+        let m_neg = nun * nvn;
+        let (uu, vv, nu, nv, sig) = if m_pos >= m_neg {
+            (up, vp, nup, nvp, m_pos)
+        } else {
+            (un, vn, nun, nvn, m_neg)
+        };
+        if sig <= 0.0 || nu == 0.0 || nv == 0.0 {
+            continue;
+        }
+        let scale = (svd.s[j].max(0.0) * sig).sqrt();
+        for i in 0..m {
+            w.set(i, j, scale * uu[i] / nu);
+        }
+        for i in 0..n {
+            ht.set(i, j, scale * vv[i] / nv);
+        }
+    }
+
+    if let Some(fill) = fill_zeros_with {
+        let f = fill.abs().max(1e-12);
+        w.map_inplace(|v| if v <= 0.0 { f } else { v });
+        ht.map_inplace(|v| if v <= 0.0 { f } else { v });
+    }
+    (w, ht)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmf::options::NmfOptions;
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = rng.uniform_mat(m, r);
+        let v = rng.uniform_mat(r, n);
+        gemm::matmul(&u, &v)
+    }
+
+    #[test]
+    fn random_init_shapes_and_nonneg() {
+        let x = low_rank(30, 20, 4, 1);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let (w, ht) = initialize(&x, &NmfOptions::new(5), &mut rng);
+        assert_eq!(w.shape(), (30, 5));
+        assert_eq!(ht.shape(), (20, 5));
+        assert!(w.is_nonneg() && ht.is_nonneg());
+        assert!(w.sum() > 0.0);
+    }
+
+    #[test]
+    fn nndsvd_nonneg_and_better_start_than_random() {
+        use crate::linalg::norms::relative_error_explicit;
+        let x = low_rank(50, 40, 6, 3);
+        let mut rng = Pcg64::seed_from_u64(4);
+        let o_rand = NmfOptions::new(6).with_init(crate::nmf::options::Init::Random);
+        let o_svd = NmfOptions::new(6).with_init(crate::nmf::options::Init::Nndsvd);
+        let (wr, hr) = initialize(&x, &o_rand, &mut rng);
+        let (ws, hs) = initialize(&x, &o_svd, &mut rng);
+        assert!(ws.is_nonneg() && hs.is_nonneg());
+        let er = relative_error_explicit(&x, &wr, &hr.transpose());
+        let es = relative_error_explicit(&x, &ws, &hs.transpose());
+        assert!(es < er, "nndsvd start ({es}) should beat random ({er})");
+    }
+
+    #[test]
+    fn nndsvda_has_no_zeros() {
+        let x = low_rank(40, 30, 5, 5);
+        let mut rng = Pcg64::seed_from_u64(6);
+        let o = NmfOptions::new(5).with_init(crate::nmf::options::Init::NndsvdA);
+        let (w, ht) = initialize(&x, &o, &mut rng);
+        assert!(w.as_slice().iter().all(|&v| v > 0.0));
+        assert!(ht.as_slice().iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn qb_init_close_to_full_init() {
+        use crate::linalg::norms::relative_error_explicit;
+        use crate::sketch::qb::{qb, QbOptions};
+        let x = low_rank(60, 45, 5, 7);
+        let mut rng = Pcg64::seed_from_u64(8);
+        let f = qb(&x, QbOptions::new(5).with_oversample(10), &mut rng);
+        let o = NmfOptions::new(5).with_init(crate::nmf::options::Init::Nndsvd);
+        let mean = x.sum() / x.len() as f64;
+        let (w, ht) = initialize_from_qb(&f.q, &f.b, mean, &o, &mut rng);
+        assert!(w.is_nonneg() && ht.is_nonneg());
+        // The compressed-SVD init should land near the full-SVD init error.
+        let mut rng2 = Pcg64::seed_from_u64(9);
+        let (wf, hf) = initialize(&x, &o, &mut rng2);
+        let e_comp = relative_error_explicit(&x, &w, &ht.transpose());
+        let e_full = relative_error_explicit(&x, &wf, &hf.transpose());
+        assert!(e_comp < e_full * 1.2 + 1e-6, "comp={e_comp} full={e_full}");
+    }
+}

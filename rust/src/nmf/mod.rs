@@ -1,0 +1,37 @@
+//! Nonnegative matrix factorization algorithms.
+//!
+//! This module contains the paper's contribution and every baseline its
+//! evaluation compares against:
+//!
+//! | Module | Algorithm | Paper reference |
+//! |---|---|---|
+//! | [`hals`] | Deterministic HALS | §3.1, Eqs. 14–15 |
+//! | [`rhals`] | **Randomized HALS** | §3.2, Algorithm 1, Eqs. 19–22 |
+//! | [`mu`] | Multiplicative updates (Lee–Seung) | §2.2 |
+//! | [`compressed_mu`] | Compressed MU (Tepper–Sapiro) | §1, §4 |
+//! | [`regularized`] | ℓ2 / ℓ1 / elastic-net update terms | §3.4, Eqs. 30–34 |
+//! | [`init`] | Random / NNDSVD / NNDSVDa initialization | Remark 2 |
+//! | [`stopping`] | Projected-gradient stopping rule | §3.3, Eqs. 26–27 |
+//! | [`update_order`] | Cyclic / interleaved / shuffled sweeps | Eqs. 23–24 |
+//!
+//! All solvers implement [`solver::NmfSolver`] and produce an
+//! [`model::NmfFit`] carrying the factors plus convergence diagnostics
+//! (relative-error and projected-gradient traces — the series plotted in
+//! the paper's Figs. 5/6/8/9/12/13).
+
+pub mod compressed_mu;
+pub mod hals;
+pub mod init;
+pub mod model;
+pub mod mu;
+pub mod options;
+pub mod persist;
+pub mod regularized;
+pub mod rhals;
+pub mod solver;
+pub mod stopping;
+pub mod update_order;
+
+pub use model::{NmfFit, NmfModel, TracePoint};
+pub use options::{Init, NmfOptions, Regularization, UpdateOrder};
+pub use solver::NmfSolver;

@@ -1,0 +1,171 @@
+//! Fitted model and convergence diagnostics.
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::norms;
+
+/// A fitted NMF model `X ≈ W·H` with `W (m×k) ≥ 0`, `H (k×n) ≥ 0`.
+#[derive(Clone, Debug)]
+pub struct NmfModel {
+    /// Basis factor, `m×k` (the paper's basis images / endmembers).
+    pub w: Mat,
+    /// Coefficient factor, `k×n` (the paper's abundances / codes).
+    pub h: Mat,
+}
+
+impl NmfModel {
+    pub fn rank(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Reconstruct the dense approximation `W·H` (O(mn) memory!).
+    pub fn reconstruct(&self) -> Mat {
+        gemm::matmul(&self.w, &self.h)
+    }
+
+    /// Relative reconstruction error against `x`, computed without the
+    /// dense residual.
+    pub fn relative_error(&self, x: &Mat) -> f64 {
+        norms::relative_error(x, &self.w, &self.h)
+    }
+
+    /// Project new columns `Y (m×j)` onto the learned basis: solve the
+    /// nonnegative least-squares `min_{C≥0} ‖Y − W·C‖` with HALS sweeps on
+    /// `C` (W fixed). This is the feature-extraction step of the paper's
+    /// MNIST classification experiment (Table 4).
+    pub fn transform(&self, y: &Mat, sweeps: usize) -> Mat {
+        assert_eq!(y.rows(), self.w.rows(), "transform: row mismatch");
+        let k = self.rank();
+        let n = y.cols();
+        let s = gemm::gram(&self.w); // k×k
+        let a = gemm::at_b(&self.w, y); // k×n  (WᵀY)
+        let mut c = Mat::zeros(k, n);
+        // Scaled nonneg least-squares init: C = max(0, (diag(S))⁻¹ WᵀY).
+        for j in 0..k {
+            let d = s.get(j, j).max(1e-12);
+            for col in 0..n {
+                c.set(j, col, (a.get(j, col) / d).max(0.0));
+            }
+        }
+        for _ in 0..sweeps {
+            crate::nmf::hals::update_h_sweep(
+                &mut c,
+                &a,
+                &s,
+                crate::nmf::options::Regularization::NONE,
+                &(0..k).collect::<Vec<_>>(),
+            );
+        }
+        c
+    }
+
+    /// Column-normalize `W` (and rescale `H` rows to compensate) so that
+    /// each basis vector has unit ℓ2 norm — the conventional presentation
+    /// for basis-image figures.
+    pub fn normalize_basis(&mut self) {
+        let k = self.rank();
+        for j in 0..k {
+            let nrm = norms::vec_norm(&self.w.col(j));
+            if nrm > 0.0 {
+                for i in 0..self.w.rows() {
+                    let v = self.w.get(i, j) / nrm;
+                    self.w.set(i, j, v);
+                }
+                for c in 0..self.h.cols() {
+                    let v = self.h.get(j, c) * nrm;
+                    self.h.set(j, c, v);
+                }
+            }
+        }
+    }
+}
+
+/// One point of a convergence trace (the series of Figs. 5/6/8/9/12/13).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    /// Iteration index (1-based; 0 = initialization).
+    pub iter: usize,
+    /// Wall-clock seconds since the fit started (includes compression for
+    /// randomized solvers — the paper reports end-to-end time).
+    pub elapsed_s: f64,
+    /// Relative Frobenius reconstruction error (estimate for compressed
+    /// solvers; see module docs of `rhals`).
+    pub rel_err: f64,
+    /// Squared projected-gradient norm `‖∇ᴾf‖²` (Eq. 26).
+    pub pg_norm_sq: f64,
+}
+
+/// A fitted model plus everything the paper's tables report about the run.
+#[derive(Clone, Debug)]
+pub struct NmfFit {
+    pub model: NmfModel,
+    /// Iterations actually executed.
+    pub iters: usize,
+    /// End-to-end wall-clock seconds (the "Time (s)" column).
+    pub elapsed_s: f64,
+    /// Final exact relative error (the "Error" column).
+    pub final_rel_err: f64,
+    /// Final `‖∇ᴾf‖² / ‖∇ᴾf⁰‖²` ratio (Eq. 27 quantity).
+    pub pg_ratio: f64,
+    /// True iff the Eq. 27 criterion fired before `max_iter`.
+    pub converged: bool,
+    /// Convergence trace (present if `trace_every > 0`).
+    pub trace: Vec<TracePoint>,
+}
+
+impl NmfFit {
+    /// Relative error against (possibly different) data.
+    pub fn relative_error(&self, x: &Mat) -> f64 {
+        self.model.relative_error(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn reconstruct_and_error() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let w = rng.uniform_mat(12, 3);
+        let h = rng.uniform_mat(3, 9);
+        let x = gemm::matmul(&w, &h);
+        let model = NmfModel { w, h };
+        assert!(model.relative_error(&x) < 1e-10);
+        assert!(model.reconstruct().max_abs_diff(&x) < 1e-12);
+        assert_eq!(model.rank(), 3);
+    }
+
+    #[test]
+    fn transform_recovers_codes() {
+        // Y = W C with known nonneg C; transform should recover C well.
+        let mut rng = Pcg64::seed_from_u64(2);
+        let w = rng.uniform_mat(40, 4);
+        let c_true = rng.uniform_mat(4, 7);
+        let y = gemm::matmul(&w, &c_true);
+        let model = NmfModel { w, h: Mat::zeros(4, 1) };
+        let c = model.transform(&y, 200);
+        assert!(c.is_nonneg());
+        let rec = gemm::matmul(&model.w, &c);
+        let err = crate::linalg::norms::fro_norm(&rec.sub(&y))
+            / crate::linalg::norms::fro_norm(&y);
+        assert!(err < 1e-6, "err={err}");
+    }
+
+    #[test]
+    fn normalize_basis_preserves_product() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let w = rng.uniform_mat(15, 3);
+        let h = rng.uniform_mat(3, 11);
+        let mut model = NmfModel { w: w.clone(), h: h.clone() };
+        let before = model.reconstruct();
+        model.normalize_basis();
+        let after = model.reconstruct();
+        assert!(before.max_abs_diff(&after) < 1e-10);
+        for j in 0..3 {
+            let nrm = crate::linalg::norms::vec_norm(&model.w.col(j));
+            assert!((nrm - 1.0).abs() < 1e-10);
+        }
+    }
+}

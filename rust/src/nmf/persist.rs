@@ -1,0 +1,136 @@
+//! Model persistence: save/load fitted factors.
+//!
+//! Binary format (little-endian), versioned:
+//!
+//! ```text
+//! magic   8 bytes  "NMFMODL1"
+//! m, k, n u64 ×3
+//! W       m×k f64 row-major
+//! H       k×n f64 row-major
+//! ```
+//!
+//! Used by the `randnmf serve` transform service and by pipelines that fit
+//! offline and deploy the basis.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::mat::Mat;
+use crate::nmf::model::NmfModel;
+
+const MAGIC: &[u8; 8] = b"NMFMODL1";
+
+/// Serialize a model to a writer.
+pub fn write_model(w: &mut impl Write, model: &NmfModel) -> Result<()> {
+    let (m, k) = model.w.shape();
+    let (_, n) = model.h.shape();
+    w.write_all(MAGIC)?;
+    for dim in [m, k, n] {
+        w.write_all(&(dim as u64).to_le_bytes())?;
+    }
+    for &v in model.w.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &v in model.h.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Deserialize a model from a reader.
+pub fn read_model(r: &mut impl Read) -> Result<NmfModel> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("reading model magic")?;
+    if &magic != MAGIC {
+        bail!("not an NMF model file");
+    }
+    let mut dim = [0u8; 8];
+    let mut dims = [0usize; 3];
+    for d in dims.iter_mut() {
+        r.read_exact(&mut dim)?;
+        *d = u64::from_le_bytes(dim) as usize;
+    }
+    let [m, k, n] = dims;
+    anyhow::ensure!(m * k * n > 0, "degenerate model dims {m}x{k}x{n}");
+    let mut read_mat = |rows: usize, cols: usize| -> Result<Mat> {
+        let mut buf = vec![0u8; rows * cols * 8];
+        r.read_exact(&mut buf).context("reading factor data")?;
+        let data = buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Mat::from_vec(rows, cols, data))
+    };
+    let w = read_mat(m, k)?;
+    let h = read_mat(k, n)?;
+    anyhow::ensure!(w.is_nonneg() && h.is_nonneg(), "model factors must be nonnegative");
+    Ok(NmfModel { w, h })
+}
+
+/// Save to a file path.
+pub fn save(path: &Path, model: &NmfModel) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    write_model(&mut f, model)?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Load from a file path.
+pub fn load(path: &Path) -> Result<NmfModel> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    read_model(&mut f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("randnmf_persist");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let model = NmfModel { w: rng.uniform_mat(13, 4), h: rng.uniform_mat(4, 9) };
+        let path = tmp("rt.nmfmodel");
+        save(&path, &model).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.w, model.w);
+        assert_eq!(back.h, model.h);
+    }
+
+    #[test]
+    fn rejects_garbage_and_negative() {
+        let path = tmp("bad.nmfmodel");
+        std::fs::write(&path, b"NOTAMODEL").unwrap();
+        assert!(load(&path).is_err());
+
+        // Negative factor rejected on load.
+        let mut bytes = Vec::new();
+        let mut w = Mat::zeros(2, 1);
+        w.set(0, 0, -1.0);
+        let model = NmfModel { w, h: Mat::zeros(1, 2) };
+        write_model(&mut bytes, &model).unwrap();
+        assert!(read_model(&mut bytes.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let model = NmfModel { w: rng.uniform_mat(5, 2), h: rng.uniform_mat(2, 5) };
+        let mut bytes = Vec::new();
+        write_model(&mut bytes, &model).unwrap();
+        bytes.truncate(bytes.len() - 9);
+        assert!(read_model(&mut bytes.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! Common solver interface.
+//!
+//! Every NMF algorithm in the crate implements [`NmfSolver`], which is what
+//! the coordinator's job runner and the bench harness program against; the
+//! paper's comparison tables iterate over a `Vec<Box<dyn NmfSolver>>`.
+
+use anyhow::Result;
+
+use crate::linalg::mat::Mat;
+use crate::nmf::model::NmfFit;
+
+/// A nonnegative matrix factorization algorithm.
+///
+/// Deliberately not `Send`/`Sync`-bounded: the XLA-backed solver holds
+/// `Rc`-based PJRT handles. Parallel sweeps construct solvers inside each
+/// worker thread (see `coordinator::scheduler::sweep`).
+pub trait NmfSolver {
+    /// Factorize `x ≈ W·H` per the solver's configuration.
+    fn fit(&self, x: &Mat) -> Result<NmfFit>;
+    /// Short identifier used in metrics and bench tables.
+    fn name(&self) -> &'static str;
+}
+
+/// Build the standard comparison set used throughout the paper's tables:
+/// deterministic HALS (baseline), randomized HALS (contribution),
+/// compressed MU (prior art).
+pub fn paper_comparison_set(
+    opts: crate::nmf::options::NmfOptions,
+    mu_max_iter: usize,
+) -> Vec<Box<dyn NmfSolver>> {
+    let mut mu_opts = opts.clone();
+    mu_opts.max_iter = mu_max_iter;
+    vec![
+        Box::new(crate::nmf::hals::Hals::new(opts.clone())),
+        Box::new(crate::nmf::rhals::RandomizedHals::new(opts)),
+        Box::new(crate::nmf::compressed_mu::CompressedMu::new(mu_opts)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmf::options::NmfOptions;
+
+    #[test]
+    fn comparison_set_names() {
+        let set = paper_comparison_set(NmfOptions::new(4), 100);
+        let names: Vec<&str> = set.iter().map(|s| s.name()).collect();
+        assert_eq!(names, vec!["hals", "rhals", "compressed-mu"]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Stopping criteria (paper §3.3).
+//!
+//! The paper advocates the projected-gradient criterion of Lin (2007): the
+//! projected gradient of the constrained objective is (Eq. 26)
+//!
+//! ```text
+//! ∇ᴾ_{ij} = ∂f/∂F_{ij}            if F_{ij} > 0
+//! ∇ᴾ_{ij} = min(0, ∂f/∂F_{ij})    if F_{ij} = 0
+//! ```
+//!
+//! and the run terminates when (Eq. 27)
+//! `‖∇ᴾf(W,H)‖² < ε·‖∇ᴾf(W⁰,H⁰)‖²`. By KKT, `∇ᴾf = 0` exactly at a
+//! stationary point of the nonnegativity-constrained problem.
+
+use crate::linalg::mat::Mat;
+
+/// Squared projected-gradient norm of one factor.
+///
+/// `factor` and `grad` have identical shape; `grad` is the *unconstrained*
+/// gradient of the objective w.r.t. that factor (e.g. `WV − XHᵀ`).
+pub fn projected_gradient_norm_sq(factor: &Mat, grad: &Mat) -> f64 {
+    assert_eq!(factor.shape(), grad.shape());
+    let mut acc = 0.0;
+    for (f, g) in factor.as_slice().iter().zip(grad.as_slice().iter()) {
+        let pg = if *f > 0.0 { *g } else { g.min(0.0) };
+        acc += pg * pg;
+    }
+    acc
+}
+
+/// Exact relative error of the iterate `(W, Ht)` from per-iteration Gram
+/// products (no `m×n` residual):
+///
+/// `‖X−WH‖² = ‖X‖² − 2·Σ(At ∘ Ht) + Σ(S ∘ HtᵀHt)`
+///
+/// where `At = XᵀW (n×k)` and `S = WᵀW (k×k)` are already computed by the
+/// HALS iteration.
+pub fn rel_err_from_grams(x_norm_sq: f64, at: &Mat, s: &Mat, ht: &Mat) -> f64 {
+    let cross: f64 = at
+        .as_slice()
+        .iter()
+        .zip(ht.as_slice().iter())
+        .map(|(a, h)| a * h)
+        .sum();
+    let hth = crate::linalg::gemm::gram(ht); // k×k
+    let quad: f64 = s
+        .as_slice()
+        .iter()
+        .zip(hth.as_slice().iter())
+        .map(|(a, b)| a * b)
+        .sum();
+    let num = (x_norm_sq - 2.0 * cross + quad).max(0.0);
+    if x_norm_sq <= 0.0 {
+        0.0
+    } else {
+        (num / x_norm_sq).sqrt()
+    }
+}
+
+/// Compressed-space relative-error *estimate* for randomized HALS:
+///
+/// `‖X − QW̃H‖² = ‖B − W̃H‖² + (‖X‖² − ‖B‖²)`
+///
+/// (exact when `W = QW̃`; after the nonnegative projection `W = [QW̃]₊` it
+/// is an upper-bound-flavoured estimate). `rt = BᵀW̃ (n×k)`,
+/// `wtw = W̃ᵀW̃ (k×k)`.
+pub fn rel_err_compressed(
+    x_norm_sq: f64,
+    b_norm_sq: f64,
+    rt: &Mat,
+    wtw: &Mat,
+    ht: &Mat,
+) -> f64 {
+    let cross: f64 = rt
+        .as_slice()
+        .iter()
+        .zip(ht.as_slice().iter())
+        .map(|(a, h)| a * h)
+        .sum();
+    let hth = crate::linalg::gemm::gram(ht);
+    let quad: f64 = wtw
+        .as_slice()
+        .iter()
+        .zip(hth.as_slice().iter())
+        .map(|(a, b)| a * b)
+        .sum();
+    let comp = (b_norm_sq - 2.0 * cross + quad).max(0.0);
+    let floor = (x_norm_sq - b_norm_sq).max(0.0);
+    if x_norm_sq <= 0.0 {
+        0.0
+    } else {
+        ((comp + floor) / x_norm_sq).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, norms, rng::Pcg64};
+
+    #[test]
+    fn pg_zero_at_interior_stationary_point() {
+        let f = Mat::full(3, 3, 1.0);
+        let g = Mat::zeros(3, 3);
+        assert_eq!(projected_gradient_norm_sq(&f, &g), 0.0);
+    }
+
+    #[test]
+    fn pg_ignores_positive_gradient_at_boundary() {
+        // At F=0 with g>0 (KKT-satisfied boundary), PG contribution is 0.
+        let f = Mat::zeros(2, 2);
+        let g = Mat::full(2, 2, 3.0);
+        assert_eq!(projected_gradient_norm_sq(&f, &g), 0.0);
+        // But g<0 at the boundary counts.
+        let gneg = Mat::full(2, 2, -2.0);
+        assert_eq!(projected_gradient_norm_sq(&f, &gneg), 16.0);
+    }
+
+    #[test]
+    fn pg_counts_interior_gradient() {
+        let f = Mat::full(1, 2, 0.5);
+        let g = Mat::from_rows(&[&[3.0, -4.0]]);
+        assert_eq!(projected_gradient_norm_sq(&f, &g), 25.0);
+    }
+
+    #[test]
+    fn gram_error_matches_explicit() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let x = rng.uniform_mat(30, 20);
+        let w = rng.uniform_mat(30, 4);
+        let ht = rng.uniform_mat(20, 4);
+        let h = ht.transpose();
+        let explicit = norms::relative_error_explicit(&x, &w, &h);
+        let s = gemm::gram(&w);
+        let at = gemm::at_b(&x, &w);
+        let fast = rel_err_from_grams(norms::fro_norm_sq(&x), &at, &s, &ht);
+        assert!((explicit - fast).abs() < 1e-10, "{explicit} vs {fast}");
+    }
+
+    #[test]
+    fn compressed_error_exact_when_w_in_range() {
+        // Build X exactly in the range of Q: X = Q·B.
+        let mut rng = Pcg64::seed_from_u64(2);
+        let q = crate::linalg::qr::orthonormalize(&rng.gaussian_mat(30, 6));
+        let b = rng.uniform_mat(6, 15);
+        let x = gemm::matmul(&q, &b);
+        let wt = rng.uniform_mat(6, 3);
+        let ht = rng.uniform_mat(15, 3);
+        // exact: ‖X − QW̃H‖ = ‖B − W̃H‖ since ‖X‖ = ‖B‖
+        let w = gemm::matmul(&q, &wt);
+        let explicit = norms::relative_error_explicit(&x, &w, &ht.transpose());
+        let rt = gemm::at_b(&b, &wt);
+        let wtw = gemm::gram(&wt);
+        let est = rel_err_compressed(
+            norms::fro_norm_sq(&x),
+            norms::fro_norm_sq(&b),
+            &rt,
+            &wtw,
+            &ht,
+        );
+        assert!((explicit - est).abs() < 1e-9, "{explicit} vs {est}");
+    }
+}

@@ -1,0 +1,132 @@
+//! PJRT client and executable wrappers around the `xla` crate.
+//!
+//! Adapted from `/opt/xla-example/load_hlo/`: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`.
+//! All artifact I/O is `f32` row-major (XLA's default layout matches
+//! [`Mat`]'s row-major storage, so marshaling is a dtype cast, not a
+//! transpose).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::linalg::mat::Mat;
+
+// The `xla` crate's handles hold non-atomic `Rc`s, so the PJRT runtime is
+// confined to the thread that created it (the coordinator's request loop).
+// Each thread lazily constructs at most one CPU client.
+thread_local! {
+    static CLIENT: std::cell::OnceCell<Option<xla::PjRtClient>> =
+        const { std::cell::OnceCell::new() };
+}
+
+/// Thread-local PJRT CPU client (construction is expensive; share it per
+/// thread).
+pub fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|cell| {
+        let slot = cell.get_or_init(|| xla::PjRtClient::cpu().ok());
+        match slot {
+            Some(c) => f(c),
+            None => Err(anyhow!("PJRT CPU client unavailable")),
+        }
+    })
+}
+
+/// A compiled HLO artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Row-major output shapes, in tuple order (from the manifest).
+    out_shapes: Vec<(usize, usize)>,
+}
+
+impl Executable {
+    /// Load HLO text from `path`, compile on the thread's CPU client.
+    pub fn load(path: &Path, out_shapes: Vec<(usize, usize)>) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|client| {
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        })?;
+        Ok(Executable { exe, out_shapes })
+    }
+
+    /// Execute with `f64` matrices, marshaling through `f32` literals.
+    ///
+    /// The artifact was lowered with `return_tuple=True`, so the single
+    /// output buffer is a tuple holding every result in manifest order.
+    pub fn run(&self, inputs: &[&Mat]) -> Result<Vec<Mat>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| {
+                let data = m.to_f32_vec();
+                xla::Literal::vec1(&data)
+                    .reshape(&[m.rows() as i64, m.cols() as i64])
+                    .context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.out_shapes.len(),
+            "artifact returned {} outputs, manifest says {}",
+            parts.len(),
+            self.out_shapes.len()
+        );
+        parts
+            .into_iter()
+            .zip(self.out_shapes.iter())
+            .map(|(lit, &(r, c))| {
+                let v = lit.to_vec::<f32>().context("reading output literal")?;
+                anyhow::ensure!(v.len() == r * c, "output size {} != {r}x{c}", v.len());
+                Ok(Mat::from_f32_slice(r, c, &v))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end smoke against a hand-written HLO module (no Python
+    /// needed): computes `tuple(dot(x, y) + 2)` like the reference example.
+    #[test]
+    fn compile_and_run_handwritten_hlo() {
+        let hlo = r#"
+HloModule smoke.1
+
+ENTRY main.1 {
+  x = f32[2,3]{1,0} parameter(0)
+  y = f32[3,2]{1,0} parameter(1)
+  dot = f32[2,2]{1,0} dot(x, y), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  c = f32[] constant(2)
+  cb = f32[2,2]{1,0} broadcast(c), dimensions={}
+  sum = f32[2,2]{1,0} add(dot, cb)
+  ROOT t = (f32[2,2]{1,0}) tuple(sum)
+}
+"#;
+        let dir = std::env::temp_dir().join("randnmf_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("smoke.hlo.txt");
+        std::fs::write(&path, hlo).unwrap();
+
+        let exe = Executable::load(&path, vec![(2, 2)]).expect("compile");
+        let x = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let y = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1.0], &[1.0, 1.0]]);
+        let out = exe.run(&[&x, &y]).expect("run");
+        assert_eq!(out.len(), 1);
+        // x@y = [[4,5],[10,11]]; +2 = [[6,7],[12,13]]
+        let expect = Mat::from_rows(&[&[6.0, 7.0], &[12.0, 13.0]]);
+        assert!(out[0].max_abs_diff(&expect) < 1e-5);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        let err = Executable::load(Path::new("/nonexistent/x.hlo.txt"), vec![]);
+        assert!(err.is_err());
+    }
+}

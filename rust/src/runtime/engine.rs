@@ -1,0 +1,321 @@
+//! Engines: one interface over the pure-Rust and the AOT-compiled paths.
+//!
+//! An [`NmfEngine`] provides the three compute ops the coordinator
+//! schedules (QB compression, one deterministic HALS iteration, one
+//! randomized HALS iteration). `CpuEngine` runs the in-crate f64 kernels;
+//! `XlaEngine` runs the f32 PJRT artifacts. The two are cross-validated by
+//! `rust/tests/test_engines.rs` (objective traces must agree to ~1e-3 —
+//! the dtype gap).
+//!
+//! [`XlaRandomizedHals`] wraps the XLA engine as a full [`NmfSolver`], so
+//! benches can compare "algorithm in Rust" vs "algorithm AOT-compiled via
+//! JAX/Pallas" end to end (`bench_perf_engines`).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::norms;
+use crate::linalg::rng::Pcg64;
+use crate::nmf::hals::sweep_factor;
+use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
+use crate::nmf::options::{NmfOptions, Regularization};
+use crate::nmf::solver::NmfSolver;
+use crate::nmf::stopping;
+use crate::runtime::registry::{ArtifactOp, ArtifactRegistry};
+use crate::sketch::qb::{QbFactors, QbOptions};
+
+/// The three compute ops behind a common interface.
+///
+/// Not `Send`/`Sync`: the XLA engine holds `Rc`-based PJRT handles. Multi-
+/// threaded sweeps construct one engine per worker thread instead.
+pub trait NmfEngine {
+    /// QB compression of `x` with sketch width `l` and `q_iters` subspace
+    /// iterations, using the provided test matrix `omega (n×l)`.
+    fn qb_sketch(&self, x: &Mat, omega: &Mat, q_iters: usize) -> Result<QbFactors>;
+
+    /// One deterministic HALS iteration; updates `(w, ht)` in place.
+    fn hals_iteration(&self, x: &Mat, w: &mut Mat, ht: &mut Mat) -> Result<()>;
+
+    /// One randomized HALS iteration (batched projection); updates
+    /// `(w, wt, ht)` in place.
+    fn rhals_iteration(
+        &self,
+        b: &Mat,
+        q: &Mat,
+        w: &mut Mat,
+        wt: &mut Mat,
+        ht: &mut Mat,
+    ) -> Result<()>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust f64 engine (reference semantics).
+pub struct CpuEngine;
+
+impl NmfEngine for CpuEngine {
+    fn qb_sketch(&self, x: &Mat, omega: &Mat, q_iters: usize) -> Result<QbFactors> {
+        // Mirror sketch::qb but with a caller-supplied Ω so engines can be
+        // compared on identical randomness.
+        use crate::linalg::qr::orthonormalize;
+        let mut y = gemm::matmul(x, omega);
+        for _ in 0..q_iters {
+            let q = orthonormalize(&y);
+            let z = gemm::at_b(x, &q);
+            let qz = orthonormalize(&z);
+            y = gemm::matmul(x, &qz);
+        }
+        let q = orthonormalize(&y);
+        let b = gemm::at_b(&q, x);
+        Ok(QbFactors { q, b })
+    }
+
+    fn hals_iteration(&self, x: &Mat, w: &mut Mat, ht: &mut Mat) -> Result<()> {
+        let k = w.cols();
+        let order: Vec<usize> = (0..k).collect();
+        let s = gemm::gram(w);
+        let at = gemm::at_b(x, w);
+        sweep_factor(ht, &at, &s, Regularization::NONE, &order, true);
+        let v = gemm::gram(ht);
+        let t = gemm::matmul(x, ht);
+        sweep_factor(w, &t, &v, Regularization::NONE, &order, true);
+        Ok(())
+    }
+
+    fn rhals_iteration(
+        &self,
+        b: &Mat,
+        q: &Mat,
+        w: &mut Mat,
+        wt: &mut Mat,
+        ht: &mut Mat,
+    ) -> Result<()> {
+        let k = w.cols();
+        let order: Vec<usize> = (0..k).collect();
+        let r = gemm::at_b(b, wt);
+        let s = gemm::gram(w);
+        sweep_factor(ht, &r, &s, Regularization::NONE, &order, true);
+        let t = gemm::matmul(b, ht);
+        let v = gemm::gram(ht);
+        sweep_factor(wt, &t, &v, Regularization::NONE, &order, false);
+        *w = gemm::matmul(q, wt);
+        w.clamp_nonneg();
+        *wt = gemm::at_b(q, w);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+/// PJRT engine executing the AOT artifacts.
+pub struct XlaEngine {
+    registry: ArtifactRegistry,
+}
+
+impl XlaEngine {
+    pub fn new(registry: ArtifactRegistry) -> Self {
+        XlaEngine { registry }
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+}
+
+impl NmfEngine for XlaEngine {
+    fn qb_sketch(&self, x: &Mat, omega: &Mat, _q_iters: usize) -> Result<QbFactors> {
+        let (m, n) = x.shape();
+        let l = omega.cols();
+        let exe = self
+            .registry
+            .executable(ArtifactOp::QbSketch, (m, n, 0, l))
+            .context("qb_sketch artifact")?;
+        let mut out = exe.run(&[x, omega])?;
+        let b = out.pop().unwrap();
+        let q = out.pop().unwrap();
+        Ok(QbFactors { q, b })
+    }
+
+    fn hals_iteration(&self, x: &Mat, w: &mut Mat, ht: &mut Mat) -> Result<()> {
+        let (m, n) = x.shape();
+        let k = w.cols();
+        let exe = self
+            .registry
+            .executable(ArtifactOp::HalsIter, (m, n, k, 0))
+            .context("hals_iter artifact")?;
+        let mut out = exe.run(&[x, w, ht])?;
+        *ht = out.pop().unwrap();
+        *w = out.pop().unwrap();
+        Ok(())
+    }
+
+    fn rhals_iteration(
+        &self,
+        b: &Mat,
+        q: &Mat,
+        w: &mut Mat,
+        wt: &mut Mat,
+        ht: &mut Mat,
+    ) -> Result<()> {
+        let (l, n) = b.shape();
+        let m = q.rows();
+        let k = w.cols();
+        let exe = self
+            .registry
+            .executable(ArtifactOp::RhalsIter, (m, n, k, l))
+            .context("rhals_iter artifact")?;
+        let mut out = exe.run(&[b, q, w, wt, ht])?;
+        *ht = out.pop().unwrap();
+        *wt = out.pop().unwrap();
+        *w = out.pop().unwrap();
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Full randomized-HALS fit loop over any [`NmfEngine`].
+///
+/// Matches [`crate::nmf::rhals::RandomizedHals`] with
+/// `batched_projection = true`, random init, no regularization — the
+/// configuration the artifacts implement.
+pub fn rhals_fit_with_engine(
+    engine: &dyn NmfEngine,
+    x: &Mat,
+    opts: &NmfOptions,
+) -> Result<NmfFit> {
+    let (m, n) = x.shape();
+    opts.validate(m, n)?;
+    let start = Instant::now();
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let qb_opts = QbOptions::new(opts.rank)
+        .with_oversample(opts.oversample)
+        .with_power_iters(opts.power_iters);
+    let l = qb_opts.sketch_width(m, n);
+    let omega = rng.uniform_mat(n, l);
+    let factors = engine.qb_sketch(x, &omega, opts.power_iters)?;
+
+    let x_mean = x.sum() / x.len() as f64;
+    let x_norm_sq = norms::fro_norm_sq(x);
+    let b_norm_sq = norms::fro_norm_sq(&factors.b);
+    let (mut w, mut ht) = crate::nmf::init::initialize_from_qb(
+        &factors.q,
+        &factors.b,
+        x_mean,
+        opts,
+        &mut rng,
+    );
+    let mut wt = gemm::at_b(&factors.q, &w);
+
+    let mut trace = Vec::new();
+    for iter in 1..=opts.max_iter {
+        engine.rhals_iteration(&factors.b, &factors.q, &mut w, &mut wt, &mut ht)?;
+        if opts.trace_every > 0 && iter % opts.trace_every == 0 {
+            let rt = gemm::at_b(&factors.b, &wt);
+            let wtw = gemm::gram(&wt);
+            let err = stopping::rel_err_compressed(x_norm_sq, b_norm_sq, &rt, &wtw, &ht);
+            trace.push(TracePoint {
+                iter,
+                elapsed_s: start.elapsed().as_secs_f64(),
+                rel_err: err,
+                pg_norm_sq: f64::NAN,
+            });
+        }
+    }
+
+    let model = NmfModel { w, h: ht.transpose() };
+    let final_rel_err = model.relative_error(x);
+    Ok(NmfFit {
+        model,
+        iters: opts.max_iter,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        final_rel_err,
+        pg_ratio: f64::NAN,
+        converged: false,
+        trace,
+    })
+}
+
+/// [`NmfSolver`] adapter for a fixed engine (used by the bench harness).
+pub struct XlaRandomizedHals {
+    pub opts: NmfOptions,
+    engine: XlaEngine,
+}
+
+impl XlaRandomizedHals {
+    pub fn new(opts: NmfOptions, registry: ArtifactRegistry) -> Self {
+        XlaRandomizedHals { opts, engine: XlaEngine::new(registry) }
+    }
+}
+
+impl NmfSolver for XlaRandomizedHals {
+    fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        rhals_fit_with_engine(&self.engine, x, &self.opts)
+    }
+    fn name(&self) -> &'static str {
+        "rhals-xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = rng.uniform_mat(m, r);
+        let v = rng.uniform_mat(r, n);
+        let mut x = gemm::matmul(&u, &v);
+        // keep sketches full-rank
+        let noise = rng.uniform_mat(m, n);
+        x.axpy(1e-3, &noise);
+        x
+    }
+
+    #[test]
+    fn cpu_engine_rhals_matches_solver_quality() {
+        let x = low_rank(120, 80, 4, 1);
+        let opts = NmfOptions::new(4).with_max_iter(150).with_seed(2);
+        let fit = rhals_fit_with_engine(&CpuEngine, &x, &opts).unwrap();
+        assert!(fit.final_rel_err < 5e-2, "err={}", fit.final_rel_err);
+        assert!(fit.model.w.is_nonneg() && fit.model.h.is_nonneg());
+        let solver_fit = crate::nmf::rhals::RandomizedHals::new(
+            opts.with_batched_projection(true),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!((fit.final_rel_err - solver_fit.final_rel_err).abs() < 2e-2);
+    }
+
+    #[test]
+    fn cpu_engine_hals_iteration_descends() {
+        let x = low_rank(60, 40, 3, 3);
+        let mut rng = Pcg64::seed_from_u64(4);
+        let opts = NmfOptions::new(3);
+        let (mut w, mut ht) = crate::nmf::init::initialize(&x, &opts, &mut rng);
+        let e0 = norms::relative_error(&x, &w, &ht.transpose());
+        for _ in 0..30 {
+            CpuEngine.hals_iteration(&x, &mut w, &mut ht).unwrap();
+        }
+        let e1 = norms::relative_error(&x, &w, &ht.transpose());
+        assert!(e1 < e0, "{e0} -> {e1}");
+    }
+
+    #[test]
+    fn cpu_engine_qb_orthonormal() {
+        let x = low_rank(80, 50, 5, 5);
+        let mut rng = Pcg64::seed_from_u64(6);
+        let omega = rng.uniform_mat(50, 15);
+        let f = CpuEngine.qb_sketch(&x, &omega, 2).unwrap();
+        let qtq = gemm::gram(&f.q);
+        assert!(qtq.max_abs_diff(&Mat::eye(15)) < 1e-9);
+        assert!(f.relative_error(&x) < 2e-2);
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The Rust request path never imports Python. `make artifacts` lowers the
+//! L2 graphs to `artifacts/*.hlo.txt` (HLO **text** — the id-safe
+//! interchange format; see `python/compile/aot.py`); at startup the
+//! [`registry::ArtifactRegistry`] indexes the manifest, and
+//! [`client::Executable`]s are compiled lazily on the PJRT CPU client on
+//! first use.
+//!
+//! [`engine`] exposes the compiled graphs behind the same interface as the
+//! pure-Rust algorithms, so callers pick an engine per job:
+//!
+//! * `CpuEngine` — f64, any shape (also the numerical oracle),
+//! * `XlaEngine` — f32 artifacts for the shapes in the manifest.
+
+pub mod client;
+pub mod engine;
+pub mod registry;

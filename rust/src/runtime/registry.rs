@@ -1,0 +1,195 @@
+//! Artifact registry: manifest-driven discovery of AOT artifacts.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing each
+//! lowered graph (op, shape, dtype, input/output shapes, file). The
+//! registry parses it once, and compiles executables lazily (PJRT
+//! compilation of a big HLO module takes ~100 ms; most runs touch one or
+//! two shapes).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::json::Json;
+use crate::runtime::client::Executable;
+
+/// Operations the AOT pipeline emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactOp {
+    /// One randomized-HALS iteration `(B, Q, W, W̃, Hᵗ) → (W, W̃, Hᵗ)`.
+    RhalsIter,
+    /// One deterministic HALS iteration `(X, W, Hᵗ) → (W, Hᵗ)`.
+    HalsIter,
+    /// QB compression `(X, Ω) → (Q, B)`.
+    QbSketch,
+}
+
+impl ArtifactOp {
+    fn parse(s: &str) -> Result<ArtifactOp> {
+        Ok(match s {
+            "rhals_iter" => ArtifactOp::RhalsIter,
+            "hals_iter" => ArtifactOp::HalsIter,
+            "qb_sketch" => ArtifactOp::QbSketch,
+            other => anyhow::bail!("unknown artifact op {other:?}"),
+        })
+    }
+}
+
+/// Shape key for lookup: `(m, n, k, l)`; unused dims are 0.
+pub type ShapeKey = (usize, usize, usize, usize);
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub op: ArtifactOp,
+    pub file: PathBuf,
+    pub key: ShapeKey,
+    pub inputs: Vec<(usize, usize)>,
+    pub outputs: Vec<(usize, usize)>,
+}
+
+/// Parsed manifest plus a lazy cache of compiled executables.
+///
+/// Not `Send`/`Sync`: PJRT handles from the `xla` crate are `Rc`-based, so
+/// a registry (like the engine built on it) lives on one thread — the
+/// coordinator's request loop.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    entries: HashMap<(ArtifactOp, ShapeKey), ArtifactEntry>,
+    cache: RefCell<HashMap<(ArtifactOp, ShapeKey), Rc<Executable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let doc = Json::parse(&text).context("parsing manifest.json")?;
+        let mut entries = HashMap::new();
+        for e in doc.get("entries")?.as_arr().unwrap_or(&[]) {
+            let op = ArtifactOp::parse(e.get("op")?.as_str().unwrap_or(""))?;
+            let key = (
+                e.get("m")?.as_usize().unwrap_or(0),
+                e.get("n")?.as_usize().unwrap_or(0),
+                e.get("k")?.as_usize().unwrap_or(0),
+                e.get("l")?.as_usize().unwrap_or(0),
+            );
+            let shapes = |field: &str| -> Result<Vec<(usize, usize)>> {
+                e.get(field)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{field} not an array"))?
+                    .iter()
+                    .map(|s| {
+                        let d = s.as_arr().ok_or_else(|| anyhow!("shape not an array"))?;
+                        anyhow::ensure!(d.len() == 2, "non-2d shape");
+                        Ok((d[0].as_usize().unwrap_or(0), d[1].as_usize().unwrap_or(0)))
+                    })
+                    .collect()
+            };
+            let entry = ArtifactEntry {
+                op,
+                file: dir.join(e.get("file")?.as_str().unwrap_or("")),
+                key,
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+            };
+            entries.insert((op, key), entry);
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), entries, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default registry location (`$RANDNMF_ARTIFACTS` or `./artifacts`).
+    pub fn load_default() -> Result<ArtifactRegistry> {
+        let dir = std::env::var("RANDNMF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Whether an artifact exists for this op/shape.
+    pub fn has(&self, op: ArtifactOp, key: ShapeKey) -> bool {
+        self.entries.contains_key(&(op, key))
+    }
+
+    /// All known entries (for diagnostics / CLI listing).
+    pub fn entries(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.values()
+    }
+
+    /// Get (compiling on first use) the executable for `op` at `key`.
+    pub fn executable(&self, op: ArtifactOp, key: ShapeKey) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(&(op, key)) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .entries
+            .get(&(op, key))
+            .ok_or_else(|| anyhow!("no artifact for {op:?} at {key:?} in {}", self.dir.display()))?;
+        let exe = Rc::new(Executable::load(&entry.file, entry.outputs.clone())?);
+        self.cache.borrow_mut().insert((op, key), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, entries_json: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let doc = format!(r#"{{"version": 1, "entries": [{entries_json}]}}"#);
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest_and_indexes_by_shape() {
+        let dir = std::env::temp_dir().join("randnmf_registry_test1");
+        write_manifest(
+            &dir,
+            r#"{"op": "rhals_iter", "tag": "t", "file": "a.hlo.txt", "dtype": "f32",
+                "m": 30, "n": 20, "k": 3, "l": 8,
+                "inputs": [[8,20],[30,8],[30,3],[8,3],[20,3]],
+                "outputs": [[30,3],[8,3],[20,3]]}"#,
+        );
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert!(reg.has(ArtifactOp::RhalsIter, (30, 20, 3, 8)));
+        assert!(!reg.has(ArtifactOp::RhalsIter, (30, 20, 3, 9)));
+        assert!(!reg.has(ArtifactOp::HalsIter, (30, 20, 3, 8)));
+        let e = reg.entries().next().unwrap();
+        assert_eq!(e.inputs.len(), 5);
+        assert_eq!(e.outputs, vec![(30, 3), (8, 3), (20, 3)]);
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = std::env::temp_dir().join("randnmf_registry_absent");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let dir = std::env::temp_dir().join("randnmf_registry_test2");
+        write_manifest(
+            &dir,
+            r#"{"op": "mystery", "file": "x", "m": 1, "n": 1, "k": 1, "l": 1,
+                "inputs": [], "outputs": []}"#,
+        );
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn executable_for_absent_entry_errors() {
+        let dir = std::env::temp_dir().join("randnmf_registry_test3");
+        write_manifest(&dir, r#"{"op": "qb_sketch", "file": "x", "m": 5, "n": 5, "k": 0, "l": 2,
+                "inputs": [[5,5],[5,2]], "outputs": [[5,2],[2,5]]}"#);
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert!(reg.executable(ArtifactOp::HalsIter, (1, 1, 1, 1)).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Randomized range finding — the probabilistic compression stage.
+//!
+//! * [`qb`] — in-memory QB decomposition (paper §2.3 / Algorithm 1 lines
+//!   1–9): `A ≈ Q·B` with `Q (m×l)` orthonormal and `B = QᵀA (l×n)`,
+//!   `l = k + p`, optionally with `q` subspace (power) iterations.
+//! * [`blocked`] — the pass-efficient out-of-core variant (paper
+//!   Appendix A / Algorithm 2) that builds the same factors while only ever
+//!   touching one column block of `A` at a time.
+
+pub mod blocked;
+pub mod qb;

@@ -1,0 +1,214 @@
+//! In-memory randomized QB decomposition (Halko et al. 2011).
+//!
+//! This is the compression stage of randomized HALS (paper Algorithm 1,
+//! lines 1–9):
+//!
+//! ```text
+//! l = k + p
+//! Ω = rand(n, l)                       // uniform [0,1): Remark 1
+//! Y = X·Ω                              // m×l sketch
+//! repeat q times:                      // subspace iterations (Eq. 8,
+//!     [Q,_] = qr(Y)                    //  stabilized per Gu 2015)
+//!     [Q,_] = qr(Xᵀ·Q)
+//!     Y = X·Q
+//! [Q,_] = qr(Y)                        // m×l orthonormal basis
+//! B = Qᵀ·X                             // l×n surrogate
+//! ```
+//!
+//! The expected error obeys (Martinsson 2016)
+//! `E‖A − QB‖₂ ≤ [1 + √(k/(p−1)) + e√(k+p)/p · √(n−k)]^{1/(2q+1)} σ_{k+1}`,
+//! i.e. oversampling `p` and power iterations `q` drive the error to the
+//! optimal `σ_{k+1}`; `bench_ablation_oversampling` and
+//! `bench_ablation_power_iters` sweep both knobs.
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::rng::Pcg64;
+
+/// Parameters of the randomized range finder.
+#[derive(Clone, Copy, Debug)]
+pub struct QbOptions {
+    /// Target rank `k` of the downstream factorization.
+    pub rank: usize,
+    /// Oversampling `p`; the sketch width is `l = rank + oversample`.
+    /// The paper recommends `p ∈ {10, 20}` and defaults to 20.
+    pub oversample: usize,
+    /// Number of subspace iterations `q`; the paper defaults to 2.
+    pub power_iters: usize,
+    /// Use Gaussian test matrices instead of the uniform `[0,1)` entries.
+    /// The paper (Remark 1) finds nonnegative uniform entries work better
+    /// for nonnegative data, so `false` is the NMF-path default; the SVD
+    /// path uses Gaussian.
+    pub gaussian: bool,
+}
+
+impl QbOptions {
+    /// Paper defaults: `p = 20`, `q = 2`, uniform test matrix.
+    pub fn new(rank: usize) -> Self {
+        QbOptions { rank, oversample: 20, power_iters: 2, gaussian: false }
+    }
+
+    pub fn with_oversample(mut self, p: usize) -> Self {
+        self.oversample = p;
+        self
+    }
+
+    pub fn with_power_iters(mut self, q: usize) -> Self {
+        self.power_iters = q;
+        self
+    }
+
+    pub fn with_gaussian(mut self, g: bool) -> Self {
+        self.gaussian = g;
+        self
+    }
+
+    /// Effective sketch width `l = min(k + p, min(m, n))`.
+    pub fn sketch_width(&self, m: usize, n: usize) -> usize {
+        (self.rank + self.oversample).min(m).min(n).max(1)
+    }
+}
+
+/// The factors of a QB decomposition `A ≈ Q·B`.
+pub struct QbFactors {
+    /// Orthonormal basis of the (approximate) range of `A`, `m×l`.
+    pub q: Mat,
+    /// Compressed surrogate `B = QᵀA`, `l×n`.
+    pub b: Mat,
+}
+
+impl QbFactors {
+    /// Relative compression error `‖A − QB‖_F / ‖A‖_F`.
+    pub fn relative_error(&self, a: &Mat) -> f64 {
+        let rec = gemm::matmul(&self.q, &self.b);
+        let diff = rec.sub(a);
+        let an = crate::linalg::norms::fro_norm(a);
+        if an == 0.0 {
+            0.0
+        } else {
+            crate::linalg::norms::fro_norm(&diff) / an
+        }
+    }
+}
+
+/// Compute the QB decomposition of `a`.
+pub fn qb(a: &Mat, opts: QbOptions, rng: &mut Pcg64) -> QbFactors {
+    let (m, n) = a.shape();
+    assert!(m > 0 && n > 0, "qb: empty input");
+    let l = opts.sketch_width(m, n);
+
+    // Test matrix Ω (n×l).
+    let omega = if opts.gaussian { rng.gaussian_mat(n, l) } else { rng.uniform_mat(n, l) };
+
+    // Sketch Y = XΩ (m×l).
+    let mut y = gemm::matmul(a, &omega);
+
+    // Stabilized subspace iterations (Algorithm 1, lines 4–7).
+    for _ in 0..opts.power_iters {
+        let q = orthonormalize(&y);
+        let z = gemm::at_b(a, &q); // XᵀQ : n×l
+        let qz = orthonormalize(&z);
+        y = gemm::matmul(a, &qz); // m×l
+    }
+
+    let q = orthonormalize(&y);
+    let b = gemm::at_b(&q, a); // QᵀX : l×n
+    QbFactors { q, b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::fro_norm;
+    use crate::linalg::svd::jacobi_svd;
+
+    /// Exactly rank-r nonnegative matrix.
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = rng.uniform_mat(m, r);
+        let v = rng.uniform_mat(r, n);
+        gemm::matmul(&u, &v)
+    }
+
+    #[test]
+    fn exact_rank_recovery() {
+        let a = low_rank(120, 80, 6, 1);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let f = qb(&a, QbOptions::new(6).with_oversample(10), &mut rng);
+        assert!(f.relative_error(&a) < 1e-8, "err={}", f.relative_error(&a));
+        assert_eq!(f.q.shape(), (120, 16));
+        assert_eq!(f.b.shape(), (16, 80));
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let a = low_rank(90, 70, 10, 3);
+        let mut rng = Pcg64::seed_from_u64(4);
+        let f = qb(&a, QbOptions::new(10), &mut rng);
+        let l = f.q.cols();
+        let qtq = gemm::gram(&f.q);
+        assert!(qtq.max_abs_diff(&Mat::eye(l)) < 1e-9);
+    }
+
+    #[test]
+    fn error_bounded_by_tail_singular_value() {
+        // Noisy low-rank: QB error should be close to σ_{k+1}-tail energy.
+        let mut rng = Pcg64::seed_from_u64(5);
+        let mut a = low_rank(100, 60, 8, 6);
+        let noise = rng.gaussian_mat(100, 60);
+        a.axpy(1e-3, &noise);
+        let svd = jacobi_svd(&a);
+        let k = 8usize;
+        let tail: f64 = svd.s[k..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        let f = qb(&a, QbOptions::new(k).with_oversample(20).with_power_iters(2), &mut rng);
+        let abs_err = f.relative_error(&a) * fro_norm(&a);
+        // Frobenius-optimal error is `tail`; randomized should be within 2x.
+        assert!(abs_err < 2.0 * tail + 1e-12, "abs={abs_err} tail={tail}");
+    }
+
+    #[test]
+    fn power_iterations_improve_slow_spectrum() {
+        // Matrix with slowly decaying spectrum: σ_i = 1/i.
+        let mut rng = Pcg64::seed_from_u64(7);
+        let m = 80;
+        let n = 80;
+        let u = orthonormalize(&rng.gaussian_mat(m, n));
+        let v = orthonormalize(&rng.gaussian_mat(n, n));
+        let mut us = u.clone();
+        for j in 0..n {
+            let s = 1.0 / (j + 1) as f64;
+            for i in 0..m {
+                let val = us.get(i, j) * s;
+                us.set(i, j, val);
+            }
+        }
+        let a = gemm::a_bt(&us, &v);
+        let opts0 = QbOptions::new(10).with_oversample(5).with_power_iters(0).with_gaussian(true);
+        let opts2 = QbOptions::new(10).with_oversample(5).with_power_iters(2).with_gaussian(true);
+        let mut r0 = Pcg64::seed_from_u64(8);
+        let mut r2 = Pcg64::seed_from_u64(8);
+        let e0 = qb(&a, opts0, &mut r0).relative_error(&a);
+        let e2 = qb(&a, opts2, &mut r2).relative_error(&a);
+        assert!(e2 < e0, "q=2 ({e2}) should beat q=0 ({e0})");
+    }
+
+    #[test]
+    fn sketch_width_clamps() {
+        let o = QbOptions::new(10).with_oversample(20);
+        assert_eq!(o.sketch_width(1000, 1000), 30);
+        assert_eq!(o.sketch_width(25, 1000), 25);
+        assert_eq!(o.sketch_width(1000, 8), 8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = low_rank(50, 40, 5, 9);
+        let mut r1 = Pcg64::seed_from_u64(10);
+        let mut r2 = Pcg64::seed_from_u64(10);
+        let f1 = qb(&a, QbOptions::new(5), &mut r1);
+        let f2 = qb(&a, QbOptions::new(5), &mut r2);
+        assert_eq!(f1.q, f2.q);
+        assert_eq!(f1.b, f2.b);
+    }
+}

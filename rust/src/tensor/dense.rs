@@ -1,0 +1,232 @@
+//! Dense order-3 tensor with the mode operations CP needs.
+
+use crate::linalg::mat::Mat;
+
+/// Dense order-3 tensor, layout `data[(a·J + b)·K + c]` for index
+/// `(a, b, c)` in an `I×J×K` tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor3 {
+    i: usize,
+    j: usize,
+    k: usize,
+    data: Vec<f64>,
+}
+
+impl Tensor3 {
+    pub fn zeros(i: usize, j: usize, k: usize) -> Tensor3 {
+        Tensor3 { i, j, k, data: vec![0.0; i * j * k] }
+    }
+
+    pub fn from_fn(i: usize, j: usize, k: usize, mut f: impl FnMut(usize, usize, usize) -> f64) -> Tensor3 {
+        let mut t = Tensor3::zeros(i, j, k);
+        for a in 0..i {
+            for b in 0..j {
+                for c in 0..k {
+                    t.set(a, b, c, f(a, b, c));
+                }
+            }
+        }
+        t
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.i, self.j, self.k)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, a: usize, b: usize, c: usize) -> f64 {
+        self.data[(a * self.j + b) * self.k + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, a: usize, b: usize, c: usize, v: f64) {
+        self.data[(a * self.j + b) * self.k + c] = v;
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn is_nonneg(&self) -> bool {
+        self.data.iter().all(|&v| v >= 0.0)
+    }
+
+    /// Mode-`n` unfolding `X₍ₙ₎` with the Kolda–Bader column ordering
+    /// (mode indices vary fastest in the order of the remaining modes):
+    ///
+    /// * mode 0 → `I × (J·K)`, column index `b + c·J`
+    /// * mode 1 → `J × (I·K)`, column index `a + c·I`
+    /// * mode 2 → `K × (I·J)`, column index `a + b·I`
+    pub fn unfold(&self, mode: usize) -> Mat {
+        let (i, j, k) = self.dims();
+        match mode {
+            0 => Mat::from_fn(i, j * k, |a, col| self.get(a, col % j, col / j)),
+            1 => Mat::from_fn(j, i * k, |b, col| self.get(col % i, b, col / i)),
+            2 => Mat::from_fn(k, i * j, |c, col| self.get(col % i, col / i, c)),
+            _ => panic!("mode {mode} out of range for order-3 tensor"),
+        }
+    }
+
+    /// Inverse of [`unfold`].
+    pub fn fold(mode: usize, m: &Mat, dims: (usize, usize, usize)) -> Tensor3 {
+        let (i, j, k) = dims;
+        let mut t = Tensor3::zeros(i, j, k);
+        match mode {
+            0 => {
+                assert_eq!(m.shape(), (i, j * k));
+                for a in 0..i {
+                    for col in 0..j * k {
+                        t.set(a, col % j, col / j, m.get(a, col));
+                    }
+                }
+            }
+            1 => {
+                assert_eq!(m.shape(), (j, i * k));
+                for b in 0..j {
+                    for col in 0..i * k {
+                        t.set(col % i, b, col / i, m.get(b, col));
+                    }
+                }
+            }
+            2 => {
+                assert_eq!(m.shape(), (k, i * j));
+                for c in 0..k {
+                    for col in 0..i * j {
+                        t.set(col % i, col / i, c, m.get(c, col));
+                    }
+                }
+            }
+            _ => panic!("mode {mode} out of range"),
+        }
+        t
+    }
+
+    /// Mode-`n` product with a matrix: `Y = X ×ₙ M` where `M` is
+    /// `r × dimₙ`; the result has mode-`n` dimension `r`.
+    pub fn mode_product(&self, mode: usize, m: &Mat) -> Tensor3 {
+        let unfolded = self.unfold(mode);
+        assert_eq!(m.cols(), unfolded.rows(), "mode_product: dim mismatch");
+        let prod = crate::linalg::gemm::matmul(m, &unfolded);
+        let (i, j, k) = self.dims();
+        let dims = match mode {
+            0 => (m.rows(), j, k),
+            1 => (i, m.rows(), k),
+            2 => (i, j, m.rows()),
+            _ => unreachable!(),
+        };
+        Tensor3::fold(mode, &prod, dims)
+    }
+}
+
+/// Khatri–Rao (column-wise Kronecker) product: for `A (p×r)`, `B (q×r)`
+/// returns `(p·q) × r` with row index `a + b·p` matching the unfold
+/// ordering above (first factor's index varies fastest).
+pub fn khatri_rao(a: &Mat, b: &Mat) -> Mat {
+    let (p, r) = a.shape();
+    let (q, rb) = b.shape();
+    assert_eq!(r, rb, "khatri_rao: rank mismatch");
+    Mat::from_fn(p * q, r, |row, col| a.get(row % p, col) * b.get(row / p, col))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::linalg::rng::Pcg64;
+
+    fn random(i: usize, j: usize, k: usize, seed: u64) -> Tensor3 {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        Tensor3::from_fn(i, j, k, |_, _, _| rng.uniform())
+    }
+
+    #[test]
+    fn unfold_fold_roundtrip_all_modes() {
+        let t = random(3, 4, 5, 1);
+        for mode in 0..3 {
+            let m = t.unfold(mode);
+            let back = Tensor3::fold(mode, &m, t.dims());
+            assert_eq!(back, t, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn unfold_shapes() {
+        let t = random(3, 4, 5, 2);
+        assert_eq!(t.unfold(0).shape(), (3, 20));
+        assert_eq!(t.unfold(1).shape(), (4, 15));
+        assert_eq!(t.unfold(2).shape(), (5, 12));
+    }
+
+    #[test]
+    fn cp_identity_via_unfold_and_khatri_rao() {
+        // For X = Σ_r a_r ∘ b_r ∘ c_r :  X₍₀₎ = A·KR(B,C)ᵀ with our
+        // orderings. Verify on a random rank-2 CP tensor.
+        let mut rng = Pcg64::seed_from_u64(3);
+        let (i, j, k, r) = (4, 3, 5, 2);
+        let a = rng.uniform_mat(i, r);
+        let b = rng.uniform_mat(j, r);
+        let c = rng.uniform_mat(k, r);
+        let mut t = Tensor3::zeros(i, j, k);
+        for rr in 0..r {
+            for x in 0..i {
+                for y in 0..j {
+                    for z in 0..k {
+                        let v = t.get(x, y, z) + a.get(x, rr) * b.get(y, rr) * c.get(z, rr);
+                        t.set(x, y, z, v);
+                    }
+                }
+            }
+        }
+        let kr = khatri_rao(&b, &c); // (j·k)×r, row = y + z·j
+        let rec0 = gemm::a_bt(&a, &kr); // i × (j·k)
+        assert!(rec0.max_abs_diff(&t.unfold(0)) < 1e-12);
+
+        let kr1 = khatri_rao(&a, &c); // (i·k)×r, row = x + z·i
+        let rec1 = gemm::a_bt(&b, &kr1);
+        assert!(rec1.max_abs_diff(&t.unfold(1)) < 1e-12);
+
+        let kr2 = khatri_rao(&a, &b); // (i·j)×r, row = x + y·i
+        let rec2 = gemm::a_bt(&c, &kr2);
+        assert!(rec2.max_abs_diff(&t.unfold(2)) < 1e-12);
+    }
+
+    #[test]
+    fn mode_product_reduces_dimension() {
+        let t = random(4, 5, 6, 4);
+        let mut rng = Pcg64::seed_from_u64(5);
+        let m = rng.gaussian_mat(2, 5);
+        let y = t.mode_product(1, &m);
+        assert_eq!(y.dims(), (4, 2, 6));
+        // Spot-check one entry: y[a, p, c] = Σ_b m[p,b]·t[a,b,c]
+        let mut expect = 0.0;
+        for b in 0..5 {
+            expect += m.get(1, b) * t.get(2, b, 3);
+        }
+        assert!((y.get(2, 1, 3) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn khatri_rao_against_definition() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0], &[9.0, 10.0]]);
+        let kr = khatri_rao(&a, &b);
+        assert_eq!(kr.shape(), (6, 2));
+        // row = a_idx + b_idx*2
+        assert_eq!(kr.get(0, 0), 1.0 * 5.0);
+        assert_eq!(kr.get(1, 0), 3.0 * 5.0);
+        assert_eq!(kr.get(2, 0), 1.0 * 7.0);
+        assert_eq!(kr.get(5, 1), 4.0 * 10.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Nonnegative tensor factorization — the paper's stated future work.
+//!
+//! §5: *"the presented ideas can be applied to nonnegative tensor
+//! factorization using the randomized framework proposed by Erichson et
+//! al. (2017)"*. This module implements that extension for order-3
+//! tensors:
+//!
+//! * [`dense::Tensor3`] — dense order-3 tensor with mode unfoldings.
+//! * [`cp`] — nonnegative CP decomposition via HALS (the tensor analogue
+//!   of Eqs. 14–15: the mode-`n` subproblem is exactly a matrix HALS
+//!   sweep with Gram `⊛_{m≠n} AₘᵀAₘ` and numerator `X₍ₙ₎·KR(...)`, so it
+//!   reuses [`crate::nmf::hals::sweep_factor`]), plus the **randomized**
+//!   variant that compresses every mode with the QB range finder and runs
+//!   the iterations on the small core — the higher-order mirror of
+//!   Algorithm 1.
+
+pub mod cp;
+pub mod dense;

@@ -1,0 +1,224 @@
+//! End-to-end integration over the coordinator: datasets → jobs → solvers
+//! → metrics, the classification pipeline, and the CLI binary itself.
+
+use std::process::Command;
+
+use randnmf::coordinator::config::Config;
+use randnmf::coordinator::jobs::{DatasetSpec, Job};
+use randnmf::data::digits;
+use randnmf::eval::classification::Report;
+use randnmf::eval::knn::Knn;
+use randnmf::nmf::hals::Hals;
+use randnmf::nmf::options::{NmfOptions, Regularization};
+use randnmf::nmf::rhals::RandomizedHals;
+use randnmf::nmf::solver::NmfSolver;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("randnmf_e2e").join(name);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The paper's core claim, end to end on the faces substitute: randomized
+/// HALS matches deterministic HALS error at the same iteration budget.
+#[test]
+fn faces_rhals_matches_hals_error() {
+    let x = DatasetSpec::Faces { scale: 0.06 }.build(42).unwrap();
+    let opts = NmfOptions::new(8).with_max_iter(120).with_seed(1);
+    let det = Hals::new(opts.clone()).fit(&x).unwrap();
+    let rand = RandomizedHals::new(opts).fit(&x).unwrap();
+    assert!(
+        rand.final_rel_err < det.final_rel_err + 5e-3,
+        "rhals {} vs hals {}",
+        rand.final_rel_err,
+        det.final_rel_err
+    );
+}
+
+/// Table 4's pipeline: NMF features → kNN(3) → precision/recall/F1, with
+/// randomized and deterministic features scoring comparably.
+#[test]
+fn digits_classification_pipeline() {
+    let data = digits::generate(&digits::DigitsSpec {
+        n_train: 400,
+        n_test: 150,
+        noise: 0.02,
+        seed: 42,
+    });
+    let opts = NmfOptions::new(16).with_max_iter(50).with_seed(2);
+
+    let mut f1s = Vec::new();
+    let solvers: Vec<Box<dyn NmfSolver>> = vec![
+        Box::new(Hals::new(opts.clone())),
+        Box::new(RandomizedHals::new(opts)),
+    ];
+    for solver in solvers {
+        let fit = solver.fit(&data.train_x).unwrap();
+        let train_codes = fit.model.transform(&data.train_x, 50);
+        let test_codes = fit.model.transform(&data.test_x, 50);
+        let knn = Knn::fit(3, train_codes, data.train_y.clone());
+        let pred = knn.predict(&test_codes);
+        let report = Report::compute(&data.test_y, &pred);
+        let (_, _, f1) = report.weighted_avg();
+        assert!(f1 > 0.7, "{}: F1 too low: {f1}", solver.name());
+        f1s.push(f1);
+    }
+    // Paper Table 4: both feature sets classify equally well.
+    assert!((f1s[0] - f1s[1]).abs() < 0.08, "F1 gap: {f1s:?}");
+}
+
+/// ℓ1 regularization sparsifies the basis without hurting the fit much
+/// (the Fig. 7c experiment, quantitatively).
+#[test]
+fn hyperspectral_l1_sparsifies_basis() {
+    let x = DatasetSpec::Hyperspectral { scale: 0.08 }.build(42).unwrap();
+    let base = RandomizedHals::new(NmfOptions::new(4).with_max_iter(150).with_seed(3))
+        .fit(&x)
+        .unwrap();
+    let sparse = RandomizedHals::new(
+        NmfOptions::new(4)
+            .with_max_iter(150)
+            .with_seed(3)
+            .with_reg_w(Regularization::lasso(0.9)),
+    )
+    .fit(&x)
+    .unwrap();
+    assert!(
+        sparse.model.w.zero_fraction() >= base.model.w.zero_fraction(),
+        "{} vs {}",
+        sparse.model.w.zero_fraction(),
+        base.model.w.zero_fraction()
+    );
+    assert!(sparse.final_rel_err < base.final_rel_err + 0.1);
+}
+
+/// Config file → job → run records on disk.
+#[test]
+fn job_from_config_writes_records() {
+    let dir = tmpdir("job");
+    let cfg = Config::parse(&format!(
+        r#"
+[job]
+dataset = "synthetic"
+solvers = "hals, rhals, compressed-mu"
+out_dir = "{}"
+
+[data]
+rows = 120
+cols = 80
+rank = 4
+seed = 5
+
+[solver]
+rank = 4
+max_iter = 60
+trace_every = 10
+"#,
+        dir.display()
+    ))
+    .unwrap();
+    let job = Job::from_config(&cfg).unwrap();
+    let recs = job.run().unwrap();
+    assert_eq!(recs.len(), 3);
+    assert!(dir.join("runs.jsonl").exists());
+    // traces written for each solver
+    assert!(dir.join("synthetic-120x80-r4-hals.trace.csv").exists());
+    assert!(dir.join("synthetic-120x80-r4-rhals.trace.csv").exists());
+    // rHALS must not be slower than HALS even at this small scale… that is
+    // not guaranteed on tiny data, so only check the error contract:
+    assert!(recs.iter().all(|r| r.rel_err < 0.2), "{recs:?}");
+}
+
+/// Out-of-core path: gen-data → store → blocked factorization via the CLI
+/// binary (true end-to-end, new process).
+#[test]
+fn cli_gen_data_and_factorize_blocked() {
+    let dir = tmpdir("cli");
+    let store = dir.join("demo.nmfstore");
+    let bin = env!("CARGO_BIN_EXE_randnmf");
+
+    let out = Command::new(bin)
+        .args([
+            "gen-data",
+            "--dataset",
+            "synthetic",
+            "--rows",
+            "300",
+            "--cols",
+            "200",
+            "--data-rank",
+            "6",
+            "--block",
+            "64",
+            "--out",
+            store.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn gen-data");
+    assert!(out.status.success(), "gen-data failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(store.exists());
+
+    let out = Command::new(bin)
+        .args([
+            "factorize",
+            store.to_str().unwrap(),
+            "--algo",
+            "rhals",
+            "--rank",
+            "6",
+            "--max-iter",
+            "50",
+            "--blocked",
+        ])
+        .output()
+        .expect("spawn factorize");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "factorize failed: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("relative error"), "stdout: {stdout}");
+    // The data is exact rank 6 and the sketch holds it: error ≈ 0.
+    let err: f64 = stdout
+        .lines()
+        .find(|l| l.contains("relative error"))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|t| t.trim().parse().ok())
+        .expect("parse error value");
+    assert!(err < 0.05, "blocked rhals error too large: {err}");
+}
+
+/// CLI rejects nonsense cleanly (no panic, helpful message).
+#[test]
+fn cli_error_paths() {
+    let bin = env!("CARGO_BIN_EXE_randnmf");
+    let out = Command::new(bin).args(["bogus-subcommand"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+
+    let out = Command::new(bin).args(["run"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--config"));
+
+    let out = Command::new(bin).args(["help"]).output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("factorize"));
+}
+
+/// Interleaved update order (Eq. 23) through the public API reaches a
+/// similar fit to blocked (Eq. 24) on small data.
+#[test]
+fn update_order_ablation_consistency() {
+    use randnmf::nmf::options::UpdateOrder;
+    let x = DatasetSpec::Synthetic { m: 60, n: 50, r: 3, noise: 0.0 }.build(7).unwrap();
+    let mut errs = Vec::new();
+    for order in [UpdateOrder::BlockedCyclic, UpdateOrder::InterleavedCyclic, UpdateOrder::Shuffled]
+    {
+        let fit = Hals::new(
+            NmfOptions::new(3).with_max_iter(150).with_seed(8).with_update_order(order),
+        )
+        .fit(&x)
+        .unwrap();
+        errs.push(fit.final_rel_err);
+    }
+    for e in &errs {
+        assert!(*e < 2e-2, "errors: {errs:?}");
+    }
+}

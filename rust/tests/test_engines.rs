@@ -1,0 +1,150 @@
+//! Cross-engine integration: the AOT-compiled XLA path must agree with the
+//! pure-Rust CPU path.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they are skipped
+//! with a notice when the manifest is absent so `cargo test` works on a
+//! fresh checkout.
+
+use randnmf::linalg::gemm;
+use randnmf::linalg::mat::Mat;
+use randnmf::linalg::rng::Pcg64;
+use randnmf::nmf::options::NmfOptions;
+use randnmf::runtime::engine::{rhals_fit_with_engine, CpuEngine, NmfEngine, XlaEngine};
+use randnmf::runtime::registry::ArtifactRegistry;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactRegistry::load(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts: {e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+/// The quickstart artifact shape: m=500, n=400, k=8, l=28.
+fn quickstart_data(seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let u = rng.uniform_mat(500, 8);
+    let v = rng.uniform_mat(8, 400);
+    let mut x = gemm::matmul(&u, &v);
+    let noise = rng.uniform_mat(500, 400);
+    x.axpy(1e-3, &noise);
+    x
+}
+
+#[test]
+fn xla_rhals_iteration_matches_cpu() {
+    let Some(reg) = registry() else { return };
+    let engine = XlaEngine::new(reg);
+    let x = quickstart_data(1);
+    let mut rng = Pcg64::seed_from_u64(2);
+    let omega = rng.uniform_mat(400, 28);
+
+    let factors = CpuEngine.qb_sketch(&x, &omega, 2).unwrap();
+    let opts = NmfOptions::new(8);
+    let (w0, ht0) = randnmf::nmf::init::initialize_from_qb(
+        &factors.q,
+        &factors.b,
+        x.sum() / x.len() as f64,
+        &opts,
+        &mut rng,
+    );
+    let wt0 = gemm::at_b(&factors.q, &w0);
+
+    // One iteration on each engine from identical state.
+    let (mut wc, mut wtc, mut htc) = (w0.clone(), wt0.clone(), ht0.clone());
+    CpuEngine.rhals_iteration(&factors.b, &factors.q, &mut wc, &mut wtc, &mut htc).unwrap();
+    let (mut wx, mut wtx, mut htx) = (w0, wt0, ht0);
+    engine.rhals_iteration(&factors.b, &factors.q, &mut wx, &mut wtx, &mut htx).unwrap();
+
+    // f32 vs f64: agree to ~1e-3 relative on the factor scale.
+    let scale = wc.max().max(1e-9);
+    assert!(wx.max_abs_diff(&wc) / scale < 5e-3, "W diff {}", wx.max_abs_diff(&wc) / scale);
+    let hscale = htc.max().max(1e-9);
+    assert!(htx.max_abs_diff(&htc) / hscale < 5e-3, "H diff {}", htx.max_abs_diff(&htc) / hscale);
+    assert!(wx.is_nonneg() && htx.is_nonneg());
+}
+
+#[test]
+fn xla_qb_sketch_is_valid_decomposition() {
+    let Some(reg) = registry() else { return };
+    let engine = XlaEngine::new(reg);
+    let x = quickstart_data(3);
+    let mut rng = Pcg64::seed_from_u64(4);
+    let omega = rng.uniform_mat(400, 28);
+    let f = engine.qb_sketch(&x, &omega, 2).unwrap();
+    assert_eq!(f.q.shape(), (500, 28));
+    assert_eq!(f.b.shape(), (28, 400));
+    // The f32 CholeskyQR path zeroes basis directions below its numerical
+    // floor (rank-revealing); live columns must be orthonormal and the
+    // reconstruction near-exact regardless.
+    let qtq = gemm::gram(&f.q);
+    let mut live = 0;
+    for i in 0..28 {
+        if qtq.get(i, i) > 0.5 {
+            live += 1;
+            for j in 0..28 {
+                if qtq.get(j, j) > 0.5 {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (qtq.get(i, j) - expect).abs() < 1e-3,
+                        "live block not orthonormal at ({i},{j}): {}",
+                        qtq.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+    assert!(live >= 8, "at least the true rank must survive: {live}");
+    assert!(f.relative_error(&x) < 1e-2, "err={}", f.relative_error(&x));
+}
+
+#[test]
+fn xla_full_fit_matches_cpu_quality() {
+    let Some(reg) = registry() else { return };
+    let x = quickstart_data(5);
+    let opts = NmfOptions::new(8).with_max_iter(100).with_seed(6);
+
+    let cpu_fit = rhals_fit_with_engine(&CpuEngine, &x, &opts).unwrap();
+    let engine = XlaEngine::new(reg);
+    let xla_fit = rhals_fit_with_engine(&engine, &x, &opts).unwrap();
+
+    assert!(xla_fit.model.w.is_nonneg() && xla_fit.model.h.is_nonneg());
+    assert!(
+        (xla_fit.final_rel_err - cpu_fit.final_rel_err).abs() < 5e-3,
+        "xla={} cpu={}",
+        xla_fit.final_rel_err,
+        cpu_fit.final_rel_err
+    );
+    assert!(xla_fit.final_rel_err < 5e-2);
+}
+
+#[test]
+fn xla_hals_iteration_descends() {
+    let Some(reg) = registry() else { return };
+    let engine = XlaEngine::new(reg);
+    let x = quickstart_data(7);
+    let mut rng = Pcg64::seed_from_u64(8);
+    let opts = NmfOptions::new(8);
+    let (mut w, mut ht) = randnmf::nmf::init::initialize(&x, &opts, &mut rng);
+    let e0 = randnmf::linalg::norms::relative_error(&x, &w, &ht.transpose());
+    for _ in 0..60 {
+        engine.hals_iteration(&x, &mut w, &mut ht).unwrap();
+    }
+    let e1 = randnmf::linalg::norms::relative_error(&x, &w, &ht.transpose());
+    assert!(e1 < e0, "{e0} -> {e1}");
+    assert!(e1 < 0.1, "e1={e1}");
+}
+
+#[test]
+fn missing_shape_errors_cleanly() {
+    let Some(reg) = registry() else { return };
+    let engine = XlaEngine::new(reg);
+    let x = Mat::zeros(33, 17);
+    let mut w = Mat::zeros(33, 4);
+    let mut ht = Mat::zeros(17, 4);
+    let err = engine.hals_iteration(&x, &mut w, &mut ht);
+    assert!(err.is_err(), "unknown shape must not silently fall back");
+}

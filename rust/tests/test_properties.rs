@@ -1,0 +1,256 @@
+//! Cross-module property tests (the mini-proptest framework exercising the
+//! invariants DESIGN.md §9 lists).
+
+use randnmf::linalg::{gemm, mat::Mat, norms, qr, svd};
+use randnmf::nmf::hals::{sweep_factor, Hals};
+use randnmf::nmf::options::{NmfOptions, Regularization, UpdateOrder};
+use randnmf::nmf::rhals::RandomizedHals;
+use randnmf::prop_assert;
+use randnmf::sketch::blocked::{qb_blocked, MatSource};
+use randnmf::sketch::qb::{qb, QbOptions};
+use randnmf::testing::forall;
+
+#[test]
+fn prop_gemm_matches_naive() {
+    forall("gemm == naive", 30, |g| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 30);
+        let n = g.usize_in(1, 40);
+        let a = g.mat_gaussian(m, k);
+        let b = g.mat_gaussian(k, n);
+        let fast = gemm::matmul(&a, &b);
+        let slow = gemm::matmul_naive(&a, &b);
+        prop_assert!(fast.max_abs_diff(&slow) < 1e-10, "diff {}", fast.max_abs_diff(&slow));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transpose_products_consistent() {
+    forall("at_b / a_bt / gram consistent", 25, |g| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 12);
+        let n = g.usize_in(1, 25);
+        let a = g.mat_gaussian(m, k);
+        let b = g.mat_gaussian(m, n);
+        let c = g.mat_gaussian(n, k);
+        prop_assert!(
+            gemm::at_b(&a, &b).max_abs_diff(&gemm::matmul(&a.transpose(), &b)) < 1e-10,
+            "at_b mismatch"
+        );
+        prop_assert!(
+            gemm::a_bt(&a, &c).max_abs_diff(&gemm::matmul(&a, &c.transpose())) < 1e-10,
+            "a_bt mismatch"
+        );
+        prop_assert!(
+            gemm::gram(&a).max_abs_diff(&gemm::matmul(&a.transpose(), &a)) < 1e-10,
+            "gram mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qr_reconstruction_and_orthonormality() {
+    forall("QR: A = QR, QᵀQ = I", 25, |g| {
+        let n = g.usize_in(1, 15);
+        let m = g.usize_in(n, 60);
+        let a = g.mat_gaussian(m, n);
+        let f = qr::qr(&a);
+        prop_assert!(
+            gemm::matmul(&f.q, &f.r).max_abs_diff(&a) < 1e-9,
+            "QR != A"
+        );
+        prop_assert!(
+            gemm::gram(&f.q).max_abs_diff(&Mat::eye(n)) < 1e-9,
+            "Q not orthonormal"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_svd_eckart_young() {
+    forall("SVD reconstructs and orders", 15, |g| {
+        let m = g.usize_in(2, 25);
+        let n = g.usize_in(2, 25);
+        let a = g.mat_gaussian(m, n);
+        let s = svd::jacobi_svd(&a);
+        let rec = s.reconstruct();
+        prop_assert!(
+            norms::fro_norm(&rec.sub(&a)) / norms::fro_norm(&a).max(1e-12) < 1e-8,
+            "bad reconstruction"
+        );
+        for i in 1..s.s.len() {
+            prop_assert!(s.s[i - 1] >= s.s[i] - 1e-10, "singular values unordered");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qb_exact_on_low_rank() {
+    forall("QB exact for rank <= k", 20, |g| {
+        let m = g.usize_in(10, 60);
+        let n = g.usize_in(10, 50);
+        let r = g.usize_in(1, 5.min(m.min(n)));
+        let x = g.mat_low_rank(m, n, r);
+        let p = g.usize_in(2, 10);
+        let q_iters = g.usize_in(0, 2);
+        let mut rng = g.rng();
+        let f = qb(&x, QbOptions::new(r).with_oversample(p).with_power_iters(q_iters), &mut rng);
+        prop_assert!(f.relative_error(&x) < 1e-6, "err {}", f.relative_error(&x));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocked_qb_block_size_invariant() {
+    forall("blocked QB == any block size", 15, |g| {
+        let m = g.usize_in(8, 40);
+        let n = g.usize_in(8, 35);
+        let r = g.usize_in(1, 4.min(m.min(n)));
+        let x = g.mat_low_rank(m, n, r);
+        let bs = g.usize_in(1, n + 3);
+        let opts = QbOptions::new(r).with_oversample(4).with_power_iters(1);
+        let mut r1 = g.rng();
+        let mut r2 = r1.clone();
+        let blocked = qb_blocked(&MatSource(&x), opts, bs, &mut r1).unwrap();
+        let full = qb_blocked(&MatSource(&x), opts, n, &mut r2).unwrap();
+        let rec_a = gemm::matmul(&blocked.q, &blocked.b);
+        let rec_b = gemm::matmul(&full.q, &full.b);
+        prop_assert!(rec_a.max_abs_diff(&rec_b) < 1e-7, "block size changed result");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sweep_preserves_nonnegativity_any_regularization() {
+    forall("sweep keeps F >= 0", 40, |g| {
+        let r = g.usize_in(1, 50);
+        let k = g.usize_in(1, 8);
+        let mut fac = g.mat(r, k);
+        let num = g.mat_gaussian(r, k); // adversarial numerators
+        let other = g.mat(k.max(2) * 2, k);
+        let gram = gemm::gram(&other);
+        let reg = Regularization::elastic_net(g.f64_in(0.0, 2.0), g.f64_in(0.0, 2.0));
+        let order: Vec<usize> = (0..k).collect();
+        sweep_factor(&mut fac, &num, &gram, reg, &order, true);
+        prop_assert!(fac.is_nonneg(), "negativity leaked");
+        prop_assert!(!fac.has_non_finite(), "non-finite values");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hals_objective_never_increases() {
+    forall("HALS monotone", 8, |g| {
+        let m = g.usize_in(15, 40);
+        let n = g.usize_in(15, 35);
+        let r = g.usize_in(2, 4);
+        let x = g.mat_low_rank(m, n, r);
+        let k = g.usize_in(1, r + 2);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let fit = Hals::new(
+            NmfOptions::new(k).with_max_iter(25).with_seed(seed).with_trace_every(1),
+        )
+        .fit(&x)
+        .map_err(|e| e.to_string())?;
+        for w in fit.trace.windows(2) {
+            prop_assert!(
+                w[1].rel_err <= w[0].rel_err + 1e-9,
+                "objective rose {} -> {}",
+                w[0].rel_err,
+                w[1].rel_err
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rhals_factors_always_feasible() {
+    forall("rHALS feasible under all options", 10, |g| {
+        let m = g.usize_in(20, 60);
+        let n = g.usize_in(20, 50);
+        let x = g.mat_low_rank(m, n, 3);
+        let k = g.usize_in(1, 4);
+        let order = *g.choose(&[UpdateOrder::BlockedCyclic, UpdateOrder::Shuffled]);
+        let batched = g.bool();
+        let opts = NmfOptions::new(k)
+            .with_max_iter(15)
+            .with_seed(g.usize_in(0, 1 << 30) as u64)
+            .with_oversample(g.usize_in(1, 10))
+            .with_power_iters(g.usize_in(0, 2))
+            .with_update_order(order)
+            .with_batched_projection(batched);
+        let fit = RandomizedHals::new(opts).fit(&x).map_err(|e| e.to_string())?;
+        prop_assert!(fit.model.w.is_nonneg(), "W negative");
+        prop_assert!(fit.model.h.is_nonneg(), "H negative");
+        prop_assert!(!fit.model.w.has_non_finite(), "W non-finite");
+        prop_assert!(fit.final_rel_err.is_finite(), "error non-finite");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_store_roundtrip_any_block() {
+    forall("store roundtrip", 20, |g| {
+        let rows = g.usize_in(1, 30);
+        let cols = g.usize_in(1, 40);
+        let block = g.usize_in(1, cols + 5);
+        let m = g.mat(rows, cols);
+        let dir = std::env::temp_dir().join("randnmf_prop_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("p{rows}x{cols}b{block}.nmfstore"));
+        randnmf::data::store::write_mat(&path, &m, block).map_err(|e| e.to_string())?;
+        let store = randnmf::data::store::NmfStore::open(&path).map_err(|e| e.to_string())?;
+        let back = store.read_all().map_err(|e| e.to_string())?;
+        prop_assert!(back == m, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_parser_roundtrips_generated_docs() {
+    forall("config parse", 30, |g| {
+        use randnmf::coordinator::config::Config;
+        // Generate a random but valid document.
+        let nsec = g.usize_in(1, 3);
+        let mut doc = String::new();
+        let mut expected: Vec<(String, String, i64)> = Vec::new();
+        for s in 0..nsec {
+            doc.push_str(&format!("[sec{s}]\n"));
+            let nkeys = g.usize_in(0, 4);
+            for kidx in 0..nkeys {
+                let v = g.usize_in(0, 1000) as i64;
+                doc.push_str(&format!("key{kidx} = {v} # comment\n"));
+                expected.push((format!("sec{s}"), format!("key{kidx}"), v));
+            }
+        }
+        let cfg = Config::parse(&doc).map_err(|e| e.to_string())?;
+        for (sec, key, v) in expected {
+            prop_assert!(
+                cfg.get(&sec, &key).and_then(|x| x.as_i64()) == Some(v),
+                "lost {sec}.{key}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_relative_error_factored_matches_explicit() {
+    forall("factored rel-err oracle", 25, |g| {
+        let m = g.usize_in(2, 30);
+        let n = g.usize_in(2, 30);
+        let k = g.usize_in(1, 6);
+        let x = g.mat(m, n);
+        let w = g.mat(m, k);
+        let h = g.mat(k, n);
+        let fast = norms::relative_error(&x, &w, &h);
+        let slow = norms::relative_error_explicit(&x, &w, &h);
+        prop_assert!((fast - slow).abs() < 1e-8, "fast {fast} slow {slow}");
+        Ok(())
+    });
+}
