@@ -1,57 +1,140 @@
-//! Perf P2 — GEMM microbenchmarks: the HALS hot-path products vs a naive
-//! triple loop, plus effective GFLOP/s (roofline context for §Perf).
+//! Perf P2 — GEMM microbenchmarks on the HALS hot-path shapes.
 //!
-//! Set `RANDNMF_THREADS` to sweep thread counts.
+//! Times every packed kernel (`matmul`, `at_b`, `a_bt`, `gram`, `gram_t`)
+//! on the `2000×500, k ∈ {16, 64}` shapes of the perf acceptance
+//! criterion, plus the seed's unpacked register-blocked kernel
+//! ([`gemm::matmul_unpacked`]) as the speedup baseline and a naive-slice
+//! contrast. Results go to the usual CSV *and* to a machine-readable
+//! `BENCH_gemm.json` (GFLOP/s per kernel/shape at the measured thread
+//! count) so future PRs can track the perf trajectory.
+//!
+//! Set `RANDNMF_THREADS` to sweep thread counts (1 for the single-thread
+//! headline number) and `RANDNMF_BENCH_SCALE` to shrink the shapes.
 
 use randnmf::bench::{banner, bench_scale, write_csv, Bencher};
 use randnmf::coordinator::metrics::Table;
 use randnmf::linalg::gemm;
+use randnmf::linalg::workspace::Workspace;
 use randnmf::prelude::*;
 
+struct Row {
+    kernel: &'static str,
+    m: usize,
+    n: usize,
+    k: usize,
+    median_s: f64,
+    gflops: f64,
+}
+
 fn main() {
-    banner("Perf P2", "GEMM kernels (HALS hot path)");
-    let s = bench_scale(0.5);
-    let m = ((4_000.0 * s) as usize).max(256);
-    let n = ((2_000.0 * s) as usize).max(128);
-    let k = 32usize;
+    banner("Perf P2", "GEMM kernels (HALS hot path, packed vs unpacked)");
+    let s = bench_scale(1.0);
+    let m = ((2_000.0 * s) as usize).max(64);
+    let n = ((500.0 * s) as usize).max(32);
     let mut rng = Pcg64::seed_from_u64(0);
-    let x = rng.uniform_mat(m, n);
-    let ht = rng.uniform_mat(n, k);
-    let w = rng.uniform_mat(m, k);
+    let x = rng.uniform_mat(m, n); // data matrix X
 
     let bencher = Bencher::new(1, 5);
     let mut table = Table::new(&["Kernel", "Shape", "Median (ms)", "GFLOP/s"]);
-    let mut rows = Vec::new();
-    let mut push = |name: &str, shape: String, secs: f64, flops: f64| {
-        let gf = flops / secs / 1e9;
-        table.row(&[name.into(), shape.clone(), format!("{:.1}", secs * 1e3), format!("{gf:.2}")]);
-        rows.push(format!("{name},{shape},{secs:.6},{gf:.3}"));
-    };
+    let mut rows: Vec<Row> = Vec::new();
 
-    let st = bencher.time(|| gemm::matmul(&x, &ht)); // X·Ht : m×n×k
-    push("matmul (X*Ht)", format!("{m}x{n}x{k}"), st.median_s, 2.0 * (m * n * k) as f64);
+    for k in [16usize, 64] {
+        let ht = rng.uniform_mat(n, k); // Ht : n×k
+        let w = rng.uniform_mat(m, k); // W : m×k
+        let h = ht.transpose(); // H : k×n
+        let mnk = 2.0 * (m * n * k) as f64;
 
-    let st = bencher.time(|| gemm::at_b(&x, &w)); // XᵀW : n×m×k
-    push("at_b (Xt*W)", format!("{n}x{m}x{k}"), st.median_s, 2.0 * (m * n * k) as f64);
+        let mut push = |rows: &mut Vec<Row>, kernel: &'static str, flops: f64, med: f64| {
+            rows.push(Row { kernel, m, n, k, median_s: med, gflops: flops / med / 1e9 });
+        };
 
-    let st = bencher.time(|| gemm::gram(&ht)); // HtᵀHt
-    push("gram (Ht)", format!("{k}x{n}x{k}"), st.median_s, (n * k * k) as f64);
+        let st = bencher.time(|| gemm::matmul(&x, &ht)); // X·Ht : m×k
+        push(&mut rows, "matmul_packed", mnk, st.median_s);
 
-    let st = bencher.time(|| gemm::a_bt(&w, &ht)); // W·Htᵀ (m×n)
-    push("a_bt (W*Ht^T)", format!("{m}x{k}x{n}"), st.median_s, 2.0 * (m * n * k) as f64);
+        // Zero-allocation steady-state path (warm Workspace + caller buffer).
+        let mut ws = Workspace::new();
+        let mut c = Mat::zeros(m, k);
+        gemm::matmul_into(&x, &ht, &mut c, &mut ws); // warm the pool
+        let st = bencher.time(|| {
+            gemm::matmul_into(&x, &ht, &mut c, &mut ws);
+            c.get(0, 0) // non-ZST return for the keep() sink
+        });
+        push(&mut rows, "matmul_into_warm", mnk, st.median_s);
 
-    // Naive baseline on a smaller slice for contrast.
-    let xs = x.row_block(0, (m / 8).max(16));
-    let st = bencher.time(|| gemm::matmul_naive(&xs, &ht));
-    push(
-        "matmul_naive (1/8 rows)",
-        format!("{}x{n}x{k}", xs.rows()),
-        st.median_s,
-        2.0 * (xs.rows() * n * k) as f64,
-    );
+        let st = bencher.time(|| gemm::matmul_unpacked(&x, &ht)); // seed baseline
+        push(&mut rows, "matmul_unpacked", mnk, st.median_s);
 
+        let st = bencher.time(|| gemm::at_b(&x, &w)); // XᵀW : n×k
+        push(&mut rows, "at_b", mnk, st.median_s);
+
+        let st = bencher.time(|| gemm::a_bt(&w, &ht)); // W·Htᵀ : m×n
+        push(&mut rows, "a_bt", mnk, st.median_s);
+
+        let st = bencher.time(|| gemm::gram(&ht)); // HtᵀHt : k×k
+        push(&mut rows, "gram", 2.0 * (n * k * k) as f64, st.median_s);
+
+        let st = bencher.time(|| gemm::gram_t(&h)); // HHᵀ : k×k
+        push(&mut rows, "gram_t", 2.0 * (n * k * k) as f64, st.median_s);
+
+        // Naive baseline on a small slice for roofline contrast.
+        let xs = x.row_block(0, (m / 8).max(16));
+        let st = bencher.time(|| gemm::matmul_naive(&xs, &ht));
+        push(&mut rows, "matmul_naive_slice", 2.0 * (xs.rows() * n * k) as f64, st.median_s);
+    }
+
+    let mut csv = Vec::new();
+    for r in &rows {
+        table.row(&[
+            r.kernel.into(),
+            format!("{}x{}x{}", r.m, r.n, r.k),
+            format!("{:.2}", r.median_s * 1e3),
+            format!("{:.2}", r.gflops),
+        ]);
+        csv.push(format!(
+            "{},{}x{}x{},{:.6},{:.3}",
+            r.kernel, r.m, r.n, r.k, r.median_s, r.gflops
+        ));
+    }
     print!("{}", table.render());
+
+    // Packed-vs-unpacked headline (the PR's ≥2× acceptance criterion).
+    for k in [16usize, 64] {
+        let packed = rows.iter().find(|r| r.kernel == "matmul_packed" && r.k == k);
+        let unpacked = rows.iter().find(|r| r.kernel == "matmul_unpacked" && r.k == k);
+        if let (Some(p), Some(u)) = (packed, unpacked) {
+            println!(
+                "speedup packed/unpacked @ k={k}: {:.2}x ({:.2} -> {:.2} GFLOP/s)",
+                u.median_s / p.median_s,
+                u.gflops,
+                p.gflops
+            );
+        }
+    }
     println!("threads = {}", gemm::num_threads());
-    let p = write_csv("perf_gemm.csv", "kernel,shape,median_s,gflops", &rows);
+
+    let p = write_csv("perf_gemm.csv", "kernel,shape,median_s,gflops", &csv);
     println!("csv: {}", p.display());
+
+    // Machine-readable trajectory record.
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"gemm\",\n");
+    json.push_str(&format!("  \"threads\": {},\n", gemm::num_threads()));
+    json.push_str(&format!("  \"scale\": {s},\n"));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
+             \"median_s\": {:.6}, \"gflops\": {:.3}}}{}\n",
+            r.kernel,
+            r.m,
+            r.n,
+            r.k,
+            r.median_s,
+            r.gflops,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_gemm.json", &json).expect("writing BENCH_gemm.json");
+    println!("json: BENCH_gemm.json");
 }

@@ -48,6 +48,7 @@ pub mod prelude {
     pub use crate::data::synthetic;
     pub use crate::linalg::mat::Mat;
     pub use crate::linalg::rng::Pcg64;
+    pub use crate::linalg::workspace::Workspace;
     pub use crate::nmf::hals::Hals;
     pub use crate::nmf::model::{NmfFit, NmfModel};
     pub use crate::nmf::options::{Init, NmfOptions, Regularization, UpdateOrder};

@@ -1,28 +1,66 @@
-//! Matrix multiplication kernels.
+//! Packed, cache-blocked matrix multiplication kernels.
 //!
 //! HALS spends essentially all of its per-iteration time in four products
 //! (paper Algorithm 1, lines 12–13 and 17–18): `R = BᵀW̃`, `S = W̃ᵀW̃`,
 //! `T = BHᵀ`, `V = HHᵀ`, plus the big `XHᵀ`/`XᵀW` products of the
-//! deterministic variant. This module provides cache-aware, multithreaded
-//! implementations of each product shape so that no explicit transpose
-//! materialization is needed on the hot path:
+//! deterministic variant. This module implements all of them on one
+//! BLIS-style packed engine (Goto & van de Geijn 2008):
 //!
-//! * [`matmul`] — `C = A·B`
-//! * [`at_b`] — `C = Aᵀ·B` (both operands walked row-major)
-//! * [`a_bt`] — `C = A·Bᵀ` (pure rows-dot-rows)
-//! * [`gram`] — `G = AᵀA` (symmetric rank-k update)
-//! * [`gram_t`] — `G = AAᵀ`
+//! * **Cache tiling** — the iteration space is blocked `NC → KC → MC`
+//!   so the packed B panel (`KC×NC`) stays in L3/L2 and the packed A
+//!   block (`MC×KC`) stays in L2 across the macro-kernel sweep.
+//! * **Panel packing** — A is repacked into `MR`-row panels and B into
+//!   `NR`-column panels, both contiguous in the order the micro-kernel
+//!   consumes them, so the innermost loop does only unit-stride loads.
+//!   Packing also absorbs transposition: `AᵀB`, `ABᵀ`, `AᵀA` and `AAᵀ`
+//!   all run on the same engine by packing through a transposed view —
+//!   no operand is ever materialized transposed.
+//! * **Register micro-kernel** — an `MR×NR = 4×8` accumulator tile held
+//!   in registers; the `k`-loop body is fully unrolled over the tile and
+//!   written to auto-vectorize (FMA with `-C target-cpu=native`, see
+//!   `.cargo/config.toml`).
+//! * **Caller-owned outputs** — every kernel has an `_into` variant
+//!   (`matmul_into`, `at_b_into`, `a_bt_into`, `gram_into`,
+//!   `gram_t_into`) writing into a caller-provided [`Mat`], with all
+//!   scratch (pack panels, per-thread partials) drawn from a
+//!   [`Workspace`] pool, so single-threaded steady-state solver
+//!   iterations allocate nothing (the threaded path still pays per-call
+//!   thread-spawn state). The classic allocating wrappers remain for
+//!   cold paths.
 //!
-//! Threading uses `std::thread::scope` over disjoint output chunks; the
-//! thread count defaults to the machine parallelism and can be pinned with
-//! the `RANDNMF_THREADS` environment variable (used by the thread-scaling
-//! bench `bench_perf_gemm`).
+//! Threading uses `std::thread::scope`: output-row chunks for
+//! `matmul`/`a_bt` (disjoint writes) and inner-dimension chunks with a
+//! deterministic partial-sum reduction for `at_b`/`gram`/`gram_t` (whose
+//! outputs are small `k×n` / `k×k` panels). All kernels gate threading on
+//! the same `2·m·n·k` flop estimate. The thread count defaults to the
+//! machine parallelism and can be pinned with the `RANDNMF_THREADS`
+//! environment variable (used by the thread-scaling bench
+//! `bench_perf_gemm`, which also records packed-vs-unpacked GFLOP/s).
+//!
+//! Results are deterministic for a fixed thread count: chunk boundaries
+//! and reduction order depend only on shapes, and the Gram kernels are
+//! exactly symmetric (identical accumulation order for `G[i,j]` and
+//! `G[j,i]`, plus an explicit mirror).
 
 use super::mat::Mat;
+use super::workspace::Workspace;
 use std::sync::OnceLock;
 
-/// Work threshold (flops) below which we stay single-threaded.
+/// Work threshold (flops, as `2·m·n·k`) below which we stay
+/// single-threaded. Every kernel uses this same estimate so the
+/// parallelism threshold means the same thing everywhere.
 const PAR_THRESHOLD: usize = 1 << 20;
+
+/// Micro-kernel tile height (rows of C per register tile).
+const MR: usize = 4;
+/// Micro-kernel tile width (cols of C per register tile).
+const NR: usize = 8;
+/// Row block: `MC×KC` packed A panel sized for L2 (64·256·8B = 128 KiB).
+const MC: usize = 64;
+/// Inner (depth) block: `KC×NC` packed B panel sized for L2/L3.
+const KC: usize = 256;
+/// Column block (512·256·8B = 1 MiB packed B panel).
+const NC: usize = 512;
 
 /// Number of worker threads used by the GEMM kernels.
 pub fn num_threads() -> usize {
@@ -39,7 +77,7 @@ pub fn num_threads() -> usize {
     })
 }
 
-/// Split `rows` output rows into at most `num_threads()` contiguous chunks.
+/// Split `rows` of work into at most `num_threads()` contiguous chunks.
 fn row_chunks(rows: usize, flops: usize) -> usize {
     if flops < PAR_THRESHOLD || rows < 2 {
         1
@@ -47,6 +85,359 @@ fn row_chunks(rows: usize, flops: usize) -> usize {
         num_threads().min(rows)
     }
 }
+
+/// Flop estimate `2·m·n·k` shared by every kernel's threading gate.
+#[inline]
+fn flop_estimate(m: usize, n: usize, k: usize) -> usize {
+    2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k)
+}
+
+/// A logical operand view: the packing routines read through this, so the
+/// packed engine multiplies transposed operands without materializing the
+/// transpose.
+#[derive(Clone, Copy)]
+enum Op<'a> {
+    /// Logical element `(i, j)` is `m[(i, j)]`.
+    Normal(&'a Mat),
+    /// Logical element `(i, j)` is `m[(j, i)]`.
+    Trans(&'a Mat),
+}
+
+impl Op<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f64 {
+        match self {
+            Op::Normal(m) => m.get(i, j),
+            Op::Trans(m) => m.get(j, i),
+        }
+    }
+}
+
+/// The register micro-kernel: `acc[MR×NR] += Apanel · Bpanel` for one
+/// packed A panel (`kc×MR`, row-index fastest) and one packed B panel
+/// (`kc×NR`, col-index fastest). `chunks_exact` gives the optimizer
+/// compile-time-known slice lengths, so the tile loops fully unroll and
+/// vectorize.
+#[inline(always)]
+fn micro_kernel(apanel: &[f64], bpanel: &[f64], acc: &mut [f64; MR * NR]) {
+    for (ap, bp) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for r in 0..MR {
+            let av = ap[r];
+            let arow = &mut acc[r * NR..(r + 1) * NR];
+            for (j, cv) in arow.iter_mut().enumerate() {
+                *cv += av * bp[j];
+            }
+        }
+    }
+}
+
+/// Packed blocked core: `C[0..(i1-i0), 0..n] += A[i0..i1, l0..l1] ·
+/// B[l0..l1, 0..n]` where `A`/`B` are *logical* operands read through
+/// [`Op`] and `c` holds rows `[i0, i1)` of the full row-major output.
+///
+/// The caller zeroes `c` before the first call; this routine only
+/// accumulates, which is what makes both the `KC` depth blocking and the
+/// inner-dimension-split threading correct.
+fn packed_gemm(
+    a: Op<'_>,
+    b: Op<'_>,
+    i0: usize,
+    i1: usize,
+    n: usize,
+    l0: usize,
+    l1: usize,
+    c: &mut [f64],
+    pa: &mut Vec<f64>,
+    pb: &mut Vec<f64>,
+) {
+    let mrows = i1 - i0;
+    if mrows == 0 || n == 0 || l1 <= l0 {
+        return;
+    }
+    debug_assert_eq!(c.len(), mrows * n);
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let n_panels = nc.div_ceil(NR);
+        let mut pc = l0;
+        while pc < l1 {
+            let kc = KC.min(l1 - pc);
+            // Pack B[pc..pc+kc, jc..jc+nc] into `n_panels` kc×NR panels,
+            // zero-padding the ragged last panel.
+            pb.resize(n_panels * kc * NR, 0.0);
+            for jp in 0..n_panels {
+                let jbase = jc + jp * NR;
+                let width = NR.min(jc + nc - jbase);
+                let panel = &mut pb[jp * kc * NR..(jp + 1) * kc * NR];
+                for p in 0..kc {
+                    let row = &mut panel[p * NR..(p + 1) * NR];
+                    for (j, slot) in row.iter_mut().enumerate() {
+                        *slot = if j < width { b.at(pc + p, jbase + j) } else { 0.0 };
+                    }
+                }
+            }
+            let mut ic = 0;
+            while ic < mrows {
+                let mc = MC.min(mrows - ic);
+                let m_panels = mc.div_ceil(MR);
+                // Pack A[i0+ic .. i0+ic+mc, pc..pc+kc] into kc×MR panels.
+                pa.resize(m_panels * kc * MR, 0.0);
+                for ip in 0..m_panels {
+                    let ibase = ic + ip * MR;
+                    let height = MR.min(ic + mc - ibase);
+                    let panel = &mut pa[ip * kc * MR..(ip + 1) * kc * MR];
+                    for p in 0..kc {
+                        let row = &mut panel[p * MR..(p + 1) * MR];
+                        for (r, slot) in row.iter_mut().enumerate() {
+                            *slot =
+                                if r < height { a.at(i0 + ibase + r, pc + p) } else { 0.0 };
+                        }
+                    }
+                }
+                // Macro-kernel: every (MR×NR) tile of this (mc×nc) block.
+                for jp in 0..n_panels {
+                    let jbase = jc + jp * NR;
+                    let nr_eff = NR.min(jc + nc - jbase);
+                    let bpanel = &pb[jp * kc * NR..(jp + 1) * kc * NR];
+                    for ip in 0..m_panels {
+                        let ibase = ic + ip * MR;
+                        let mr_eff = MR.min(ic + mc - ibase);
+                        let apanel = &pa[ip * kc * MR..(ip + 1) * kc * MR];
+                        let mut acc = [0.0f64; MR * NR];
+                        micro_kernel(apanel, bpanel, &mut acc);
+                        for r in 0..mr_eff {
+                            let off = (ibase + r) * n + jbase;
+                            let crow = &mut c[off..off + nr_eff];
+                            for (j, cv) in crow.iter_mut().enumerate() {
+                                *cv += acc[r * NR + j];
+                            }
+                        }
+                    }
+                }
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Drive the packed engine with **output-row** threading: each worker owns
+/// a disjoint row chunk of `C` and runs the full depth range. Used when
+/// the output is tall (`matmul`, `a_bt`).
+fn driver_row_split(
+    a: Op<'_>,
+    b: Op<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut Mat,
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(c.shape(), (m, n));
+    c.as_mut_slice().fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let nchunks = row_chunks(m, flop_estimate(m, n, k));
+    if nchunks <= 1 {
+        let mut pa = ws.acquire_vec(0);
+        let mut pb = ws.acquire_vec(0);
+        packed_gemm(a, b, 0, m, n, 0, k, c.as_mut_slice(), &mut pa, &mut pb);
+        ws.release_vec(pa);
+        ws.release_vec(pb);
+        return;
+    }
+    let chunk = m.div_ceil(nchunks);
+    let nworkers = m.div_ceil(chunk);
+    let mut bufs: Vec<(Vec<f64>, Vec<f64>)> =
+        (0..nworkers).map(|_| (ws.acquire_vec(0), ws.acquire_vec(0))).collect();
+    let cdata = c.as_mut_slice();
+    let returned: Vec<(Vec<f64>, Vec<f64>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (t, (cslice, (mut pa, mut pb))) in
+            cdata.chunks_mut(chunk * n).zip(bufs.drain(..)).enumerate()
+        {
+            let i0 = t * chunk;
+            let i1 = i0 + cslice.len() / n;
+            handles.push(s.spawn(move || {
+                packed_gemm(a, b, i0, i1, n, 0, k, cslice, &mut pa, &mut pb);
+                (pa, pb)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
+    });
+    for (pa, pb) in returned {
+        ws.release_vec(pa);
+        ws.release_vec(pb);
+    }
+}
+
+/// Drive the packed engine with **inner-dimension** threading: workers
+/// compute partial products over disjoint depth ranges into pooled
+/// partial buffers, reduced in deterministic worker order. Used when the
+/// output is a small panel but the depth is large (`at_b`, `gram`,
+/// `gram_t`).
+fn driver_inner_split(
+    a: Op<'_>,
+    b: Op<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut Mat,
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(c.shape(), (m, n));
+    c.as_mut_slice().fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let nchunks = row_chunks(k, flop_estimate(m, n, k));
+    if nchunks <= 1 {
+        let mut pa = ws.acquire_vec(0);
+        let mut pb = ws.acquire_vec(0);
+        packed_gemm(a, b, 0, m, n, 0, k, c.as_mut_slice(), &mut pa, &mut pb);
+        ws.release_vec(pa);
+        ws.release_vec(pb);
+        return;
+    }
+    let chunk = k.div_ceil(nchunks);
+    let nworkers = k.div_ceil(chunk);
+    let mut bufs: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = (0..nworkers)
+        .map(|_| (ws.acquire_vec(m * n), ws.acquire_vec(0), ws.acquire_vec(0)))
+        .collect();
+    let returned: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (t, (mut part, mut pa, mut pb)) in bufs.drain(..).enumerate() {
+            let l0 = t * chunk;
+            let l1 = (l0 + chunk).min(k);
+            handles.push(s.spawn(move || {
+                part.fill(0.0);
+                packed_gemm(a, b, 0, m, n, l0, l1, &mut part, &mut pa, &mut pb);
+                (part, pa, pb)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
+    });
+    let cs = c.as_mut_slice();
+    for (part, pa, pb) in returned {
+        for (cv, pv) in cs.iter_mut().zip(part.iter()) {
+            *cv += *pv;
+        }
+        ws.release_vec(part);
+        ws.release_vec(pa);
+        ws.release_vec(pb);
+    }
+}
+
+/// Copy the strict upper triangle onto the lower one (Gram outputs).
+fn mirror_upper(g: &mut Mat) {
+    let k = g.rows();
+    debug_assert_eq!(g.cols(), k);
+    for i in 0..k {
+        for j in 0..i {
+            let v = g.get(j, i);
+            g.set(i, j, v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `_into` kernels: caller-owned outputs, Workspace-pooled scratch.
+// ---------------------------------------------------------------------------
+
+/// `C = A·B` into `c` for `A (m×k)`, `B (k×n)`, `c (m×n)`.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
+    let (m, k) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "matmul: inner dims {k} != {kb}");
+    assert_eq!(c.shape(), (m, n), "matmul_into: output must be {m}x{n}");
+    driver_row_split(Op::Normal(a), Op::Normal(b), m, n, k, c, ws);
+}
+
+/// `C = Aᵀ·B` into `c` for `A (m×k)`, `B (m×n)`, `c (k×n)`.
+pub fn at_b_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
+    let (m, k) = a.shape();
+    let (mb, n) = b.shape();
+    assert_eq!(m, mb, "at_b: outer dims {m} != {mb}");
+    assert_eq!(c.shape(), (k, n), "at_b_into: output must be {k}x{n}");
+    driver_inner_split(Op::Trans(a), Op::Normal(b), k, n, m, c, ws);
+}
+
+/// `C = A·Bᵀ` into `c` for `A (m×k)`, `B (n×k)`, `c (m×n)`.
+pub fn a_bt_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
+    let (m, k) = a.shape();
+    let (n, kb) = b.shape();
+    assert_eq!(k, kb, "a_bt: inner dims {k} != {kb}");
+    assert_eq!(c.shape(), (m, n), "a_bt_into: output must be {m}x{n}");
+    driver_row_split(Op::Normal(a), Op::Trans(b), m, n, k, c, ws);
+}
+
+/// Gram matrix `G = AᵀA` into `g` for `A (m×k)`, `g (k×k)`. Exactly
+/// symmetric by construction.
+///
+/// Runs the general packed engine over the full `k×k` output and then
+/// mirrors (2× the flops of a triangle-only update, but on the packed
+/// vectorized path; `k ≪ m, n` keeps this term a small fraction of an
+/// iteration — a triangle-aware macro-kernel is a noted follow-up).
+pub fn gram_into(a: &Mat, g: &mut Mat, ws: &mut Workspace) {
+    let (m, k) = a.shape();
+    assert_eq!(g.shape(), (k, k), "gram_into: output must be {k}x{k}");
+    driver_inner_split(Op::Trans(a), Op::Normal(a), k, k, m, g, ws);
+    mirror_upper(g);
+}
+
+/// Gram matrix `G = AAᵀ` into `g` for `A (k×n)`, `g (k×k)`. Parallel over
+/// the (large) inner dimension `n`, like the other Gram kernel.
+pub fn gram_t_into(a: &Mat, g: &mut Mat, ws: &mut Workspace) {
+    let (k, n) = a.shape();
+    assert_eq!(g.shape(), (k, k), "gram_t_into: output must be {k}x{k}");
+    driver_inner_split(Op::Normal(a), Op::Trans(a), k, k, n, g, ws);
+    mirror_upper(g);
+}
+
+// ---------------------------------------------------------------------------
+// Allocating wrappers (cold paths and call-site compatibility).
+// ---------------------------------------------------------------------------
+
+/// `C = A·B` for `A (m×k)`, `B (k×n)`.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c, &mut Workspace::new());
+    c
+}
+
+/// `C = Aᵀ·B` for `A (m×k)`, `B (m×n)` → `C (k×n)`.
+pub fn at_b(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    at_b_into(a, b, &mut c, &mut Workspace::new());
+    c
+}
+
+/// `C = A·Bᵀ` for `A (m×k)`, `B (n×k)` → `C (m×n)`.
+pub fn a_bt(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    a_bt_into(a, b, &mut c, &mut Workspace::new());
+    c
+}
+
+/// Symmetric Gram matrix `G = AᵀA` for `A (m×k)` → `G (k×k)`.
+pub fn gram(a: &Mat) -> Mat {
+    let mut g = Mat::zeros(a.cols(), a.cols());
+    gram_into(a, &mut g, &mut Workspace::new());
+    g
+}
+
+/// `G = AAᵀ` for `A (k×n)` → `G (k×k)`.
+pub fn gram_t(a: &Mat) -> Mat {
+    let mut g = Mat::zeros(a.rows(), a.rows());
+    gram_t_into(a, &mut g, &mut Workspace::new());
+    g
+}
+
+// ---------------------------------------------------------------------------
+// Vector kernels and reference implementations.
+// ---------------------------------------------------------------------------
 
 #[inline(always)]
 fn saxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
@@ -77,19 +468,50 @@ fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// `C = A·B` for `A (m×k)`, `B (k×n)`.
-///
-/// Row-major `ikj` schedule: the inner loop streams a row of `B` into a row
-/// of `C`, so every access is unit-stride.
-pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+/// Matrix–vector product `y = A·x`.
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// Matrix–vector product into a caller-owned buffer (`y.len() == a.rows()`).
+pub fn matvec_into(a: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = dot(a.row(i), x);
+    }
+}
+
+/// Transposed matrix–vector product `y = Aᵀ·x`.
+pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; a.cols()];
+    matvec_t_into(a, x, &mut y);
+    y
+}
+
+/// Transposed matrix–vector product into a caller-owned buffer
+/// (`y.len() == a.cols()`).
+pub fn matvec_t_into(a: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.rows(), x.len());
+    assert_eq!(a.cols(), y.len());
+    y.fill(0.0);
+    for i in 0..a.rows() {
+        saxpy(x[i], a.row(i), y);
+    }
+}
+
+/// The seed's register-blocked (but unpacked, allocation-per-call) kernel,
+/// kept verbatim as the measured baseline for `bench_perf_gemm`'s
+/// packed-vs-unpacked speedup headline.
+pub fn matmul_unpacked(a: &Mat, b: &Mat) -> Mat {
     let (m, k) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "matmul: inner dims {k} != {kb}");
     let mut c = Mat::zeros(m, n);
-    let flops = 2 * m * n * k;
-    let nchunks = row_chunks(m, flops);
+    let nchunks = row_chunks(m, flop_estimate(m, n, k));
     if nchunks <= 1 {
-        matmul_rows(a, b, c.as_mut_slice(), 0, m);
+        unpacked_rows(a, b, c.as_mut_slice(), 0, m);
         return c;
     }
     let chunk = m.div_ceil(nchunks);
@@ -98,25 +520,17 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
         for (t, cslice) in cdata.chunks_mut(chunk * n).enumerate() {
             let i0 = t * chunk;
             let i1 = (i0 + cslice.len() / n).min(m);
-            s.spawn(move || matmul_rows(a, b, cslice, i0, i1));
+            s.spawn(move || unpacked_rows(a, b, cslice, i0, i1));
         }
     });
     c
 }
 
-/// Compute rows `[i0, i1)` of `C = A·B` into `cslice` (len `(i1-i0)*n`).
-///
-/// The inner loop is 4-way unrolled over `l` so each pass over a `C` row
-/// performs four FMAs per load/store pair instead of one — §Perf measured
-/// the full sequence at ~2× over the plain saxpy schedule (7.3 → 14.3 GFLOP/s
-/// single-thread).
-fn matmul_rows(a: &Mat, b: &Mat, cslice: &mut [f64], i0: usize, i1: usize) {
+/// Rows `[i0, i1)` of `C = A·B` with a 2×4 register block, no packing.
+fn unpacked_rows(a: &Mat, b: &Mat, cslice: &mut [f64], i0: usize, i1: usize) {
     let n = b.cols();
     let k = a.cols();
     let mut i = i0;
-    // 2×4 register block: two C rows share each pass over four B rows,
-    // so every B load feeds two FMAs and every C element sees four FMAs
-    // per load/store pair.
     while i + 2 <= i1 {
         let (head, tail) = cslice[(i - i0) * n..].split_at_mut(n);
         let crow0 = head;
@@ -171,234 +585,6 @@ fn matmul_rows(a: &Mat, b: &Mat, cslice: &mut [f64], i0: usize, i1: usize) {
     }
 }
 
-/// `C = Aᵀ·B` for `A (m×k)`, `B (m×n)` → `C (k×n)`.
-///
-/// Streams both operands row-major: `C += A[i,:]ᵀ ⊗ B[i,:]`. Threads each
-/// accumulate a private `k×n` buffer over a slice of `i` and the buffers are
-/// reduced at the end (k and n are small on the HALS hot path, so the
-/// per-thread buffers are cheap).
-pub fn at_b(a: &Mat, b: &Mat) -> Mat {
-    let (m, k) = a.shape();
-    let (mb, n) = b.shape();
-    assert_eq!(m, mb, "at_b: outer dims {m} != {mb}");
-    let flops = 2 * m * n * k;
-    let nchunks = row_chunks(m, flops);
-    if nchunks <= 1 {
-        let mut c = Mat::zeros(k, n);
-        at_b_range(a, b, &mut c, 0, m);
-        return c;
-    }
-    let chunk = m.div_ceil(nchunks);
-    let mut partials: Vec<Mat> = Vec::new();
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        let mut i0 = 0;
-        while i0 < m {
-            let i1 = (i0 + chunk).min(m);
-            handles.push(s.spawn(move || {
-                let mut c = Mat::zeros(k, n);
-                at_b_range(a, b, &mut c, i0, i1);
-                c
-            }));
-            i0 = i1;
-        }
-        for h in handles {
-            partials.push(h.join().expect("at_b worker panicked"));
-        }
-    });
-    let mut c = Mat::zeros(k, n);
-    for p in &partials {
-        c.axpy(1.0, p);
-    }
-    c
-}
-
-fn at_b_range(a: &Mat, b: &Mat, c: &mut Mat, i0: usize, i1: usize) {
-    // 4-way unrolled over i: each pass over a C row does four FMAs per
-    // load/store pair (same register-blocking idea as `matmul_rows`).
-    let k = a.cols();
-    let mut i = i0;
-    while i + 4 <= i1 {
-        let a0 = a.row(i);
-        let a1 = a.row(i + 1);
-        let a2 = a.row(i + 2);
-        let a3 = a.row(i + 3);
-        let b0 = b.row(i);
-        let b1 = b.row(i + 1);
-        let b2 = b.row(i + 2);
-        let b3 = b.row(i + 3);
-        // Work around aliasing: rows of C are disjoint per p.
-        for p in 0..k {
-            let (w0, w1, w2, w3) = (a0[p], a1[p], a2[p], a3[p]);
-            let crow = c.row_mut(p);
-            for (jj, cv) in crow.iter_mut().enumerate() {
-                *cv += w0 * b0[jj] + w1 * b1[jj] + w2 * b2[jj] + w3 * b3[jj];
-            }
-        }
-        i += 4;
-    }
-    while i < i1 {
-        let arow = a.row(i);
-        let brow = b.row(i);
-        for p in 0..k {
-            let apv = arow[p];
-            if apv != 0.0 {
-                saxpy(apv, brow, c.row_mut(p));
-            }
-        }
-        i += 1;
-    }
-}
-
-/// `C = A·Bᵀ` for `A (m×k)`, `B (n×k)` → `C (m×n)`.
-///
-/// Every entry is a dot product of two contiguous rows; threads split the
-/// rows of `C`.
-pub fn a_bt(a: &Mat, b: &Mat) -> Mat {
-    let (m, k) = a.shape();
-    let (n, kb) = b.shape();
-    assert_eq!(k, kb, "a_bt: inner dims {k} != {kb}");
-    let mut c = Mat::zeros(m, n);
-    let flops = 2 * m * n * k;
-    let nchunks = row_chunks(m, flops);
-    if nchunks <= 1 {
-        a_bt_rows(a, b, c.as_mut_slice(), 0, m);
-        return c;
-    }
-    let chunk = m.div_ceil(nchunks);
-    let cdata = c.as_mut_slice();
-    std::thread::scope(|s| {
-        for (t, cslice) in cdata.chunks_mut(chunk * n).enumerate() {
-            let i0 = t * chunk;
-            let i1 = (i0 + cslice.len() / n).min(m);
-            s.spawn(move || a_bt_rows(a, b, cslice, i0, i1));
-        }
-    });
-    c
-}
-
-fn a_bt_rows(a: &Mat, b: &Mat, cslice: &mut [f64], i0: usize, i1: usize) {
-    // 4 simultaneous dot products share each load of `arow` (§Perf: this
-    // quadruples arithmetic intensity on the A operand).
-    let n = b.rows();
-    let k = a.cols();
-    for i in i0..i1 {
-        let arow = a.row(i);
-        let crow = &mut cslice[(i - i0) * n..(i - i0 + 1) * n];
-        let mut j = 0;
-        while j + 4 <= n {
-            let b0 = b.row(j);
-            let b1 = b.row(j + 1);
-            let b2 = b.row(j + 2);
-            let b3 = b.row(j + 3);
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-            for p in 0..k {
-                let av = arow[p];
-                s0 += av * b0[p];
-                s1 += av * b1[p];
-                s2 += av * b2[p];
-                s3 += av * b3[p];
-            }
-            crow[j] = s0;
-            crow[j + 1] = s1;
-            crow[j + 2] = s2;
-            crow[j + 3] = s3;
-            j += 4;
-        }
-        while j < n {
-            crow[j] = dot(arow, b.row(j));
-            j += 1;
-        }
-    }
-}
-
-/// Symmetric Gram matrix `G = AᵀA` for `A (m×k)` → `G (k×k)`.
-///
-/// Only the upper triangle is computed; the result is mirrored. This is the
-/// `S = W̃ᵀW̃` / `V = HHᵀ` (via [`gram_t`]) step of Algorithm 1.
-pub fn gram(a: &Mat) -> Mat {
-    let (m, k) = a.shape();
-    let flops = m * k * k;
-    let nchunks = row_chunks(m, flops);
-    let mut g = if nchunks <= 1 {
-        let mut g = Mat::zeros(k, k);
-        gram_range(a, &mut g, 0, m);
-        g
-    } else {
-        let chunk = m.div_ceil(nchunks);
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            let mut i0 = 0;
-            while i0 < m {
-                let i1 = (i0 + chunk).min(m);
-                handles.push(s.spawn(move || {
-                    let mut g = Mat::zeros(k, k);
-                    gram_range(a, &mut g, i0, i1);
-                    g
-                }));
-                i0 = i1;
-            }
-            let mut g = Mat::zeros(k, k);
-            for h in handles {
-                g.axpy(1.0, &h.join().expect("gram worker panicked"));
-            }
-            g
-        })
-    };
-    // Mirror upper triangle down.
-    for i in 0..k {
-        for j in 0..i {
-            let v = g.get(j, i);
-            g.set(i, j, v);
-        }
-    }
-    g
-}
-
-fn gram_range(a: &Mat, g: &mut Mat, i0: usize, i1: usize) {
-    let k = a.cols();
-    for i in i0..i1 {
-        let row = a.row(i);
-        for p in 0..k {
-            let v = row[p];
-            if v != 0.0 {
-                // upper triangle only
-                saxpy(v, &row[p..], &mut g.row_mut(p)[p..]);
-            }
-        }
-    }
-}
-
-/// `G = AAᵀ` for `A (k×n)` → `G (k×k)`; rows-dot-rows, symmetric.
-pub fn gram_t(a: &Mat) -> Mat {
-    let (k, _n) = a.shape();
-    let mut g = Mat::zeros(k, k);
-    for i in 0..k {
-        for j in i..k {
-            let v = dot(a.row(i), a.row(j));
-            g.set(i, j, v);
-            g.set(j, i, v);
-        }
-    }
-    g
-}
-
-/// Matrix–vector product `y = A·x`.
-pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
-    assert_eq!(a.cols(), x.len());
-    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
-}
-
-/// Transposed matrix–vector product `y = Aᵀ·x`.
-pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
-    assert_eq!(a.rows(), x.len());
-    let mut y = vec![0.0; a.cols()];
-    for i in 0..a.rows() {
-        saxpy(x[i], a.row(i), &mut y);
-    }
-    y
-}
-
 /// Reference O(mnk) triple-loop product — the oracle the property tests
 /// compare the blocked/threaded kernels against.
 pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
@@ -446,6 +632,25 @@ mod tests {
     }
 
     #[test]
+    fn matmul_matches_naive_across_block_edges() {
+        // Shapes straddling MR/NR/MC/KC/NC boundaries.
+        for (m, n, k, seed) in [
+            (MR, NR, KC, 10u64),
+            (MR + 1, NR + 1, KC + 1, 11),
+            (MC - 1, NC - 1, 3, 12),
+            (MC + MR - 1, NC + NR - 1, KC + 5, 13),
+            (2, 3, 1, 14),
+            (1, 1, 1, 15),
+        ] {
+            let a = random(m, k, seed);
+            let b = random(k, n, seed + 100);
+            let c = matmul(&a, &b);
+            let err = c.max_abs_diff(&matmul_naive(&a, &b));
+            assert!(err < 1e-9, "{m}x{n}x{k}: err={err}");
+        }
+    }
+
+    #[test]
     fn at_b_matches_explicit_transpose() {
         let a = random(300, 17, 5);
         let b = random(300, 23, 6);
@@ -478,6 +683,35 @@ mod tests {
         let g = gram_t(&a);
         let expect = matmul(&a, &a.transpose());
         assert!(g.max_abs_diff(&expect) < 1e-10);
+        assert!(g.max_abs_diff(&g.transpose()) == 0.0);
+    }
+
+    #[test]
+    fn gram_t_threaded_matches_naive() {
+        // Wide enough that the inner-split threading kicks in.
+        let a = random(9, 30_000, 16);
+        let g = gram_t(&a);
+        let expect = matmul_naive(&a, &a.transpose());
+        assert!(g.max_abs_diff(&expect) < 1e-7);
+    }
+
+    #[test]
+    fn into_kernels_reuse_workspace_bit_identically() {
+        let a = random(65, 33, 17);
+        let b = random(33, 41, 18);
+        let fresh = matmul(&a, &b);
+        let mut ws = Workspace::new();
+        let mut c = Mat::zeros(65, 41);
+        for _ in 0..3 {
+            matmul_into(&a, &b, &mut c, &mut ws);
+            assert_eq!(c, fresh, "workspace reuse must be bit-identical");
+        }
+        let mut g = Mat::zeros(33, 33);
+        let g_fresh = gram(&a);
+        for _ in 0..3 {
+            gram_into(&a, &mut g, &mut ws);
+            assert_eq!(g, g_fresh);
+        }
     }
 
     #[test]
@@ -516,6 +750,21 @@ mod tests {
         let b1 = random(1, 1, 14);
         let c = matmul(&a1, &b1);
         assert!((c.get(0, 0) - a1.get(0, 0) * b1.get(0, 0)).abs() < 1e-15);
+        // Zero inner dimension: well-defined all-zeros output.
+        let a0 = Mat::zeros(4, 0);
+        let b0 = Mat::zeros(0, 6);
+        let c0 = matmul(&a0, &b0);
+        assert_eq!(c0.shape(), (4, 6));
+        assert!(c0.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn matmul_unpacked_agrees_with_packed() {
+        let a = random(100, 37, 19);
+        let b = random(37, 55, 20);
+        let packed = matmul(&a, &b);
+        let unpacked = matmul_unpacked(&a, &b);
+        assert!(packed.max_abs_diff(&unpacked) < 1e-11);
     }
 
     #[test]

@@ -6,8 +6,11 @@
 //!
 //! * [`mat`] — a row-major `f64` matrix type with the slicing/views the
 //!   HALS coordinate sweeps require.
-//! * [`gemm`] — blocked, packed, multithreaded matrix multiplication and
-//!   its transpose variants (the per-iteration hot path of HALS).
+//! * [`gemm`] — packed, cache-blocked, multithreaded matrix multiplication
+//!   and its transpose variants (the per-iteration hot path of HALS), with
+//!   `_into` variants writing into caller-owned outputs.
+//! * [`workspace`] — the scratch-buffer pool behind the `_into` kernels
+//!   and the solvers' zero-allocation steady-state loops.
 //! * [`qr`] — economic Householder QR (the orthonormalization step of the
 //!   randomized range finder, Algorithm 2 of the paper).
 //! * [`svd`] — one-sided Jacobi SVD plus a randomized SVD built on QB
@@ -23,6 +26,8 @@ pub mod norms;
 pub mod qr;
 pub mod rng;
 pub mod svd;
+pub mod workspace;
 
 pub use mat::Mat;
 pub use rng::Pcg64;
+pub use workspace::Workspace;

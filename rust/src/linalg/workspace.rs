@@ -1,0 +1,145 @@
+//! Reusable scratch memory for the GEMM kernels and solver loops.
+//!
+//! Every HALS/rHALS/MU iteration needs the same set of temporaries: packed
+//! A/B panels inside the GEMM micro-kernel, per-thread partial outputs for
+//! the inner-dimension-split kernels, and the solver-level product matrices
+//! (`S`, `R`, `T`, `V`, ...). The seed implementation allocated all of them
+//! fresh on every call; a [`Workspace`] instead owns a small pool of
+//! buffers that are checked out, used, and returned, so steady-state
+//! iterations on the single-threaded path perform **zero heap
+//! allocations** (verified by `tests/test_zero_alloc.rs` with a counting
+//! global allocator under `RANDNMF_THREADS=1`; the threaded GEMM path
+//! still allocates per-call thread-spawn state and handle vectors).
+//!
+//! The pool hands out the *smallest* buffer whose capacity fits the
+//! request (best fit), or grows the largest one when nothing fits.
+//! Capacities only ever grow, so an iteration loop that issues the same
+//! request sequence every pass converges to a fixed buffer assignment
+//! after the first few iterations and never reallocates again.
+//!
+//! Checked-out buffers are plain `Vec<f64>` values (moved out of the
+//! pool), so multiple live buffers need no lifetime gymnastics; just
+//! [`Workspace::release_vec`] them when done. Contents of acquired
+//! buffers are **unspecified** — every consumer in this crate fully
+//! overwrites what it reads.
+
+/// A pool of reusable `f64` buffers. See the module docs.
+#[derive(Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f64>>,
+}
+
+impl Workspace {
+    /// An empty workspace. The first iterations of a solve grow it; after
+    /// that it is allocation-free.
+    pub const fn new() -> Self {
+        Workspace { pool: Vec::new() }
+    }
+
+    /// Number of buffers currently parked in the pool (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Check out a buffer of length `len` (contents unspecified).
+    pub fn acquire_vec(&mut self, len: usize) -> Vec<f64> {
+        // Best fit: the smallest pooled capacity that holds `len`.
+        let mut best: Option<usize> = None;
+        for (i, v) in self.pool.iter().enumerate() {
+            if v.capacity() >= len {
+                match best {
+                    Some(b) if self.pool[b].capacity() <= v.capacity() => {}
+                    _ => best = Some(i),
+                }
+            }
+        }
+        // Nothing fits: grow the largest (cheapest to bring up to size).
+        if best.is_none() {
+            for (i, v) in self.pool.iter().enumerate() {
+                match best {
+                    Some(b) if self.pool[b].capacity() >= v.capacity() => {}
+                    _ => best = Some(i),
+                }
+            }
+        }
+        let mut buf = match best {
+            Some(i) => self.pool.swap_remove(i),
+            None => Vec::new(),
+        };
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool (its capacity is kept for reuse).
+    pub fn release_vec(&mut self, v: Vec<f64>) {
+        self.pool.push(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_roundtrip() {
+        let mut ws = Workspace::new();
+        let v = ws.acquire_vec(100);
+        assert_eq!(v.len(), 100);
+        ws.release_vec(v);
+        assert_eq!(ws.pooled(), 1);
+        let v2 = ws.acquire_vec(50);
+        assert!(v2.capacity() >= 100, "should reuse the pooled buffer");
+        assert_eq!(v2.len(), 50);
+        ws.release_vec(v2);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate() {
+        let mut ws = Workspace::new();
+        let small = ws.acquire_vec(10);
+        let big = ws.acquire_vec(1000);
+        let small_cap = small.capacity();
+        ws.release_vec(big);
+        ws.release_vec(small);
+        let v = ws.acquire_vec(5);
+        assert_eq!(v.capacity(), small_cap, "best fit should pick the small buffer");
+        ws.release_vec(v);
+    }
+
+    #[test]
+    fn grows_largest_when_nothing_fits() {
+        let mut ws = Workspace::new();
+        let a = ws.acquire_vec(8);
+        let b = ws.acquire_vec(64);
+        ws.release_vec(a);
+        ws.release_vec(b);
+        let v = ws.acquire_vec(1 << 12);
+        assert!(v.capacity() >= 1 << 12);
+        ws.release_vec(v);
+        assert_eq!(ws.pooled(), 2);
+    }
+
+    #[test]
+    fn steady_state_no_capacity_growth() {
+        let mut ws = Workspace::new();
+        // Same request sequence repeatedly: after warmup, total pooled
+        // capacity must stay constant (the zero-alloc invariant's core).
+        for _ in 0..3 {
+            let a = ws.acquire_vec(128);
+            let b = ws.acquire_vec(32);
+            ws.release_vec(a);
+            ws.release_vec(b);
+        }
+        let caps: Vec<usize> = ws.pool.iter().map(|v| v.capacity()).collect();
+        for _ in 0..10 {
+            let a = ws.acquire_vec(128);
+            let b = ws.acquire_vec(32);
+            ws.release_vec(a);
+            ws.release_vec(b);
+        }
+        let caps_after: Vec<usize> = ws.pool.iter().map(|v| v.capacity()).collect();
+        let total: usize = caps.iter().sum();
+        let total_after: usize = caps_after.iter().sum();
+        assert_eq!(total, total_after, "steady state must not grow the pool");
+    }
+}

@@ -26,6 +26,7 @@ use anyhow::Result;
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::norms;
+use crate::linalg::workspace::Workspace;
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
 use crate::nmf::mu::mu_update;
@@ -69,19 +70,33 @@ impl CompressedMu {
         let mut trace = Vec::new();
         let mut iters = 0usize;
 
+        // Per-solve buffers: the iteration loop below never allocates.
+        let k = o.rank;
+        let l = left.q.cols();
+        let lr = right.q.cols();
+        let mut ws = Workspace::new();
+        let mut wt = Mat::zeros(l, k); // Q_LᵀW
+        let mut num_h = Mat::zeros(n, k); // B_LᵀW̃
+        let mut s = Mat::zeros(k, k); // W̃ᵀW̃
+        let mut denom_h = Mat::zeros(n, k);
+        let mut hrt = Mat::zeros(lr, k); // (H·Q_R)ᵀ
+        let mut num_w = Mat::zeros(m, k); // X_R·H̃ᵀ
+        let mut v = Mat::zeros(k, k); // H̃H̃ᵀ
+        let mut denom_w = Mat::zeros(m, k);
+
         for iter in 1..=o.max_iter {
             // --- H update, left-compressed ---
-            let wt = gemm::at_b(&left.q, &w); // l×k  Q_LᵀW
-            let num_h = gemm::at_b(&left.b, &wt); // n×k  B_LᵀW̃
-            let s = gemm::gram(&wt); // k×k  W̃ᵀW̃
-            let denom_h = gemm::matmul(&ht, &s); // n×k
+            gemm::at_b_into(&left.q, &w, &mut wt, &mut ws); // l×k  Q_LᵀW
+            gemm::at_b_into(&left.b, &wt, &mut num_h, &mut ws); // n×k  B_LᵀW̃
+            gemm::gram_into(&wt, &mut s, &mut ws); // k×k  W̃ᵀW̃
+            gemm::matmul_into(&ht, &s, &mut denom_h, &mut ws); // n×k
             mu_update(&mut ht, &num_h, &denom_h);
 
             // --- W update, right-compressed ---
-            let hrt = gemm::at_b(&right.q, &ht); // l×k  (H·Q_R)ᵀ
-            let num_w = gemm::matmul(&x_r, &hrt); // m×k  X_R·H̃ᵀ
-            let v = gemm::gram(&hrt); // k×k  H̃H̃ᵀ
-            let denom_w = gemm::matmul(&w, &v); // m×k
+            gemm::at_b_into(&right.q, &ht, &mut hrt, &mut ws); // l×k  (H·Q_R)ᵀ
+            gemm::matmul_into(&x_r, &hrt, &mut num_w, &mut ws); // m×k  X_R·H̃ᵀ
+            gemm::gram_into(&hrt, &mut v, &mut ws); // k×k  H̃H̃ᵀ
+            gemm::matmul_into(&w, &v, &mut denom_w, &mut ws); // m×k
             mu_update(&mut w, &num_w, &denom_w);
 
             iters = iter;

@@ -38,6 +38,7 @@ use anyhow::Result;
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::norms;
+use crate::linalg::workspace::Workspace;
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
 use crate::nmf::options::{NmfOptions, Regularization, UpdateOrder};
@@ -148,6 +149,12 @@ impl Hals {
     }
 
     /// Blocked-cyclic / shuffled path (Eq. 24): Gram-based sweeps.
+    ///
+    /// All per-iteration products are written into buffers allocated once
+    /// before the loop, with GEMM scratch drawn from a [`Workspace`], so
+    /// the steady-state iteration performs zero heap allocations on the
+    /// single-threaded path (verified by `tests/test_zero_alloc.rs` under
+    /// `RANDNMF_THREADS=1`; threaded GEMMs still allocate spawn state).
     fn fit_blocked(&self, x: &Mat) -> Result<NmfFit> {
         let o = &self.opts;
         let (m, n) = x.shape();
@@ -160,12 +167,25 @@ impl Hals {
         let want_pg = o.tol > 0.0 || o.trace_every > 0;
         let mut order = OrderState::new(k, o.update_order);
 
+        // Per-solve buffers: the iteration loop below never allocates.
+        let mut ws = Workspace::new();
+        let mut s = Mat::zeros(k, k); // WᵀW
+        let mut at = Mat::zeros(n, k); // XᵀW
+        let mut v = Mat::zeros(k, k); // HHᵀ
+        let mut t = Mat::zeros(m, k); // XHᵀ
+        let (mut gh, mut gw) = if want_pg {
+            (Mat::zeros(n, k), Mat::zeros(m, k))
+        } else {
+            (Mat::zeros(0, 0), Mat::zeros(0, 0))
+        };
+
         // Initial ∇ᴾ w.r.t. W needs V⁰ = HHᵀ and T⁰ = XHᵀ.
         let mut pgw_prev = if want_pg {
-            let v0 = gemm::gram(&ht);
-            let t0 = gemm::matmul(x, &ht);
-            let gw0 = gemm::matmul(&w, &v0).sub(&t0);
-            Some(stopping::projected_gradient_norm_sq(&w, &gw0))
+            gemm::gram_into(&ht, &mut v, &mut ws);
+            gemm::matmul_into(x, &ht, &mut t, &mut ws);
+            gemm::matmul_into(&w, &v, &mut gw, &mut ws);
+            gw.axpy(-1.0, &t); // ∇W = W·V − T
+            Some(stopping::projected_gradient_norm_sq(&w, &gw))
         } else {
             None
         };
@@ -177,13 +197,14 @@ impl Hals {
         let mut iters = 0usize;
 
         for iter in 1..=o.max_iter {
-            let s = gemm::gram(&w); // k×k  WᵀW
-            let at = gemm::at_b(x, &w); // n×k  XᵀW  (≙ (WᵀX)ᵀ)
+            gemm::gram_into(&w, &mut s, &mut ws); // k×k  WᵀW
+            gemm::at_b_into(x, &w, &mut at, &mut ws); // n×k  XᵀW  (≙ (WᵀX)ᵀ)
 
             // Diagnostics for the *previous* iterate (W, Ht) — both grams
             // are exact for it.
             if want_pg {
-                let gh = gemm::matmul(&ht, &s).sub(&at);
+                gemm::matmul_into(&ht, &s, &mut gh, &mut ws);
+                gh.axpy(-1.0, &at); // ∇H = Ht·S − At
                 let pgh = stopping::projected_gradient_norm_sq(&ht, &gh);
                 let pg = pgh + pgw_prev.take().unwrap_or(0.0);
                 let pg0v = *pg0.get_or_insert(pg);
@@ -206,13 +227,14 @@ impl Hals {
             let ord = order.next_order(&mut rng);
             sweep_factor(&mut ht, &at, &s, o.reg_h, ord, true);
 
-            let v = gemm::gram(&ht); // k×k  HHᵀ
-            let t = gemm::matmul(x, &ht); // m×k  XHᵀ
+            gemm::gram_into(&ht, &mut v, &mut ws); // k×k  HHᵀ
+            gemm::matmul_into(x, &ht, &mut t, &mut ws); // m×k  XHᵀ
             let ord = order.next_order(&mut rng);
             sweep_factor(&mut w, &t, &v, o.reg_w, ord, true);
 
             if want_pg {
-                let gw = gemm::matmul(&w, &v).sub(&t);
+                gemm::matmul_into(&w, &v, &mut gw, &mut ws);
+                gw.axpy(-1.0, &t);
                 pgw_prev = Some(stopping::projected_gradient_norm_sq(&w, &gw));
             }
             iters = iter;
@@ -222,7 +244,6 @@ impl Hals {
         let model = NmfModel { w, h };
         let final_rel_err = model.relative_error(x);
         debug_assert!(model.w.is_nonneg() && model.h.is_nonneg());
-        let _ = (m, n);
         Ok(NmfFit {
             model,
             iters,

@@ -15,6 +15,7 @@ use anyhow::Result;
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::norms;
+use crate::linalg::workspace::Workspace;
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
 use crate::nmf::options::NmfOptions;
@@ -54,17 +55,34 @@ impl Mu {
         let mut converged = false;
         let mut iters = 0usize;
 
+        // Per-solve buffers: the iteration loop below never allocates.
+        let k = o.rank;
+        let mut ws = Workspace::new();
+        let mut s = Mat::zeros(k, k); // WᵀW
+        let mut at = Mat::zeros(n, k); // XᵀW
+        let mut v = Mat::zeros(k, k); // HHᵀ
+        let mut t = Mat::zeros(m, k); // XHᵀ
+        let mut denom_h = Mat::zeros(n, k);
+        let mut denom_w = Mat::zeros(m, k);
+        let (mut gh, mut gw) = if want_pg {
+            (Mat::zeros(n, k), Mat::zeros(m, k))
+        } else {
+            (Mat::zeros(0, 0), Mat::zeros(0, 0))
+        };
+
         for iter in 1..=o.max_iter {
-            let s = gemm::gram(&w); // k×k
-            let at = gemm::at_b(x, &w); // n×k  XᵀW
+            gemm::gram_into(&w, &mut s, &mut ws); // k×k
+            gemm::at_b_into(x, &w, &mut at, &mut ws); // n×k  XᵀW
 
             if want_pg {
-                let gh = gemm::matmul(&ht, &s).sub(&at);
+                gemm::matmul_into(&ht, &s, &mut gh, &mut ws);
+                gh.axpy(-1.0, &at); // ∇H = Ht·S − At
                 let pgh = stopping::projected_gradient_norm_sq(&ht, &gh);
                 // W-side gradient with current quantities.
-                let v = gemm::gram(&ht);
-                let t = gemm::matmul(x, &ht);
-                let gw = gemm::matmul(&w, &v).sub(&t);
+                gemm::gram_into(&ht, &mut v, &mut ws);
+                gemm::matmul_into(x, &ht, &mut t, &mut ws);
+                gemm::matmul_into(&w, &v, &mut gw, &mut ws);
+                gw.axpy(-1.0, &t); // ∇W = W·V − T
                 let pgw = stopping::projected_gradient_norm_sq(&w, &gw);
                 let pg = pgh + pgw;
                 let pg0v = *pg0.get_or_insert(pg);
@@ -85,13 +103,13 @@ impl Mu {
             }
 
             // H ← H ∘ At ⊘ (Ht·S)
-            let denom_h = gemm::matmul(&ht, &s);
+            gemm::matmul_into(&ht, &s, &mut denom_h, &mut ws);
             mu_update(&mut ht, &at, &denom_h);
 
             // W ← W ∘ T ⊘ (W·V)
-            let v = gemm::gram(&ht);
-            let t = gemm::matmul(x, &ht);
-            let denom_w = gemm::matmul(&w, &v);
+            gemm::gram_into(&ht, &mut v, &mut ws);
+            gemm::matmul_into(x, &ht, &mut t, &mut ws);
+            gemm::matmul_into(&w, &v, &mut denom_w, &mut ws);
             mu_update(&mut w, &t, &denom_w);
 
             iters = iter;

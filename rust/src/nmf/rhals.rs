@@ -38,6 +38,7 @@ use anyhow::Result;
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::norms;
+use crate::linalg::workspace::Workspace;
 use crate::nmf::hals::{sweep_factor, DEAD_EPS};
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
@@ -116,12 +117,28 @@ impl RandomizedHals {
         let want_pg = o.tol > 0.0 || o.trace_every > 0;
         let mut order = OrderState::new(k, o.update_order);
 
+        // Per-solve buffers: the iteration loop below never allocates.
+        let mut ws = Workspace::new();
+        let mut r = Mat::zeros(n, k); // BᵀW̃
+        let mut s = Mat::zeros(k, k); // WᵀW
+        let mut t = Mat::zeros(l, k); // BHᵀ
+        let mut v = Mat::zeros(k, k); // HHᵀ
+        let mut shrink: Vec<f64> = Vec::new();
+        let mut col_scratch = ColScratch::new(m, l);
+        let (mut gh, mut gw, mut qt) = if want_pg {
+            (Mat::zeros(n, k), Mat::zeros(m, k), Mat::zeros(m, k))
+        } else {
+            (Mat::zeros(0, 0), Mat::zeros(0, 0), Mat::zeros(0, 0))
+        };
+
         let mut pgw_prev = if want_pg {
-            let v0 = gemm::gram(&ht);
-            let t0 = gemm::matmul(b, &ht); // l×k
+            gemm::gram_into(&ht, &mut v, &mut ws);
+            gemm::matmul_into(b, &ht, &mut t, &mut ws); // l×k
             // grad_W ≈ W·V − Q·T (X·Hᵀ ≈ Q·B·Hᵀ)
-            let gw0 = gemm::matmul(&w, &v0).sub(&gemm::matmul(q, &t0));
-            Some(stopping::projected_gradient_norm_sq(&w, &gw0))
+            gemm::matmul_into(&w, &v, &mut gw, &mut ws);
+            gemm::matmul_into(q, &t, &mut qt, &mut ws);
+            gw.axpy(-1.0, &qt);
+            Some(stopping::projected_gradient_norm_sq(&w, &gw))
         } else {
             None
         };
@@ -134,11 +151,12 @@ impl RandomizedHals {
 
         for iter in 1..=o.max_iter {
             // ---- line 12–13 ----
-            let r = gemm::at_b(b, &wt); // n×k  BᵀW̃
-            let s = gemm::gram(&w); // k×k  WᵀW (high-dim scaling, see §3.2)
+            gemm::at_b_into(b, &wt, &mut r, &mut ws); // n×k  BᵀW̃
+            gemm::gram_into(&w, &mut s, &mut ws); // k×k  WᵀW (high-dim scaling, §3.2)
 
             if want_pg {
-                let gh = gemm::matmul(&ht, &s).sub(&r);
+                gemm::matmul_into(&ht, &s, &mut gh, &mut ws);
+                gh.axpy(-1.0, &r); // ∇H = Ht·S − R
                 let pgh = stopping::projected_gradient_norm_sq(&ht, &gh);
                 let pg = pgh + pgw_prev.take().unwrap_or(0.0);
                 let pg0v = *pg0.get_or_insert(pg);
@@ -161,26 +179,44 @@ impl RandomizedHals {
             }
 
             // ---- H sweep (lines 14–16 / Eq. 19) ----
-            let ord = order.next_order(rng).to_vec();
-            sweep_factor(&mut ht, &r, &s, o.reg_h, &ord, true);
+            order.advance(rng);
+            sweep_factor(&mut ht, &r, &s, o.reg_h, order.order(), true);
 
             // ---- W̃ sweep + projection (lines 17–22 / Eqs. 20–22) ----
-            let t = gemm::matmul(b, &ht); // l×k  BHᵀ
-            let v = gemm::gram(&ht); // k×k  HHᵀ
-            let ord = order.next_order(rng).to_vec();
+            gemm::matmul_into(b, &ht, &mut t, &mut ws); // l×k  BHᵀ
+            gemm::gram_into(&ht, &mut v, &mut ws); // k×k  HHᵀ
+            order.advance(rng);
             if o.batched_projection {
                 // Sweep all of W̃ unclamped, then one projection round trip.
-                sweep_factor(&mut wt, &t, &v, Regularization::ridge(o.reg_w.l2), &ord, false);
-                w = gemm::matmul(q, &wt); // m×k
-                apply_l1_shrink_and_clamp(&mut w, &v, o.reg_w, &ord);
-                wt = gemm::at_b(q, &w); // l×k
+                sweep_factor(
+                    &mut wt,
+                    &t,
+                    &v,
+                    Regularization::ridge(o.reg_w.l2),
+                    order.order(),
+                    false,
+                );
+                gemm::matmul_into(q, &wt, &mut w, &mut ws); // m×k
+                apply_l1_shrink_and_clamp(&mut w, &v, o.reg_w, order.order(), &mut shrink);
+                gemm::at_b_into(q, &w, &mut wt, &mut ws); // l×k
             } else {
-                per_column_projection(q, &mut w, &mut wt, &t, &v, o.reg_w, &ord);
+                per_column_projection(
+                    q,
+                    &mut w,
+                    &mut wt,
+                    &t,
+                    &v,
+                    o.reg_w,
+                    order.order(),
+                    &mut col_scratch,
+                );
             }
 
             if want_pg {
                 // grad_W ≈ W·V − Q·T, with T = BHᵀ for the current H.
-                let gw = gemm::matmul(&w, &v).sub(&gemm::matmul(q, &t));
+                gemm::matmul_into(&w, &v, &mut gw, &mut ws);
+                gemm::matmul_into(q, &t, &mut qt, &mut ws);
+                gw.axpy(-1.0, &qt);
                 pgw_prev = Some(stopping::projected_gradient_norm_sq(&w, &gw));
             }
             iters = iter;
@@ -208,9 +244,27 @@ impl RandomizedHals {
     }
 }
 
+/// Column-length scratch for [`per_column_projection`] — allocated once
+/// per solve so the per-column interleave stays allocation-free.
+struct ColScratch {
+    /// Updated compressed column `W̃(:,j)` (length `l`).
+    new_col: Vec<f64>,
+    /// Projected high-dimensional column `[QW̃(:,j)]₊` (length `m`).
+    proj: Vec<f64>,
+    /// Rotated-back column `QᵀW(:,j)` (length `l`).
+    back: Vec<f64>,
+}
+
+impl ColScratch {
+    fn new(m: usize, l: usize) -> Self {
+        ColScratch { new_col: vec![0.0; l], proj: vec![0.0; m], back: vec![0.0; l] }
+    }
+}
+
 /// Paper-faithful per-column update: for each component `j`, update
 /// `W̃(:,j)` (Eq. 20), project `W(:,j) = [QW̃(:,j) − β/denom]₊` (Eq. 21 with
 /// the ℓ1 shrink), and rotate back `W̃(:,j) = QᵀW(:,j)` (Eq. 22).
+#[allow(clippy::too_many_arguments)]
 fn per_column_projection(
     q: &Mat,
     w: &mut Mat,
@@ -219,8 +273,9 @@ fn per_column_projection(
     v: &Mat,
     reg_w: Regularization,
     order: &[usize],
+    scratch: &mut ColScratch,
 ) {
-    let (l, k) = wt.shape();
+    let (_l, k) = wt.shape();
     for &j in order {
         let vjj = v.get(j, j);
         if vjj < DEAD_EPS {
@@ -229,8 +284,7 @@ fn per_column_projection(
         let denom = vjj + reg_w.l2;
         // W̃(:,j) ← (l2·W̃(:,j) + T(:,j) − Σ_{i≠j} V(i,j)·W̃(:,i)) / denom
         let vcol = v.row(j); // symmetric
-        let mut new_col = vec![0.0f64; l];
-        for (rowi, nc) in new_col.iter_mut().enumerate() {
+        for (rowi, nc) in scratch.new_col.iter_mut().enumerate() {
             let wrow = wt.row(rowi);
             let mut cross = 0.0;
             for i in 0..k {
@@ -241,25 +295,35 @@ fn per_column_projection(
         }
         // W(:,j) = [Q·W̃(:,j) − β/denom]₊
         let shrink = reg_w.l1 / denom;
-        let proj = gemm::matvec(q, &new_col);
-        let wcol: Vec<f64> = proj.iter().map(|&v| (v - shrink).max(0.0)).collect();
-        w.set_col(j, &wcol);
+        gemm::matvec_into(q, &scratch.new_col, &mut scratch.proj);
+        for pv in scratch.proj.iter_mut() {
+            *pv = (*pv - shrink).max(0.0);
+        }
+        w.set_col(j, &scratch.proj);
         // W̃(:,j) = Qᵀ·W(:,j)
-        let back = gemm::matvec_t(q, &wcol);
-        for (rowi, &bv) in back.iter().enumerate() {
+        gemm::matvec_t_into(q, &scratch.proj, &mut scratch.back);
+        for (rowi, &bv) in scratch.back.iter().enumerate() {
             wt.set(rowi, j, bv);
         }
     }
 }
 
 /// Batched projection: `W = [QW̃ − β/V_jj]₊` applied column-wise after the
-/// full unclamped sweep.
-fn apply_l1_shrink_and_clamp(w: &mut Mat, v: &Mat, reg_w: Regularization, order: &[usize]) {
+/// full unclamped sweep. `shrink` is caller-owned scratch (length grows to
+/// `k` on first use, then reused).
+fn apply_l1_shrink_and_clamp(
+    w: &mut Mat,
+    v: &Mat,
+    reg_w: Regularization,
+    order: &[usize],
+    shrink: &mut Vec<f64>,
+) {
     if reg_w.l1 == 0.0 {
         w.clamp_nonneg();
         return;
     }
-    let mut shrink = vec![0.0f64; w.cols()];
+    shrink.resize(w.cols(), 0.0);
+    shrink.fill(0.0);
     for &j in order {
         let denom = v.get(j, j) + reg_w.l2;
         shrink[j] = if denom > DEAD_EPS { reg_w.l1 / denom } else { 0.0 };

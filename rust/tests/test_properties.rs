@@ -1,6 +1,7 @@
 //! Cross-module property tests (the mini-proptest framework exercising the
 //! invariants DESIGN.md §9 lists).
 
+use randnmf::linalg::workspace::Workspace;
 use randnmf::linalg::{gemm, mat::Mat, norms, qr, svd};
 use randnmf::nmf::hals::{sweep_factor, Hals};
 use randnmf::nmf::options::{NmfOptions, Regularization, UpdateOrder};
@@ -46,6 +47,69 @@ fn prop_transpose_products_consistent() {
             gemm::gram(&a).max_abs_diff(&gemm::matmul(&a.transpose(), &a)) < 1e-10,
             "gram mismatch"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_into_kernels_match_naive_and_alloc_path() {
+    // Every `_into` kernel against the triple-loop oracle, across shapes
+    // that include 0-row/0-col/1×1 and non-multiple-of-block sizes, with a
+    // reused Workspace; reuse must be bit-identical to the first pass and
+    // to the allocating wrapper.
+    forall("into kernels == naive, reuse bit-identical", 40, |g| {
+        let m = g.usize_in(0, 70);
+        let k = g.usize_in(0, 40);
+        let n = g.usize_in(0, 70);
+        let a = g.mat_gaussian(m, k);
+        let b = g.mat_gaussian(k, n);
+        let mut ws = Workspace::new();
+
+        let naive = gemm::matmul_naive(&a, &b);
+        let mut c = Mat::zeros(m, n);
+        gemm::matmul_into(&a, &b, &mut c, &mut ws);
+        prop_assert!(c.max_abs_diff(&naive) < 1e-9, "matmul_into vs naive");
+        let first = c.clone();
+        gemm::matmul_into(&a, &b, &mut c, &mut ws);
+        prop_assert!(c == first, "workspace reuse not bit-identical (matmul)");
+        prop_assert!(c == gemm::matmul(&a, &b), "allocating wrapper differs (matmul)");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transpose_into_kernels_match_naive() {
+    forall("transpose into kernels == naive", 30, |g| {
+        let m = g.usize_in(0, 60);
+        let k = g.usize_in(0, 20);
+        let n = g.usize_in(0, 40);
+        let a = g.mat_gaussian(m, k);
+        let b = g.mat_gaussian(m, n);
+        let c_nk = g.mat_gaussian(n, k);
+        let mut ws = Workspace::new();
+
+        let mut atb = Mat::zeros(k, n);
+        gemm::at_b_into(&a, &b, &mut atb, &mut ws);
+        let atb_naive = gemm::matmul_naive(&a.transpose(), &b);
+        prop_assert!(atb.max_abs_diff(&atb_naive) < 1e-9, "at_b_into vs naive");
+        prop_assert!(atb == gemm::at_b(&a, &b), "allocating wrapper differs (at_b)");
+
+        let mut abt = Mat::zeros(m, n);
+        gemm::a_bt_into(&a, &c_nk, &mut abt, &mut ws);
+        let abt_naive = gemm::matmul_naive(&a, &c_nk.transpose());
+        prop_assert!(abt.max_abs_diff(&abt_naive) < 1e-9, "a_bt_into vs naive");
+
+        let mut gr = Mat::zeros(k, k);
+        gemm::gram_into(&a, &mut gr, &mut ws);
+        let gr_naive = gemm::matmul_naive(&a.transpose(), &a);
+        prop_assert!(gr.max_abs_diff(&gr_naive) < 1e-9, "gram_into vs naive");
+        prop_assert!(gr == gr.transpose(), "gram_into not exactly symmetric");
+
+        let mut gt = Mat::zeros(m, m);
+        gemm::gram_t_into(&a, &mut gt, &mut ws);
+        let gt_naive = gemm::matmul_naive(&a, &a.transpose());
+        prop_assert!(gt.max_abs_diff(&gt_naive) < 1e-9, "gram_t_into vs naive");
+        prop_assert!(gt == gt.transpose(), "gram_t_into not exactly symmetric");
         Ok(())
     });
 }

@@ -1,0 +1,148 @@
+//! Zero-allocation guarantee for steady-state solver iterations.
+//!
+//! A counting global allocator wraps `System`; the test then asserts that
+//! (a) the `_into` GEMM kernels allocate nothing once their `Workspace`
+//! is warm, and (b) a HALS / randomized-HALS fit's total allocation count
+//! is *independent of the iteration count* — i.e. the per-iteration cost
+//! is exactly zero heap allocations.
+//!
+//! Everything runs in a single `#[test]` so `RANDNMF_THREADS=1` is set
+//! before the thread-count `OnceLock` is first touched (the guarantee is
+//! for the single-threaded path; the threaded path necessarily allocates
+//! OS thread state).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+use randnmf::linalg::gemm;
+use randnmf::linalg::mat::Mat;
+use randnmf::linalg::rng::Pcg64;
+use randnmf::linalg::workspace::Workspace;
+use randnmf::nmf::hals::Hals;
+use randnmf::nmf::options::NmfOptions;
+use randnmf::nmf::rhals::RandomizedHals;
+
+fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let u = rng.uniform_mat(m, r);
+    let v = rng.uniform_mat(r, n);
+    gemm::matmul(&u, &v)
+}
+
+/// Allocation count of a full deterministic-HALS fit of `iters` iterations
+/// (tol = 0 and no tracing, so the loop body is the pure update path).
+fn hals_fit_allocs(x: &Mat, iters: usize) -> u64 {
+    let solver = Hals::new(
+        NmfOptions::new(4).with_max_iter(iters).with_tol(0.0).with_seed(7),
+    );
+    let before = allocs();
+    let fit = solver.fit(x).unwrap();
+    let after = allocs();
+    assert_eq!(fit.iters, iters);
+    after - before
+}
+
+fn rhals_fit_allocs(x: &Mat, iters: usize, batched: bool) -> u64 {
+    let solver = RandomizedHals::new(
+        NmfOptions::new(4)
+            .with_max_iter(iters)
+            .with_tol(0.0)
+            .with_seed(9)
+            .with_oversample(6)
+            .with_batched_projection(batched),
+    );
+    let before = allocs();
+    let fit = solver.fit(x).unwrap();
+    let after = allocs();
+    assert_eq!(fit.iters, iters);
+    after - before
+}
+
+#[test]
+fn steady_state_iterations_do_not_allocate() {
+    // Must precede the first touch of the thread-count OnceLock.
+    std::env::set_var("RANDNMF_THREADS", "1");
+
+    // --- (a) warm `_into` kernels allocate exactly zero ---
+    let mut rng = Pcg64::seed_from_u64(1);
+    let a = rng.uniform_mat(150, 24);
+    let b = rng.uniform_mat(24, 90);
+    let wide = rng.uniform_mat(12, 300);
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(150, 90);
+    let mut atb = Mat::zeros(24, 24);
+    let mut abt = Mat::zeros(150, 150);
+    let mut gr = Mat::zeros(24, 24);
+    let mut gt = Mat::zeros(12, 12);
+    for _ in 0..5 {
+        // warmup: grows the workspace pool to its fixed point
+        gemm::matmul_into(&a, &b, &mut c, &mut ws);
+        gemm::at_b_into(&a, &a, &mut atb, &mut ws);
+        gemm::a_bt_into(&a, &a, &mut abt, &mut ws);
+        gemm::gram_into(&a, &mut gr, &mut ws);
+        gemm::gram_t_into(&wide, &mut gt, &mut ws);
+    }
+    let before = allocs();
+    for _ in 0..20 {
+        gemm::matmul_into(&a, &b, &mut c, &mut ws);
+        gemm::at_b_into(&a, &a, &mut atb, &mut ws);
+        gemm::a_bt_into(&a, &a, &mut abt, &mut ws);
+        gemm::gram_into(&a, &mut gr, &mut ws);
+        gemm::gram_t_into(&wide, &mut gt, &mut ws);
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "warm _into kernels must not allocate at all"
+    );
+
+    // --- (b) solver fits: allocation count independent of iteration count ---
+    let x = low_rank(120, 80, 4, 3);
+
+    let hals_short = hals_fit_allocs(&x, 20);
+    let hals_long = hals_fit_allocs(&x, 70);
+    assert_eq!(
+        hals_long, hals_short,
+        "HALS allocated {} extra times over 50 extra iterations",
+        hals_long.saturating_sub(hals_short)
+    );
+
+    for batched in [false, true] {
+        let short = rhals_fit_allocs(&x, 20, batched);
+        let long = rhals_fit_allocs(&x, 70, batched);
+        assert_eq!(
+            long, short,
+            "rHALS (batched={batched}) allocated {} extra times over 50 extra iterations",
+            long.saturating_sub(short)
+        );
+    }
+}
