@@ -1,5 +1,9 @@
 //! END-TO-END SYSTEM DRIVER — proves all three layers compose.
 //!
+//! **Reproduces:** the paper's §4 deterministic-vs-randomized comparison
+//! (Algorithm 1, §3.2) run through every execution engine the system
+//! ships, on the `demo` artifact shape.
+//!
 //! Workload: a 2000×1000 rank-16 nonnegative matrix (the `demo` artifact
 //! shape). The driver runs the paper's comparison the way a deployment
 //! would:

@@ -1,5 +1,8 @@
 //! Facial feature extraction (paper §4.1 workload, scaled down).
 //!
+//! **Reproduces:** §4.1 / Fig. 4 (parts-based basis images) and the
+//! Table 1 error/time comparison, on synthetic faces.
+//!
 //! Learns parts-based basis images from the synthetic faces dataset with
 //! deterministic HALS, randomized HALS and the randomized SVD, scores how
 //! well each recovers the ground-truth parts, and dumps the dominant basis

@@ -1,5 +1,8 @@
 //! Blind hyperspectral unmixing (paper §4.2 workload, scaled down).
 //!
+//! **Reproduces:** §4.2 / Fig. 7 (endmember spectra, abundance maps, and
+//! the 7c ℓ1-sparsity effect) and the Table 2 regime.
+//!
 //! Separates a synthetic urban-like scene into endmember spectra and
 //! abundance maps with randomized HALS, quantifies recovery via spectral
 //! angle distance, and shows the ℓ1-regularization effect of Fig. 7c.

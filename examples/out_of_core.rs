@@ -2,6 +2,9 @@
 //! `.nmfstore` file on disk and the QB compression streams column blocks —
 //! `2 + 2q` sequential passes, never materializing `X` in memory.
 //!
+//! **Reproduces:** Appendix A / Algorithm 2 (blocked QB) feeding the §3.2
+//! compressed HALS iterations.
+//!
 //! ```sh
 //! cargo run --release --example out_of_core
 //! ```

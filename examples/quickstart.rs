@@ -1,6 +1,10 @@
 //! Quickstart: factorize a synthetic nonnegative low-rank matrix with
 //! deterministic and randomized HALS and compare.
 //!
+//! **Reproduces:** the paper's headline claim (§4, in the Figs. 12–13
+//! synthetic regime) — randomized HALS matches deterministic HALS's
+//! relative error to ~3 decimals in a fraction of the time.
+//!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```

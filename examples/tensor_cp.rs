@@ -6,6 +6,9 @@
 //! like a video of moving nonnegative sources), factorizes it with
 //! deterministic and randomized CP-HALS, and compares time and error.
 //!
+//! **Reproduces:** the §5 (conclusion) outlook — no paper figure exists;
+//! this extends Algorithm 1's compression idea to CP tensor updates.
+//!
 //! ```sh
 //! cargo run --release --example tensor_cp
 //! ```

@@ -4,7 +4,16 @@
 //! on the `2000×500, k ∈ {16, 64}` shapes of the perf acceptance
 //! criterion, plus the seed's unpacked register-blocked kernel
 //! ([`gemm::matmul_unpacked`]) as the speedup baseline and a naive-slice
-//! contrast. Results go to the usual CSV *and* to a machine-readable
+//! contrast. Two probes target the PR 2 hot-path work specifically:
+//!
+//! * a dedicated Gram shape (`2000×256`, where the triangle-aware sweep's
+//!   ~2× flop cut is most visible — GFLOP/s uses the conventional full
+//!   `2nk²` count, so the triangle win shows up as a higher rate), and
+//! * a pool **dispatch-latency** probe: the median wall time of an empty
+//!   fan-out across all workers (wake parked workers + join), i.e. the
+//!   fixed cost a threaded kernel call pays before doing any math.
+//!
+//! Results go to the usual CSV *and* to a machine-readable
 //! `BENCH_gemm.json` (GFLOP/s per kernel/shape at the measured thread
 //! count) so future PRs can track the perf trajectory.
 //!
@@ -14,6 +23,7 @@
 use randnmf::bench::{banner, bench_scale, write_csv, Bencher};
 use randnmf::coordinator::metrics::Table;
 use randnmf::linalg::gemm;
+use randnmf::linalg::pool;
 use randnmf::linalg::workspace::Workspace;
 use randnmf::prelude::*;
 
@@ -73,6 +83,15 @@ fn main() {
         let st = bencher.time(|| gemm::gram(&ht)); // HtᵀHt : k×k
         push(&mut rows, "gram", 2.0 * (n * k * k) as f64, st.median_s);
 
+        // Warm zero-allocation Gram (the exact solver-loop hot path).
+        let mut gr = Mat::zeros(k, k);
+        gemm::gram_into(&ht, &mut gr, &mut ws);
+        let st = bencher.time(|| {
+            gemm::gram_into(&ht, &mut gr, &mut ws);
+            gr.get(0, 0)
+        });
+        push(&mut rows, "gram_into_warm", 2.0 * (n * k * k) as f64, st.median_s);
+
         let st = bencher.time(|| gemm::gram_t(&h)); // HHᵀ : k×k
         push(&mut rows, "gram_t", 2.0 * (n * k * k) as f64, st.median_s);
 
@@ -80,6 +99,46 @@ fn main() {
         let xs = x.row_block(0, (m / 8).max(16));
         let st = bencher.time(|| gemm::matmul_naive(&xs, &ht));
         push(&mut rows, "matmul_naive_slice", 2.0 * (xs.rows() * n * k) as f64, st.median_s);
+    }
+
+    // Dedicated wide Gram shape: k large enough that the triangle-aware
+    // sweep skips a substantial tile fraction (GFLOP/s under the full
+    // 2mk² convention, so the skip shows up as a higher apparent rate).
+    {
+        let kg = ((256.0 * s) as usize).max(32);
+        let wide = rng.uniform_mat(m, kg);
+        let st = bencher.time(|| gemm::gram(&wide)); // AᵀA : kg×kg
+        rows.push(Row {
+            kernel: "gram_wide",
+            m,
+            n: kg,
+            k: kg,
+            median_s: st.median_s,
+            gflops: 2.0 * (m * kg * kg) as f64 / st.median_s / 1e9,
+        });
+    }
+
+    // Pool dispatch latency: an empty fan-out across every worker (wake
+    // parked workers + join) — the fixed cost a threaded kernel pays
+    // before any math. Timed in batches of 100 dispatches; the row
+    // records per-dispatch seconds (gflops column is moot, kept 0).
+    {
+        let nt = gemm::num_threads();
+        let st = bencher.time(|| {
+            let mut sess = pool::session();
+            for _ in 0..100 {
+                sess.run(pool::max_jobs(), &|_j, _s| {});
+            }
+            nt
+        });
+        rows.push(Row {
+            kernel: "pool_dispatch",
+            m: nt,
+            n: 1,
+            k: 1,
+            median_s: st.median_s / 100.0,
+            gflops: 0.0,
+        });
     }
 
     let mut csv = Vec::new();

@@ -45,6 +45,11 @@ where
         }
     });
 
+    // A finished batch is the natural high-water point of the GEMM pool's
+    // persistent per-worker scratch; hand that memory back between
+    // batches (no-op if the pool was never used).
+    crate::linalg::pool::trim_scratch();
+
     results
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("worker dropped a result"))

@@ -20,6 +20,22 @@
 //! and exposes them behind the same engine trait as the pure-Rust path, so
 //! Python is never on the request path.
 //!
+//! ## Performance architecture
+//!
+//! Two rules hold on every hot path:
+//!
+//! * **Workspace discipline** ([`linalg::workspace`]) — every GEMM has an
+//!   `_into` variant writing into caller-owned outputs with pooled
+//!   scratch; solver loops allocate everything before iterating, so
+//!   steady-state iterations perform zero heap allocations (enforced by
+//!   `tests/test_zero_alloc.rs` and `tests/test_zero_alloc_pool.rs`).
+//! * **Persistent worker pool** ([`linalg::pool`]) — threaded kernels
+//!   never spawn threads per call: workers are spawned once (sized by
+//!   `RANDNMF_THREADS`), parked between calls, and fed pre-partitioned
+//!   ranges through lock-free job cells. The packed BLIS-style GEMM
+//!   engine ([`linalg::gemm`]) rides on both, with triangle-aware Gram
+//!   kernels computing only the upper triangle of `WᵀW`/`HHᵀ`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

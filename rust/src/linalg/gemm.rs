@@ -23,19 +23,30 @@
 //!   (`matmul_into`, `at_b_into`, `a_bt_into`, `gram_into`,
 //!   `gram_t_into`) writing into a caller-provided [`Mat`], with all
 //!   scratch (pack panels, per-thread partials) drawn from a
-//!   [`Workspace`] pool, so single-threaded steady-state solver
-//!   iterations allocate nothing (the threaded path still pays per-call
-//!   thread-spawn state). The classic allocating wrappers remain for
-//!   cold paths.
+//!   [`Workspace`] pool on the single-threaded path and from persistent
+//!   per-worker [`pool::WorkerScratch`] on the threaded path, so
+//!   steady-state solver iterations allocate nothing at *any* thread
+//!   count. The classic allocating wrappers remain for cold paths.
+//! * **Triangle-aware Gram sweep** — [`gram_into`]/[`gram_t_into`] run a
+//!   dedicated macro-kernel sweep (`packed_gram`) over the symmetric
+//!   `k×k` output that visits only tiles intersecting the upper triangle
+//!   (`jbase + nr > ibase`): strictly-lower tiles are skipped outright,
+//!   diagonal-straddling tiles mask their write-out to `j ≥ i`, and the
+//!   strict lower triangle is mirrored from the upper one in a single
+//!   pass — halving the Gram flops that dominate every HALS/rHALS inner
+//!   iteration.
 //!
-//! Threading uses `std::thread::scope`: output-row chunks for
-//! `matmul`/`a_bt` (disjoint writes) and inner-dimension chunks with a
-//! deterministic partial-sum reduction for `at_b`/`gram`/`gram_t` (whose
-//! outputs are small `k×n` / `k×k` panels). All kernels gate threading on
-//! the same `2·m·n·k` flop estimate. The thread count defaults to the
-//! machine parallelism and can be pinned with the `RANDNMF_THREADS`
-//! environment variable (used by the thread-scaling bench
-//! `bench_perf_gemm`, which also records packed-vs-unpacked GFLOP/s).
+//! Threading dispatches pre-partitioned ranges onto the persistent worker
+//! pool of [`super::pool`] (workers spawned once, parked between calls,
+//! woken by one atomic store + unpark per dispatch): output-row chunks
+//! for `matmul`/`a_bt` (disjoint writes) and inner-dimension chunks with
+//! a deterministic partial-sum reduction for `at_b`/`gram`/`gram_t`
+//! (whose outputs are small `k×n` / `k×k` panels). All kernels gate
+//! threading on the same `2·m·n·k` flop estimate. The thread count
+//! defaults to the machine parallelism and can be pinned with the
+//! `RANDNMF_THREADS` environment variable (used by the thread-scaling
+//! bench `bench_perf_gemm`, which also records packed-vs-unpacked
+//! GFLOP/s and the pool's dispatch latency).
 //!
 //! Results are deterministic for a fixed thread count: chunk boundaries
 //! and reduction order depend only on shapes, and the Gram kernels are
@@ -43,8 +54,10 @@
 //! `G[j,i]`, plus an explicit mirror).
 
 use super::mat::Mat;
+use super::pool::{self, SyncPtr};
 use super::workspace::Workspace;
-use std::sync::OnceLock;
+
+pub use super::pool::num_threads;
 
 /// Work threshold (flops, as `2·m·n·k`) below which we stay
 /// single-threaded. Every kernel uses this same estimate so the
@@ -61,21 +74,6 @@ const MC: usize = 64;
 const KC: usize = 256;
 /// Column block (512·256·8B = 1 MiB packed B panel).
 const NC: usize = 512;
-
-/// Number of worker threads used by the GEMM kernels.
-pub fn num_threads() -> usize {
-    static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| {
-        if let Ok(s) = std::env::var("RANDNMF_THREADS") {
-            if let Ok(n) = s.parse::<usize>() {
-                if n >= 1 {
-                    return n;
-                }
-            }
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    })
-}
 
 /// Split `rows` of work into at most `num_threads()` contiguous chunks.
 fn row_chunks(rows: usize, flops: usize) -> usize {
@@ -131,6 +129,59 @@ fn micro_kernel(apanel: &[f64], bpanel: &[f64], acc: &mut [f64; MR * NR]) {
     }
 }
 
+/// Pack `B[pc..pc+kc, jc..jc+nc]` (logical view) into `n_panels` `kc×NR`
+/// column panels, contiguous in micro-kernel consumption order,
+/// zero-padding the ragged last panel.
+fn pack_b_panels(
+    b: Op<'_>,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    n_panels: usize,
+    pb: &mut Vec<f64>,
+) {
+    pb.resize(n_panels * kc * NR, 0.0);
+    for jp in 0..n_panels {
+        let jbase = jc + jp * NR;
+        let width = NR.min(jc + nc - jbase);
+        let panel = &mut pb[jp * kc * NR..(jp + 1) * kc * NR];
+        for p in 0..kc {
+            let row = &mut panel[p * NR..(p + 1) * NR];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = if j < width { b.at(pc + p, jbase + j) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack `A[i0+ic .. i0+ic+mc, pc..pc+kc]` (logical view) into `m_panels`
+/// `kc×MR` row panels, zero-padding the ragged last panel.
+#[allow(clippy::too_many_arguments)]
+fn pack_a_panels(
+    a: Op<'_>,
+    i0: usize,
+    ic: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    m_panels: usize,
+    pa: &mut Vec<f64>,
+) {
+    pa.resize(m_panels * kc * MR, 0.0);
+    for ip in 0..m_panels {
+        let ibase = ic + ip * MR;
+        let height = MR.min(ic + mc - ibase);
+        let panel = &mut pa[ip * kc * MR..(ip + 1) * kc * MR];
+        for p in 0..kc {
+            let row = &mut panel[p * MR..(p + 1) * MR];
+            for (r, slot) in row.iter_mut().enumerate() {
+                *slot = if r < height { a.at(i0 + ibase + r, pc + p) } else { 0.0 };
+            }
+        }
+    }
+}
+
 /// Packed blocked core: `C[0..(i1-i0), 0..n] += A[i0..i1, l0..l1] ·
 /// B[l0..l1, 0..n]` where `A`/`B` are *logical* operands read through
 /// [`Op`] and `c` holds rows `[i0, i1)` of the full row-major output.
@@ -162,38 +213,12 @@ fn packed_gemm(
         let mut pc = l0;
         while pc < l1 {
             let kc = KC.min(l1 - pc);
-            // Pack B[pc..pc+kc, jc..jc+nc] into `n_panels` kc×NR panels,
-            // zero-padding the ragged last panel.
-            pb.resize(n_panels * kc * NR, 0.0);
-            for jp in 0..n_panels {
-                let jbase = jc + jp * NR;
-                let width = NR.min(jc + nc - jbase);
-                let panel = &mut pb[jp * kc * NR..(jp + 1) * kc * NR];
-                for p in 0..kc {
-                    let row = &mut panel[p * NR..(p + 1) * NR];
-                    for (j, slot) in row.iter_mut().enumerate() {
-                        *slot = if j < width { b.at(pc + p, jbase + j) } else { 0.0 };
-                    }
-                }
-            }
+            pack_b_panels(b, pc, kc, jc, nc, n_panels, pb);
             let mut ic = 0;
             while ic < mrows {
                 let mc = MC.min(mrows - ic);
                 let m_panels = mc.div_ceil(MR);
-                // Pack A[i0+ic .. i0+ic+mc, pc..pc+kc] into kc×MR panels.
-                pa.resize(m_panels * kc * MR, 0.0);
-                for ip in 0..m_panels {
-                    let ibase = ic + ip * MR;
-                    let height = MR.min(ic + mc - ibase);
-                    let panel = &mut pa[ip * kc * MR..(ip + 1) * kc * MR];
-                    for p in 0..kc {
-                        let row = &mut panel[p * MR..(p + 1) * MR];
-                        for (r, slot) in row.iter_mut().enumerate() {
-                            *slot =
-                                if r < height { a.at(i0 + ibase + r, pc + p) } else { 0.0 };
-                        }
-                    }
-                }
+                pack_a_panels(a, i0, ic, mc, pc, kc, m_panels, pa);
                 // Macro-kernel: every (MR×NR) tile of this (mc×nc) block.
                 for jp in 0..n_panels {
                     let jbase = jc + jp * NR;
@@ -222,9 +247,109 @@ fn packed_gemm(
     }
 }
 
-/// Drive the packed engine with **output-row** threading: each worker owns
-/// a disjoint row chunk of `C` and runs the full depth range. Used when
-/// the output is tall (`matmul`, `a_bt`).
+#[cfg(test)]
+thread_local! {
+    /// Per-thread count of micro-kernel tile invocations made by
+    /// `packed_gram` — lets the unit tests assert that the triangle-aware
+    /// sweep really skips every strictly-lower tile (single-threaded
+    /// shapes keep all visits on the test's own thread).
+    pub(crate) static GRAM_TILE_VISITS: std::cell::Cell<usize> =
+        std::cell::Cell::new(0);
+}
+
+/// Triangle-aware variant of [`packed_gemm`] for the symmetric Gram
+/// outputs: `C[0..kdim, 0..kdim] += A[·, l0..l1] · B[l0..l1, ·]` where the
+/// logical product is known to be symmetric (`B` is the transposed view of
+/// `A`), so only the upper triangle `j ≥ i` is computed.
+///
+/// The blocking structure and per-element accumulation order are identical
+/// to `packed_gemm`; the macro-kernel differs in two ways:
+///
+/// * tiles lying strictly below the diagonal (`jbase + nr_eff ≤ ibase`)
+///   are **skipped** before the micro-kernel runs — for `kdim ≫ MR` that
+///   halves the flops;
+/// * tiles straddling the diagonal run the full register micro-kernel
+///   (masking FMA lanes would defeat vectorization) and **mask the
+///   write-out** to `j ≥ i`, discarding the few sub-diagonal lanes.
+///
+/// The strict lower triangle is left untouched (zeros from the caller);
+/// [`driver_gram`] mirrors it from the upper triangle in one pass, which
+/// also makes the result exactly symmetric.
+fn packed_gram(
+    a: Op<'_>,
+    b: Op<'_>,
+    kdim: usize,
+    l0: usize,
+    l1: usize,
+    c: &mut [f64],
+    pa: &mut Vec<f64>,
+    pb: &mut Vec<f64>,
+) {
+    let n = kdim;
+    if kdim == 0 || l1 <= l0 {
+        return;
+    }
+    debug_assert_eq!(c.len(), kdim * n);
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let n_panels = nc.div_ceil(NR);
+        let mut pc = l0;
+        while pc < l1 {
+            let kc = KC.min(l1 - pc);
+            pack_b_panels(b, pc, kc, jc, nc, n_panels, pb);
+            let mut ic = 0;
+            while ic < kdim {
+                let mc = MC.min(kdim - ic);
+                // Whole row-block strictly below this column block: every
+                // tile would be skipped — don't even pack it.
+                if jc + nc <= ic {
+                    ic += mc;
+                    continue;
+                }
+                let m_panels = mc.div_ceil(MR);
+                pack_a_panels(a, 0, ic, mc, pc, kc, m_panels, pa);
+                for jp in 0..n_panels {
+                    let jbase = jc + jp * NR;
+                    let nr_eff = NR.min(jc + nc - jbase);
+                    let bpanel = &pb[jp * kc * NR..(jp + 1) * kc * NR];
+                    for ip in 0..m_panels {
+                        let ibase = ic + ip * MR;
+                        // Strictly-lower tile: every element has j < i.
+                        // Skip it — the mirror pass fills it for free.
+                        if jbase + nr_eff <= ibase {
+                            continue;
+                        }
+                        let mr_eff = MR.min(ic + mc - ibase);
+                        let apanel = &pa[ip * kc * MR..(ip + 1) * kc * MR];
+                        let mut acc = [0.0f64; MR * NR];
+                        micro_kernel(apanel, bpanel, &mut acc);
+                        #[cfg(test)]
+                        GRAM_TILE_VISITS.with(|v| v.set(v.get() + 1));
+                        for r in 0..mr_eff {
+                            let gi = ibase + r;
+                            // First in-tile column on/above the diagonal.
+                            let jlo = gi.saturating_sub(jbase).min(nr_eff);
+                            let off = gi * n + jbase;
+                            for j in jlo..nr_eff {
+                                c[off + j] += acc[r * NR + j];
+                            }
+                        }
+                    }
+                }
+                ic += mc;
+            }
+            pc += kc;
+        }
+        jc += nc;
+    }
+}
+
+/// Drive the packed engine with **output-row** threading: each job owns a
+/// disjoint row chunk of `C` and runs the full depth range. Used when the
+/// output is tall (`matmul`, `a_bt`). Jobs run on the persistent pool
+/// (the caller is job 0); pack scratch comes from each worker's
+/// [`pool::WorkerScratch`], so warm dispatches allocate nothing.
 fn driver_row_split(
     a: Op<'_>,
     b: Op<'_>,
@@ -249,35 +374,75 @@ fn driver_row_split(
         return;
     }
     let chunk = m.div_ceil(nchunks);
-    let nworkers = m.div_ceil(chunk);
-    let mut bufs: Vec<(Vec<f64>, Vec<f64>)> =
-        (0..nworkers).map(|_| (ws.acquire_vec(0), ws.acquire_vec(0))).collect();
-    let cdata = c.as_mut_slice();
-    let returned: Vec<(Vec<f64>, Vec<f64>)> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for (t, (cslice, (mut pa, mut pb))) in
-            cdata.chunks_mut(chunk * n).zip(bufs.drain(..)).enumerate()
-        {
-            let i0 = t * chunk;
-            let i1 = i0 + cslice.len() / n;
-            handles.push(s.spawn(move || {
-                packed_gemm(a, b, i0, i1, n, 0, k, cslice, &mut pa, &mut pb);
-                (pa, pb)
-            }));
-        }
-        handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
+    let njobs = m.div_ceil(chunk);
+    let cptr = SyncPtr(c.as_mut_slice().as_mut_ptr());
+    let mut sess = pool::session();
+    sess.run(njobs, &|j, scratch| {
+        let i0 = j * chunk;
+        let i1 = (i0 + chunk).min(m);
+        // SAFETY: jobs own disjoint row ranges [i0, i1) of `c`, which
+        // outlives the dispatch (`run` joins every job before returning).
+        let cslice =
+            unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), (i1 - i0) * n) };
+        packed_gemm(a, b, i0, i1, n, 0, k, cslice, &mut scratch.pa, &mut scratch.pb);
     });
-    for (pa, pb) in returned {
+}
+
+/// Shared scaffolding for **inner-dimension** threading: zero `c`, split
+/// `[0, depth)` into chunks, run `kernel(out, l0, l1, pa, pb)` for each —
+/// job 0 (the caller) accumulating straight into `c`, workers into their
+/// persistent partial buffers — then reduce in deterministic job order
+/// (the same per-element accumulation order every call at a fixed thread
+/// count). Used when the output is a small panel but the depth is large.
+fn inner_split_reduce(
+    depth: usize,
+    flops: usize,
+    c: &mut Mat,
+    ws: &mut Workspace,
+    kernel: &(dyn Fn(&mut [f64], usize, usize, &mut Vec<f64>, &mut Vec<f64>) + Sync),
+) {
+    c.as_mut_slice().fill(0.0);
+    let len = c.len();
+    if len == 0 || depth == 0 {
+        return;
+    }
+    let nchunks = row_chunks(depth, flops);
+    if nchunks <= 1 {
+        let mut pa = ws.acquire_vec(0);
+        let mut pb = ws.acquire_vec(0);
+        kernel(c.as_mut_slice(), 0, depth, &mut pa, &mut pb);
         ws.release_vec(pa);
         ws.release_vec(pb);
+        return;
+    }
+    let chunk = depth.div_ceil(nchunks);
+    let njobs = depth.div_ceil(chunk);
+    let cptr = SyncPtr(c.as_mut_slice().as_mut_ptr());
+    let mut sess = pool::session();
+    sess.run(njobs, &|j, scratch| {
+        let l0 = j * chunk;
+        let l1 = (l0 + chunk).min(depth);
+        if j == 0 {
+            // SAFETY: only job 0 touches `c` during the dispatch; workers
+            // write their own scratch. `c` outlives the joined dispatch.
+            let cs = unsafe { std::slice::from_raw_parts_mut(cptr.0, len) };
+            kernel(cs, l0, l1, &mut scratch.pa, &mut scratch.pb);
+        } else {
+            scratch.part.clear();
+            scratch.part.resize(len, 0.0);
+            kernel(&mut scratch.part[..], l0, l1, &mut scratch.pa, &mut scratch.pb);
+        }
+    });
+    let cs = c.as_mut_slice();
+    for j in 1..njobs {
+        let part = &sess.scratch(j).part;
+        for (cv, pv) in cs.iter_mut().zip(part.iter()) {
+            *cv += *pv;
+        }
     }
 }
 
-/// Drive the packed engine with **inner-dimension** threading: workers
-/// compute partial products over disjoint depth ranges into pooled
-/// partial buffers, reduced in deterministic worker order. Used when the
-/// output is a small panel but the depth is large (`at_b`, `gram`,
-/// `gram_t`).
+/// Drive the packed engine with inner-dimension threading (`at_b`).
 fn driver_inner_split(
     a: Op<'_>,
     b: Op<'_>,
@@ -288,46 +453,31 @@ fn driver_inner_split(
     ws: &mut Workspace,
 ) {
     debug_assert_eq!(c.shape(), (m, n));
-    c.as_mut_slice().fill(0.0);
-    if m == 0 || n == 0 || k == 0 {
-        return;
-    }
-    let nchunks = row_chunks(k, flop_estimate(m, n, k));
-    if nchunks <= 1 {
-        let mut pa = ws.acquire_vec(0);
-        let mut pb = ws.acquire_vec(0);
-        packed_gemm(a, b, 0, m, n, 0, k, c.as_mut_slice(), &mut pa, &mut pb);
-        ws.release_vec(pa);
-        ws.release_vec(pb);
-        return;
-    }
-    let chunk = k.div_ceil(nchunks);
-    let nworkers = k.div_ceil(chunk);
-    let mut bufs: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = (0..nworkers)
-        .map(|_| (ws.acquire_vec(m * n), ws.acquire_vec(0), ws.acquire_vec(0)))
-        .collect();
-    let returned: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for (t, (mut part, mut pa, mut pb)) in bufs.drain(..).enumerate() {
-            let l0 = t * chunk;
-            let l1 = (l0 + chunk).min(k);
-            handles.push(s.spawn(move || {
-                part.fill(0.0);
-                packed_gemm(a, b, 0, m, n, l0, l1, &mut part, &mut pa, &mut pb);
-                (part, pa, pb)
-            }));
-        }
-        handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
+    inner_split_reduce(k, flop_estimate(m, n, k), c, ws, &|cs, l0, l1, pa, pb| {
+        packed_gemm(a, b, 0, m, n, l0, l1, cs, pa, pb)
     });
-    let cs = c.as_mut_slice();
-    for (part, pa, pb) in returned {
-        for (cv, pv) in cs.iter_mut().zip(part.iter()) {
-            *cv += *pv;
-        }
-        ws.release_vec(part);
-        ws.release_vec(pa);
-        ws.release_vec(pb);
-    }
+}
+
+/// Drive the triangle-aware Gram sweep: [`inner_split_reduce`] over
+/// `packed_gram` on the symmetric `kdim×kdim` output (upper triangle
+/// only), then mirror the strict lower triangle in one pass.
+fn driver_gram(
+    a: Op<'_>,
+    b: Op<'_>,
+    kdim: usize,
+    depth: usize,
+    g: &mut Mat,
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(g.shape(), (kdim, kdim));
+    inner_split_reduce(
+        depth,
+        flop_estimate(kdim, kdim, depth),
+        g,
+        ws,
+        &|gs, l0, l1, pa, pb| packed_gram(a, b, kdim, l0, l1, gs, pa, pb),
+    );
+    mirror_upper(g);
 }
 
 /// Copy the strict upper triangle onto the lower one (Gram outputs).
@@ -376,24 +526,23 @@ pub fn a_bt_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
 /// Gram matrix `G = AᵀA` into `g` for `A (m×k)`, `g (k×k)`. Exactly
 /// symmetric by construction.
 ///
-/// Runs the general packed engine over the full `k×k` output and then
-/// mirrors (2× the flops of a triangle-only update, but on the packed
-/// vectorized path; `k ≪ m, n` keeps this term a small fraction of an
-/// iteration — a triangle-aware macro-kernel is a noted follow-up).
+/// Runs the triangle-aware sweep: only tiles intersecting the upper
+/// triangle are computed (≈half the flops of the full `k×k` product) and
+/// the strict lower triangle is mirrored in one pass. Parallel over the
+/// (large) inner dimension `m`.
 pub fn gram_into(a: &Mat, g: &mut Mat, ws: &mut Workspace) {
     let (m, k) = a.shape();
     assert_eq!(g.shape(), (k, k), "gram_into: output must be {k}x{k}");
-    driver_inner_split(Op::Trans(a), Op::Normal(a), k, k, m, g, ws);
-    mirror_upper(g);
+    driver_gram(Op::Trans(a), Op::Normal(a), k, m, g, ws);
 }
 
-/// Gram matrix `G = AAᵀ` into `g` for `A (k×n)`, `g (k×k)`. Parallel over
-/// the (large) inner dimension `n`, like the other Gram kernel.
+/// Gram matrix `G = AAᵀ` into `g` for `A (k×n)`, `g (k×k)`. Same
+/// triangle-aware sweep as [`gram_into`], parallel over the (large) inner
+/// dimension `n`.
 pub fn gram_t_into(a: &Mat, g: &mut Mat, ws: &mut Workspace) {
     let (k, n) = a.shape();
     assert_eq!(g.shape(), (k, k), "gram_t_into: output must be {k}x{k}");
-    driver_inner_split(Op::Normal(a), Op::Trans(a), k, k, n, g, ws);
-    mirror_upper(g);
+    driver_gram(Op::Normal(a), Op::Trans(a), k, n, g, ws);
 }
 
 // ---------------------------------------------------------------------------
@@ -684,6 +833,81 @@ mod tests {
         let expect = matmul(&a, &a.transpose());
         assert!(g.max_abs_diff(&expect) < 1e-10);
         assert!(g.max_abs_diff(&g.transpose()) == 0.0);
+    }
+
+    #[test]
+    fn gram_matches_naive_across_block_edges() {
+        // Shapes straddling MR/NR/MC/KC tile boundaries, including 1×1 and
+        // a depth big enough for two KC blocks.
+        for (m, k, seed) in [
+            (1usize, 1usize, 30u64),
+            (7, 2, 31),
+            (50, MR, 32),
+            (50, NR + 1, 33),
+            (40, 2 * NR + 3, 34),
+            (100, MC - 1, 35),
+            (100, MC + 1, 36),
+            (KC + 40, 33, 37), // two depth blocks
+        ] {
+            let a = random(m, k, seed);
+            let g = gram(&a);
+            let expect = matmul_naive(&a.transpose(), &a);
+            let err = g.max_abs_diff(&expect);
+            assert!(err < 1e-9, "gram {m}x{k}: err={err}");
+            assert!(g.max_abs_diff(&g.transpose()) == 0.0, "gram {m}x{k}: asymmetric");
+            let gt = gram_t(&a.transpose());
+            assert!(gt.max_abs_diff(&expect) < 1e-9, "gram_t {m}x{k}");
+        }
+    }
+
+    /// Tile-visit count of the triangle sweep for a `kdim` output that
+    /// fits one MC/NC/KC block (so the grid is a plain tile matrix).
+    fn expected_upper_tile_visits(kdim: usize) -> usize {
+        let mut count = 0;
+        let mut ibase = 0;
+        while ibase < kdim {
+            let mut jbase = 0;
+            while jbase < kdim {
+                let nr_eff = NR.min(kdim - jbase);
+                if jbase + nr_eff > ibase {
+                    count += 1;
+                }
+                jbase += NR;
+            }
+            ibase += MR;
+        }
+        count
+    }
+
+    #[test]
+    fn gram_sweeps_only_upper_triangle_tiles() {
+        // Shapes chosen to stay single-threaded (below PAR_THRESHOLD) and
+        // within one MC/NC/KC block, so every micro-kernel call lands on
+        // this thread and the tile grid is exactly ⌈k/MR⌉×⌈k/NR⌉.
+        for (m, k, seed) in [(100usize, 64usize, 40u64), (50, 13, 41), (30, 1, 42)] {
+            assert!(flop_estimate(k, k, m) < PAR_THRESHOLD && k <= MC && m <= KC);
+            let a = random(m, k, seed);
+            let mut g = Mat::zeros(k, k);
+            let mut ws = Workspace::new();
+            GRAM_TILE_VISITS.with(|v| v.set(0));
+            gram_into(&a, &mut g, &mut ws);
+            let visits = GRAM_TILE_VISITS.with(|v| v.get());
+            let expected = expected_upper_tile_visits(k);
+            let full_grid = k.div_ceil(MR) * k.div_ceil(NR);
+            assert_eq!(visits, expected, "gram k={k}: wrong tile-visit count");
+            assert!(
+                visits <= full_grid,
+                "gram k={k}: visited more tiles than the full grid"
+            );
+            if k > NR + MR {
+                assert!(
+                    visits < full_grid,
+                    "gram k={k}: triangle sweep skipped nothing"
+                );
+            }
+            // And the masked/skipped sweep is still exact.
+            assert!(g.max_abs_diff(&matmul_naive(&a.transpose(), &a)) < 1e-10);
+        }
     }
 
     #[test]

@@ -8,9 +8,17 @@
 //!   HALS coordinate sweeps require.
 //! * [`gemm`] — packed, cache-blocked, multithreaded matrix multiplication
 //!   and its transpose variants (the per-iteration hot path of HALS), with
-//!   `_into` variants writing into caller-owned outputs.
+//!   `_into` variants writing into caller-owned outputs and
+//!   triangle-aware Gram kernels that compute only the upper triangle of
+//!   `AᵀA`/`AAᵀ` and mirror.
+//! * [`pool`] — the persistent worker pool behind every threaded kernel:
+//!   workers are spawned once (`RANDNMF_THREADS`), parked between calls,
+//!   and fed pre-partitioned ranges through lock-free job cells, keeping
+//!   the threaded path allocation-free and dispatch down to a wake.
 //! * [`workspace`] — the scratch-buffer pool behind the `_into` kernels
-//!   and the solvers' zero-allocation steady-state loops.
+//!   and the solvers' zero-allocation steady-state loops (the `_into`
+//!   kernels never allocate once warm — the discipline every solver loop
+//!   in this crate is written against).
 //! * [`qr`] — economic Householder QR (the orthonormalization step of the
 //!   randomized range finder, Algorithm 2 of the paper).
 //! * [`svd`] — one-sided Jacobi SVD plus a randomized SVD built on QB
@@ -23,6 +31,7 @@
 pub mod gemm;
 pub mod mat;
 pub mod norms;
+pub mod pool;
 pub mod qr;
 pub mod rng;
 pub mod svd;

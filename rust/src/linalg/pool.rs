@@ -1,0 +1,478 @@
+//! Persistent worker pool behind the multithreaded GEMM and sweep paths.
+//!
+//! The previous design spawned scoped OS threads on every threaded kernel
+//! call, which (a) put a thread-spawn syscall plus several heap
+//! allocations (stacks aside, the scope's handle vector and per-worker
+//! buffer vectors) on the dispatch path and (b) excluded the threaded
+//! path from the zero-allocation guarantee of `tests/test_zero_alloc.rs`.
+//! This module replaces that with a classic fork–join pool:
+//!
+//! * **Spawn once** — `num_threads() − 1` workers (sized by the
+//!   `RANDNMF_THREADS` environment variable, defaulting to the machine
+//!   parallelism) are spawned lazily on first threaded dispatch and live
+//!   for the rest of the process, parked between calls.
+//! * **Lock-free job cells** — each worker owns a `WorkerCell`: a
+//!   single-slot mailbox (`state` atomic + job pointer) the dispatcher
+//!   fills while the worker is idle. Publishing a job is one
+//!   release-store plus an `unpark`; no queue, no channel, no allocation.
+//! * **Pre-partitioned ranges** — callers split their iteration space
+//!   *before* dispatch and pass one closure; job `j` of `njobs` computes
+//!   its own tile/row/depth range from `j`. The closure is shared by
+//!   reference (lifetime-erased for the duration of the call — the
+//!   dispatcher blocks until every worker reports done, so borrows in the
+//!   closure never outlive the call).
+//! * **Worker-owned scratch** — every worker (and the caller) keeps a
+//!   persistent [`WorkerScratch`] of GEMM pack panels and a
+//!   partial-output buffer. Capacities only grow, so once warm a
+//!   threaded kernel call performs **zero heap allocations** end to end
+//!   (verified by `tests/test_zero_alloc_pool.rs` under
+//!   `RANDNMF_THREADS=4`).
+//!
+//! Dispatches are serialized by a mutex (like a BLAS thread pool): jobs
+//! must never dispatch nested parallel work, and concurrent callers —
+//! e.g. coordinator sweep jobs fitting several models at once — simply
+//! take turns using the workers.
+//!
+//! The caller always participates as job 0 on its own thread, so
+//! `num_threads() == 1` means "no pool, no workers, fully synchronous" and
+//! the single-threaded zero-allocation path of `tests/test_zero_alloc.rs`
+//! is untouched.
+
+use std::cell::{Cell, UnsafeCell};
+use std::mem::transmute;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::thread::{self, Thread};
+use std::time::Duration;
+
+/// Number of worker threads used by the threaded kernels (pool size is
+/// this minus one: the caller is always worker 0).
+///
+/// Reads `RANDNMF_THREADS` once (values `>= 1`), else the machine
+/// parallelism. Pinned for the process lifetime because the pool and the
+/// deterministic work partitions are sized from it.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("RANDNMF_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+thread_local! {
+    /// True while this thread is a pool worker or is mid-dispatch (running
+    /// job 0). [`session`] checks it so a nested dispatch — which would
+    /// deadlock on the non-reentrant dispatch mutex — panics immediately
+    /// with a diagnosis instead of hanging silently.
+    static IN_POOL_CONTEXT: Cell<bool> = Cell::new(false);
+}
+
+/// Per-worker persistent scratch. Lives as long as the worker; capacities
+/// only grow (same discipline as [`super::workspace::Workspace`]), which
+/// is what makes warm threaded dispatches allocation-free. The flip side
+/// is that scratch is retained at its high-water mark for the process
+/// lifetime — after an unusually large solve, call [`trim_scratch`] to
+/// hand the memory back (the next dispatch simply regrows).
+#[derive(Default)]
+pub struct WorkerScratch {
+    /// Packed-A panel buffer of the GEMM macro-kernel.
+    pub pa: Vec<f64>,
+    /// Packed-B panel buffer of the GEMM macro-kernel.
+    pub pb: Vec<f64>,
+    /// Partial-output buffer for reduction-style kernels
+    /// (`at_b`/`gram`/`gram_t` split the inner dimension; workers
+    /// accumulate here and the caller reduces in deterministic job order).
+    pub part: Vec<f64>,
+}
+
+/// Job mailbox states. IDLE → (dispatcher) READY → (worker) DONE →
+/// (dispatcher) IDLE.
+const IDLE: u8 = 0;
+const READY: u8 = 1;
+const DONE: u8 = 2;
+
+/// The type every dispatched job is erased to: `job(index, scratch)` with
+/// `index ∈ 0..njobs` (0 = the caller itself).
+type JobFn<'a> = &'a (dyn Fn(usize, &mut WorkerScratch) + Sync);
+
+/// What the dispatcher hands a worker through its cell.
+struct JobMsg {
+    /// Lifetime-erased pointer to the caller's job closure. Valid until
+    /// the worker stores `DONE` — the dispatcher blocks on that.
+    func: *const (dyn Fn(usize, &mut WorkerScratch) + Sync),
+    /// This worker's job index (`1..njobs`; the caller runs job 0).
+    index: usize,
+    /// Dispatcher thread to unpark when done.
+    caller: Thread,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced between the
+// dispatcher's READY release-store and the worker's DONE release-store,
+// while the dispatcher is blocked in `Session::run`; the pointee is Sync.
+unsafe impl Send for JobMsg {}
+
+/// One worker's mailbox + scratch. The `state` atomic carries the
+/// happens-before edges: the dispatcher's job write is published by the
+/// READY store and the worker's scratch writes by the DONE store.
+struct WorkerCell {
+    state: AtomicU8,
+    job: UnsafeCell<Option<JobMsg>>,
+    scratch: UnsafeCell<WorkerScratch>,
+    /// Set by the worker (before DONE) if the job panicked.
+    panicked: UnsafeCell<bool>,
+}
+
+// SAFETY: the UnsafeCell fields are accessed under the state protocol
+// above (never concurrently by both sides), and dispatchers are
+// serialized by the pool mutex.
+unsafe impl Sync for WorkerCell {}
+
+impl WorkerCell {
+    fn new() -> Self {
+        WorkerCell {
+            state: AtomicU8::new(IDLE),
+            job: UnsafeCell::new(None),
+            scratch: UnsafeCell::new(WorkerScratch::default()),
+            panicked: UnsafeCell::new(false),
+        }
+    }
+}
+
+struct WorkerHandle {
+    cell: &'static WorkerCell,
+    thread: Thread,
+}
+
+struct Pool {
+    /// Serializes dispatches; the guarded value is the *caller's*
+    /// persistent scratch (job 0 needs one too, and tying it to the
+    /// dispatch lock gives every concurrent caller exclusive use).
+    dispatch: Mutex<WorkerScratch>,
+    workers: Vec<WorkerHandle>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let extra = num_threads().saturating_sub(1);
+        let workers = (0..extra)
+            .map(|i| {
+                let cell: &'static WorkerCell = Box::leak(Box::new(WorkerCell::new()));
+                let handle = thread::Builder::new()
+                    .name(format!("randnmf-pool-{i}"))
+                    .spawn(move || worker_loop(cell))
+                    .expect("spawning pool worker");
+                WorkerHandle { cell, thread: handle.thread().clone() }
+            })
+            .collect();
+        Pool { dispatch: Mutex::new(WorkerScratch::default()), workers }
+    })
+}
+
+fn worker_loop(cell: &'static WorkerCell) {
+    IN_POOL_CONTEXT.with(|f| f.set(true));
+    loop {
+        while cell.state.load(Ordering::Acquire) != READY {
+            thread::park();
+        }
+        // SAFETY: READY (acquire) publishes the dispatcher's job write;
+        // the dispatcher won't touch the cell again until we store DONE.
+        let msg = unsafe { (*cell.job.get()).take() }.expect("READY cell without a job");
+        {
+            // SAFETY: scratch is ours alone between READY and DONE.
+            let scratch = unsafe { &mut *cell.scratch.get() };
+            // SAFETY: the closure outlives the dispatch (dispatcher blocks).
+            let func = unsafe { &*msg.func };
+            if catch_unwind(AssertUnwindSafe(|| func(msg.index, scratch))).is_err() {
+                // SAFETY: same exclusivity as scratch.
+                unsafe { *cell.panicked.get() = true };
+            }
+        }
+        cell.state.store(DONE, Ordering::Release);
+        msg.caller.unpark();
+    }
+}
+
+/// An exclusive dispatch session: holds the pool lock, so the caller can
+/// run fork–join dispatches and then read worker scratch (for partial-sum
+/// reductions) without any other synchronization.
+pub struct Session {
+    /// Caller scratch (job 0), owned by the dispatch mutex.
+    guard: MutexGuard<'static, WorkerScratch>,
+    pool: &'static Pool,
+    /// Worker count of the most recent `run` (for `scratch` bounds).
+    active: usize,
+}
+
+/// Open a dispatch session (blocks while another caller is dispatching).
+///
+/// Panics if called from inside a pool job (worker or job 0): the
+/// dispatch mutex is not reentrant, so a nested dispatch would deadlock —
+/// this turns that latent hang into an immediate, diagnosable error.
+pub fn session() -> Session {
+    assert!(
+        !IN_POOL_CONTEXT.with(|f| f.get()),
+        "nested pool dispatch: a pool job tried to open a session \
+         (threaded kernels must not be called from inside pool jobs)"
+    );
+    let p = pool();
+    let guard = p.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+    Session { guard, pool: p, active: 0 }
+}
+
+/// Drop all persistent scratch (the caller slot and every worker),
+/// keeping the workers themselves alive and parked.
+///
+/// Scratch is retained at its high-water mark by design — the
+/// steady-state zero-allocation guarantee depends on buffers never
+/// shrinking — so a long-running process that just finished an unusually
+/// large solve (e.g. a coordinator sweep batch) can call this to return
+/// the memory to the allocator. [`crate::coordinator::scheduler`] does so
+/// after each parallel batch.
+pub fn trim_scratch() {
+    // No-op when the pool was never used — don't spawn workers just to
+    // clear their empty scratch.
+    let Some(p) = POOL.get() else { return };
+    let mut guard = p.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+    *guard = WorkerScratch::default();
+    for w in &p.workers {
+        debug_assert_eq!(w.cell.state.load(Ordering::Relaxed), IDLE);
+        // SAFETY: we hold the dispatch lock and the worker is idle
+        // (parked), so nothing else can touch its scratch; the previous
+        // dispatcher's mutex unlock ordered the worker's writes before
+        // our lock acquisition.
+        unsafe { *w.cell.scratch.get() = WorkerScratch::default() };
+    }
+}
+
+/// Maximum useful `njobs` for [`Session::run`]: the spawned workers plus
+/// the calling thread. Equals [`num_threads`] once the pool exists.
+pub fn max_jobs() -> usize {
+    pool().workers.len() + 1
+}
+
+impl Session {
+    /// Fork–join: run `job(j, scratch)` for every `j ∈ 0..njobs`, job 0 on
+    /// the calling thread, jobs `1..njobs` on parked pool workers. Returns
+    /// after *all* jobs finish. Panics in any job are joined first and
+    /// then propagated.
+    ///
+    /// `njobs` must not exceed [`max_jobs`] (callers partition work with
+    /// [`num_threads`], which is the same bound). Jobs must not dispatch
+    /// nested parallel work — the pool is single-level by design.
+    pub fn run(&mut self, njobs: usize, job: JobFn<'_>) {
+        assert!(njobs >= 1, "run: njobs must be >= 1");
+        let nworkers = njobs - 1;
+        assert!(
+            nworkers <= self.pool.workers.len(),
+            "run: njobs {njobs} exceeds pool capacity {}",
+            self.pool.workers.len() + 1
+        );
+        // SAFETY: erasing the closure's lifetime is sound because this
+        // function does not return until every worker has stored DONE.
+        let func: *const (dyn Fn(usize, &mut WorkerScratch) + Sync) =
+            unsafe { transmute(job) };
+        let caller = thread::current();
+        for (t, w) in self.pool.workers[..nworkers].iter().enumerate() {
+            debug_assert_eq!(w.cell.state.load(Ordering::Relaxed), IDLE);
+            // SAFETY: the cell is IDLE, so the worker is not reading it;
+            // the READY store below publishes this write.
+            unsafe {
+                *w.cell.job.get() =
+                    Some(JobMsg { func, index: t + 1, caller: caller.clone() });
+            }
+            w.cell.state.store(READY, Ordering::Release);
+            w.thread.unpark();
+        }
+        self.active = nworkers;
+
+        // The caller is job 0. Catch its panic so workers borrowing the
+        // caller's stack are always joined before unwinding; the context
+        // flag makes a nested dispatch attempt panic instead of deadlock.
+        IN_POOL_CONTEXT.with(|f| f.set(true));
+        let caller_result = catch_unwind(AssertUnwindSafe(|| job(0, &mut *self.guard)));
+        IN_POOL_CONTEXT.with(|f| f.set(false));
+
+        let mut worker_panicked = false;
+        for w in &self.pool.workers[..nworkers] {
+            let mut spins = 0u32;
+            while w.cell.state.load(Ordering::Acquire) != DONE {
+                spins += 1;
+                if spins < 1 << 14 {
+                    std::hint::spin_loop();
+                } else {
+                    // Workers unpark us on DONE; the timeout only guards
+                    // against the permit being consumed by another cell.
+                    thread::park_timeout(Duration::from_micros(100));
+                }
+            }
+            // SAFETY: DONE (acquire) gives us back exclusive cell access.
+            unsafe {
+                if *w.cell.panicked.get() {
+                    worker_panicked = true;
+                    *w.cell.panicked.get() = false;
+                }
+            }
+            w.cell.state.store(IDLE, Ordering::Release);
+        }
+
+        if let Err(payload) = caller_result {
+            resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("pool worker panicked");
+        }
+    }
+
+    /// Mutable access to the scratch job `j` used in the last [`run`]
+    /// (`1..njobs`; job 0's scratch is internal to `run`). Safe because
+    /// the session holds the dispatch lock and all workers are idle.
+    ///
+    /// [`run`]: Session::run
+    pub fn scratch(&mut self, j: usize) -> &mut WorkerScratch {
+        assert!(j >= 1 && j <= self.active, "scratch: job {j} not in last run");
+        // SAFETY: worker j-1 is IDLE (we observed DONE with acquire and
+        // store IDLE ourselves), and `&mut self` prevents aliased access.
+        unsafe { &mut *self.pool.workers[j - 1].cell.scratch.get() }
+    }
+}
+
+/// A raw pointer that may cross the dispatch boundary. Used by callers to
+/// hand each job a disjoint `&mut` view of one output buffer.
+pub(crate) struct SyncPtr(pub *mut f64);
+// SAFETY: jobs derive disjoint slices from it; the pointee outlives the
+// dispatch because `Session::run` joins before returning.
+unsafe impl Sync for SyncPtr {}
+unsafe impl Send for SyncPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let njobs = num_threads().min(max_jobs());
+        let hits: Vec<AtomicUsize> = (0..njobs).map(|_| AtomicUsize::new(0)).collect();
+        let mut sess = session();
+        for _ in 0..50 {
+            sess.run(njobs, &|j, _s| {
+                hits[j].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(sess);
+        for (j, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 50, "job {j} miscounted");
+        }
+    }
+
+    #[test]
+    fn disjoint_output_ranges_all_written() {
+        let n = 4096usize;
+        let mut out = vec![0.0f64; n];
+        let njobs = max_jobs().min(4).max(1);
+        let chunk = n.div_ceil(njobs);
+        let ptr = SyncPtr(out.as_mut_ptr());
+        let mut sess = session();
+        sess.run(njobs, &|j, _s| {
+            let lo = j * chunk;
+            let hi = (lo + chunk).min(n);
+            // SAFETY: disjoint [lo, hi) ranges per job.
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+            for (i, v) in slice.iter_mut().enumerate() {
+                *v = (lo + i) as f64;
+            }
+        });
+        drop(sess);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+    }
+
+    #[test]
+    fn worker_scratch_persists_between_runs() {
+        let mut sess = session();
+        if max_jobs() < 2 {
+            return; // RANDNMF_THREADS=1: no workers to observe
+        }
+        sess.run(2, &|j, s| {
+            if j == 1 {
+                s.part.clear();
+                s.part.resize(777, 1.5);
+            }
+        });
+        let cap = sess.scratch(1).part.capacity();
+        assert!(cap >= 777);
+        sess.run(2, &|_j, _s| {});
+        assert_eq!(sess.scratch(1).part.len(), 777, "scratch must persist");
+        assert_eq!(sess.scratch(1).part[776], 1.5);
+    }
+
+    #[test]
+    fn nested_dispatch_panics_instead_of_deadlocking() {
+        let res = std::panic::catch_unwind(|| {
+            let mut sess = session();
+            sess.run(1, &|_j, _s| {
+                let _nested = session(); // would deadlock; must panic
+            });
+        });
+        assert!(res.is_err(), "nested session() must panic");
+        // Pool must still be usable afterwards.
+        let mut sess = session();
+        sess.run(max_jobs().min(2), &|_j, _s| {});
+    }
+
+    #[test]
+    fn trim_scratch_then_dispatch_still_works() {
+        {
+            let mut sess = session();
+            sess.run(max_jobs(), &|_j, s| {
+                s.part.clear();
+                s.part.resize(1000, 1.0);
+            });
+        }
+        trim_scratch();
+        // Full fork–join over freshly reset scratch must still be correct.
+        let n = 512usize;
+        let mut out = vec![0.0f64; n];
+        let njobs = max_jobs().min(4).max(1);
+        let chunk = n.div_ceil(njobs);
+        let ptr = SyncPtr(out.as_mut_ptr());
+        let mut sess = session();
+        sess.run(njobs, &|j, _s| {
+            let lo = j * chunk;
+            let hi = (lo + chunk).min(n);
+            // SAFETY: disjoint [lo, hi) ranges per job.
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+            for (i, v) in slice.iter_mut().enumerate() {
+                *v = (lo + i) as f64 * 2.0;
+            }
+        });
+        drop(sess);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f64 * 2.0);
+        }
+    }
+
+    #[test]
+    fn caller_panic_is_propagated_after_join() {
+        let res = std::panic::catch_unwind(|| {
+            let mut sess = session();
+            sess.run(1, &|_j, _s| panic!("boom"));
+        });
+        assert!(res.is_err());
+        // Pool must still be usable afterwards.
+        let mut sess = session();
+        sess.run(max_jobs().min(2), &|_j, _s| {});
+    }
+}

@@ -6,10 +6,17 @@
 //! (`S`, `R`, `T`, `V`, ...). The seed implementation allocated all of them
 //! fresh on every call; a [`Workspace`] instead owns a small pool of
 //! buffers that are checked out, used, and returned, so steady-state
-//! iterations on the single-threaded path perform **zero heap
-//! allocations** (verified by `tests/test_zero_alloc.rs` with a counting
-//! global allocator under `RANDNMF_THREADS=1`; the threaded GEMM path
-//! still allocates per-call thread-spawn state and handle vectors).
+//! iterations perform **zero heap allocations** (verified by
+//! `tests/test_zero_alloc.rs` with a counting global allocator under
+//! `RANDNMF_THREADS=1`). On the threaded path the same discipline is
+//! carried by the persistent per-worker scratch of
+//! [`crate::linalg::pool`] (verified by `tests/test_zero_alloc_pool.rs`
+//! under `RANDNMF_THREADS=4`).
+//!
+//! **The Workspace discipline**, which every solver loop in this crate is
+//! written against: allocate outputs and check out scratch *before* the
+//! iteration loop; inside the loop call only `_into` kernels and
+//! in-place updates, which never allocate once their buffers are warm.
 //!
 //! The pool hands out the *smallest* buffer whose capacity fits the
 //! request (best fit), or grows the largest one when nothing fits.

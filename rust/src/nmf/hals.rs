@@ -38,6 +38,7 @@ use anyhow::Result;
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::norms;
+use crate::linalg::pool;
 use crate::linalg::workspace::Workspace;
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
@@ -57,6 +58,11 @@ pub(crate) const DEAD_EPS: f64 = 1e-12;
 /// * `order` — the component permutation to sweep.
 /// * `clamp` — apply `[·]₊` (true for every high-dimensional factor; the
 ///   compressed `W̃` of randomized HALS sweeps unclamped).
+///
+/// Large panels are swept in parallel row chunks dispatched on the
+/// persistent worker pool ([`crate::linalg::pool`]) — like the GEMM
+/// kernels, a threaded sweep performs no per-call thread spawning and no
+/// heap allocation.
 pub fn sweep_factor(
     fac: &mut Mat,
     num: &Mat,
@@ -75,14 +81,20 @@ pub fn sweep_factor(
         return;
     }
     let chunk_rows = r.div_ceil(nthreads);
-    let fdata = fac.as_mut_slice();
-    std::thread::scope(|s| {
-        for (fchunk, nchunk) in fdata
-            .chunks_mut(chunk_rows * k)
-            .zip(num.as_slice().chunks(chunk_rows * k))
-        {
-            s.spawn(move || sweep_rows(fchunk, nchunk, gram, reg, order, clamp, k));
-        }
+    let njobs = r.div_ceil(chunk_rows);
+    let fptr = pool::SyncPtr(fac.as_mut_slice().as_mut_ptr());
+    let ndata = num.as_slice();
+    let mut sess = pool::session();
+    sess.run(njobs, &|j, _scratch| {
+        let r0 = j * chunk_rows;
+        let r1 = (r0 + chunk_rows).min(r);
+        // SAFETY: jobs own disjoint row ranges [r0, r1) of `fac`, which
+        // outlives the dispatch (`run` joins every job before returning).
+        let fchunk = unsafe {
+            std::slice::from_raw_parts_mut(fptr.0.add(r0 * k), (r1 - r0) * k)
+        };
+        let nchunk = &ndata[r0 * k..r1 * k];
+        sweep_rows(fchunk, nchunk, gram, reg, order, clamp, k);
     });
 }
 
@@ -151,10 +163,12 @@ impl Hals {
     /// Blocked-cyclic / shuffled path (Eq. 24): Gram-based sweeps.
     ///
     /// All per-iteration products are written into buffers allocated once
-    /// before the loop, with GEMM scratch drawn from a [`Workspace`], so
-    /// the steady-state iteration performs zero heap allocations on the
-    /// single-threaded path (verified by `tests/test_zero_alloc.rs` under
-    /// `RANDNMF_THREADS=1`; threaded GEMMs still allocate spawn state).
+    /// before the loop, with GEMM scratch drawn from a [`Workspace`] (or,
+    /// when threaded, from the persistent pool workers' own scratch), so
+    /// the steady-state iteration performs zero heap allocations at any
+    /// thread count (verified by `tests/test_zero_alloc.rs` under
+    /// `RANDNMF_THREADS=1` and `tests/test_zero_alloc_pool.rs` under
+    /// `RANDNMF_THREADS=4`).
     fn fit_blocked(&self, x: &Mat) -> Result<NmfFit> {
         let o = &self.opts;
         let (m, n) = x.shape();

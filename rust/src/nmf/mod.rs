@@ -18,6 +18,15 @@
 //! [`model::NmfFit`] carrying the factors plus convergence diagnostics
 //! (relative-error and projected-gradient traces — the series plotted in
 //! the paper's Figs. 5/6/8/9/12/13).
+//!
+//! Every iterative solver is written against the crate's **Workspace
+//! discipline** (see [`crate::linalg::workspace`]): all product matrices
+//! and scratch are allocated *before* the iteration loop, and the loop
+//! body calls only `_into` GEMM kernels (with triangle-aware Grams for
+//! `WᵀW`/`HHᵀ`) and in-place sweeps, so steady-state iterations perform
+//! zero heap allocations at any thread count — enforced by
+//! `tests/test_zero_alloc.rs` (single-threaded) and
+//! `tests/test_zero_alloc_pool.rs` (persistent-pool path).
 
 pub mod compressed_mu;
 pub mod hals;

@@ -12,6 +12,15 @@
 //!
 //! * `CpuEngine` — f64, any shape (also the numerical oracle),
 //! * `XlaEngine` — f32 artifacts for the shapes in the manifest.
+//!
+//! The CPU engine inherits the substrate's performance contract — packed
+//! GEMM on the persistent worker pool, allocation-free steady-state
+//! iterations per the Workspace discipline of
+//! [`crate::linalg::workspace`] — so engine selection trades numerics
+//! and hardware, never hot-loop hygiene. In the offline build the `xla`
+//! dependency is a vendored stub: everything compiles, and XLA engines
+//! report themselves unavailable at runtime instead of failing the
+//! build.
 
 pub mod client;
 pub mod engine;

@@ -6,6 +6,15 @@
 //! * [`blocked`] — the pass-efficient out-of-core variant (paper
 //!   Appendix A / Algorithm 2) that builds the same factors while only ever
 //!   touching one column block of `A` at a time.
+//!
+//! The QB products (`XΩ`, `XᵀQ`, `QᵀX`) are the compression stage's whole
+//! cost, so both variants follow the crate's Workspace discipline: the
+//! sketch buffers are allocated once per decomposition and every product
+//! goes through the packed `_into` GEMM kernels of
+//! [`crate::linalg::gemm`], which draw pack-panel scratch from a
+//! [`crate::linalg::workspace::Workspace`] (or, when threaded, from the
+//! persistent pool workers of [`crate::linalg::pool`]) and never
+//! allocate once warm.
 
 pub mod blocked;
 pub mod qb;

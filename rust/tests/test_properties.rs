@@ -115,6 +115,61 @@ fn prop_transpose_into_kernels_match_naive() {
 }
 
 #[test]
+fn prop_triangle_gram_matches_naive_oracle() {
+    // The triangle-aware Gram sweep (upper-triangle tiles only + masked
+    // diagonal write-out + mirror) against the triple-loop oracle, on
+    // random off-block shapes…
+    forall("triangle gram == naive", 40, |g| {
+        let m = g.usize_in(1, 80);
+        let k = g.usize_in(1, 40);
+        let a = g.mat_gaussian(m, k);
+        let mut ws = Workspace::new();
+        let mut gr = Mat::zeros(k, k);
+        gemm::gram_into(&a, &mut gr, &mut ws);
+        let oracle = gemm::matmul_naive(&a.transpose(), &a);
+        prop_assert!(gr.max_abs_diff(&oracle) < 1e-9, "gram_into vs naive");
+        prop_assert!(gr == gr.transpose(), "gram_into not exactly symmetric");
+        let mut gt = Mat::zeros(m, m);
+        gemm::gram_t_into(&a, &mut gt, &mut ws);
+        let oracle_t = gemm::matmul_naive(&a, &a.transpose());
+        prop_assert!(gt.max_abs_diff(&oracle_t) < 1e-9, "gram_t_into vs naive");
+        prop_assert!(gt == gt.transpose(), "gram_t_into not exactly symmetric");
+        Ok(())
+    });
+    // …and on deterministic block-edge shapes: 1×1 and every straddle of
+    // the 4×8 micro-tile grid (diagonal tiles are the masked ones).
+    let mut ws = Workspace::new();
+    for (m, k) in [
+        (1usize, 1usize),
+        (3, 1),
+        (10, 3),
+        (10, 4),
+        (10, 5),
+        (20, 7),
+        (20, 8),
+        (20, 9),
+        (33, 12),
+        (33, 13),
+        (50, 16),
+        (50, 17),
+        (64, 31),
+        (64, 33),
+    ] {
+        let mut rng = randnmf::linalg::rng::Pcg64::seed_from_u64((m * 100 + k) as u64);
+        let a = rng.gaussian_mat(m, k);
+        let mut gr = Mat::zeros(k, k);
+        gemm::gram_into(&a, &mut gr, &mut ws);
+        let oracle = gemm::matmul_naive(&a.transpose(), &a);
+        assert!(
+            gr.max_abs_diff(&oracle) < 1e-10,
+            "gram_into {m}x{k} off-block shape"
+        );
+        assert!(gr == gr.transpose(), "gram_into {m}x{k} asymmetric");
+        assert!(gr == gemm::gram(&a), "allocating wrapper differs {m}x{k}");
+    }
+}
+
+#[test]
 fn prop_qr_reconstruction_and_orthonormality() {
     forall("QR: A = QR, QᵀQ = I", 25, |g| {
         let n = g.usize_in(1, 15);

@@ -7,9 +7,10 @@
 //! is exactly zero heap allocations.
 //!
 //! Everything runs in a single `#[test]` so `RANDNMF_THREADS=1` is set
-//! before the thread-count `OnceLock` is first touched (the guarantee is
-//! for the single-threaded path; the threaded path necessarily allocates
-//! OS thread state).
+//! before the thread-count `OnceLock` is first touched. This binary
+//! covers the single-threaded `Workspace` path; the multithreaded path —
+//! persistent pool workers with their own scratch — is covered by the
+//! sibling `test_zero_alloc_pool.rs` under `RANDNMF_THREADS=4`.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,179 @@
+//! Zero-allocation guarantee for the **multithreaded** (pool) path.
+//!
+//! The sibling `test_zero_alloc.rs` pins `RANDNMF_THREADS=1` and verifies
+//! the single-threaded `Workspace` path. This binary pins
+//! `RANDNMF_THREADS=4` *before the thread-count `OnceLock` is first
+//! touched* and uses shapes large enough to trip the GEMM parallelism
+//! threshold, so every `_into` kernel call below actually dispatches onto
+//! the persistent worker pool — and must still allocate nothing once the
+//! per-worker scratch is warm:
+//!
+//! * pool dispatch itself (wake + join of parked workers) is
+//!   allocation-free,
+//! * warm threaded `_into` kernels allocate exactly zero,
+//! * full HALS / randomized-HALS fits have allocation counts independent
+//!   of the iteration count.
+//!
+//! Caveat: the counting allocator sees every thread, so the warmup phase
+//! must drive each worker's scratch (pack panels + partial buffers) to
+//! its capacity fixed point before counting starts — job→worker
+//! assignment and chunk boundaries are deterministic, so identical calls
+//! reuse identical buffers.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+use randnmf::linalg::gemm;
+use randnmf::linalg::mat::Mat;
+use randnmf::linalg::pool;
+use randnmf::linalg::rng::Pcg64;
+use randnmf::linalg::workspace::Workspace;
+use randnmf::nmf::hals::Hals;
+use randnmf::nmf::options::NmfOptions;
+use randnmf::nmf::rhals::RandomizedHals;
+
+fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let u = rng.uniform_mat(m, r);
+    let v = rng.uniform_mat(r, n);
+    gemm::matmul(&u, &v)
+}
+
+fn hals_fit_allocs(x: &Mat, iters: usize) -> u64 {
+    let solver =
+        Hals::new(NmfOptions::new(8).with_max_iter(iters).with_tol(0.0).with_seed(7));
+    let before = allocs();
+    let fit = solver.fit(x).unwrap();
+    let after = allocs();
+    assert_eq!(fit.iters, iters);
+    after - before
+}
+
+fn rhals_fit_allocs(x: &Mat, iters: usize, batched: bool) -> u64 {
+    let solver = RandomizedHals::new(
+        NmfOptions::new(8)
+            .with_max_iter(iters)
+            .with_tol(0.0)
+            .with_seed(9)
+            .with_oversample(6)
+            .with_batched_projection(batched),
+    );
+    let before = allocs();
+    let fit = solver.fit(x).unwrap();
+    let after = allocs();
+    assert_eq!(fit.iters, iters);
+    after - before
+}
+
+#[test]
+fn threaded_steady_state_iterations_do_not_allocate() {
+    // Must precede the first touch of the thread-count OnceLock.
+    std::env::set_var("RANDNMF_THREADS", "4");
+    assert_eq!(gemm::num_threads(), 4, "test requires the pinned pool size");
+
+    // --- (a) bare pool dispatch is allocation-free once workers exist ---
+    {
+        let mut sess = pool::session();
+        for _ in 0..3 {
+            sess.run(pool::max_jobs(), &|_j, _s| {}); // warmup: spawn + park
+        }
+        let before = allocs();
+        for _ in 0..100 {
+            sess.run(pool::max_jobs(), &|_j, _s| {});
+        }
+        assert_eq!(allocs() - before, 0, "pool dispatch must not allocate");
+    }
+
+    // --- (b) warm threaded `_into` kernels allocate exactly zero ---
+    // Shapes exceed the 2·m·n·k ≥ 2²⁰ threading gate, so each call below
+    // fans out onto the pool (row split for matmul/a_bt, inner split for
+    // at_b/gram/gram_t).
+    let mut rng = Pcg64::seed_from_u64(1);
+    let a = rng.uniform_mat(256, 64);
+    let b = rng.uniform_mat(64, 128);
+    let tall = rng.uniform_mat(2000, 24);
+    let wide = rng.uniform_mat(24, 2000);
+    let bt = rng.uniform_mat(128, 64);
+    let mut ws = Workspace::new();
+    let mut c = Mat::zeros(256, 128);
+    let mut atb = Mat::zeros(24, 24);
+    let mut abt = Mat::zeros(256, 128);
+    let mut gr = Mat::zeros(24, 24);
+    let mut gt = Mat::zeros(24, 24);
+    for _ in 0..5 {
+        // warmup: grows per-worker pack panels + partial buffers to their
+        // fixed point (deterministic job→worker assignment reuses them)
+        gemm::matmul_into(&a, &b, &mut c, &mut ws);
+        gemm::at_b_into(&tall, &tall, &mut atb, &mut ws);
+        gemm::a_bt_into(&a, &bt, &mut abt, &mut ws);
+        gemm::gram_into(&tall, &mut gr, &mut ws);
+        gemm::gram_t_into(&wide, &mut gt, &mut ws);
+    }
+    let before = allocs();
+    for _ in 0..20 {
+        gemm::matmul_into(&a, &b, &mut c, &mut ws);
+        gemm::at_b_into(&tall, &tall, &mut atb, &mut ws);
+        gemm::a_bt_into(&a, &bt, &mut abt, &mut ws);
+        gemm::gram_into(&tall, &mut gr, &mut ws);
+        gemm::gram_t_into(&wide, &mut gt, &mut ws);
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "warm threaded _into kernels must not allocate at all"
+    );
+
+    // --- (c) solver fits: allocation count independent of iteration count ---
+    // 500×300 at k=8 puts the big products (XHᵀ, XᵀW) on the pool path.
+    let x = low_rank(500, 300, 8, 3);
+
+    let _ = hals_fit_allocs(&x, 5); // throwaway: settles worker scratch
+    let hals_short = hals_fit_allocs(&x, 20);
+    let hals_long = hals_fit_allocs(&x, 70);
+    assert_eq!(
+        hals_long, hals_short,
+        "threaded HALS allocated {} extra times over 50 extra iterations",
+        hals_long.abs_diff(hals_short)
+    );
+
+    for batched in [false, true] {
+        let _ = rhals_fit_allocs(&x, 5, batched); // throwaway warmup
+        let short = rhals_fit_allocs(&x, 20, batched);
+        let long = rhals_fit_allocs(&x, 70, batched);
+        assert_eq!(
+            long, short,
+            "threaded rHALS (batched={batched}) allocated {} extra times \
+             over 50 extra iterations",
+            long.abs_diff(short)
+        );
+    }
+}
