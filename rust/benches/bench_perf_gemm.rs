@@ -20,7 +20,7 @@
 //! Set `RANDNMF_THREADS` to sweep thread counts (1 for the single-thread
 //! headline number) and `RANDNMF_BENCH_SCALE` to shrink the shapes.
 
-use randnmf::bench::{banner, bench_scale, write_csv, Bencher};
+use randnmf::bench::{banner, bench_scale, update_bench_json, write_csv, BenchJsonRow, Bencher};
 use randnmf::coordinator::metrics::Table;
 use randnmf::linalg::gemm;
 use randnmf::linalg::pool;
@@ -174,26 +174,21 @@ fn main() {
     let p = write_csv("perf_gemm.csv", "kernel,shape,median_s,gflops", &csv);
     println!("csv: {}", p.display());
 
-    // Machine-readable trajectory record.
-    let mut json = String::from("{\n");
-    json.push_str("  \"bench\": \"gemm\",\n");
-    json.push_str(&format!("  \"threads\": {},\n", gemm::num_threads()));
-    json.push_str(&format!("  \"scale\": {s},\n"));
-    json.push_str("  \"results\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        json.push_str(&format!(
-            "    {{\"kernel\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
-             \"median_s\": {:.6}, \"gflops\": {:.3}}}{}\n",
-            r.kernel,
-            r.m,
-            r.n,
-            r.k,
-            r.median_s,
-            r.gflops,
-            if i + 1 < rows.len() { "," } else { "" }
-        ));
-    }
-    json.push_str("  ]\n}\n");
-    std::fs::write("BENCH_gemm.json", &json).expect("writing BENCH_gemm.json");
+    // Machine-readable trajectory record, merged into the shared JSON so
+    // `bench_perf_qb`'s sketch rows and these GEMM rows land in one
+    // artifact (CI uploads it; ROADMAP perf rows are filled from it).
+    let json_rows: Vec<BenchJsonRow> = rows
+        .iter()
+        .map(|r| BenchJsonRow {
+            kernel: r.kernel.to_string(),
+            m: r.m,
+            n: r.n,
+            k: r.k,
+            threads: gemm::num_threads(),
+            median_s: r.median_s,
+            gflops: r.gflops,
+        })
+        .collect();
+    update_bench_json("BENCH_gemm.json", &json_rows);
     println!("json: BENCH_gemm.json");
 }

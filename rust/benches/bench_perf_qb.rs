@@ -1,0 +1,173 @@
+//! Perf QB — the compression engine, dense vs structured sketches.
+//!
+//! Times the stages the randomized fit's speedup argument rests on, at
+//! the acceptance shape (`2000×500`, `k ∈ {16, 64}`, `p = 20`, `q = 2`):
+//!
+//! * `sketch_*` — one `Y = XΩ` application per [`SketchKind`]. All three
+//!   report GFLOP/s under the **dense-equivalent** `2·m·n·l` convention
+//!   (like `gram_wide`'s full-flop convention), so the sparse-sign
+//!   sketch's `O(m·n·nnz)` structured apply shows up directly as a
+//!   higher apparent rate.
+//! * `qb_*` — the full cold QB decomposition (sketch + `q` power
+//!   iterations + projection) per sketch kind, at the conventional
+//!   `2·m·n·l·(2 + 2q)` flop count (the GEMM-dominated passes; the
+//!   `O((m+n)l²)` QR terms are excluded from the convention).
+//! * `qb_into_warm` — the zero-allocation steady path: caller-owned
+//!   `Q`/`B` and a warm [`Workspace`], the configuration
+//!   `RandomizedHals::fit_with` runs.
+//! * `qb_blocked_warm` — the out-of-core engine over an in-memory
+//!   source (block 256), measuring the chunked engine's overhead.
+//!
+//! Results go to `perf_qb.csv` and are **merged** into the shared
+//! `BENCH_gemm.json` (keyed by kernel/shape, preserving
+//! `bench_perf_gemm`'s rows) — CI uploads that one file as the perf
+//! artifact.
+
+use randnmf::bench::{banner, bench_scale, update_bench_json, write_csv, BenchJsonRow, Bencher};
+use randnmf::coordinator::metrics::Table;
+use randnmf::prelude::*;
+use randnmf::sketch::blocked::{qb_blocked_with, MatSource};
+use randnmf::sketch::qb::{qb, qb_into, sketch_apply, QbOptions};
+
+fn main() {
+    banner("Perf QB", "compression engine (dense vs structured sketches)");
+    let s = bench_scale(1.0);
+    let m = ((2_000.0 * s) as usize).max(64);
+    let n = ((500.0 * s) as usize).max(32);
+    let mut rng = Pcg64::seed_from_u64(0);
+    let x = rng.uniform_mat(m, n); // data matrix X
+
+    let bencher = Bencher::new(1, 5);
+    let mut table = Table::new(&["Kernel", "Shape", "Median (ms)", "GFLOP/s"]);
+    let mut rows: Vec<BenchJsonRow> = Vec::new();
+    let mut push = |rows: &mut Vec<BenchJsonRow>,
+                    kernel: String,
+                    l: usize,
+                    flops: f64,
+                    med: f64| {
+        rows.push(BenchJsonRow {
+            kernel,
+            m,
+            n,
+            k: l,
+            threads: randnmf::linalg::gemm::num_threads(),
+            median_s: med,
+            gflops: if flops > 0.0 { flops / med / 1e9 } else { 0.0 },
+        });
+    };
+
+    let kinds = [
+        ("uniform", SketchKind::Uniform),
+        ("gaussian", SketchKind::Gaussian),
+        ("sparse_sign", SketchKind::sparse_sign()),
+    ];
+
+    for rank in [16usize, 64] {
+        let opts = QbOptions::new(rank).with_oversample(20).with_power_iters(2);
+        let l = opts.sketch_width(m, n);
+        let dense_sketch_flops = 2.0 * (m * n * l) as f64;
+        // GEMM-dominated passes of one full qb: sketch + 2 per power
+        // iteration + the final projection, each ~2·m·n·l flops.
+        let qb_flops = dense_sketch_flops * (2 + 2 * opts.power_iters) as f64;
+
+        // --- sketch stage head-to-head (dense-equivalent convention) ---
+        for (name, kind) in kinds {
+            let mut y = Mat::zeros(m, l);
+            let mut ws = Workspace::new();
+            let mut warm = Pcg64::seed_from_u64(1);
+            sketch_apply(&x, kind, l, &mut warm, &mut y, &mut ws);
+            let st = bencher.time(|| {
+                let mut r = Pcg64::seed_from_u64(1);
+                sketch_apply(&x, kind, l, &mut r, &mut y, &mut ws);
+                y.get(0, 0)
+            });
+            push(&mut rows, format!("sketch_{name}"), l, dense_sketch_flops, st.median_s);
+        }
+
+        // --- full cold QB per sketch kind ---
+        for (name, kind) in kinds {
+            let o = opts.with_sketch(kind);
+            let st = bencher.time(|| {
+                let mut r = Pcg64::seed_from_u64(2);
+                qb(&x, o, &mut r)
+            });
+            push(&mut rows, format!("qb_{name}"), l, qb_flops, st.median_s);
+        }
+
+        // --- warm zero-allocation engine (the fit_with hot path) ---
+        {
+            let mut q = Mat::zeros(m, l);
+            let mut b = Mat::zeros(l, n);
+            let mut ws = Workspace::new();
+            let mut warm = Pcg64::seed_from_u64(3);
+            qb_into(&x, opts, &mut warm, &mut q, &mut b, &mut ws);
+            let st = bencher.time(|| {
+                let mut r = Pcg64::seed_from_u64(3);
+                qb_into(&x, opts, &mut r, &mut q, &mut b, &mut ws);
+                q.get(0, 0)
+            });
+            push(&mut rows, "qb_into_warm".to_string(), l, qb_flops, st.median_s);
+        }
+    }
+
+    // --- out-of-core engine over an in-memory source, warm workspace ---
+    {
+        let opts = QbOptions::new(16).with_oversample(20).with_power_iters(2);
+        let l = opts.sketch_width(m, n);
+        let qb_flops = 2.0 * (m * n * l) as f64 * (2 + 2 * opts.power_iters) as f64;
+        let src = MatSource(&x);
+        let mut ws = Workspace::new();
+        {
+            let mut warm = Pcg64::seed_from_u64(4);
+            let f = qb_blocked_with(&src, opts, 256, &mut warm, &mut ws).unwrap();
+            f.recycle(&mut ws);
+        }
+        let st = bencher.time(|| {
+            let mut r = Pcg64::seed_from_u64(4);
+            let f = qb_blocked_with(&src, opts, 256, &mut r, &mut ws).unwrap();
+            let v = f.q.get(0, 0);
+            f.recycle(&mut ws);
+            v
+        });
+        push(&mut rows, "qb_blocked_warm".to_string(), l, qb_flops, st.median_s);
+    }
+
+    let mut csv = Vec::new();
+    for r in &rows {
+        table.row(&[
+            r.kernel.clone(),
+            format!("{}x{}  l={}", r.m, r.n, r.k),
+            format!("{:.2}", r.median_s * 1e3),
+            format!("{:.2}", r.gflops),
+        ]);
+        csv.push(format!(
+            "{},{}x{},{},{:.6},{:.3}",
+            r.kernel, r.m, r.n, r.k, r.median_s, r.gflops
+        ));
+    }
+    print!("{}", table.render());
+
+    // Dense-vs-structured headline: the sparse-sign sketch's effective
+    // speedup over the dense uniform sketch at each width.
+    for r in rows.iter().filter(|r| r.kernel == "sketch_sparse_sign") {
+        if let Some(d) = rows
+            .iter()
+            .find(|d| d.kernel == "sketch_uniform" && d.k == r.k)
+        {
+            println!(
+                "sketch speedup sparse-sign/dense @ l={}: {:.2}x ({:.2} -> {:.2} eff. GFLOP/s)",
+                r.k,
+                d.median_s / r.median_s,
+                d.gflops,
+                r.gflops
+            );
+        }
+    }
+    println!("threads = {}", randnmf::linalg::gemm::num_threads());
+
+    let p = write_csv("perf_qb.csv", "kernel,shape,l,median_s,gflops", &csv);
+    println!("csv: {}", p.display());
+
+    update_bench_json("BENCH_gemm.json", &rows);
+    println!("json: BENCH_gemm.json (merged)");
+}

@@ -108,6 +108,110 @@ pub fn write_csv(name: &str, header: &str, rows: &[String]) -> std::path::PathBu
     path
 }
 
+/// One row of the machine-readable bench JSON (`BENCH_gemm.json` — the
+/// file CI uploads as an artifact so ROADMAP perf-table rows can be
+/// filled from a real run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchJsonRow {
+    pub kernel: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Thread count this row was measured at — recorded per row (not in
+    /// a file-level header) so merged rows from runs under different
+    /// `RANDNMF_THREADS` stay correctly labeled.
+    pub threads: usize,
+    pub median_s: f64,
+    pub gflops: f64,
+}
+
+/// Merge `rows` into the shared bench JSON at `path`, keyed on
+/// `(kernel, m, n, k, threads)`: rows with the same key are replaced,
+/// rows written by *other* bench binaries (or measured at other thread
+/// counts) are preserved. `bench_perf_gemm` and `bench_perf_qb`
+/// both write through this, so one CI job produces a single artifact with
+/// GEMM and dense-vs-structured sketch rows side by side.
+///
+/// The file is deliberately line-oriented (one row object per line, the
+/// exact shape `write_bench_json` emits) so the merge needs no JSON
+/// parser in this dependency-free crate; unparseable lines are dropped.
+pub fn update_bench_json(path: &str, rows: &[BenchJsonRow]) {
+    let mut merged: Vec<BenchJsonRow> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        for line in text.lines() {
+            if let Some(row) = parse_bench_json_row(line) {
+                merged.push(row);
+            }
+        }
+    }
+    merged.retain(|old| {
+        !rows.iter().any(|r| {
+            r.kernel == old.kernel
+                && r.m == old.m
+                && r.n == old.n
+                && r.k == old.k
+                && r.threads == old.threads
+        })
+    });
+    merged.extend(rows.iter().cloned());
+    write_bench_json(path, &merged);
+}
+
+/// Serialize the whole bench JSON (header + one row object per line).
+/// No run-level `threads`/`scale` header: thread counts are per row, and
+/// a run's scale is already self-described by each row's `m`/`n` shape —
+/// a single header would mislabel rows merged from differently-configured
+/// runs.
+fn write_bench_json(path: &str, rows: &[BenchJsonRow]) {
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"gemm\",\n");
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
+             \"threads\": {}, \"median_s\": {:.6}, \"gflops\": {:.3}}}{}\n",
+            r.kernel,
+            r.m,
+            r.n,
+            r.k,
+            r.threads,
+            r.median_s,
+            r.gflops,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(path, &json).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+}
+
+/// Parse one `{"kernel": ...}` result line (see [`update_bench_json`]).
+fn parse_bench_json_row(line: &str) -> Option<BenchJsonRow> {
+    let kernel = {
+        let key = "\"kernel\": \"";
+        let start = line.find(key)? + key.len();
+        let rest = &line[start..];
+        let end = rest.find('"')?;
+        rest[..end].to_string()
+    };
+    let num_field = |key: &str| -> Option<&str> {
+        let start = line.find(key)? + key.len();
+        let rest = &line[start..];
+        let end = rest
+            .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+            .unwrap_or(rest.len());
+        Some(&rest[..end])
+    };
+    Some(BenchJsonRow {
+        kernel,
+        m: num_field("\"m\": ")?.parse().ok()?,
+        n: num_field("\"n\": ")?.parse().ok()?,
+        k: num_field("\"k\": ")?.parse().ok()?,
+        threads: num_field("\"threads\": ")?.parse().ok()?,
+        median_s: num_field("\"median_s\": ")?.parse().ok()?,
+        gflops: num_field("\"gflops\": ")?.parse().ok()?,
+    })
+}
+
 /// Standard bench banner.
 pub fn banner(id: &str, what: &str) {
     println!("\n=== {id}: {what} ===");
@@ -156,5 +260,60 @@ mod tests {
         let p = write_csv("test_series.csv", "a,b", &["1,2".into(), "3,4".into()]);
         let text = std::fs::read_to_string(p).unwrap();
         assert_eq!(text, "a,b\n1,2\n3,4\n");
+    }
+
+    fn row(kernel: &str, m: usize, k: usize, gflops: f64) -> BenchJsonRow {
+        BenchJsonRow { kernel: kernel.into(), m, n: 10, k, threads: 1, median_s: 0.5, gflops }
+    }
+
+    #[test]
+    fn bench_json_merge_replaces_same_key_and_keeps_others() {
+        let dir = std::env::temp_dir().join("randnmf_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_merge.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        // First writer: two gemm-style rows.
+        let gemm_rows = [row("matmul", 100, 16, 3.0), row("matmul", 100, 64, 4.0)];
+        update_bench_json(path, &gemm_rows);
+        // Second writer: a qb row plus an updated matmul@16 row.
+        let qb_rows = [row("qb_uniform", 100, 16, 1.5), row("matmul", 100, 16, 9.0)];
+        update_bench_json(path, &qb_rows);
+        let text = std::fs::read_to_string(path).unwrap();
+        let rows: Vec<BenchJsonRow> =
+            text.lines().filter_map(parse_bench_json_row).collect();
+        assert_eq!(rows.len(), 3, "merge lost or duplicated rows: {text}");
+        let get = |kernel: &str, k: usize| {
+            rows.iter()
+                .find(|r| r.kernel == kernel && r.k == k)
+                .unwrap_or_else(|| panic!("missing {kernel}@{k} in {text}"))
+        };
+        assert_eq!(get("matmul", 16).gflops, 9.0, "same-key row must be replaced");
+        assert_eq!(get("matmul", 64).gflops, 4.0, "other bench's row must survive");
+        assert_eq!(get("qb_uniform", 16).gflops, 1.5);
+        // And the file stays valid line-oriented JSON for the next merge.
+        assert!(text.trim_start().starts_with('{') && text.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn bench_json_row_roundtrip() {
+        let r = BenchJsonRow {
+            kernel: "gram_wide".into(),
+            m: 2000,
+            n: 256,
+            k: 256,
+            threads: 4,
+            median_s: 0.012345,
+            gflops: 41.5,
+        };
+        let line = format!(
+            "    {{\"kernel\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
+             \"threads\": {}, \"median_s\": {:.6}, \"gflops\": {:.3}}},",
+            r.kernel, r.m, r.n, r.k, r.threads, r.median_s, r.gflops
+        );
+        let parsed = parse_bench_json_row(&line).unwrap();
+        assert_eq!(parsed, r);
+        assert_eq!(parse_bench_json_row("  ]"), None);
+        assert_eq!(parse_bench_json_row("  \"bench\": \"gemm\","), None);
     }
 }

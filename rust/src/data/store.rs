@@ -23,6 +23,7 @@ use std::fs::File;
 use std::io::Write;
 use std::os::unix::fs::FileExt;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -37,6 +38,14 @@ pub struct NmfStore {
     rows: usize,
     cols: usize,
     block: usize,
+    /// Reusable slab staging for `read_block_into`'s misaligned path:
+    /// grown once to the native slab size, then reused, so the
+    /// out-of-core reader performs one `pread` per slab and zero
+    /// steady-state allocations. Behind a mutex because reads take
+    /// `&self`; only the blocked-QB driver (single-threaded) uses it, so
+    /// contention is nil and `read_cols`' concurrent readers are
+    /// unaffected (they allocate their own slabs as before).
+    slab_scratch: Mutex<Vec<f64>>,
 }
 
 impl NmfStore {
@@ -54,7 +63,7 @@ impl NmfStore {
         if block == 0 || rows == 0 || cols == 0 {
             bail!("degenerate store dimensions {rows}x{cols} block {block}");
         }
-        Ok(NmfStore { file, rows, cols, block })
+        Ok(NmfStore { file, rows, cols, block, slab_scratch: Mutex::new(Vec::new()) })
     }
 
     pub fn rows(&self) -> usize {
@@ -123,6 +132,22 @@ impl NmfStore {
     }
 }
 
+/// View an `f64` slice as raw little-endian-file bytes for `pread`ing
+/// straight into matrix storage (no staging buffer, no allocation).
+fn as_bytes_mut(s: &mut [f64]) -> &mut [u8] {
+    // SAFETY: f64 and [u8; 8] have no invalid bit patterns; the slice
+    // covers exactly the same memory. Callers fix endianness afterwards.
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut u8, s.len() * 8) }
+}
+
+/// Reinterpret bytes just `pread` into `s` as little-endian `f64`s, in
+/// place (no-op on little-endian hosts).
+fn fix_le_in_place(s: &mut [f64]) {
+    for v in s {
+        *v = f64::from_bits(u64::from_le((*v).to_bits()));
+    }
+}
+
 impl ColumnBlockSource for NmfStore {
     fn rows(&self) -> usize {
         self.rows
@@ -132,6 +157,53 @@ impl ColumnBlockSource for NmfStore {
     }
     fn read_block(&self, j0: usize, j1: usize) -> Result<Mat> {
         self.read_cols(j0, j1)
+    }
+
+    /// Allocation-free block read: a block-aligned range is `pread`
+    /// directly into `out`'s storage; a misaligned range reads each
+    /// overlapped slab whole into the store's reusable staging buffer and
+    /// copies the needed column segments out. Either way: one contiguous
+    /// read per slab, endian-fix in place, zero steady-state allocations
+    /// once the buffers are warm — what the out-of-core QB path relies on.
+    fn read_block_into(&self, j0: usize, j1: usize, out: &mut Mat) -> Result<()> {
+        anyhow::ensure!(j0 < j1 && j1 <= self.cols, "bad column range {j0}..{j1}");
+        let w = j1 - j0;
+        out.resize(self.rows, w);
+        // Fast path: the range is exactly one whole native block — the
+        // on-disk slab layout matches `out` row-major, one contiguous read.
+        if j0 % self.block == 0 && self.block_cols_of(j0 / self.block) == w {
+            let bi = j0 / self.block;
+            self.file
+                .read_exact_at(as_bytes_mut(out.as_mut_slice()), self.block_offset(bi))
+                .with_context(|| format!("reading block {bi}"))?;
+            fix_le_in_place(out.as_mut_slice());
+            return Ok(());
+        }
+        // General path: one whole-slab `pread` per overlapped native
+        // block into the reusable staging buffer, then copy the needed
+        // column segments out row by row.
+        let mut scratch = self.slab_scratch.lock().unwrap_or_else(|e| e.into_inner());
+        let mut bi = j0 / self.block;
+        loop {
+            let b0 = bi * self.block;
+            if b0 >= j1 {
+                break;
+            }
+            let bw = self.block_cols_of(bi);
+            let lo = j0.max(b0);
+            let hi = j1.min(b0 + bw);
+            scratch.resize(self.rows * bw, 0.0);
+            self.file
+                .read_exact_at(as_bytes_mut(&mut scratch[..]), self.block_offset(bi))
+                .with_context(|| format!("reading block {bi}"))?;
+            fix_le_in_place(&mut scratch[..]);
+            for i in 0..self.rows {
+                let src = &scratch[i * bw + (lo - b0)..i * bw + (hi - b0)];
+                out.row_mut(i)[lo - j0..hi - j0].copy_from_slice(src);
+            }
+            bi += 1;
+        }
+        Ok(())
     }
 }
 
@@ -253,6 +325,23 @@ mod tests {
         w.write_block(&rng.uniform_mat(4, 2)).unwrap(); // final short block
         w.finish().unwrap();
         assert_eq!(NmfStore::open(&path).unwrap().cols(), 10);
+    }
+
+    #[test]
+    fn read_block_into_matches_read_cols_any_range() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let m = rng.uniform_mat(11, 29);
+        let path = tmp("block_into.nmfstore");
+        write_mat(&path, &m, 6).unwrap();
+        let store = NmfStore::open(&path).unwrap();
+        // One reusable buffer across aligned, straddling, and short ranges.
+        let mut buf = crate::linalg::mat::Mat::zeros(1, 1);
+        for (j0, j1) in [(0, 6), (6, 12), (24, 29), (0, 29), (4, 9), (5, 23), (28, 29)] {
+            store.read_block_into(j0, j1, &mut buf).unwrap();
+            assert_eq!(buf, m.col_block(j0, j1), "{j0}..{j1}");
+        }
+        assert!(store.read_block_into(3, 3, &mut buf).is_err());
+        assert!(store.read_block_into(0, 30, &mut buf).is_err());
     }
 
     #[test]

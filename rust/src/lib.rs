@@ -29,12 +29,19 @@
 //!   scratch; solver loops allocate everything before iterating, so
 //!   steady-state iterations perform zero heap allocations (enforced by
 //!   `tests/test_zero_alloc.rs` and `tests/test_zero_alloc_pool.rs`).
+//!   The randomized solvers go further: `RandomizedHals::fit_with` /
+//!   `CompressedMu::fit_with` run the *entire* fit — QB compression
+//!   stage included, via [`sketch::qb::qb_into`] and the Gram-based
+//!   CholeskyQR2 of [`linalg::qr::orthonormalize_into`] — out of one
+//!   reusable scratch, so a warm fit allocates nothing at all.
 //! * **Persistent worker pool** ([`linalg::pool`]) — threaded kernels
 //!   never spawn threads per call: workers are spawned once (sized by
 //!   `RANDNMF_THREADS`), parked between calls, and fed pre-partitioned
 //!   ranges through lock-free job cells. The packed BLIS-style GEMM
 //!   engine ([`linalg::gemm`]) rides on both, with triangle-aware Gram
-//!   kernels computing only the upper triangle of `WᵀW`/`HHᵀ`.
+//!   kernels computing only the upper triangle of `WᵀW`/`HHᵀ`, and the
+//!   compression stage (dense or sparse-sign sketches, power iterations,
+//!   `B = QᵀX`) dispatches its large products onto the same pool.
 //!
 //! ## Quickstart
 //!
@@ -68,6 +75,6 @@ pub mod prelude {
     pub use crate::nmf::hals::Hals;
     pub use crate::nmf::model::{NmfFit, NmfModel};
     pub use crate::nmf::options::{Init, NmfOptions, Regularization, UpdateOrder};
-    pub use crate::nmf::rhals::RandomizedHals;
-    pub use crate::sketch::qb::{qb, QbOptions};
+    pub use crate::nmf::rhals::{RandomizedHals, RhalsScratch};
+    pub use crate::sketch::qb::{qb, QbOptions, SketchKind};
 }

@@ -254,7 +254,7 @@ thread_local! {
     /// sweep really skips every strictly-lower tile (single-threaded
     /// shapes keep all visits on the test's own thread).
     pub(crate) static GRAM_TILE_VISITS: std::cell::Cell<usize> =
-        std::cell::Cell::new(0);
+        const { std::cell::Cell::new(0) };
 }
 
 /// Triangle-aware variant of [`packed_gemm`] for the symmetric Gram
@@ -358,9 +358,12 @@ fn driver_row_split(
     k: usize,
     c: &mut Mat,
     ws: &mut Workspace,
+    accumulate: bool,
 ) {
     debug_assert_eq!(c.shape(), (m, n));
-    c.as_mut_slice().fill(0.0);
+    if !accumulate {
+        c.as_mut_slice().fill(0.0);
+    }
     if m == 0 || n == 0 || k == 0 {
         return;
     }
@@ -373,17 +376,7 @@ fn driver_row_split(
         ws.release_vec(pb);
         return;
     }
-    let chunk = m.div_ceil(nchunks);
-    let njobs = m.div_ceil(chunk);
-    let cptr = SyncPtr(c.as_mut_slice().as_mut_ptr());
-    let mut sess = pool::session();
-    sess.run(njobs, &|j, scratch| {
-        let i0 = j * chunk;
-        let i1 = (i0 + chunk).min(m);
-        // SAFETY: jobs own disjoint row ranges [i0, i1) of `c`, which
-        // outlives the dispatch (`run` joins every job before returning).
-        let cslice =
-            unsafe { std::slice::from_raw_parts_mut(cptr.0.add(i0 * n), (i1 - i0) * n) };
+    pool::run_row_split(nchunks, m, n, c.as_mut_slice(), &|cslice, i0, i1, scratch| {
         packed_gemm(a, b, i0, i1, n, 0, k, cslice, &mut scratch.pa, &mut scratch.pb);
     });
 }
@@ -502,7 +495,20 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "matmul: inner dims {k} != {kb}");
     assert_eq!(c.shape(), (m, n), "matmul_into: output must be {m}x{n}");
-    driver_row_split(Op::Normal(a), Op::Normal(b), m, n, k, c, ws);
+    driver_row_split(Op::Normal(a), Op::Normal(b), m, n, k, c, ws, false);
+}
+
+/// `C += A·B` into `c` — the accumulating form of [`matmul_into`], for
+/// callers that build a product incrementally (the out-of-core sketch sums
+/// per-chunk contributions `Y += X_b·Ω_b` into one output). Same packed
+/// engine and threading; the only difference is that `c` is not zeroed
+/// first, which is sound because the packed core only ever accumulates.
+pub fn matmul_acc_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
+    let (m, k) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "matmul: inner dims {k} != {kb}");
+    assert_eq!(c.shape(), (m, n), "matmul_acc_into: output must be {m}x{n}");
+    driver_row_split(Op::Normal(a), Op::Normal(b), m, n, k, c, ws, true);
 }
 
 /// `C = Aᵀ·B` into `c` for `A (m×k)`, `B (m×n)`, `c (k×n)`.
@@ -520,7 +526,7 @@ pub fn a_bt_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
     let (n, kb) = b.shape();
     assert_eq!(k, kb, "a_bt: inner dims {k} != {kb}");
     assert_eq!(c.shape(), (m, n), "a_bt_into: output must be {m}x{n}");
-    driver_row_split(Op::Normal(a), Op::Trans(b), m, n, k, c, ws);
+    driver_row_split(Op::Normal(a), Op::Trans(b), m, n, k, c, ws, false);
 }
 
 /// Gram matrix `G = AᵀA` into `g` for `A (m×k)`, `g (k×k)`. Exactly
@@ -797,6 +803,30 @@ mod tests {
             let err = c.max_abs_diff(&matmul_naive(&a, &b));
             assert!(err < 1e-9, "{m}x{n}x{k}: err={err}");
         }
+    }
+
+    #[test]
+    fn matmul_acc_into_accumulates() {
+        let a = random(65, 30, 21);
+        let b = random(30, 41, 22);
+        let mut ws = Workspace::new();
+        // Split the depth into two halves; the accumulated sum of the two
+        // partial products must equal the full product.
+        let a_lo = a.col_block(0, 15);
+        let a_hi = a.col_block(15, 30);
+        let b_lo = b.row_block(0, 15);
+        let b_hi = b.row_block(15, 30);
+        let mut c = Mat::zeros(65, 41);
+        matmul_acc_into(&a_lo, &b_lo, &mut c, &mut ws);
+        matmul_acc_into(&a_hi, &b_hi, &mut c, &mut ws);
+        let full = matmul(&a, &b);
+        assert!(c.max_abs_diff(&full) < 1e-11);
+        // And accumulating onto an existing value adds, not overwrites.
+        let mut d = Mat::full(65, 41, 1.0);
+        matmul_acc_into(&a, &b, &mut d, &mut ws);
+        let mut expect = full.clone();
+        expect.map_inplace(|v| v + 1.0);
+        assert!(d.max_abs_diff(&expect) < 1e-11);
     }
 
     #[test]

@@ -158,9 +158,29 @@ impl Mat {
         self.row_mut(i).copy_from_slice(v);
     }
 
+    /// Reshape to `rows×cols`, reusing the existing storage capacity.
+    /// Newly exposed entries are zero; surviving entries are **not**
+    /// preserved in any meaningful layout (callers overwrite). This is the
+    /// primitive behind reusable block buffers (`read_block_into` in the
+    /// out-of-core sketch path): once the buffer has seen its largest
+    /// shape, later `resize` calls never allocate.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.data.resize(rows * cols, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+    }
+
     /// Explicit transpose (cache-blocked for large matrices).
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Transpose into a caller-owned `cols×rows` matrix (cache-blocked);
+    /// the allocation-free form of [`Mat::transpose`].
+    pub fn transpose_into(&self, t: &mut Mat) {
+        assert_eq!(t.shape(), (self.cols, self.rows), "transpose_into: bad shape");
         const B: usize = 64;
         for ib in (0..self.rows).step_by(B) {
             for jb in (0..self.cols).step_by(B) {
@@ -173,7 +193,6 @@ impl Mat {
                 }
             }
         }
-        t
     }
 
     /// Copy a contiguous block of columns `[j0, j1)` into a new matrix.
@@ -422,6 +441,29 @@ mod tests {
         m.set_row(0, &[1.0, 2.0]);
         m.set_col(1, &[9.0, 8.0]);
         assert_eq!(m.as_slice(), &[1.0, 9.0, 0.0, 8.0]);
+    }
+
+    #[test]
+    fn resize_reuses_capacity_and_zero_fills() {
+        let mut m = Mat::full(4, 5, 7.0);
+        let cap_ptr = m.as_slice().as_ptr();
+        m.resize(2, 3);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.as_slice().as_ptr(), cap_ptr, "shrink must not reallocate");
+        m.resize(4, 5);
+        assert_eq!(m.shape(), (4, 5));
+        assert_eq!(m.as_slice().as_ptr(), cap_ptr, "regrow within capacity must not reallocate");
+        m.resize(1, 30);
+        assert_eq!(m.len(), 30);
+        assert!(m.as_slice()[20..].iter().all(|&v| v == 0.0), "new tail is zeroed");
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let m = Mat::from_fn(13, 9, |i, j| (i * 31 + j) as f64);
+        let mut t = Mat::zeros(9, 13);
+        m.transpose_into(&mut t);
+        assert_eq!(t, m.transpose());
     }
 
     #[test]

@@ -19,8 +19,10 @@
 //!   and the solvers' zero-allocation steady-state loops (the `_into`
 //!   kernels never allocate once warm — the discipline every solver loop
 //!   in this crate is written against).
-//! * [`qr`] — economic Householder QR (the orthonormalization step of the
-//!   randomized range finder, Algorithm 2 of the paper).
+//! * [`qr`] — orthonormalization for the randomized range finder:
+//!   Gram-based CholeskyQR2 on the packed/pooled engine (zero-allocation
+//!   `orthonormalize_into`) with an economic Householder QR as the
+//!   unconditionally stable fallback.
 //! * [`svd`] — one-sided Jacobi SVD plus a randomized SVD built on QB
 //!   (used for NNDSVD/rSVD initialization and the SVD baselines).
 //! * [`rng`] — PCG64 pseudo-random generator with uniform and Gaussian

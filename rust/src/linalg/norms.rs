@@ -2,6 +2,7 @@
 
 use super::gemm;
 use super::mat::Mat;
+use super::workspace::Workspace;
 
 /// Squared Frobenius norm `‖A‖_F²`.
 pub fn fro_norm_sq(a: &Mat) -> f64 {
@@ -31,21 +32,41 @@ pub fn vec_norm(v: &[f64]) -> f64 {
 /// only `O(kn + k²)` memory, which matters at the paper's 100,000×5,000
 /// scale. `x_norm_sq` is `‖X‖_F²`, precomputed once per fit.
 pub fn residual_norm_sq_factored(x: &Mat, x_norm_sq: f64, w: &Mat, h: &Mat) -> f64 {
-    let wtx = gemm::at_b(w, x); // k×n
+    residual_norm_sq_factored_with(x, x_norm_sq, w, h, &mut Workspace::new())
+}
+
+/// [`residual_norm_sq_factored`] with its three temporaries (`WᵀX`,
+/// `WᵀW`, `HHᵀ`) drawn from a caller workspace — the allocation-free form
+/// used by the `fit_with` solver entry points.
+pub fn residual_norm_sq_factored_with(
+    x: &Mat,
+    x_norm_sq: f64,
+    w: &Mat,
+    h: &Mat,
+    ws: &mut Workspace,
+) -> f64 {
+    let k = w.cols();
+    let mut wtx = ws.acquire_mat(k, x.cols()); // k×n
+    gemm::at_b_into(w, x, &mut wtx, ws);
     let cross: f64 = wtx
         .as_slice()
         .iter()
         .zip(h.as_slice().iter())
         .map(|(a, b)| a * b)
         .sum();
-    let wtw = gemm::gram(w); // k×k
-    let hht = gemm::gram_t(h); // k×k
+    ws.release_mat(wtx);
+    let mut wtw = ws.acquire_mat(k, k);
+    gemm::gram_into(w, &mut wtw, ws);
+    let mut hht = ws.acquire_mat(k, k);
+    gemm::gram_t_into(h, &mut hht, ws);
     let quad: f64 = wtw
         .as_slice()
         .iter()
         .zip(hht.as_slice().iter())
         .map(|(a, b)| a * b)
         .sum();
+    ws.release_mat(hht);
+    ws.release_mat(wtw);
     // Clamp: floating cancellation can push a tiny true residual negative.
     (x_norm_sq - 2.0 * cross + quad).max(0.0)
 }
@@ -53,11 +74,17 @@ pub fn residual_norm_sq_factored(x: &Mat, x_norm_sq: f64, w: &Mat, h: &Mat) -> f
 /// Relative reconstruction error `‖X − WH‖_F / ‖X‖_F` — the "Error" column
 /// of the paper's Tables 1–3.
 pub fn relative_error(x: &Mat, w: &Mat, h: &Mat) -> f64 {
+    relative_error_with(x, w, h, &mut Workspace::new())
+}
+
+/// [`relative_error`] with workspace-pooled temporaries (allocation-free
+/// once warm).
+pub fn relative_error_with(x: &Mat, w: &Mat, h: &Mat, ws: &mut Workspace) -> f64 {
     let xn = fro_norm_sq(x);
     if xn == 0.0 {
         return 0.0;
     }
-    (residual_norm_sq_factored(x, xn, w, h) / xn).sqrt()
+    (residual_norm_sq_factored_with(x, xn, w, h, ws) / xn).sqrt()
 }
 
 /// Explicit-residual relative error (O(mn) memory) — test oracle for

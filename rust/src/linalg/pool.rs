@@ -71,7 +71,7 @@ thread_local! {
     /// job 0). [`session`] checks it so a nested dispatch — which would
     /// deadlock on the non-reentrant dispatch mutex — panics immediately
     /// with a diagnosis instead of hanging silently.
-    static IN_POOL_CONTEXT: Cell<bool> = Cell::new(false);
+    static IN_POOL_CONTEXT: Cell<bool> = const { Cell::new(false) };
 }
 
 /// Per-worker persistent scratch. Lives as long as the worker; capacities
@@ -268,6 +268,11 @@ impl Session {
     /// `njobs` must not exceed [`max_jobs`] (callers partition work with
     /// [`num_threads`], which is the same bound). Jobs must not dispatch
     /// nested parallel work — the pool is single-level by design.
+    // The transmute is deliberate and cannot be a plain `as` cast: it
+    // erases the closure reference's lifetime into the `'static`-bounded
+    // trait-object pointer the mailbox stores (sound because `run` joins
+    // every worker before returning — see the SAFETY note below).
+    #[allow(clippy::useless_transmute, clippy::transmutes_expressible_as_ptr_casts)]
     pub fn run(&mut self, njobs: usize, job: JobFn<'_>) {
         assert!(njobs >= 1, "run: njobs must be >= 1");
         let nworkers = njobs - 1;
@@ -338,7 +343,7 @@ impl Session {
     ///
     /// [`run`]: Session::run
     pub fn scratch(&mut self, j: usize) -> &mut WorkerScratch {
-        assert!(j >= 1 && j <= self.active, "scratch: job {j} not in last run");
+        assert!((1..=self.active).contains(&j), "scratch: job {j} not in last run");
         // SAFETY: worker j-1 is IDLE (we observed DONE with acquire and
         // store IDLE ourselves), and `&mut self` prevents aliased access.
         unsafe { &mut *self.pool.workers[j - 1].cell.scratch.get() }
@@ -352,6 +357,39 @@ pub(crate) struct SyncPtr(pub *mut f64);
 // dispatch because `Session::run` joins before returning.
 unsafe impl Sync for SyncPtr {}
 unsafe impl Send for SyncPtr {}
+
+/// Shared **row-split** fork–join: split the `rows`-row, `row_len`-wide
+/// output `out` into at most `nchunks` contiguous row ranges and run
+/// `kernel(chunk_slice, i0, i1, scratch)` for each on the pool (caller is
+/// job 0). This is the single audited disjoint-`&mut`-carve used by every
+/// row-parallel kernel in the crate — the packed GEMM drivers, the
+/// CholeskyQR triangular solve, the sparse-sign sketch apply, and the
+/// HALS factor sweep. Callers handle `nchunks <= 1` themselves (the
+/// single-threaded path must not touch the pool).
+pub(crate) fn run_row_split(
+    nchunks: usize,
+    rows: usize,
+    row_len: usize,
+    out: &mut [f64],
+    kernel: &(dyn Fn(&mut [f64], usize, usize, &mut WorkerScratch) + Sync),
+) {
+    debug_assert!(nchunks >= 2);
+    debug_assert_eq!(out.len(), rows * row_len);
+    let chunk = rows.div_ceil(nchunks);
+    let njobs = rows.div_ceil(chunk);
+    let ptr = SyncPtr(out.as_mut_ptr());
+    let mut sess = session();
+    sess.run(njobs, &|j, scratch| {
+        let i0 = j * chunk;
+        let i1 = (i0 + chunk).min(rows);
+        // SAFETY: jobs own disjoint row ranges [i0, i1) of `out`, which
+        // outlives the dispatch (`run` joins every job before returning).
+        let slice = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(i0 * row_len), (i1 - i0) * row_len)
+        };
+        kernel(slice, i0, i1, scratch);
+    });
+}
 
 #[cfg(test)]
 mod tests {

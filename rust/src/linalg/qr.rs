@@ -1,13 +1,42 @@
-//! Economic Householder QR.
+//! Orthonormalization kernels for the randomized range finder.
 //!
-//! The randomized range finder (paper Algorithm 2, lines 7/10) repeatedly
-//! orthonormalizes a tall skinny sketch `Y (m×l)`; this module provides that
-//! `qr` → `Q` step. The implementation stores reflectors below the diagonal
-//! (LAPACK `geqrf` layout) and forms the thin `Q (m×l)` by backward
-//! accumulation. All inner loops stream matrix **rows**, matching the
-//! row-major storage of [`Mat`].
+//! The compression stage (paper Algorithm 1, lines 4–8) repeatedly
+//! orthonormalizes a tall skinny sketch `Y (m×l)`. Two engines provide
+//! that `qr` → `Q` step:
+//!
+//! * [`orthonormalize_into`] — **CholeskyQR2** (Fukaya et al. 2014), the
+//!   Gram-based QR: `G = YᵀY`, `R = chol(G)`, `Q = Y·R⁻¹`, run twice for
+//!   machine-precision orthonormality. Both `O(m·l²)` halves of a round
+//!   run pool-parallel and allocation-free from a caller [`Workspace`]:
+//!   the Gram inner products on the packed
+//!   [`crate::linalg::gemm::gram_into`] kernel (inner-dimension split),
+//!   and the triangular solve `Q ← Q·R⁻¹` as disjoint row chunks on the
+//!   same persistent pool. This is the hot path of the zero-allocation
+//!   compression engine in [`crate::sketch`].
+//! * Householder QR ([`qr`], and the automatic fallback inside
+//!   [`orthonormalize_into`]) — unconditionally stable: reflectors stored
+//!   below the diagonal (LAPACK `geqrf` layout), thin `Q` by backward
+//!   accumulation, all inner loops streaming matrix **rows**. CholeskyQR
+//!   breaks down when `cond(Y)² ≳ 1/ε` — in particular on the exactly
+//!   rank-deficient sketches that oversampled QB produces on low-rank
+//!   data — and the breakdown is *detected* (non-positive Cholesky pivot)
+//!   and handled by re-orthonormalizing the original input with
+//!   Householder, also allocation-free from the same workspace.
+//!
+//! Both paths are deterministic for a fixed thread count, so a fixed seed
+//! reproduces a decomposition bit-for-bit.
 
+use super::gemm;
 use super::mat::Mat;
+use super::pool;
+use super::workspace::Workspace;
+
+/// Relative Cholesky-pivot floor: a diagonal pivot below
+/// `RELATIVE_PIVOT_FLOOR · max_diag(G)` (or non-finite) is treated as a
+/// breakdown and routes [`orthonormalize_into`] to the Householder
+/// fallback. Conservative on purpose: falling back costs flops, not
+/// accuracy.
+const RELATIVE_PIVOT_FLOOR: f64 = 1e-10;
 
 /// Result of an economic QR factorization of an `m×n` matrix with `m ≥ n`.
 pub struct QrFactors {
@@ -23,7 +52,8 @@ pub fn qr(a: &Mat) -> QrFactors {
     assert!(m >= n, "qr: need m >= n, got {m}x{n}");
     let mut work = a.clone();
     let mut taus = vec![0.0f64; n];
-    factor_inplace(&mut work, &mut taus);
+    let mut wbuf = vec![0.0f64; n];
+    factor_inplace(&mut work, &mut taus, &mut wbuf);
 
     // Extract R (n×n upper triangle).
     let mut r = Mat::zeros(n, n);
@@ -33,27 +63,164 @@ pub fn qr(a: &Mat) -> QrFactors {
         }
     }
 
-    // Form thin Q by applying H_0 H_1 ... H_{n-1} to the first n columns of
-    // the identity, in reverse order.
     let mut q = Mat::zeros(m, n);
-    for j in 0..n {
-        q.set(j, j, 1.0);
-    }
-    for j in (0..n).rev() {
-        apply_reflector(&work, j, taus[j], &mut q);
-    }
+    form_thin_q(&work, &taus, &mut q, &mut wbuf);
     QrFactors { q, r }
 }
 
 /// Orthonormal basis of the range of `a` — the `orth(Y)` used by the range
-/// finder. Just the `Q` of [`qr`].
+/// finder. Allocating wrapper over [`orthonormalize_into`].
 pub fn orthonormalize(a: &Mat) -> Mat {
-    qr(a).q
+    let mut q = Mat::zeros(a.rows(), a.cols());
+    orthonormalize_into(a, &mut q, &mut Workspace::new());
+    q
+}
+
+/// Orthonormal basis of the range of `a (m×n, m ≥ n)` written into the
+/// caller-owned `q (m×n)`, with every temporary drawn from `ws` — zero
+/// heap allocations once the workspace is warm.
+///
+/// Strategy: CholeskyQR2 (see the module docs) with its Gram products on
+/// the pool-parallel packed engine; on a detected Cholesky breakdown
+/// (rank-deficient or extremely ill-conditioned input) the original `a`
+/// is re-orthonormalized with Householder reflections instead, so the
+/// result is always a full orthonormal basis, exactly as stable as the
+/// classic path.
+pub fn orthonormalize_into(a: &Mat, q: &mut Mat, ws: &mut Workspace) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "orthonormalize_into: need m >= n, got {m}x{n}");
+    assert_eq!(q.shape(), (m, n), "orthonormalize_into: output must be {m}x{n}");
+    if n == 0 || m == 0 {
+        return;
+    }
+
+    // --- CholeskyQR2 attempt ---
+    q.as_mut_slice().copy_from_slice(a.as_slice());
+    let mut g = ws.acquire_mat(n, n);
+    let mut ok = true;
+    for _ in 0..2 {
+        gemm::gram_into(q, &mut g, ws); // G = QᵀQ (pool-parallel)
+        if !cholesky_upper_in_place(&mut g) {
+            ok = false;
+            break;
+        }
+        trsm_right_upper_in_place(q, &g); // Q ← Q·R⁻¹
+    }
+    ws.release_mat(g);
+    if ok {
+        return;
+    }
+
+    // --- Householder fallback on the pristine input ---
+    let mut work = ws.acquire_mat(m, n);
+    work.as_mut_slice().copy_from_slice(a.as_slice());
+    let mut taus = ws.acquire_vec(n);
+    let mut wbuf = ws.acquire_vec(n);
+    factor_inplace(&mut work, &mut taus, &mut wbuf);
+    form_thin_q(&work, &taus, q, &mut wbuf);
+    ws.release_vec(wbuf);
+    ws.release_vec(taus);
+    ws.release_mat(work);
+}
+
+/// Upper Cholesky factorization `G = RᵀR` computed in place on the upper
+/// triangle of `g` (the strict lower triangle is left untouched and
+/// ignored by [`trsm_right_upper_in_place`]). Returns `false` on
+/// breakdown — a pivot at or below [`RELATIVE_PIVOT_FLOOR`] relative to
+/// the largest input diagonal, or any non-finite value.
+fn cholesky_upper_in_place(g: &mut Mat) -> bool {
+    let n = g.rows();
+    let mut scale = 0.0f64;
+    for j in 0..n {
+        scale = scale.max(g.get(j, j).abs());
+    }
+    if !scale.is_finite() {
+        return false;
+    }
+    let floor = scale * RELATIVE_PIVOT_FLOOR;
+    for j in 0..n {
+        let mut d = g.get(j, j);
+        for i in 0..j {
+            let rij = g.get(i, j);
+            d -= rij * rij;
+        }
+        if !d.is_finite() || d <= floor {
+            return false;
+        }
+        let rjj = d.sqrt();
+        g.set(j, j, rjj);
+        let inv = 1.0 / rjj;
+        for c in j + 1..n {
+            let mut v = g.get(j, c);
+            for i in 0..j {
+                v -= g.get(i, j) * g.get(i, c);
+            }
+            g.set(j, c, v * inv);
+        }
+    }
+    true
+}
+
+/// Threading gate for the triangular solve, mirroring the GEMM kernels'
+/// `≥ 2²⁰` flop criterion (the solve is `m·l²` flops).
+const TRSM_PAR_THRESHOLD: usize = 1 << 20;
+
+/// In-place triangular solve `Q ← Q·R⁻¹` for upper-triangular `R` (only
+/// the upper triangle of `r` is read). Each row of `Q` is an independent
+/// forward substitution in ascending column order (so the solve is done
+/// in place), which makes the sweep embarrassingly parallel over rows:
+/// like the GEMM drivers it fans disjoint row chunks out onto the
+/// persistent pool, so both halves of a CholeskyQR round — the Gram and
+/// this solve — scale with the worker count.
+fn trsm_right_upper_in_place(q: &mut Mat, r: &Mat) {
+    let (m, n) = q.shape();
+    debug_assert_eq!(r.shape(), (n, n));
+    let flops = m.saturating_mul(n).saturating_mul(n);
+    let nthreads = if flops < TRSM_PAR_THRESHOLD || m < 2 {
+        1
+    } else {
+        gemm::num_threads().min(m)
+    };
+    if nthreads <= 1 {
+        trsm_rows(q.as_mut_slice(), n, r);
+        return;
+    }
+    pool::run_row_split(nthreads, m, n, q.as_mut_slice(), &|rows, _i0, _i1, _scratch| {
+        trsm_rows(rows, n, r);
+    });
+}
+
+/// The per-row forward substitution over a contiguous span of `Q` rows.
+fn trsm_rows(rows: &mut [f64], n: usize, r: &Mat) {
+    for row in rows.chunks_exact_mut(n) {
+        for j in 0..n {
+            let mut v = row[j];
+            for p in 0..j {
+                v -= row[p] * r.get(p, j);
+            }
+            row[j] = v / r.get(j, j);
+        }
+    }
+}
+
+/// Form the thin `Q (m×n)` from a factored `work` matrix by applying
+/// `H_0 H_1 ⋯ H_{n-1}` to the first `n` columns of the identity, in
+/// reverse order. `wbuf` is scratch of length ≥ `n`.
+fn form_thin_q(work: &Mat, taus: &[f64], q: &mut Mat, wbuf: &mut [f64]) {
+    let n = q.cols();
+    q.as_mut_slice().fill(0.0);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for j in (0..n).rev() {
+        apply_reflector(work, j, taus[j], q, wbuf);
+    }
 }
 
 /// In-place Householder factorization; reflector `j` is stored in column `j`
-/// below the diagonal with the implicit leading 1.
-fn factor_inplace(a: &mut Mat, taus: &mut [f64]) {
+/// below the diagonal with the implicit leading 1. `wbuf` is scratch of
+/// length ≥ `n` (only `n − j − 1` entries are used per column).
+fn factor_inplace(a: &mut Mat, taus: &mut [f64], wbuf: &mut [f64]) {
     let (m, n) = a.shape();
     for j in 0..n {
         // Norm of the j-th column below (and including) the diagonal.
@@ -83,13 +250,11 @@ fn factor_inplace(a: &mut Mat, taus: &mut [f64]) {
         // rows: w = (vᵀ A_trail)ᵀ, then A_trail -= tau v wᵀ.
         if j + 1 < n {
             let width = n - (j + 1);
-            let mut w = vec![0.0f64; width];
+            let w = &mut wbuf[..width];
             // row j contributes with implicit v[j] = 1
             {
                 let row = &a.row(j)[j + 1..];
-                for (c, wc) in w.iter_mut().enumerate() {
-                    *wc += row[c];
-                }
+                w.copy_from_slice(row);
             }
             for i in j + 1..m {
                 let vi = a.get(i, j);
@@ -104,7 +269,7 @@ fn factor_inplace(a: &mut Mat, taus: &mut [f64]) {
             {
                 let row = &mut a.row_mut(j)[j + 1..];
                 for (c, rc) in row.iter_mut().enumerate() {
-                    *rc -= tau * w[c];
+                    *rc -= tau * wbuf[c];
                 }
             }
             for i in j + 1..m {
@@ -113,7 +278,7 @@ fn factor_inplace(a: &mut Mat, taus: &mut [f64]) {
                     let row = &mut a.row_mut(i)[j + 1..];
                     let s = tau * vi;
                     for (c, rc) in row.iter_mut().enumerate() {
-                        *rc -= s * w[c];
+                        *rc -= s * wbuf[c];
                     }
                 }
             }
@@ -121,18 +286,17 @@ fn factor_inplace(a: &mut Mat, taus: &mut [f64]) {
     }
 }
 
-/// Apply reflector `j` (stored in `work`) to all columns of `c`.
-fn apply_reflector(work: &Mat, j: usize, tau: f64, c: &mut Mat) {
+/// Apply reflector `j` (stored in `work`) to all columns of `c`. `wbuf` is
+/// scratch of length ≥ `c.cols()`.
+fn apply_reflector(work: &Mat, j: usize, tau: f64, c: &mut Mat, wbuf: &mut [f64]) {
     if tau == 0.0 {
         return;
     }
     let m = work.rows();
     let n = c.cols();
+    let w = &mut wbuf[..n];
     // w = vᵀ C  (v has implicit 1 at position j, entries below from work)
-    let mut w = vec![0.0f64; n];
-    for (col, wc) in w.iter_mut().enumerate() {
-        *wc = c.get(j, col);
-    }
+    w.copy_from_slice(c.row(j));
     for i in j + 1..m {
         let vi = work.get(i, j);
         if vi != 0.0 {
@@ -146,7 +310,7 @@ fn apply_reflector(work: &Mat, j: usize, tau: f64, c: &mut Mat) {
     {
         let row = c.row_mut(j);
         for (col, rc) in row.iter_mut().enumerate() {
-            *rc -= tau * w[col];
+            *rc -= tau * wbuf[col];
         }
     }
     for i in j + 1..m {
@@ -155,7 +319,7 @@ fn apply_reflector(work: &Mat, j: usize, tau: f64, c: &mut Mat) {
             let s = tau * vi;
             let row = c.row_mut(i);
             for (col, rc) in row.iter_mut().enumerate() {
-                *rc -= s * w[col];
+                *rc -= s * wbuf[col];
             }
         }
     }
@@ -235,5 +399,76 @@ mod tests {
         let qta = gemm::at_b(&q, &a);
         let back = gemm::matmul(&q, &qta);
         assert!(back.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_qr2_orthonormal_to_machine_precision() {
+        // Well-conditioned tall input: the CholeskyQR2 path must deliver
+        // QᵀQ = I far below the 1e-9 the range finder needs, and QQᵀA = A.
+        let mut rng = Pcg64::seed_from_u64(8);
+        for (m, n) in [(40usize, 1usize), (60, 7), (300, 24), (128, 32)] {
+            let a = rng.gaussian_mat(m, n);
+            let q = orthonormalize(&a);
+            let qtq = gemm::gram(&q);
+            assert!(
+                qtq.max_abs_diff(&Mat::eye(n)) < 1e-12,
+                "{m}x{n}: CholeskyQR2 orthonormality"
+            );
+            let back = gemm::matmul(&q, &gemm::at_b(&q, &a));
+            assert!(back.max_abs_diff(&a) < 1e-9, "{m}x{n}: range preserved");
+        }
+    }
+
+    #[test]
+    fn orthonormalize_rank_deficient_falls_back_cleanly() {
+        // Exactly rank-2 input with 5 columns: Cholesky must break down and
+        // the Householder fallback must still return an orthonormal basis
+        // containing the range.
+        let mut rng = Pcg64::seed_from_u64(9);
+        let u = rng.gaussian_mat(40, 2);
+        let v = rng.gaussian_mat(2, 5);
+        let a = gemm::matmul(&u, &v);
+        let q = orthonormalize(&a);
+        let qtq = gemm::gram(&q);
+        assert!(qtq.max_abs_diff(&Mat::eye(5)) < 1e-8);
+        let back = gemm::matmul(&q, &gemm::at_b(&q, &a));
+        assert!(back.max_abs_diff(&a) < 1e-9, "range of a rank-deficient input");
+    }
+
+    #[test]
+    fn orthonormalize_into_is_allocation_free_shape_stable_and_deterministic() {
+        let mut rng = Pcg64::seed_from_u64(10);
+        let a = rng.gaussian_mat(80, 9);
+        let mut ws = Workspace::new();
+        let mut q1 = Mat::zeros(80, 9);
+        let mut q2 = Mat::zeros(80, 9);
+        orthonormalize_into(&a, &mut q1, &mut ws);
+        orthonormalize_into(&a, &mut q2, &mut ws);
+        assert_eq!(q1, q2, "workspace reuse must be bit-identical");
+        assert_eq!(q1, orthonormalize(&a), "wrapper must agree bit-for-bit");
+        let pooled = ws.pooled();
+        orthonormalize_into(&a, &mut q1, &mut ws);
+        assert_eq!(ws.pooled(), pooled, "steady state must not grow the pool");
+    }
+
+    #[test]
+    fn cholesky_detects_breakdown() {
+        // Singular Gram: G = vvᵀ.
+        let v = [1.0, 2.0, 3.0];
+        let mut g = Mat::from_fn(3, 3, |i, j| v[i] * v[j]);
+        assert!(!cholesky_upper_in_place(&mut g));
+        // SPD Gram factorizes and RᵀR reproduces the upper triangle.
+        let mut spd = Mat::from_rows(&[&[4.0, 2.0, 1.0], &[2.0, 5.0, 3.0], &[1.0, 3.0, 6.0]]);
+        let orig = spd.clone();
+        assert!(cholesky_upper_in_place(&mut spd));
+        for i in 0..3 {
+            for j in i..3 {
+                let mut s = 0.0;
+                for p in 0..=i {
+                    s += spd.get(p, i) * spd.get(p, j);
+                }
+                assert!((s - orig.get(i, j)).abs() < 1e-12, "RᵀR[{i},{j}]");
+            }
+        }
     }
 }

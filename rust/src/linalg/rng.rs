@@ -94,22 +94,35 @@ impl Pcg64 {
         }
     }
 
+    /// Fill a buffer with iid uniform `[0,1)` entries (the allocation-free
+    /// form behind [`Pcg64::uniform_mat`]; draws in slice order, so a
+    /// filled matrix is bit-identical to the allocating constructor).
+    pub fn fill_uniform(&mut self, out: &mut [f64]) {
+        for v in out {
+            *v = self.uniform();
+        }
+    }
+
+    /// Fill a buffer with iid standard-Gaussian entries (allocation-free
+    /// form of [`Pcg64::gaussian_mat`], same draw order).
+    pub fn fill_gaussian(&mut self, out: &mut [f64]) {
+        for v in out {
+            *v = self.gaussian();
+        }
+    }
+
     /// Matrix with iid uniform `[0,1)` entries — the paper's nonnegative
     /// random test matrix (Remark 1).
     pub fn uniform_mat(&mut self, rows: usize, cols: usize) -> Mat {
         let mut m = Mat::zeros(rows, cols);
-        for v in m.as_mut_slice() {
-            *v = self.uniform();
-        }
+        self.fill_uniform(m.as_mut_slice());
         m
     }
 
     /// Matrix with iid standard-Gaussian entries.
     pub fn gaussian_mat(&mut self, rows: usize, cols: usize) -> Mat {
         let mut m = Mat::zeros(rows, cols);
-        for v in m.as_mut_slice() {
-            *v = self.gaussian();
-        }
+        self.fill_gaussian(m.as_mut_slice());
         m
     }
 

@@ -145,12 +145,10 @@ impl RsvdOptions {
 pub fn randomized_svd(a: &Mat, opts: RsvdOptions, rng: &mut Pcg64) -> Svd {
     let qb = crate::sketch::qb::qb(
         a,
-        crate::sketch::qb::QbOptions {
-            rank: opts.rank,
-            oversample: opts.oversample,
-            power_iters: opts.power_iters,
-            gaussian: true,
-        },
+        crate::sketch::qb::QbOptions::new(opts.rank)
+            .with_oversample(opts.oversample)
+            .with_power_iters(opts.power_iters)
+            .with_gaussian(true),
         rng,
     );
     // B = Q̃ᵀA is l×n with l = k+p ≤ n. SVD(B) = U_B S Vᵀ; U = Q·U_B.

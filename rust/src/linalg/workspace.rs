@@ -81,6 +81,21 @@ impl Workspace {
     pub fn release_vec(&mut self, v: Vec<f64>) {
         self.pool.push(v);
     }
+
+    /// Check out a `rows×cols` matrix backed by a pooled buffer (contents
+    /// unspecified, same as [`Workspace::acquire_vec`]). The matrix *owns*
+    /// its storage like any other [`Mat`](crate::linalg::mat::Mat); hand it back with
+    /// [`Workspace::release_mat`] so the capacity is reused — this is how
+    /// the sketch engine and the `fit_with` solver entry points keep whole
+    /// decompositions allocation-free once warm.
+    pub fn acquire_mat(&mut self, rows: usize, cols: usize) -> crate::linalg::mat::Mat {
+        crate::linalg::mat::Mat::from_vec(rows, cols, self.acquire_vec(rows * cols))
+    }
+
+    /// Return a matrix's backing buffer to the pool.
+    pub fn release_mat(&mut self, m: crate::linalg::mat::Mat) {
+        self.release_vec(m.into_vec());
+    }
 }
 
 #[cfg(test)]
@@ -124,6 +139,19 @@ mod tests {
         assert!(v.capacity() >= 1 << 12);
         ws.release_vec(v);
         assert_eq!(ws.pooled(), 2);
+    }
+
+    #[test]
+    fn mat_checkout_roundtrip_reuses_capacity() {
+        let mut ws = Workspace::new();
+        let m = ws.acquire_mat(10, 7);
+        assert_eq!(m.shape(), (10, 7));
+        ws.release_mat(m);
+        assert_eq!(ws.pooled(), 1);
+        let m2 = ws.acquire_mat(5, 3);
+        assert!(m2.as_slice().len() == 15);
+        ws.release_mat(m2);
+        assert_eq!(ws.pooled(), 1, "same buffer cycled through the pool");
     }
 
     #[test]

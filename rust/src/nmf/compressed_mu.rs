@@ -32,7 +32,7 @@ use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
 use crate::nmf::mu::mu_update;
 use crate::nmf::options::NmfOptions;
 use crate::nmf::solver::NmfSolver;
-use crate::sketch::qb::{qb, QbOptions};
+use crate::sketch::qb::{qb_into, QbOptions};
 
 /// Compressed-MU solver.
 pub struct CompressedMu {
@@ -44,7 +44,17 @@ impl CompressedMu {
         CompressedMu { opts }
     }
 
+    /// Allocating convenience wrapper over [`CompressedMu::fit_with`].
     pub fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        self.fit_with(x, &mut Workspace::new())
+    }
+
+    /// The full fit — both bilateral compressions and the MU iterations —
+    /// with every buffer (including the `Xᵀ` staging and the returned
+    /// `W`/`H` storage) drawn from `ws`. Recycle finished fits with
+    /// [`NmfFit::recycle`] and warm fits allocate nothing (for
+    /// `Init::Random` with tracing disabled).
+    pub fn fit_with(&self, x: &Mat, ws: &mut Workspace) -> Result<NmfFit> {
         let o = &self.opts;
         let (m, n) = x.shape();
         o.validate(m, n)?;
@@ -54,13 +64,24 @@ impl CompressedMu {
         // Bilateral compression.
         let qb_opts = QbOptions::new(o.rank)
             .with_oversample(o.oversample)
-            .with_power_iters(o.power_iters);
-        let left = qb(x, qb_opts, &mut rng); // Q_L m×l, B_L l×n
-        let xt = x.transpose();
-        let right = qb(&xt, qb_opts, &mut rng); // Q_R n×l, B_R = Q_RᵀXᵀ l×m
-        let x_r = right.b.transpose(); // X·Q_R : m×l
+            .with_power_iters(o.power_iters)
+            .with_sketch(o.sketch);
+        let l = qb_opts.sketch_width(m, n);
+        let mut q_l = ws.acquire_mat(m, l); // Q_L m×l
+        let mut b_l = ws.acquire_mat(l, n); // B_L = Q_LᵀX l×n
+        qb_into(x, qb_opts, &mut rng, &mut q_l, &mut b_l, ws);
+        let mut xt = ws.acquire_mat(n, m);
+        x.transpose_into(&mut xt);
+        let lr = qb_opts.sketch_width(n, m);
+        let mut q_r = ws.acquire_mat(n, lr); // Q_R n×l
+        let mut b_r = ws.acquire_mat(lr, m); // B_R = Q_RᵀXᵀ l×m
+        qb_into(&xt, qb_opts, &mut rng, &mut q_r, &mut b_r, ws);
+        ws.release_mat(xt);
+        let mut x_r = ws.acquire_mat(m, lr); // X·Q_R : m×l
+        b_r.transpose_into(&mut x_r);
+        ws.release_mat(b_r);
 
-        let (mut w, mut ht) = init::initialize(x, o, &mut rng);
+        let (mut w, mut ht) = init::initialize_with(x, o, &mut rng, ws);
         let floor = 1e-12;
         w.map_inplace(|v| v.max(floor));
         ht.map_inplace(|v| v.max(floor));
@@ -72,37 +93,37 @@ impl CompressedMu {
 
         // Per-solve buffers: the iteration loop below never allocates.
         let k = o.rank;
-        let l = left.q.cols();
-        let lr = right.q.cols();
-        let mut ws = Workspace::new();
-        let mut wt = Mat::zeros(l, k); // Q_LᵀW
-        let mut num_h = Mat::zeros(n, k); // B_LᵀW̃
-        let mut s = Mat::zeros(k, k); // W̃ᵀW̃
-        let mut denom_h = Mat::zeros(n, k);
-        let mut hrt = Mat::zeros(lr, k); // (H·Q_R)ᵀ
-        let mut num_w = Mat::zeros(m, k); // X_R·H̃ᵀ
-        let mut v = Mat::zeros(k, k); // H̃H̃ᵀ
-        let mut denom_w = Mat::zeros(m, k);
+        let mut wt = ws.acquire_mat(l, k); // Q_LᵀW
+        let mut num_h = ws.acquire_mat(n, k); // B_LᵀW̃
+        let mut s = ws.acquire_mat(k, k); // W̃ᵀW̃
+        let mut denom_h = ws.acquire_mat(n, k);
+        let mut hrt = ws.acquire_mat(lr, k); // (H·Q_R)ᵀ
+        let mut num_w = ws.acquire_mat(m, k); // X_R·H̃ᵀ
+        let mut v = ws.acquire_mat(k, k); // H̃H̃ᵀ
+        let mut denom_w = ws.acquire_mat(m, k);
 
         for iter in 1..=o.max_iter {
             // --- H update, left-compressed ---
-            gemm::at_b_into(&left.q, &w, &mut wt, &mut ws); // l×k  Q_LᵀW
-            gemm::at_b_into(&left.b, &wt, &mut num_h, &mut ws); // n×k  B_LᵀW̃
-            gemm::gram_into(&wt, &mut s, &mut ws); // k×k  W̃ᵀW̃
-            gemm::matmul_into(&ht, &s, &mut denom_h, &mut ws); // n×k
+            gemm::at_b_into(&q_l, &w, &mut wt, ws); // l×k  Q_LᵀW
+            gemm::at_b_into(&b_l, &wt, &mut num_h, ws); // n×k  B_LᵀW̃
+            gemm::gram_into(&wt, &mut s, ws); // k×k  W̃ᵀW̃
+            gemm::matmul_into(&ht, &s, &mut denom_h, ws); // n×k
             mu_update(&mut ht, &num_h, &denom_h);
 
             // --- W update, right-compressed ---
-            gemm::at_b_into(&right.q, &ht, &mut hrt, &mut ws); // l×k  (H·Q_R)ᵀ
-            gemm::matmul_into(&x_r, &hrt, &mut num_w, &mut ws); // m×k  X_R·H̃ᵀ
-            gemm::gram_into(&hrt, &mut v, &mut ws); // k×k  H̃H̃ᵀ
-            gemm::matmul_into(&w, &v, &mut denom_w, &mut ws); // m×k
+            gemm::at_b_into(&q_r, &ht, &mut hrt, ws); // l×k  (H·Q_R)ᵀ
+            gemm::matmul_into(&x_r, &hrt, &mut num_w, ws); // m×k  X_R·H̃ᵀ
+            gemm::gram_into(&hrt, &mut v, ws); // k×k  H̃H̃ᵀ
+            gemm::matmul_into(&w, &v, &mut denom_w, ws); // m×k
             mu_update(&mut w, &num_w, &denom_w);
 
             iters = iter;
             if want_trace && iter % o.trace_every == 0 {
                 // Exact error via factored residual (kept cheap by k ≪ n).
-                let err = norms::relative_error(x, &w, &ht.transpose());
+                let mut h_tmp = ws.acquire_mat(k, n);
+                ht.transpose_into(&mut h_tmp);
+                let err = norms::relative_error_with(x, &w, &h_tmp, ws);
+                ws.release_mat(h_tmp);
                 trace.push(TracePoint {
                     iter,
                     elapsed_s: start.elapsed().as_secs_f64(),
@@ -113,8 +134,25 @@ impl CompressedMu {
         }
         let _ = x_norm_sq;
 
-        let model = NmfModel { w, h: ht.transpose() };
-        let final_rel_err = model.relative_error(x);
+        let mut h = ws.acquire_mat(k, n);
+        ht.transpose_into(&mut h);
+        ws.release_mat(ht);
+        let model = NmfModel { w, h };
+        let final_rel_err = norms::relative_error_with(x, &model.w, &model.h, ws);
+
+        // Return all per-solve scratch to the pool.
+        ws.release_mat(denom_w);
+        ws.release_mat(v);
+        ws.release_mat(num_w);
+        ws.release_mat(hrt);
+        ws.release_mat(denom_h);
+        ws.release_mat(s);
+        ws.release_mat(num_h);
+        ws.release_mat(wt);
+        ws.release_mat(x_r);
+        ws.release_mat(q_r);
+        ws.release_mat(b_l);
+        ws.release_mat(q_l);
         Ok(NmfFit {
             model,
             iters,
@@ -172,6 +210,25 @@ mod tests {
             rhals.final_rel_err,
             cmu.final_rel_err
         );
+    }
+
+    #[test]
+    fn cmu_fit_with_matches_fit_and_recycles() {
+        let x = low_rank(60, 45, 3, 7);
+        let solver = CompressedMu::new(NmfOptions::new(3).with_max_iter(50).with_seed(8));
+        let plain = solver.fit(&x).unwrap();
+        let mut ws = Workspace::new();
+        let f1 = solver.fit_with(&x, &mut ws).unwrap();
+        assert_eq!(f1.model.w, plain.model.w, "fit_with must equal fit bitwise");
+        assert_eq!(f1.model.h, plain.model.h);
+        f1.recycle(&mut ws);
+        let f2 = solver.fit_with(&x, &mut ws).unwrap();
+        assert_eq!(f2.model.w, plain.model.w);
+        f2.recycle(&mut ws);
+        let pooled = ws.pooled();
+        let f3 = solver.fit_with(&x, &mut ws).unwrap();
+        f3.recycle(&mut ws);
+        assert_eq!(ws.pooled(), pooled, "warm fit grew the workspace pool");
     }
 
     #[test]

@@ -80,19 +80,8 @@ pub fn sweep_factor(
         sweep_rows(fac.as_mut_slice(), num.as_slice(), gram, reg, order, clamp, k);
         return;
     }
-    let chunk_rows = r.div_ceil(nthreads);
-    let njobs = r.div_ceil(chunk_rows);
-    let fptr = pool::SyncPtr(fac.as_mut_slice().as_mut_ptr());
     let ndata = num.as_slice();
-    let mut sess = pool::session();
-    sess.run(njobs, &|j, _scratch| {
-        let r0 = j * chunk_rows;
-        let r1 = (r0 + chunk_rows).min(r);
-        // SAFETY: jobs own disjoint row ranges [r0, r1) of `fac`, which
-        // outlives the dispatch (`run` joins every job before returning).
-        let fchunk = unsafe {
-            std::slice::from_raw_parts_mut(fptr.0.add(r0 * k), (r1 - r0) * k)
-        };
+    pool::run_row_split(nthreads, r, k, fac.as_mut_slice(), &|fchunk, r0, r1, _scratch| {
         let nchunk = &ndata[r0 * k..r1 * k];
         sweep_rows(fchunk, nchunk, gram, reg, order, clamp, k);
     });

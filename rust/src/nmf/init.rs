@@ -18,14 +18,34 @@ use crate::linalg::mat::Mat;
 use crate::linalg::norms::vec_norm;
 use crate::linalg::rng::Pcg64;
 use crate::linalg::svd::{jacobi_svd, randomized_svd, RsvdOptions, Svd};
+use crate::linalg::workspace::Workspace;
 use crate::nmf::options::{Init, NmfOptions};
 
 /// Initialize `(W : m×k, Ht : n×k)` for a full-data solver.
 pub fn initialize(x: &Mat, opts: &NmfOptions, rng: &mut Pcg64) -> (Mat, Mat) {
+    initialize_with(x, opts, rng, &mut Workspace::new())
+}
+
+/// [`initialize`] with the factor storage drawn from a caller workspace.
+/// For `Init::Random` (the default) this is allocation-free once warm;
+/// the NNDSVD kinds compute an SVD internally and allocate (cold-path
+/// only — the `fit_with` zero-allocation guarantee is documented for
+/// random init).
+pub fn initialize_with(
+    x: &Mat,
+    opts: &NmfOptions,
+    rng: &mut Pcg64,
+    ws: &mut Workspace,
+) -> (Mat, Mat) {
     let (m, n) = x.shape();
     let k = opts.rank;
     match opts.init {
-        Init::Random => random_init(x, m, n, k, rng),
+        Init::Random => {
+            let avg = (mean_of(x).max(0.0) / k as f64).sqrt().max(1e-6);
+            let w = random_factor(m, k, avg, rng, ws);
+            let ht = random_factor(n, k, avg, rng, ws);
+            (w, ht)
+        }
         Init::Nndsvd | Init::NndsvdA => {
             let svd = randomized_svd(
                 x,
@@ -51,14 +71,28 @@ pub fn initialize_from_qb(
     opts: &NmfOptions,
     rng: &mut Pcg64,
 ) -> (Mat, Mat) {
+    initialize_from_qb_with(q, b, x_mean, opts, rng, &mut Workspace::new())
+}
+
+/// [`initialize_from_qb`] with factor storage drawn from a caller
+/// workspace (allocation-free once warm for `Init::Random`; the draw
+/// order matches the allocating constructor bit-for-bit).
+pub fn initialize_from_qb_with(
+    q: &Mat,
+    b: &Mat,
+    x_mean: f64,
+    opts: &NmfOptions,
+    rng: &mut Pcg64,
+    ws: &mut Workspace,
+) -> (Mat, Mat) {
     let m = q.rows();
     let n = b.cols();
     let k = opts.rank;
     match opts.init {
         Init::Random => {
             let avg = (x_mean.max(0.0) / k as f64).sqrt().max(1e-6);
-            let w = rng.gaussian_mat(m, k).map(|v| avg * v.abs());
-            let ht = rng.gaussian_mat(n, k).map(|v| avg * v.abs());
+            let w = random_factor(m, k, avg, rng, ws);
+            let ht = random_factor(n, k, avg, rng, ws);
             (w, ht)
         }
         Init::Nndsvd | Init::NndsvdA => {
@@ -81,11 +115,14 @@ fn mean_of(x: &Mat) -> f64 {
     }
 }
 
-fn random_init(x: &Mat, m: usize, n: usize, k: usize, rng: &mut Pcg64) -> (Mat, Mat) {
-    let avg = (mean_of(x).max(0.0) / k as f64).sqrt().max(1e-6);
-    let w = rng.gaussian_mat(m, k).map(|v| avg * v.abs());
-    let ht = rng.gaussian_mat(n, k).map(|v| avg * v.abs());
-    (w, ht)
+/// Workspace-drawn scaled nonnegative-Gaussian factor: `avg·|N(0,1)|`,
+/// filled in the same draw order as `gaussian_mat(..).map(..)` so seeds
+/// reproduce the seed implementation's initialization exactly.
+fn random_factor(rows: usize, k: usize, avg: f64, rng: &mut Pcg64, ws: &mut Workspace) -> Mat {
+    let mut f = ws.acquire_mat(rows, k);
+    rng.fill_gaussian(f.as_mut_slice());
+    f.map_inplace(|v| avg * v.abs());
+    f
 }
 
 /// Boutsidis–Gallopoulos NNDSVD from a (possibly truncated) SVD.

@@ -26,7 +26,12 @@
 //! `WᵀW`/`HHᵀ`) and in-place sweeps, so steady-state iterations perform
 //! zero heap allocations at any thread count — enforced by
 //! `tests/test_zero_alloc.rs` (single-threaded) and
-//! `tests/test_zero_alloc_pool.rs` (persistent-pool path).
+//! `tests/test_zero_alloc_pool.rs` (persistent-pool path). The
+//! randomized solvers additionally expose `fit_with` entry points
+//! ([`rhals::RandomizedHals::fit_with`] with a reusable
+//! [`rhals::RhalsScratch`], [`compressed_mu::CompressedMu::fit_with`])
+//! that draw *everything* — compression stage, factors, epilogue — from
+//! caller-owned scratch, making warm fits allocation-free end to end.
 
 pub mod compressed_mu;
 pub mod hals;

@@ -118,6 +118,16 @@ impl NmfFit {
     pub fn relative_error(&self, x: &Mat) -> f64 {
         self.model.relative_error(x)
     }
+
+    /// Hand the factor storage back to a workspace pool. Solvers'
+    /// `fit_with` entry points draw `W`/`H` from the caller's workspace;
+    /// a caller that is done with a fit (e.g. a benchmark loop or a
+    /// sweep) recycles it so the *next* `fit_with` on the same workspace
+    /// allocates nothing at all (`tests/test_zero_alloc.rs` pins this).
+    pub fn recycle(self, ws: &mut crate::linalg::workspace::Workspace) {
+        ws.release_mat(self.model.w);
+        ws.release_mat(self.model.h);
+    }
 }
 
 #[cfg(test)]

@@ -1,5 +1,7 @@
 //! Solver configuration shared by every NMF algorithm in the crate.
 
+use crate::sketch::qb::SketchKind;
+
 /// Factor-matrix initialization scheme (paper Remark 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Init {
@@ -106,6 +108,11 @@ pub struct NmfOptions {
     pub oversample: usize,
     /// Subspace iterations `q` (randomized solvers; paper default 2).
     pub power_iters: usize,
+    /// Random test matrix for the compression stage (randomized solvers).
+    /// Default [`SketchKind::Uniform`] per the paper's Remark 1;
+    /// [`SketchKind::SparseSign`] trades it for a structured sketch
+    /// applied in `O(mn·nnz)` instead of `O(mnl)`.
+    pub sketch: SketchKind,
     /// Record a trace point every this many iterations (0 = only at the
     /// end). Traces power the convergence figures.
     pub trace_every: usize,
@@ -130,6 +137,7 @@ impl NmfOptions {
             reg_h: Regularization::NONE,
             oversample: 20,
             power_iters: 2,
+            sketch: SketchKind::Uniform,
             trace_every: 0,
             batched_projection: false,
         }
@@ -180,6 +188,11 @@ impl NmfOptions {
         self
     }
 
+    pub fn with_sketch(mut self, s: SketchKind) -> Self {
+        self.sketch = s;
+        self
+    }
+
     pub fn with_trace_every(mut self, n: usize) -> Self {
         self.trace_every = n;
         self
@@ -203,6 +216,9 @@ impl NmfOptions {
         anyhow::ensure!(self.tol >= 0.0, "tol must be nonnegative");
         anyhow::ensure!(self.reg_w.l1 >= 0.0 && self.reg_w.l2 >= 0.0, "reg_w must be nonnegative");
         anyhow::ensure!(self.reg_h.l1 >= 0.0 && self.reg_h.l2 >= 0.0, "reg_h must be nonnegative");
+        if let SketchKind::SparseSign { nnz } = self.sketch {
+            anyhow::ensure!(nnz >= 1, "sparse-sign sketch needs nnz >= 1");
+        }
         Ok(())
     }
 }
@@ -223,7 +239,9 @@ mod tests {
             .with_oversample(10)
             .with_power_iters(3)
             .with_trace_every(5)
+            .with_sketch(SketchKind::sparse_sign())
             .with_batched_projection(true);
+        assert_eq!(o.sketch, SketchKind::SparseSign { nnz: 4 });
         assert_eq!(o.rank, 8);
         assert_eq!(o.max_iter, 500);
         assert_eq!(o.init, Init::NndsvdA);

@@ -30,6 +30,19 @@
 //! denominators; the ℓ1 shrink on `W` is applied in high-dimensional space
 //! during the Eq. 21 projection (`W = [QW̃ − β/V_jj]₊`), matching Eq. 33's
 //! numerator `[BHᵀ − β1]`.
+//!
+//! ## Allocation discipline
+//!
+//! [`RandomizedHals::fit_with`] runs the **entire** fit — compression
+//! stage included — out of a caller-owned [`RhalsScratch`]: the QB
+//! engine's `Ω`/`Y`/`Z`/QR scratch, every per-iteration product, the
+//! initialization, and even the returned `W`/`H` storage are drawn from
+//! its workspace pool. Recycle finished fits with [`NmfFit::recycle`] and
+//! a warm scratch performs **zero heap allocations for a whole fit**
+//! (asserted by `tests/test_zero_alloc.rs` under `RANDNMF_THREADS=1` and
+//! `tests/test_zero_alloc_pool.rs` under `RANDNMF_THREADS=4`; guaranteed
+//! for `Init::Random` with tracing disabled — NNDSVD init and trace
+//! recording are allocating cold paths).
 
 use std::time::Instant;
 
@@ -46,7 +59,24 @@ use crate::nmf::options::{NmfOptions, Regularization, UpdateOrder};
 use crate::nmf::solver::NmfSolver;
 use crate::nmf::stopping;
 use crate::nmf::update_order::OrderState;
-use crate::sketch::qb::{qb, QbFactors, QbOptions};
+use crate::sketch::qb::{qb_into, QbFactors, QbOptions};
+
+/// Reusable cross-fit scratch for [`RandomizedHals::fit_with`]: a
+/// [`Workspace`] buffer pool plus the non-`f64` per-fit state (the sweep
+/// order permutation). Keep one alive across fits and warm fits allocate
+/// nothing.
+#[derive(Default)]
+pub struct RhalsScratch {
+    /// The buffer pool every matrix and vector of the fit is drawn from.
+    pub ws: Workspace,
+    order: OrderState,
+}
+
+impl RhalsScratch {
+    pub fn new() -> Self {
+        RhalsScratch { ws: Workspace::new(), order: OrderState::empty() }
+    }
+}
 
 /// Randomized HALS solver (paper Algorithm 1).
 pub struct RandomizedHals {
@@ -58,8 +88,16 @@ impl RandomizedHals {
         RandomizedHals { opts }
     }
 
-    /// Compress `x` and run the compressed HALS iterations.
+    /// Compress `x` and run the compressed HALS iterations (allocating
+    /// convenience wrapper over [`RandomizedHals::fit_with`]).
     pub fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        self.fit_with(x, &mut RhalsScratch::new())
+    }
+
+    /// The full fit — QB compression *and* iterations — with every buffer
+    /// drawn from `scratch`. See the module docs for the zero-allocation
+    /// contract; results are identical to [`RandomizedHals::fit`].
+    pub fn fit_with(&self, x: &Mat, scratch: &mut RhalsScratch) -> Result<NmfFit> {
         let (m, n) = x.shape();
         self.opts.validate(m, n)?;
         anyhow::ensure!(
@@ -73,21 +111,29 @@ impl RandomizedHals {
         // ---- Compression stage (Algorithm 1, lines 1–9) ----
         let qb_opts = QbOptions::new(self.opts.rank)
             .with_oversample(self.opts.oversample)
-            .with_power_iters(self.opts.power_iters);
-        let factors = qb(x, qb_opts, &mut rng);
+            .with_power_iters(self.opts.power_iters)
+            .with_sketch(self.opts.sketch);
+        let l = qb_opts.sketch_width(m, n);
+        let mut qmat = scratch.ws.acquire_mat(m, l);
+        let mut bmat = scratch.ws.acquire_mat(l, n);
+        qb_into(x, qb_opts, &mut rng, &mut qmat, &mut bmat, &mut scratch.ws);
+        let factors = QbFactors { q: qmat, b: bmat };
         let x_mean = x.sum() / x.len() as f64;
         let x_norm_sq = norms::fro_norm_sq(x);
 
-        let mut state = self.iterate_compressed(
+        let mut state = self.iterate_compressed_with(
             &factors,
             x_mean,
             x_norm_sq,
             start,
             &mut rng,
+            scratch,
         )?;
 
         // Exact final error on the real data (the tables report this).
-        state.final_rel_err = state.model.relative_error(x);
+        state.final_rel_err =
+            norms::relative_error_with(x, &state.model.w, &state.model.h, &mut scratch.ws);
+        factors.recycle(&mut scratch.ws);
         Ok(state)
     }
 
@@ -103,6 +149,27 @@ impl RandomizedHals {
         start: Instant,
         rng: &mut crate::linalg::rng::Pcg64,
     ) -> Result<NmfFit> {
+        self.iterate_compressed_with(
+            factors,
+            x_mean,
+            x_norm_sq,
+            start,
+            rng,
+            &mut RhalsScratch::new(),
+        )
+    }
+
+    /// [`RandomizedHals::iterate_compressed`] with all buffers drawn from
+    /// `scratch` (the `fit_with` hot path).
+    pub fn iterate_compressed_with(
+        &self,
+        factors: &QbFactors,
+        x_mean: f64,
+        x_norm_sq: f64,
+        start: Instant,
+        rng: &mut crate::linalg::rng::Pcg64,
+        scratch: &mut RhalsScratch,
+    ) -> Result<NmfFit> {
         let o = &self.opts;
         let q = &factors.q;
         let b = &factors.b;
@@ -112,31 +179,40 @@ impl RandomizedHals {
         let b_norm_sq = norms::fro_norm_sq(b);
 
         // ---- Initialization (line 10) ----
-        let (mut w, mut ht) = init::initialize_from_qb(q, b, x_mean, o, rng);
-        let mut wt = gemm::at_b(q, &w); // W̃ = QᵀW : l×k
+        let (mut w, mut ht) =
+            init::initialize_from_qb_with(q, b, x_mean, o, rng, &mut scratch.ws);
+        let mut wt = scratch.ws.acquire_mat(l, k); // W̃ = QᵀW : l×k
+        gemm::at_b_into(q, &w, &mut wt, &mut scratch.ws);
         let want_pg = o.tol > 0.0 || o.trace_every > 0;
-        let mut order = OrderState::new(k, o.update_order);
+        scratch.order.reset(k, o.update_order);
 
         // Per-solve buffers: the iteration loop below never allocates.
-        let mut ws = Workspace::new();
-        let mut r = Mat::zeros(n, k); // BᵀW̃
-        let mut s = Mat::zeros(k, k); // WᵀW
-        let mut t = Mat::zeros(l, k); // BHᵀ
-        let mut v = Mat::zeros(k, k); // HHᵀ
-        let mut shrink: Vec<f64> = Vec::new();
-        let mut col_scratch = ColScratch::new(m, l);
+        let mut r = scratch.ws.acquire_mat(n, k); // BᵀW̃
+        let mut s = scratch.ws.acquire_mat(k, k); // WᵀW
+        let mut t = scratch.ws.acquire_mat(l, k); // BHᵀ
+        let mut v = scratch.ws.acquire_mat(k, k); // HHᵀ
+        let mut shrink = scratch.ws.acquire_vec(k);
+        let mut col_scratch = ColScratch::acquire(m, l, &mut scratch.ws);
         let (mut gh, mut gw, mut qt) = if want_pg {
-            (Mat::zeros(n, k), Mat::zeros(m, k), Mat::zeros(m, k))
+            (
+                scratch.ws.acquire_mat(n, k),
+                scratch.ws.acquire_mat(m, k),
+                scratch.ws.acquire_mat(m, k),
+            )
         } else {
-            (Mat::zeros(0, 0), Mat::zeros(0, 0), Mat::zeros(0, 0))
+            (
+                scratch.ws.acquire_mat(0, 0),
+                scratch.ws.acquire_mat(0, 0),
+                scratch.ws.acquire_mat(0, 0),
+            )
         };
 
         let mut pgw_prev = if want_pg {
-            gemm::gram_into(&ht, &mut v, &mut ws);
-            gemm::matmul_into(b, &ht, &mut t, &mut ws); // l×k
+            gemm::gram_into(&ht, &mut v, &mut scratch.ws);
+            gemm::matmul_into(b, &ht, &mut t, &mut scratch.ws); // l×k
             // grad_W ≈ W·V − Q·T (X·Hᵀ ≈ Q·B·Hᵀ)
-            gemm::matmul_into(&w, &v, &mut gw, &mut ws);
-            gemm::matmul_into(q, &t, &mut qt, &mut ws);
+            gemm::matmul_into(&w, &v, &mut gw, &mut scratch.ws);
+            gemm::matmul_into(q, &t, &mut qt, &mut scratch.ws);
             gw.axpy(-1.0, &qt);
             Some(stopping::projected_gradient_norm_sq(&w, &gw))
         } else {
@@ -151,20 +227,28 @@ impl RandomizedHals {
 
         for iter in 1..=o.max_iter {
             // ---- line 12–13 ----
-            gemm::at_b_into(b, &wt, &mut r, &mut ws); // n×k  BᵀW̃
-            gemm::gram_into(&w, &mut s, &mut ws); // k×k  WᵀW (high-dim scaling, §3.2)
+            gemm::at_b_into(b, &wt, &mut r, &mut scratch.ws); // n×k  BᵀW̃
+            gemm::gram_into(&w, &mut s, &mut scratch.ws); // k×k  WᵀW (high-dim scaling, §3.2)
 
             if want_pg {
-                gemm::matmul_into(&ht, &s, &mut gh, &mut ws);
+                gemm::matmul_into(&ht, &s, &mut gh, &mut scratch.ws);
                 gh.axpy(-1.0, &r); // ∇H = Ht·S − R
                 let pgh = stopping::projected_gradient_norm_sq(&ht, &gh);
                 let pg = pgh + pgw_prev.take().unwrap_or(0.0);
                 let pg0v = *pg0.get_or_insert(pg);
                 pg_ratio = if pg0v > 0.0 { pg / pg0v } else { 0.0 };
                 if o.trace_every > 0 && (iter - 1) % o.trace_every == 0 {
-                    let wtw = gemm::gram(&wt);
-                    let err =
-                        stopping::rel_err_compressed(x_norm_sq, b_norm_sq, &r, &wtw, &ht);
+                    let mut wtw = scratch.ws.acquire_mat(k, k);
+                    gemm::gram_into(&wt, &mut wtw, &mut scratch.ws);
+                    let err = stopping::rel_err_compressed_with(
+                        x_norm_sq,
+                        b_norm_sq,
+                        &r,
+                        &wtw,
+                        &ht,
+                        &mut scratch.ws,
+                    );
+                    scratch.ws.release_mat(wtw);
                     trace.push(TracePoint {
                         iter: iter - 1,
                         elapsed_s: start.elapsed().as_secs_f64(),
@@ -179,13 +263,13 @@ impl RandomizedHals {
             }
 
             // ---- H sweep (lines 14–16 / Eq. 19) ----
-            order.advance(rng);
-            sweep_factor(&mut ht, &r, &s, o.reg_h, order.order(), true);
+            scratch.order.advance(rng);
+            sweep_factor(&mut ht, &r, &s, o.reg_h, scratch.order.order(), true);
 
             // ---- W̃ sweep + projection (lines 17–22 / Eqs. 20–22) ----
-            gemm::matmul_into(b, &ht, &mut t, &mut ws); // l×k  BHᵀ
-            gemm::gram_into(&ht, &mut v, &mut ws); // k×k  HHᵀ
-            order.advance(rng);
+            gemm::matmul_into(b, &ht, &mut t, &mut scratch.ws); // l×k  BHᵀ
+            gemm::gram_into(&ht, &mut v, &mut scratch.ws); // k×k  HHᵀ
+            scratch.order.advance(rng);
             if o.batched_projection {
                 // Sweep all of W̃ unclamped, then one projection round trip.
                 sweep_factor(
@@ -193,12 +277,18 @@ impl RandomizedHals {
                     &t,
                     &v,
                     Regularization::ridge(o.reg_w.l2),
-                    order.order(),
+                    scratch.order.order(),
                     false,
                 );
-                gemm::matmul_into(q, &wt, &mut w, &mut ws); // m×k
-                apply_l1_shrink_and_clamp(&mut w, &v, o.reg_w, order.order(), &mut shrink);
-                gemm::at_b_into(q, &w, &mut wt, &mut ws); // l×k
+                gemm::matmul_into(q, &wt, &mut w, &mut scratch.ws); // m×k
+                apply_l1_shrink_and_clamp(
+                    &mut w,
+                    &v,
+                    o.reg_w,
+                    scratch.order.order(),
+                    &mut shrink,
+                );
+                gemm::at_b_into(q, &w, &mut wt, &mut scratch.ws); // l×k
             } else {
                 per_column_projection(
                     q,
@@ -207,31 +297,54 @@ impl RandomizedHals {
                     &t,
                     &v,
                     o.reg_w,
-                    order.order(),
+                    scratch.order.order(),
                     &mut col_scratch,
                 );
             }
 
             if want_pg {
                 // grad_W ≈ W·V − Q·T, with T = BHᵀ for the current H.
-                gemm::matmul_into(&w, &v, &mut gw, &mut ws);
-                gemm::matmul_into(q, &t, &mut qt, &mut ws);
+                gemm::matmul_into(&w, &v, &mut gw, &mut scratch.ws);
+                gemm::matmul_into(q, &t, &mut qt, &mut scratch.ws);
                 gw.axpy(-1.0, &qt);
                 pgw_prev = Some(stopping::projected_gradient_norm_sq(&w, &gw));
             }
             iters = iter;
         }
 
-        let h = ht.transpose();
+        // Compressed error estimate for the final iterate (`fit_with`
+        // overwrites it with the exact value on the real data).
+        let mut wtw = scratch.ws.acquire_mat(k, k);
+        gemm::gram_into(&wt, &mut wtw, &mut scratch.ws);
+        gemm::at_b_into(b, &wt, &mut r, &mut scratch.ws);
+        let final_rel_err = stopping::rel_err_compressed_with(
+            x_norm_sq,
+            b_norm_sq,
+            &r,
+            &wtw,
+            &ht,
+            &mut scratch.ws,
+        );
+        scratch.ws.release_mat(wtw);
+
+        // Build the model: H = Htᵀ into workspace-drawn storage.
+        let mut h = scratch.ws.acquire_mat(k, n);
+        ht.transpose_into(&mut h);
+        scratch.ws.release_mat(ht);
         let model = NmfModel { w, h };
-        // Compressed estimate; `fit` overwrites with the exact value.
-        let wtw = gemm::gram(&wt);
-        let rt = gemm::at_b(b, &wt);
-        let ht2 = model.h.transpose();
-        let final_rel_err =
-            stopping::rel_err_compressed(x_norm_sq, b_norm_sq, &rt, &wtw, &ht2);
         debug_assert!(model.w.is_nonneg() && model.h.is_nonneg());
-        let _ = (l, m, n);
+
+        // Return all per-solve scratch to the pool.
+        scratch.ws.release_mat(qt);
+        scratch.ws.release_mat(gw);
+        scratch.ws.release_mat(gh);
+        col_scratch.release(&mut scratch.ws);
+        scratch.ws.release_vec(shrink);
+        scratch.ws.release_mat(v);
+        scratch.ws.release_mat(t);
+        scratch.ws.release_mat(s);
+        scratch.ws.release_mat(r);
+        scratch.ws.release_mat(wt);
         Ok(NmfFit {
             model,
             iters,
@@ -244,8 +357,8 @@ impl RandomizedHals {
     }
 }
 
-/// Column-length scratch for [`per_column_projection`] — allocated once
-/// per solve so the per-column interleave stays allocation-free.
+/// Column-length scratch for [`per_column_projection`] — drawn from the
+/// solve workspace so the per-column interleave stays allocation-free.
 struct ColScratch {
     /// Updated compressed column `W̃(:,j)` (length `l`).
     new_col: Vec<f64>,
@@ -256,8 +369,18 @@ struct ColScratch {
 }
 
 impl ColScratch {
-    fn new(m: usize, l: usize) -> Self {
-        ColScratch { new_col: vec![0.0; l], proj: vec![0.0; m], back: vec![0.0; l] }
+    fn acquire(m: usize, l: usize, ws: &mut Workspace) -> Self {
+        ColScratch {
+            new_col: ws.acquire_vec(l),
+            proj: ws.acquire_vec(m),
+            back: ws.acquire_vec(l),
+        }
+    }
+
+    fn release(self, ws: &mut Workspace) {
+        ws.release_vec(self.back);
+        ws.release_vec(self.proj);
+        ws.release_vec(self.new_col);
     }
 }
 
@@ -350,6 +473,7 @@ mod tests {
     use super::*;
     use crate::linalg::rng::Pcg64;
     use crate::nmf::hals::Hals;
+    use crate::sketch::qb::SketchKind;
 
     fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
         let mut rng = Pcg64::seed_from_u64(seed);
@@ -373,6 +497,52 @@ mod tests {
             det.final_rel_err
         );
         assert!(rand.final_rel_err < 1e-2);
+    }
+
+    #[test]
+    fn fit_with_matches_fit_and_recycles() {
+        let x = low_rank(90, 60, 4, 2);
+        let opts = NmfOptions::new(4).with_max_iter(60).with_seed(3).with_tol(0.0);
+        let solver = RandomizedHals::new(opts);
+        let plain = solver.fit(&x).unwrap();
+        let mut scratch = RhalsScratch::new();
+        let f1 = solver.fit_with(&x, &mut scratch).unwrap();
+        assert_eq!(f1.model.w, plain.model.w, "fit_with must equal fit bitwise");
+        assert_eq!(f1.model.h, plain.model.h);
+        assert_eq!(f1.final_rel_err, plain.final_rel_err);
+        f1.recycle(&mut scratch.ws);
+        // Warm refits keep producing identical factors from pooled buffers
+        // without growing the pool.
+        let f2 = solver.fit_with(&x, &mut scratch).unwrap();
+        assert_eq!(f2.model.w, plain.model.w);
+        f2.recycle(&mut scratch.ws);
+        let pooled = scratch.ws.pooled();
+        let f3 = solver.fit_with(&x, &mut scratch).unwrap();
+        f3.recycle(&mut scratch.ws);
+        assert_eq!(scratch.ws.pooled(), pooled, "warm fit grew the workspace pool");
+    }
+
+    #[test]
+    fn sparse_sign_sketch_fits_comparably() {
+        let x = low_rank(150, 70, 5, 12);
+        let dense = RandomizedHals::new(NmfOptions::new(5).with_max_iter(200).with_seed(13))
+            .fit(&x)
+            .unwrap();
+        let sparse = RandomizedHals::new(
+            NmfOptions::new(5)
+                .with_max_iter(200)
+                .with_seed(13)
+                .with_sketch(SketchKind::sparse_sign()),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(sparse.model.w.is_nonneg() && sparse.model.h.is_nonneg());
+        assert!(
+            sparse.final_rel_err < dense.final_rel_err + 1e-2,
+            "sparse={} dense={}",
+            sparse.final_rel_err,
+            dense.final_rel_err
+        );
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! stationary point of the nonnegativity-constrained problem.
 
 use crate::linalg::mat::Mat;
+use crate::linalg::workspace::Workspace;
 
 /// Squared projected-gradient norm of one factor.
 ///
@@ -36,19 +37,34 @@ pub fn projected_gradient_norm_sq(factor: &Mat, grad: &Mat) -> f64 {
 /// where `At = XᵀW (n×k)` and `S = WᵀW (k×k)` are already computed by the
 /// HALS iteration.
 pub fn rel_err_from_grams(x_norm_sq: f64, at: &Mat, s: &Mat, ht: &Mat) -> f64 {
+    rel_err_from_grams_with(x_norm_sq, at, s, ht, &mut Workspace::new())
+}
+
+/// [`rel_err_from_grams`] with the `HtᵀHt` temporary drawn from a caller
+/// workspace (allocation-free once warm).
+pub fn rel_err_from_grams_with(
+    x_norm_sq: f64,
+    at: &Mat,
+    s: &Mat,
+    ht: &Mat,
+    ws: &mut Workspace,
+) -> f64 {
     let cross: f64 = at
         .as_slice()
         .iter()
         .zip(ht.as_slice().iter())
         .map(|(a, h)| a * h)
         .sum();
-    let hth = crate::linalg::gemm::gram(ht); // k×k
+    let k = ht.cols();
+    let mut hth = ws.acquire_mat(k, k);
+    crate::linalg::gemm::gram_into(ht, &mut hth, ws); // k×k
     let quad: f64 = s
         .as_slice()
         .iter()
         .zip(hth.as_slice().iter())
         .map(|(a, b)| a * b)
         .sum();
+    ws.release_mat(hth);
     let num = (x_norm_sq - 2.0 * cross + quad).max(0.0);
     if x_norm_sq <= 0.0 {
         0.0
@@ -71,19 +87,36 @@ pub fn rel_err_compressed(
     wtw: &Mat,
     ht: &Mat,
 ) -> f64 {
+    rel_err_compressed_with(x_norm_sq, b_norm_sq, rt, wtw, ht, &mut Workspace::new())
+}
+
+/// [`rel_err_compressed`] with the `HtᵀHt` temporary drawn from a caller
+/// workspace (allocation-free once warm — used by the zero-allocation
+/// `RandomizedHals::fit_with` loop and epilogue).
+pub fn rel_err_compressed_with(
+    x_norm_sq: f64,
+    b_norm_sq: f64,
+    rt: &Mat,
+    wtw: &Mat,
+    ht: &Mat,
+    ws: &mut Workspace,
+) -> f64 {
     let cross: f64 = rt
         .as_slice()
         .iter()
         .zip(ht.as_slice().iter())
         .map(|(a, h)| a * h)
         .sum();
-    let hth = crate::linalg::gemm::gram(ht);
+    let k = ht.cols();
+    let mut hth = ws.acquire_mat(k, k);
+    crate::linalg::gemm::gram_into(ht, &mut hth, ws);
     let quad: f64 = wtw
         .as_slice()
         .iter()
         .zip(hth.as_slice().iter())
         .map(|(a, b)| a * b)
         .sum();
+    ws.release_mat(hth);
     let comp = (b_norm_sq - 2.0 * cross + quad).max(0.0);
     let floor = (x_norm_sq - b_norm_sq).max(0.0);
     if x_norm_sq <= 0.0 {

@@ -15,9 +15,32 @@ pub struct OrderState {
     order: Vec<usize>,
 }
 
+/// Same as [`OrderState::empty`] — an unsized state awaiting
+/// [`OrderState::reset`] (lets solver scratch types derive `Default`).
+impl Default for OrderState {
+    fn default() -> Self {
+        OrderState::empty()
+    }
+}
+
 impl OrderState {
     pub fn new(k: usize, kind: UpdateOrder) -> Self {
         OrderState { kind, order: (0..k).collect() }
+    }
+
+    /// An empty state to be [`reset`](OrderState::reset) before use —
+    /// lets long-lived solver scratch hold an `OrderState` and reuse its
+    /// buffer across fits (zero allocations once the capacity covers `k`).
+    pub fn empty() -> Self {
+        OrderState { kind: UpdateOrder::BlockedCyclic, order: Vec::new() }
+    }
+
+    /// Re-initialize for a (possibly different) rank and order kind,
+    /// reusing the existing buffer capacity.
+    pub fn reset(&mut self, k: usize, kind: UpdateOrder) {
+        self.kind = kind;
+        self.order.clear();
+        self.order.extend(0..k);
     }
 
     /// The order for the next sweep. Cyclic kinds return `0..k` unchanged;
@@ -64,6 +87,18 @@ mod tests {
         sa.sort_unstable();
         assert_eq!(sa, (0..20).collect::<Vec<_>>());
         assert_ne!(a, b, "two consecutive shuffles identical is ~impossible");
+    }
+
+    #[test]
+    fn reset_reuses_buffer_and_matches_new() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let mut st = OrderState::empty();
+        st.reset(6, UpdateOrder::BlockedCyclic);
+        assert_eq!(st.next_order(&mut rng), &[0, 1, 2, 3, 4, 5]);
+        let cap_ptr = st.order.as_ptr();
+        st.reset(4, UpdateOrder::BlockedCyclic);
+        assert_eq!(st.order(), &[0, 1, 2, 3]);
+        assert_eq!(st.order.as_ptr(), cap_ptr, "reset within capacity must not reallocate");
     }
 
     #[test]

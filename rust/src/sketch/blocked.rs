@@ -4,20 +4,56 @@
 //! When `X` is too large for memory, the sketch `Y = XΩ`, the power
 //! iterations, and the projection `B = QᵀX` can all be computed by
 //! streaming **column blocks** of `X`: the algorithm needs `2 + 2q`
-//! sequential passes over the data and only `O(m·l + n·l)` working memory.
+//! sequential passes over the data and only `O(m·c + n·l)` working memory
+//! (`c = max(block_cols, COMPUTE_COLS)`).
 //!
 //! The data source is abstracted behind [`ColumnBlockSource`] so the same
 //! code runs against the in-memory [`Mat`] (for testing) and the on-disk
 //! [`crate::data::store::NmfStore`] column-block store (the paper's HDF5
 //! substitute). `bench_perf_out_of_core` measures the pass efficiency.
+//!
+//! ## Engine properties
+//!
+//! This path runs on the same compression engine as the in-memory
+//! [`super::qb::qb_into`]:
+//!
+//! * **Zero steady-state allocations** — all buffers (sketch tables, `Y`,
+//!   `Z`, the reusable I/O block via [`ColumnBlockSource::read_block_into`],
+//!   the compute-chunk staging area, and QR scratch) are drawn from a
+//!   caller [`Workspace`]; once warm, every pass reuses them.
+//! * **I/O decoupled from compute** — reads stay within the caller's
+//!   `block_cols` memory budget (whole chunk-aligned slabs for coarse
+//!   sources — a `block_cols` matching the store's native width stays
+//!   one contiguous `pread` per slab — piecewise chunk assembly for fine
+//!   ones), but all GEMMs run over *fixed absolute column chunks* of
+//!   width [`COMPUTE_COLS`]. Because the chunk grid — and therefore
+//!   every floating-point accumulation grouping and every threading
+//!   decision — depends only on `(m, n, l)`, the factors are
+//!   **bit-identical for a fixed seed across all block sizes** (asserted
+//!   by `test_properties.rs`), and when `n ≤ COMPUTE_COLS` they are
+//!   bit-identical to the in-memory [`super::qb::qb`].
+//! * **Structured sketches stream too** — [`SketchKind::SparseSign`]
+//!   applies `Ω` per chunk without ever materializing it, so the pass-1
+//!   cost drops from `O(m·n·l)` to `O(m·n·nnz)`.
 
 use anyhow::Result;
 
-use super::qb::{QbFactors, QbOptions};
+use super::qb::{
+    fill_dense_sketch, fill_sparse_sign, sparse_sketch_apply_block, QbFactors, QbOptions,
+    SketchKind,
+};
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
-use crate::linalg::qr::orthonormalize;
+use crate::linalg::qr::orthonormalize_into;
 use crate::linalg::rng::Pcg64;
+use crate::linalg::workspace::Workspace;
+
+/// Width of the fixed absolute column chunks all blocked compute runs
+/// over. Matches the packed GEMM's depth block (`KC = 256`), so the
+/// per-chunk accumulation grouping of `Y = Σ_b X_b Ω_b` coincides with
+/// the grouping a single in-memory GEMM would use — see the module docs
+/// for the determinism contract this buys.
+pub const COMPUTE_COLS: usize = 256;
 
 /// A matrix that can be read one column block at a time.
 pub trait ColumnBlockSource {
@@ -27,6 +63,18 @@ pub trait ColumnBlockSource {
     fn cols(&self) -> usize;
     /// Read columns `[j0, j1)` as a dense `m×(j1-j0)` matrix.
     fn read_block(&self, j0: usize, j1: usize) -> Result<Mat>;
+
+    /// Read columns `[j0, j1)` into a caller-owned reusable buffer (the
+    /// callee sets `out`'s shape via [`Mat::resize`], which reuses
+    /// capacity). Implementors should override this to avoid the default's
+    /// per-read allocation — [`MatSource`] and
+    /// [`crate::data::store::NmfStore`] both read straight into `out`.
+    fn read_block_into(&self, j0: usize, j1: usize, out: &mut Mat) -> Result<()> {
+        let block = self.read_block(j0, j1)?;
+        out.resize(block.rows(), block.cols());
+        out.as_mut_slice().copy_from_slice(block.as_slice());
+        Ok(())
+    }
 }
 
 /// In-memory adapter so any [`Mat`] is a [`ColumnBlockSource`] (test oracle
@@ -43,86 +91,223 @@ impl ColumnBlockSource for MatSource<'_> {
     fn read_block(&self, j0: usize, j1: usize) -> Result<Mat> {
         Ok(self.0.col_block(j0, j1))
     }
+    fn read_block_into(&self, j0: usize, j1: usize, out: &mut Mat) -> Result<()> {
+        anyhow::ensure!(j0 <= j1 && j1 <= self.0.cols(), "bad column range {j0}..{j1}");
+        let m = self.0.rows();
+        out.resize(m, j1 - j0);
+        for i in 0..m {
+            out.row_mut(i).copy_from_slice(&self.0.row(i)[j0..j1]);
+        }
+        Ok(())
+    }
 }
 
-/// Iterate `f(j0, block)` over all column blocks — one full pass.
-fn for_each_block(
+/// Width of the reads `for_each_chunk` issues for a given `block_cols`:
+/// chunk-sized for fine-grained sources, and for coarse sources the
+/// largest chunk-aligned width that still fits in one `block_cols` read —
+/// so a `block_cols` equal to a store's native slab width keeps reads
+/// whole-slab (one contiguous `pread`) while the compute-chunk grid stays
+/// absolute.
+fn read_width(block_cols: usize) -> usize {
+    if block_cols >= 2 * COMPUTE_COLS {
+        (block_cols / COMPUTE_COLS) * COMPUTE_COLS
+    } else {
+        block_cols.min(COMPUTE_COLS)
+    }
+}
+
+/// Run `f(c0, chunk)` over the fixed [`COMPUTE_COLS`]-wide absolute column
+/// chunks — one full pass over the data. I/O honors the caller's
+/// `block_cols` budget (see [`read_width`]): fine-grained sources are
+/// read piecewise into each chunk; coarse sources are read in wide
+/// chunk-aligned slabs into `io` and chunks are carved out. Either way
+/// the chunk grid — and therefore every FP accumulation grouping — is
+/// independent of `block_cols`.
+fn for_each_chunk(
     src: &dyn ColumnBlockSource,
     block_cols: usize,
+    io: &mut Mat,
+    chunk: &mut Mat,
     mut f: impl FnMut(usize, &Mat) -> Result<()>,
 ) -> Result<()> {
-    let n = src.cols();
-    let mut j0 = 0;
-    while j0 < n {
-        let j1 = (j0 + block_cols).min(n);
-        let block = src.read_block(j0, j1)?;
-        f(j0, &block)?;
-        j0 = j1;
+    let (m, n) = (src.rows(), src.cols());
+    let read_w = read_width(block_cols);
+    if read_w <= COMPUTE_COLS {
+        // Reads are at most one chunk wide: assemble each chunk from one
+        // or more reads (a whole chunk in one read goes straight in).
+        let mut c0 = 0;
+        while c0 < n {
+            let c1 = (c0 + COMPUTE_COLS).min(n);
+            let w = c1 - c0;
+            if read_w >= w {
+                src.read_block_into(c0, c1, chunk)?;
+            } else {
+                chunk.resize(m, w);
+                let mut s0 = c0;
+                while s0 < c1 {
+                    let s1 = (s0 + read_w).min(c1);
+                    src.read_block_into(s0, s1, io)?;
+                    chunk.set_col_block(s0 - c0, io);
+                    s0 = s1;
+                }
+            }
+            f(c0, chunk)?;
+            c0 = c1;
+        }
+    } else {
+        // Coarse reads (chunk-aligned multiples of COMPUTE_COLS): one
+        // wide read, then carve the absolute-grid chunks out of it.
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + read_w).min(n);
+            src.read_block_into(r0, r1, io)?;
+            let mut c0 = r0;
+            while c0 < r1 {
+                let c1 = (c0 + COMPUTE_COLS).min(r1);
+                chunk.resize(m, c1 - c0);
+                for i in 0..m {
+                    chunk.row_mut(i).copy_from_slice(&io.row(i)[c0 - r0..c1 - r0]);
+                }
+                f(c0, chunk)?;
+                c0 = c1;
+            }
+            r0 = r1;
+        }
     }
     Ok(())
 }
 
-/// Out-of-core QB decomposition over a column-block source.
-///
-/// Produces the same factors as [`super::qb::qb`] (up to floating-point
-/// accumulation order) while holding at most one `m×block_cols` block of
-/// `X` in memory at a time.
+/// Out-of-core QB decomposition over a column-block source (allocating
+/// convenience wrapper over [`qb_blocked_with`]).
 pub fn qb_blocked(
     src: &dyn ColumnBlockSource,
     opts: QbOptions,
     block_cols: usize,
     rng: &mut Pcg64,
 ) -> Result<QbFactors> {
+    qb_blocked_with(src, opts, block_cols, rng, &mut Workspace::new())
+}
+
+/// Out-of-core QB decomposition with factors and all scratch drawn from
+/// `ws` — zero steady-state heap allocations once warm. Produces the same
+/// subspace as [`super::qb::qb`] and, thanks to the fixed compute-chunk
+/// grid, bit-identical factors across block sizes (see the module docs).
+/// Recycle the returned factors with [`QbFactors::recycle`].
+pub fn qb_blocked_with(
+    src: &dyn ColumnBlockSource,
+    opts: QbOptions,
+    block_cols: usize,
+    rng: &mut Pcg64,
+    ws: &mut Workspace,
+) -> Result<QbFactors> {
     let (m, n) = (src.rows(), src.cols());
     assert!(m > 0 && n > 0, "qb_blocked: empty input");
     assert!(block_cols > 0, "qb_blocked: zero block size");
     let l = opts.sketch_width(m, n);
 
-    // Ω (n×l) is materialized once; it is n·l, not m·n.
-    let omega = if opts.gaussian { rng.gaussian_mat(n, l) } else { rng.uniform_mat(n, l) };
-
-    // Pass 1: Y = Σ_blocks X_b · Ω_b.
-    let mut y = Mat::zeros(m, l);
-    for_each_block(src, block_cols, |j0, xb| {
-        let w = xb.cols();
-        let omega_b = omega.row_block(j0, j0 + w);
-        y.axpy(1.0, &gemm::matmul(xb, &omega_b));
-        Ok(())
-    })?;
-
-    // Subspace iterations: each costs two more passes.
-    for _ in 0..opts.power_iters {
-        let q = orthonormalize(&y);
-        // Pass: Z = XᵀQ, filled row-block by row-block (Z rows ↔ X cols).
-        let mut z = Mat::zeros(n, l);
-        for_each_block(src, block_cols, |j0, xb| {
-            let zb = gemm::at_b(xb, &q); // (w×l)
-            for r in 0..zb.rows() {
-                z.set_row(j0 + r, zb.row(r));
-            }
-            Ok(())
-        })?;
-        let qz = orthonormalize(&z);
-        // Pass: Y = X·Qz accumulated blockwise.
-        y = Mat::zeros(m, l);
-        for_each_block(src, block_cols, |j0, xb| {
-            let w = xb.cols();
-            let qz_b = qz.row_block(j0, j0 + w);
-            y.axpy(1.0, &gemm::matmul(xb, &qz_b));
-            Ok(())
-        })?;
+    // Sketch tables: Ω is n·l (dense kinds) or 2·n·nnz (sparse), never m·n.
+    let mut omega: Option<Mat> = None;
+    let mut sparse: Option<(Vec<f64>, Vec<f64>, usize)> = None;
+    match opts.sketch {
+        SketchKind::Uniform | SketchKind::Gaussian => {
+            let mut om = ws.acquire_mat(n, l);
+            fill_dense_sketch(opts.sketch, rng, &mut om);
+            omega = Some(om);
+        }
+        SketchKind::SparseSign { nnz } => {
+            let s = nnz.clamp(1, l);
+            let mut cols = ws.acquire_vec(n * s);
+            let mut vals = ws.acquire_vec(n * s);
+            fill_sparse_sign(rng, l, s, &mut cols, &mut vals);
+            sparse = Some((cols, vals, s));
+        }
     }
 
-    let q = orthonormalize(&y);
+    // `io` holds one read: up to a chunk for fine-grained sources, up to
+    // the chunk-aligned `read_width` (≤ block_cols, the caller's memory
+    // budget) for coarse ones.
+    let mut io = ws.acquire_mat(m, read_width(block_cols).min(n));
+    let mut chunk = ws.acquire_mat(m, COMPUTE_COLS.min(n));
+    let mut omega_chunk = ws.acquire_mat(1, 1);
 
-    // Final pass: B(:, block) = Qᵀ X_b.
-    let mut b = Mat::zeros(l, n);
-    for_each_block(src, block_cols, |j0, xb| {
-        let bb = gemm::at_b(&q, xb); // l×w
-        b.set_col_block(j0, &bb);
+    // Pass 1: Y = Σ_chunks X_c · Ω_c.
+    let mut y = ws.acquire_mat(m, l);
+    y.as_mut_slice().fill(0.0);
+    for_each_chunk(src, block_cols, &mut io, &mut chunk, |c0, xb| {
+        let w = xb.cols();
+        if let Some(om) = &omega {
+            omega_chunk.resize(w, l);
+            omega_chunk
+                .as_mut_slice()
+                .copy_from_slice(&om.as_slice()[c0 * l..(c0 + w) * l]);
+            gemm::matmul_acc_into(xb, &omega_chunk, &mut y, ws);
+        } else if let Some((cols, vals, s)) = &sparse {
+            sparse_sketch_apply_block(xb, c0, cols, vals, *s, &mut y);
+        }
         Ok(())
     })?;
 
+    let mut q = ws.acquire_mat(m, l);
+
+    // Subspace iterations: each costs two more passes.
+    if opts.power_iters > 0 {
+        let mut z = ws.acquire_mat(n, l);
+        let mut qz = ws.acquire_mat(n, l);
+        let mut zb = ws.acquire_mat(1, 1);
+        let mut qz_chunk = ws.acquire_mat(1, 1);
+        for _ in 0..opts.power_iters {
+            orthonormalize_into(&y, &mut q, ws);
+            // Pass: Z = XᵀQ, filled chunk by chunk (Z rows ↔ X cols).
+            for_each_chunk(src, block_cols, &mut io, &mut chunk, |c0, xb| {
+                let w = xb.cols();
+                zb.resize(w, l);
+                gemm::at_b_into(xb, &q, &mut zb, ws); // w×l
+                z.as_mut_slice()[c0 * l..(c0 + w) * l].copy_from_slice(zb.as_slice());
+                Ok(())
+            })?;
+            orthonormalize_into(&z, &mut qz, ws);
+            // Pass: Y = X·Qz accumulated chunkwise.
+            y.as_mut_slice().fill(0.0);
+            for_each_chunk(src, block_cols, &mut io, &mut chunk, |c0, xb| {
+                let w = xb.cols();
+                qz_chunk.resize(w, l);
+                qz_chunk
+                    .as_mut_slice()
+                    .copy_from_slice(&qz.as_slice()[c0 * l..(c0 + w) * l]);
+                gemm::matmul_acc_into(xb, &qz_chunk, &mut y, ws);
+                Ok(())
+            })?;
+        }
+        ws.release_mat(qz_chunk);
+        ws.release_mat(zb);
+        ws.release_mat(qz);
+        ws.release_mat(z);
+    }
+
+    orthonormalize_into(&y, &mut q, ws);
+
+    // Final pass: B(:, chunk) = Qᵀ X_c.
+    let mut b = ws.acquire_mat(l, n);
+    let mut bb = ws.acquire_mat(1, 1);
+    for_each_chunk(src, block_cols, &mut io, &mut chunk, |c0, xb| {
+        bb.resize(l, xb.cols());
+        gemm::at_b_into(&q, xb, &mut bb, ws); // l×w
+        b.set_col_block(c0, &bb);
+        Ok(())
+    })?;
+
+    ws.release_mat(bb);
+    ws.release_mat(y);
+    ws.release_mat(omega_chunk);
+    ws.release_mat(chunk);
+    ws.release_mat(io);
+    if let Some(om) = omega {
+        ws.release_mat(om);
+    }
+    if let Some((cols, vals, _)) = sparse {
+        ws.release_vec(vals);
+        ws.release_vec(cols);
+    }
     Ok(QbFactors { q, b })
 }
 
@@ -151,12 +336,11 @@ mod tests {
         let mut r2 = Pcg64::seed_from_u64(2);
         let mem = super::super::qb::qb(&a, opts, &mut r1);
         let blk = qb_blocked(&MatSource(&a), opts, 10, &mut r2).unwrap();
-        // Same Ω (same seed) → same subspace. Individual Q columns inside
-        // the oversampled noise directions are fp-sensitive, so compare the
-        // products and the approximation quality instead.
-        let mem_rec = gemm::matmul(&mem.q, &mem.b);
-        let blk_rec = gemm::matmul(&blk.q, &blk.b);
-        assert!(mem_rec.max_abs_diff(&blk_rec) < 1e-6);
+        // Same Ω (same seed) → same subspace; with n ≤ COMPUTE_COLS the
+        // chunk grid is a single chunk, so the factors are in fact
+        // bit-identical to the in-memory engine.
+        assert_eq!(blk.q, mem.q, "single-chunk blocked must equal in-memory bitwise");
+        assert_eq!(blk.b, mem.b);
         assert!(blk.relative_error(&a) < 1e-8);
         // Q orthonormal
         let l = blk.q.cols();
@@ -167,11 +351,63 @@ mod tests {
     fn blocked_every_block_size() {
         let a = low_rank(30, 23, 4, 3);
         let opts = QbOptions::new(4).with_oversample(6).with_power_iters(1);
-        for bs in [1, 2, 3, 5, 7, 23, 100] {
+        for bs in [1, 2, 3, 5, 7, 23, 100, 600] {
             let mut rng = Pcg64::seed_from_u64(4);
             let f = qb_blocked(&MatSource(&a), opts, bs, &mut rng).unwrap();
             assert!(f.relative_error(&a) < 1e-8, "bs={bs} err={}", f.relative_error(&a));
         }
+    }
+
+    #[test]
+    fn blocked_bit_deterministic_across_block_sizes() {
+        // The fixed absolute chunk grid makes the factors independent of
+        // the I/O block size — bit-for-bit, for dense and sparse sketches.
+        let a = low_rank(40, 29, 4, 5);
+        for sketch in [SketchKind::Uniform, SketchKind::sparse_sign()] {
+            let opts = QbOptions::new(4)
+                .with_oversample(5)
+                .with_power_iters(1)
+                .with_sketch(sketch);
+            let mut r_ref = Pcg64::seed_from_u64(6);
+            let reference = qb_blocked(&MatSource(&a), opts, 4, &mut r_ref).unwrap();
+            // 600 ≥ 2·COMPUTE_COLS exercises the wide-read carve path.
+            for bs in [1, 2, 3, 6, 9, 29, 64, 600] {
+                let mut rng = Pcg64::seed_from_u64(6);
+                let f = qb_blocked(&MatSource(&a), opts, bs, &mut rng).unwrap();
+                assert_eq!(f.q, reference.q, "{sketch:?} bs={bs}: Q differs");
+                assert_eq!(f.b, reference.b, "{sketch:?} bs={bs}: B differs");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_with_reuses_workspace_bit_identically() {
+        let a = low_rank(35, 28, 3, 7);
+        let opts = QbOptions::new(3).with_oversample(4).with_power_iters(1);
+        let mut ws = Workspace::new();
+        let mut r1 = Pcg64::seed_from_u64(8);
+        let f1 = qb_blocked_with(&MatSource(&a), opts, 9, &mut r1, &mut ws).unwrap();
+        let (q1, b1) = (f1.q.clone(), f1.b.clone());
+        f1.recycle(&mut ws);
+        let pooled = ws.pooled();
+        let mut r2 = Pcg64::seed_from_u64(8);
+        let f2 = qb_blocked_with(&MatSource(&a), opts, 9, &mut r2, &mut ws).unwrap();
+        assert_eq!(f2.q, q1);
+        assert_eq!(f2.b, b1);
+        f2.recycle(&mut ws);
+        assert_eq!(ws.pooled(), pooled, "steady state must not grow the pool");
+    }
+
+    #[test]
+    fn blocked_sparse_sign_recovers_low_rank() {
+        let a = low_rank(50, 37, 4, 9);
+        let opts = QbOptions::new(4)
+            .with_oversample(8)
+            .with_power_iters(2)
+            .with_sketch(SketchKind::sparse_sign());
+        let mut rng = Pcg64::seed_from_u64(10);
+        let f = qb_blocked(&MatSource(&a), opts, 11, &mut rng).unwrap();
+        assert!(f.relative_error(&a) < 1e-8, "err={}", f.relative_error(&a));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Randomized range finding — the probabilistic compression stage.
+//! Randomized range finding — the probabilistic compression engine.
 //!
 //! * [`qb`] — in-memory QB decomposition (paper §2.3 / Algorithm 1 lines
 //!   1–9): `A ≈ Q·B` with `Q (m×l)` orthonormal and `B = QᵀA (l×n)`,
@@ -8,13 +8,24 @@
 //!   touching one column block of `A` at a time.
 //!
 //! The QB products (`XΩ`, `XᵀQ`, `QᵀX`) are the compression stage's whole
-//! cost, so both variants follow the crate's Workspace discipline: the
-//! sketch buffers are allocated once per decomposition and every product
-//! goes through the packed `_into` GEMM kernels of
-//! [`crate::linalg::gemm`], which draw pack-panel scratch from a
-//! [`crate::linalg::workspace::Workspace`] (or, when threaded, from the
-//! persistent pool workers of [`crate::linalg::pool`]) and never
-//! allocate once warm.
+//! cost, so both variants are built as one **workspace-drawn, pool-parallel
+//! engine**:
+//!
+//! * `qb_into` / `qb_blocked_with` draw *every* buffer — the test matrix,
+//!   the sketch `Y`/`Z`, block staging, and QR scratch — from a caller
+//!   [`crate::linalg::workspace::Workspace`], so a warm decomposition
+//!   performs zero heap allocations (enforced end-to-end, compression
+//!   included, by `tests/test_zero_alloc.rs` and
+//!   `tests/test_zero_alloc_pool.rs`).
+//! * The large products run on the packed `_into` GEMM kernels of
+//!   [`crate::linalg::gemm`] and dispatch onto the persistent worker pool
+//!   of [`crate::linalg::pool`]; orthonormalization uses the Gram-based
+//!   CholeskyQR2 of [`crate::linalg::qr::orthonormalize_into`] (same pool,
+//!   same workspace) with an automatic Householder fallback on
+//!   rank-deficient sketches.
+//! * The test matrix is selectable via [`qb::SketchKind`]: dense uniform
+//!   (paper Remark 1) or Gaussian, or a structured sparse-sign/CountSketch
+//!   matrix applied without ever materializing `Ω`.
 
 pub mod blocked;
 pub mod qb;

@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! l = k + p
-//! Ω = rand(n, l)                       // uniform [0,1): Remark 1
+//! Ω = rand(n, l)                       // test matrix: see SketchKind
 //! Y = X·Ω                              // m×l sketch
 //! repeat q times:                      // subspace iterations (Eq. 8,
 //!     [Q,_] = qr(Y)                    //  stabilized per Gu 2015)
@@ -20,12 +20,66 @@
 //! i.e. oversampling `p` and power iterations `q` drive the error to the
 //! optimal `σ_{k+1}`; `bench_ablation_oversampling` and
 //! `bench_ablation_power_iters` sweep both knobs.
+//!
+//! ## The compression engine
+//!
+//! [`qb_into`] is the allocation-free core: the caller owns `Q`/`B` and a
+//! [`Workspace`], and every temporary — `Ω`, `Y`, `Z`, and the QR scratch
+//! of [`orthonormalize_into`] — is drawn from that workspace, so a warm
+//! decomposition performs **zero heap allocations** (asserted by
+//! `tests/test_zero_alloc.rs` as part of the full `RandomizedHals::fit`
+//! guarantee). The large `XΩ`/`XᵀQ`/`XQ` products and the Gram-based QR
+//! inner products all run on the packed GEMM engine and dispatch onto the
+//! persistent worker pool of [`crate::linalg::pool`] when big enough.
+//!
+//! ## Test matrices ([`SketchKind`])
+//!
+//! * `Uniform` — dense iid `[0,1)` entries; the paper's Remark 1 default
+//!   for nonnegative data.
+//! * `Gaussian` — dense iid standard normals (the classical choice; used
+//!   by the randomized SVD path).
+//! * `SparseSign { nnz }` — a structured OSNAP/CountSketch-style test
+//!   matrix (Clarkson & Woodruff 2013; cf. Tepper & Sapiro 2016 on
+//!   structured projections for compressed NMF): each *row* of `Ω` has
+//!   `nnz` entries of `±1/√nnz` in distinct random columns. `Y = XΩ` is
+//!   applied **without materializing Ω** in `O(m·n·nnz)` work instead of
+//!   the dense `O(m·n·l)`, pool-parallel over output rows.
 
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
-use crate::linalg::qr::orthonormalize;
+use crate::linalg::pool;
+use crate::linalg::qr::orthonormalize_into;
 use crate::linalg::rng::Pcg64;
 use crate::linalg::workspace::Workspace;
+
+/// The random test matrix drawn for the sketch `Y = XΩ`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SketchKind {
+    /// Dense iid uniform `[0,1)` entries (paper Remark 1: nonnegative
+    /// test matrices suit nonnegative data). The NMF-path default.
+    Uniform,
+    /// Dense iid standard-Gaussian entries (the classical range-finder
+    /// choice; default for the SVD path).
+    Gaussian,
+    /// Sparse-sign test matrix: `nnz` entries of `±1/√nnz` per row of
+    /// `Ω`, in distinct random columns, applied without materializing
+    /// `Ω`. `nnz` is clamped to `[1, l]`; [`SketchKind::sparse_sign`]
+    /// picks the standard `nnz = 4`.
+    SparseSign {
+        /// Nonzeros per row of `Ω`.
+        nnz: usize,
+    },
+}
+
+impl SketchKind {
+    /// Sparse-sign sketch with the customary density of 4 nonzeros per
+    /// row — dense-Gaussian-quality subspace embedding at a fraction of
+    /// the sketch cost (verified within a constant factor by
+    /// `test_properties.rs`).
+    pub fn sparse_sign() -> Self {
+        SketchKind::SparseSign { nnz: 4 }
+    }
+}
 
 /// Parameters of the randomized range finder.
 #[derive(Clone, Copy, Debug)]
@@ -37,17 +91,19 @@ pub struct QbOptions {
     pub oversample: usize,
     /// Number of subspace iterations `q`; the paper defaults to 2.
     pub power_iters: usize,
-    /// Use Gaussian test matrices instead of the uniform `[0,1)` entries.
-    /// The paper (Remark 1) finds nonnegative uniform entries work better
-    /// for nonnegative data, so `false` is the NMF-path default; the SVD
-    /// path uses Gaussian.
-    pub gaussian: bool,
+    /// The random test matrix; see [`SketchKind`].
+    pub sketch: SketchKind,
 }
 
 impl QbOptions {
     /// Paper defaults: `p = 20`, `q = 2`, uniform test matrix.
     pub fn new(rank: usize) -> Self {
-        QbOptions { rank, oversample: 20, power_iters: 2, gaussian: false }
+        QbOptions {
+            rank,
+            oversample: 20,
+            power_iters: 2,
+            sketch: SketchKind::Uniform,
+        }
     }
 
     pub fn with_oversample(mut self, p: usize) -> Self {
@@ -60,8 +116,16 @@ impl QbOptions {
         self
     }
 
+    /// Choose the test matrix.
+    pub fn with_sketch(mut self, s: SketchKind) -> Self {
+        self.sketch = s;
+        self
+    }
+
+    /// Back-compat toggle between the two dense kinds: `true` →
+    /// [`SketchKind::Gaussian`], `false` → [`SketchKind::Uniform`].
     pub fn with_gaussian(mut self, g: bool) -> Self {
-        self.gaussian = g;
+        self.sketch = if g { SketchKind::Gaussian } else { SketchKind::Uniform };
         self
     }
 
@@ -91,39 +155,224 @@ impl QbFactors {
             crate::linalg::norms::fro_norm(&diff) / an
         }
     }
+
+    /// Hand the factor storage back to a workspace pool (for callers that
+    /// obtained the factors through [`qb_with`] on a long-lived
+    /// workspace, e.g. the zero-allocation `fit_with` solver loops).
+    pub fn recycle(self, ws: &mut Workspace) {
+        ws.release_mat(self.q);
+        ws.release_mat(self.b);
+    }
 }
 
-/// Compute the QB decomposition of `a`.
+/// Compute the QB decomposition of `a` (allocating convenience wrapper
+/// over [`qb_with`] with a throwaway workspace).
 pub fn qb(a: &Mat, opts: QbOptions, rng: &mut Pcg64) -> QbFactors {
+    qb_with(a, opts, rng, &mut Workspace::new())
+}
+
+/// QB decomposition with factors and scratch drawn from `ws`. Recycle the
+/// returned factors with [`QbFactors::recycle`] to keep a warm workspace
+/// allocation-free across decompositions.
+pub fn qb_with(a: &Mat, opts: QbOptions, rng: &mut Pcg64, ws: &mut Workspace) -> QbFactors {
+    let (m, n) = a.shape();
+    let l = opts.sketch_width(m, n);
+    let mut q = ws.acquire_mat(m, l);
+    let mut b = ws.acquire_mat(l, n);
+    qb_into(a, opts, rng, &mut q, &mut b, ws);
+    QbFactors { q, b }
+}
+
+/// The compression engine: QB decomposition into caller-owned
+/// `q (m×l)` / `b (l×n)` with every temporary drawn from `ws`
+/// (`l = opts.sketch_width(m, n)`). Zero heap allocations once the
+/// workspace is warm; deterministic for a fixed seed and thread count.
+pub fn qb_into(
+    a: &Mat,
+    opts: QbOptions,
+    rng: &mut Pcg64,
+    q: &mut Mat,
+    b: &mut Mat,
+    ws: &mut Workspace,
+) {
     let (m, n) = a.shape();
     assert!(m > 0 && n > 0, "qb: empty input");
     let l = opts.sketch_width(m, n);
-
-    // Test matrix Ω (n×l).
-    let omega = if opts.gaussian { rng.gaussian_mat(n, l) } else { rng.uniform_mat(n, l) };
-
-    // One workspace + fixed sketch buffers serve every pass: the big
-    // `XΩ`/`XᵀQ`/`XQz` products of the power iterations reuse the same
-    // storage and GEMM pack panels instead of allocating per pass.
-    let mut ws = Workspace::new();
-    let mut y = Mat::zeros(m, l);
-    let mut z = Mat::zeros(n, l);
+    assert_eq!(q.shape(), (m, l), "qb_into: q must be {m}x{l}");
+    assert_eq!(b.shape(), (l, n), "qb_into: b must be {l}x{n}");
 
     // Sketch Y = XΩ (m×l).
-    gemm::matmul_into(a, &omega, &mut y, &mut ws);
+    let mut y = ws.acquire_mat(m, l);
+    sketch_apply(a, opts.sketch, l, rng, &mut y, ws);
 
     // Stabilized subspace iterations (Algorithm 1, lines 4–7).
-    for _ in 0..opts.power_iters {
-        let q = orthonormalize(&y);
-        gemm::at_b_into(a, &q, &mut z, &mut ws); // XᵀQ : n×l
-        let qz = orthonormalize(&z);
-        gemm::matmul_into(a, &qz, &mut y, &mut ws); // m×l
+    if opts.power_iters > 0 {
+        let mut z = ws.acquire_mat(n, l);
+        let mut qz = ws.acquire_mat(n, l);
+        for _ in 0..opts.power_iters {
+            orthonormalize_into(&y, q, ws);
+            gemm::at_b_into(a, q, &mut z, ws); // XᵀQ : n×l
+            orthonormalize_into(&z, &mut qz, ws);
+            gemm::matmul_into(a, &qz, &mut y, ws); // m×l
+        }
+        ws.release_mat(qz);
+        ws.release_mat(z);
     }
 
-    let q = orthonormalize(&y);
-    let mut b = Mat::zeros(l, n);
-    gemm::at_b_into(&q, a, &mut b, &mut ws); // QᵀX : l×n
-    QbFactors { q, b }
+    orthonormalize_into(&y, q, ws);
+    gemm::at_b_into(q, a, b, ws); // QᵀX : l×n
+    ws.release_mat(y);
+}
+
+/// One sketch stage `Y = XΩ` with `Ω` drawn from `rng`: dense kinds
+/// materialize `Ω (n×l)` in workspace scratch and run one packed GEMM;
+/// [`SketchKind::SparseSign`] applies the test matrix implicitly in
+/// `O(m·n·nnz)`. `y` must be `m×l`. Allocation-free once `ws` is warm;
+/// exposed so `bench_perf_qb` can time the dense-vs-structured sketch
+/// stage head-to-head.
+pub fn sketch_apply(
+    a: &Mat,
+    kind: SketchKind,
+    l: usize,
+    rng: &mut Pcg64,
+    y: &mut Mat,
+    ws: &mut Workspace,
+) {
+    let (m, n) = a.shape();
+    assert_eq!(y.shape(), (m, l), "sketch_apply: y must be {m}x{l}");
+    match kind {
+        SketchKind::Uniform | SketchKind::Gaussian => {
+            let mut omega = ws.acquire_mat(n, l);
+            fill_dense_sketch(kind, rng, &mut omega);
+            gemm::matmul_into(a, &omega, y, ws);
+            ws.release_mat(omega);
+        }
+        SketchKind::SparseSign { nnz } => {
+            let s = nnz.clamp(1, l);
+            let mut cols = ws.acquire_vec(n * s);
+            let mut vals = ws.acquire_vec(n * s);
+            fill_sparse_sign(rng, l, s, &mut cols, &mut vals);
+            y.as_mut_slice().fill(0.0);
+            sparse_sketch_apply_block(a, 0, &cols, &vals, s, y);
+            ws.release_vec(vals);
+            ws.release_vec(cols);
+        }
+    }
+}
+
+/// Fill a dense test matrix in place ([`SketchKind::Uniform`] or
+/// [`SketchKind::Gaussian`]; the draw order matches the allocating
+/// `uniform_mat`/`gaussian_mat` constructors bit-for-bit).
+pub(crate) fn fill_dense_sketch(kind: SketchKind, rng: &mut Pcg64, omega: &mut Mat) {
+    match kind {
+        SketchKind::Uniform => rng.fill_uniform(omega.as_mut_slice()),
+        SketchKind::Gaussian => rng.fill_gaussian(omega.as_mut_slice()),
+        SketchKind::SparseSign { .. } => {
+            unreachable!("sparse sketches are applied, never materialized")
+        }
+    }
+}
+
+/// Draw the sparse-sign test matrix: for each of the `cols.len() / nnz`
+/// rows of `Ω`, `nnz` distinct target columns in `[0, l)` (encoded as
+/// `f64` — exact for any realizable `l`) and values `±1/√nnz`.
+pub(crate) fn fill_sparse_sign(
+    rng: &mut Pcg64,
+    l: usize,
+    nnz: usize,
+    cols: &mut [f64],
+    vals: &mut [f64],
+) {
+    debug_assert!((1..=l).contains(&nnz));
+    debug_assert_eq!(cols.len(), vals.len());
+    let scale = 1.0 / (nnz as f64).sqrt();
+    let rows = cols.len() / nnz;
+    for r in 0..rows {
+        let base = r * nnz;
+        for t in 0..nnz {
+            // Distinct columns within the row; nnz is tiny (≤ 8 in
+            // practice), so rejection against the prior picks is cheap.
+            loop {
+                let c = rng.uniform_usize(l);
+                if !cols[base..base + t].iter().any(|&p| p as usize == c) {
+                    cols[base + t] = c as f64;
+                    break;
+                }
+            }
+            let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+            vals[base + t] = sign * scale;
+        }
+    }
+}
+
+/// Threading gate for the sparse apply, mirroring the packed GEMM's
+/// `2·m·n·k ≥ 2²⁰` flop criterion (here `k = nnz`).
+const SPARSE_PAR_THRESHOLD: usize = 1 << 20;
+
+/// `Y += X_b · Ω[r0 .. r0+w, :]` for the sparse-sign `Ω` encoded in
+/// `(cols, vals)`, where `X_b (m×w)` holds columns `[r0, r0+w)` of the
+/// data (the full matrix when `r0 = 0, w = n`). The out-of-core path
+/// calls this once per column chunk; contributions accumulate.
+///
+/// Pool-parallel over output rows when big enough; each output element
+/// receives its contributions in ascending `r`, so results are identical
+/// across chunkings *and* thread counts.
+pub(crate) fn sparse_sketch_apply_block(
+    xb: &Mat,
+    r0: usize,
+    cols: &[f64],
+    vals: &[f64],
+    nnz: usize,
+    y: &mut Mat,
+) {
+    let (m, w) = xb.shape();
+    let l = y.cols();
+    assert_eq!(y.rows(), m, "sparse apply: row mismatch");
+    assert!((r0 + w) * nnz <= cols.len(), "sparse apply: sketch too short");
+    if m == 0 || w == 0 {
+        return;
+    }
+    let flops = 2usize.saturating_mul(m).saturating_mul(w).saturating_mul(nnz);
+    let nthreads = if flops < SPARSE_PAR_THRESHOLD || m < 2 {
+        1
+    } else {
+        gemm::num_threads().min(m)
+    };
+    if nthreads <= 1 {
+        sparse_apply_rows(xb, r0, cols, vals, nnz, y.as_mut_slice(), l, 0, m);
+        return;
+    }
+    pool::run_row_split(nthreads, m, l, y.as_mut_slice(), &|yslice, i0, i1, _scratch| {
+        sparse_apply_rows(xb, r0, cols, vals, nnz, yslice, l, i0, i1);
+    });
+}
+
+/// Rows `[i0, i1)` of the sparse apply; `yslice` holds exactly those rows.
+#[allow(clippy::too_many_arguments)]
+fn sparse_apply_rows(
+    xb: &Mat,
+    r0: usize,
+    cols: &[f64],
+    vals: &[f64],
+    nnz: usize,
+    yslice: &mut [f64],
+    l: usize,
+    i0: usize,
+    i1: usize,
+) {
+    for i in i0..i1 {
+        let xrow = xb.row(i);
+        let yrow = &mut yslice[(i - i0) * l..(i - i0 + 1) * l];
+        for (c, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                let base = (r0 + c) * nnz;
+                for t in 0..nnz {
+                    let col = cols[base + t] as usize;
+                    yrow[col] += vals[base + t] * xv;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -182,8 +431,8 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(7);
         let m = 80;
         let n = 80;
-        let u = orthonormalize(&rng.gaussian_mat(m, n));
-        let v = orthonormalize(&rng.gaussian_mat(n, n));
+        let u = crate::linalg::qr::orthonormalize(&rng.gaussian_mat(m, n));
+        let v = crate::linalg::qr::orthonormalize(&rng.gaussian_mat(n, n));
         let mut us = u.clone();
         for j in 0..n {
             let s = 1.0 / (j + 1) as f64;
@@ -213,11 +462,101 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let a = low_rank(50, 40, 5, 9);
-        let mut r1 = Pcg64::seed_from_u64(10);
-        let mut r2 = Pcg64::seed_from_u64(10);
-        let f1 = qb(&a, QbOptions::new(5), &mut r1);
-        let f2 = qb(&a, QbOptions::new(5), &mut r2);
-        assert_eq!(f1.q, f2.q);
-        assert_eq!(f1.b, f2.b);
+        for sketch in [SketchKind::Uniform, SketchKind::Gaussian, SketchKind::sparse_sign()] {
+            let mut r1 = Pcg64::seed_from_u64(10);
+            let mut r2 = Pcg64::seed_from_u64(10);
+            let opts = QbOptions::new(5).with_sketch(sketch);
+            let f1 = qb(&a, opts, &mut r1);
+            let f2 = qb(&a, opts, &mut r2);
+            assert_eq!(f1.q, f2.q, "{sketch:?}");
+            assert_eq!(f1.b, f2.b, "{sketch:?}");
+        }
+    }
+
+    #[test]
+    fn qb_into_warm_workspace_bit_identical_and_recyclable() {
+        let a = low_rank(60, 45, 4, 11);
+        let opts = QbOptions::new(4).with_oversample(6);
+        let mut ws = Workspace::new();
+        let mut r1 = Pcg64::seed_from_u64(12);
+        let f1 = qb_with(&a, opts, &mut r1, &mut ws);
+        let (q1, b1) = (f1.q.clone(), f1.b.clone());
+        f1.recycle(&mut ws);
+        let pooled = ws.pooled();
+        let mut r2 = Pcg64::seed_from_u64(12);
+        let f2 = qb_with(&a, opts, &mut r2, &mut ws);
+        assert_eq!(f2.q, q1, "workspace reuse must be bit-identical");
+        assert_eq!(f2.b, b1);
+        f2.recycle(&mut ws);
+        assert_eq!(ws.pooled(), pooled, "steady state must not grow the pool");
+    }
+
+    #[test]
+    fn sparse_sign_recovers_exact_low_rank() {
+        let a = low_rank(100, 70, 5, 13);
+        let mut rng = Pcg64::seed_from_u64(14);
+        let opts = QbOptions::new(5)
+            .with_oversample(10)
+            .with_power_iters(2)
+            .with_sketch(SketchKind::sparse_sign());
+        let f = qb(&a, opts, &mut rng);
+        assert!(f.relative_error(&a) < 1e-8, "err={}", f.relative_error(&a));
+        let l = f.q.cols();
+        assert!(gemm::gram(&f.q).max_abs_diff(&Mat::eye(l)) < 1e-9);
+    }
+
+    #[test]
+    fn sparse_apply_matches_materialized_omega() {
+        // The implicit sparse apply must equal X · Ω for the explicitly
+        // materialized Ω decoded from the same (cols, vals) tables.
+        let mut rng = Pcg64::seed_from_u64(15);
+        let x = rng.uniform_mat(33, 21);
+        let l = 9usize;
+        let nnz = 3usize;
+        let n = x.cols();
+        let mut cols = vec![0.0; n * nnz];
+        let mut vals = vec![0.0; n * nnz];
+        let mut rs = Pcg64::seed_from_u64(16);
+        fill_sparse_sign(&mut rs, l, nnz, &mut cols, &mut vals);
+        let mut omega = Mat::zeros(n, l);
+        for r in 0..n {
+            for t in 0..nnz {
+                let c = cols[r * nnz + t] as usize;
+                omega.set(r, c, omega.get(r, c) + vals[r * nnz + t]);
+            }
+        }
+        let dense = gemm::matmul(&x, &omega);
+        let mut y = Mat::zeros(x.rows(), l);
+        sparse_sketch_apply_block(&x, 0, &cols, &vals, nnz, &mut y);
+        assert!(y.max_abs_diff(&dense) < 1e-12);
+        // Column-chunked application accumulates to the same result
+        // bit-for-bit (the out-of-core contract).
+        let mut y2 = Mat::zeros(x.rows(), l);
+        let xa = x.col_block(0, 8);
+        let xb = x.col_block(8, n);
+        sparse_sketch_apply_block(&xa, 0, &cols, &vals, nnz, &mut y2);
+        sparse_sketch_apply_block(&xb, 8, &cols, &vals, nnz, &mut y2);
+        assert_eq!(y2, y, "chunked sparse apply must be bit-identical");
+    }
+
+    #[test]
+    fn sparse_sign_rows_have_distinct_targets_and_unit_mass() {
+        let l = 11usize;
+        let nnz = 4usize;
+        let rows = 40usize;
+        let mut cols = vec![0.0; rows * nnz];
+        let mut vals = vec![0.0; rows * nnz];
+        let mut rng = Pcg64::seed_from_u64(17);
+        fill_sparse_sign(&mut rng, l, nnz, &mut cols, &mut vals);
+        for r in 0..rows {
+            let base = r * nnz;
+            let mut seen: Vec<usize> = cols[base..base + nnz].iter().map(|&c| c as usize).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), nnz, "row {r}: duplicate targets");
+            assert!(seen.iter().all(|&c| c < l));
+            let mass: f64 = vals[base..base + nnz].iter().map(|v| v * v).sum();
+            assert!((mass - 1.0).abs() < 1e-12, "row {r}: ‖Ω row‖ = 1");
+        }
     }
 }

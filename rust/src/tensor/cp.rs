@@ -98,7 +98,7 @@ pub fn cp_hals(x: &Tensor3, opts: &CpOptions) -> Result<CpFit> {
     let start = Instant::now();
     let (i, j, k) = x.dims();
     let r = opts.rank;
-    anyhow::ensure!(r >= 1 && r <= i.max(j).max(k), "bad CP rank {r}");
+    anyhow::ensure!((1..=i.max(j).max(k)).contains(&r), "bad CP rank {r}");
     let mut rng = Pcg64::seed_from_u64(opts.seed);
     let mean = x.as_slice().iter().sum::<f64>() / x.len().max(1) as f64;
     let scale = (mean.max(0.0) / r as f64).cbrt();
@@ -131,7 +131,7 @@ pub fn cp_rhals(x: &Tensor3, opts: &CpOptions) -> Result<CpFit> {
     let dims = x.dims();
     let (i, j, k) = dims;
     let r = opts.rank;
-    anyhow::ensure!(r >= 1 && r <= i.max(j).max(k), "bad CP rank {r}");
+    anyhow::ensure!((1..=i.max(j).max(k)).contains(&r), "bad CP rank {r}");
     let mut rng = Pcg64::seed_from_u64(opts.seed);
 
     // --- Compression: Qₙ from QB of each unfolding (range of mode-n). ---

@@ -8,7 +8,7 @@ use randnmf::nmf::options::{NmfOptions, Regularization, UpdateOrder};
 use randnmf::nmf::rhals::RandomizedHals;
 use randnmf::prop_assert;
 use randnmf::sketch::blocked::{qb_blocked, MatSource};
-use randnmf::sketch::qb::{qb, QbOptions};
+use randnmf::sketch::qb::{qb, QbOptions, SketchKind};
 use randnmf::testing::forall;
 
 #[test]
@@ -224,21 +224,55 @@ fn prop_qb_exact_on_low_rank() {
 }
 
 #[test]
-fn prop_blocked_qb_block_size_invariant() {
-    forall("blocked QB == any block size", 15, |g| {
+fn prop_blocked_qb_bit_deterministic_across_block_sizes() {
+    // The blocked engine computes over a fixed absolute chunk grid, so a
+    // fixed seed must give bit-identical factors for *any* I/O block size
+    // and any sketch kind.
+    forall("blocked QB bitwise == any block size", 15, |g| {
         let m = g.usize_in(8, 40);
         let n = g.usize_in(8, 35);
         let r = g.usize_in(1, 4.min(m.min(n)));
         let x = g.mat_low_rank(m, n, r);
         let bs = g.usize_in(1, n + 3);
-        let opts = QbOptions::new(r).with_oversample(4).with_power_iters(1);
+        let sketch = *g.choose(&[
+            SketchKind::Uniform,
+            SketchKind::Gaussian,
+            SketchKind::sparse_sign(),
+        ]);
+        let opts = QbOptions::new(r).with_oversample(4).with_power_iters(1).with_sketch(sketch);
         let mut r1 = g.rng();
         let mut r2 = r1.clone();
         let blocked = qb_blocked(&MatSource(&x), opts, bs, &mut r1).unwrap();
         let full = qb_blocked(&MatSource(&x), opts, n, &mut r2).unwrap();
-        let rec_a = gemm::matmul(&blocked.q, &blocked.b);
-        let rec_b = gemm::matmul(&full.q, &full.b);
-        prop_assert!(rec_a.max_abs_diff(&rec_b) < 1e-7, "block size changed result");
+        prop_assert!(blocked.q == full.q, "block size {bs} changed Q ({sketch:?})");
+        prop_assert!(blocked.b == full.b, "block size {bs} changed B ({sketch:?})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_sign_qb_within_constant_factor_of_gaussian() {
+    // Structured sparse-sign sketches must match dense-Gaussian QB
+    // quality to within a constant factor on noisy low-rank inputs
+    // (OSNAP subspace-embedding guarantee; power iterations sharpen both).
+    forall("sparse-sign QB ≈ Gaussian QB", 12, |g| {
+        let m = g.usize_in(30, 80);
+        let n = g.usize_in(25, 60);
+        let r = g.usize_in(1, 4.min(m.min(n)));
+        let mut x = g.mat_low_rank(m, n, r);
+        let noise = g.mat_gaussian(m, n);
+        x.axpy(1e-3, &noise);
+        let mut r1 = g.rng();
+        let mut r2 = r1.clone();
+        let base = QbOptions::new(r).with_oversample(10).with_power_iters(2);
+        let gauss = qb(&x, base.with_sketch(SketchKind::Gaussian), &mut r1);
+        let sparse = qb(&x, base.with_sketch(SketchKind::sparse_sign()), &mut r2);
+        let eg = gauss.relative_error(&x);
+        let es = sparse.relative_error(&x);
+        prop_assert!(
+            es <= 4.0 * eg + 1e-9,
+            "sparse-sign err {es} vs gaussian err {eg} (>4x)"
+        );
         Ok(())
     });
 }

@@ -1,10 +1,17 @@
-//! Zero-allocation guarantee for steady-state solver iterations.
+//! Zero-allocation guarantee for steady-state solver iterations — and,
+//! since the sketch layer became a workspace-drawn engine, for the whole
+//! Algorithm 1 pipeline.
 //!
 //! A counting global allocator wraps `System`; the test then asserts that
 //! (a) the `_into` GEMM kernels allocate nothing once their `Workspace`
-//! is warm, and (b) a HALS / randomized-HALS fit's total allocation count
-//! is *independent of the iteration count* — i.e. the per-iteration cost
-//! is exactly zero heap allocations.
+//! is warm, (b) a HALS / randomized-HALS fit's total allocation count
+//! is *independent of the iteration count*, (c) a randomized fit's
+//! allocation count is *independent of the power-iteration count* — i.e.
+//! each compression pass (QR included) is allocation-free once warm —
+//! and (d) the strongest form: a **warm `RandomizedHals::fit_with` on a
+//! reused `RhalsScratch` performs exactly zero heap allocations for the
+//! entire fit, compression stage included** (factors recycled between
+//! fits; random init, tracing off).
 //!
 //! Everything runs in a single `#[test]` so `RANDNMF_THREADS=1` is set
 //! before the thread-count `OnceLock` is first touched. This binary
@@ -50,13 +57,50 @@ use randnmf::linalg::rng::Pcg64;
 use randnmf::linalg::workspace::Workspace;
 use randnmf::nmf::hals::Hals;
 use randnmf::nmf::options::NmfOptions;
-use randnmf::nmf::rhals::RandomizedHals;
+use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
 
 fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
     let mut rng = Pcg64::seed_from_u64(seed);
     let u = rng.uniform_mat(m, r);
     let v = rng.uniform_mat(r, n);
     gemm::matmul(&u, &v)
+}
+
+/// Allocation count of one `fit_with` on an already-warm scratch (the
+/// factors are recycled back into the pool afterwards, so consecutive
+/// calls see an identical pool state).
+fn warm_fit_with_allocs(solver: &RandomizedHals, x: &Mat, scratch: &mut RhalsScratch) -> u64 {
+    let before = allocs();
+    let fit = solver.fit_with(x, scratch).unwrap();
+    let after = allocs();
+    fit.recycle(&mut scratch.ws);
+    after - before
+}
+
+/// Assert a warm `fit_with` performs exactly zero heap allocations on
+/// `x`, end to end (compression stage included).
+fn assert_warm_fit_allocation_free(x: &Mat, label: &str) {
+    let solver = RandomizedHals::new(
+        NmfOptions::new(4)
+            .with_max_iter(15)
+            .with_tol(0.0)
+            .with_seed(21)
+            .with_oversample(6),
+    );
+    let mut scratch = RhalsScratch::new();
+    for _ in 0..3 {
+        // Warmup: drives the workspace pool to its capacity fixed point.
+        let fit = solver.fit_with(x, &mut scratch).unwrap();
+        fit.recycle(&mut scratch.ws);
+    }
+    for round in 0..3 {
+        let n = warm_fit_with_allocs(&solver, x, &mut scratch);
+        assert_eq!(
+            n, 0,
+            "{label}: warm fit_with round {round} performed {n} heap allocations \
+             (the whole randomized fit, compression included, must be allocation-free)"
+        );
+    }
 }
 
 /// Allocation count of a full deterministic-HALS fit of `iters` iterations
@@ -146,4 +190,39 @@ fn steady_state_iterations_do_not_allocate() {
             long.saturating_sub(short)
         );
     }
+
+    // --- (c) compression stage: allocation count independent of the
+    //     power-iteration count (each extra pass reuses the workspace) ---
+    let rhals_q = |q: usize| {
+        let solver = RandomizedHals::new(
+            NmfOptions::new(4)
+                .with_max_iter(10)
+                .with_tol(0.0)
+                .with_seed(9)
+                .with_oversample(6)
+                .with_power_iters(q),
+        );
+        let before = allocs();
+        let fit = solver.fit(&x).unwrap();
+        let after = allocs();
+        assert_eq!(fit.iters, 10);
+        after - before
+    };
+    let q2 = rhals_q(2);
+    let q4 = rhals_q(4);
+    assert_eq!(
+        q4, q2,
+        "compression passes allocated {} extra times over 2 extra power iterations",
+        q4.saturating_sub(q2)
+    );
+
+    // --- (d) warm fit_with: the whole fit allocates exactly zero ---
+    // Exact low-rank data drives the Householder-fallback QR path;
+    // noisy data drives the CholeskyQR2 path. Both must be clean.
+    assert_warm_fit_allocation_free(&x, "exact low rank (Householder fallback)");
+    let mut noisy = x.clone();
+    let mut nrng = Pcg64::seed_from_u64(20);
+    let noise = nrng.uniform_mat(noisy.rows(), noisy.cols());
+    noisy.axpy(1e-3, &noise);
+    assert_warm_fit_allocation_free(&noisy, "noisy low rank (CholeskyQR2)");
 }

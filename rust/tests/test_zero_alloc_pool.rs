@@ -12,7 +12,10 @@
 //!   allocation-free,
 //! * warm threaded `_into` kernels allocate exactly zero,
 //! * full HALS / randomized-HALS fits have allocation counts independent
-//!   of the iteration count.
+//!   of the iteration count,
+//! * a warm `RandomizedHals::fit_with` on a reused `RhalsScratch` — the
+//!   whole Algorithm 1 pipeline, compression stage included — performs
+//!   exactly zero heap allocations.
 //!
 //! Caveat: the counting allocator sees every thread, so the warmup phase
 //! must drive each worker's scratch (pack panels + partial buffers) to
@@ -59,7 +62,7 @@ use randnmf::linalg::rng::Pcg64;
 use randnmf::linalg::workspace::Workspace;
 use randnmf::nmf::hals::Hals;
 use randnmf::nmf::options::NmfOptions;
-use randnmf::nmf::rhals::RandomizedHals;
+use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
 
 fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
     let mut rng = Pcg64::seed_from_u64(seed);
@@ -175,5 +178,42 @@ fn threaded_steady_state_iterations_do_not_allocate() {
              over 50 extra iterations",
             long.abs_diff(short)
         );
+    }
+
+    // --- (d) warm fit_with on the pool path: the whole randomized fit —
+    //     compression stage included, with its big XΩ/XᵀQ/XQ products
+    //     fanning out onto the parked workers — allocates exactly zero ---
+    // Noise keeps the sketches full-rank so the CholeskyQR2 (Gram) QR
+    // path runs too; its gram products stay on the same engine.
+    let mut noisy = x.clone();
+    let mut nrng = Pcg64::seed_from_u64(20);
+    let noise = nrng.uniform_mat(noisy.rows(), noisy.cols());
+    noisy.axpy(1e-3, &noise);
+    for (data, label) in [(&x, "exact low rank"), (&noisy, "noisy low rank")] {
+        let solver = RandomizedHals::new(
+            NmfOptions::new(8)
+                .with_max_iter(12)
+                .with_tol(0.0)
+                .with_seed(21)
+                .with_oversample(6),
+        );
+        let mut scratch = RhalsScratch::new();
+        for _ in 0..3 {
+            // Warmup: settles both the workspace pool and each worker's
+            // persistent scratch at their capacity fixed points.
+            let fit = solver.fit_with(data, &mut scratch).unwrap();
+            fit.recycle(&mut scratch.ws);
+        }
+        for round in 0..3 {
+            let before = allocs();
+            let fit = solver.fit_with(data, &mut scratch).unwrap();
+            let n = allocs() - before;
+            fit.recycle(&mut scratch.ws);
+            assert_eq!(
+                n, 0,
+                "{label}: warm threaded fit_with round {round} performed {n} \
+                 heap allocations"
+            );
+        }
     }
 }
