@@ -1,0 +1,150 @@
+//! Perf sparse — the CSR rHALS pipeline vs the densified path.
+//!
+//! Times the two stages the sparse-input speedup argument rests on, at
+//! the acceptance shape (`2000×500`, `k = 16`, `p = 20`) and density
+//! ∈ {0.01, 0.1}:
+//!
+//! * `sketch_csr_d*` / `sketch_densified_d*` — one `Y = XΩ` (uniform Ω)
+//!   on the CSR kernel vs the packed dense GEMM over the densified same
+//!   matrix. Both report GFLOP/s under the **dense-equivalent** `2·m·n·l`
+//!   convention, so the CSR kernel's `O(nnz·l)` apply shows up directly
+//!   as a higher apparent rate (expected ≈ `1/density`, bounded by
+//!   memory bandwidth).
+//! * `fit_csr_d*` / `fit_densified_d*` — a full warm
+//!   `RandomizedHals::fit_with` (10 iterations) on the CSR input vs its
+//!   densification, identical seeds. These are wall-time rows (no flop
+//!   convention; GFLOP/s column reads 0).
+//!
+//! Results go to `perf_sparse.csv` and are **merged** into the shared
+//! `BENCH_gemm.json` (keyed by kernel/shape/threads, preserving the GEMM
+//! and QB rows) — CI uploads that one file as the perf artifact.
+
+use randnmf::bench::{banner, bench_scale, update_bench_json, write_csv, BenchJsonRow, Bencher};
+use randnmf::coordinator::metrics::Table;
+use randnmf::linalg::sparse::csr_matmul_into;
+use randnmf::prelude::*;
+use randnmf::sketch::qb::QbOptions;
+
+fn main() {
+    banner("Perf sparse", "CSR pipeline vs densified (density sweep)");
+    let s = bench_scale(1.0);
+    let m = ((2_000.0 * s) as usize).max(64);
+    let n = ((500.0 * s) as usize).max(32);
+    let rank = 16usize;
+
+    let bencher = Bencher::new(1, 5);
+    let mut table = Table::new(&["Kernel", "Shape", "Median (ms)", "GFLOP/s"]);
+    let mut rows: Vec<BenchJsonRow> = Vec::new();
+    let mut push = |rows: &mut Vec<BenchJsonRow>, kernel: String, l: usize, flops: f64, med: f64| {
+        rows.push(BenchJsonRow {
+            kernel,
+            m,
+            n,
+            k: l,
+            threads: randnmf::linalg::gemm::num_threads(),
+            median_s: med,
+            gflops: if flops > 0.0 { flops / med / 1e9 } else { 0.0 },
+        });
+    };
+
+    for density in [0.01f64, 0.1] {
+        let tag = format!("d{density}");
+        let mut rng = Pcg64::seed_from_u64(0);
+        let xs = synthetic::sparse_low_rank(m, n, rank, density, &mut rng);
+        let xd = xs.to_dense();
+        let opts = QbOptions::new(rank).with_oversample(20).with_power_iters(2);
+        let l = opts.sketch_width(m, n);
+        let dense_equiv_flops = 2.0 * (m * n * l) as f64;
+
+        // --- sketch stage head-to-head (dense-equivalent convention) ---
+        {
+            let mut srng = Pcg64::seed_from_u64(1);
+            let omega = srng.uniform_mat(n, l);
+            let mut y = Mat::zeros(m, l);
+            let mut ws = Workspace::new();
+            randnmf::linalg::gemm::matmul_into(&xd, &omega, &mut y, &mut ws); // warm
+            let st = bencher.time(|| {
+                randnmf::linalg::gemm::matmul_into(&xd, &omega, &mut y, &mut ws);
+                y.get(0, 0)
+            });
+            push(&mut rows, format!("sketch_densified_{tag}"), l, dense_equiv_flops, st.median_s);
+            csr_matmul_into(&xs, &omega, &mut y); // warm
+            let st = bencher.time(|| {
+                csr_matmul_into(&xs, &omega, &mut y);
+                y.get(0, 0)
+            });
+            push(&mut rows, format!("sketch_csr_{tag}"), l, dense_equiv_flops, st.median_s);
+        }
+
+        // --- full warm fit_with: CSR vs densified, identical seeds ---
+        {
+            let nmf_opts = NmfOptions::new(rank)
+                .with_max_iter(10)
+                .with_tol(0.0)
+                .with_seed(2)
+                .with_oversample(20);
+            let solver = RandomizedHals::new(nmf_opts);
+            let mut scratch = RhalsScratch::new();
+            let warm = solver.fit_with(&xs, &mut scratch).unwrap();
+            warm.recycle(&mut scratch.ws);
+            let st = bencher.time(|| {
+                let fit = solver.fit_with(&xs, &mut scratch).unwrap();
+                let e = fit.final_rel_err;
+                fit.recycle(&mut scratch.ws);
+                e
+            });
+            push(&mut rows, format!("fit_csr_{tag}"), l, 0.0, st.median_s);
+            let mut dscratch = RhalsScratch::new();
+            let warm = solver.fit_with(&xd, &mut dscratch).unwrap();
+            warm.recycle(&mut dscratch.ws);
+            let st = bencher.time(|| {
+                let fit = solver.fit_with(&xd, &mut dscratch).unwrap();
+                let e = fit.final_rel_err;
+                fit.recycle(&mut dscratch.ws);
+                e
+            });
+            push(&mut rows, format!("fit_densified_{tag}"), l, 0.0, st.median_s);
+        }
+    }
+
+    let mut csv = Vec::new();
+    for r in &rows {
+        table.row(&[
+            r.kernel.clone(),
+            format!("{}x{}  l={}", r.m, r.n, r.k),
+            format!("{:.2}", r.median_s * 1e3),
+            format!("{:.2}", r.gflops),
+        ]);
+        csv.push(format!(
+            "{},{}x{},{},{:.6},{:.3}",
+            r.kernel, r.m, r.n, r.k, r.median_s, r.gflops
+        ));
+    }
+    print!("{}", table.render());
+
+    // Headline: CSR-vs-densified speedup per density, sketch and fit.
+    for stage in ["sketch", "fit"] {
+        for density in [0.01f64, 0.1] {
+            let find = |k: String| rows.iter().find(|r| r.kernel == k);
+            if let (Some(sp), Some(de)) = (
+                find(format!("{stage}_csr_d{density}")),
+                find(format!("{stage}_densified_d{density}")),
+            ) {
+                println!(
+                    "{stage} speedup csr/densified @ density {density}: {:.2}x \
+                     ({:.2} -> {:.2} ms)",
+                    de.median_s / sp.median_s,
+                    de.median_s * 1e3,
+                    sp.median_s * 1e3
+                );
+            }
+        }
+    }
+    println!("threads = {}", randnmf::linalg::gemm::num_threads());
+
+    let p = write_csv("perf_sparse.csv", "kernel,shape,l,median_s,gflops", &csv);
+    println!("csv: {}", p.display());
+
+    update_bench_json("BENCH_gemm.json", &rows);
+    println!("json: BENCH_gemm.json (merged)");
+}

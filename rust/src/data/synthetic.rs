@@ -14,6 +14,7 @@
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::rng::Pcg64;
+use crate::linalg::sparse::CsrMat;
 
 /// Nonnegative matrix of exact rank `r`: `X = U·V` with `U, V ≥ 0` drawn
 /// as `|N(0,1)|`, plus optional nonnegative noise of relative magnitude
@@ -48,6 +49,47 @@ pub fn fat(scale: f64, rng: &mut Pcg64) -> Mat {
 pub fn square(scale: f64, rng: &mut Pcg64) -> Mat {
     let s = ((5_000.0 * scale) as usize).max(64);
     low_rank_nonneg(s, s, 40.min(s / 2).max(2), 0.0, rng)
+}
+
+/// Sparse nonnegative "topics" matrix in CSR form: a rank-`r`
+/// nonnegative product `U·V` sampled on a random support of the given
+/// `density` (per-row `round(density·n)` distinct columns) — the
+/// bag-of-words / recommender regime the sparse rHALS pipeline targets.
+///
+/// Built directly as triplets; the dense `m×n` matrix is **never
+/// materialized**, so paper-scale shapes at 1% density fit comfortably
+/// in memory. Note the support mask makes the matrix only
+/// approximately low-rank (a masked low-rank product), which is exactly
+/// the hard-but-realistic case for the sketch; use
+/// [`CsrMat::to_dense`] when an exact densified copy is needed (the
+/// sparse-vs-dense equivalence property test does).
+pub fn sparse_low_rank(m: usize, n: usize, r: usize, density: f64, rng: &mut Pcg64) -> CsrMat {
+    assert!(m > 0 && n > 0 && r > 0, "sparse_low_rank: empty shape");
+    let density = density.clamp(0.0, 1.0);
+    let u = rng.gaussian_mat(m, r).map(f64::abs);
+    let v = rng.gaussian_mat(r, n).map(f64::abs);
+    let per_row = ((density * n as f64).round() as usize).min(n);
+    let mut triplets = Vec::with_capacity(m * per_row);
+    // Per-row rejection table: mark[j] == i means column j is already
+    // drawn for row i (no clearing between rows needed).
+    let mut mark = vec![usize::MAX; n];
+    for i in 0..m {
+        let mut drawn = 0;
+        while drawn < per_row {
+            let j = rng.uniform_usize(n);
+            if mark[j] == i {
+                continue;
+            }
+            mark[j] = i;
+            drawn += 1;
+            let mut val = 0.0;
+            for t in 0..r {
+                val += u.get(i, t) * v.get(t, j);
+            }
+            triplets.push((i, j, val));
+        }
+    }
+    CsrMat::from_triplets(m, n, &triplets)
 }
 
 /// Matrix with a slowly decaying singular spectrum (`σ_i ∝ i^{-decay}`)
@@ -109,6 +151,28 @@ mod tests {
         assert_eq!(f.shape(), (125, 125));
         let s = square(0.02, &mut rng);
         assert_eq!(s.shape(), (100, 100));
+    }
+
+    #[test]
+    fn sparse_low_rank_density_and_nonneg() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let x = sparse_low_rank(200, 80, 5, 0.05, &mut rng);
+        assert_eq!(x.shape(), (200, 80));
+        assert!(x.is_nonneg());
+        // Exactly round(0.05·80) = 4 distinct columns per row.
+        assert_eq!(x.nnz(), 200 * 4);
+        assert!((x.density() - 0.05).abs() < 1e-12);
+        for i in 0..200 {
+            let (js, _) = x.row(i);
+            assert_eq!(js.len(), 4);
+            for w in js.windows(2) {
+                assert!(w[0] < w[1], "row {i}: columns not strictly ascending");
+            }
+        }
+        // A zero density is a valid (empty) matrix.
+        let mut rng = Pcg64::seed_from_u64(6);
+        let empty = sparse_low_rank(10, 10, 2, 0.0, &mut rng);
+        assert_eq!(empty.nnz(), 0);
     }
 
     #[test]

@@ -43,6 +43,13 @@
 //!   compression stage (dense or sparse-sign sketches, power iterations,
 //!   `B = QᵀX`) dispatches its large products onto the same pool.
 //!
+//! Inputs may be dense ([`linalg::mat::Mat`]) or sparse CSR
+//! ([`linalg::sparse::CsrMat`]): the sketch engine and
+//! `RandomizedHals::fit_with` accept either via
+//! [`linalg::sparse::NmfInput`], and on sparse data every pass over `X`
+//! runs in `O(nnz·l)` without ever materializing an `m×n` buffer — see
+//! `examples/sparse_topics.rs` for the bag-of-words scenario.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -71,6 +78,7 @@ pub mod prelude {
     pub use crate::data::synthetic;
     pub use crate::linalg::mat::Mat;
     pub use crate::linalg::rng::Pcg64;
+    pub use crate::linalg::sparse::{CsrMat, NmfInput};
     pub use crate::linalg::workspace::Workspace;
     pub use crate::nmf::hals::Hals;
     pub use crate::nmf::model::{NmfFit, NmfModel};

@@ -76,7 +76,10 @@ const KC: usize = 256;
 const NC: usize = 512;
 
 /// Split `rows` of work into at most `num_threads()` contiguous chunks.
-fn row_chunks(rows: usize, flops: usize) -> usize {
+/// Crate-visible so the sparse kernels ([`crate::linalg::sparse`]) and
+/// the implicit sparse-sign apply share this one authoritative gate
+/// (with `nnz`-based flop estimates) instead of re-deriving it.
+pub(crate) fn row_chunks(rows: usize, flops: usize) -> usize {
     if flops < PAR_THRESHOLD || rows < 2 {
         1
     } else {
@@ -387,7 +390,10 @@ fn driver_row_split(
 /// persistent partial buffers — then reduce in deterministic job order
 /// (the same per-element accumulation order every call at a fixed thread
 /// count). Used when the output is a small panel but the depth is large.
-fn inner_split_reduce(
+/// Crate-visible because the CSR kernels ([`crate::linalg::sparse`])
+/// split their inner dimension on the same scaffolding (the pack-panel
+/// scratch arguments are simply unused there).
+pub(crate) fn inner_split_reduce(
     depth: usize,
     flops: usize,
     c: &mut Mat,

@@ -29,6 +29,9 @@
 //!   sampling (the random test matrices Ω of the sketch).
 //! * [`norms`] — Frobenius norms, relative errors, projected-gradient
 //!   norms shared across the algorithms.
+//! * [`sparse`] — CSR matrices and the `O(nnz·l)` sparse kernels behind
+//!   the dense-or-sparse [`sparse::NmfInput`] accepted by the sketch
+//!   engine and `RandomizedHals::fit_with`.
 
 pub mod gemm;
 pub mod mat;
@@ -36,9 +39,11 @@ pub mod norms;
 pub mod pool;
 pub mod qr;
 pub mod rng;
+pub mod sparse;
 pub mod svd;
 pub mod workspace;
 
 pub use mat::Mat;
 pub use rng::Pcg64;
+pub use sparse::{CsrMat, NmfInput};
 pub use workspace::Workspace;

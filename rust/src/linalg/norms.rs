@@ -95,6 +95,52 @@ pub fn relative_error_explicit(x: &Mat, w: &Mat, h: &Mat) -> f64 {
     fro_norm(&r) / fro_norm(x)
 }
 
+/// Relative reconstruction error for **CSR** data, via the same trace
+/// expansion as [`relative_error_with`] with the cross term
+/// `tr(Hᵀ(WᵀX)) = Σ (XᵀW) ∘ Hᵀ` computed on the `O(nnz·k)` sparse kernel
+/// ([`crate::linalg::sparse::csr_at_b_into`]) — the residual epilogue of
+/// a sparse `RandomizedHals::fit_with` never materializes an `m×n`
+/// buffer. Temporaries (`XᵀW`, `WᵀW`, `HHᵀ`) come from `ws`, so the call
+/// is allocation-free once warm.
+pub fn relative_error_csr_with(
+    x: &crate::linalg::sparse::CsrMat,
+    w: &Mat,
+    h: &Mat,
+    ws: &mut Workspace,
+) -> f64 {
+    let (m, n) = x.shape();
+    let k = w.cols();
+    assert_eq!(w.rows(), m, "relative_error_csr: W rows");
+    assert_eq!(h.shape(), (k, n), "relative_error_csr: H shape");
+    let xn = x.fro_norm_sq();
+    if xn == 0.0 {
+        return 0.0;
+    }
+    let mut xtw = ws.acquire_mat(n, k); // XᵀW
+    crate::linalg::sparse::csr_at_b_into(x, w, &mut xtw, ws);
+    let mut cross = 0.0;
+    for c in 0..n {
+        let xr = xtw.row(c);
+        for (j, xv) in xr.iter().enumerate() {
+            cross += xv * h.get(j, c);
+        }
+    }
+    ws.release_mat(xtw);
+    let mut wtw = ws.acquire_mat(k, k);
+    gemm::gram_into(w, &mut wtw, ws);
+    let mut hht = ws.acquire_mat(k, k);
+    gemm::gram_t_into(h, &mut hht, ws);
+    let quad: f64 = wtw
+        .as_slice()
+        .iter()
+        .zip(hht.as_slice().iter())
+        .map(|(a, b)| a * b)
+        .sum();
+    ws.release_mat(hht);
+    ws.release_mat(wtw);
+    ((xn - 2.0 * cross + quad).max(0.0) / xn).sqrt()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +189,22 @@ mod tests {
         let w = Mat::zeros(5, 2);
         let h = Mat::zeros(2, 5);
         assert_eq!(relative_error(&x, &w, &h), 0.0);
+        let xs = crate::linalg::sparse::CsrMat::from_dense(&x);
+        assert_eq!(relative_error_csr_with(&xs, &w, &h, &mut Workspace::new()), 0.0);
+    }
+
+    #[test]
+    fn csr_residual_matches_dense_oracle() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let xd = rng.uniform_mat(30, 25).map(|v| if v < 0.7 { 0.0 } else { v });
+        let xs = crate::linalg::sparse::CsrMat::from_dense(&xd);
+        let w = rng.uniform_mat(30, 4);
+        let h = rng.uniform_mat(4, 25);
+        let explicit = relative_error_explicit(&xd, &w, &h);
+        let sparse = relative_error_csr_with(&xs, &w, &h, &mut Workspace::new());
+        assert!(
+            (explicit - sparse).abs() < 1e-10,
+            "explicit={explicit} sparse={sparse}"
+        );
     }
 }

@@ -1,0 +1,539 @@
+//! Compressed sparse row (CSR) matrices and the sparse input path.
+//!
+//! The canonical big-data NMF inputs — bag-of-words term–document
+//! matrices, recommender interaction matrices, graph adjacency — are
+//! >99% sparse, exactly the regime where the randomized sketch
+//! `Y = XΩ` collapses from `O(m·n·l)` to `O(nnz(X)·l)` work (cf. Tepper
+//! & Sapiro 2016 on compressed NMF, and MPI-FAUN's sparse-aware
+//! alternating updates). This module provides:
+//!
+//! * [`CsrMat`] — a compressed-sparse-row `f64` matrix with a
+//!   **sorted-column invariant** (each row's column indices strictly
+//!   ascending; [`CsrMat::from_triplets`] sorts and sums duplicates), so
+//!   every kernel streams each row's nonzeros in ascending column order.
+//! * [`csr_matmul_into`] — `Y = X·B` for a dense `B` (`n×l`), the sketch
+//!   stage of the range finder. Pool-parallel over disjoint output-row
+//!   chunks via the audited `pool::run_row_split` carve.
+//! * [`csr_at_b_into`] — `C = Xᵀ·Q` (`n×l`), the power-iteration and
+//!   `B = QᵀX` stage. CSR has no cheap column access, so this splits the
+//!   **inner** dimension (X's rows) across the pool with a deterministic
+//!   job-order reduction — the same
+//!   [`inner_split_reduce`](crate::linalg::gemm) scaffolding the dense
+//!   `at_b`/`gram` kernels use, scratch drawn from the caller
+//!   [`Workspace`] / per-worker pool scratch, so warm calls allocate
+//!   nothing.
+//! * Row-sum / row-norm helpers for diagnostics and normalization.
+//! * [`NmfInput`] — the borrowed dense-or-sparse input enum the sketch
+//!   engine ([`crate::sketch::qb`]) and
+//!   `RandomizedHals::fit_with` accept, so compression and the residual
+//!   epilogue never materialize a dense `X`; only the `l`-width
+//!   compressed matrix `B` is dense.
+//!
+//! ## Determinism and dense equivalence
+//!
+//! Every kernel accumulates each output element's contributions in
+//! ascending inner-dimension order, which is the same order the packed
+//! dense engine uses within one `KC = 256` depth block. Omitting exact
+//! zeros from such a sum leaves the floating-point result bit-identical,
+//! so for inner dimensions ≤ 256 on the single-threaded path a sparse
+//! fit reproduces the densified fit **bit for bit** (property-tested by
+//! `tests/test_properties.rs`); beyond that the results differ only by
+//! the usual blocked-accumulation reassociation.
+
+use super::gemm;
+use super::mat::Mat;
+use super::pool;
+use super::workspace::Workspace;
+
+/// A compressed-sparse-row `f64` matrix.
+///
+/// Invariants (established by every constructor):
+/// * `indptr.len() == rows + 1`, `indptr[0] == 0`, nondecreasing,
+///   `indptr[rows] == indices.len() == values.len()`;
+/// * within each row `indptr[i]..indptr[i+1]`, column indices are
+///   **strictly ascending** (duplicates summed at construction).
+#[derive(Clone, PartialEq)]
+pub struct CsrMat {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CsrMat {
+    /// Build from `(row, col, value)` triplets in any order; duplicate
+    /// coordinates are **summed** (the scipy `coo → csr` convention) and
+    /// each row's columns are sorted ascending. Panics on out-of-bounds
+    /// coordinates.
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        let mut indptr = vec![0usize; rows + 1];
+        for &(i, j, _) in triplets {
+            assert!(
+                i < rows && j < cols,
+                "from_triplets: ({i},{j}) out of bounds for {rows}x{cols}"
+            );
+            indptr[i + 1] += 1;
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        // Scatter into row buckets.
+        let mut raw_idx = vec![0usize; triplets.len()];
+        let mut raw_val = vec![0.0f64; triplets.len()];
+        let mut cursor = indptr.clone();
+        for &(i, j, v) in triplets {
+            let p = cursor[i];
+            raw_idx[p] = j;
+            raw_val[p] = v;
+            cursor[i] += 1;
+        }
+        // Sort each row by column and merge duplicates.
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        let mut out_ptr = vec![0usize; rows + 1];
+        let mut rowbuf: Vec<(usize, f64)> = Vec::new();
+        for i in 0..rows {
+            let (lo, hi) = (indptr[i], indptr[i + 1]);
+            rowbuf.clear();
+            rowbuf.extend(raw_idx[lo..hi].iter().copied().zip(raw_val[lo..hi].iter().copied()));
+            rowbuf.sort_by_key(|&(j, _)| j);
+            let row_start = indices.len();
+            for &(j, v) in &rowbuf {
+                if indices.len() > row_start && *indices.last().unwrap() == j {
+                    *values.last_mut().unwrap() += v;
+                } else {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            out_ptr[i + 1] = indices.len();
+        }
+        CsrMat { rows, cols, indptr: out_ptr, indices, values }
+    }
+
+    /// Build from a dense matrix, keeping every entry `!= 0.0`.
+    pub fn from_dense(x: &Mat) -> Self {
+        let (rows, cols) = x.shape();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..rows {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMat { rows, cols, indptr, indices, values }
+    }
+
+    /// Densify (O(m·n) memory — test oracle and small-data convenience).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (js, vs) = self.row(i);
+            let r = out.row_mut(i);
+            for (j, v) in js.iter().zip(vs.iter()) {
+                r[*j] = *v;
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Stored-entry fraction `nnz / (rows·cols)` (0 for an empty shape).
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows * self.cols) as f64
+        }
+    }
+
+    /// Row `i`'s `(column indices, values)`, columns strictly ascending.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Sum of all stored entries (equals the dense sum: zeros add nothing).
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+
+    /// Squared Frobenius norm `‖X‖_F²`.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// True iff every stored entry is `>= 0`.
+    pub fn is_nonneg(&self) -> bool {
+        self.values.iter().all(|&v| v >= 0.0)
+    }
+
+    /// Per-row sums into a caller buffer of length `rows`.
+    pub fn row_sums_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows, "row_sums_into: length mismatch");
+        for (i, o) in out.iter_mut().enumerate() {
+            let (_, vs) = self.row(i);
+            *o = vs.iter().sum();
+        }
+    }
+
+    /// Per-row squared ℓ2 norms into a caller buffer of length `rows`.
+    pub fn row_norms_sq_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows, "row_norms_sq_into: length mismatch");
+        for (i, o) in out.iter_mut().enumerate() {
+            let (_, vs) = self.row(i);
+            *o = vs.iter().map(|v| v * v).sum();
+        }
+    }
+}
+
+impl std::fmt::Debug for CsrMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CsrMat {}x{} (nnz {}, density {:.4})",
+            self.rows,
+            self.cols,
+            self.nnz(),
+            self.density()
+        )
+    }
+}
+
+/// A borrowed NMF input: dense row-major or sparse CSR. The sketch engine
+/// ([`crate::sketch::qb::qb_into`] / `sketch_apply`) and
+/// `RandomizedHals::fit_with` accept `impl Into<NmfInput>`, so `&Mat` and
+/// `&CsrMat` both work unchanged at every call site.
+#[derive(Clone, Copy, Debug)]
+pub enum NmfInput<'a> {
+    /// Dense row-major input.
+    Dense(&'a Mat),
+    /// Sparse CSR input — compression runs in `O(nnz·l)` and the fit
+    /// never materializes an `m×n` dense buffer.
+    Sparse(&'a CsrMat),
+}
+
+impl NmfInput<'_> {
+    /// `(rows, cols)` pair.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            NmfInput::Dense(x) => x.shape(),
+            NmfInput::Sparse(x) => x.shape(),
+        }
+    }
+
+    /// Sum of all entries (identical to the densified sum: stored zeros
+    /// and structural zeros both contribute nothing).
+    pub fn sum(&self) -> f64 {
+        match self {
+            NmfInput::Dense(x) => x.sum(),
+            NmfInput::Sparse(x) => x.sum(),
+        }
+    }
+
+    /// Squared Frobenius norm `‖X‖_F²`.
+    pub fn fro_norm_sq(&self) -> f64 {
+        match self {
+            NmfInput::Dense(x) => crate::linalg::norms::fro_norm_sq(x),
+            NmfInput::Sparse(x) => x.fro_norm_sq(),
+        }
+    }
+}
+
+impl<'a> From<&'a Mat> for NmfInput<'a> {
+    fn from(x: &'a Mat) -> Self {
+        NmfInput::Dense(x)
+    }
+}
+
+impl<'a> From<&'a CsrMat> for NmfInput<'a> {
+    fn from(x: &'a CsrMat) -> Self {
+        NmfInput::Sparse(x)
+    }
+}
+
+/// Flop estimate `2·nnz·l` shared by the sparse kernels' threading gates.
+#[inline]
+fn csr_flops(x: &CsrMat, l: usize) -> usize {
+    2usize.saturating_mul(x.nnz()).saturating_mul(l)
+}
+
+/// `Y = X·B` for CSR `X (m×n)` and dense `B (n×l)` into `y (m×l)` — the
+/// sparse sketch stage, `O(nnz·l)` instead of the dense `O(m·n·l)`.
+///
+/// Pool-parallel over disjoint output-row chunks (the audited
+/// `pool::run_row_split` carve) when `2·nnz·l` exceeds the GEMM
+/// threading threshold; needs no scratch, so warm calls allocate nothing
+/// at any thread count. Each output element accumulates its row's
+/// nonzeros in ascending column order (see the module docs).
+pub fn csr_matmul_into(x: &CsrMat, b: &Mat, y: &mut Mat) {
+    let (m, n) = x.shape();
+    let (nb, l) = b.shape();
+    assert_eq!(n, nb, "csr_matmul: inner dims {n} != {nb}");
+    assert_eq!(y.shape(), (m, l), "csr_matmul_into: output must be {m}x{l}");
+    y.as_mut_slice().fill(0.0);
+    if m == 0 || l == 0 {
+        return;
+    }
+    let nchunks = gemm::row_chunks(m, csr_flops(x, l));
+    if nchunks <= 1 {
+        csr_matmul_rows(x, b, y.as_mut_slice(), l, 0, m);
+        return;
+    }
+    pool::run_row_split(nchunks, m, l, y.as_mut_slice(), &|yslice, i0, i1, _scratch| {
+        csr_matmul_rows(x, b, yslice, l, i0, i1);
+    });
+}
+
+/// Rows `[i0, i1)` of `Y = X·B`; `yslice` holds exactly those rows.
+fn csr_matmul_rows(x: &CsrMat, b: &Mat, yslice: &mut [f64], l: usize, i0: usize, i1: usize) {
+    for i in i0..i1 {
+        let yrow = &mut yslice[(i - i0) * l..(i - i0 + 1) * l];
+        let (js, vs) = x.row(i);
+        for (j, v) in js.iter().zip(vs.iter()) {
+            let brow = b.row(*j);
+            for (yv, bv) in yrow.iter_mut().zip(brow.iter()) {
+                *yv += *v * *bv;
+            }
+        }
+    }
+}
+
+/// `C = Xᵀ·Q` for CSR `X (m×n)` and dense `Q (m×l)` into `c (n×l)` — the
+/// power-iteration stage `Z = XᵀQ` and (transposed) the projection
+/// `B = QᵀX`, in `O(nnz·l)`.
+///
+/// CSR exposes rows, not columns, so the pool split is over the **inner**
+/// dimension (X's rows): each job scatters its row range into a partial
+/// `n×l` accumulator and the partials are reduced in deterministic job
+/// order — the same scaffolding (and the same per-worker scratch, so warm
+/// calls allocate nothing) as the dense `at_b`/`gram` kernels.
+pub fn csr_at_b_into(x: &CsrMat, q: &Mat, c: &mut Mat, ws: &mut Workspace) {
+    let (m, n) = x.shape();
+    let (mq, l) = q.shape();
+    assert_eq!(m, mq, "csr_at_b: outer dims {m} != {mq}");
+    assert_eq!(c.shape(), (n, l), "csr_at_b_into: output must be {n}x{l}");
+    gemm::inner_split_reduce(m, csr_flops(x, l), c, ws, &|cs, i0, i1, _pa, _pb| {
+        for i in i0..i1 {
+            let qrow = q.row(i);
+            let (js, vs) = x.row(i);
+            for (j, v) in js.iter().zip(vs.iter()) {
+                let crow = &mut cs[*j * l..(*j + 1) * l];
+                for (cv, qv) in crow.iter_mut().zip(qrow.iter()) {
+                    *cv += *v * *qv;
+                }
+            }
+        }
+    });
+}
+
+/// `Y += X·Ω` for CSR `X` and the sparse-sign `Ω` encoded in
+/// `(cols, vals)` tables (`nnz` targets per `Ω` row) — the structured
+/// sketch applied to sparse data in `O(nnz(X)·nnz)`, without
+/// materializing either operand. The caller zeroes `y`. Contribution
+/// order per output element is ascending data column, matching the dense
+/// `sparse_sketch_apply_block` with its zero entries skipped.
+pub(crate) fn csr_sparse_sign_apply(
+    x: &CsrMat,
+    cols: &[f64],
+    vals: &[f64],
+    nnz: usize,
+    y: &mut Mat,
+) {
+    let (m, n) = x.shape();
+    let l = y.cols();
+    assert_eq!(y.rows(), m, "csr sparse apply: row mismatch");
+    assert!(n * nnz <= cols.len(), "csr sparse apply: sketch too short");
+    if m == 0 {
+        return;
+    }
+    let nchunks = gemm::row_chunks(m, csr_flops(x, nnz));
+    if nchunks <= 1 {
+        csr_sign_rows(x, cols, vals, nnz, y.as_mut_slice(), l, 0, m);
+        return;
+    }
+    pool::run_row_split(nchunks, m, l, y.as_mut_slice(), &|yslice, i0, i1, _scratch| {
+        csr_sign_rows(x, cols, vals, nnz, yslice, l, i0, i1);
+    });
+}
+
+/// Rows `[i0, i1)` of the CSR sparse-sign apply.
+fn csr_sign_rows(
+    x: &CsrMat,
+    cols: &[f64],
+    vals: &[f64],
+    nnz: usize,
+    yslice: &mut [f64],
+    l: usize,
+    i0: usize,
+    i1: usize,
+) {
+    for i in i0..i1 {
+        let yrow = &mut yslice[(i - i0) * l..(i - i0 + 1) * l];
+        let (js, vs) = x.row(i);
+        for (c, xv) in js.iter().zip(vs.iter()) {
+            let base = *c * nnz;
+            for t in 0..nnz {
+                let col = cols[base + t] as usize;
+                yrow[col] += vals[base + t] * *xv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    fn dense_oracle(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for &(i, j, v) in triplets {
+            m.set(i, j, m.get(i, j) + v);
+        }
+        m
+    }
+
+    #[test]
+    fn from_triplets_sorts_and_sums_duplicates() {
+        let trips = [(1usize, 3usize, 2.0f64), (0, 2, 1.0), (1, 0, 4.0), (1, 3, 3.0), (0, 2, -1.0)];
+        let x = CsrMat::from_triplets(3, 4, &trips);
+        assert_eq!(x.shape(), (3, 4));
+        let (js0, vs0) = x.row(0);
+        assert_eq!(js0, &[2]);
+        assert_eq!(vs0, &[0.0], "duplicates must be summed");
+        let (js1, vs1) = x.row(1);
+        assert_eq!(js1, &[0, 3], "columns must be sorted ascending");
+        assert_eq!(vs1, &[4.0, 5.0]);
+        let (js2, _) = x.row(2);
+        assert!(js2.is_empty(), "0-nonzero row stays empty");
+        assert_eq!(x.to_dense(), dense_oracle(3, 4, &trips));
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let x = CsrMat::from_triplets(0, 5, &[]);
+        assert_eq!(x.shape(), (0, 5));
+        assert_eq!(x.nnz(), 0);
+        assert_eq!(x.density(), 0.0);
+        let x = CsrMat::from_triplets(4, 3, &[]);
+        assert_eq!(x.nnz(), 0);
+        assert_eq!(x.to_dense(), Mat::zeros(4, 3));
+        let mut y = Mat::zeros(4, 2);
+        csr_matmul_into(&x, &Mat::zeros(3, 2), &mut y);
+        assert!(y.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dense_roundtrip_drops_zeros() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut d = rng.uniform_mat(7, 9);
+        for j in 0..9 {
+            d.set(3, j, 0.0); // a fully zero row
+        }
+        for i in 0..7 {
+            d.set(i, 4, 0.0); // a fully zero (empty) column
+        }
+        let x = CsrMat::from_dense(&d);
+        assert_eq!(x.to_dense(), d);
+        assert_eq!(x.nnz(), 7 * 9 - 9 - 7 + 1);
+        let (js, _) = x.row(3);
+        assert!(js.is_empty());
+        assert!(x.row(0).0.iter().all(|&j| j != 4), "empty column never stored");
+    }
+
+    #[test]
+    fn csr_matmul_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let d = rng.uniform_mat(23, 17).map(|v| if v < 0.7 { 0.0 } else { v });
+        let x = CsrMat::from_dense(&d);
+        let b = rng.gaussian_mat(17, 5);
+        let mut y = Mat::zeros(23, 5);
+        csr_matmul_into(&x, &b, &mut y);
+        let expect = gemm::matmul_naive(&d, &b);
+        assert!(y.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn csr_at_b_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let d = rng.uniform_mat(19, 26).map(|v| if v < 0.8 { 0.0 } else { v });
+        let x = CsrMat::from_dense(&d);
+        let q = rng.gaussian_mat(19, 4);
+        let mut c = Mat::zeros(26, 4);
+        let mut ws = Workspace::new();
+        csr_at_b_into(&x, &q, &mut c, &mut ws);
+        let expect = gemm::matmul_naive(&d.transpose(), &q);
+        assert!(c.max_abs_diff(&expect) < 1e-12);
+        // Workspace reuse is bit-identical.
+        let first = c.clone();
+        csr_at_b_into(&x, &q, &mut c, &mut ws);
+        assert_eq!(c, first);
+    }
+
+    #[test]
+    fn row_helpers_match_dense() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let d = rng.uniform_mat(11, 13).map(|v| if v < 0.6 { 0.0 } else { v });
+        let x = CsrMat::from_dense(&d);
+        let mut sums = vec![0.0; 11];
+        let mut norms = vec![0.0; 11];
+        x.row_sums_into(&mut sums);
+        x.row_norms_sq_into(&mut norms);
+        for i in 0..11 {
+            let s: f64 = d.row(i).iter().sum();
+            let nq: f64 = d.row(i).iter().map(|v| v * v).sum();
+            assert!((sums[i] - s).abs() < 1e-14);
+            assert!((norms[i] - nq).abs() < 1e-14);
+        }
+        assert!((x.sum() - d.sum()).abs() < 1e-12);
+        assert!((x.fro_norm_sq() - crate::linalg::norms::fro_norm_sq(&d)).abs() < 1e-12);
+        assert!(x.is_nonneg());
+    }
+
+    #[test]
+    fn threaded_kernels_match_single_threaded_shapes() {
+        // Big enough to trip the 2·nnz·l ≥ 2²⁰ gate when threads exist;
+        // results must match the naive oracle regardless of regime.
+        let mut rng = Pcg64::seed_from_u64(5);
+        let d = rng.uniform_mat(700, 300).map(|v| if v < 0.5 { 0.0 } else { v });
+        let x = CsrMat::from_dense(&d);
+        let b = rng.gaussian_mat(300, 8);
+        let mut y = Mat::zeros(700, 8);
+        csr_matmul_into(&x, &b, &mut y);
+        assert!(y.max_abs_diff(&gemm::matmul_naive(&d, &b)) < 1e-10);
+        let q = rng.gaussian_mat(700, 8);
+        let mut c = Mat::zeros(300, 8);
+        csr_at_b_into(&x, &q, &mut c, &mut Workspace::new());
+        assert!(c.max_abs_diff(&gemm::matmul_naive(&d.transpose(), &q)) < 1e-10);
+    }
+}

@@ -42,7 +42,10 @@
 //! (asserted by `tests/test_zero_alloc.rs` under `RANDNMF_THREADS=1` and
 //! `tests/test_zero_alloc_pool.rs` under `RANDNMF_THREADS=4`; guaranteed
 //! for `Init::Random` with tracing disabled — NNDSVD init and trace
-//! recording are allocating cold paths).
+//! recording are allocating cold paths). The guarantee covers sparse
+//! input too: `fit_with` accepts a CSR matrix via [`NmfInput`], runs the
+//! compression and the exact-error epilogue on the `O(nnz·l)` kernels of
+//! [`crate::linalg::sparse`], and never allocates an `m×n` dense buffer.
 
 use std::time::Instant;
 
@@ -51,6 +54,7 @@ use anyhow::Result;
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::norms;
+use crate::linalg::sparse::NmfInput;
 use crate::linalg::workspace::Workspace;
 use crate::nmf::hals::{sweep_factor, DEAD_EPS};
 use crate::nmf::init;
@@ -97,7 +101,19 @@ impl RandomizedHals {
     /// The full fit — QB compression *and* iterations — with every buffer
     /// drawn from `scratch`. See the module docs for the zero-allocation
     /// contract; results are identical to [`RandomizedHals::fit`].
-    pub fn fit_with(&self, x: &Mat, scratch: &mut RhalsScratch) -> Result<NmfFit> {
+    ///
+    /// Accepts dense (`&Mat`) or sparse CSR
+    /// (`&`[`CsrMat`](crate::linalg::sparse::CsrMat)) input via
+    /// [`NmfInput`]. On sparse input the compression stage and the exact
+    /// final-error epilogue both run on the `O(nnz·l)` CSR kernels —
+    /// nothing of size `m×n` is ever allocated, and a warm fit is still
+    /// zero-allocation (asserted by `tests/test_zero_alloc{,_pool}.rs`).
+    pub fn fit_with<'a>(
+        &self,
+        x: impl Into<NmfInput<'a>>,
+        scratch: &mut RhalsScratch,
+    ) -> Result<NmfFit> {
+        let x = x.into();
         let (m, n) = x.shape();
         self.opts.validate(m, n)?;
         anyhow::ensure!(
@@ -118,8 +134,8 @@ impl RandomizedHals {
         let mut bmat = scratch.ws.acquire_mat(l, n);
         qb_into(x, qb_opts, &mut rng, &mut qmat, &mut bmat, &mut scratch.ws);
         let factors = QbFactors { q: qmat, b: bmat };
-        let x_mean = x.sum() / x.len() as f64;
-        let x_norm_sq = norms::fro_norm_sq(x);
+        let x_mean = x.sum() / (m * n) as f64;
+        let x_norm_sq = x.fro_norm_sq();
 
         let mut state = self.iterate_compressed_with(
             &factors,
@@ -130,9 +146,16 @@ impl RandomizedHals {
             scratch,
         )?;
 
-        // Exact final error on the real data (the tables report this).
-        state.final_rel_err =
-            norms::relative_error_with(x, &state.model.w, &state.model.h, &mut scratch.ws);
+        // Exact final error on the real data (the tables report this) —
+        // factored residual for dense X, the O(nnz·k) CSR form for sparse.
+        state.final_rel_err = match x {
+            NmfInput::Dense(xd) => {
+                norms::relative_error_with(xd, &state.model.w, &state.model.h, &mut scratch.ws)
+            }
+            NmfInput::Sparse(xs) => {
+                norms::relative_error_csr_with(xs, &state.model.w, &state.model.h, &mut scratch.ws)
+            }
+        };
         factors.recycle(&mut scratch.ws);
         Ok(state)
     }
@@ -543,6 +566,61 @@ mod tests {
             sparse.final_rel_err,
             dense.final_rel_err
         );
+    }
+
+    #[test]
+    fn sparse_input_fit_matches_densified_bitwise() {
+        // Small single-threaded shapes (inner dims ≤ KC = 256): the CSR
+        // compression stage reproduces the dense one bit for bit, and the
+        // compressed iterations only ever touch Q/B — so the whole fit
+        // must agree exactly, for every sketch kind.
+        let mut rng = Pcg64::seed_from_u64(40);
+        let dense = rng.uniform_mat(80, 50).map(|v| if v < 0.85 { 0.0 } else { v });
+        let x = crate::linalg::sparse::CsrMat::from_dense(&dense);
+        for sketch in [SketchKind::Uniform, SketchKind::sparse_sign()] {
+            let solver = RandomizedHals::new(
+                NmfOptions::new(3)
+                    .with_max_iter(25)
+                    .with_tol(0.0)
+                    .with_seed(41)
+                    .with_oversample(4)
+                    .with_sketch(sketch),
+            );
+            let fd = solver.fit_with(&dense, &mut RhalsScratch::new()).unwrap();
+            let fs = solver.fit_with(&x, &mut RhalsScratch::new()).unwrap();
+            assert_eq!(fs.model.w, fd.model.w, "{sketch:?}: sparse W differs");
+            assert_eq!(fs.model.h, fd.model.h, "{sketch:?}: sparse H differs");
+            // The error scalar's cross term is summed in a different
+            // order on the CSR path (n-major vs k-major) — factors are
+            // bitwise equal, the scalar only to accumulation roundoff.
+            assert!(
+                (fs.final_rel_err - fd.final_rel_err).abs() < 1e-10,
+                "{sketch:?}: rel_err {} vs {}",
+                fs.final_rel_err,
+                fd.final_rel_err
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_warm_refit_is_stable_and_recycles() {
+        let mut rng = Pcg64::seed_from_u64(42);
+        let x = crate::data::synthetic::sparse_low_rank(120, 70, 4, 0.08, &mut rng);
+        let solver =
+            RandomizedHals::new(NmfOptions::new(4).with_max_iter(30).with_tol(0.0).with_seed(43));
+        let mut scratch = RhalsScratch::new();
+        let f1 = solver.fit_with(&x, &mut scratch).unwrap();
+        let (w1, h1) = (f1.model.w.clone(), f1.model.h.clone());
+        assert!(w1.is_nonneg() && h1.is_nonneg());
+        f1.recycle(&mut scratch.ws);
+        let f2 = solver.fit_with(&x, &mut scratch).unwrap();
+        assert_eq!(f2.model.w, w1, "warm sparse refit must be bit-identical");
+        assert_eq!(f2.model.h, h1);
+        f2.recycle(&mut scratch.ws);
+        let pooled = scratch.ws.pooled();
+        let f3 = solver.fit_with(&x, &mut scratch).unwrap();
+        f3.recycle(&mut scratch.ws);
+        assert_eq!(scratch.ws.pooled(), pooled, "warm sparse fit grew the pool");
     }
 
     #[test]

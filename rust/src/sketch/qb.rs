@@ -32,6 +32,17 @@
 //! inner products all run on the packed GEMM engine and dispatch onto the
 //! persistent worker pool of [`crate::linalg::pool`] when big enough.
 //!
+//! ## Sparse input
+//!
+//! [`qb_into`] and [`sketch_apply`] accept `impl Into<NmfInput>` — a
+//! dense `&Mat` or a CSR [`crate::linalg::sparse::CsrMat`]. On sparse
+//! input every pass over `X` runs in `O(nnz·l)` on the CSR kernels and
+//! nothing of size `m×n` is ever allocated, which is the paper's
+//! compression argument made real for the bag-of-words / recommender
+//! regime where `X` is >99% sparse. Draw order is
+//! representation-independent, so a fixed seed gives the same sketch for
+//! `X` and its densification.
+//!
 //! ## Test matrices ([`SketchKind`])
 //!
 //! * `Uniform` — dense iid `[0,1)` entries; the paper's Remark 1 default
@@ -50,6 +61,7 @@ use crate::linalg::mat::Mat;
 use crate::linalg::pool;
 use crate::linalg::qr::orthonormalize_into;
 use crate::linalg::rng::Pcg64;
+use crate::linalg::sparse::{self, NmfInput};
 use crate::linalg::workspace::Workspace;
 
 /// The random test matrix drawn for the sketch `Y = XΩ`.
@@ -187,14 +199,24 @@ pub fn qb_with(a: &Mat, opts: QbOptions, rng: &mut Pcg64, ws: &mut Workspace) ->
 /// `q (m×l)` / `b (l×n)` with every temporary drawn from `ws`
 /// (`l = opts.sketch_width(m, n)`). Zero heap allocations once the
 /// workspace is warm; deterministic for a fixed seed and thread count.
-pub fn qb_into(
-    a: &Mat,
+///
+/// Accepts dense (`&Mat`) or sparse CSR (`&CsrMat`) input via
+/// [`NmfInput`]: for sparse data every pass over `X` — the sketch, the
+/// power iterations, and the projection `B = QᵀX` — runs on the
+/// `O(nnz·l)` CSR kernels of [`crate::linalg::sparse`], never
+/// materializing a dense `m×n` buffer; only the `l`-width factors are
+/// dense. The RNG draw order is identical for both input kinds, so a
+/// sparse decomposition reproduces the densified one (bit-for-bit on
+/// small single-threaded shapes — see the `sparse` module docs).
+pub fn qb_into<'a>(
+    a: impl Into<NmfInput<'a>>,
     opts: QbOptions,
     rng: &mut Pcg64,
     q: &mut Mat,
     b: &mut Mat,
     ws: &mut Workspace,
 ) {
+    let a = a.into();
     let (m, n) = a.shape();
     assert!(m > 0 && n > 0, "qb: empty input");
     let l = opts.sketch_width(m, n);
@@ -211,40 +233,71 @@ pub fn qb_into(
         let mut qz = ws.acquire_mat(n, l);
         for _ in 0..opts.power_iters {
             orthonormalize_into(&y, q, ws);
-            gemm::at_b_into(a, q, &mut z, ws); // XᵀQ : n×l
+            input_at_b_into(a, q, &mut z, ws); // XᵀQ : n×l
             orthonormalize_into(&z, &mut qz, ws);
-            gemm::matmul_into(a, &qz, &mut y, ws); // m×l
+            input_matmul_into(a, &qz, &mut y, ws); // m×l
         }
         ws.release_mat(qz);
         ws.release_mat(z);
     }
 
     orthonormalize_into(&y, q, ws);
-    gemm::at_b_into(q, a, b, ws); // QᵀX : l×n
+    // B = QᵀX : l×n. CSR exposes rows, not columns, so the sparse path
+    // computes XᵀQ (n×l) and transposes — same ascending accumulation
+    // order per element, O(n·l) extra traffic only.
+    match a {
+        NmfInput::Dense(x) => gemm::at_b_into(q, x, b, ws),
+        NmfInput::Sparse(x) => {
+            let mut xtq = ws.acquire_mat(n, l);
+            sparse::csr_at_b_into(x, q, &mut xtq, ws);
+            xtq.transpose_into(b);
+            ws.release_mat(xtq);
+        }
+    }
     ws.release_mat(y);
 }
 
+/// `Y = X·B` for either input kind (dense packed GEMM / CSR kernel).
+fn input_matmul_into(a: NmfInput<'_>, b: &Mat, y: &mut Mat, ws: &mut Workspace) {
+    match a {
+        NmfInput::Dense(x) => gemm::matmul_into(x, b, y, ws),
+        NmfInput::Sparse(x) => sparse::csr_matmul_into(x, b, y),
+    }
+}
+
+/// `C = Xᵀ·B` for either input kind.
+fn input_at_b_into(a: NmfInput<'_>, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
+    match a {
+        NmfInput::Dense(x) => gemm::at_b_into(x, b, c, ws),
+        NmfInput::Sparse(x) => sparse::csr_at_b_into(x, b, c, ws),
+    }
+}
+
 /// One sketch stage `Y = XΩ` with `Ω` drawn from `rng`: dense kinds
-/// materialize `Ω (n×l)` in workspace scratch and run one packed GEMM;
-/// [`SketchKind::SparseSign`] applies the test matrix implicitly in
-/// `O(m·n·nnz)`. `y` must be `m×l`. Allocation-free once `ws` is warm;
-/// exposed so `bench_perf_qb` can time the dense-vs-structured sketch
-/// stage head-to-head.
-pub fn sketch_apply(
-    a: &Mat,
+/// materialize `Ω (n×l)` in workspace scratch (never `m×n`) and run one
+/// GEMM — packed for dense `X`, the `O(nnz·l)` CSR kernel for sparse —
+/// while [`SketchKind::SparseSign`] applies the test matrix implicitly
+/// in `O(m·n·nnz)` (dense `X`) or `O(nnz(X)·nnz)` (CSR `X`). `y` must be
+/// `m×l`. Allocation-free once `ws` is warm; exposed so `bench_perf_qb`
+/// and `bench_perf_sparse` can time the sketch stages head-to-head. The
+/// RNG draw order depends only on `kind`, `n`, and `l` — never on the
+/// input representation.
+pub fn sketch_apply<'a>(
+    a: impl Into<NmfInput<'a>>,
     kind: SketchKind,
     l: usize,
     rng: &mut Pcg64,
     y: &mut Mat,
     ws: &mut Workspace,
 ) {
+    let a = a.into();
     let (m, n) = a.shape();
     assert_eq!(y.shape(), (m, l), "sketch_apply: y must be {m}x{l}");
     match kind {
         SketchKind::Uniform | SketchKind::Gaussian => {
             let mut omega = ws.acquire_mat(n, l);
             fill_dense_sketch(kind, rng, &mut omega);
-            gemm::matmul_into(a, &omega, y, ws);
+            input_matmul_into(a, &omega, y, ws);
             ws.release_mat(omega);
         }
         SketchKind::SparseSign { nnz } => {
@@ -253,7 +306,10 @@ pub fn sketch_apply(
             let mut vals = ws.acquire_vec(n * s);
             fill_sparse_sign(rng, l, s, &mut cols, &mut vals);
             y.as_mut_slice().fill(0.0);
-            sparse_sketch_apply_block(a, 0, &cols, &vals, s, y);
+            match a {
+                NmfInput::Dense(x) => sparse_sketch_apply_block(x, 0, &cols, &vals, s, y),
+                NmfInput::Sparse(x) => sparse::csr_sparse_sign_apply(x, &cols, &vals, s, y),
+            }
             ws.release_vec(vals);
             ws.release_vec(cols);
         }
@@ -305,10 +361,6 @@ pub(crate) fn fill_sparse_sign(
     }
 }
 
-/// Threading gate for the sparse apply, mirroring the packed GEMM's
-/// `2·m·n·k ≥ 2²⁰` flop criterion (here `k = nnz`).
-const SPARSE_PAR_THRESHOLD: usize = 1 << 20;
-
 /// `Y += X_b · Ω[r0 .. r0+w, :]` for the sparse-sign `Ω` encoded in
 /// `(cols, vals)`, where `X_b (m×w)` holds columns `[r0, r0+w)` of the
 /// data (the full matrix when `r0 = 0, w = n`). The out-of-core path
@@ -332,17 +384,15 @@ pub(crate) fn sparse_sketch_apply_block(
     if m == 0 || w == 0 {
         return;
     }
+    // Same authoritative gate as every other row-parallel kernel
+    // (`2·m·w·nnz` playing the GEMM's `2·m·n·k` role).
     let flops = 2usize.saturating_mul(m).saturating_mul(w).saturating_mul(nnz);
-    let nthreads = if flops < SPARSE_PAR_THRESHOLD || m < 2 {
-        1
-    } else {
-        gemm::num_threads().min(m)
-    };
-    if nthreads <= 1 {
+    let nchunks = gemm::row_chunks(m, flops);
+    if nchunks <= 1 {
         sparse_apply_rows(xb, r0, cols, vals, nnz, y.as_mut_slice(), l, 0, m);
         return;
     }
-    pool::run_row_split(nthreads, m, l, y.as_mut_slice(), &|yslice, i0, i1, _scratch| {
+    pool::run_row_split(nchunks, m, l, y.as_mut_slice(), &|yslice, i0, i1, _scratch| {
         sparse_apply_rows(xb, r0, cols, vals, nnz, yslice, l, i0, i1);
     });
 }
@@ -537,6 +587,29 @@ mod tests {
         sparse_sketch_apply_block(&xa, 0, &cols, &vals, nnz, &mut y2);
         sparse_sketch_apply_block(&xb, 8, &cols, &vals, nnz, &mut y2);
         assert_eq!(y2, y, "chunked sparse apply must be bit-identical");
+    }
+
+    #[test]
+    fn csr_input_qb_matches_densified_bitwise() {
+        // Small single-threaded shapes with inner dims ≤ KC: the sparse
+        // path's ascending-order accumulation with zeros omitted must
+        // reproduce the dense path bit for bit (see sparse module docs).
+        let mut rng = Pcg64::seed_from_u64(18);
+        let dense = rng.uniform_mat(48, 36).map(|v| if v < 0.8 { 0.0 } else { v });
+        let x = crate::linalg::sparse::CsrMat::from_dense(&dense);
+        for sketch in [SketchKind::Uniform, SketchKind::Gaussian, SketchKind::sparse_sign()] {
+            let opts = QbOptions::new(3).with_oversample(4).with_power_iters(1).with_sketch(sketch);
+            let l = opts.sketch_width(48, 36);
+            let mut ws = Workspace::new();
+            let (mut qd, mut bd) = (Mat::zeros(48, l), Mat::zeros(l, 36));
+            let (mut qs, mut bs) = (Mat::zeros(48, l), Mat::zeros(l, 36));
+            let mut r1 = Pcg64::seed_from_u64(19);
+            let mut r2 = Pcg64::seed_from_u64(19);
+            qb_into(&dense, opts, &mut r1, &mut qd, &mut bd, &mut ws);
+            qb_into(&x, opts, &mut r2, &mut qs, &mut bs, &mut ws);
+            assert_eq!(qs, qd, "{sketch:?}: sparse Q differs from densified");
+            assert_eq!(bs, bd, "{sketch:?}: sparse B differs from densified");
+        }
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Cross-module property tests (the mini-proptest framework exercising the
 //! invariants DESIGN.md §9 lists).
 
+use randnmf::linalg::sparse::{csr_at_b_into, csr_matmul_into, CsrMat};
 use randnmf::linalg::workspace::Workspace;
 use randnmf::linalg::{gemm, mat::Mat, norms, qr, svd};
 use randnmf::nmf::hals::{sweep_factor, Hals};
 use randnmf::nmf::options::{NmfOptions, Regularization, UpdateOrder};
-use randnmf::nmf::rhals::RandomizedHals;
+use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
 use randnmf::prop_assert;
 use randnmf::sketch::blocked::{qb_blocked, MatSource};
 use randnmf::sketch::qb::{qb, QbOptions, SketchKind};
@@ -272,6 +273,126 @@ fn prop_sparse_sign_qb_within_constant_factor_of_gaussian() {
         prop_assert!(
             es <= 4.0 * eg + 1e-9,
             "sparse-sign err {es} vs gaussian err {eg} (>4x)"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_kernels_match_dense_oracles() {
+    // Random triplet soups — duplicate coordinates allowed (must be
+    // summed), rows and columns left empty at random — against naive
+    // dense oracles for construction, both product kernels, and the
+    // row-sum/norm helpers.
+    forall("csr kernels == dense oracles", 30, |g| {
+        let m = g.usize_in(1, 40);
+        let n = g.usize_in(1, 30);
+        let l = g.usize_in(1, 8);
+        let ntrip = g.usize_in(0, 2 * m);
+        let mut trips = Vec::with_capacity(ntrip);
+        let mut dense = Mat::zeros(m, n);
+        for _ in 0..ntrip {
+            let i = g.usize_in(0, m - 1);
+            let j = g.usize_in(0, n - 1);
+            let v = g.f64_in(-2.0, 2.0);
+            trips.push((i, j, v));
+            dense.set(i, j, dense.get(i, j) + v);
+        }
+        let x = CsrMat::from_triplets(m, n, &trips);
+        prop_assert!(x.to_dense().max_abs_diff(&dense) < 1e-12, "to_dense != oracle");
+        // Sorted-column invariant holds for any input order.
+        for i in 0..m {
+            let (js, _) = x.row(i);
+            for w in js.windows(2) {
+                prop_assert!(w[0] < w[1], "row {i}: columns not strictly ascending");
+            }
+        }
+        // Y = X·B against the naive dense product.
+        let b = g.mat_gaussian(n, l);
+        let mut y = Mat::zeros(m, l);
+        csr_matmul_into(&x, &b, &mut y);
+        let y_oracle = gemm::matmul_naive(&dense, &b);
+        prop_assert!(y.max_abs_diff(&y_oracle) < 1e-10, "csr_matmul_into != naive");
+        // C = Xᵀ·Q against the naive dense product (workspace reused).
+        let q = g.mat_gaussian(m, l);
+        let mut c = Mat::zeros(n, l);
+        let mut ws = Workspace::new();
+        csr_at_b_into(&x, &q, &mut c, &mut ws);
+        let c_oracle = gemm::matmul_naive(&dense.transpose(), &q);
+        prop_assert!(c.max_abs_diff(&c_oracle) < 1e-10, "csr_at_b_into != naive");
+        let first = c.clone();
+        csr_at_b_into(&x, &q, &mut c, &mut ws);
+        prop_assert!(c == first, "workspace reuse not bit-identical (csr_at_b)");
+        // Row helpers.
+        let mut sums = vec![0.0; m];
+        x.row_sums_into(&mut sums);
+        for i in 0..m {
+            let s: f64 = dense.row(i).iter().sum();
+            prop_assert!((sums[i] - s).abs() < 1e-12, "row_sums[{i}]");
+        }
+        Ok(())
+    });
+    // Deterministic edge cases: zero-row matrix, all-duplicate triplets,
+    // and a matrix whose every nonzero shares one column.
+    let empty = CsrMat::from_triplets(0, 7, &[]);
+    assert_eq!(empty.shape(), (0, 7));
+    let mut c = Mat::zeros(7, 3);
+    csr_at_b_into(&empty, &Mat::zeros(0, 3), &mut c, &mut Workspace::new());
+    assert!(c.as_slice().iter().all(|&v| v == 0.0));
+    let dup = CsrMat::from_triplets(2, 2, &[(1, 1, 1.0), (1, 1, 2.0), (1, 1, -3.0)]);
+    assert_eq!(dup.nnz(), 1, "duplicates collapse to one stored entry");
+    assert_eq!(dup.to_dense(), Mat::zeros(2, 2));
+    let one_col = CsrMat::from_triplets(3, 4, &[(0, 2, 1.0), (1, 2, 2.0), (2, 2, 3.0)]);
+    let mut y = Mat::zeros(3, 2);
+    csr_matmul_into(&one_col, &Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f64), &mut y);
+    for i in 0..3 {
+        assert_eq!(y.row(i), &[(i + 1) as f64 * 4.0, (i + 1) as f64 * 5.0]);
+    }
+}
+
+#[test]
+fn prop_sparse_fit_matches_densified_fit() {
+    // The acceptance property: identical RNG draw order means a sparse
+    // fit must reproduce the fit of the densified same matrix within
+    // 1e-10 (on these small single-threaded shapes the compression stage
+    // is in fact bit-identical — see the sparse module docs — so the
+    // factors agree exactly; the tolerance is slack, not a crutch).
+    forall("sparse fit == densified fit", 8, |g| {
+        let m = g.usize_in(20, 60);
+        let n = g.usize_in(20, 50);
+        let r = g.usize_in(1, 4);
+        let density = g.f64_in(0.05, 0.4);
+        let mut data_rng = g.rng();
+        let xs = randnmf::data::synthetic::sparse_low_rank(m, n, r, density, &mut data_rng);
+        let xd = xs.to_dense();
+        let k = g.usize_in(1, r);
+        let sketch = *g.choose(&[
+            SketchKind::Uniform,
+            SketchKind::Gaussian,
+            SketchKind::sparse_sign(),
+        ]);
+        let opts = NmfOptions::new(k)
+            .with_max_iter(10)
+            .with_tol(0.0)
+            .with_seed(g.usize_in(0, 1 << 30) as u64)
+            .with_oversample(4)
+            .with_sketch(sketch);
+        let solver = RandomizedHals::new(opts);
+        let fs = solver
+            .fit_with(&xs, &mut RhalsScratch::new())
+            .map_err(|e| e.to_string())?;
+        let fd = solver
+            .fit_with(&xd, &mut RhalsScratch::new())
+            .map_err(|e| e.to_string())?;
+        let dw = fs.model.w.max_abs_diff(&fd.model.w);
+        let dh = fs.model.h.max_abs_diff(&fd.model.h);
+        prop_assert!(dw < 1e-10, "{sketch:?}: W diff {dw}");
+        prop_assert!(dh < 1e-10, "{sketch:?}: H diff {dh}");
+        prop_assert!(
+            (fs.final_rel_err - fd.final_rel_err).abs() < 1e-10,
+            "{sketch:?}: rel_err {} vs {}",
+            fs.final_rel_err,
+            fd.final_rel_err
         );
         Ok(())
     });

@@ -225,4 +225,33 @@ fn steady_state_iterations_do_not_allocate() {
     let noise = nrng.uniform_mat(noisy.rows(), noisy.cols());
     noisy.axpy(1e-3, &noise);
     assert_warm_fit_allocation_free(&noisy, "noisy low rank (CholeskyQR2)");
+
+    // --- (e) sparse CSR input: a warm sparse fit_with — CSR sketch,
+    //     power iterations, and the O(nnz·k) exact-error epilogue — also
+    //     performs exactly zero heap allocations ---
+    let mut srng = Pcg64::seed_from_u64(30);
+    let xs = randnmf::data::synthetic::sparse_low_rank(150, 90, 4, 0.05, &mut srng);
+    let solver = RandomizedHals::new(
+        NmfOptions::new(4)
+            .with_max_iter(12)
+            .with_tol(0.0)
+            .with_seed(31)
+            .with_oversample(6),
+    );
+    let mut scratch = RhalsScratch::new();
+    for _ in 0..3 {
+        let fit = solver.fit_with(&xs, &mut scratch).unwrap();
+        fit.recycle(&mut scratch.ws);
+    }
+    for round in 0..3 {
+        let before = allocs();
+        let fit = solver.fit_with(&xs, &mut scratch).unwrap();
+        let count = allocs() - before;
+        fit.recycle(&mut scratch.ws);
+        assert_eq!(
+            count, 0,
+            "sparse input: warm fit_with round {round} performed {count} heap \
+             allocations (the CSR pipeline must be allocation-free end to end)"
+        );
+    }
 }

@@ -216,4 +216,35 @@ fn threaded_steady_state_iterations_do_not_allocate() {
             );
         }
     }
+
+    // --- (e) sparse CSR input on the pool path: shapes big enough that
+    //     2·nnz·l clears the 2²⁰ gate, so the CSR sketch (row split) and
+    //     XᵀQ (inner split over pool workers) actually fan out — and a
+    //     warm sparse fit_with must still allocate exactly zero ---
+    let mut srng = Pcg64::seed_from_u64(30);
+    let xs = randnmf::data::synthetic::sparse_low_rank(2000, 600, 8, 0.1, &mut srng);
+    assert!(2 * xs.nnz() * 14 >= 1 << 20, "shape must trip the sparse threading gate");
+    let solver = RandomizedHals::new(
+        NmfOptions::new(8)
+            .with_max_iter(10)
+            .with_tol(0.0)
+            .with_seed(31)
+            .with_oversample(6),
+    );
+    let mut scratch = RhalsScratch::new();
+    for _ in 0..3 {
+        let fit = solver.fit_with(&xs, &mut scratch).unwrap();
+        fit.recycle(&mut scratch.ws);
+    }
+    for round in 0..3 {
+        let before = allocs();
+        let fit = solver.fit_with(&xs, &mut scratch).unwrap();
+        let n = allocs() - before;
+        fit.recycle(&mut scratch.ws);
+        assert_eq!(
+            n, 0,
+            "sparse input: warm threaded fit_with round {round} performed {n} \
+             heap allocations"
+        );
+    }
 }
