@@ -1,7 +1,7 @@
-//! Perf sparse — the CSR rHALS pipeline vs the densified path.
+//! Perf sparse — the CSR/CSC sparse pipeline vs the densified path.
 //!
-//! Times the two stages the sparse-input speedup argument rests on, at
-//! the acceptance shape (`2000×500`, `k = 16`, `p = 20`) and density
+//! Times the stages the sparse-input speedup argument rests on, at the
+//! acceptance shape (`2000×500`, `k = 16`, `p = 20`) and density
 //! ∈ {0.01, 0.1}:
 //!
 //! * `sketch_csr_d*` / `sketch_densified_d*` — one `Y = XΩ` (uniform Ω)
@@ -10,10 +10,18 @@
 //!   convention, so the CSR kernel's `O(nnz·l)` apply shows up directly
 //!   as a higher apparent rate (expected ≈ `1/density`, bounded by
 //!   memory bandwidth).
+//! * `csc_at_b_d*` / `csr_at_b_scatter_d*` — the transpose-side product
+//!   `C = XᵀQ` on the CSC mirror's reduce-free row split vs the CSR
+//!   inner-split scatter (same dense-equivalent convention; the gap is
+//!   the scatter's partial-buffer traffic and job-order reduce).
 //! * `fit_csr_d*` / `fit_densified_d*` — a full warm
 //!   `RandomizedHals::fit_with` (10 iterations) on the CSR input vs its
-//!   densification, identical seeds. These are wall-time rows (no flop
-//!   convention; GFLOP/s column reads 0).
+//!   densification, identical seeds. Wall-time rows (GFLOP/s reads 0).
+//! * `fit_hals_dual_d*` / `fit_hals_densified_d*` — the *deterministic*
+//!   `Hals::fit_with` (10 iterations) on dual-storage (CSR + CSC
+//!   mirror) sparse input vs its densification: the sparse-numerator
+//!   win beyond the randomized path, on the recommended sparse input
+//!   kind. Wall-time rows.
 //!
 //! Results go to `perf_sparse.csv` and are **merged** into the shared
 //! `BENCH_gemm.json` (keyed by kernel/shape/threads, preserving the GEMM
@@ -21,7 +29,8 @@
 
 use randnmf::bench::{banner, bench_scale, update_bench_json, write_csv, BenchJsonRow, Bencher};
 use randnmf::coordinator::metrics::Table;
-use randnmf::linalg::sparse::csr_matmul_into;
+use randnmf::linalg::sparse::{csc_at_b_into, csr_at_b_into, csr_matmul_into, SparseMat};
+use randnmf::nmf::hals::HalsScratch;
 use randnmf::prelude::*;
 use randnmf::sketch::qb::QbOptions;
 
@@ -76,6 +85,56 @@ fn main() {
             push(&mut rows, format!("sketch_csr_{tag}"), l, dense_equiv_flops, st.median_s);
         }
 
+        // --- transpose side: CSC row split vs CSR inner-split scatter ---
+        {
+            let dual = SparseMat::new(xs.clone());
+            let csc = dual.csc();
+            let mut qrng = Pcg64::seed_from_u64(3);
+            let q = qrng.gaussian_mat(m, l);
+            let mut c = Mat::zeros(n, l);
+            let mut ws = Workspace::new();
+            csr_at_b_into(&xs, &q, &mut c, &mut ws); // warm
+            let st = bencher.time(|| {
+                csr_at_b_into(&xs, &q, &mut c, &mut ws);
+                c.get(0, 0)
+            });
+            push(&mut rows, format!("csr_at_b_scatter_{tag}"), l, dense_equiv_flops, st.median_s);
+            csc_at_b_into(csc, &q, &mut c); // warm
+            let st = bencher.time(|| {
+                csc_at_b_into(csc, &q, &mut c);
+                c.get(0, 0)
+            });
+            push(&mut rows, format!("csc_at_b_{tag}"), l, dense_equiv_flops, st.median_s);
+        }
+
+        // --- deterministic HALS: dual-storage sparse vs densified ---
+        {
+            let hals_opts = NmfOptions::new(rank).with_max_iter(10).with_tol(0.0).with_seed(4);
+            let solver = Hals::new(hals_opts);
+            let dual = SparseMat::new(xs.clone());
+            dual.warm(); // build the CSC mirror outside the timed region
+            let mut scratch = HalsScratch::new();
+            let warm = solver.fit_with(&dual, &mut scratch).unwrap();
+            warm.recycle(&mut scratch.ws);
+            let st = bencher.time(|| {
+                let fit = solver.fit_with(&dual, &mut scratch).unwrap();
+                let e = fit.final_rel_err;
+                fit.recycle(&mut scratch.ws);
+                e
+            });
+            push(&mut rows, format!("fit_hals_dual_{tag}"), rank, 0.0, st.median_s);
+            let mut dscratch = HalsScratch::new();
+            let warm = solver.fit_with(&xd, &mut dscratch).unwrap();
+            warm.recycle(&mut dscratch.ws);
+            let st = bencher.time(|| {
+                let fit = solver.fit_with(&xd, &mut dscratch).unwrap();
+                let e = fit.final_rel_err;
+                fit.recycle(&mut dscratch.ws);
+                e
+            });
+            push(&mut rows, format!("fit_hals_densified_{tag}"), rank, 0.0, st.median_s);
+        }
+
         // --- full warm fit_with: CSR vs densified, identical seeds ---
         {
             let nmf_opts = NmfOptions::new(rank)
@@ -122,7 +181,8 @@ fn main() {
     }
     print!("{}", table.render());
 
-    // Headline: CSR-vs-densified speedup per density, sketch and fit.
+    // Headline: sparse-vs-densified speedup per density — randomized
+    // fit, deterministic fit, and sketch — plus CSC-vs-scatter.
     for stage in ["sketch", "fit"] {
         for density in [0.01f64, 0.1] {
             let find = |k: String| rows.iter().find(|r| r.kernel == k);
@@ -138,6 +198,32 @@ fn main() {
                     sp.median_s * 1e3
                 );
             }
+        }
+    }
+    for density in [0.01f64, 0.1] {
+        let find = |k: String| rows.iter().find(|r| r.kernel == k);
+        if let (Some(sp), Some(de)) = (
+            find(format!("fit_hals_dual_d{density}")),
+            find(format!("fit_hals_densified_d{density}")),
+        ) {
+            println!(
+                "fit_hals speedup dual/densified @ density {density}: {:.2}x \
+                 ({:.2} -> {:.2} ms)",
+                de.median_s / sp.median_s,
+                de.median_s * 1e3,
+                sp.median_s * 1e3
+            );
+        }
+        if let (Some(csc), Some(scatter)) = (
+            find(format!("csc_at_b_d{density}")),
+            find(format!("csr_at_b_scatter_d{density}")),
+        ) {
+            println!(
+                "XᵀQ speedup csc/scatter @ density {density}: {:.2}x ({:.2} -> {:.2} ms)",
+                scatter.median_s / csc.median_s,
+                scatter.median_s * 1e3,
+                csc.median_s * 1e3
+            );
         }
     }
     println!("threads = {}", randnmf::linalg::gemm::num_threads());

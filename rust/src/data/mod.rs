@@ -8,7 +8,9 @@
 //! * [`faces`] — parts-based face images (Yale-B substitute).
 //! * [`hyperspectral`] — linear-mixing-model scene ('urban' substitute).
 //! * [`digits`] — stroke-rendered labeled digits (MNIST substitute).
-//! * [`store`] — `.nmfstore` column-blocked binary format (HDF5 substitute).
+//! * [`store`] — `.nmfstore` column-blocked binary format (HDF5
+//!   substitute), dense slabs plus the sparse CSC-slab extension
+//!   ([`store::SparseNmfStore`]) for `O(nnz)`-I/O streaming.
 
 pub mod digits;
 pub mod faces;

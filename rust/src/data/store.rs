@@ -1,4 +1,5 @@
-//! `.nmfstore` — the column-blocked on-disk matrix store.
+//! `.nmfstore` — the column-blocked on-disk matrix store (dense and
+//! sparse).
 //!
 //! The paper's out-of-core discussion (Appendix A) assumes an HDF5-style
 //! container that can hand back subsets of columns without touching the
@@ -6,7 +7,7 @@
 //! unit of I/O is a **column block**, so the blocked QB algorithm streams
 //! `2 + 2q` sequential passes with `O(m·block)` memory.
 //!
-//! Layout (little-endian):
+//! Dense layout (little-endian):
 //!
 //! ```text
 //! magic    8 bytes  "NMFSTOR1"
@@ -16,7 +17,30 @@
 //! data     ⌈cols/block⌉ blocks, each a rows×bw row-major f64 slab
 //! ```
 //!
-//! Reads use `pread` (`FileExt::read_exact_at`), so a shared `&NmfStore`
+//! Sparse (CSC-slab) extension — [`SparseNmfStore`] — stores the matrix
+//! column-major so any column range is one contiguous byte range and a
+//! streaming pass costs `O(nnz)` I/O instead of `O(m·n)`:
+//!
+//! ```text
+//! magic    8 bytes  "NMFSPRS1"
+//! rows     u64
+//! cols     u64
+//! block    u64                  column-slab width (metadata)
+//! nnz      u64                  total stored entries
+//! colptr   (cols+1) × u64       absolute entry offset per column
+//! payload  nnz entries, each {row u64, value f64} ascending-row per col
+//! ```
+//!
+//! `colptr` is loaded at open (`O(cols)` resident — 8 MB per million
+//! columns), after which reading columns `[j0, j1)` is exactly one
+//! `pread` of `16·(colptr[j1] − colptr[j0])` bytes plus an in-place
+//! decode into the caller's reusable
+//! [`CscBlock`](crate::sketch::blocked::CscBlock) — zero steady-state
+//! allocations, the contract [`qb_blocked_sparse_with`] relies on.
+//!
+//! [`qb_blocked_sparse_with`]: crate::sketch::blocked::qb_blocked_sparse_with
+//!
+//! Reads use `pread` (`FileExt::read_exact_at`), so a shared store handle
 //! can serve concurrent readers without seek races.
 
 use std::fs::File;
@@ -28,9 +52,11 @@ use std::sync::Mutex;
 use anyhow::{bail, Context, Result};
 
 use crate::linalg::mat::Mat;
-use crate::sketch::blocked::ColumnBlockSource;
+use crate::linalg::sparse::CscMat;
+use crate::sketch::blocked::{ColumnBlockSource, CscBlock, SparseColumnBlockSource};
 
 const MAGIC: &[u8; 8] = b"NMFSTOR1";
+const SPARSE_MAGIC: &[u8; 8] = b"NMFSPRS1";
 
 /// Read handle for a `.nmfstore` file.
 pub struct NmfStore {
@@ -272,6 +298,280 @@ pub fn write_mat(path: &Path, m: &Mat, block: usize) -> Result<()> {
     w.finish()
 }
 
+// ---------------------------------------------------------------------------
+// Sparse (CSC-slab) store.
+// ---------------------------------------------------------------------------
+
+/// Byte offset of the sparse header (fixed) and derived regions.
+const SPARSE_HEADER_BYTES: u64 = 40;
+/// Bytes per payload entry: row `u64` + value `f64`.
+const ENTRY_BYTES: usize = 16;
+
+/// Read handle for a sparse (CSC-slab) `.nmfstore` file — see the module
+/// docs for the layout. Implements
+/// [`SparseColumnBlockSource`], so [`crate::sketch::blocked`]'s sparse
+/// out-of-core engine streams it directly.
+pub struct SparseNmfStore {
+    file: File,
+    rows: usize,
+    cols: usize,
+    block: usize,
+    nnz: usize,
+    /// Absolute per-column entry offsets (`cols + 1` values), loaded at
+    /// open — what turns any column-range read into one contiguous
+    /// `pread`.
+    colptr: Vec<u64>,
+    /// Reusable payload staging for `read_block_into` (same pattern as
+    /// the dense store's `slab_scratch`): grown to the largest read once,
+    /// then reused — one `pread` per range, zero steady-state
+    /// allocations. Behind a mutex because reads take `&self`.
+    payload_scratch: Mutex<Vec<u8>>,
+}
+
+impl SparseNmfStore {
+    /// Open an existing sparse store and load its column pointer.
+    pub fn open(path: &Path) -> Result<SparseNmfStore> {
+        let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let mut header = [0u8; SPARSE_HEADER_BYTES as usize];
+        file.read_exact_at(&mut header, 0).context("reading sparse header")?;
+        if &header[0..8] != SPARSE_MAGIC {
+            bail!("{} is not a sparse nmfstore file", path.display());
+        }
+        let rows = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+        let block = u64::from_le_bytes(header[24..32].try_into().unwrap()) as usize;
+        let nnz = u64::from_le_bytes(header[32..40].try_into().unwrap()) as usize;
+        if block == 0 || rows == 0 || cols == 0 {
+            bail!("degenerate sparse store dimensions {rows}x{cols} block {block}");
+        }
+        let mut ptr_bytes = vec![0u8; (cols + 1) * 8];
+        file.read_exact_at(&mut ptr_bytes, SPARSE_HEADER_BYTES)
+            .context("reading column pointer")?;
+        let colptr: Vec<u64> = ptr_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        if colptr[0] != 0 || colptr[cols] as usize != nnz || colptr.windows(2).any(|w| w[0] > w[1])
+        {
+            bail!("corrupt column pointer in {}", path.display());
+        }
+        Ok(SparseNmfStore {
+            file,
+            rows,
+            cols,
+            block,
+            nnz,
+            colptr,
+            payload_scratch: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total stored entries.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Column-slab width metadata (reads are contiguous at any width; the
+    /// value records the writer's streaming granularity for diagnostics).
+    pub fn block_width(&self) -> usize {
+        self.block
+    }
+
+    /// Byte offset where the entry payload begins.
+    fn payload_offset(&self) -> u64 {
+        SPARSE_HEADER_BYTES + ((self.cols + 1) * 8) as u64
+    }
+
+    /// Materialize the full matrix as a [`CscMat`] (small stores /
+    /// tests): one streamed decode, assembled column-by-column in the
+    /// order the block already holds, validated by
+    /// [`CscMat::from_parts`] — a corrupt file is an `Err`, not a panic.
+    pub fn read_all(&self) -> Result<CscMat> {
+        let mut block = CscBlock::new();
+        SparseColumnBlockSource::read_block_into(self, 0, self.cols, &mut block)?;
+        let mut indptr = Vec::with_capacity(self.cols + 1);
+        indptr.push(0);
+        let mut indices = Vec::with_capacity(self.nnz);
+        let mut values = Vec::with_capacity(self.nnz);
+        for j in 0..self.cols {
+            let (is, vs) = block.col(j);
+            indices.extend_from_slice(is);
+            values.extend_from_slice(vs);
+            indptr.push(indices.len());
+        }
+        CscMat::from_parts(self.rows, self.cols, indptr, indices, values)
+    }
+}
+
+impl SparseColumnBlockSource for SparseNmfStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Append columns `[j0, j1)` to `out`: exactly one `pread` of the
+    /// contiguous entry range (CSC's gift — no slab alignment cases),
+    /// then an in-place decode. Zero steady-state allocations once the
+    /// staging buffer and `out` are warm.
+    ///
+    /// The payload is **validated as it is decoded** — row indices must
+    /// be in bounds and strictly ascending per column (the invariants
+    /// every downstream kernel indexes by) — so a corrupt or truncated
+    /// file surfaces as an `Err` here instead of a panic (or a silent
+    /// determinism break) deep inside a compute pass. The `open`-time
+    /// check covers only the column pointer; this covers the entries.
+    fn read_block_into(&self, j0: usize, j1: usize, out: &mut CscBlock) -> Result<()> {
+        anyhow::ensure!(j0 <= j1 && j1 <= self.cols, "bad column range {j0}..{j1}");
+        if j0 == j1 {
+            return Ok(());
+        }
+        let (p0, p1) = (self.colptr[j0] as usize, self.colptr[j1] as usize);
+        let nbytes = (p1 - p0) * ENTRY_BYTES;
+        let mut staging = self.payload_scratch.lock().unwrap_or_else(|e| e.into_inner());
+        staging.resize(nbytes, 0);
+        self.file
+            .read_exact_at(&mut staging[..], self.payload_offset() + (p0 * ENTRY_BYTES) as u64)
+            .with_context(|| format!("reading sparse columns {j0}..{j1}"))?;
+        let mut off = 0usize;
+        for j in j0..j1 {
+            let cn = (self.colptr[j + 1] - self.colptr[j]) as usize;
+            // Validation pass over the row indices (8 of each entry's 16
+            // bytes) before anything is pushed into `out`.
+            let mut prev: Option<usize> = None;
+            for t in 0..cn {
+                let e = off + t * ENTRY_BYTES;
+                let row = u64::from_le_bytes(staging[e..e + 8].try_into().unwrap()) as usize;
+                anyhow::ensure!(
+                    row < self.rows,
+                    "corrupt sparse store: row {row} out of bounds in column {j}"
+                );
+                anyhow::ensure!(
+                    prev.is_none_or(|p| p < row),
+                    "corrupt sparse store: rows not strictly ascending in column {j}"
+                );
+                prev = Some(row);
+            }
+            let base = off;
+            out.push_col_with(cn, |t| {
+                let e = base + t * ENTRY_BYTES;
+                let row = u64::from_le_bytes(staging[e..e + 8].try_into().unwrap()) as usize;
+                let val = f64::from_le_bytes(staging[e + 8..e + 16].try_into().unwrap());
+                (row, val)
+            });
+            off += cn * ENTRY_BYTES;
+        }
+        Ok(())
+    }
+}
+
+/// Incremental sparse-store writer: columns are appended in order (a
+/// generator can stream a matrix to disk without materializing it); the
+/// column pointer and `nnz` are backfilled into their reserved regions
+/// at [`SparseNmfStoreWriter::finish`].
+pub struct SparseNmfStoreWriter {
+    file: File,
+    rows: usize,
+    cols: usize,
+    colptr: Vec<u64>,
+    buf: Vec<u8>,
+}
+
+impl SparseNmfStoreWriter {
+    pub fn create(
+        path: &Path,
+        rows: usize,
+        cols: usize,
+        block: usize,
+    ) -> Result<SparseNmfStoreWriter> {
+        anyhow::ensure!(rows > 0 && cols > 0 && block > 0, "degenerate sparse store shape");
+        let mut file =
+            File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        file.write_all(SPARSE_MAGIC)?;
+        file.write_all(&(rows as u64).to_le_bytes())?;
+        file.write_all(&(cols as u64).to_le_bytes())?;
+        file.write_all(&(block as u64).to_le_bytes())?;
+        file.write_all(&0u64.to_le_bytes())?; // nnz, backfilled at finish
+        // Reserve the colptr region (backfilled at finish).
+        file.write_all(&vec![0u8; (cols + 1) * 8])?;
+        let mut colptr = Vec::with_capacity(cols + 1);
+        colptr.push(0);
+        Ok(SparseNmfStoreWriter { file, rows, cols, colptr, buf: Vec::new() })
+    }
+
+    /// Append the next column's `(row indices, values)` — rows strictly
+    /// ascending and in bounds, values finite (the [`CscMat`] invariants,
+    /// validated here so a corrupt file can never be produced).
+    pub fn append_col(&mut self, rows: &[usize], vals: &[f64]) -> Result<()> {
+        anyhow::ensure!(
+            (self.colptr.len() - 1) < self.cols,
+            "all {} columns already written",
+            self.cols
+        );
+        anyhow::ensure!(rows.len() == vals.len(), "append_col: length mismatch");
+        for (t, (&i, &v)) in rows.iter().zip(vals.iter()).enumerate() {
+            anyhow::ensure!(i < self.rows, "append_col: row {i} out of bounds ({})", self.rows);
+            anyhow::ensure!(t == 0 || rows[t - 1] < i, "append_col: rows must strictly ascend");
+            anyhow::ensure!(v.is_finite(), "append_col: non-finite value {v}");
+        }
+        self.buf.clear();
+        self.buf.reserve(rows.len() * ENTRY_BYTES);
+        for (&i, &v) in rows.iter().zip(vals.iter()) {
+            self.buf.extend_from_slice(&(i as u64).to_le_bytes());
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.file.write_all(&self.buf)?;
+        let prev = *self.colptr.last().unwrap();
+        self.colptr.push(prev + rows.len() as u64);
+        Ok(())
+    }
+
+    /// Finish: errors if the column count is short, then backfills `nnz`
+    /// and the column pointer into their reserved regions.
+    pub fn finish(mut self) -> Result<()> {
+        anyhow::ensure!(
+            self.colptr.len() == self.cols + 1,
+            "sparse store incomplete: {}/{} columns written",
+            self.colptr.len() - 1,
+            self.cols
+        );
+        let nnz = *self.colptr.last().unwrap();
+        self.file.write_all_at(&nnz.to_le_bytes(), 32).context("backfilling nnz")?;
+        let mut ptr_bytes = Vec::with_capacity(self.colptr.len() * 8);
+        for p in &self.colptr {
+            ptr_bytes.extend_from_slice(&p.to_le_bytes());
+        }
+        self.file
+            .write_all_at(&ptr_bytes, SPARSE_HEADER_BYTES)
+            .context("backfilling column pointer")?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Write an in-memory CSC matrix as a sparse store (tests and small
+/// data; the streaming [`SparseNmfStoreWriter`] is the production path).
+pub fn write_csc(path: &Path, x: &CscMat, block: usize) -> Result<()> {
+    let mut w = SparseNmfStoreWriter::create(path, x.rows(), x.cols(), block)?;
+    for j in 0..x.cols() {
+        let (is, vs) = x.col(j);
+        w.append_col(is, vs)?;
+    }
+    w.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,6 +649,117 @@ mod tests {
         let path = tmp("bad.nmfstore");
         std::fs::write(&path, b"NOTASTORExxxxxxxxxxxxxxxxxxxxxxx").unwrap();
         assert!(NmfStore::open(&path).is_err());
+    }
+
+    fn sparse_fixture(m: usize, n: usize, seed: u64) -> (Mat, CscMat) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let dense = rng.uniform_mat(m, n).map(|v| if v < 0.7 { 0.0 } else { v });
+        let csc = CscMat::from_csr(&crate::linalg::sparse::CsrMat::from_dense(&dense));
+        (dense, csc)
+    }
+
+    #[test]
+    fn sparse_store_roundtrip_exact() {
+        let (_dense, csc) = sparse_fixture(17, 23, 10);
+        let path = tmp("sparse_roundtrip.nmfstore");
+        write_csc(&path, &csc, 5).unwrap();
+        let store = SparseNmfStore::open(&path).unwrap();
+        assert_eq!(store.rows(), 17);
+        assert_eq!(store.cols(), 23);
+        assert_eq!(store.block_width(), 5);
+        assert_eq!(SparseColumnBlockSource::nnz(&store), csc.nnz());
+        assert_eq!(store.read_all().unwrap(), csc);
+    }
+
+    #[test]
+    fn sparse_store_arbitrary_column_ranges() {
+        let (_dense, csc) = sparse_fixture(9, 31, 11);
+        let path = tmp("sparse_ranges.nmfstore");
+        write_csc(&path, &csc, 7).unwrap();
+        let store = SparseNmfStore::open(&path).unwrap();
+        let mut block = CscBlock::new();
+        for (j0, j1) in [(0, 31), (0, 1), (30, 31), (3, 11), (6, 8), (13, 29)] {
+            block.clear();
+            store.read_block_into(j0, j1, &mut block).unwrap();
+            assert_eq!(block.ncols(), j1 - j0, "{j0}..{j1}");
+            for j in j0..j1 {
+                let (is, vs) = block.col(j - j0);
+                let (eis, evs) = csc.col(j);
+                assert_eq!(is, eis, "col {j}: rows");
+                assert_eq!(vs, evs, "col {j}: values");
+            }
+        }
+        block.clear();
+        assert!(store.read_block_into(0, 32, &mut block).is_err());
+        // Empty range is a no-op append (the chunk assembler relies on
+        // range semantics j0 <= j1).
+        assert!(store.read_block_into(5, 5, &mut block).is_ok());
+        assert_eq!(block.ncols(), 0);
+    }
+
+    #[test]
+    fn sparse_store_writer_validates() {
+        let path = tmp("sparse_stream.nmfstore");
+        let mut w = SparseNmfStoreWriter::create(&path, 6, 3, 2).unwrap();
+        w.append_col(&[0, 4], &[1.0, 2.0]).unwrap();
+        // Unsorted / OOB / non-finite / ragged columns rejected.
+        assert!(w.append_col(&[3, 1], &[1.0, 2.0]).is_err(), "descending rows");
+        assert!(w.append_col(&[6], &[1.0]).is_err(), "row out of bounds");
+        assert!(w.append_col(&[1], &[f64::NAN]).is_err(), "non-finite value");
+        assert!(w.append_col(&[1, 2], &[1.0]).is_err(), "ragged column");
+        w.append_col(&[], &[]).unwrap();
+        // Premature finish rejected.
+        let w2 = SparseNmfStoreWriter::create(&tmp("sparse_short.nmfstore"), 2, 5, 2).unwrap();
+        assert!(w2.finish().is_err());
+        w.append_col(&[5], &[3.0]).unwrap();
+        assert!(w.append_col(&[0], &[1.0]).is_err(), "extra column rejected");
+        w.finish().unwrap();
+        let store = SparseNmfStore::open(&path).unwrap();
+        assert_eq!(SparseColumnBlockSource::nnz(&store), 3);
+        // Dense magic is rejected by the sparse opener and vice versa.
+        let dense_path = tmp("dense_for_magic.nmfstore");
+        write_mat(&dense_path, &Mat::full(2, 2, 1.0), 1).unwrap();
+        assert!(SparseNmfStore::open(&dense_path).is_err());
+        assert!(NmfStore::open(&path).is_err());
+    }
+
+    #[test]
+    fn sparse_store_corrupt_payload_errors_not_panics() {
+        // A file whose colptr is consistent but whose payload carries an
+        // out-of-bounds row index must surface as Err at read time —
+        // never as a panic inside a downstream kernel.
+        let (_dense, csc) = sparse_fixture(8, 6, 14);
+        assert!(csc.nnz() > 0);
+        let path = tmp("sparse_corrupt.nmfstore");
+        write_csc(&path, &csc, 3).unwrap();
+        // Overwrite the first payload entry's row with rows + 7.
+        let payload_off = 40 + (6 + 1) * 8;
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[payload_off..payload_off + 8].copy_from_slice(&15u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let store = SparseNmfStore::open(&path).unwrap();
+        let mut block = CscBlock::new();
+        let err = store.read_block_into(0, 6, &mut block);
+        assert!(err.is_err(), "OOB payload row must be an Err");
+        assert!(store.read_all().is_err());
+    }
+
+    #[test]
+    fn out_of_core_sparse_qb_matches_in_memory_bitwise() {
+        use crate::sketch::blocked::{qb_blocked_sparse, CscSource};
+        use crate::sketch::qb::QbOptions;
+        let (dense, csc) = sparse_fixture(40, 33, 12);
+        let path = tmp("sparse_qb.nmfstore");
+        write_csc(&path, &csc, 8).unwrap();
+        let store = SparseNmfStore::open(&path).unwrap();
+        let opts = QbOptions::new(5).with_oversample(6).with_power_iters(1);
+        let mut r1 = Pcg64::seed_from_u64(13);
+        let mut r2 = Pcg64::seed_from_u64(13);
+        let from_disk = qb_blocked_sparse(&store, opts, 8, &mut r1).unwrap();
+        let from_mem = qb_blocked_sparse(&CscSource(&csc), opts, 8, &mut r2).unwrap();
+        assert_eq!(from_disk.q, from_mem.q, "disk and memory sources must bit-match");
+        assert_eq!(from_disk.b, from_mem.b);
+        assert!(from_disk.relative_error(&dense) < 1e-6);
     }
 
     #[test]

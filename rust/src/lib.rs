@@ -43,12 +43,17 @@
 //!   compression stage (dense or sparse-sign sketches, power iterations,
 //!   `B = QᵀX`) dispatches its large products onto the same pool.
 //!
-//! Inputs may be dense ([`linalg::mat::Mat`]) or sparse CSR
-//! ([`linalg::sparse::CsrMat`]): the sketch engine and
-//! `RandomizedHals::fit_with` accept either via
-//! [`linalg::sparse::NmfInput`], and on sparse data every pass over `X`
-//! runs in `O(nnz·l)` without ever materializing an `m×n` buffer — see
-//! `examples/sparse_topics.rs` for the bag-of-words scenario.
+//! Inputs may be dense ([`linalg::mat::Mat`]), sparse CSR
+//! ([`linalg::sparse::CsrMat`]), or dual-storage sparse
+//! ([`linalg::sparse::SparseMat`] — CSR plus a lazily built CSC mirror
+//! whose transpose-side products run reduce-free): the sketch engine,
+//! the deterministic `Hals`/`Mu` solvers, and `RandomizedHals::fit_with`
+//! all accept any of them via [`linalg::sparse::NmfInput`], and on
+//! sparse data every pass over `X` runs in `O(nnz·l)` without ever
+//! materializing an `m×n` buffer — see `examples/sparse_topics.rs` for
+//! the bag-of-words scenario. Out-of-core sparse data streams through
+//! [`sketch::blocked::qb_blocked_sparse_with`] over the CSC-slab
+//! [`data::store::SparseNmfStore`] at `O(nnz)` I/O per pass.
 //!
 //! ## Quickstart
 //!
@@ -78,10 +83,11 @@ pub mod prelude {
     pub use crate::data::synthetic;
     pub use crate::linalg::mat::Mat;
     pub use crate::linalg::rng::Pcg64;
-    pub use crate::linalg::sparse::{CsrMat, NmfInput};
+    pub use crate::linalg::sparse::{CscMat, CsrMat, NmfInput, SparseMat};
     pub use crate::linalg::workspace::Workspace;
-    pub use crate::nmf::hals::Hals;
+    pub use crate::nmf::hals::{Hals, HalsScratch};
     pub use crate::nmf::model::{NmfFit, NmfModel};
+    pub use crate::nmf::mu::{Mu, MuScratch};
     pub use crate::nmf::options::{Init, NmfOptions, Regularization, UpdateOrder};
     pub use crate::nmf::rhals::{RandomizedHals, RhalsScratch};
     pub use crate::sketch::qb::{qb, QbOptions, SketchKind};

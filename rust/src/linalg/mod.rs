@@ -29,9 +29,11 @@
 //!   sampling (the random test matrices Ω of the sketch).
 //! * [`norms`] — Frobenius norms, relative errors, projected-gradient
 //!   norms shared across the algorithms.
-//! * [`sparse`] — CSR matrices and the `O(nnz·l)` sparse kernels behind
-//!   the dense-or-sparse [`sparse::NmfInput`] accepted by the sketch
-//!   engine and `RandomizedHals::fit_with`.
+//! * [`sparse`] — CSR/CSC matrices, the dual-storage
+//!   [`sparse::SparseMat`] (CSR + lazily built CSC mirror), and the
+//!   `O(nnz·l)` sparse kernels behind the dense-or-sparse
+//!   [`sparse::NmfInput`] accepted by the sketch engine, the
+//!   deterministic `Hals`/`Mu` solvers, and `RandomizedHals::fit_with`.
 
 pub mod gemm;
 pub mod mat;
@@ -45,5 +47,5 @@ pub mod workspace;
 
 pub use mat::Mat;
 pub use rng::Pcg64;
-pub use sparse::{CsrMat, NmfInput};
+pub use sparse::{CscMat, CsrMat, NmfInput, SparseMat};
 pub use workspace::Workspace;

@@ -1,4 +1,5 @@
-//! Compressed sparse row (CSR) matrices and the sparse input path.
+//! Sparse matrices (CSR, CSC, and the dual-storage pair) and the sparse
+//! input path.
 //!
 //! The canonical big-data NMF inputs — bag-of-words term–document
 //! matrices, recommender interaction matrices, graph adjacency — are
@@ -11,23 +12,42 @@
 //!   **sorted-column invariant** (each row's column indices strictly
 //!   ascending; [`CsrMat::from_triplets`] sorts and sums duplicates), so
 //!   every kernel streams each row's nonzeros in ascending column order.
+//! * [`CscMat`] — the column-major mirror (per-column strictly ascending
+//!   row indices), giving cheap column access for the transpose-side
+//!   products.
+//! * [`SparseMat`] — dual storage: a CSR matrix plus a **lazily built**
+//!   CSC mirror ([`SparseMat::csc`] constructs it on first use and
+//!   caches it), so row-side kernels stream the CSR half and
+//!   transpose-side kernels the CSC half. Both halves index the same
+//!   `nnz` stored entries; memory is `2·nnz` entries once the mirror
+//!   exists, nothing before.
 //! * [`csr_matmul_into`] — `Y = X·B` for a dense `B` (`n×l`), the sketch
 //!   stage of the range finder. Pool-parallel over disjoint output-row
 //!   chunks via the audited `pool::run_row_split` carve.
 //! * [`csr_at_b_into`] — `C = Xᵀ·Q` (`n×l`), the power-iteration and
-//!   `B = QᵀX` stage. CSR has no cheap column access, so this splits the
-//!   **inner** dimension (X's rows) across the pool with a deterministic
-//!   job-order reduction — the same
+//!   `B = QᵀX` stage *for CSR-only input*. CSR has no cheap column
+//!   access, so this splits the **inner** dimension (X's rows) across
+//!   the pool with a deterministic job-order reduction — the same
 //!   [`inner_split_reduce`](crate::linalg::gemm) scaffolding the dense
 //!   `at_b`/`gram` kernels use, scratch drawn from the caller
 //!   [`Workspace`] / per-worker pool scratch, so warm calls allocate
 //!   nothing.
+//! * [`csc_at_b_into`] — the same `C = Xᵀ·Q` on the CSC mirror: output
+//!   row `j` of `C` is exactly CSC column `j`'s accumulation, so the
+//!   pool split is a clean **disjoint row split over CSC columns** (no
+//!   scatter, no partial-sum reduce, no scratch at all). Each element's
+//!   sum runs over ascending row index whole, so the result is
+//!   **bit-identical at every thread count** — strictly stronger than
+//!   the scatter path's fixed-thread-count determinism.
 //! * Row-sum / row-norm helpers for diagnostics and normalization.
 //! * [`NmfInput`] — the borrowed dense-or-sparse input enum the sketch
-//!   engine ([`crate::sketch::qb`]) and
-//!   `RandomizedHals::fit_with` accept, so compression and the residual
-//!   epilogue never materialize a dense `X`; only the `l`-width
-//!   compressed matrix `B` is dense.
+//!   engine ([`crate::sketch::qb`]), the deterministic
+//!   `Hals::fit`/`Mu::fit`, and `RandomizedHals::fit_with` accept, so
+//!   compression, the solver numerators, and the residual epilogue never
+//!   materialize a dense `X`; only the `l`-width compressed matrix `B`
+//!   (or the `k`-width factors) is dense. [`input_matmul_into`] /
+//!   [`input_at_b_into`] are the shared representation-dispatching
+//!   product kernels every consumer routes through.
 //!
 //! ## Determinism and dense equivalence
 //!
@@ -64,14 +84,23 @@ pub struct CsrMat {
 impl CsrMat {
     /// Build from `(row, col, value)` triplets in any order; duplicate
     /// coordinates are **summed** (the scipy `coo → csr` convention) and
-    /// each row's columns are sorted ascending. Panics on out-of-bounds
-    /// coordinates.
+    /// each row's columns are sorted ascending.
+    ///
+    /// The input is fully validated before any structure is built —
+    /// panics with a coordinate-naming message on an out-of-bounds
+    /// row/column index (which would otherwise corrupt `indptr`) and on
+    /// a non-finite value (NaN/±∞ would poison every downstream
+    /// accumulation silently).
     pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Self {
         let mut indptr = vec![0usize; rows + 1];
-        for &(i, j, _) in triplets {
+        for &(i, j, v) in triplets {
             assert!(
                 i < rows && j < cols,
                 "from_triplets: ({i},{j}) out of bounds for {rows}x{cols}"
+            );
+            assert!(
+                v.is_finite(),
+                "from_triplets: non-finite value {v} at ({i},{j})"
             );
             indptr[i + 1] += 1;
         }
@@ -166,13 +195,11 @@ impl CsrMat {
         self.values.len()
     }
 
-    /// Stored-entry fraction `nnz / (rows·cols)` (0 for an empty shape).
+    /// Stored-entry fraction `nnz / (rows·cols)` (0 for an empty shape;
+    /// the denominator is formed in `f64` so huge shapes whose element
+    /// count exceeds `usize::MAX` don't overflow).
     pub fn density(&self) -> f64 {
-        if self.rows == 0 || self.cols == 0 {
-            0.0
-        } else {
-            self.nnz() as f64 / (self.rows * self.cols) as f64
-        }
+        density_of(self.rows, self.cols, self.nnz())
     }
 
     /// Row `i`'s `(column indices, values)`, columns strictly ascending.
@@ -229,25 +256,338 @@ impl std::fmt::Debug for CsrMat {
     }
 }
 
-/// A borrowed NMF input: dense row-major or sparse CSR. The sketch engine
-/// ([`crate::sketch::qb::qb_into`] / `sketch_apply`) and
-/// `RandomizedHals::fit_with` accept `impl Into<NmfInput>`, so `&Mat` and
-/// `&CsrMat` both work unchanged at every call site.
+/// Shared `nnz / (rows·cols)` with the denominator formed in `f64` —
+/// exact division semantics for every realizable shape, no `usize`
+/// overflow, and a well-defined `0.0` for degenerate (0-extent) shapes.
+#[inline]
+fn density_of(rows: usize, cols: usize, nnz: usize) -> f64 {
+    if rows == 0 || cols == 0 {
+        0.0
+    } else {
+        nnz as f64 / (rows as f64 * cols as f64)
+    }
+}
+
+/// A compressed-sparse-column `f64` matrix — the transpose-side mirror
+/// of [`CsrMat`].
+///
+/// Invariants (established by every constructor):
+/// * `indptr.len() == cols + 1`, `indptr[0] == 0`, nondecreasing,
+///   `indptr[cols] == indices.len() == values.len()`;
+/// * within each column `indptr[j]..indptr[j+1]`, row indices are
+///   **strictly ascending** ([`CscMat::from_csr`] preserves this by a
+///   stable counting scatter over the CSR rows).
+///
+/// Cheap column access is what makes `C = XᵀQ` a clean row split (see
+/// [`csc_at_b_into`]): output row `j` of `C` depends only on column `j`
+/// of `X`, so the pool carve is disjoint and reduce-free.
+#[derive(Clone, PartialEq)]
+pub struct CscMat {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CscMat {
+    /// Build the column-major mirror of a CSR matrix: counting sort by
+    /// column, `O(nnz + n)`. Scattering the CSR rows in ascending row
+    /// order keeps each column's row indices strictly ascending, which
+    /// is exactly the accumulation order the determinism contract needs
+    /// (see the module docs).
+    pub fn from_csr(x: &CsrMat) -> Self {
+        let (rows, cols) = x.shape();
+        let nnz = x.nnz();
+        let mut indptr = vec![0usize; cols + 1];
+        for &j in &x.indices {
+            indptr[j + 1] += 1;
+        }
+        for j in 0..cols {
+            indptr[j + 1] += indptr[j];
+        }
+        let mut indices = vec![0usize; nnz];
+        let mut values = vec![0.0f64; nnz];
+        let mut cursor = indptr.clone();
+        for i in 0..rows {
+            let (js, vs) = x.row(i);
+            for (j, v) in js.iter().zip(vs.iter()) {
+                let p = cursor[*j];
+                indices[p] = i;
+                values[p] = *v;
+                cursor[*j] += 1;
+            }
+        }
+        CscMat { rows, cols, indptr, indices, values }
+    }
+
+    /// Build from raw CSC arrays, validating every invariant the kernels
+    /// rely on: `indptr` has `cols + 1` nondecreasing entries starting at
+    /// 0 and ending at `indices.len() == values.len()`, each column's row
+    /// indices are strictly ascending and `< rows`, and every value is
+    /// finite. Errors (instead of panicking) on violation — the on-disk
+    /// store uses this so a corrupt file surfaces as an `Err`, never as a
+    /// panic deep inside a compute kernel.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f64>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(indptr.len() == cols + 1, "from_parts: indptr length");
+        anyhow::ensure!(indptr[0] == 0, "from_parts: indptr must start at 0");
+        anyhow::ensure!(
+            indices.len() == values.len() && indptr[cols] == indices.len(),
+            "from_parts: nnz mismatch"
+        );
+        for j in 0..cols {
+            anyhow::ensure!(indptr[j] <= indptr[j + 1], "from_parts: indptr not monotone");
+            let is = &indices[indptr[j]..indptr[j + 1]];
+            for (t, &i) in is.iter().enumerate() {
+                anyhow::ensure!(i < rows, "from_parts: row {i} out of bounds in column {j}");
+                anyhow::ensure!(
+                    t == 0 || is[t - 1] < i,
+                    "from_parts: rows not strictly ascending in column {j}"
+                );
+            }
+        }
+        anyhow::ensure!(
+            values.iter().all(|v| v.is_finite()),
+            "from_parts: non-finite value"
+        );
+        Ok(CscMat { rows, cols, indptr, indices, values })
+    }
+
+    /// Transpose back to CSR (round-trip exact: same stored entries,
+    /// re-sorted into row-major streams by the inverse counting scatter).
+    pub fn to_csr(&self) -> CsrMat {
+        let nnz = self.nnz();
+        let mut indptr = vec![0usize; self.rows + 1];
+        for &i in &self.indices {
+            indptr[i + 1] += 1;
+        }
+        for i in 0..self.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut indices = vec![0usize; nnz];
+        let mut values = vec![0.0f64; nnz];
+        let mut cursor = indptr.clone();
+        for j in 0..self.cols {
+            let (is, vs) = self.col(j);
+            for (i, v) in is.iter().zip(vs.iter()) {
+                let p = cursor[*i];
+                indices[p] = j;
+                values[p] = *v;
+                cursor[*i] += 1;
+            }
+        }
+        CsrMat { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    /// Densify (O(m·n) memory — test oracle and small-data convenience).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            let (is, vs) = self.col(j);
+            for (i, v) in is.iter().zip(vs.iter()) {
+                out.set(*i, j, *v);
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Stored-entry fraction (same semantics as [`CsrMat::density`]).
+    pub fn density(&self) -> f64 {
+        density_of(self.rows, self.cols, self.nnz())
+    }
+
+    /// Column `j`'s `(row indices, values)`, rows strictly ascending.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[j], self.indptr[j + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+}
+
+impl std::fmt::Debug for CscMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CscMat {}x{} (nnz {}, density {:.4})",
+            self.rows,
+            self.cols,
+            self.nnz(),
+            self.density()
+        )
+    }
+}
+
+/// Dual-storage sparse matrix: a [`CsrMat`] plus a lazily built
+/// [`CscMat`] mirror.
+///
+/// Row-side products (`Y = X·B`, the sparse-sign apply) stream the CSR
+/// half; transpose-side products (`Z = XᵀQ`, `B = QᵀX`, the `XᵀW`
+/// solver numerator) stream the CSC half through the reduce-free
+/// [`csc_at_b_into`]. The mirror shares the matrix's one `nnz` budget —
+/// it stores the *same* entries column-major, so memory is `2·nnz`
+/// stored entries once built and `nnz` before; [`SparseMat::csc`]
+/// builds it on first use (the one allocating call — warm solver loops
+/// touch only the cached reference, which is why the zero-allocation
+/// suites pass dual-storage input through whole warm fits).
+pub struct SparseMat {
+    csr: CsrMat,
+    csc: std::sync::OnceLock<CscMat>,
+}
+
+impl SparseMat {
+    /// Wrap an existing CSR matrix; the CSC mirror is built on first
+    /// [`SparseMat::csc`] call.
+    pub fn new(csr: CsrMat) -> Self {
+        SparseMat { csr, csc: std::sync::OnceLock::new() }
+    }
+
+    /// See [`CsrMat::from_triplets`] (validation included).
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        SparseMat::new(CsrMat::from_triplets(rows, cols, triplets))
+    }
+
+    /// See [`CsrMat::from_dense`].
+    pub fn from_dense(x: &Mat) -> Self {
+        SparseMat::new(CsrMat::from_dense(x))
+    }
+
+    /// The row-major half.
+    #[inline]
+    pub fn csr(&self) -> &CsrMat {
+        &self.csr
+    }
+
+    /// The column-major mirror, built and cached on first call (the only
+    /// allocating operation on a [`SparseMat`]; call once before a
+    /// zero-allocation-sensitive loop, e.g. via [`SparseMat::warm`]).
+    pub fn csc(&self) -> &CscMat {
+        self.csc.get_or_init(|| CscMat::from_csr(&self.csr))
+    }
+
+    /// Force-build the CSC mirror now (idempotent) — call once before a
+    /// zero-allocation-sensitive or timed loop so the one allocating
+    /// construction happens outside it. Returns `&self` for chaining.
+    pub fn warm(&self) -> &Self {
+        let _ = self.csc();
+        self
+    }
+
+    /// True iff the CSC mirror has been built.
+    pub fn mirror_built(&self) -> bool {
+        self.csc.get().is_some()
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        self.csr.shape()
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.csr.rows()
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.csr.cols()
+    }
+
+    /// Number of stored entries (the *logical* count — the CSC mirror
+    /// duplicates storage, not entries).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    /// Stored-entry fraction (see [`CsrMat::density`]).
+    pub fn density(&self) -> f64 {
+        self.csr.density()
+    }
+
+    /// Densify (test oracle / small-data convenience).
+    pub fn to_dense(&self) -> Mat {
+        self.csr.to_dense()
+    }
+}
+
+impl Clone for SparseMat {
+    fn clone(&self) -> Self {
+        // The mirror is cheap to rebuild and usually absent; clone only
+        // the canonical CSR half.
+        SparseMat::new(self.csr.clone())
+    }
+}
+
+impl std::fmt::Debug for SparseMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SparseMat {}x{} (nnz {}, csc mirror {})",
+            self.rows(),
+            self.cols(),
+            self.nnz(),
+            if self.mirror_built() { "built" } else { "pending" }
+        )
+    }
+}
+
+/// A borrowed NMF input: dense row-major, sparse CSR, or dual-storage
+/// sparse. The sketch engine ([`crate::sketch::qb::qb_into`] /
+/// `sketch_apply`), the deterministic solvers (`Hals::fit` / `Mu::fit`),
+/// and `RandomizedHals::fit_with` accept `impl Into<NmfInput>`, so
+/// `&Mat`, `&CsrMat`, and `&SparseMat` all work unchanged at every call
+/// site.
 #[derive(Clone, Copy, Debug)]
 pub enum NmfInput<'a> {
     /// Dense row-major input.
     Dense(&'a Mat),
     /// Sparse CSR input — compression runs in `O(nnz·l)` and the fit
-    /// never materializes an `m×n` dense buffer.
+    /// never materializes an `m×n` dense buffer. Transpose-side products
+    /// fall back to the inner-split scatter of [`csr_at_b_into`].
     Sparse(&'a CsrMat),
+    /// Dual-storage sparse input — like [`NmfInput::Sparse`], but
+    /// transpose-side products run on the CSC mirror's reduce-free row
+    /// split ([`csc_at_b_into`]); the mirror is built lazily on the
+    /// first such product.
+    SparseDual(&'a SparseMat),
 }
 
-impl NmfInput<'_> {
+impl<'a> NmfInput<'a> {
     /// `(rows, cols)` pair.
     pub fn shape(&self) -> (usize, usize) {
         match self {
             NmfInput::Dense(x) => x.shape(),
             NmfInput::Sparse(x) => x.shape(),
+            NmfInput::SparseDual(x) => x.shape(),
         }
     }
 
@@ -257,6 +597,7 @@ impl NmfInput<'_> {
         match self {
             NmfInput::Dense(x) => x.sum(),
             NmfInput::Sparse(x) => x.sum(),
+            NmfInput::SparseDual(x) => x.csr().sum(),
         }
     }
 
@@ -265,7 +606,24 @@ impl NmfInput<'_> {
         match self {
             NmfInput::Dense(x) => crate::linalg::norms::fro_norm_sq(x),
             NmfInput::Sparse(x) => x.fro_norm_sq(),
+            NmfInput::SparseDual(x) => x.csr().fro_norm_sq(),
         }
+    }
+
+    /// The CSR storage of either sparse kind (`None` for dense input) —
+    /// what the row-side kernels and the sparse residual epilogue
+    /// stream.
+    pub fn csr(&self) -> Option<&'a CsrMat> {
+        match *self {
+            NmfInput::Dense(_) => None,
+            NmfInput::Sparse(x) => Some(x),
+            NmfInput::SparseDual(x) => Some(x.csr()),
+        }
+    }
+
+    /// True for either sparse kind.
+    pub fn is_sparse(&self) -> bool {
+        !matches!(self, NmfInput::Dense(_))
     }
 }
 
@@ -281,10 +639,50 @@ impl<'a> From<&'a CsrMat> for NmfInput<'a> {
     }
 }
 
-/// Flop estimate `2·nnz·l` shared by the sparse kernels' threading gates.
+impl<'a> From<&'a SparseMat> for NmfInput<'a> {
+    fn from(x: &'a SparseMat) -> Self {
+        NmfInput::SparseDual(x)
+    }
+}
+
+/// `Y = X·B` for any input kind: packed dense GEMM, or the `O(nnz·l)`
+/// CSR row-split kernel (both sparse kinds stream the CSR half — row
+/// access is the CSR strong suit). The shared representation dispatch
+/// used by the sketch engine and the deterministic solvers' `XHᵀ`
+/// numerator.
+pub fn input_matmul_into(a: NmfInput<'_>, b: &Mat, y: &mut Mat, ws: &mut Workspace) {
+    match a {
+        NmfInput::Dense(x) => gemm::matmul_into(x, b, y, ws),
+        NmfInput::Sparse(x) => csr_matmul_into(x, b, y),
+        NmfInput::SparseDual(x) => csr_matmul_into(x.csr(), b, y),
+    }
+}
+
+/// `C = Xᵀ·B` for any input kind: packed dense `at_b`, the CSC mirror's
+/// reduce-free row split for dual-storage input, or the CSR inner-split
+/// scatter fallback. The shared dispatch behind the power-iteration
+/// `Z = XᵀQ`, the projection `B = QᵀX` (as `(XᵀQ)ᵀ`), and the
+/// deterministic solvers' `XᵀW` numerator.
+pub fn input_at_b_into(a: NmfInput<'_>, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
+    match a {
+        NmfInput::Dense(x) => gemm::at_b_into(x, b, c, ws),
+        NmfInput::Sparse(x) => csr_at_b_into(x, b, c, ws),
+        NmfInput::SparseDual(x) => csc_at_b_into(x.csc(), b, c),
+    }
+}
+
+/// Flop estimate `2·nnz·l` shared by every sparse kernel's threading
+/// gate (CSR and CSC alike — the work depends on the stored-entry
+/// count, not the storage order).
+#[inline]
+fn sparse_flops(nnz: usize, l: usize) -> usize {
+    2usize.saturating_mul(nnz).saturating_mul(l)
+}
+
+/// [`sparse_flops`] for a CSR operand.
 #[inline]
 fn csr_flops(x: &CsrMat, l: usize) -> usize {
-    2usize.saturating_mul(x.nnz()).saturating_mul(l)
+    sparse_flops(x.nnz(), l)
 }
 
 /// `Y = X·B` for CSR `X (m×n)` and dense `B (n×l)` into `y (m×l)` — the
@@ -354,6 +752,55 @@ pub fn csr_at_b_into(x: &CsrMat, q: &Mat, c: &mut Mat, ws: &mut Workspace) {
             }
         }
     });
+}
+
+/// `C = Xᵀ·Q` on the CSC mirror: `X (m×n)` column-major, `Q (m×l)`
+/// dense, `c (n×l)` — the transpose-side product without the scatter.
+///
+/// Output row `j` of `C` is exactly the accumulation of CSC column `j`
+/// (`C[j,:] = Σ_i X[i,j]·Q[i,:]`, ascending `i`), so the pool split is
+/// a **disjoint row split over CSC columns** — the same audited
+/// `pool::run_row_split` carve the dense row-parallel kernels use, with
+/// no partial buffers and no job-order reduction. Needs no scratch at
+/// all, so warm calls allocate nothing at any thread count.
+///
+/// Because every output element's sum runs whole (never chunked), the
+/// result is bit-identical across thread counts, and — ascending inner
+/// index with exact zeros omitted — bit-identical to the single-threaded
+/// [`csr_at_b_into`] and to the dense path on sub-`KC` inner dimensions
+/// (see the module docs; property-tested by `prop_csc_at_b_matches_csr`).
+pub fn csc_at_b_into(x: &CscMat, q: &Mat, c: &mut Mat) {
+    let (m, n) = x.shape();
+    let (mq, l) = q.shape();
+    assert_eq!(m, mq, "csc_at_b: outer dims {m} != {mq}");
+    assert_eq!(c.shape(), (n, l), "csc_at_b_into: output must be {n}x{l}");
+    c.as_mut_slice().fill(0.0);
+    if n == 0 || l == 0 {
+        return;
+    }
+    let nchunks = gemm::row_chunks(n, sparse_flops(x.nnz(), l));
+    if nchunks <= 1 {
+        csc_at_b_cols(x, q, c.as_mut_slice(), l, 0, n);
+        return;
+    }
+    pool::run_row_split(nchunks, n, l, c.as_mut_slice(), &|cslice, j0, j1, _scratch| {
+        csc_at_b_cols(x, q, cslice, l, j0, j1);
+    });
+}
+
+/// Columns `[j0, j1)` of `C = XᵀQ`; `cslice` holds exactly those output
+/// rows.
+fn csc_at_b_cols(x: &CscMat, q: &Mat, cslice: &mut [f64], l: usize, j0: usize, j1: usize) {
+    for j in j0..j1 {
+        let crow = &mut cslice[(j - j0) * l..(j - j0 + 1) * l];
+        let (is, vs) = x.col(j);
+        for (i, v) in is.iter().zip(vs.iter()) {
+            let qrow = q.row(*i);
+            for (cv, qv) in crow.iter_mut().zip(qrow.iter()) {
+                *cv += *v * *qv;
+            }
+        }
+    }
 }
 
 /// `Y += X·Ω` for CSR `X` and the sparse-sign `Ω` encoded in
@@ -535,5 +982,145 @@ mod tests {
         let mut c = Mat::zeros(300, 8);
         csr_at_b_into(&x, &q, &mut c, &mut Workspace::new());
         assert!(c.max_abs_diff(&gemm::matmul_naive(&d.transpose(), &q)) < 1e-10);
+        // The CSC mirror's reduce-free row split on the same shape: must
+        // match the oracle AND the single-threaded accumulation bitwise
+        // (each output element's sum runs whole in one job).
+        let xc = CscMat::from_csr(&x);
+        let mut cc = Mat::zeros(300, 8);
+        csc_at_b_into(&xc, &q, &mut cc);
+        assert!(cc.max_abs_diff(&gemm::matmul_naive(&d.transpose(), &q)) < 1e-10);
+        let mut serial = Mat::zeros(300, 8);
+        super::csc_at_b_cols(&xc, &q, serial.as_mut_slice(), 8, 0, 300);
+        assert_eq!(cc, serial, "csc_at_b must be bit-identical to the serial sweep");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn from_triplets_rejects_oob_row() {
+        // Regression: an OOB triplet must be named and rejected before it
+        // can corrupt indptr.
+        let _ = CsrMat::from_triplets(3, 4, &[(0, 0, 1.0), (3, 1, 2.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn from_triplets_rejects_oob_col() {
+        let _ = CsrMat::from_triplets(3, 4, &[(1, 4, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn from_triplets_rejects_nan() {
+        let _ = CsrMat::from_triplets(2, 2, &[(0, 0, f64::NAN)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn from_triplets_rejects_infinity() {
+        let _ = CsrMat::from_triplets(2, 2, &[(1, 1, f64::INFINITY)]);
+    }
+
+    #[test]
+    fn density_degenerate_and_huge_shapes() {
+        // 0×0 / 0-extent shapes: well-defined 0.0, no division by zero.
+        assert_eq!(CsrMat::from_triplets(0, 0, &[]).density(), 0.0);
+        assert_eq!(CsrMat::from_triplets(0, 9, &[]).density(), 0.0);
+        assert_eq!(CsrMat::from_triplets(9, 0, &[]).density(), 0.0);
+        // The f64 denominator survives shapes whose element count would
+        // overflow usize arithmetic.
+        let huge = super::density_of(usize::MAX, usize::MAX, 1);
+        assert!(huge > 0.0 && huge < 1e-30, "no overflow, tiny density: {huge}");
+        assert_eq!(super::density_of(2, 4, 4), 0.5);
+    }
+
+    #[test]
+    fn nnz_zero_kernels_all_regimes() {
+        // nnz == 0 with shapes large enough that a *dense* operand of the
+        // same shape would trip the threading gate: the 2·nnz·l flop
+        // estimate is 0, so all three kernels must stay on the serial
+        // path and produce exact zeros.
+        let x = CsrMat::from_triplets(2000, 600, &[]);
+        let b = Mat::full(600, 8, 1.0);
+        let mut y = Mat::full(2000, 8, 7.0);
+        csr_matmul_into(&x, &b, &mut y);
+        assert!(y.as_slice().iter().all(|&v| v == 0.0));
+        let q = Mat::full(2000, 8, 1.0);
+        let mut c = Mat::full(600, 8, 7.0);
+        csr_at_b_into(&x, &q, &mut c, &mut Workspace::new());
+        assert!(c.as_slice().iter().all(|&v| v == 0.0));
+        let xc = CscMat::from_csr(&x);
+        assert_eq!(xc.nnz(), 0);
+        let mut cc = Mat::full(600, 8, 7.0);
+        csc_at_b_into(&xc, &q, &mut cc);
+        assert!(cc.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn csc_from_csr_roundtrip_and_invariants() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let d = rng.uniform_mat(23, 17).map(|v| if v < 0.7 { 0.0 } else { v });
+        let x = CsrMat::from_dense(&d);
+        let xc = CscMat::from_csr(&x);
+        assert_eq!(xc.shape(), x.shape());
+        assert_eq!(xc.nnz(), x.nnz());
+        assert_eq!(xc.to_dense(), d, "CSC mirror must densify identically");
+        // Per-column rows strictly ascending.
+        for j in 0..17 {
+            let (is, _) = xc.col(j);
+            for w in is.windows(2) {
+                assert!(w[0] < w[1], "col {j}: rows not strictly ascending");
+            }
+        }
+        // Exact round trip: same stored entries, identical CSR streams.
+        assert_eq!(xc.to_csr(), x, "CSR -> CSC -> CSR must round-trip exactly");
+        // Degenerate shapes survive.
+        let e = CscMat::from_csr(&CsrMat::from_triplets(0, 5, &[]));
+        assert_eq!(e.shape(), (0, 5));
+        assert_eq!(e.to_csr(), CsrMat::from_triplets(0, 5, &[]));
+    }
+
+    #[test]
+    fn csc_at_b_bit_matches_csr_serial() {
+        // Single-threaded shapes: ascending-inner-index accumulation is
+        // the same sum in the same order on both storages → bit equality.
+        let mut rng = Pcg64::seed_from_u64(7);
+        let d = rng.uniform_mat(41, 29).map(|v| if v < 0.6 { 0.0 } else { v });
+        let x = CsrMat::from_dense(&d);
+        let xc = CscMat::from_csr(&x);
+        let q = rng.gaussian_mat(41, 5);
+        let mut via_csr = Mat::zeros(29, 5);
+        csr_at_b_into(&x, &q, &mut via_csr, &mut Workspace::new());
+        let mut via_csc = Mat::zeros(29, 5);
+        csc_at_b_into(&xc, &q, &mut via_csc);
+        assert_eq!(via_csc, via_csr, "CSC and CSR transpose products must bit-match");
+    }
+
+    #[test]
+    fn sparse_mat_lazy_mirror_and_dispatch() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let d = rng.uniform_mat(19, 13).map(|v| if v < 0.7 { 0.0 } else { v });
+        let x = SparseMat::from_dense(&d);
+        assert!(!x.mirror_built(), "mirror must not exist before first use");
+        assert_eq!(x.nnz(), x.csr().nnz());
+        let q = rng.gaussian_mat(19, 3);
+        let mut ws = Workspace::new();
+        let mut c = Mat::zeros(13, 3);
+        input_at_b_into(NmfInput::from(&x), &q, &mut c, &mut ws);
+        assert!(x.mirror_built(), "transpose product must build the mirror");
+        let mut oracle = Mat::zeros(13, 3);
+        csr_at_b_into(x.csr(), &q, &mut oracle, &mut ws);
+        assert_eq!(c, oracle, "dual-storage dispatch must bit-match the CSR path");
+        // Row-side dispatch streams the CSR half.
+        let b = rng.gaussian_mat(13, 3);
+        let mut y = Mat::zeros(19, 3);
+        input_matmul_into(NmfInput::from(&x), &b, &mut y, &mut ws);
+        let mut y_csr = Mat::zeros(19, 3);
+        csr_matmul_into(x.csr(), &b, &mut y_csr);
+        assert_eq!(y, y_csr);
+        // Clone drops the mirror (rebuilt on demand), keeps the entries.
+        let x2 = x.clone();
+        assert!(!x2.mirror_built());
+        assert_eq!(x2.to_dense(), d);
+        assert!(x.warm().mirror_built());
     }
 }

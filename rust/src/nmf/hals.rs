@@ -39,6 +39,7 @@ use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::norms;
 use crate::linalg::pool;
+use crate::linalg::sparse::{self, NmfInput};
 use crate::linalg::workspace::Workspace;
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
@@ -129,6 +130,23 @@ pub fn update_h_sweep(h: &mut Mat, a: &Mat, s: &Mat, reg: Regularization, order:
     *h = ht.transpose();
 }
 
+/// Reusable cross-fit scratch for [`Hals::fit_with`] (the deterministic
+/// twin of [`crate::nmf::rhals::RhalsScratch`]): a [`Workspace`] buffer
+/// pool plus the sweep-order permutation. Keep one alive across fits and
+/// a warm fit — dense or sparse — allocates nothing.
+#[derive(Default)]
+pub struct HalsScratch {
+    /// The buffer pool every matrix of the fit is drawn from.
+    pub ws: Workspace,
+    order: OrderState,
+}
+
+impl HalsScratch {
+    pub fn new() -> Self {
+        HalsScratch { ws: Workspace::new(), order: OrderState::empty() }
+    }
+}
+
 /// Deterministic HALS solver (the paper's baseline, scikit-learn-equivalent).
 pub struct Hals {
     pub opts: NmfOptions,
@@ -139,54 +157,98 @@ impl Hals {
         Hals { opts }
     }
 
-    /// Run the factorization.
-    pub fn fit(&self, x: &Mat) -> Result<NmfFit> {
+    /// Run the factorization (allocating convenience wrapper over
+    /// [`Hals::fit_with`] with a throwaway scratch).
+    ///
+    /// Accepts dense (`&Mat`), sparse CSR (`&CsrMat`), or dual-storage
+    /// sparse (`&SparseMat`) input via [`NmfInput`] — see
+    /// [`Hals::fit_with`] for the sparse contract.
+    pub fn fit<'a>(&self, x: impl Into<NmfInput<'a>>) -> Result<NmfFit> {
+        self.fit_with(x, &mut HalsScratch::new())
+    }
+
+    /// The full fit with every buffer — factors included — drawn from
+    /// `scratch`. Recycle finished fits with
+    /// [`NmfFit::recycle`](crate::nmf::model::NmfFit::recycle) and a warm
+    /// fit performs **zero heap allocations** (random init, tracing off;
+    /// both thread regimes — asserted by `tests/test_zero_alloc.rs` and
+    /// `tests/test_zero_alloc_pool.rs`).
+    ///
+    /// On sparse input the two large numerators run on the `O(nnz·k)`
+    /// kernels of [`crate::linalg::sparse`] — `XHᵀ` on the CSR row
+    /// split, `XᵀW` on the CSC mirror's reduce-free row split (dual
+    /// storage) or the CSR inner-split scatter — and the final-error
+    /// epilogue on the sparse trace expansion; nothing of size `m×n` is
+    /// ever materialized. With an identical seed a sparse fit reproduces
+    /// the densified fit (bit for bit on single-threaded sub-`KC`
+    /// shapes; within 1e-10 generally — property-tested across update
+    /// orders). Sparse input requires `Init::Random` (NNDSVD would
+    /// densify) and a Gram-based update order (the interleaved order
+    /// maintains an `m×n` residual) — both enforced by
+    /// [`NmfOptions::validate_sparse`].
+    pub fn fit_with<'a>(
+        &self,
+        x: impl Into<NmfInput<'a>>,
+        scratch: &mut HalsScratch,
+    ) -> Result<NmfFit> {
+        let x = x.into();
         let (m, n) = x.shape();
         self.opts.validate(m, n)?;
+        if x.is_sparse() {
+            self.opts.validate_sparse()?;
+            anyhow::ensure!(
+                self.opts.update_order != UpdateOrder::InterleavedCyclic,
+                "interleaved HALS maintains an explicit m×n residual and requires \
+                 dense input; use the blocked-cyclic or shuffled order for sparse data"
+            );
+        }
         match self.opts.update_order {
-            UpdateOrder::InterleavedCyclic => self.fit_interleaved(x),
-            _ => self.fit_blocked(x),
+            UpdateOrder::InterleavedCyclic => match x {
+                NmfInput::Dense(d) => self.fit_interleaved(d),
+                _ => unreachable!("sparse interleaved input rejected above"),
+            },
+            _ => self.fit_blocked(x, scratch),
         }
     }
 
     /// Blocked-cyclic / shuffled path (Eq. 24): Gram-based sweeps.
     ///
-    /// All per-iteration products are written into buffers allocated once
-    /// before the loop, with GEMM scratch drawn from a [`Workspace`] (or,
-    /// when threaded, from the persistent pool workers' own scratch), so
-    /// the steady-state iteration performs zero heap allocations at any
-    /// thread count (verified by `tests/test_zero_alloc.rs` under
+    /// All per-iteration products are written into buffers drawn once
+    /// from the caller scratch before the loop, with GEMM scratch pooled
+    /// in the same [`Workspace`] (or, when threaded, in the persistent
+    /// pool workers' own scratch), so the steady-state iteration — and,
+    /// on a warm scratch, the whole fit — performs zero heap allocations
+    /// at any thread count (verified by `tests/test_zero_alloc.rs` under
     /// `RANDNMF_THREADS=1` and `tests/test_zero_alloc_pool.rs` under
-    /// `RANDNMF_THREADS=4`).
-    fn fit_blocked(&self, x: &Mat) -> Result<NmfFit> {
+    /// `RANDNMF_THREADS=4`, dense and sparse input alike).
+    fn fit_blocked(&self, x: NmfInput<'_>, scratch: &mut HalsScratch) -> Result<NmfFit> {
         let o = &self.opts;
         let (m, n) = x.shape();
         let k = o.rank;
         let start = Instant::now();
         let mut rng = crate::linalg::rng::Pcg64::seed_from_u64(o.seed);
 
-        let (mut w, mut ht) = init::initialize(x, o, &mut rng);
-        let x_norm_sq = norms::fro_norm_sq(x);
+        let (mut w, mut ht) = init::initialize_input_with(x, o, &mut rng, &mut scratch.ws)?;
+        let x_norm_sq = x.fro_norm_sq();
         let want_pg = o.tol > 0.0 || o.trace_every > 0;
-        let mut order = OrderState::new(k, o.update_order);
+        scratch.order.reset(k, o.update_order);
 
         // Per-solve buffers: the iteration loop below never allocates.
-        let mut ws = Workspace::new();
-        let mut s = Mat::zeros(k, k); // WᵀW
-        let mut at = Mat::zeros(n, k); // XᵀW
-        let mut v = Mat::zeros(k, k); // HHᵀ
-        let mut t = Mat::zeros(m, k); // XHᵀ
+        let mut s = scratch.ws.acquire_mat(k, k); // WᵀW
+        let mut at = scratch.ws.acquire_mat(n, k); // XᵀW
+        let mut v = scratch.ws.acquire_mat(k, k); // HHᵀ
+        let mut t = scratch.ws.acquire_mat(m, k); // XHᵀ
         let (mut gh, mut gw) = if want_pg {
-            (Mat::zeros(n, k), Mat::zeros(m, k))
+            (scratch.ws.acquire_mat(n, k), scratch.ws.acquire_mat(m, k))
         } else {
-            (Mat::zeros(0, 0), Mat::zeros(0, 0))
+            (scratch.ws.acquire_mat(0, 0), scratch.ws.acquire_mat(0, 0))
         };
 
         // Initial ∇ᴾ w.r.t. W needs V⁰ = HHᵀ and T⁰ = XHᵀ.
         let mut pgw_prev = if want_pg {
-            gemm::gram_into(&ht, &mut v, &mut ws);
-            gemm::matmul_into(x, &ht, &mut t, &mut ws);
-            gemm::matmul_into(&w, &v, &mut gw, &mut ws);
+            gemm::gram_into(&ht, &mut v, &mut scratch.ws);
+            sparse::input_matmul_into(x, &ht, &mut t, &mut scratch.ws);
+            gemm::matmul_into(&w, &v, &mut gw, &mut scratch.ws);
             gw.axpy(-1.0, &t); // ∇W = W·V − T
             Some(stopping::projected_gradient_norm_sq(&w, &gw))
         } else {
@@ -200,13 +262,14 @@ impl Hals {
         let mut iters = 0usize;
 
         for iter in 1..=o.max_iter {
-            gemm::gram_into(&w, &mut s, &mut ws); // k×k  WᵀW
-            gemm::at_b_into(x, &w, &mut at, &mut ws); // n×k  XᵀW  (≙ (WᵀX)ᵀ)
+            gemm::gram_into(&w, &mut s, &mut scratch.ws); // k×k  WᵀW
+            // n×k  XᵀW (≙ (WᵀX)ᵀ): dense at_b / CSC row split / CSR scatter.
+            sparse::input_at_b_into(x, &w, &mut at, &mut scratch.ws);
 
             // Diagnostics for the *previous* iterate (W, Ht) — both grams
             // are exact for it.
             if want_pg {
-                gemm::matmul_into(&ht, &s, &mut gh, &mut ws);
+                gemm::matmul_into(&ht, &s, &mut gh, &mut scratch.ws);
                 gh.axpy(-1.0, &at); // ∇H = Ht·S − At
                 let pgh = stopping::projected_gradient_norm_sq(&ht, &gh);
                 let pg = pgh + pgw_prev.take().unwrap_or(0.0);
@@ -227,26 +290,48 @@ impl Hals {
                 }
             }
 
-            let ord = order.next_order(&mut rng);
-            sweep_factor(&mut ht, &at, &s, o.reg_h, ord, true);
+            scratch.order.advance(&mut rng);
+            sweep_factor(&mut ht, &at, &s, o.reg_h, scratch.order.order(), true);
 
-            gemm::gram_into(&ht, &mut v, &mut ws); // k×k  HHᵀ
-            gemm::matmul_into(x, &ht, &mut t, &mut ws); // m×k  XHᵀ
-            let ord = order.next_order(&mut rng);
-            sweep_factor(&mut w, &t, &v, o.reg_w, ord, true);
+            gemm::gram_into(&ht, &mut v, &mut scratch.ws); // k×k  HHᵀ
+            // m×k  XHᵀ: dense packed GEMM or the CSR row-split kernel.
+            sparse::input_matmul_into(x, &ht, &mut t, &mut scratch.ws);
+            scratch.order.advance(&mut rng);
+            sweep_factor(&mut w, &t, &v, o.reg_w, scratch.order.order(), true);
 
             if want_pg {
-                gemm::matmul_into(&w, &v, &mut gw, &mut ws);
+                gemm::matmul_into(&w, &v, &mut gw, &mut scratch.ws);
                 gw.axpy(-1.0, &t);
                 pgw_prev = Some(stopping::projected_gradient_norm_sq(&w, &gw));
             }
             iters = iter;
         }
 
-        let h = ht.transpose();
+        // Build the model: H = Htᵀ into workspace-drawn storage.
+        let mut h = scratch.ws.acquire_mat(k, n);
+        ht.transpose_into(&mut h);
+        scratch.ws.release_mat(ht);
         let model = NmfModel { w, h };
-        let final_rel_err = model.relative_error(x);
+        let final_rel_err = match x {
+            NmfInput::Dense(xd) => {
+                norms::relative_error_with(xd, &model.w, &model.h, &mut scratch.ws)
+            }
+            _ => norms::relative_error_csr_with(
+                x.csr().expect("sparse input has CSR storage"),
+                &model.w,
+                &model.h,
+                &mut scratch.ws,
+            ),
+        };
         debug_assert!(model.w.is_nonneg() && model.h.is_nonneg());
+
+        // Return all per-solve scratch to the pool.
+        scratch.ws.release_mat(gw);
+        scratch.ws.release_mat(gh);
+        scratch.ws.release_mat(t);
+        scratch.ws.release_mat(v);
+        scratch.ws.release_mat(at);
+        scratch.ws.release_mat(s);
         Ok(NmfFit {
             model,
             iters,
@@ -356,6 +441,9 @@ impl Hals {
 
 impl NmfSolver for Hals {
     fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        Hals::fit(self, x)
+    }
+    fn fit_input(&self, x: NmfInput<'_>) -> Result<NmfFit> {
         Hals::fit(self, x)
     }
     fn name(&self) -> &'static str {
@@ -524,6 +612,77 @@ mod tests {
             svd.final_rel_err,
             rand.final_rel_err
         );
+    }
+
+    #[test]
+    fn sparse_fit_matches_densified_bitwise_sub_kc() {
+        // Single-threaded sub-KC shapes: identical RNG draws, identical
+        // ascending-inner-index numerator accumulation with exact zeros
+        // omitted — the sparse deterministic fit must reproduce the
+        // densified fit bit for bit, for CSR-only and dual storage.
+        let mut rng = Pcg64::seed_from_u64(50);
+        let dense = rng.uniform_mat(60, 40).map(|v| if v < 0.75 { 0.0 } else { v });
+        let csr = crate::linalg::sparse::CsrMat::from_dense(&dense);
+        let dual = crate::linalg::sparse::SparseMat::from_dense(&dense);
+        for order in [UpdateOrder::BlockedCyclic, UpdateOrder::Shuffled] {
+            let solver = Hals::new(
+                NmfOptions::new(3)
+                    .with_max_iter(25)
+                    .with_tol(0.0)
+                    .with_seed(51)
+                    .with_update_order(order),
+            );
+            let fd = solver.fit(&dense).unwrap();
+            let fs = solver.fit(&csr).unwrap();
+            let fu = solver.fit(&dual).unwrap();
+            assert_eq!(fs.model.w, fd.model.w, "{order:?}: CSR W differs");
+            assert_eq!(fs.model.h, fd.model.h, "{order:?}: CSR H differs");
+            assert_eq!(fu.model.w, fd.model.w, "{order:?}: dual W differs");
+            assert_eq!(fu.model.h, fd.model.h, "{order:?}: dual H differs");
+            // The error scalar's cross term sums in a different order on
+            // the CSR epilogue; factors bitwise equal, scalar to roundoff.
+            assert!((fs.final_rel_err - fd.final_rel_err).abs() < 1e-10);
+            assert!((fu.final_rel_err - fd.final_rel_err).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn sparse_fit_with_warm_refit_recycles() {
+        let mut rng = Pcg64::seed_from_u64(52);
+        let x = crate::data::synthetic::sparse_low_rank(90, 60, 4, 0.1, &mut rng);
+        let dual = crate::linalg::sparse::SparseMat::new(x);
+        let solver =
+            Hals::new(NmfOptions::new(4).with_max_iter(20).with_tol(0.0).with_seed(53));
+        let mut scratch = HalsScratch::new();
+        let f1 = solver.fit_with(&dual, &mut scratch).unwrap();
+        let (w1, h1) = (f1.model.w.clone(), f1.model.h.clone());
+        assert!(w1.is_nonneg() && h1.is_nonneg());
+        f1.recycle(&mut scratch.ws);
+        let f2 = solver.fit_with(&dual, &mut scratch).unwrap();
+        assert_eq!(f2.model.w, w1, "warm sparse refit must be bit-identical");
+        assert_eq!(f2.model.h, h1);
+        f2.recycle(&mut scratch.ws);
+        let pooled = scratch.ws.pooled();
+        let f3 = solver.fit_with(&dual, &mut scratch).unwrap();
+        f3.recycle(&mut scratch.ws);
+        assert_eq!(scratch.ws.pooled(), pooled, "warm sparse fit grew the pool");
+    }
+
+    #[test]
+    fn sparse_rejects_interleaved_and_nndsvd() {
+        let mut rng = Pcg64::seed_from_u64(54);
+        let x = crate::data::synthetic::sparse_low_rank(20, 15, 2, 0.3, &mut rng);
+        let interleaved = Hals::new(
+            NmfOptions::new(2).with_update_order(UpdateOrder::InterleavedCyclic),
+        )
+        .fit(&x);
+        assert!(interleaved.is_err(), "interleaved order must reject sparse input");
+        let nndsvd =
+            Hals::new(NmfOptions::new(2).with_init(Init::NndsvdA)).fit(&x);
+        assert!(nndsvd.is_err(), "NNDSVD init must reject sparse input");
+        // Dense input with the same options still works.
+        let d = x.to_dense();
+        assert!(Hals::new(NmfOptions::new(2).with_init(Init::NndsvdA)).fit(&d).is_ok());
     }
 
     #[test]

@@ -62,6 +62,42 @@ pub fn initialize_with(
     }
 }
 
+/// [`initialize_with`] for a dense-or-sparse [`NmfInput`] — the entry
+/// point of the deterministic solvers' sparse path.
+///
+/// `Init::Random` needs only the data mean, which every representation
+/// provides in `O(nnz)`, and draws in the same order as the dense path
+/// (so a sparse fit reproduces the densified fit's initialization
+/// bit for bit). The NNDSVD kinds run an SVD over the *dense* data;
+/// honoring them on sparse input would densify an `m×n` buffer, which
+/// the sparse path forbids — they are rejected with an error (use
+/// `Init::Random`, or the randomized solver, whose NNDSVD variant works
+/// from the compressed factors and never touches `X`).
+pub fn initialize_input_with(
+    x: crate::linalg::sparse::NmfInput<'_>,
+    opts: &NmfOptions,
+    rng: &mut Pcg64,
+    ws: &mut Workspace,
+) -> anyhow::Result<(Mat, Mat)> {
+    use crate::linalg::sparse::NmfInput;
+    match x {
+        NmfInput::Dense(d) => Ok(initialize_with(d, opts, rng, ws)),
+        sparse => {
+            // Single source of truth for the sparse-path constraint (the
+            // solvers check it up front; this guards direct callers).
+            opts.validate_sparse()?;
+            let (m, n) = sparse.shape();
+            let k = opts.rank;
+            let len = m as f64 * n as f64;
+            let mean = if len == 0.0 { 0.0 } else { sparse.sum() / len };
+            let avg = (mean.max(0.0) / k as f64).sqrt().max(1e-6);
+            let w = random_factor(m, k, avg, rng, ws);
+            let ht = random_factor(n, k, avg, rng, ws);
+            Ok((w, ht))
+        }
+    }
+}
+
 /// Initialize `(W : m×k, Ht : n×k)` for the randomized solver from the QB
 /// factors (never touches `X` beyond its mean).
 pub fn initialize_from_qb(

@@ -26,12 +26,23 @@
 //! `WᵀW`/`HHᵀ`) and in-place sweeps, so steady-state iterations perform
 //! zero heap allocations at any thread count — enforced by
 //! `tests/test_zero_alloc.rs` (single-threaded) and
-//! `tests/test_zero_alloc_pool.rs` (persistent-pool path). The
-//! randomized solvers additionally expose `fit_with` entry points
+//! `tests/test_zero_alloc_pool.rs` (persistent-pool path). Every
+//! first-class solver exposes a `fit_with` entry point
 //! ([`rhals::RandomizedHals::fit_with`] with a reusable
-//! [`rhals::RhalsScratch`], [`compressed_mu::CompressedMu::fit_with`])
-//! that draw *everything* — compression stage, factors, epilogue — from
-//! caller-owned scratch, making warm fits allocation-free end to end.
+//! [`rhals::RhalsScratch`], [`hals::Hals::fit_with`] with a
+//! [`hals::HalsScratch`], [`mu::Mu::fit_with`] with a [`mu::MuScratch`],
+//! [`compressed_mu::CompressedMu::fit_with`]) that draws *everything* —
+//! factors, products, epilogue, and for the randomized solvers the
+//! compression stage — from caller-owned scratch, making warm fits
+//! allocation-free end to end.
+//!
+//! Deterministic HALS and MU (and randomized HALS) accept sparse input
+//! via [`crate::linalg::sparse::NmfInput`]: the dominant `XHᵀ`/`XᵀW`
+//! numerators run on the `O(nnz·k)` CSR/CSC kernels (cf. Gillis &
+//! Glineur on where deterministic HALS spends its time) and nothing of
+//! size `m×n` is ever materialized. [`solver::NmfSolver::fit_input`] is
+//! the trait-object entry point; solvers without a sparse path refuse
+//! rather than densify.
 
 pub mod compressed_mu;
 pub mod hals;

@@ -15,6 +15,7 @@ use anyhow::Result;
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::norms;
+use crate::linalg::sparse::{self, NmfInput};
 use crate::linalg::workspace::Workspace;
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
@@ -24,6 +25,21 @@ use crate::nmf::stopping;
 
 /// Division guard: denominators are clamped to this.
 const MU_EPS: f64 = 1e-12;
+
+/// Reusable cross-fit scratch for [`Mu::fit_with`]: the [`Workspace`]
+/// buffer pool every matrix of the fit is drawn from. Keep one alive
+/// across fits and a warm fit — dense or sparse — allocates nothing.
+#[derive(Default)]
+pub struct MuScratch {
+    /// The buffer pool every matrix of the fit is drawn from.
+    pub ws: Workspace,
+}
+
+impl MuScratch {
+    pub fn new() -> Self {
+        MuScratch { ws: Workspace::new() }
+    }
+}
 
 /// Multiplicative-updates solver.
 pub struct Mu {
@@ -35,19 +51,47 @@ impl Mu {
         Mu { opts }
     }
 
-    pub fn fit(&self, x: &Mat) -> Result<NmfFit> {
+    /// Run the factorization (allocating convenience wrapper over
+    /// [`Mu::fit_with`] with a throwaway scratch). Accepts dense
+    /// (`&Mat`), sparse CSR (`&CsrMat`), or dual-storage sparse
+    /// (`&SparseMat`) input via [`NmfInput`].
+    pub fn fit<'a>(&self, x: impl Into<NmfInput<'a>>) -> Result<NmfFit> {
+        self.fit_with(x, &mut MuScratch::new())
+    }
+
+    /// The full fit with every buffer — factors included — drawn from
+    /// `scratch` (recycle finished fits with
+    /// [`NmfFit::recycle`](crate::nmf::model::NmfFit::recycle); a warm
+    /// fit performs zero heap allocations in both thread regimes, pinned
+    /// by the counting-allocator suites).
+    ///
+    /// On sparse input the MU numerators `XᵀW` / `XHᵀ` run on the
+    /// `O(nnz·k)` kernels — CSC row split (dual storage) or CSR scatter
+    /// for the transpose side, CSR row split for `XHᵀ` — and nothing of
+    /// size `m×n` is ever materialized; the denominators (`Ht·S`, `W·V`)
+    /// only ever touch the `k`-width factors. Requires `Init::Random`
+    /// for sparse input ([`NmfOptions::validate_sparse`]).
+    pub fn fit_with<'a>(
+        &self,
+        x: impl Into<NmfInput<'a>>,
+        scratch: &mut MuScratch,
+    ) -> Result<NmfFit> {
+        let x = x.into();
         let o = &self.opts;
         let (m, n) = x.shape();
         o.validate(m, n)?;
+        if x.is_sparse() {
+            o.validate_sparse()?;
+        }
         let start = Instant::now();
         let mut rng = crate::linalg::rng::Pcg64::seed_from_u64(o.seed);
-        let (mut w, mut ht) = init::initialize(x, o, &mut rng);
+        let (mut w, mut ht) = init::initialize_input_with(x, o, &mut rng, &mut scratch.ws)?;
         // MU cannot escape exact zeros — nudge them (standard practice).
         let floor = 1e-12;
         w.map_inplace(|v| v.max(floor));
         ht.map_inplace(|v| v.max(floor));
 
-        let x_norm_sq = norms::fro_norm_sq(x);
+        let x_norm_sq = x.fro_norm_sq();
         let want_pg = o.tol > 0.0 || o.trace_every > 0;
         let mut trace = Vec::new();
         let mut pg0: Option<f64> = None;
@@ -57,31 +101,31 @@ impl Mu {
 
         // Per-solve buffers: the iteration loop below never allocates.
         let k = o.rank;
-        let mut ws = Workspace::new();
-        let mut s = Mat::zeros(k, k); // WᵀW
-        let mut at = Mat::zeros(n, k); // XᵀW
-        let mut v = Mat::zeros(k, k); // HHᵀ
-        let mut t = Mat::zeros(m, k); // XHᵀ
-        let mut denom_h = Mat::zeros(n, k);
-        let mut denom_w = Mat::zeros(m, k);
+        let mut s = scratch.ws.acquire_mat(k, k); // WᵀW
+        let mut at = scratch.ws.acquire_mat(n, k); // XᵀW
+        let mut v = scratch.ws.acquire_mat(k, k); // HHᵀ
+        let mut t = scratch.ws.acquire_mat(m, k); // XHᵀ
+        let mut denom_h = scratch.ws.acquire_mat(n, k);
+        let mut denom_w = scratch.ws.acquire_mat(m, k);
         let (mut gh, mut gw) = if want_pg {
-            (Mat::zeros(n, k), Mat::zeros(m, k))
+            (scratch.ws.acquire_mat(n, k), scratch.ws.acquire_mat(m, k))
         } else {
-            (Mat::zeros(0, 0), Mat::zeros(0, 0))
+            (scratch.ws.acquire_mat(0, 0), scratch.ws.acquire_mat(0, 0))
         };
 
         for iter in 1..=o.max_iter {
-            gemm::gram_into(&w, &mut s, &mut ws); // k×k
-            gemm::at_b_into(x, &w, &mut at, &mut ws); // n×k  XᵀW
+            gemm::gram_into(&w, &mut s, &mut scratch.ws); // k×k
+            // n×k  XᵀW: dense at_b / CSC row split / CSR scatter.
+            sparse::input_at_b_into(x, &w, &mut at, &mut scratch.ws);
 
             if want_pg {
-                gemm::matmul_into(&ht, &s, &mut gh, &mut ws);
+                gemm::matmul_into(&ht, &s, &mut gh, &mut scratch.ws);
                 gh.axpy(-1.0, &at); // ∇H = Ht·S − At
                 let pgh = stopping::projected_gradient_norm_sq(&ht, &gh);
                 // W-side gradient with current quantities.
-                gemm::gram_into(&ht, &mut v, &mut ws);
-                gemm::matmul_into(x, &ht, &mut t, &mut ws);
-                gemm::matmul_into(&w, &v, &mut gw, &mut ws);
+                gemm::gram_into(&ht, &mut v, &mut scratch.ws);
+                sparse::input_matmul_into(x, &ht, &mut t, &mut scratch.ws);
+                gemm::matmul_into(&w, &v, &mut gw, &mut scratch.ws);
                 gw.axpy(-1.0, &t); // ∇W = W·V − T
                 let pgw = stopping::projected_gradient_norm_sq(&w, &gw);
                 let pg = pgh + pgw;
@@ -103,20 +147,45 @@ impl Mu {
             }
 
             // H ← H ∘ At ⊘ (Ht·S)
-            gemm::matmul_into(&ht, &s, &mut denom_h, &mut ws);
+            gemm::matmul_into(&ht, &s, &mut denom_h, &mut scratch.ws);
             mu_update(&mut ht, &at, &denom_h);
 
             // W ← W ∘ T ⊘ (W·V)
-            gemm::gram_into(&ht, &mut v, &mut ws);
-            gemm::matmul_into(x, &ht, &mut t, &mut ws);
-            gemm::matmul_into(&w, &v, &mut denom_w, &mut ws);
+            gemm::gram_into(&ht, &mut v, &mut scratch.ws);
+            // m×k  XHᵀ: dense packed GEMM or the CSR row-split kernel.
+            sparse::input_matmul_into(x, &ht, &mut t, &mut scratch.ws);
+            gemm::matmul_into(&w, &v, &mut denom_w, &mut scratch.ws);
             mu_update(&mut w, &t, &denom_w);
 
             iters = iter;
         }
 
-        let model = NmfModel { w, h: ht.transpose() };
-        let final_rel_err = model.relative_error(x);
+        // Build the model: H = Htᵀ into workspace-drawn storage.
+        let mut h = scratch.ws.acquire_mat(k, n);
+        ht.transpose_into(&mut h);
+        scratch.ws.release_mat(ht);
+        let model = NmfModel { w, h };
+        let final_rel_err = match x {
+            NmfInput::Dense(xd) => {
+                norms::relative_error_with(xd, &model.w, &model.h, &mut scratch.ws)
+            }
+            _ => norms::relative_error_csr_with(
+                x.csr().expect("sparse input has CSR storage"),
+                &model.w,
+                &model.h,
+                &mut scratch.ws,
+            ),
+        };
+
+        // Return all per-solve scratch to the pool.
+        scratch.ws.release_mat(gw);
+        scratch.ws.release_mat(gh);
+        scratch.ws.release_mat(denom_w);
+        scratch.ws.release_mat(denom_h);
+        scratch.ws.release_mat(t);
+        scratch.ws.release_mat(v);
+        scratch.ws.release_mat(at);
+        scratch.ws.release_mat(s);
         Ok(NmfFit {
             model,
             iters,
@@ -148,6 +217,9 @@ pub(crate) fn mu_update(fac: &mut Mat, num: &Mat, denom: &Mat) {
 
 impl NmfSolver for Mu {
     fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        Mu::fit(self, x)
+    }
+    fn fit_input(&self, x: NmfInput<'_>) -> Result<NmfFit> {
         Mu::fit(self, x)
     }
     fn name(&self) -> &'static str {
@@ -209,5 +281,46 @@ mod tests {
         let x = low_rank(40, 30, 2, 7);
         let fit = Mu::new(NmfOptions::new(2).with_max_iter(2000).with_seed(8)).fit(&x).unwrap();
         assert!(fit.final_rel_err < 1e-2, "err={}", fit.final_rel_err);
+    }
+
+    #[test]
+    fn mu_sparse_fit_matches_densified_bitwise_sub_kc() {
+        // Same contract as the HALS twin: identical draws + identical
+        // ascending-inner accumulation with zeros omitted → the sparse MU
+        // fit reproduces the densified fit bit for bit on these shapes.
+        let mut rng = Pcg64::seed_from_u64(20);
+        let dense = rng.uniform_mat(50, 35).map(|v| if v < 0.75 { 0.0 } else { v });
+        let csr = crate::linalg::sparse::CsrMat::from_dense(&dense);
+        let dual = crate::linalg::sparse::SparseMat::from_dense(&dense);
+        let solver = Mu::new(NmfOptions::new(3).with_max_iter(30).with_tol(0.0).with_seed(21));
+        let fd = solver.fit(&dense).unwrap();
+        let fs = solver.fit(&csr).unwrap();
+        let fu = solver.fit(&dual).unwrap();
+        assert_eq!(fs.model.w, fd.model.w, "CSR MU W differs from densified");
+        assert_eq!(fs.model.h, fd.model.h, "CSR MU H differs from densified");
+        assert_eq!(fu.model.w, fd.model.w, "dual MU W differs from densified");
+        assert_eq!(fu.model.h, fd.model.h, "dual MU H differs from densified");
+        assert!((fs.final_rel_err - fd.final_rel_err).abs() < 1e-10);
+    }
+
+    #[test]
+    fn mu_sparse_warm_refit_recycles() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let x = crate::data::synthetic::sparse_low_rank(70, 50, 3, 0.15, &mut rng);
+        let dual = crate::linalg::sparse::SparseMat::new(x);
+        let solver = Mu::new(NmfOptions::new(3).with_max_iter(15).with_tol(0.0).with_seed(23));
+        let mut scratch = MuScratch::new();
+        let f1 = solver.fit_with(&dual, &mut scratch).unwrap();
+        let (w1, h1) = (f1.model.w.clone(), f1.model.h.clone());
+        assert!(w1.is_nonneg() && h1.is_nonneg());
+        f1.recycle(&mut scratch.ws);
+        let f2 = solver.fit_with(&dual, &mut scratch).unwrap();
+        assert_eq!(f2.model.w, w1, "warm sparse MU refit must be bit-identical");
+        assert_eq!(f2.model.h, h1);
+        f2.recycle(&mut scratch.ws);
+        let pooled = scratch.ws.pooled();
+        let f3 = solver.fit_with(&dual, &mut scratch).unwrap();
+        f3.recycle(&mut scratch.ws);
+        assert_eq!(scratch.ws.pooled(), pooled, "warm sparse MU fit grew the pool");
     }
 }

@@ -221,6 +221,24 @@ impl NmfOptions {
         }
         Ok(())
     }
+
+    /// Additional constraints the *deterministic* solvers enforce on
+    /// sparse ([`crate::linalg::sparse::NmfInput`]) input, on top of
+    /// [`NmfOptions::validate`]: the NNDSVD initializations run an SVD
+    /// over the dense data, so honoring them would densify an `m×n`
+    /// buffer — exactly what the sparse path promises never to do.
+    /// (The randomized solver is exempt: its NNDSVD variant works from
+    /// the compressed QB factors and never touches `X`.)
+    pub fn validate_sparse(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.init == Init::Random,
+            "{} init requires dense input (it runs an SVD over the dense data); \
+             use Init::Random for sparse deterministic fits, or the randomized \
+             solver whose NNDSVD works from the compressed factors",
+            self.init.name()
+        );
+        Ok(())
+    }
 }
 
 #[cfg(test)]

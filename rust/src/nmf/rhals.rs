@@ -102,12 +102,15 @@ impl RandomizedHals {
     /// drawn from `scratch`. See the module docs for the zero-allocation
     /// contract; results are identical to [`RandomizedHals::fit`].
     ///
-    /// Accepts dense (`&Mat`) or sparse CSR
-    /// (`&`[`CsrMat`](crate::linalg::sparse::CsrMat)) input via
-    /// [`NmfInput`]. On sparse input the compression stage and the exact
-    /// final-error epilogue both run on the `O(nnz·l)` CSR kernels —
-    /// nothing of size `m×n` is ever allocated, and a warm fit is still
-    /// zero-allocation (asserted by `tests/test_zero_alloc{,_pool}.rs`).
+    /// Accepts dense (`&Mat`), sparse CSR
+    /// (`&`[`CsrMat`](crate::linalg::sparse::CsrMat)), or dual-storage
+    /// sparse (`&`[`SparseMat`](crate::linalg::sparse::SparseMat)) input
+    /// via [`NmfInput`]. On sparse input the compression stage and the
+    /// exact final-error epilogue both run on the `O(nnz·l)` sparse
+    /// kernels — dual storage routes the transpose-side passes through
+    /// the CSC mirror's reduce-free row split — nothing of size `m×n` is
+    /// ever allocated, and a warm fit is still zero-allocation (asserted
+    /// by `tests/test_zero_alloc{,_pool}.rs`).
     pub fn fit_with<'a>(
         &self,
         x: impl Into<NmfInput<'a>>,
@@ -155,6 +158,12 @@ impl RandomizedHals {
             NmfInput::Sparse(xs) => {
                 norms::relative_error_csr_with(xs, &state.model.w, &state.model.h, &mut scratch.ws)
             }
+            NmfInput::SparseDual(xs) => norms::relative_error_csr_with(
+                xs.csr(),
+                &state.model.w,
+                &state.model.h,
+                &mut scratch.ws,
+            ),
         };
         factors.recycle(&mut scratch.ws);
         Ok(state)
@@ -485,6 +494,9 @@ fn apply_l1_shrink_and_clamp(
 impl NmfSolver for RandomizedHals {
     fn fit(&self, x: &Mat) -> Result<NmfFit> {
         RandomizedHals::fit(self, x)
+    }
+    fn fit_input(&self, x: NmfInput<'_>) -> Result<NmfFit> {
+        self.fit_with(x, &mut RhalsScratch::new())
     }
     fn name(&self) -> &'static str {
         "rhals"

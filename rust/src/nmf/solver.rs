@@ -7,6 +7,7 @@
 use anyhow::Result;
 
 use crate::linalg::mat::Mat;
+use crate::linalg::sparse::NmfInput;
 use crate::nmf::model::NmfFit;
 
 /// A nonnegative matrix factorization algorithm.
@@ -17,6 +18,25 @@ use crate::nmf::model::NmfFit;
 pub trait NmfSolver {
     /// Factorize `x ≈ W·H` per the solver's configuration.
     fn fit(&self, x: &Mat) -> Result<NmfFit>;
+
+    /// Dense-or-sparse entry point. Solvers with a native sparse path —
+    /// deterministic HALS and MU (sparse numerators), randomized HALS
+    /// (sparse compression) — override this to route
+    /// [`NmfInput::Sparse`] / [`NmfInput::SparseDual`] through their
+    /// `O(nnz·k)` kernels. The default handles dense input and returns
+    /// an error on sparse rather than silently densifying an `m×n`
+    /// buffer behind the caller's back.
+    fn fit_input(&self, x: NmfInput<'_>) -> Result<NmfFit> {
+        match x {
+            NmfInput::Dense(d) => self.fit(d),
+            _ => anyhow::bail!(
+                "{}: no native sparse input path (densify explicitly, or use \
+                 hals/mu/rhals which have one)",
+                self.name()
+            ),
+        }
+    }
+
     /// Short identifier used in metrics and bench tables.
     fn name(&self) -> &'static str;
 }
@@ -47,5 +67,38 @@ mod tests {
         let set = paper_comparison_set(NmfOptions::new(4), 100);
         let names: Vec<&str> = set.iter().map(|s| s.name()).collect();
         assert_eq!(names, vec!["hals", "rhals", "compressed-mu"]);
+    }
+
+    #[test]
+    fn fit_input_sparse_dispatch_through_trait_objects() {
+        use crate::linalg::rng::Pcg64;
+        let mut rng = Pcg64::seed_from_u64(1);
+        let xs = crate::data::synthetic::sparse_low_rank(40, 30, 3, 0.2, &mut rng);
+        let opts = NmfOptions::new(3).with_max_iter(10).with_tol(0.0).with_seed(2);
+        // HALS, MU, and rHALS all route sparse input through their native
+        // paths behind the trait; the default impl refuses to densify.
+        let solvers: Vec<Box<dyn NmfSolver>> = vec![
+            Box::new(crate::nmf::hals::Hals::new(opts.clone())),
+            Box::new(crate::nmf::mu::Mu::new(opts.clone())),
+            Box::new(crate::nmf::rhals::RandomizedHals::new(opts.clone())),
+        ];
+        for s in &solvers {
+            let fit = s.fit_input(NmfInput::Sparse(&xs)).unwrap();
+            assert!(fit.model.w.is_nonneg(), "{}: W negative", s.name());
+            assert!(fit.final_rel_err.is_finite(), "{}: bad error", s.name());
+        }
+        // A solver without a sparse path errors instead of densifying.
+        struct DenseOnly;
+        impl NmfSolver for DenseOnly {
+            fn fit(&self, x: &Mat) -> Result<NmfFit> {
+                crate::nmf::hals::Hals::new(NmfOptions::new(2).with_max_iter(1)).fit(x)
+            }
+            fn name(&self) -> &'static str {
+                "dense-only"
+            }
+        }
+        assert!(DenseOnly.fit_input(NmfInput::Sparse(&xs)).is_err());
+        let xd = xs.to_dense();
+        assert!(DenseOnly.fit_input(NmfInput::Dense(&xd)).is_ok());
     }
 }

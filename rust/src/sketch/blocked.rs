@@ -35,6 +35,22 @@
 //! * **Structured sketches stream too** — [`SketchKind::SparseSign`]
 //!   applies `Ω` per chunk without ever materializing it, so the pass-1
 //!   cost drops from `O(m·n·l)` to `O(m·n·nnz)`.
+//!
+//! ## Sparse out-of-core
+//!
+//! The sparse analogue abstracts the data behind
+//! [`SparseColumnBlockSource`], which hands back CSC column blocks in a
+//! reusable [`CscBlock`] buffer: [`qb_blocked_sparse_with`] runs the
+//! same `2 + 2q`-pass algorithm over the **same fixed absolute
+//! [`COMPUTE_COLS`] chunk grid**, but every per-chunk product streams
+//! the chunk's stored entries — `O(nnz)` I/O and `O(nnz·l)` compute per
+//! pass instead of `O(m·n)` / `O(m·n·l)`. Per-element accumulation
+//! order (ascending absolute column, ascending row within a column,
+//! exact zeros omitted) matches the dense chunk engine, so for a fixed
+//! seed the factors are bit-identical across block sizes, and when
+//! `n ≤ COMPUTE_COLS` they are bit-identical to the in-memory sparse
+//! [`super::qb::qb_into`]. Sources: [`CscSource`] (in-memory oracle) and
+//! [`crate::data::store::SparseNmfStore`] (the on-disk CSC-slab store).
 
 use anyhow::Result;
 
@@ -46,6 +62,7 @@ use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
 use crate::linalg::qr::orthonormalize_into;
 use crate::linalg::rng::Pcg64;
+use crate::linalg::sparse::CscMat;
 use crate::linalg::workspace::Workspace;
 
 /// Width of the fixed absolute column chunks all blocked compute runs
@@ -313,8 +330,341 @@ pub fn qb_blocked_with(
 
 /// Number of full passes over the data this configuration performs
 /// (reported by the out-of-core bench; the paper's pass-efficiency claim).
+/// Dense and sparse engines share the pass structure.
 pub fn pass_count(power_iters: usize) -> usize {
     2 + 2 * power_iters
+}
+
+// ---------------------------------------------------------------------------
+// Sparse out-of-core: CSC column-block streaming.
+// ---------------------------------------------------------------------------
+
+/// A reusable CSC column-block buffer — the sparse analogue of the dense
+/// engine's `read_block_into` staging [`Mat`]. Columns are appended by
+/// the source ([`CscBlock::push_col`] / [`CscBlock::push_col_with`]) and
+/// cleared between chunks; all three backing vectors keep their
+/// capacity, so a warm streaming pass performs zero heap allocations.
+pub struct CscBlock {
+    ncols: usize,
+    colptr: Vec<usize>,
+    rows: Vec<usize>,
+    vals: Vec<f64>,
+}
+
+impl Default for CscBlock {
+    fn default() -> Self {
+        CscBlock::new()
+    }
+}
+
+impl CscBlock {
+    pub fn new() -> Self {
+        CscBlock { ncols: 0, colptr: vec![0], rows: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Reset to zero columns, keeping every capacity.
+    pub fn clear(&mut self) {
+        self.ncols = 0;
+        self.colptr.clear();
+        self.colptr.push(0);
+        self.rows.clear();
+        self.vals.clear();
+    }
+
+    /// Append one column given its `(row indices, values)` (rows strictly
+    /// ascending — the [`CscMat`] invariant; debug-asserted).
+    pub fn push_col(&mut self, rows: &[usize], vals: &[f64]) {
+        debug_assert_eq!(rows.len(), vals.len(), "push_col: length mismatch");
+        debug_assert!(rows.windows(2).all(|w| w[0] < w[1]), "push_col: rows must ascend");
+        self.rows.extend_from_slice(rows);
+        self.vals.extend_from_slice(vals);
+        self.ncols += 1;
+        self.colptr.push(self.rows.len());
+    }
+
+    /// Append one column of `n` entries produced by `f(t) -> (row, val)`
+    /// in ascending-row order — the streaming twin of
+    /// [`CscBlock::push_col`], used by the on-disk store's decoder so no
+    /// intermediate slices are materialized.
+    pub fn push_col_with(&mut self, n: usize, mut f: impl FnMut(usize) -> (usize, f64)) {
+        for t in 0..n {
+            let (i, v) = f(t);
+            debug_assert!(
+                self.colptr[self.ncols] + t == self.rows.len()
+                    && (t == 0 || *self.rows.last().unwrap() < i),
+                "push_col_with: rows must ascend"
+            );
+            self.rows.push(i);
+            self.vals.push(v);
+        }
+        self.ncols += 1;
+        self.colptr.push(self.rows.len());
+    }
+
+    /// Number of columns currently held.
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Stored entries currently held.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Column `j`'s `(row indices, values)`, rows strictly ascending.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.colptr[j], self.colptr[j + 1]);
+        (&self.rows[lo..hi], &self.vals[lo..hi])
+    }
+}
+
+/// A sparse matrix readable one CSC column block at a time — the sparse
+/// analogue of [`ColumnBlockSource`]. Reads **append** columns
+/// `[j0, j1)` to the caller's reusable [`CscBlock`] (the driver clears
+/// between chunks), so one compute chunk can be assembled from several
+/// budget-bounded reads without the source ever allocating.
+pub trait SparseColumnBlockSource {
+    /// Number of rows `m`.
+    fn rows(&self) -> usize;
+    /// Number of columns `n`.
+    fn cols(&self) -> usize;
+    /// Total stored entries (diagnostics; lets drivers report `O(nnz)`
+    /// I/O volumes).
+    fn nnz(&self) -> usize;
+    /// Append columns `[j0, j1)` to `out`.
+    fn read_block_into(&self, j0: usize, j1: usize, out: &mut CscBlock) -> Result<()>;
+}
+
+/// In-memory adapter so any [`CscMat`] is a [`SparseColumnBlockSource`]
+/// (test oracle and small-data convenience — the sparse [`MatSource`]).
+pub struct CscSource<'a>(pub &'a CscMat);
+
+impl SparseColumnBlockSource for CscSource<'_> {
+    fn rows(&self) -> usize {
+        self.0.rows()
+    }
+    fn cols(&self) -> usize {
+        self.0.cols()
+    }
+    fn nnz(&self) -> usize {
+        self.0.nnz()
+    }
+    fn read_block_into(&self, j0: usize, j1: usize, out: &mut CscBlock) -> Result<()> {
+        anyhow::ensure!(j0 <= j1 && j1 <= self.0.cols(), "bad column range {j0}..{j1}");
+        for j in j0..j1 {
+            let (is, vs) = self.0.col(j);
+            out.push_col(is, vs);
+        }
+        Ok(())
+    }
+}
+
+/// Run `f(c0, block)` over the fixed [`COMPUTE_COLS`]-wide absolute
+/// column chunks of a sparse source — one full pass. Each chunk is
+/// assembled from reads of at most `block_cols` columns (CSC ranges are
+/// contiguous on every backing store, so unlike the dense path there is
+/// nothing to gain from wider-than-chunk slab reads); the chunk grid —
+/// and therefore every accumulation grouping — is independent of
+/// `block_cols`, which is what buys bit-determinism across block sizes.
+fn for_each_sparse_chunk(
+    src: &dyn SparseColumnBlockSource,
+    block_cols: usize,
+    block: &mut CscBlock,
+    mut f: impl FnMut(usize, &CscBlock) -> Result<()>,
+) -> Result<()> {
+    let n = src.cols();
+    let read_w = block_cols.clamp(1, COMPUTE_COLS);
+    let mut c0 = 0;
+    while c0 < n {
+        let c1 = (c0 + COMPUTE_COLS).min(n);
+        block.clear();
+        let mut s0 = c0;
+        while s0 < c1 {
+            let s1 = (s0 + read_w).min(c1);
+            src.read_block_into(s0, s1, block)?;
+            s0 = s1;
+        }
+        f(c0, block)?;
+        c0 = c1;
+    }
+    Ok(())
+}
+
+/// `Y += X_chunk · Ω[c0.., :]` for a dense `Ω` table: ascending absolute
+/// data column, then ascending row within the column — per output
+/// element this is the dense chunk GEMM's accumulation order with exact
+/// zeros omitted, so single-chunk results bit-match the dense engine.
+fn csc_chunk_sketch_dense(block: &CscBlock, c0: usize, omega: &Mat, y: &mut Mat) {
+    debug_assert_eq!(omega.cols(), y.cols());
+    for j in 0..block.ncols() {
+        let orow = omega.row(c0 + j);
+        let (is, vs) = block.col(j);
+        for (i, v) in is.iter().zip(vs.iter()) {
+            let yrow = y.row_mut(*i);
+            for (yv, ov) in yrow.iter_mut().zip(orow.iter()) {
+                *yv += *v * *ov;
+            }
+        }
+    }
+}
+
+/// `Y += X_chunk · Ω[c0.., :]` for the implicit sparse-sign `Ω` encoded
+/// in `(cols, vals)` tables — `O(nnz_chunk · s)` work, same per-element
+/// order as [`sparse_sketch_apply_block`] with the chunk's zeros omitted.
+fn csc_chunk_sketch_sign(
+    block: &CscBlock,
+    c0: usize,
+    cols: &[f64],
+    vals: &[f64],
+    s: usize,
+    y: &mut Mat,
+) {
+    for j in 0..block.ncols() {
+        let base = (c0 + j) * s;
+        let (is, vs) = block.col(j);
+        for (i, xv) in is.iter().zip(vs.iter()) {
+            let yrow = y.row_mut(*i);
+            for t in 0..s {
+                let col = cols[base + t] as usize;
+                yrow[col] += vals[base + t] * *xv;
+            }
+        }
+    }
+}
+
+/// Rows `[c0, c0 + ncols)` of `Z = XᵀQ`: output row `c0 + j` is the
+/// whole ascending-row accumulation of chunk column `j` — the streaming
+/// twin of [`crate::linalg::sparse::csc_at_b_into`].
+fn csc_chunk_at_b(block: &CscBlock, c0: usize, q: &Mat, z: &mut Mat) {
+    debug_assert_eq!(q.cols(), z.cols());
+    for j in 0..block.ncols() {
+        let zrow = z.row_mut(c0 + j);
+        zrow.fill(0.0);
+        let (is, vs) = block.col(j);
+        for (i, v) in is.iter().zip(vs.iter()) {
+            let qrow = q.row(*i);
+            for (zv, qv) in zrow.iter_mut().zip(qrow.iter()) {
+                *zv += *v * *qv;
+            }
+        }
+    }
+}
+
+/// Out-of-core QB decomposition over a sparse column-block source
+/// (allocating convenience wrapper over [`qb_blocked_sparse_with`]).
+pub fn qb_blocked_sparse(
+    src: &dyn SparseColumnBlockSource,
+    opts: QbOptions,
+    block_cols: usize,
+    rng: &mut Pcg64,
+) -> Result<QbFactors> {
+    qb_blocked_sparse_with(src, opts, block_cols, rng, &mut Workspace::new(), &mut CscBlock::new())
+}
+
+/// Out-of-core QB decomposition over a sparse source: the `2 + 2q`-pass
+/// Algorithm 2 at `O(nnz)` I/O and `O(nnz·l)` compute per pass, factors
+/// and all dense scratch drawn from `ws`, the chunk staging from the
+/// caller's reusable `block` — zero steady-state heap allocations once
+/// both are warm. The RNG draw order matches the dense
+/// [`qb_blocked_with`] and the in-memory [`super::qb::qb_into`] exactly,
+/// and the fixed absolute chunk grid makes the factors bit-identical
+/// across block sizes for a fixed seed; when `n ≤ COMPUTE_COLS` they are
+/// bit-identical to the in-memory sparse decomposition. Recycle the
+/// returned factors with [`QbFactors::recycle`].
+pub fn qb_blocked_sparse_with(
+    src: &dyn SparseColumnBlockSource,
+    opts: QbOptions,
+    block_cols: usize,
+    rng: &mut Pcg64,
+    ws: &mut Workspace,
+    block: &mut CscBlock,
+) -> Result<QbFactors> {
+    let (m, n) = (src.rows(), src.cols());
+    assert!(m > 0 && n > 0, "qb_blocked_sparse: empty input");
+    assert!(block_cols > 0, "qb_blocked_sparse: zero block size");
+    let l = opts.sketch_width(m, n);
+
+    // Sketch tables: identical draw to the dense blocked engine.
+    let mut omega: Option<Mat> = None;
+    let mut sparse_tab: Option<(Vec<f64>, Vec<f64>, usize)> = None;
+    match opts.sketch {
+        SketchKind::Uniform | SketchKind::Gaussian => {
+            let mut om = ws.acquire_mat(n, l);
+            fill_dense_sketch(opts.sketch, rng, &mut om);
+            omega = Some(om);
+        }
+        SketchKind::SparseSign { nnz } => {
+            let s = nnz.clamp(1, l);
+            let mut cols = ws.acquire_vec(n * s);
+            let mut vals = ws.acquire_vec(n * s);
+            fill_sparse_sign(rng, l, s, &mut cols, &mut vals);
+            sparse_tab = Some((cols, vals, s));
+        }
+    }
+
+    // Pass 1: Y = Σ_chunks X_c · Ω_c, streamed over stored entries.
+    let mut y = ws.acquire_mat(m, l);
+    y.as_mut_slice().fill(0.0);
+    for_each_sparse_chunk(src, block_cols, block, |c0, xb| {
+        if let Some(om) = &omega {
+            csc_chunk_sketch_dense(xb, c0, om, &mut y);
+        } else if let Some((cols, vals, s)) = &sparse_tab {
+            csc_chunk_sketch_sign(xb, c0, cols, vals, *s, &mut y);
+        }
+        Ok(())
+    })?;
+
+    let mut q = ws.acquire_mat(m, l);
+
+    // Subspace iterations: each costs two more passes.
+    if opts.power_iters > 0 {
+        let mut z = ws.acquire_mat(n, l);
+        let mut qz = ws.acquire_mat(n, l);
+        for _ in 0..opts.power_iters {
+            orthonormalize_into(&y, &mut q, ws);
+            // Pass: Z = XᵀQ, one output row per streamed column.
+            for_each_sparse_chunk(src, block_cols, block, |c0, xb| {
+                csc_chunk_at_b(xb, c0, &q, &mut z);
+                Ok(())
+            })?;
+            orthonormalize_into(&z, &mut qz, ws);
+            // Pass: Y = X·Qz accumulated chunkwise.
+            y.as_mut_slice().fill(0.0);
+            for_each_sparse_chunk(src, block_cols, block, |c0, xb| {
+                csc_chunk_sketch_dense(xb, c0, &qz, &mut y);
+                Ok(())
+            })?;
+        }
+        ws.release_mat(qz);
+        ws.release_mat(z);
+    }
+
+    orthonormalize_into(&y, &mut q, ws);
+
+    // Final pass: B = QᵀX as (XᵀQ)ᵀ — compute XᵀQ rows chunkwise into a
+    // reusable n×l staging and transpose once (same ascending per-element
+    // accumulation as the in-memory sparse engine, O(n·l) extra traffic).
+    let mut xtq = ws.acquire_mat(n, l);
+    for_each_sparse_chunk(src, block_cols, block, |c0, xb| {
+        csc_chunk_at_b(xb, c0, &q, &mut xtq);
+        Ok(())
+    })?;
+    let mut b = ws.acquire_mat(l, n);
+    xtq.transpose_into(&mut b);
+    ws.release_mat(xtq);
+
+    ws.release_mat(y);
+    if let Some(om) = omega {
+        ws.release_mat(om);
+    }
+    if let Some((cols, vals, _)) = sparse_tab {
+        ws.release_vec(vals);
+        ws.release_vec(cols);
+    }
+    Ok(QbFactors { q, b })
 }
 
 #[cfg(test)]
@@ -414,5 +764,107 @@ mod tests {
     fn pass_count_formula() {
         assert_eq!(pass_count(0), 2);
         assert_eq!(pass_count(2), 6);
+    }
+
+    fn sparse_fixture(m: usize, n: usize, seed: u64) -> (Mat, CscMat) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let dense = rng.uniform_mat(m, n).map(|v| if v < 0.75 { 0.0 } else { v });
+        let csc = CscMat::from_csr(&crate::linalg::sparse::CsrMat::from_dense(&dense));
+        (dense, csc)
+    }
+
+    #[test]
+    fn csc_block_push_and_clear_reuse() {
+        let mut b = CscBlock::new();
+        b.push_col(&[0, 2], &[1.0, 2.0]);
+        b.push_col(&[], &[]);
+        b.push_col_with(2, |t| (t * 3, (t + 1) as f64));
+        assert_eq!(b.ncols(), 3);
+        assert_eq!(b.nnz(), 4);
+        assert_eq!(b.col(0), (&[0usize, 2][..], &[1.0, 2.0][..]));
+        assert_eq!(b.col(1), (&[][..], &[][..]));
+        assert_eq!(b.col(2), (&[0usize, 3][..], &[1.0, 2.0][..]));
+        b.clear();
+        assert_eq!(b.ncols(), 0);
+        assert_eq!(b.nnz(), 0);
+        b.push_col(&[1], &[5.0]);
+        assert_eq!(b.col(0), (&[1usize][..], &[5.0][..]));
+    }
+
+    #[test]
+    fn blocked_sparse_matches_in_memory_sparse_bitwise() {
+        // n ≤ COMPUTE_COLS: one chunk — the streamed engine must equal the
+        // in-memory sparse qb_into bit for bit, for all sketch kinds.
+        let (dense, csc) = sparse_fixture(60, 47, 1);
+        let csr = crate::linalg::sparse::CsrMat::from_dense(&dense);
+        for sketch in [SketchKind::Uniform, SketchKind::Gaussian, SketchKind::sparse_sign()] {
+            let opts =
+                QbOptions::new(5).with_oversample(8).with_power_iters(2).with_sketch(sketch);
+            let l = opts.sketch_width(60, 47);
+            let mut ws = Workspace::new();
+            let (mut qm, mut bm) = (Mat::zeros(60, l), Mat::zeros(l, 47));
+            let mut r1 = Pcg64::seed_from_u64(2);
+            super::super::qb::qb_into(&csr, opts, &mut r1, &mut qm, &mut bm, &mut ws);
+            let mut r2 = Pcg64::seed_from_u64(2);
+            let blk = qb_blocked_sparse(&CscSource(&csc), opts, 10, &mut r2).unwrap();
+            assert_eq!(blk.q, qm, "{sketch:?}: sparse blocked Q != in-memory");
+            assert_eq!(blk.b, bm, "{sketch:?}: sparse blocked B != in-memory");
+            assert!(blk.relative_error(&dense) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn blocked_sparse_bit_deterministic_across_block_sizes() {
+        let (_dense, csc) = sparse_fixture(40, 29, 3);
+        for sketch in [SketchKind::Uniform, SketchKind::sparse_sign()] {
+            let opts =
+                QbOptions::new(4).with_oversample(5).with_power_iters(1).with_sketch(sketch);
+            let mut r_ref = Pcg64::seed_from_u64(4);
+            let reference = qb_blocked_sparse(&CscSource(&csc), opts, 4, &mut r_ref).unwrap();
+            for bs in [1, 2, 3, 6, 9, 29, 64, 600] {
+                let mut rng = Pcg64::seed_from_u64(4);
+                let f = qb_blocked_sparse(&CscSource(&csc), opts, bs, &mut rng).unwrap();
+                assert_eq!(f.q, reference.q, "{sketch:?} bs={bs}: Q differs");
+                assert_eq!(f.b, reference.b, "{sketch:?} bs={bs}: B differs");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_sparse_matches_dense_blocked_same_seed() {
+        // Identical draw order + ascending accumulation with zeros
+        // omitted: the sparse stream reproduces the dense blocked engine
+        // bit for bit on sub-KC shapes.
+        let (dense, csc) = sparse_fixture(35, 24, 5);
+        let opts = QbOptions::new(3).with_oversample(4).with_power_iters(1);
+        let mut r1 = Pcg64::seed_from_u64(6);
+        let mut r2 = Pcg64::seed_from_u64(6);
+        let from_dense = qb_blocked(&MatSource(&dense), opts, 7, &mut r1).unwrap();
+        let from_sparse = qb_blocked_sparse(&CscSource(&csc), opts, 7, &mut r2).unwrap();
+        assert_eq!(from_sparse.q, from_dense.q, "sparse stream Q != dense blocked");
+        assert_eq!(from_sparse.b, from_dense.b, "sparse stream B != dense blocked");
+    }
+
+    #[test]
+    fn blocked_sparse_with_reuses_workspace_bit_identically() {
+        let (_dense, csc) = sparse_fixture(33, 26, 7);
+        let opts = QbOptions::new(3).with_oversample(4).with_power_iters(1);
+        let mut ws = Workspace::new();
+        let mut block = CscBlock::new();
+        let mut r1 = Pcg64::seed_from_u64(8);
+        let f1 =
+            qb_blocked_sparse_with(&CscSource(&csc), opts, 9, &mut r1, &mut ws, &mut block)
+                .unwrap();
+        let (q1, b1) = (f1.q.clone(), f1.b.clone());
+        f1.recycle(&mut ws);
+        let pooled = ws.pooled();
+        let mut r2 = Pcg64::seed_from_u64(8);
+        let f2 =
+            qb_blocked_sparse_with(&CscSource(&csc), opts, 9, &mut r2, &mut ws, &mut block)
+                .unwrap();
+        assert_eq!(f2.q, q1);
+        assert_eq!(f2.b, b1);
+        f2.recycle(&mut ws);
+        assert_eq!(ws.pooled(), pooled, "steady state must not grow the pool");
     }
 }

@@ -26,6 +26,13 @@
 //! * The test matrix is selectable via [`qb::SketchKind`]: dense uniform
 //!   (paper Remark 1) or Gaussian, or a structured sparse-sign/CountSketch
 //!   matrix applied without ever materializing `Ω`.
+//! * Both variants accept sparse input: `qb_into` takes any
+//!   [`crate::linalg::sparse::NmfInput`] (CSR or dual-storage CSR+CSC),
+//!   and [`blocked::qb_blocked_sparse_with`] streams a
+//!   [`blocked::SparseColumnBlockSource`] — e.g. the on-disk CSC-slab
+//!   [`crate::data::store::SparseNmfStore`] — at `O(nnz)` I/O per pass
+//!   over the same fixed absolute chunk grid (same bit-determinism
+//!   across block sizes).
 
 pub mod blocked;
 pub mod qb;

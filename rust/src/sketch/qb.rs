@@ -35,13 +35,16 @@
 //! ## Sparse input
 //!
 //! [`qb_into`] and [`sketch_apply`] accept `impl Into<NmfInput>` — a
-//! dense `&Mat` or a CSR [`crate::linalg::sparse::CsrMat`]. On sparse
-//! input every pass over `X` runs in `O(nnz·l)` on the CSR kernels and
+//! dense `&Mat`, a CSR [`crate::linalg::sparse::CsrMat`], or a
+//! dual-storage [`crate::linalg::sparse::SparseMat`]. On sparse input
+//! every pass over `X` runs in `O(nnz·l)` on the sparse kernels and
 //! nothing of size `m×n` is ever allocated, which is the paper's
 //! compression argument made real for the bag-of-words / recommender
-//! regime where `X` is >99% sparse. Draw order is
-//! representation-independent, so a fixed seed gives the same sketch for
-//! `X` and its densification.
+//! regime where `X` is >99% sparse. Dual-storage input additionally
+//! routes the transpose-side passes (`Z = XᵀQ`, `B = QᵀX`) through the
+//! CSC mirror's reduce-free row split instead of the CSR inner-split
+//! scatter. Draw order is representation-independent, so a fixed seed
+//! gives the same sketch for `X` and its densification.
 //!
 //! ## Test matrices ([`SketchKind`])
 //!
@@ -200,12 +203,14 @@ pub fn qb_with(a: &Mat, opts: QbOptions, rng: &mut Pcg64, ws: &mut Workspace) ->
 /// (`l = opts.sketch_width(m, n)`). Zero heap allocations once the
 /// workspace is warm; deterministic for a fixed seed and thread count.
 ///
-/// Accepts dense (`&Mat`) or sparse CSR (`&CsrMat`) input via
-/// [`NmfInput`]: for sparse data every pass over `X` — the sketch, the
-/// power iterations, and the projection `B = QᵀX` — runs on the
-/// `O(nnz·l)` CSR kernels of [`crate::linalg::sparse`], never
+/// Accepts dense (`&Mat`), sparse CSR (`&CsrMat`), or dual-storage
+/// sparse (`&SparseMat`) input via [`NmfInput`]: for sparse data every
+/// pass over `X` — the sketch, the power iterations, and the projection
+/// `B = QᵀX` — runs on the `O(nnz·l)` kernels of
+/// [`crate::linalg::sparse`] (dual storage routes the transpose-side
+/// passes through the CSC mirror's reduce-free row split), never
 /// materializing a dense `m×n` buffer; only the `l`-width factors are
-/// dense. The RNG draw order is identical for both input kinds, so a
+/// dense. The RNG draw order is identical for every input kind, so a
 /// sparse decomposition reproduces the densified one (bit-for-bit on
 /// small single-threaded shapes — see the `sparse` module docs).
 pub fn qb_into<'a>(
@@ -233,44 +238,30 @@ pub fn qb_into<'a>(
         let mut qz = ws.acquire_mat(n, l);
         for _ in 0..opts.power_iters {
             orthonormalize_into(&y, q, ws);
-            input_at_b_into(a, q, &mut z, ws); // XᵀQ : n×l
+            sparse::input_at_b_into(a, q, &mut z, ws); // XᵀQ : n×l
             orthonormalize_into(&z, &mut qz, ws);
-            input_matmul_into(a, &qz, &mut y, ws); // m×l
+            sparse::input_matmul_into(a, &qz, &mut y, ws); // m×l
         }
         ws.release_mat(qz);
         ws.release_mat(z);
     }
 
     orthonormalize_into(&y, q, ws);
-    // B = QᵀX : l×n. CSR exposes rows, not columns, so the sparse path
-    // computes XᵀQ (n×l) and transposes — same ascending accumulation
-    // order per element, O(n·l) extra traffic only.
+    // B = QᵀX : l×n. Sparse storage exposes X's rows (CSR) or columns
+    // (CSC mirror), not Xᵀ's, so both sparse paths compute XᵀQ (n×l) —
+    // the scatter for CSR-only input, the reduce-free CSC row split for
+    // dual storage — and transpose: same ascending accumulation order
+    // per element, O(n·l) extra traffic only.
     match a {
         NmfInput::Dense(x) => gemm::at_b_into(q, x, b, ws),
-        NmfInput::Sparse(x) => {
+        NmfInput::Sparse(_) | NmfInput::SparseDual(_) => {
             let mut xtq = ws.acquire_mat(n, l);
-            sparse::csr_at_b_into(x, q, &mut xtq, ws);
+            sparse::input_at_b_into(a, q, &mut xtq, ws);
             xtq.transpose_into(b);
             ws.release_mat(xtq);
         }
     }
     ws.release_mat(y);
-}
-
-/// `Y = X·B` for either input kind (dense packed GEMM / CSR kernel).
-fn input_matmul_into(a: NmfInput<'_>, b: &Mat, y: &mut Mat, ws: &mut Workspace) {
-    match a {
-        NmfInput::Dense(x) => gemm::matmul_into(x, b, y, ws),
-        NmfInput::Sparse(x) => sparse::csr_matmul_into(x, b, y),
-    }
-}
-
-/// `C = Xᵀ·B` for either input kind.
-fn input_at_b_into(a: NmfInput<'_>, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
-    match a {
-        NmfInput::Dense(x) => gemm::at_b_into(x, b, c, ws),
-        NmfInput::Sparse(x) => sparse::csr_at_b_into(x, b, c, ws),
-    }
 }
 
 /// One sketch stage `Y = XΩ` with `Ω` drawn from `rng`: dense kinds
@@ -297,7 +288,7 @@ pub fn sketch_apply<'a>(
         SketchKind::Uniform | SketchKind::Gaussian => {
             let mut omega = ws.acquire_mat(n, l);
             fill_dense_sketch(kind, rng, &mut omega);
-            input_matmul_into(a, &omega, y, ws);
+            sparse::input_matmul_into(a, &omega, y, ws);
             ws.release_mat(omega);
         }
         SketchKind::SparseSign { nnz } => {
@@ -309,6 +300,9 @@ pub fn sketch_apply<'a>(
             match a {
                 NmfInput::Dense(x) => sparse_sketch_apply_block(x, 0, &cols, &vals, s, y),
                 NmfInput::Sparse(x) => sparse::csr_sparse_sign_apply(x, &cols, &vals, s, y),
+                NmfInput::SparseDual(x) => {
+                    sparse::csr_sparse_sign_apply(x.csr(), &cols, &vals, s, y)
+                }
             }
             ws.release_vec(vals);
             ws.release_vec(cols);
@@ -610,6 +604,33 @@ mod tests {
             assert_eq!(qs, qd, "{sketch:?}: sparse Q differs from densified");
             assert_eq!(bs, bd, "{sketch:?}: sparse B differs from densified");
         }
+    }
+
+    #[test]
+    fn dual_storage_input_qb_matches_csr_bitwise() {
+        // The CSC mirror's reduce-free transpose product accumulates each
+        // element ascending-inner-index whole, exactly like the serial CSR
+        // scatter — on single-threaded shapes the SparseDual decomposition
+        // must therefore reproduce the CSR-input one bit for bit (and the
+        // densified one, transitively, per csr_input_qb_matches_densified).
+        let mut rng = Pcg64::seed_from_u64(20);
+        let dense = rng.uniform_mat(52, 34).map(|v| if v < 0.8 { 0.0 } else { v });
+        let csr = crate::linalg::sparse::CsrMat::from_dense(&dense);
+        let dual = crate::linalg::sparse::SparseMat::from_dense(&dense);
+        for sketch in [SketchKind::Uniform, SketchKind::Gaussian, SketchKind::sparse_sign()] {
+            let opts = QbOptions::new(3).with_oversample(4).with_power_iters(2).with_sketch(sketch);
+            let l = opts.sketch_width(52, 34);
+            let mut ws = Workspace::new();
+            let (mut qs, mut bs) = (Mat::zeros(52, l), Mat::zeros(l, 34));
+            let (mut qd, mut bd) = (Mat::zeros(52, l), Mat::zeros(l, 34));
+            let mut r1 = Pcg64::seed_from_u64(21);
+            let mut r2 = Pcg64::seed_from_u64(21);
+            qb_into(&csr, opts, &mut r1, &mut qs, &mut bs, &mut ws);
+            qb_into(&dual, opts, &mut r2, &mut qd, &mut bd, &mut ws);
+            assert_eq!(qd, qs, "{sketch:?}: dual-storage Q differs from CSR");
+            assert_eq!(bd, bs, "{sketch:?}: dual-storage B differs from CSR");
+        }
+        assert!(dual.mirror_built(), "power iterations must have built the mirror");
     }
 
     #[test]

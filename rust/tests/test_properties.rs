@@ -1,14 +1,15 @@
 //! Cross-module property tests (the mini-proptest framework exercising the
 //! invariants DESIGN.md §9 lists).
 
-use randnmf::linalg::sparse::{csr_at_b_into, csr_matmul_into, CsrMat};
+use randnmf::linalg::sparse::{csc_at_b_into, csr_at_b_into, csr_matmul_into, CscMat, CsrMat};
 use randnmf::linalg::workspace::Workspace;
 use randnmf::linalg::{gemm, mat::Mat, norms, qr, svd};
 use randnmf::nmf::hals::{sweep_factor, Hals};
+use randnmf::nmf::mu::Mu;
 use randnmf::nmf::options::{NmfOptions, Regularization, UpdateOrder};
 use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
 use randnmf::prop_assert;
-use randnmf::sketch::blocked::{qb_blocked, MatSource};
+use randnmf::sketch::blocked::{qb_blocked, qb_blocked_sparse, CscSource, MatSource};
 use randnmf::sketch::qb::{qb, QbOptions, SketchKind};
 use randnmf::testing::forall;
 
@@ -348,6 +349,125 @@ fn prop_csr_kernels_match_dense_oracles() {
     for i in 0..3 {
         assert_eq!(y.row(i), &[(i + 1) as f64 * 4.0, (i + 1) as f64 * 5.0]);
     }
+}
+
+#[test]
+fn prop_csc_at_b_matches_csr() {
+    // Random triplet soups: the CSC mirror must round-trip the CSR
+    // exactly, and `csc_at_b_into` must bit-match the single-threaded
+    // CSR scatter (same ascending-inner-index sums) and match the naive
+    // dense oracle within accumulation tolerance.
+    forall("csc kernels == csr/dense oracles", 30, |g| {
+        let m = g.usize_in(1, 40);
+        let n = g.usize_in(1, 30);
+        let l = g.usize_in(1, 8);
+        let ntrip = g.usize_in(0, 2 * m);
+        let mut trips = Vec::with_capacity(ntrip);
+        for _ in 0..ntrip {
+            trips.push((g.usize_in(0, m - 1), g.usize_in(0, n - 1), g.f64_in(-2.0, 2.0)));
+        }
+        let x = CsrMat::from_triplets(m, n, &trips);
+        let xc = CscMat::from_csr(&x);
+        prop_assert!(xc.to_csr() == x, "CSR -> CSC -> CSR round trip not exact");
+        prop_assert!(xc.to_dense() == x.to_dense(), "mirrors densify differently");
+        // Per-column strictly ascending rows.
+        for j in 0..n {
+            let (is, _) = xc.col(j);
+            for w in is.windows(2) {
+                prop_assert!(w[0] < w[1], "col {j}: rows not strictly ascending");
+            }
+        }
+        let q = g.mat_gaussian(m, l);
+        let mut via_csr = Mat::zeros(n, l);
+        csr_at_b_into(&x, &q, &mut via_csr, &mut Workspace::new());
+        let mut via_csc = Mat::zeros(n, l);
+        csc_at_b_into(&xc, &q, &mut via_csc);
+        prop_assert!(via_csc == via_csr, "csc_at_b != csr_at_b bitwise");
+        let oracle = gemm::matmul_naive(&x.to_dense().transpose(), &q);
+        prop_assert!(via_csc.max_abs_diff(&oracle) < 1e-10, "csc_at_b != naive");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blocked_sparse_qb_bit_deterministic_across_block_sizes() {
+    // The sparse out-of-core engine computes over the same fixed
+    // absolute chunk grid as the dense one: a fixed seed must give
+    // bit-identical factors for any I/O block size and sketch kind, and
+    // (sub-KC single-chunk shapes) equal the dense blocked engine too.
+    forall("sparse blocked QB bitwise == any block size", 12, |g| {
+        let m = g.usize_in(8, 40);
+        let n = g.usize_in(8, 35);
+        let r = g.usize_in(1, 4.min(m.min(n)));
+        let dense = g.mat_low_rank(m, n, r).map(|v| if v < 0.5 { 0.0 } else { v });
+        let csc = CscMat::from_csr(&CsrMat::from_dense(&dense));
+        let bs = g.usize_in(1, n + 3);
+        let sketch = *g.choose(&[
+            SketchKind::Uniform,
+            SketchKind::Gaussian,
+            SketchKind::sparse_sign(),
+        ]);
+        let opts = QbOptions::new(r).with_oversample(4).with_power_iters(1).with_sketch(sketch);
+        let mut r1 = g.rng();
+        let mut r2 = r1.clone();
+        let mut r3 = r1.clone();
+        let blocked = qb_blocked_sparse(&CscSource(&csc), opts, bs, &mut r1).unwrap();
+        let full = qb_blocked_sparse(&CscSource(&csc), opts, n, &mut r2).unwrap();
+        prop_assert!(blocked.q == full.q, "block size {bs} changed Q ({sketch:?})");
+        prop_assert!(blocked.b == full.b, "block size {bs} changed B ({sketch:?})");
+        let dense_blocked = qb_blocked(&MatSource(&dense), opts, bs, &mut r3).unwrap();
+        prop_assert!(
+            blocked.q == dense_blocked.q && blocked.b == dense_blocked.b,
+            "sparse stream differs from dense blocked engine ({sketch:?})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_deterministic_hals_matches_densified() {
+    // The acceptance property for the deterministic sparse path: with
+    // identical seeds, `Hals::fit` / `Mu::fit` on CSR or dual-storage
+    // input match the densified fit within 1e-10 across update orders
+    // (on these single-threaded sub-KC shapes the factors are in fact
+    // bit-identical; the tolerance is slack, not a crutch).
+    forall("sparse deterministic fit == densified", 8, |g| {
+        let m = g.usize_in(20, 60);
+        let n = g.usize_in(20, 50);
+        let r = g.usize_in(1, 4);
+        let density = g.f64_in(0.05, 0.4);
+        let mut data_rng = g.rng();
+        let xs = randnmf::data::synthetic::sparse_low_rank(m, n, r, density, &mut data_rng);
+        let dual = randnmf::linalg::sparse::SparseMat::new(xs.clone());
+        let xd = xs.to_dense();
+        let k = g.usize_in(1, r);
+        let order = *g.choose(&[UpdateOrder::BlockedCyclic, UpdateOrder::Shuffled]);
+        let opts = NmfOptions::new(k)
+            .with_max_iter(12)
+            .with_tol(0.0)
+            .with_seed(g.usize_in(0, 1 << 30) as u64)
+            .with_update_order(order);
+        let hals = Hals::new(opts.clone());
+        let hd = hals.fit(&xd).map_err(|e| e.to_string())?;
+        let hs = hals.fit(&xs).map_err(|e| e.to_string())?;
+        let hu = hals.fit(&dual).map_err(|e| e.to_string())?;
+        prop_assert!(hs.model.w.max_abs_diff(&hd.model.w) < 1e-10, "{order:?}: HALS W (csr)");
+        prop_assert!(hs.model.h.max_abs_diff(&hd.model.h) < 1e-10, "{order:?}: HALS H (csr)");
+        prop_assert!(hu.model.w.max_abs_diff(&hd.model.w) < 1e-10, "{order:?}: HALS W (dual)");
+        prop_assert!(hu.model.h.max_abs_diff(&hd.model.h) < 1e-10, "{order:?}: HALS H (dual)");
+        prop_assert!(
+            (hs.final_rel_err - hd.final_rel_err).abs() < 1e-10,
+            "{order:?}: HALS rel_err {} vs {}",
+            hs.final_rel_err,
+            hd.final_rel_err
+        );
+        let mu = Mu::new(opts);
+        let md = mu.fit(&xd).map_err(|e| e.to_string())?;
+        let ms = mu.fit(&dual).map_err(|e| e.to_string())?;
+        prop_assert!(ms.model.w.max_abs_diff(&md.model.w) < 1e-10, "MU W (dual)");
+        prop_assert!(ms.model.h.max_abs_diff(&md.model.h) < 1e-10, "MU H (dual)");
+        Ok(())
+    });
 }
 
 #[test]

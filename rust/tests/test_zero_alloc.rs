@@ -54,8 +54,10 @@ fn allocs() -> u64 {
 use randnmf::linalg::gemm;
 use randnmf::linalg::mat::Mat;
 use randnmf::linalg::rng::Pcg64;
+use randnmf::linalg::sparse::SparseMat;
 use randnmf::linalg::workspace::Workspace;
-use randnmf::nmf::hals::Hals;
+use randnmf::nmf::hals::{Hals, HalsScratch};
+use randnmf::nmf::mu::{Mu, MuScratch};
 use randnmf::nmf::options::NmfOptions;
 use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
 
@@ -253,5 +255,56 @@ fn steady_state_iterations_do_not_allocate() {
             "sparse input: warm fit_with round {round} performed {count} heap \
              allocations (the CSR pipeline must be allocation-free end to end)"
         );
+    }
+
+    // --- (f) deterministic solvers on dual-storage sparse input: a warm
+    //     `Hals::fit_with` / `Mu::fit_with` — sparse XHᵀ/XᵀW numerators
+    //     (CSR row split + CSC reduce-free row split) and the O(nnz·k)
+    //     exact-error epilogue — also performs exactly zero allocations.
+    //     The CSC mirror is built during the warmup fits; warm fits only
+    //     read the cached reference.
+    let xd = SparseMat::new(xs.clone());
+    {
+        let solver = Hals::new(
+            NmfOptions::new(4).with_max_iter(12).with_tol(0.0).with_seed(33),
+        );
+        let mut scratch = HalsScratch::new();
+        for _ in 0..3 {
+            let fit = solver.fit_with(&xd, &mut scratch).unwrap();
+            fit.recycle(&mut scratch.ws);
+        }
+        assert!(xd.mirror_built(), "warmup must have built the CSC mirror");
+        for round in 0..3 {
+            let before = allocs();
+            let fit = solver.fit_with(&xd, &mut scratch).unwrap();
+            let count = allocs() - before;
+            fit.recycle(&mut scratch.ws);
+            assert_eq!(
+                count, 0,
+                "sparse deterministic HALS: warm fit_with round {round} performed \
+                 {count} heap allocations"
+            );
+        }
+    }
+    {
+        let solver = Mu::new(
+            NmfOptions::new(4).with_max_iter(12).with_tol(0.0).with_seed(34),
+        );
+        let mut scratch = MuScratch::new();
+        for _ in 0..3 {
+            let fit = solver.fit_with(&xd, &mut scratch).unwrap();
+            fit.recycle(&mut scratch.ws);
+        }
+        for round in 0..3 {
+            let before = allocs();
+            let fit = solver.fit_with(&xd, &mut scratch).unwrap();
+            let count = allocs() - before;
+            fit.recycle(&mut scratch.ws);
+            assert_eq!(
+                count, 0,
+                "sparse MU: warm fit_with round {round} performed {count} heap \
+                 allocations"
+            );
+        }
     }
 }

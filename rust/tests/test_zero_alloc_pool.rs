@@ -59,8 +59,10 @@ use randnmf::linalg::gemm;
 use randnmf::linalg::mat::Mat;
 use randnmf::linalg::pool;
 use randnmf::linalg::rng::Pcg64;
+use randnmf::linalg::sparse::SparseMat;
 use randnmf::linalg::workspace::Workspace;
-use randnmf::nmf::hals::Hals;
+use randnmf::nmf::hals::{Hals, HalsScratch};
+use randnmf::nmf::mu::{Mu, MuScratch};
 use randnmf::nmf::options::NmfOptions;
 use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
 
@@ -246,5 +248,57 @@ fn threaded_steady_state_iterations_do_not_allocate() {
             "sparse input: warm threaded fit_with round {round} performed {n} \
              heap allocations"
         );
+    }
+
+    // --- (f) deterministic solvers on dual-storage sparse input, pool
+    //     path: the same 2000×600 shape trips the 2·nnz·k gate for the
+    //     k=8 numerators (2·nnz·8 ≥ 2²⁰ given nnz ≈ 120k), so the CSR
+    //     row split (XHᵀ) and the CSC reduce-free row split (XᵀW) both
+    //     fan out onto parked workers — and a warm `Hals::fit_with` /
+    //     `Mu::fit_with` must still allocate exactly zero.
+    let xd = SparseMat::new(xs.clone());
+    assert!(2 * xd.nnz() * 8 >= 1 << 20, "shape must trip the sparse threading gate");
+    {
+        let solver = Hals::new(
+            NmfOptions::new(8).with_max_iter(10).with_tol(0.0).with_seed(33),
+        );
+        let mut scratch = HalsScratch::new();
+        for _ in 0..3 {
+            let fit = solver.fit_with(&xd, &mut scratch).unwrap();
+            fit.recycle(&mut scratch.ws);
+        }
+        assert!(xd.mirror_built(), "warmup must have built the CSC mirror");
+        for round in 0..3 {
+            let before = allocs();
+            let fit = solver.fit_with(&xd, &mut scratch).unwrap();
+            let n = allocs() - before;
+            fit.recycle(&mut scratch.ws);
+            assert_eq!(
+                n, 0,
+                "sparse deterministic HALS: warm threaded fit_with round {round} \
+                 performed {n} heap allocations"
+            );
+        }
+    }
+    {
+        let solver = Mu::new(
+            NmfOptions::new(8).with_max_iter(10).with_tol(0.0).with_seed(34),
+        );
+        let mut scratch = MuScratch::new();
+        for _ in 0..3 {
+            let fit = solver.fit_with(&xd, &mut scratch).unwrap();
+            fit.recycle(&mut scratch.ws);
+        }
+        for round in 0..3 {
+            let before = allocs();
+            let fit = solver.fit_with(&xd, &mut scratch).unwrap();
+            let n = allocs() - before;
+            fit.recycle(&mut scratch.ws);
+            assert_eq!(
+                n, 0,
+                "sparse MU: warm threaded fit_with round {round} performed {n} \
+                 heap allocations"
+            );
+        }
     }
 }
