@@ -6,9 +6,11 @@
 //! results identical to in-memory; time roughly flat in block size above a
 //! few hundred columns (seek overhead amortized); passes = 2 + 2q.
 
-use randnmf::bench::{banner, bench_scale, write_csv, Bencher};
+use randnmf::bench::{banner, bench_scale, update_bench_json, write_csv, BenchJsonRow, Bencher};
 use randnmf::coordinator::metrics::Table;
 use randnmf::data::store::{self, NmfStore};
+use randnmf::nmf::checkpoint::{self, CheckpointState, SolverKind};
+use randnmf::nmf::options::UpdateOrder;
 use randnmf::prelude::*;
 use randnmf::sketch::blocked::{pass_count, qb_blocked, MatSource};
 
@@ -80,8 +82,60 @@ fn main() {
     ]);
     rows.push(format!("blocked-no-io,512,{:.4},0", stats.median_s));
 
+    // Checkpoint-write overhead: one `.nmfckpt` publish (serialize, CRC,
+    // temp write, fsync, atomic rename) for a solver state at this run's
+    // scale — the fixed cost a fit pays per checkpoint cadence tick.
+    let ck = 40usize;
+    let (cm, cn) = (m.min(4000), n.min(1000));
+    let w = rng.uniform_mat(cm, ck);
+    let ht = rng.uniform_mat(cn, ck);
+    let crng = Pcg64::seed_from_u64(1);
+    let order: Vec<usize> = (0..ck).collect();
+    let ckpt = dir.join("bench.nmfckpt");
+    let state = CheckpointState {
+        solver: SolverKind::Hals,
+        sweep: 3,
+        w: &w,
+        ht: &ht,
+        wt: None,
+        rng: &crng,
+        order_kind: UpdateOrder::BlockedCyclic,
+        order: &order,
+        pg0: Some(1.0),
+        pgw_prev: Some(0.5),
+        pg_ratio: 0.5,
+        elapsed_s: 1.0,
+        trace: &[],
+    };
+    let mut buf = Vec::new();
+    let ck_stats = bencher.time(|| checkpoint::write(&ckpt, 1, 2.0, &state, &mut buf).unwrap());
+    let ck_bytes = buf.len() as f64;
+    std::fs::remove_file(&ckpt).ok();
+    table.row(&[
+        "ckpt-write".into(),
+        "-".into(),
+        format!("{:.4}", ck_stats.median_s),
+        format!("{:.0}", ck_bytes / ck_stats.median_s / 1e6),
+        "-".into(),
+    ]);
+    rows.push(format!("ckpt-write,0,{:.6},0", ck_stats.median_s));
+
     print!("{}", table.render());
     println!("passes over the data: {} (q=2)", pass_count(2));
     let p = write_csv("perf_out_of_core.csv", "path,block,median_s,err", &rows);
     println!("csv: {}", p.display());
+
+    update_bench_json(
+        "BENCH_gemm.json",
+        &[BenchJsonRow {
+            kernel: "ckpt_write".into(),
+            m: cm,
+            n: cn,
+            k: ck,
+            threads: randnmf::linalg::gemm::num_threads(),
+            median_s: ck_stats.median_s,
+            gflops: 0.0,
+        }],
+    );
+    println!("json: BENCH_gemm.json (merged)");
 }

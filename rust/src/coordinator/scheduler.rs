@@ -6,12 +6,49 @@
 //! task derives its own RNG stream from the job seed *before* scheduling,
 //! so timing cannot perturb results).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// A sweep task that panicked instead of returning a result.
+///
+/// Panics are caught **per task** ([`run_parallel_caught`]), so one
+/// diverging cell of a parameter sweep cannot take down the batch — the
+/// other `params × runs − 1` results are still delivered, and the failed
+/// cell is reported with its submission index and panic message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskPanic {
+    /// Submission index of the failed task.
+    pub index: usize,
+    /// The panic payload rendered to text (`&str`/`String` payloads;
+    /// anything else becomes a placeholder).
+    pub message: String,
+}
+
+impl std::fmt::Display for TaskPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "task {} panicked: {}", self.index, self.message)
+    }
+}
+
+impl std::error::Error for TaskPanic {}
+
+/// Render a caught panic payload to text (shared with the serving edge's
+/// panic isolation).
+pub(crate) fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    match p.downcast_ref::<&'static str>() {
+        Some(s) => (*s).to_string(),
+        None => match p.downcast_ref::<String>() {
+            Some(s) => s.clone(),
+            None => "non-string panic payload".to_string(),
+        },
+    }
+}
+
 /// Run `tasks` on at most `workers` threads; returns results in
-/// submission order.
-pub fn run_parallel<T, F>(tasks: Vec<F>, workers: usize) -> Vec<T>
+/// submission order, each task's panic caught and reported as an `Err`
+/// in its slot — a worker thread never dies, the batch always completes.
+pub fn run_parallel_caught<T, F>(tasks: Vec<F>, workers: usize) -> Vec<Result<T, TaskPanic>>
 where
     T: Send,
     F: FnOnce() -> T + Send,
@@ -22,13 +59,21 @@ where
     }
     let workers = workers.clamp(1, n);
     if workers == 1 {
-        return tasks.into_iter().map(|t| t()).collect();
+        return tasks
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                catch_unwind(AssertUnwindSafe(t))
+                    .map_err(|p| TaskPanic { index: i, message: panic_message(p) })
+            })
+            .collect();
     }
 
     // Work-stealing-free simple design: an atomic cursor over the task
     // list; each worker claims the next unclaimed index.
     let tasks: Vec<Mutex<Option<F>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let results: Vec<Mutex<Option<Result<T, TaskPanic>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
     let cursor = AtomicUsize::new(0);
 
     std::thread::scope(|s| {
@@ -38,9 +83,15 @@ where
                 if i >= n {
                     break;
                 }
-                let task = tasks[i].lock().unwrap().take().expect("task claimed twice");
-                let out = task();
-                *results[i].lock().unwrap() = Some(out);
+                // The locks cannot be poisoned (task panics are caught
+                // below), but tolerate it anyway — robustness code should
+                // not itself panic on a "can't happen".
+                let Some(task) = tasks[i].lock().unwrap_or_else(|e| e.into_inner()).take() else {
+                    continue; // unreachable: the cursor hands out unique indices
+                };
+                let out = catch_unwind(AssertUnwindSafe(task))
+                    .map_err(|p| TaskPanic { index: i, message: panic_message(p) });
+                *results[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(out);
             });
         }
     });
@@ -52,13 +103,75 @@ where
 
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker dropped a result"))
+        .enumerate()
+        .map(|(i, m)| {
+            m.into_inner().unwrap_or_else(|e| e.into_inner()).unwrap_or_else(|| {
+                Err(TaskPanic { index: i, message: "worker dropped the result".to_string() })
+            })
+        })
         .collect()
+}
+
+/// Run `tasks` on at most `workers` threads; returns results in
+/// submission order.
+///
+/// Panic contract: if a task panics, every *other* task still runs to
+/// completion (workers survive), and then the first failure is
+/// re-propagated as a panic carrying the task index and original
+/// message. Callers that need the partial results use
+/// [`run_parallel_caught`] instead.
+pub fn run_parallel<T, F>(tasks: Vec<F>, workers: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    run_parallel_caught(tasks, workers)
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|p| panic!("{p}")))
+        .collect()
+}
+
+/// Sweep helper with per-cell panic isolation: run
+/// `f(param, run_index, derived_seed)` for every combination of
+/// `params × runs`, in parallel, grouping the results per parameter. A
+/// cell that panics becomes an `Err(TaskPanic)` in its slot; every other
+/// cell still completes. Seeds are derived deterministically from
+/// `base_seed`.
+pub fn sweep_caught<P, T, F>(
+    params: &[P],
+    runs_per_param: usize,
+    base_seed: u64,
+    workers: usize,
+    f: F,
+) -> Vec<Vec<Result<T, TaskPanic>>>
+where
+    P: Clone + Send + Sync,
+    T: Send,
+    F: Fn(&P, usize, u64) -> T + Send + Sync,
+{
+    let mut tasks: Vec<Box<dyn FnOnce() -> T + Send>> = Vec::new();
+    for (pi, p) in params.iter().enumerate() {
+        for run in 0..runs_per_param {
+            let seed = derive_seed(base_seed, pi as u64, run as u64);
+            let p = p.clone();
+            let f = &f;
+            tasks.push(Box::new(move || f(&p, run, seed)));
+        }
+    }
+    let flat = run_parallel_caught(tasks, workers);
+    let mut grouped: Vec<Vec<Result<T, TaskPanic>>> =
+        params.iter().map(|_| Vec::new()).collect();
+    for (i, r) in flat.into_iter().enumerate() {
+        grouped[i / runs_per_param.max(1)].push(r);
+    }
+    grouped
 }
 
 /// Sweep helper: run `f(param, run_index, derived_seed)` for every
 /// combination of `params × runs`, in parallel, grouping the results per
 /// parameter. Seeds are derived deterministically from `base_seed`.
+/// Panics re-propagate after the batch completes (see [`run_parallel`]);
+/// use [`sweep_caught`] to receive them as values instead.
 pub fn sweep<P, T, F>(
     params: &[P],
     runs_per_param: usize,
@@ -71,21 +184,10 @@ where
     T: Send,
     F: Fn(&P, usize, u64) -> T + Send + Sync,
 {
-    let mut tasks: Vec<Box<dyn FnOnce() -> (usize, T) + Send>> = Vec::new();
-    for (pi, p) in params.iter().enumerate() {
-        for run in 0..runs_per_param {
-            let seed = derive_seed(base_seed, pi as u64, run as u64);
-            let p = p.clone();
-            let f = &f;
-            tasks.push(Box::new(move || (pi, f(&p, run, seed))));
-        }
-    }
-    let flat = run_parallel(tasks, workers);
-    let mut grouped: Vec<Vec<T>> = params.iter().map(|_| Vec::new()).collect();
-    for (pi, t) in flat {
-        grouped[pi].push(t);
-    }
-    grouped
+    sweep_caught(params, runs_per_param, base_seed, workers, f)
+        .into_iter()
+        .map(|g| g.into_iter().map(|r| r.unwrap_or_else(|p| panic!("{p}"))).collect())
+        .collect()
 }
 
 /// SplitMix-style seed derivation: decorrelated, deterministic.
@@ -146,6 +248,79 @@ mod tests {
         seeds.sort_unstable();
         seeds.dedup();
         assert_eq!(seeds.len(), 12);
+    }
+
+    #[test]
+    fn caught_panics_are_isolated_per_task() {
+        for workers in [1usize, 4] {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16usize)
+                .map(|i| {
+                    Box::new(move || {
+                        if i % 5 == 3 {
+                            panic!("task {i} exploded");
+                        }
+                        i * i
+                    }) as Box<dyn FnOnce() -> usize + Send>
+                })
+                .collect();
+            let out = run_parallel_caught(tasks, workers);
+            assert_eq!(out.len(), 16);
+            for (i, r) in out.iter().enumerate() {
+                if i % 5 == 3 {
+                    let p = r.as_ref().unwrap_err();
+                    assert_eq!(p.index, i);
+                    assert!(p.message.contains("exploded"), "{}", p.message);
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i * i, "workers={workers} task {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_parallel_repropagates_after_batch_completes() {
+        let done = AtomicUsize::new(0);
+        // Unboxed closures (one uniform type from the same `map` body) so
+        // the tasks may borrow the local counter through `thread::scope`.
+        let tasks: Vec<_> = (0..8usize)
+            .map(|i| {
+                let done = &done;
+                move || {
+                    if i == 2 {
+                        panic!("boom");
+                    }
+                    done.fetch_add(1, Ordering::Relaxed);
+                    i
+                }
+            })
+            .collect();
+        let caught = catch_unwind(AssertUnwindSafe(|| run_parallel(tasks, 4)));
+        let p = caught.expect_err("task panic must re-propagate");
+        assert!(panic_message(p).contains("boom"));
+        // Every non-panicking task still ran to completion.
+        assert_eq!(done.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn sweep_caught_reports_failing_cells_in_place() {
+        let params = vec![1usize, 2, 3];
+        let out = sweep_caught(&params, 2, 7, 4, |&p, run, _seed| {
+            if p == 2 && run == 1 {
+                panic!("cell ({p},{run}) diverged");
+            }
+            p * 10 + run
+        });
+        assert_eq!(out.len(), 3);
+        for (pi, group) in out.iter().enumerate() {
+            assert_eq!(group.len(), 2);
+            for (run, r) in group.iter().enumerate() {
+                if params[pi] == 2 && run == 1 {
+                    assert!(r.as_ref().unwrap_err().message.contains("diverged"));
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), params[pi] * 10 + run);
+                }
+            }
+        }
     }
 
     #[test]

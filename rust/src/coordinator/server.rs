@@ -17,9 +17,32 @@
 //!
 //! This is the L3 "request loop" of the architecture: a thin, dependency-
 //! free replacement for what tokio+tower would provide.
+//!
+//! ## Robustness contract
+//!
+//! The edge is built to survive hostile or broken clients with bounded
+//! memory and no thread leaks:
+//!
+//! * a request's dimension is validated against the served model
+//!   **before any allocation** — an absurd length prefix gets an error
+//!   reply and the connection is closed (the unread payload makes resync
+//!   impossible), while a sane-but-wrong dimension still gets a clean
+//!   error reply on a connection that stays usable;
+//! * a half-written request that stalls longer than
+//!   [`ServerOptions::read_timeout`] is dropped (per-connection write
+//!   timeouts bound the reply side the same way);
+//! * the solve queue is bounded ([`ServerOptions::max_queue`]): past the
+//!   limit, requests are **shed** with an overload error reply instead of
+//!   growing memory;
+//! * each connection runs under panic isolation, and a panicking batch
+//!   solve replies an error to its requests instead of killing the
+//!   solver thread;
+//! * shutdown drains: queued requests are answered before the solver
+//!   thread exits.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -43,6 +66,8 @@ struct Shared {
     stop: AtomicBool,
     served: AtomicUsize,
     batches: AtomicUsize,
+    /// Requests rejected because the queue was at `max_queue`.
+    shed: AtomicUsize,
 }
 
 /// Configuration of the transform service.
@@ -54,11 +79,26 @@ pub struct ServerOptions {
     pub batch_window: Duration,
     /// HALS-NNLS sweeps per solve.
     pub nnls_sweeps: usize,
+    /// Longest a request may stall mid-message before its connection is
+    /// dropped (a half-written request cannot pin a thread forever).
+    pub read_timeout: Duration,
+    /// Per-connection socket write timeout for replies.
+    pub write_timeout: Duration,
+    /// Bound on queued requests; past it new requests are shed with an
+    /// overload error reply, keeping server memory bounded under flood.
+    pub max_queue: usize,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        ServerOptions { max_batch: 64, batch_window: Duration::from_millis(2), nnls_sweeps: 60 }
+        ServerOptions {
+            max_batch: 64,
+            batch_window: Duration::from_millis(2),
+            nnls_sweeps: 60,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            max_queue: 1024,
+        }
     }
 }
 
@@ -81,7 +121,9 @@ impl TransformServer {
             stop: AtomicBool::new(false),
             served: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
         });
+        let (model_m, _) = model.w.shape();
 
         let mut threads = Vec::new();
 
@@ -95,6 +137,8 @@ impl TransformServer {
         // Accept loop: one lightweight thread per connection. Connection
         // threads are *not* joined — they idle on a short read timeout and
         // exit on their own once `stop` is set or the peer disconnects.
+        // Each runs under `catch_unwind`, so a handler bug on one
+        // connection can never take down a sibling or the accept loop.
         {
             let shared = shared.clone();
             threads.push(std::thread::spawn(move || {
@@ -102,8 +146,11 @@ impl TransformServer {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let shared = shared.clone();
+                            let conn_opts = opts.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, &shared);
+                                let _ = catch_unwind(AssertUnwindSafe(|| {
+                                    let _ = handle_conn(stream, &shared, model_m, &conn_opts);
+                                }));
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -128,7 +175,17 @@ impl TransformServer {
         (self.shared.served.load(Ordering::Relaxed), self.shared.batches.load(Ordering::Relaxed))
     }
 
-    /// Signal shutdown and join all threads.
+    /// Requests shed with an overload reply because the queue was full.
+    pub fn shed_count(&self) -> usize {
+        self.shared.shed.load(Ordering::Relaxed)
+    }
+
+    /// Signal shutdown, drain, and join all threads.
+    ///
+    /// The solver thread answers everything already queued before it
+    /// exits (graceful drain), so no accepted request is silently
+    /// dropped; connection threads observe `stop` at their next idle
+    /// poll and unwind on their own.
     pub fn shutdown(self) {
         self.shared.stop.store(true, Ordering::Relaxed);
         self.shared.wake.notify_all();
@@ -147,13 +204,13 @@ fn solver_loop(shared: &Shared, model: &NmfModel, opts: &ServerOptions) {
     loop {
         // Wait for work (or stop).
         let mut batch: Vec<Pending> = {
-            let guard = shared.queue.lock().unwrap();
+            let guard = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             let (mut guard, _) = shared
                 .wake
                 .wait_timeout_while(guard, Duration::from_millis(50), |q| {
                     q.is_empty() && !shared.stop.load(Ordering::Relaxed)
                 })
-                .unwrap();
+                .unwrap_or_else(|e| e.into_inner());
             if shared.stop.load(Ordering::Relaxed) && guard.is_empty() {
                 return;
             }
@@ -163,7 +220,7 @@ fn solver_loop(shared: &Shared, model: &NmfModel, opts: &ServerOptions) {
             // Short accumulation window for better batching.
             drop(guard);
             std::thread::sleep(opts.batch_window);
-            guard = shared.queue.lock().unwrap();
+            guard = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             let take = guard.len().min(opts.max_batch);
             guard.drain(..take).collect()
         };
@@ -173,59 +230,99 @@ fn solver_loop(shared: &Shared, model: &NmfModel, opts: &ServerOptions) {
         shared.batches.fetch_add(1, Ordering::Relaxed);
         shared.served.fetch_add(batch.len(), Ordering::Relaxed);
 
-        // Validate inputs, assemble Y (m×b).
+        // Validate inputs, assemble Y (m×b). Dimension and finiteness are
+        // checked per request — one bad request gets its own error reply
+        // and cannot poison the batch it rode in with.
         let mut valid = Vec::new();
         for p in batch.drain(..) {
-            if p.input.len() == m {
-                valid.push(p);
-            } else {
+            if p.input.len() != m {
                 let _ = p
                     .reply
                     .send(Err(format!("expected {m}-dim input, got {}", p.input.len())));
+            } else if p.input.iter().any(|v| !v.is_finite()) {
+                let _ = p.reply.send(Err("input contains NaN/Inf".to_string()));
+            } else {
+                valid.push(p);
             }
         }
         if valid.is_empty() {
             continue;
         }
         let b = valid.len();
-        let mut y = Mat::zeros(m, b);
-        for (j, p) in valid.iter().enumerate() {
-            y.set_col(j, &p.input);
-        }
 
-        // Batched NNLS: shared Gram, per-column independence.
-        let at = gemm::at_b(&model.w, &y); // k×b  (WᵀY)
-        let mut ct = at.transpose(); // b×k tall-skinny panel
-        // init: diag-scaled clamp
-        for r in 0..b {
-            for j in 0..k {
-                let d = gram.get(j, j).max(1e-12);
-                let v = (ct.get(r, j) / d).max(0.0);
-                ct.set(r, j, v);
+        // Batched NNLS: shared Gram, per-column independence. The solve
+        // runs under `catch_unwind` — a panicking batch replies errors
+        // instead of killing the solver thread (and the service with it).
+        let solved = catch_unwind(AssertUnwindSafe(|| {
+            let mut y = Mat::zeros(m, b);
+            for (j, p) in valid.iter().enumerate() {
+                y.set_col(j, &p.input);
             }
-        }
-        let num = at.transpose();
-        for _ in 0..opts.nnls_sweeps {
-            crate::nmf::hals::sweep_factor(
-                &mut ct,
-                &num,
-                &gram,
-                crate::nmf::options::Regularization::NONE,
-                &order,
-                true,
-            );
-        }
-        for (j, p) in valid.into_iter().enumerate() {
-            let _ = p.reply.send(Ok(ct.row(j).to_vec()));
+            let at = gemm::at_b(&model.w, &y); // k×b  (WᵀY)
+            let mut ct = at.transpose(); // b×k tall-skinny panel
+            // init: diag-scaled clamp
+            for r in 0..b {
+                for j in 0..k {
+                    let d = gram.get(j, j).max(1e-12);
+                    let v = (ct.get(r, j) / d).max(0.0);
+                    ct.set(r, j, v);
+                }
+            }
+            let num = at.transpose();
+            for _ in 0..opts.nnls_sweeps {
+                crate::nmf::hals::sweep_factor(
+                    &mut ct,
+                    &num,
+                    &gram,
+                    crate::nmf::options::Regularization::NONE,
+                    &order,
+                    true,
+                );
+            }
+            ct
+        }));
+        match solved {
+            Ok(ct) => {
+                for (j, p) in valid.into_iter().enumerate() {
+                    let _ = p.reply.send(Ok(ct.row(j).to_vec()));
+                }
+            }
+            Err(payload) => {
+                let msg = format!(
+                    "batch solve panicked: {}",
+                    crate::coordinator::scheduler::panic_message(payload)
+                );
+                for p in valid {
+                    let _ = p.reply.send(Err(msg.clone()));
+                }
+            }
         }
     }
 }
 
-fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
+/// Write the wire-format error reply (`u32::MAX` + length + UTF-8 text).
+fn send_error(w: &mut impl Write, msg: &str) -> Result<()> {
+    w.write_all(&u32::MAX.to_le_bytes())?;
+    w.write_all(&(msg.len() as u32).to_le_bytes())?;
+    w.write_all(msg.as_bytes())?;
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    shared: &Shared,
+    model_m: usize,
+    opts: &ServerOptions,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
     // Idle reads wake every 100 ms to observe `stop` (otherwise a
     // connected-but-silent client would pin this thread past shutdown).
     stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    stream.set_write_timeout(Some(opts.write_timeout)).ok();
+    // A request larger than any plausible input for this model is
+    // rejected *before* its payload is allocated or read — per-connection
+    // memory stays O(model m) no matter what the length prefix claims.
+    let wire_cap = model_m.saturating_mul(4).max(4096);
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     loop {
@@ -248,20 +345,43 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
             Err(e) => return Err(e.into()),
         }
         let m = u32::from_le_bytes(len_buf) as usize;
-        anyhow::ensure!(m <= 1 << 24, "absurd request dimension {m}");
+        if m > wire_cap {
+            // The oversized payload will never be read, so the stream
+            // cannot be resynced: reply with the reason, then close.
+            send_error(
+                &mut writer,
+                &format!("request dimension {m} exceeds server limit {wire_cap}"),
+            )?;
+            writer.flush()?;
+            anyhow::bail!("oversized request dimension {m} (limit {wire_cap})");
+        }
         let mut data = vec![0u8; m * 8];
         // The payload may arrive across several packets; resume across
-        // read timeouts (unlike `read_exact`, which cannot).
-        read_exact_retry(&mut reader, &mut data, shared)?;
+        // read timeouts (unlike `read_exact`, which cannot) but give up
+        // once the peer stalls mid-message for longer than the deadline.
+        read_exact_retry(&mut reader, &mut data, shared, opts.read_timeout)?;
         let input: Vec<f64> = data
             .chunks_exact(8)
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect();
 
         let (tx, rx) = std::sync::mpsc::channel();
-        {
-            let mut q = shared.queue.lock().unwrap();
-            q.push(Pending { input, reply: tx });
+        let enqueued = {
+            let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            if q.len() >= opts.max_queue {
+                false
+            } else {
+                q.push(Pending { input, reply: tx });
+                true
+            }
+        };
+        if !enqueued {
+            // Overload shedding: bounded queue, explicit signal, and the
+            // connection stays usable for a later retry.
+            shared.shed.fetch_add(1, Ordering::Relaxed);
+            send_error(&mut writer, "server overloaded: queue full, retry later")?;
+            writer.flush()?;
+            continue;
         }
         shared.wake.notify_one();
 
@@ -272,25 +392,31 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
                     writer.write_all(&v.to_le_bytes())?;
                 }
             }
-            Ok(Err(msg)) => {
-                writer.write_all(&u32::MAX.to_le_bytes())?;
-                writer.write_all(&(msg.len() as u32).to_le_bytes())?;
-                writer.write_all(msg.as_bytes())?;
-            }
+            Ok(Err(msg)) => send_error(&mut writer, &msg)?,
             Err(_) => anyhow::bail!("solver timeout"),
         }
         writer.flush()?;
     }
 }
 
-/// `read_exact` that survives read timeouts (resumes where it left off)
-/// and aborts on shutdown.
-fn read_exact_retry(r: &mut impl Read, buf: &mut [u8], shared: &Shared) -> Result<()> {
+/// `read_exact` that survives read timeouts (resumes where it left off),
+/// aborts on shutdown, and drops a peer that stalls mid-message for
+/// longer than `stall_limit` without sending a byte.
+fn read_exact_retry(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    shared: &Shared,
+    stall_limit: Duration,
+) -> Result<()> {
     let mut filled = 0;
+    let mut last_progress = std::time::Instant::now();
     while filled < buf.len() {
         match r.read(&mut buf[filled..]) {
             Ok(0) => anyhow::bail!("peer closed mid-message"),
-            Ok(n) => filled += n,
+            Ok(n) => {
+                filled += n;
+                last_progress = std::time::Instant::now();
+            }
             Err(e)
                 if matches!(
                     e.kind(),
@@ -299,6 +425,12 @@ fn read_exact_retry(r: &mut impl Read, buf: &mut [u8], shared: &Shared) -> Resul
             {
                 if shared.stop.load(Ordering::Relaxed) {
                     anyhow::bail!("server stopping");
+                }
+                if last_progress.elapsed() >= stall_limit {
+                    anyhow::bail!(
+                        "request stalled mid-message for {:.1}s, dropping connection",
+                        stall_limit.as_secs_f64()
+                    );
                 }
             }
             Err(e) => return Err(e.into()),
@@ -410,6 +542,7 @@ mod tests {
             max_batch: 32,
             batch_window: Duration::from_millis(10),
             nnls_sweeps: 40,
+            ..ServerOptions::default()
         };
         let server = TransformServer::start("127.0.0.1:0", model, opts).unwrap();
         let addr = server.addr();

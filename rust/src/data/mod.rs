@@ -11,9 +11,12 @@
 //! * [`store`] — `.nmfstore` column-blocked binary format (HDF5
 //!   substitute), dense slabs plus the sparse CSC-slab extension
 //!   ([`store::SparseNmfStore`]) for `O(nnz)`-I/O streaming.
+//! * [`robust`] — CRC32, the `Corrupt`/`Transient`/`Fatal` fault
+//!   taxonomy, and hardened pread/pwrite wrappers with bounded retry.
 
 pub mod digits;
 pub mod faces;
 pub mod hyperspectral;
+pub mod robust;
 pub mod store;
 pub mod synthetic;

@@ -1,0 +1,371 @@
+//! I/O robustness primitives shared by the storage and persistence layers.
+//!
+//! Three pieces:
+//!
+//! * **CRC32** (IEEE 802.3, table-driven) — integrity checksums for
+//!   `.nmfstore` slabs and `.nmfckpt` checkpoints.
+//! * **Fault taxonomy** — [`StoreFault`] tags every I/O error as
+//!   [`Corrupt`](FaultKind::Corrupt) (data failed validation; retrying the
+//!   same bytes is pointless beyond one re-read), [`Transient`]
+//!   (FaultKind::Transient) (interrupted syscall, injected flake; worth a
+//!   bounded retry) or [`Fatal`](FaultKind::Fatal) (missing file,
+//!   permission, logic error). The vendored `anyhow` shim is string-backed
+//!   (no `downcast_ref`), so the kind travels as a stable `[fault:…]`
+//!   marker in the message and [`classify`] recovers it at any wrap depth.
+//! * **Hardened syscall wrappers** — [`pread_exact`] survives EINTR and
+//!   short reads; [`with_retry`] drives a bounded retry-with-backoff
+//!   policy keyed on the fault kind. Both double as the injection points
+//!   for the deterministic failpoints
+//!   ([`crate::testing::failpoints`], `--features failpoints` only).
+
+use std::fs::File;
+use std::io;
+use std::os::unix::fs::FileExt;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE reflected polynomial 0xEDB88320)
+// ---------------------------------------------------------------------------
+
+const fn make_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            j += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = make_crc_table();
+
+/// CRC32 of `bytes` (IEEE; matches zlib's `crc32(0, …)`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc32_update(0, bytes)
+}
+
+/// Streaming form: `crc32_update(crc32(a), b) == crc32(a ‖ b)`.
+pub fn crc32_update(seed: u32, bytes: &[u8]) -> u32 {
+    let mut c = !seed;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Fault taxonomy
+// ---------------------------------------------------------------------------
+
+/// How an I/O failure should be treated by callers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Data read back but failed validation (CRC, magic, bounds). One
+    /// re-read is worth trying (in-flight flip); after that, give up —
+    /// the bytes on disk are wrong and must never be consumed.
+    Corrupt,
+    /// The operation itself flaked (EINTR, timeout, injected flake) —
+    /// retry with backoff, bounded.
+    Transient,
+    /// Unrecoverable (missing file, permissions, caller bug).
+    Fatal,
+}
+
+impl FaultKind {
+    /// Stable substring embedded in error messages; [`classify`] parses it
+    /// back out at any context-wrap depth.
+    pub fn marker(self) -> &'static str {
+        match self {
+            FaultKind::Corrupt => "[fault:corrupt]",
+            FaultKind::Transient => "[fault:transient]",
+            FaultKind::Fatal => "[fault:fatal]",
+        }
+    }
+}
+
+/// Typed storage fault. Converts into `anyhow::Error` via the std-error
+/// blanket impl; the kind survives as the Display marker.
+#[derive(Debug)]
+pub struct StoreFault {
+    pub kind: FaultKind,
+    pub detail: String,
+}
+
+impl std::fmt::Display for StoreFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.kind.marker(), self.detail)
+    }
+}
+
+impl std::error::Error for StoreFault {}
+
+/// Shorthand constructors (each returns a ready-to-`?` `anyhow::Error`).
+pub fn corrupt(detail: impl Into<String>) -> anyhow::Error {
+    StoreFault { kind: FaultKind::Corrupt, detail: detail.into() }.into()
+}
+
+pub fn transient(detail: impl Into<String>) -> anyhow::Error {
+    StoreFault { kind: FaultKind::Transient, detail: detail.into() }.into()
+}
+
+pub fn fatal(detail: impl Into<String>) -> anyhow::Error {
+    StoreFault { kind: FaultKind::Fatal, detail: detail.into() }.into()
+}
+
+/// Recover the fault kind from an (arbitrarily context-wrapped) error.
+/// Unmarked errors are conservatively [`FaultKind::Fatal`] — never retried.
+pub fn classify(err: &anyhow::Error) -> FaultKind {
+    let s = err.to_string();
+    if s.contains(FaultKind::Corrupt.marker()) {
+        FaultKind::Corrupt
+    } else if s.contains(FaultKind::Transient.marker()) {
+        FaultKind::Transient
+    } else {
+        FaultKind::Fatal
+    }
+}
+
+/// Wrap a raw `io::Error` from operation `op` into a classified fault.
+pub fn io_fault(op: &str, err: io::Error) -> anyhow::Error {
+    use io::ErrorKind as K;
+    let msg = err.to_string();
+    let kind = if msg.contains(FaultKind::Transient.marker())
+        || matches!(err.kind(), K::Interrupted | K::WouldBlock | K::TimedOut)
+    {
+        FaultKind::Transient
+    } else if matches!(err.kind(), K::UnexpectedEof | K::InvalidData) {
+        FaultKind::Corrupt
+    } else {
+        FaultKind::Fatal
+    };
+    StoreFault { kind, detail: format!("{op}: {msg}") }.into()
+}
+
+// ---------------------------------------------------------------------------
+// Hardened syscalls
+// ---------------------------------------------------------------------------
+
+fn eof(offset: u64, missing: usize) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::UnexpectedEof,
+        format!("pread at offset {offset}: file ended {missing} bytes early"),
+    )
+}
+
+/// Positional read of exactly `buf.len()` bytes at `offset`, resuming
+/// across EINTR and short reads. Under `--features failpoints` this is
+/// the injection point for short reads, EINTR, transient errors and
+/// bit corruption.
+pub fn pread_exact(file: &File, buf: &mut [u8], offset: u64) -> io::Result<()> {
+    let mut done = 0usize;
+    while done < buf.len() {
+        let at = offset + done as u64;
+        #[cfg(feature = "failpoints")]
+        {
+            use crate::testing::failpoints as fp;
+            match fp::read_fault(buf.len() - done) {
+                Some(fp::ReadFault::Eintr) => continue, // interrupted before any bytes
+                Some(fp::ReadFault::Transient) => {
+                    return Err(io::Error::other(
+                        "[fault:transient] injected transient read error",
+                    ));
+                }
+                Some(fp::ReadFault::Short(cap)) => {
+                    let want = cap.clamp(1, buf.len() - done);
+                    match file.read_at(&mut buf[done..done + want], at) {
+                        Ok(0) => return Err(eof(at, buf.len() - done)),
+                        Ok(n) => done += n,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                        Err(e) => return Err(e),
+                    }
+                    continue;
+                }
+                Some(fp::ReadFault::CorruptBit { pos, mask }) => {
+                    match file.read_at(&mut buf[done..], at) {
+                        Ok(0) => return Err(eof(at, buf.len() - done)),
+                        Ok(n) => {
+                            buf[done + pos % n] ^= mask;
+                            done += n;
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                        Err(e) => return Err(e),
+                    }
+                    continue;
+                }
+                None => {}
+            }
+        }
+        match file.read_at(&mut buf[done..], at) {
+            Ok(0) => return Err(eof(at, buf.len() - done)),
+            Ok(n) => done += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Positional write of all of `buf` at `offset` (EINTR handled by
+/// `write_all_at`); failpoint injection site for write flakes.
+pub fn pwrite_all(file: &File, buf: &[u8], offset: u64) -> io::Result<()> {
+    #[cfg(feature = "failpoints")]
+    if crate::testing::failpoints::write_fault() {
+        return Err(io::Error::other("[fault:transient] injected transient write error"));
+    }
+    file.write_all_at(buf, offset)
+}
+
+/// Retry attempts granted to transient faults (beyond the first try).
+pub const TRANSIENT_RETRIES: u32 = 3;
+
+/// Run `f` under the bounded retry policy: transient faults get
+/// [`TRANSIENT_RETRIES`] retries with exponential backoff, a corrupt
+/// result gets exactly one re-read (covers in-flight bit flips), fatal
+/// errors propagate immediately. The final error keeps its fault marker
+/// so callers can still [`classify`] it.
+pub fn with_retry<T>(what: &str, mut f: impl FnMut() -> anyhow::Result<T>) -> anyhow::Result<T> {
+    let mut transient_used = 0u32;
+    let mut corrupt_used = 0u32;
+    loop {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => match classify(&e) {
+                FaultKind::Transient if transient_used < TRANSIENT_RETRIES => {
+                    transient_used += 1;
+                    std::thread::sleep(std::time::Duration::from_micros(50u64 << transient_used));
+                }
+                FaultKind::Corrupt if corrupt_used < 1 => corrupt_used += 1,
+                _ => {
+                    return Err(anyhow::anyhow!(
+                        "{what}: giving up after {transient_used} transient / \
+                         {corrupt_used} corrupt retries: {e}"
+                    ));
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Streaming composition matches one-shot.
+        let a = b"hello ";
+        let b = b"world";
+        let mut joined = a.to_vec();
+        joined.extend_from_slice(b);
+        assert_eq!(crc32_update(crc32(a), b), crc32(&joined));
+    }
+
+    #[test]
+    fn crc32_detects_single_bit_flips() {
+        let mut data = vec![0u8; 4096];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = (i * 7) as u8;
+        }
+        let base = crc32(&data);
+        for &(pos, bit) in &[(0usize, 0u8), (17, 3), (4095, 7)] {
+            let mut flipped = data.clone();
+            flipped[pos] ^= 1 << bit;
+            assert_ne!(crc32(&flipped), base, "flip at byte {pos} bit {bit} undetected");
+        }
+    }
+
+    #[test]
+    fn classify_survives_context_wrapping() {
+        use anyhow::Context;
+        let e = corrupt("slab 3 checksum mismatch");
+        assert_eq!(classify(&e), FaultKind::Corrupt);
+        let wrapped: anyhow::Error =
+            Err::<(), _>(e).context("reading block 3").context("fit sweep 12").unwrap_err();
+        assert_eq!(classify(&wrapped), FaultKind::Corrupt);
+        assert_eq!(classify(&transient("flake")), FaultKind::Transient);
+        assert_eq!(classify(&fatal("gone")), FaultKind::Fatal);
+        assert_eq!(classify(&anyhow::anyhow!("unmarked")), FaultKind::Fatal);
+    }
+
+    #[test]
+    fn io_fault_maps_kinds() {
+        let i = io::Error::new(io::ErrorKind::Interrupted, "EINTR");
+        assert_eq!(classify(&io_fault("pread", i)), FaultKind::Transient);
+        let t = io::Error::new(io::ErrorKind::UnexpectedEof, "short file");
+        assert_eq!(classify(&io_fault("pread", t)), FaultKind::Corrupt);
+        let f = io::Error::new(io::ErrorKind::NotFound, "gone");
+        assert_eq!(classify(&io_fault("open", f)), FaultKind::Fatal);
+    }
+
+    #[test]
+    fn with_retry_policies() {
+        // Transient: succeeds within the budget.
+        let mut left = 2;
+        let got = with_retry("flaky", || {
+            if left > 0 {
+                left -= 1;
+                Err(transient("flake"))
+            } else {
+                Ok(42)
+            }
+        })
+        .unwrap();
+        assert_eq!(got, 42);
+
+        // Transient: budget exhausted -> error keeps the marker.
+        let mut calls = 0u32;
+        let err = with_retry("always-flaky", || -> anyhow::Result<()> {
+            calls += 1;
+            Err(transient("flake"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1 + TRANSIENT_RETRIES);
+        assert_eq!(classify(&err), FaultKind::Transient);
+
+        // Corrupt: exactly one re-read.
+        let mut calls = 0u32;
+        let err = with_retry("bad-disk", || -> anyhow::Result<()> {
+            calls += 1;
+            Err(corrupt("crc mismatch"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 2);
+        assert_eq!(classify(&err), FaultKind::Corrupt);
+
+        // Fatal: no retry.
+        let mut calls = 0u32;
+        let err = with_retry("missing", || -> anyhow::Result<()> {
+            calls += 1;
+            Err(fatal("no such file"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1);
+        assert_eq!(classify(&err), FaultKind::Fatal);
+    }
+
+    #[test]
+    fn pread_exact_reads_across_offsets() {
+        let dir = std::env::temp_dir().join("randnmf_robust_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pread.bin");
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let f = File::open(&path).unwrap();
+        let mut buf = vec![0u8; 400];
+        pread_exact(&f, &mut buf, 300).unwrap();
+        assert_eq!(&buf[..], &data[300..700]);
+        // Reading past EOF is an UnexpectedEof, not a hang or partial Ok.
+        let mut big = vec![0u8; 200];
+        let err = pread_exact(&f, &mut big, 900).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -40,23 +40,41 @@
 //!
 //! [`qb_blocked_sparse_with`]: crate::sketch::blocked::qb_blocked_sparse_with
 //!
-//! Reads use `pread` (`FileExt::read_exact_at`), so a shared store handle
-//! can serve concurrent readers without seek races.
+//! Reads use `pread` via [`robust::pread_exact`] — short reads and
+//! `EINTR` are absorbed, transient failures retried with bounded backoff
+//! ([`robust::with_retry`]), and every failure carries the
+//! `Corrupt`/`Transient`/`Fatal` taxonomy of [`crate::data::robust`] — so
+//! a shared store handle can serve concurrent readers without seek races
+//! and a flaky filesystem degrades to typed errors, never panics.
+//!
+//! ## Checksums
+//!
+//! Both formats gain a backward-compatible **CRC footer** (tag
+//! `"NMFCRCF1"` appended after the payload): the dense footer carries the
+//! header CRC plus one CRC32 *per column-block slab*, validated on every
+//! slab read; the sparse footer carries header, column-pointer, and
+//! payload CRCs — header and colptr are validated at open, the payload by
+//! [`SparseNmfStore::verify_integrity`] (reads there are arbitrary column
+//! ranges, so whole-payload validation is an explicit scrub rather than a
+//! per-read tax). Every writer emits the footer; footer-less files from
+//! older writers still open and read (with a file-length sanity check but
+//! no checksum protection).
 
 use std::fs::File;
-use std::io::Write;
-use std::os::unix::fs::FileExt;
 use std::path::Path;
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use crate::data::robust;
 use crate::linalg::mat::Mat;
 use crate::linalg::sparse::CscMat;
 use crate::sketch::blocked::{ColumnBlockSource, CscBlock, SparseColumnBlockSource};
 
 const MAGIC: &[u8; 8] = b"NMFSTOR1";
 const SPARSE_MAGIC: &[u8; 8] = b"NMFSPRS1";
+/// Tag opening the optional CRC footer of both store formats.
+const FOOTER_MAGIC: &[u8; 8] = b"NMFCRCF1";
 
 /// Read handle for a `.nmfstore` file.
 pub struct NmfStore {
@@ -72,24 +90,85 @@ pub struct NmfStore {
     /// contention is nil and `read_cols`' concurrent readers are
     /// unaffected (they allocate their own slabs as before).
     slab_scratch: Mutex<Vec<f64>>,
+    /// Per-slab CRC32s from the footer; `None` for legacy footer-less
+    /// files (which read without checksum protection).
+    block_crcs: Option<Vec<u32>>,
 }
 
 impl NmfStore {
     /// Open an existing store.
+    ///
+    /// The header is read through the hardened positional-read path, the
+    /// file length is checked against the header's geometry (a truncated
+    /// store fails here, not mid-pass), and when the CRC footer is
+    /// present its header checksum is validated and the per-slab
+    /// checksums are loaded for use on every subsequent read.
     pub fn open(path: &Path) -> Result<NmfStore> {
-        let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let file = File::open(path)
+            .map_err(|e| robust::io_fault(&format!("opening {}", path.display()), e))?;
         let mut header = [0u8; 32];
-        file.read_exact_at(&mut header, 0).context("reading header")?;
+        robust::with_retry("read store header", || {
+            robust::pread_exact(&file, &mut header, 0)
+                .map_err(|e| robust::io_fault("reading header", e))
+        })?;
         if &header[0..8] != MAGIC {
-            bail!("{} is not an nmfstore file", path.display());
+            bail!("{}", robust::corrupt(format!("{} is not an nmfstore file", path.display())));
         }
         let rows = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
         let cols = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
         let block = u64::from_le_bytes(header[24..32].try_into().unwrap()) as usize;
         if block == 0 || rows == 0 || cols == 0 {
-            bail!("degenerate store dimensions {rows}x{cols} block {block}");
+            bail!(
+                "{}",
+                robust::corrupt(format!("degenerate store dimensions {rows}x{cols} block {block}"))
+            );
         }
-        Ok(NmfStore { file, rows, cols, block, slab_scratch: Mutex::new(Vec::new()) })
+        let data_bytes = (rows as u64)
+            .checked_mul(cols as u64)
+            .and_then(|c| c.checked_mul(8))
+            .ok_or_else(|| robust::corrupt(format!("implausible store dims {rows}x{cols}")))?;
+        let len = file.metadata().map_err(|e| robust::io_fault("stat store file", e))?.len();
+        let plain_len = 32 + data_bytes;
+        let nblocks = cols.div_ceil(block);
+        let footer_len = (8 + 4 + 4 * nblocks) as u64;
+        let block_crcs = if len == plain_len {
+            None // legacy footer-less file
+        } else if Some(len) == plain_len.checked_add(footer_len) {
+            let mut footer = vec![0u8; footer_len as usize];
+            robust::with_retry("read store footer", || {
+                robust::pread_exact(&file, &mut footer, plain_len)
+                    .map_err(|e| robust::io_fault("reading CRC footer", e))
+            })?;
+            anyhow::ensure!(
+                &footer[0..8] == FOOTER_MAGIC,
+                "{}",
+                robust::corrupt("store CRC footer has a bad tag")
+            );
+            let stored = u32::from_le_bytes(footer[8..12].try_into().unwrap());
+            let got = robust::crc32(&header);
+            anyhow::ensure!(
+                got == stored,
+                "{}",
+                robust::corrupt(format!(
+                    "store header CRC mismatch: stored {stored:#010x}, computed {got:#010x}"
+                ))
+            );
+            let crcs: Vec<u32> = footer[12..]
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Some(crcs)
+        } else {
+            bail!(
+                "{}",
+                robust::corrupt(format!(
+                    "store length {len} matches neither the bare layout ({plain_len} bytes) \
+                     nor the checksummed one ({} bytes): truncated or trailing garbage",
+                    plain_len + footer_len
+                ))
+            );
+        };
+        Ok(NmfStore { file, rows, cols, block, slab_scratch: Mutex::new(Vec::new()), block_crcs })
     }
 
     pub fn rows(&self) -> usize {
@@ -116,20 +195,56 @@ impl NmfStore {
         (self.cols - j0).min(self.block)
     }
 
+    /// `pread` slab `bi` into `buf` (its exact byte size): short reads
+    /// and `EINTR` absorbed, transient faults retried with backoff, and
+    /// the slab CRC validated when the store carries a footer — a flipped
+    /// bit in flight heals on the corrupt-retry, on-disk rot becomes a
+    /// typed `Corrupt` error. Zero allocations on the success path.
+    fn pread_block(&self, bi: usize, buf: &mut [u8]) -> Result<()> {
+        robust::with_retry("read store block", || {
+            robust::pread_exact(&self.file, buf, self.block_offset(bi))
+                .map_err(|e| robust::io_fault(&format!("reading block {bi}"), e))?;
+            if let Some(crcs) = &self.block_crcs {
+                let got = robust::crc32(buf);
+                anyhow::ensure!(
+                    got == crcs[bi],
+                    "{}",
+                    robust::corrupt(format!(
+                        "block {bi} CRC mismatch: stored {:#010x}, computed {got:#010x}",
+                        crcs[bi]
+                    ))
+                );
+            }
+            Ok(())
+        })
+    }
+
     /// Read one whole native block as a rows×bw matrix.
     pub fn read_native_block(&self, bi: usize) -> Result<Mat> {
         let bw = self.block_cols_of(bi);
         anyhow::ensure!(bw > 0, "block index {bi} out of range");
         let nbytes = self.rows * bw * 8;
         let mut buf = vec![0u8; nbytes];
-        self.file
-            .read_exact_at(&mut buf, self.block_offset(bi))
-            .with_context(|| format!("reading block {bi}"))?;
+        self.pread_block(bi, &mut buf)?;
         let data: Vec<f64> = buf
             .chunks_exact(8)
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect();
         Ok(Mat::from_vec(self.rows, bw, data))
+    }
+
+    /// Scrub the whole store: re-read every slab, validating the per-slab
+    /// CRCs when the footer is present. `Ok(())` means every byte is
+    /// readable and checksum-clean; legacy footer-less files get the
+    /// readability check only.
+    pub fn verify_integrity(&self) -> Result<()> {
+        let mut scratch = self.slab_scratch.lock().unwrap_or_else(|e| e.into_inner());
+        for bi in 0..self.cols.div_ceil(self.block) {
+            let bw = self.block_cols_of(bi);
+            scratch.resize(self.rows * bw, 0.0);
+            self.pread_block(bi, as_bytes_mut(&mut scratch[..]))?;
+        }
+        Ok(())
     }
 
     /// Read an arbitrary column range `[j0, j1)` (slices native blocks).
@@ -199,9 +314,7 @@ impl ColumnBlockSource for NmfStore {
         // on-disk slab layout matches `out` row-major, one contiguous read.
         if j0 % self.block == 0 && self.block_cols_of(j0 / self.block) == w {
             let bi = j0 / self.block;
-            self.file
-                .read_exact_at(as_bytes_mut(out.as_mut_slice()), self.block_offset(bi))
-                .with_context(|| format!("reading block {bi}"))?;
+            self.pread_block(bi, as_bytes_mut(out.as_mut_slice()))?;
             fix_le_in_place(out.as_mut_slice());
             return Ok(());
         }
@@ -219,9 +332,7 @@ impl ColumnBlockSource for NmfStore {
             let lo = j0.max(b0);
             let hi = j1.min(b0 + bw);
             scratch.resize(self.rows * bw, 0.0);
-            self.file
-                .read_exact_at(as_bytes_mut(&mut scratch[..]), self.block_offset(bi))
-                .with_context(|| format!("reading block {bi}"))?;
+            self.pread_block(bi, as_bytes_mut(&mut scratch[..]))?;
             fix_le_in_place(&mut scratch[..]);
             for i in 0..self.rows {
                 let src = &scratch[i * bw + (lo - b0)..i * bw + (hi - b0)];
@@ -235,24 +346,44 @@ impl ColumnBlockSource for NmfStore {
 
 /// Incremental writer: blocks are appended in order, so a generator can
 /// stream a matrix to disk without materializing it.
+///
+/// Writes are positional ([`robust::pwrite_all`] at tracked offsets)
+/// under the bounded retry policy — a transiently-failed write retries
+/// idempotently — and [`NmfStoreWriter::finish`] appends the CRC footer
+/// and `fsync`s, so a finished store is durable and self-validating.
 pub struct NmfStoreWriter {
     file: File,
     rows: usize,
     cols: usize,
     block: usize,
     written_cols: usize,
+    header_crc: u32,
+    block_crcs: Vec<u32>,
 }
 
 impl NmfStoreWriter {
     pub fn create(path: &Path, rows: usize, cols: usize, block: usize) -> Result<NmfStoreWriter> {
         anyhow::ensure!(rows > 0 && cols > 0 && block > 0, "degenerate store shape");
-        let mut file =
-            File::create(path).with_context(|| format!("creating {}", path.display()))?;
-        file.write_all(MAGIC)?;
-        file.write_all(&(rows as u64).to_le_bytes())?;
-        file.write_all(&(cols as u64).to_le_bytes())?;
-        file.write_all(&(block as u64).to_le_bytes())?;
-        Ok(NmfStoreWriter { file, rows, cols, block, written_cols: 0 })
+        let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let mut header = [0u8; 32];
+        header[0..8].copy_from_slice(MAGIC);
+        header[8..16].copy_from_slice(&(rows as u64).to_le_bytes());
+        header[16..24].copy_from_slice(&(cols as u64).to_le_bytes());
+        header[24..32].copy_from_slice(&(block as u64).to_le_bytes());
+        robust::with_retry("write store header", || {
+            robust::pwrite_all(&file, &header, 0)
+                .map_err(|e| robust::io_fault("writing header", e))
+        })?;
+        let header_crc = robust::crc32(&header);
+        Ok(NmfStoreWriter {
+            file,
+            rows,
+            cols,
+            block,
+            written_cols: 0,
+            header_crc,
+            block_crcs: Vec::new(),
+        })
     }
 
     /// Append the next column block. Must be `block` wide except the last.
@@ -268,20 +399,37 @@ impl NmfStoreWriter {
         for &v in m.as_slice() {
             buf.extend_from_slice(&v.to_le_bytes());
         }
-        self.file.write_all(&buf)?;
+        let offset = 32 + (self.written_cols * self.rows * 8) as u64;
+        robust::with_retry("write store block", || {
+            robust::pwrite_all(&self.file, &buf, offset)
+                .map_err(|e| robust::io_fault("writing block", e))
+        })?;
+        self.block_crcs.push(robust::crc32(&buf));
         self.written_cols += m.cols();
         Ok(())
     }
 
-    /// Finish; errors if the column count is short.
-    pub fn finish(mut self) -> Result<()> {
+    /// Finish: errors if the column count is short, then appends the CRC
+    /// footer and syncs the file to disk.
+    pub fn finish(self) -> Result<()> {
         anyhow::ensure!(
             self.written_cols == self.cols,
             "store incomplete: {}/{} columns written",
             self.written_cols,
             self.cols
         );
-        self.file.flush()?;
+        let mut footer = Vec::with_capacity(12 + 4 * self.block_crcs.len());
+        footer.extend_from_slice(FOOTER_MAGIC);
+        footer.extend_from_slice(&self.header_crc.to_le_bytes());
+        for c in &self.block_crcs {
+            footer.extend_from_slice(&c.to_le_bytes());
+        }
+        let offset = 32 + (self.cols * self.rows * 8) as u64;
+        robust::with_retry("write store footer", || {
+            robust::pwrite_all(&self.file, &footer, offset)
+                .map_err(|e| robust::io_fault("writing CRC footer", e))
+        })?;
+        self.file.sync_all().map_err(|e| robust::io_fault("syncing store", e))?;
         Ok(())
     }
 }
@@ -326,35 +474,112 @@ pub struct SparseNmfStore {
     /// then reused — one `pread` per range, zero steady-state
     /// allocations. Behind a mutex because reads take `&self`.
     payload_scratch: Mutex<Vec<u8>>,
+    /// Whole-payload CRC32 from the footer, validated by
+    /// [`SparseNmfStore::verify_integrity`]; `None` for legacy files.
+    payload_crc: Option<u32>,
 }
 
 impl SparseNmfStore {
     /// Open an existing sparse store and load its column pointer.
+    ///
+    /// Header and column pointer are read through the hardened
+    /// positional-read path, the file length is checked against the
+    /// header's geometry (the column-pointer allocation is bounded by the
+    /// actual file size, so a corrupt `cols` can never trigger a huge
+    /// allocation), and when the CRC footer is present the header and
+    /// column-pointer checksums are validated here; the payload checksum
+    /// is kept for [`SparseNmfStore::verify_integrity`].
     pub fn open(path: &Path) -> Result<SparseNmfStore> {
-        let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let file = File::open(path)
+            .map_err(|e| robust::io_fault(&format!("opening {}", path.display()), e))?;
         let mut header = [0u8; SPARSE_HEADER_BYTES as usize];
-        file.read_exact_at(&mut header, 0).context("reading sparse header")?;
+        robust::with_retry("read sparse store header", || {
+            robust::pread_exact(&file, &mut header, 0)
+                .map_err(|e| robust::io_fault("reading sparse header", e))
+        })?;
         if &header[0..8] != SPARSE_MAGIC {
-            bail!("{} is not a sparse nmfstore file", path.display());
+            bail!(
+                "{}",
+                robust::corrupt(format!("{} is not a sparse nmfstore file", path.display()))
+            );
         }
         let rows = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
         let cols = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
         let block = u64::from_le_bytes(header[24..32].try_into().unwrap()) as usize;
         let nnz = u64::from_le_bytes(header[32..40].try_into().unwrap()) as usize;
         if block == 0 || rows == 0 || cols == 0 {
-            bail!("degenerate sparse store dimensions {rows}x{cols} block {block}");
+            bail!(
+                "{}",
+                robust::corrupt(format!(
+                    "degenerate sparse store dimensions {rows}x{cols} block {block}"
+                ))
+            );
         }
-        let mut ptr_bytes = vec![0u8; (cols + 1) * 8];
-        file.read_exact_at(&mut ptr_bytes, SPARSE_HEADER_BYTES)
-            .context("reading column pointer")?;
+        let len = file.metadata().map_err(|e| robust::io_fault("stat sparse store", e))?.len();
+        let ptr_bytes_len = (cols as u64)
+            .checked_add(1)
+            .and_then(|c| c.checked_mul(8))
+            .filter(|&b| SPARSE_HEADER_BYTES + b <= len)
+            .ok_or_else(|| {
+                robust::corrupt(format!("column pointer for {cols} columns does not fit the file"))
+            })?;
+        let mut ptr_bytes = vec![0u8; ptr_bytes_len as usize];
+        robust::with_retry("read sparse column pointer", || {
+            robust::pread_exact(&file, &mut ptr_bytes, SPARSE_HEADER_BYTES)
+                .map_err(|e| robust::io_fault("reading column pointer", e))
+        })?;
         let colptr: Vec<u64> = ptr_bytes
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect();
         if colptr[0] != 0 || colptr[cols] as usize != nnz || colptr.windows(2).any(|w| w[0] > w[1])
         {
-            bail!("corrupt column pointer in {}", path.display());
+            bail!("{}", robust::corrupt(format!("corrupt column pointer in {}", path.display())));
         }
+        let plain_len = (nnz as u64)
+            .checked_mul(ENTRY_BYTES as u64)
+            .and_then(|p| p.checked_add(SPARSE_HEADER_BYTES + ptr_bytes_len))
+            .ok_or_else(|| robust::corrupt(format!("implausible sparse store nnz {nnz}")))?;
+        let payload_crc = if len == plain_len {
+            None // legacy footer-less file
+        } else if Some(len) == plain_len.checked_add(20) {
+            let mut footer = [0u8; 20];
+            robust::with_retry("read sparse store footer", || {
+                robust::pread_exact(&file, &mut footer, plain_len)
+                    .map_err(|e| robust::io_fault("reading CRC footer", e))
+            })?;
+            anyhow::ensure!(
+                &footer[0..8] == FOOTER_MAGIC,
+                "{}",
+                robust::corrupt("sparse store CRC footer has a bad tag")
+            );
+            let header_crc = u32::from_le_bytes(footer[8..12].try_into().unwrap());
+            let colptr_crc = u32::from_le_bytes(footer[12..16].try_into().unwrap());
+            let payload_crc = u32::from_le_bytes(footer[16..20].try_into().unwrap());
+            for (what, stored, got) in [
+                ("header", header_crc, robust::crc32(&header)),
+                ("column pointer", colptr_crc, robust::crc32(&ptr_bytes)),
+            ] {
+                anyhow::ensure!(
+                    got == stored,
+                    "{}",
+                    robust::corrupt(format!(
+                        "sparse store {what} CRC mismatch: stored {stored:#010x}, \
+                         computed {got:#010x}"
+                    ))
+                );
+            }
+            Some(payload_crc)
+        } else {
+            bail!(
+                "{}",
+                robust::corrupt(format!(
+                    "sparse store length {len} matches neither the bare layout ({plain_len} \
+                     bytes) nor the checksummed one ({} bytes): truncated or trailing garbage",
+                    plain_len + 20
+                ))
+            );
+        };
         Ok(SparseNmfStore {
             file,
             rows,
@@ -363,6 +588,7 @@ impl SparseNmfStore {
             nnz,
             colptr,
             payload_scratch: Mutex::new(Vec::new()),
+            payload_crc,
         })
     }
 
@@ -409,6 +635,40 @@ impl SparseNmfStore {
         }
         CscMat::from_parts(self.rows, self.cols, indptr, indices, values)
     }
+
+    /// Scrub the payload: stream every entry byte back through the
+    /// hardened read path and compare the whole-payload CRC32 from the
+    /// footer. Header and column pointer were already validated at open.
+    /// `Ok(())` means the file is readable end to end and checksum-clean;
+    /// legacy footer-less files get the readability check only.
+    pub fn verify_integrity(&self) -> Result<()> {
+        const CHUNK: usize = 1 << 20;
+        let total = self.nnz * ENTRY_BYTES;
+        let mut staging = self.payload_scratch.lock().unwrap_or_else(|e| e.into_inner());
+        let mut crc = 0u32;
+        let mut done = 0usize;
+        while done < total {
+            let n = CHUNK.min(total - done);
+            staging.resize(n, 0);
+            let offset = self.payload_offset() + done as u64;
+            robust::with_retry("scrub sparse payload", || {
+                robust::pread_exact(&self.file, &mut staging[..n], offset)
+                    .map_err(|e| robust::io_fault("scrubbing sparse payload", e))
+            })?;
+            crc = robust::crc32_update(crc, &staging[..n]);
+            done += n;
+        }
+        if let Some(stored) = self.payload_crc {
+            anyhow::ensure!(
+                crc == stored,
+                "{}",
+                robust::corrupt(format!(
+                    "sparse store payload CRC mismatch: stored {stored:#010x}, computed {crc:#010x}"
+                ))
+            );
+        }
+        Ok(())
+    }
 }
 
 impl SparseColumnBlockSource for SparseNmfStore {
@@ -442,28 +702,44 @@ impl SparseColumnBlockSource for SparseNmfStore {
         let nbytes = (p1 - p0) * ENTRY_BYTES;
         let mut staging = self.payload_scratch.lock().unwrap_or_else(|e| e.into_inner());
         staging.resize(nbytes, 0);
-        self.file
-            .read_exact_at(&mut staging[..], self.payload_offset() + (p0 * ENTRY_BYTES) as u64)
-            .with_context(|| format!("reading sparse columns {j0}..{j1}"))?;
+        let offset = self.payload_offset() + (p0 * ENTRY_BYTES) as u64;
+        // Read *and validate* under the retry policy, before anything is
+        // pushed into `out` — an in-flight bit flip in a row index is
+        // caught by the validation pass and heals on the corrupt-retry;
+        // only a fully validated buffer is ever decoded.
+        robust::with_retry("read sparse store columns", || {
+            robust::pread_exact(&self.file, &mut staging[..], offset)
+                .map_err(|e| robust::io_fault(&format!("reading sparse columns {j0}..{j1}"), e))?;
+            let mut off = 0usize;
+            for j in j0..j1 {
+                let cn = (self.colptr[j + 1] - self.colptr[j]) as usize;
+                let mut prev: Option<usize> = None;
+                for t in 0..cn {
+                    let e = off + t * ENTRY_BYTES;
+                    let row = u64::from_le_bytes(staging[e..e + 8].try_into().unwrap()) as usize;
+                    anyhow::ensure!(
+                        row < self.rows,
+                        "{}",
+                        robust::corrupt(format!(
+                            "sparse store row {row} out of bounds in column {j}"
+                        ))
+                    );
+                    anyhow::ensure!(
+                        prev.is_none_or(|p| p < row),
+                        "{}",
+                        robust::corrupt(format!(
+                            "sparse store rows not strictly ascending in column {j}"
+                        ))
+                    );
+                    prev = Some(row);
+                }
+                off += cn * ENTRY_BYTES;
+            }
+            Ok(())
+        })?;
         let mut off = 0usize;
         for j in j0..j1 {
             let cn = (self.colptr[j + 1] - self.colptr[j]) as usize;
-            // Validation pass over the row indices (8 of each entry's 16
-            // bytes) before anything is pushed into `out`.
-            let mut prev: Option<usize> = None;
-            for t in 0..cn {
-                let e = off + t * ENTRY_BYTES;
-                let row = u64::from_le_bytes(staging[e..e + 8].try_into().unwrap()) as usize;
-                anyhow::ensure!(
-                    row < self.rows,
-                    "corrupt sparse store: row {row} out of bounds in column {j}"
-                );
-                anyhow::ensure!(
-                    prev.is_none_or(|p| p < row),
-                    "corrupt sparse store: rows not strictly ascending in column {j}"
-                );
-                prev = Some(row);
-            }
             let base = off;
             out.push_col_with(cn, |t| {
                 let e = base + t * ENTRY_BYTES;
@@ -485,8 +761,10 @@ pub struct SparseNmfStoreWriter {
     file: File,
     rows: usize,
     cols: usize,
+    block: usize,
     colptr: Vec<u64>,
     buf: Vec<u8>,
+    payload_crc: u32,
 }
 
 impl SparseNmfStoreWriter {
@@ -497,18 +775,23 @@ impl SparseNmfStoreWriter {
         block: usize,
     ) -> Result<SparseNmfStoreWriter> {
         anyhow::ensure!(rows > 0 && cols > 0 && block > 0, "degenerate sparse store shape");
-        let mut file =
-            File::create(path).with_context(|| format!("creating {}", path.display()))?;
-        file.write_all(SPARSE_MAGIC)?;
-        file.write_all(&(rows as u64).to_le_bytes())?;
-        file.write_all(&(cols as u64).to_le_bytes())?;
-        file.write_all(&(block as u64).to_le_bytes())?;
-        file.write_all(&0u64.to_le_bytes())?; // nnz, backfilled at finish
-        // Reserve the colptr region (backfilled at finish).
-        file.write_all(&vec![0u8; (cols + 1) * 8])?;
+        let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        // Provisional header (nnz 0, rewritten whole at finish) plus the
+        // zeroed colptr reservation, written positionally so a transient
+        // failure retries idempotently.
+        let mut lead = vec![0u8; SPARSE_HEADER_BYTES as usize + (cols + 1) * 8];
+        lead[0..8].copy_from_slice(SPARSE_MAGIC);
+        lead[8..16].copy_from_slice(&(rows as u64).to_le_bytes());
+        lead[16..24].copy_from_slice(&(cols as u64).to_le_bytes());
+        lead[24..32].copy_from_slice(&(block as u64).to_le_bytes());
+        robust::with_retry("write sparse store header", || {
+            robust::pwrite_all(&file, &lead, 0)
+                .map_err(|e| robust::io_fault("writing sparse header", e))
+        })?;
         let mut colptr = Vec::with_capacity(cols + 1);
         colptr.push(0);
-        Ok(SparseNmfStoreWriter { file, rows, cols, colptr, buf: Vec::new() })
+        let buf = Vec::new();
+        Ok(SparseNmfStoreWriter { file, rows, cols, block, colptr, buf, payload_crc: 0 })
     }
 
     /// Append the next column's `(row indices, values)` — rows strictly
@@ -532,15 +815,22 @@ impl SparseNmfStoreWriter {
             self.buf.extend_from_slice(&(i as u64).to_le_bytes());
             self.buf.extend_from_slice(&v.to_le_bytes());
         }
-        self.file.write_all(&self.buf)?;
         let prev = *self.colptr.last().unwrap();
+        let offset = SPARSE_HEADER_BYTES + ((self.cols + 1) * 8) as u64 + prev * ENTRY_BYTES as u64;
+        robust::with_retry("append sparse column", || {
+            robust::pwrite_all(&self.file, &self.buf, offset)
+                .map_err(|e| robust::io_fault("appending sparse column", e))
+        })?;
+        self.payload_crc = robust::crc32_update(self.payload_crc, &self.buf);
         self.colptr.push(prev + rows.len() as u64);
         Ok(())
     }
 
     /// Finish: errors if the column count is short, then backfills `nnz`
-    /// and the column pointer into their reserved regions.
-    pub fn finish(mut self) -> Result<()> {
+    /// and the column pointer into their reserved regions, appends the
+    /// CRC footer (header, column-pointer, and payload checksums), and
+    /// syncs the file to disk.
+    pub fn finish(self) -> Result<()> {
         anyhow::ensure!(
             self.colptr.len() == self.cols + 1,
             "sparse store incomplete: {}/{} columns written",
@@ -548,15 +838,32 @@ impl SparseNmfStoreWriter {
             self.cols
         );
         let nnz = *self.colptr.last().unwrap();
-        self.file.write_all_at(&nnz.to_le_bytes(), 32).context("backfilling nnz")?;
+        let mut header = [0u8; SPARSE_HEADER_BYTES as usize];
+        header[0..8].copy_from_slice(SPARSE_MAGIC);
+        header[8..16].copy_from_slice(&(self.rows as u64).to_le_bytes());
+        header[16..24].copy_from_slice(&(self.cols as u64).to_le_bytes());
+        header[24..32].copy_from_slice(&(self.block as u64).to_le_bytes());
+        header[32..40].copy_from_slice(&nnz.to_le_bytes());
         let mut ptr_bytes = Vec::with_capacity(self.colptr.len() * 8);
         for p in &self.colptr {
             ptr_bytes.extend_from_slice(&p.to_le_bytes());
         }
-        self.file
-            .write_all_at(&ptr_bytes, SPARSE_HEADER_BYTES)
-            .context("backfilling column pointer")?;
-        self.file.flush()?;
+        let mut footer = Vec::with_capacity(20);
+        footer.extend_from_slice(FOOTER_MAGIC);
+        footer.extend_from_slice(&robust::crc32(&header).to_le_bytes());
+        footer.extend_from_slice(&robust::crc32(&ptr_bytes).to_le_bytes());
+        footer.extend_from_slice(&self.payload_crc.to_le_bytes());
+        let footer_off = SPARSE_HEADER_BYTES + ptr_bytes.len() as u64 + nnz * ENTRY_BYTES as u64;
+        robust::with_retry("finalize sparse store", || {
+            robust::pwrite_all(&self.file, &header, 0)
+                .map_err(|e| robust::io_fault("backfilling sparse header", e))?;
+            robust::pwrite_all(&self.file, &ptr_bytes, SPARSE_HEADER_BYTES)
+                .map_err(|e| robust::io_fault("backfilling column pointer", e))?;
+            robust::pwrite_all(&self.file, &footer, footer_off)
+                .map_err(|e| robust::io_fault("writing CRC footer", e))?;
+            Ok(())
+        })?;
+        self.file.sync_all().map_err(|e| robust::io_fault("syncing sparse store", e))?;
         Ok(())
     }
 }
@@ -742,6 +1049,90 @@ mod tests {
         let err = store.read_block_into(0, 6, &mut block);
         assert!(err.is_err(), "OOB payload row must be an Err");
         assert!(store.read_all().is_err());
+    }
+
+    #[test]
+    fn dense_crc_footer_catches_slab_bit_flip() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let m = rng.uniform_mat(7, 12);
+        let path = tmp("dense_rot.nmfstore");
+        write_mat(&path, &m, 5).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a low mantissa bit deep inside the second slab: the value
+        // stays finite, so only the slab CRC can catch it.
+        let pos = 32 + 7 * 5 * 8 + 24;
+        bytes[pos] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let store = NmfStore::open(&path).unwrap(); // header intact
+        let err = store.read_all().unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        assert_eq!(robust::classify(&err), robust::FaultKind::Corrupt);
+        assert!(store.verify_integrity().is_err());
+        // The untouched first slab still reads clean.
+        assert_eq!(store.read_cols(0, 5).unwrap(), m.col_block(0, 5));
+    }
+
+    #[test]
+    fn legacy_footerless_dense_store_still_reads() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let m = rng.uniform_mat(6, 9);
+        let path = tmp("dense_legacy.nmfstore");
+        write_mat(&path, &m, 4).unwrap();
+        let plain = 32 + 6 * 9 * 8;
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.len() > plain, "writer must emit a footer");
+        std::fs::write(&path, &bytes[..plain]).unwrap();
+        let store = NmfStore::open(&path).unwrap();
+        assert_eq!(store.read_all().unwrap(), m);
+        store.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn truncated_dense_store_rejected_at_open() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        let m = rng.uniform_mat(6, 9);
+        let path = tmp("dense_trunc.nmfstore");
+        write_mat(&path, &m, 4).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 11]).unwrap();
+        let err = NmfStore::open(&path).unwrap_err();
+        assert_eq!(robust::classify(&err), robust::FaultKind::Corrupt);
+    }
+
+    #[test]
+    fn sparse_crc_footer_and_scrub() {
+        let (_dense, csc) = sparse_fixture(10, 9, 31);
+        assert!(csc.nnz() > 1);
+        let path = tmp("sparse_rot.nmfstore");
+        write_csc(&path, &csc, 4).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let store = SparseNmfStore::open(&path).unwrap();
+        store.verify_integrity().unwrap();
+        drop(store);
+
+        // Bit rot in a payload *value* passes the structural row checks;
+        // only the checksum scrub can catch it.
+        let payload_off = 40 + (9 + 1) * 8;
+        let mut bytes = clean.clone();
+        bytes[payload_off + 8] ^= 0x01; // low mantissa bit of first value
+        std::fs::write(&path, &bytes).unwrap();
+        let store = SparseNmfStore::open(&path).unwrap();
+        let err = store.verify_integrity().unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        assert_eq!(robust::classify(&err), robust::FaultKind::Corrupt);
+        drop(store);
+
+        // Bit rot in the column pointer is caught at open.
+        let mut bytes = clean.clone();
+        bytes[40 + 8] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(SparseNmfStore::open(&path).is_err());
+
+        // Legacy footer-less file still opens, reads, and scrubs.
+        std::fs::write(&path, &clean[..clean.len() - 20]).unwrap();
+        let store = SparseNmfStore::open(&path).unwrap();
+        assert_eq!(store.read_all().unwrap(), csc);
+        store.verify_integrity().unwrap();
     }
 
     #[test]

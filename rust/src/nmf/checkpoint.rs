@@ -1,0 +1,771 @@
+//! `.nmfckpt` — versioned, CRC-guarded solver checkpoints.
+//!
+//! A checkpoint captures *everything* the iteration loop of
+//! [`Hals`](crate::nmf::hals::Hals), [`Mu`](crate::nmf::mu::Mu) or
+//! [`RandomizedHals`](crate::nmf::rhals::RandomizedHals) carries across
+//! sweeps: the factors (`W`, `Hᵀ`, and the compressed `W̃` for the
+//! randomized solver), the sweep index, the full [`Pcg64`] state
+//! (Box–Muller spare included), the current sweep-order permutation, the
+//! projected-gradient bookkeeping (`pg⁰`, the carried `‖∇ᴾW‖²`), the
+//! convergence trace, and a digest of the options
+//! ([`NmfOptions::options_hash`](crate::nmf::options::NmfOptions::options_hash))
+//! plus the data's `‖X‖²` bits. Restoring it reproduces the uninterrupted
+//! fit **bit for bit** — the property `tests/test_checkpoint_resume.rs`
+//! pins across all three solvers, both thread regimes, dense and sparse.
+//!
+//! ## Format (`NMFCKPT1`, little-endian)
+//!
+//! | field | bytes |
+//! |---|---|
+//! | magic `"NMFCKPT1"` | 8 |
+//! | options hash | u64 |
+//! | `‖X‖_F²` bits | f64 |
+//! | solver id, order kind, presence flags, pad | 4×u8 |
+//! | `k, m, n, l, sweep` | 5×u64 |
+//! | RNG state | 41 |
+//! | `pg⁰`, carried `‖∇ᴾW‖²`, pg ratio, elapsed s | 4×f64 |
+//! | order length + permutation | u64 + len×u64 |
+//! | `W` (m×k), `Hᵀ` (n×k), `W̃` (l×k, flag-gated) | row-major f64 |
+//! | trace length + entries (iter, elapsed, rel err, ‖∇ᴾ‖²) | u64 + len×32 |
+//! | CRC32 of everything above | u32 |
+//!
+//! ## Durability
+//!
+//! Writes go to a `.tmp` sibling, are flushed with `fsync`, and land via
+//! atomic rename — a kill at any instant leaves either the previous
+//! checkpoint or the new one, never a torn file. Serialization reuses a
+//! caller-owned staging buffer, so a fit that checkpoints on a cadence
+//! reaches an allocation fixed point after the first write (and a fit
+//! whose cadence never fires stays exactly zero-allocation).
+//!
+//! Loads re-read the whole file under the bounded-retry policy of
+//! [`crate::data::robust`], reject any CRC/magic/shape/permutation
+//! violation as a typed `Corrupt` fault, and never hand back non-finite
+//! or negative factors.
+
+use std::fs::File;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::data::robust;
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Pcg64;
+use crate::nmf::model::TracePoint;
+use crate::nmf::options::{NmfOptions, UpdateOrder};
+
+/// Format magic: "NMFCKPT" + version digit.
+pub const CKPT_MAGIC: &[u8; 8] = b"NMFCKPT1";
+
+const FLAG_PG0: u8 = 1 << 0;
+const FLAG_PGW_PREV: u8 = 1 << 1;
+const FLAG_WT: u8 = 1 << 2;
+
+/// Which solver wrote the checkpoint (resume refuses a mismatch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    Hals,
+    Mu,
+    Rhals,
+}
+
+impl SolverKind {
+    fn id(self) -> u8 {
+        match self {
+            SolverKind::Hals => 0,
+            SolverKind::Mu => 1,
+            SolverKind::Rhals => 2,
+        }
+    }
+
+    fn from_id(id: u8) -> Option<SolverKind> {
+        match id {
+            0 => Some(SolverKind::Hals),
+            1 => Some(SolverKind::Mu),
+            2 => Some(SolverKind::Rhals),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverKind::Hals => "hals",
+            SolverKind::Mu => "mu",
+            SolverKind::Rhals => "rhals",
+        }
+    }
+}
+
+fn order_kind_id(kind: UpdateOrder) -> u8 {
+    match kind {
+        UpdateOrder::BlockedCyclic => 0,
+        UpdateOrder::InterleavedCyclic => 1,
+        UpdateOrder::Shuffled => 2,
+    }
+}
+
+fn order_kind_from_id(id: u8) -> Option<UpdateOrder> {
+    match id {
+        0 => Some(UpdateOrder::BlockedCyclic),
+        1 => Some(UpdateOrder::InterleavedCyclic),
+        2 => Some(UpdateOrder::Shuffled),
+        _ => None,
+    }
+}
+
+/// Borrowed view of the loop state a solver hands to [`write`].
+pub struct CheckpointState<'a> {
+    pub solver: SolverKind,
+    /// Completed sweep count at the instant of the snapshot.
+    pub sweep: usize,
+    pub w: &'a Mat,
+    /// The transposed coefficient factor (`n×k`), as the solvers store it.
+    pub ht: &'a Mat,
+    /// Randomized HALS only: the compressed factor `W̃ = QᵀW` (`l×k`).
+    pub wt: Option<&'a Mat>,
+    pub rng: &'a Pcg64,
+    pub order_kind: UpdateOrder,
+    /// Current permutation (empty for MU, which sweeps no order).
+    pub order: &'a [usize],
+    pub pg0: Option<f64>,
+    /// The `‖∇ᴾW‖²` carried from the bottom of the sweep (HALS/rHALS).
+    pub pgw_prev: Option<f64>,
+    pub pg_ratio: f64,
+    /// Wall-clock seconds consumed so far (resume continues the count).
+    pub elapsed_s: f64,
+    pub trace: &'a [TracePoint],
+}
+
+/// A validated, fully-parsed checkpoint.
+pub struct LoadedCheckpoint {
+    pub solver: SolverKind,
+    pub options_hash: u64,
+    /// Bit pattern of the data's squared Frobenius norm — a cheap,
+    /// already-computed fingerprint that stops a checkpoint from resuming
+    /// against different data.
+    pub data_norm_sq: f64,
+    pub sweep: usize,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub l: usize,
+    pub w: Mat,
+    pub ht: Mat,
+    pub wt: Option<Mat>,
+    pub rng: Pcg64,
+    pub order_kind: UpdateOrder,
+    pub order: Vec<usize>,
+    pub pg0: Option<f64>,
+    pub pgw_prev: Option<f64>,
+    pub pg_ratio: f64,
+    pub elapsed_s: f64,
+    pub trace: Vec<TracePoint>,
+}
+
+impl LoadedCheckpoint {
+    /// Check the checkpoint against the fit about to consume it: same
+    /// solver, same trajectory-shaping options, same data fingerprint,
+    /// same shapes. Every violation is a clean, specific error — never a
+    /// silent divergence. `l` is 0 for the deterministic solvers.
+    pub fn verify(
+        &self,
+        solver: SolverKind,
+        options_hash: u64,
+        data_norm_sq: f64,
+        m: usize,
+        n: usize,
+        k: usize,
+        l: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.solver == solver,
+            "checkpoint was written by the {} solver; cannot resume it with {}",
+            self.solver.name(),
+            solver.name()
+        );
+        anyhow::ensure!(
+            self.options_hash == options_hash,
+            "checkpoint options hash {:#018x} does not match the current \
+             configuration {:#018x}: the fit was started under different \
+             hyperparameters (rank/seed/order/regularization/...)",
+            self.options_hash,
+            options_hash
+        );
+        anyhow::ensure!(
+            self.data_norm_sq.to_bits() == data_norm_sq.to_bits(),
+            "checkpoint data fingerprint ‖X‖² = {} does not match the input's {}: \
+             this checkpoint belongs to a different matrix",
+            self.data_norm_sq,
+            data_norm_sq
+        );
+        anyhow::ensure!(
+            (self.m, self.n, self.k, self.l) == (m, n, k, l),
+            "checkpoint shape (m={}, n={}, k={}, l={}) does not match the fit \
+             (m={m}, n={n}, k={k}, l={l})",
+            self.m,
+            self.n,
+            self.k,
+            self.l
+        );
+        let want_order = if solver == SolverKind::Mu { 0 } else { k };
+        anyhow::ensure!(
+            self.order.len() == want_order,
+            "checkpoint order length {} does not match the {} solver (want {})",
+            self.order.len(),
+            solver.name(),
+            want_order
+        );
+        Ok(())
+    }
+}
+
+/// The temp sibling a write stages into before the atomic rename.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_mat(buf: &mut Vec<u8>, m: &Mat) {
+    for v in m.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize `state` into `buf` (cleared and reused — the staging buffer
+/// reaches a capacity fixed point after the first write) and publish it
+/// to `path` via temp file + `fsync` + atomic rename. Transient write
+/// failures are retried under the bounded policy of
+/// [`robust::with_retry`]; a kill at any point leaves the previous
+/// checkpoint intact.
+pub fn write(
+    path: &Path,
+    options_hash: u64,
+    data_norm_sq: f64,
+    state: &CheckpointState<'_>,
+    buf: &mut Vec<u8>,
+) -> Result<()> {
+    let (m, k) = state.w.shape();
+    let n = state.ht.rows();
+    debug_assert_eq!(state.ht.cols(), k);
+    let l = state.wt.map_or(0, |wt| {
+        debug_assert_eq!(wt.cols(), k);
+        wt.rows()
+    });
+
+    buf.clear();
+    buf.extend_from_slice(CKPT_MAGIC);
+    put_u64(buf, options_hash);
+    put_f64(buf, data_norm_sq);
+    let mut flags = 0u8;
+    if state.pg0.is_some() {
+        flags |= FLAG_PG0;
+    }
+    if state.pgw_prev.is_some() {
+        flags |= FLAG_PGW_PREV;
+    }
+    if state.wt.is_some() {
+        flags |= FLAG_WT;
+    }
+    buf.extend_from_slice(&[state.solver.id(), order_kind_id(state.order_kind), flags, 0]);
+    for dim in [k, m, n, l, state.sweep] {
+        put_u64(buf, dim as u64);
+    }
+    let mut rng_bytes = [0u8; Pcg64::STATE_BYTES];
+    state.rng.save_state(&mut rng_bytes);
+    buf.extend_from_slice(&rng_bytes);
+    put_f64(buf, state.pg0.unwrap_or(0.0));
+    put_f64(buf, state.pgw_prev.unwrap_or(0.0));
+    put_f64(buf, state.pg_ratio);
+    put_f64(buf, state.elapsed_s);
+    put_u64(buf, state.order.len() as u64);
+    for &j in state.order {
+        put_u64(buf, j as u64);
+    }
+    put_mat(buf, state.w);
+    put_mat(buf, state.ht);
+    if let Some(wt) = state.wt {
+        put_mat(buf, wt);
+    }
+    put_u64(buf, state.trace.len() as u64);
+    for t in state.trace {
+        put_u64(buf, t.iter as u64);
+        put_f64(buf, t.elapsed_s);
+        put_f64(buf, t.rel_err);
+        put_f64(buf, t.pg_norm_sq);
+    }
+    let crc = robust::crc32(buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+
+    let tmp = tmp_path(path);
+    robust::with_retry("write checkpoint", || {
+        let f = File::create(&tmp)
+            .map_err(|e| robust::io_fault("create checkpoint temp file", e))?;
+        robust::pwrite_all(&f, buf, 0)
+            .map_err(|e| robust::io_fault("write checkpoint temp file", e))?;
+        f.sync_all().map_err(|e| robust::io_fault("fsync checkpoint", e))?;
+        Ok(())
+    })?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| robust::io_fault("rename checkpoint into place", e))?;
+    Ok(())
+}
+
+/// Byte cursor over the validated payload; every read is bounds-checked
+/// and an overrun is a `Corrupt` fault (the CRC passed, so an overrun
+/// means a malformed — not merely damaged — file).
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.b.len());
+        let end = end.ok_or_else(|| {
+            robust::corrupt(format!(
+                "checkpoint truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.b.len().saturating_sub(self.pos)
+            ))
+        })?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn dim(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64()?;
+        anyhow::ensure!(
+            v <= 1 << 40,
+            "{}",
+            robust::corrupt(format!("checkpoint {what} = {v} exceeds the sanity bound 2^40"))
+        );
+        Ok(v as usize)
+    }
+
+    fn mat(&mut self, rows: usize, cols: usize, what: &str) -> Result<Mat> {
+        let count = rows
+            .checked_mul(cols)
+            .and_then(|c| c.checked_mul(8))
+            .ok_or_else(|| robust::corrupt(format!("checkpoint {what} size overflows")))?;
+        let bytes = self.take(count)?;
+        let mut out = Mat::zeros(rows, cols);
+        for (dst, chunk) in out.as_mut_slice().iter_mut().zip(bytes.chunks_exact(8)) {
+            *dst = f64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(out)
+    }
+}
+
+/// Read and validate a checkpoint. The whole file is read at once under
+/// the bounded-retry policy (a CRC mismatch earns exactly one re-read —
+/// an in-flight flip heals, on-disk damage is reported as `Corrupt`).
+pub fn load(path: &Path) -> Result<LoadedCheckpoint> {
+    let f = File::open(path)
+        .map_err(|e| robust::io_fault(&format!("open checkpoint {}", path.display()), e))?;
+    let len = f
+        .metadata()
+        .map_err(|e| robust::io_fault("stat checkpoint", e))?
+        .len() as usize;
+    anyhow::ensure!(
+        len >= CKPT_MAGIC.len() + 4,
+        "{}",
+        robust::corrupt(format!("checkpoint is only {len} bytes — not a .nmfckpt file"))
+    );
+    let mut buf = vec![0u8; len];
+    robust::with_retry("load checkpoint", || {
+        robust::pread_exact(&f, &mut buf, 0)
+            .map_err(|e| robust::io_fault("read checkpoint", e))?;
+        let stored = u32::from_le_bytes(buf[len - 4..].try_into().unwrap());
+        let actual = robust::crc32(&buf[..len - 4]);
+        anyhow::ensure!(
+            stored == actual,
+            "{}",
+            robust::corrupt(format!(
+                "checkpoint CRC mismatch: stored {stored:#010x}, computed {actual:#010x}"
+            ))
+        );
+        Ok(())
+    })?;
+    parse(&buf[..len - 4])
+}
+
+fn parse(payload: &[u8]) -> Result<LoadedCheckpoint> {
+    let mut cur = Cur { b: payload, pos: 0 };
+    let magic = cur.take(CKPT_MAGIC.len())?;
+    anyhow::ensure!(
+        magic == CKPT_MAGIC,
+        "{}",
+        robust::corrupt(format!("bad checkpoint magic {magic:?} (want {CKPT_MAGIC:?})"))
+    );
+    let options_hash = cur.u64()?;
+    let data_norm_sq = cur.f64()?;
+    let head = cur.take(4)?;
+    let solver = SolverKind::from_id(head[0])
+        .ok_or_else(|| robust::corrupt(format!("unknown solver id {}", head[0])))?;
+    let order_kind = order_kind_from_id(head[1])
+        .ok_or_else(|| robust::corrupt(format!("unknown order kind {}", head[1])))?;
+    let flags = head[2];
+    anyhow::ensure!(
+        flags & !(FLAG_PG0 | FLAG_PGW_PREV | FLAG_WT) == 0,
+        "{}",
+        robust::corrupt(format!("unknown checkpoint flags {flags:#04x}"))
+    );
+    let k = cur.dim("k")?;
+    let m = cur.dim("m")?;
+    let n = cur.dim("n")?;
+    let l = cur.dim("l")?;
+    let sweep = cur.dim("sweep")?;
+    anyhow::ensure!(
+        k >= 1 && m >= k && n >= k,
+        "{}",
+        robust::corrupt(format!("implausible checkpoint shape m={m} n={n} k={k}"))
+    );
+    let has_wt = flags & FLAG_WT != 0;
+    anyhow::ensure!(
+        has_wt == (l > 0),
+        "{}",
+        robust::corrupt(format!("W̃ flag {has_wt} inconsistent with l={l}"))
+    );
+
+    let rng_bytes: [u8; Pcg64::STATE_BYTES] =
+        cur.take(Pcg64::STATE_BYTES)?.try_into().unwrap();
+    let rng = Pcg64::restore_state(&rng_bytes)
+        .map_err(|e| robust::corrupt(format!("checkpoint {e}")))?;
+    let pg0_raw = cur.f64()?;
+    let pgw_raw = cur.f64()?;
+    let pg_ratio = cur.f64()?;
+    let elapsed_s = cur.f64()?;
+    let pg0 = if flags & FLAG_PG0 != 0 {
+        anyhow::ensure!(
+            pg0_raw.is_finite() && pg0_raw >= 0.0,
+            "{}",
+            robust::corrupt(format!("pg0 = {pg0_raw} is not a squared norm"))
+        );
+        Some(pg0_raw)
+    } else {
+        None
+    };
+    let pgw_prev = if flags & FLAG_PGW_PREV != 0 {
+        anyhow::ensure!(
+            pgw_raw.is_finite() && pgw_raw >= 0.0,
+            "{}",
+            robust::corrupt(format!("carried ‖∇ᴾW‖² = {pgw_raw} is not a squared norm"))
+        );
+        Some(pgw_raw)
+    } else {
+        None
+    };
+    anyhow::ensure!(
+        elapsed_s.is_finite() && elapsed_s >= 0.0,
+        "{}",
+        robust::corrupt(format!("elapsed_s = {elapsed_s} is not a duration"))
+    );
+
+    let order_len = cur.dim("order length")?;
+    anyhow::ensure!(
+        order_len == 0 || order_len == k,
+        "{}",
+        robust::corrupt(format!("order length {order_len} is neither 0 nor k={k}"))
+    );
+    let mut order = Vec::with_capacity(order_len);
+    let mut seen = vec![false; order_len];
+    for _ in 0..order_len {
+        let j = cur.u64()? as usize;
+        anyhow::ensure!(
+            j < order_len && !seen[j],
+            "{}",
+            robust::corrupt(format!("order is not a permutation of 0..{order_len}"))
+        );
+        seen[j] = true;
+        order.push(j);
+    }
+
+    let w = cur.mat(m, k, "W")?;
+    let ht = cur.mat(n, k, "Hᵀ")?;
+    let wt = if has_wt { Some(cur.mat(l, k, "W̃")?) } else { None };
+    for (name, mat, nonneg) in
+        [("W", &w, true), ("Hᵀ", &ht, true), ("W̃", wt.as_ref().unwrap_or(&w), false)]
+    {
+        anyhow::ensure!(
+            !mat.has_non_finite(),
+            "{}",
+            robust::corrupt(format!("checkpoint factor {name} contains NaN/Inf"))
+        );
+        anyhow::ensure!(
+            !nonneg || mat.is_nonneg(),
+            "{}",
+            robust::corrupt(format!("checkpoint factor {name} contains negative entries"))
+        );
+    }
+
+    let trace_len = cur.dim("trace length")?;
+    let mut trace = Vec::with_capacity(trace_len.min(1 << 20));
+    for _ in 0..trace_len {
+        let iter = cur.u64()? as usize;
+        let elapsed = cur.f64()?;
+        let rel_err = cur.f64()?;
+        let pg = cur.f64()?;
+        trace.push(TracePoint { iter, elapsed_s: elapsed, rel_err, pg_norm_sq: pg });
+    }
+    anyhow::ensure!(
+        cur.pos == payload.len(),
+        "{}",
+        robust::corrupt(format!(
+            "checkpoint has {} trailing bytes past the parsed payload",
+            payload.len() - cur.pos
+        ))
+    );
+
+    Ok(LoadedCheckpoint {
+        solver,
+        options_hash,
+        data_norm_sq,
+        sweep,
+        m,
+        n,
+        k,
+        l,
+        w,
+        ht,
+        wt,
+        rng,
+        order_kind,
+        order,
+        pg0,
+        pgw_prev,
+        pg_ratio,
+        elapsed_s,
+        trace,
+    })
+}
+
+/// Load `opts.resume_from` (when set) and verify it against the fit being
+/// started — the shared resume entry point of the three solvers.
+pub fn load_for_resume(
+    opts: &NmfOptions,
+    solver: SolverKind,
+    data_norm_sq: f64,
+    m: usize,
+    n: usize,
+    l: usize,
+) -> Result<Option<LoadedCheckpoint>> {
+    let Some(path) = &opts.resume_from else { return Ok(None) };
+    let ck = load(path)?;
+    ck.verify(solver, opts.options_hash(), data_norm_sq, m, n, opts.rank, l)?;
+    Ok(Some(ck))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        let d = std::env::temp_dir().join("randnmf_ckpt_unit");
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_state<'a>(
+        w: &'a Mat,
+        ht: &'a Mat,
+        wt: Option<&'a Mat>,
+        rng: &'a Pcg64,
+        order: &'a [usize],
+        trace: &'a [TracePoint],
+    ) -> CheckpointState<'a> {
+        CheckpointState {
+            solver: if wt.is_some() { SolverKind::Rhals } else { SolverKind::Hals },
+            sweep: 17,
+            w,
+            ht,
+            wt,
+            rng,
+            order_kind: UpdateOrder::Shuffled,
+            order,
+            pg0: Some(3.5),
+            pgw_prev: Some(0.25),
+            pg_ratio: 0.071,
+            elapsed_s: 1.5,
+            trace,
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let w = rng.uniform_mat(9, 3);
+        let ht = rng.uniform_mat(7, 3);
+        let wt = rng.gaussian_mat(5, 3); // compressed factor may be signed
+        rng.gaussian(); // leave a Box–Muller spare pending
+        let order = vec![2usize, 0, 1];
+        let trace = vec![TracePoint { iter: 4, elapsed_s: 0.5, rel_err: 0.125, pg_norm_sq: 2.0 }];
+        let path = dir().join("roundtrip.nmfckpt");
+        let mut buf = Vec::new();
+        let st = sample_state(&w, &ht, Some(&wt), &rng, &order, &trace);
+        write(&path, 0xABCD, 42.5, &st, &mut buf).unwrap();
+
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.solver, SolverKind::Rhals);
+        assert_eq!(ck.options_hash, 0xABCD);
+        assert_eq!(ck.data_norm_sq.to_bits(), 42.5f64.to_bits());
+        assert_eq!((ck.m, ck.n, ck.k, ck.l, ck.sweep), (9, 7, 3, 5, 17));
+        assert_eq!(ck.w, w);
+        assert_eq!(ck.ht, ht);
+        assert_eq!(ck.wt.as_ref().unwrap(), &wt);
+        assert_eq!(ck.order_kind, UpdateOrder::Shuffled);
+        assert_eq!(ck.order, order);
+        assert_eq!(ck.pg0, Some(3.5));
+        assert_eq!(ck.pgw_prev, Some(0.25));
+        assert_eq!(ck.pg_ratio, 0.071);
+        assert_eq!(ck.trace.len(), 1);
+        assert_eq!(ck.trace[0], trace[0]);
+        // The restored RNG continues bit-identically (spare included).
+        let mut orig = rng.clone();
+        let mut restored = ck.rng.clone();
+        for _ in 0..20 {
+            assert_eq!(orig.gaussian().to_bits(), restored.gaussian().to_bits());
+        }
+        // The staging buffer is reused, not regrown, on the next write.
+        let cap = buf.capacity();
+        write(&path, 0xABCD, 42.5, &st, &mut buf).unwrap();
+        assert_eq!(buf.capacity(), cap);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_corruption_and_truncation() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let w = rng.uniform_mat(6, 2);
+        let ht = rng.uniform_mat(5, 2);
+        let order = vec![0usize, 1];
+        let path = dir().join("corrupt.nmfckpt");
+        let mut buf = Vec::new();
+        let st = sample_state(&w, &ht, None, &rng, &order, &[]);
+        write(&path, 1, 2.0, &st, &mut buf).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Flip one bit anywhere -> CRC catches it, classified Corrupt.
+        for pos in [0usize, 9, 60, good.len() / 2, good.len() - 5] {
+            let mut bad = good.clone();
+            bad[pos] ^= 0x10;
+            std::fs::write(&path, &bad).unwrap();
+            let err = load(&path).unwrap_err();
+            assert_eq!(
+                robust::classify(&err),
+                robust::FaultKind::Corrupt,
+                "flip at {pos}: {err}"
+            );
+        }
+        // Truncation at any prefix is rejected, never a panic.
+        for cut in [0usize, 4, 11, good.len() / 2, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(load(&path).is_err(), "truncation to {cut} bytes must fail");
+        }
+        // Wrong magic with an otherwise-valid CRC is still rejected.
+        let mut bad = good.clone();
+        bad[..8].copy_from_slice(b"NMFSTOR1");
+        let crc = robust::crc32(&bad[..bad.len() - 4]);
+        let len = bad.len();
+        bad[len - 4..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_verify_mismatches_are_clean_errors() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let w = rng.uniform_mat(6, 2);
+        let ht = rng.uniform_mat(5, 2);
+        let order = vec![1usize, 0];
+        let path = dir().join("verify.nmfckpt");
+        let mut buf = Vec::new();
+        let st = sample_state(&w, &ht, None, &rng, &order, &[]);
+        write(&path, 99, 2.0, &st, &mut buf).unwrap();
+        let ck = load(&path).unwrap();
+        assert!(ck.verify(SolverKind::Hals, 99, 2.0, 6, 5, 2, 0).is_ok());
+        let hash = ck.verify(SolverKind::Hals, 100, 2.0, 6, 5, 2, 0).unwrap_err();
+        assert!(hash.to_string().contains("hash"), "{hash}");
+        let solver = ck.verify(SolverKind::Mu, 99, 2.0, 6, 5, 2, 0).unwrap_err();
+        assert!(solver.to_string().contains("solver"), "{solver}");
+        let data = ck.verify(SolverKind::Hals, 99, 3.0, 6, 5, 2, 0).unwrap_err();
+        assert!(data.to_string().contains("different matrix"), "{data}");
+        let shape = ck.verify(SolverKind::Hals, 99, 2.0, 6, 5, 3, 0).unwrap_err();
+        assert!(shape.to_string().contains("shape"), "{shape}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_write_is_atomic_over_stale_temp() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let w = rng.uniform_mat(4, 2);
+        let ht = rng.uniform_mat(3, 2);
+        let order = vec![0usize, 1];
+        let path = dir().join("atomic.nmfckpt");
+        let mut buf = Vec::new();
+        let st = sample_state(&w, &ht, None, &rng, &order, &[]);
+        write(&path, 5, 1.0, &st, &mut buf).unwrap();
+        // Simulate a kill between temp-write and rename: garbage temp left.
+        std::fs::write(tmp_path(&path), b"torn half-written garbage").unwrap();
+        // The published checkpoint still loads...
+        assert!(load(&path).is_ok());
+        // ...and the next write replaces the stale temp and republishes.
+        write(&path, 5, 1.0, &st, &mut buf).unwrap();
+        assert!(!tmp_path(&path).exists(), "successful write must consume the temp file");
+        assert!(load(&path).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_bad_permutation_and_negative_factors() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let w = rng.uniform_mat(4, 2);
+        let ht = rng.uniform_mat(3, 2);
+        let path = dir().join("perm.nmfckpt");
+        let mut buf = Vec::new();
+
+        // Duplicate entry in the order permutation.
+        let bad_order = vec![1usize, 1];
+        let st = sample_state(&w, &ht, None, &rng, &bad_order, &[]);
+        write(&path, 1, 1.0, &st, &mut buf).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("permutation"), "{err}");
+
+        // Negative entry in a factor.
+        let mut wneg = w.clone();
+        wneg.set(0, 0, -1.0);
+        let order = vec![0usize, 1];
+        let st = sample_state(&wneg, &ht, None, &rng, &order, &[]);
+        write(&path, 1, 1.0, &st, &mut buf).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("negative"), "{err}");
+
+        // NaN entry in a factor.
+        let mut wnan = w.clone();
+        wnan.set(0, 0, f64::NAN);
+        let st = sample_state(&wnan, &ht, None, &rng, &order, &[]);
+        write(&path, 1, 1.0, &st, &mut buf).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("NaN"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -41,6 +41,7 @@ use crate::linalg::norms;
 use crate::linalg::pool;
 use crate::linalg::sparse::{self, NmfInput};
 use crate::linalg::workspace::Workspace;
+use crate::nmf::checkpoint::{self, SolverKind};
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
 use crate::nmf::options::{NmfOptions, Regularization, UpdateOrder};
@@ -139,11 +140,14 @@ pub struct HalsScratch {
     /// The buffer pool every matrix of the fit is drawn from.
     pub ws: Workspace,
     order: OrderState,
+    /// Reusable staging buffer for checkpoint serialization: grown on the
+    /// first checkpoint write, reused byte-for-byte afterwards.
+    ckpt_buf: Vec<u8>,
 }
 
 impl HalsScratch {
     pub fn new() -> Self {
-        HalsScratch { ws: Workspace::new(), order: OrderState::empty() }
+        HalsScratch { ws: Workspace::new(), order: OrderState::empty(), ckpt_buf: Vec::new() }
     }
 }
 
@@ -194,6 +198,9 @@ impl Hals {
         let x = x.into();
         let (m, n) = x.shape();
         self.opts.validate(m, n)?;
+        if let NmfInput::Dense(d) = x {
+            self.opts.validate_dense(d)?;
+        }
         if x.is_sparse() {
             self.opts.validate_sparse()?;
             anyhow::ensure!(
@@ -232,6 +239,7 @@ impl Hals {
         let x_norm_sq = x.fro_norm_sq();
         let want_pg = o.tol > 0.0 || o.trace_every > 0;
         scratch.order.reset(k, o.update_order);
+        let resume = checkpoint::load_for_resume(o, SolverKind::Hals, x_norm_sq, m, n, 0)?;
 
         // Per-solve buffers: the iteration loop below never allocates.
         let mut s = scratch.ws.acquire_mat(k, k); // WᵀW
@@ -244,8 +252,9 @@ impl Hals {
             (scratch.ws.acquire_mat(0, 0), scratch.ws.acquire_mat(0, 0))
         };
 
-        // Initial ∇ᴾ w.r.t. W needs V⁰ = HHᵀ and T⁰ = XHᵀ.
-        let mut pgw_prev = if want_pg {
+        // Initial ∇ᴾ w.r.t. W needs V⁰ = HHᵀ and T⁰ = XHᵀ (a resumed fit
+        // instead restores the carried value from the checkpoint).
+        let mut pgw_prev = if want_pg && resume.is_none() {
             gemm::gram_into(&ht, &mut v, &mut scratch.ws);
             sparse::input_matmul_into(x, &ht, &mut t, &mut scratch.ws);
             gemm::matmul_into(&w, &v, &mut gw, &mut scratch.ws);
@@ -260,8 +269,25 @@ impl Hals {
         let mut pg_ratio = f64::NAN;
         let mut converged = false;
         let mut iters = 0usize;
+        let mut start_iter = 1usize;
+        let mut elapsed_offset = 0.0f64;
+        if let Some(ck) = resume {
+            // Restore the complete loop state: the next sweep proceeds
+            // bit-identically to the uninterrupted run.
+            w.as_mut_slice().copy_from_slice(ck.w.as_slice());
+            ht.as_mut_slice().copy_from_slice(ck.ht.as_slice());
+            rng = ck.rng;
+            scratch.order.restore(ck.order_kind, &ck.order);
+            pgw_prev = ck.pgw_prev;
+            pg0 = ck.pg0;
+            pg_ratio = ck.pg_ratio;
+            trace = ck.trace;
+            iters = ck.sweep;
+            start_iter = ck.sweep + 1;
+            elapsed_offset = ck.elapsed_s;
+        }
 
-        for iter in 1..=o.max_iter {
+        for iter in start_iter..=o.max_iter {
             gemm::gram_into(&w, &mut s, &mut scratch.ws); // k×k  WᵀW
             // n×k  XᵀW (≙ (WᵀX)ᵀ): dense at_b / CSC row split / CSR scatter.
             sparse::input_at_b_into(x, &w, &mut at, &mut scratch.ws);
@@ -279,7 +305,7 @@ impl Hals {
                     let err = stopping::rel_err_from_grams(x_norm_sq, &at, &s, &ht);
                     trace.push(TracePoint {
                         iter: iter - 1,
-                        elapsed_s: start.elapsed().as_secs_f64(),
+                        elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
                         rel_err: err,
                         pg_norm_sq: pg,
                     });
@@ -305,6 +331,31 @@ impl Hals {
                 pgw_prev = Some(stopping::projected_gradient_norm_sq(&w, &gw));
             }
             iters = iter;
+
+            if o.checkpoint_every > 0 && iter % o.checkpoint_every == 0 {
+                let path = o.checkpoint_path.as_ref().expect("validate: cadence implies path");
+                checkpoint::write(
+                    path,
+                    o.options_hash(),
+                    x_norm_sq,
+                    &checkpoint::CheckpointState {
+                        solver: SolverKind::Hals,
+                        sweep: iter,
+                        w: &w,
+                        ht: &ht,
+                        wt: None,
+                        rng: &rng,
+                        order_kind: scratch.order.kind(),
+                        order: scratch.order.order(),
+                        pg0,
+                        pgw_prev,
+                        pg_ratio,
+                        elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
+                        trace: &trace,
+                    },
+                    &mut scratch.ckpt_buf,
+                )?;
+            }
         }
 
         // Build the model: H = Htᵀ into workspace-drawn storage.
@@ -335,7 +386,7 @@ impl Hals {
         Ok(NmfFit {
             model,
             iters,
-            elapsed_s: start.elapsed().as_secs_f64(),
+            elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
             final_rel_err,
             pg_ratio,
             converged,
@@ -347,6 +398,11 @@ impl Hals {
     /// `E = X − WH`; `O(mnk)` per iteration. Ablation use only.
     fn fit_interleaved(&self, x: &Mat) -> Result<NmfFit> {
         let o = &self.opts;
+        anyhow::ensure!(
+            o.checkpoint_every == 0 && o.resume_from.is_none(),
+            "the interleaved ablation path does not support checkpoint/resume; \
+             use the blocked-cyclic or shuffled order"
+        );
         let k = o.rank;
         let start = Instant::now();
         let mut rng = crate::linalg::rng::Pcg64::seed_from_u64(o.seed);

@@ -43,7 +43,14 @@
 //! size `m×n` is ever materialized. [`solver::NmfSolver::fit_input`] is
 //! the trait-object entry point; solvers without a sparse path refuse
 //! rather than densify.
+//!
+//! Long fits can survive interruption: [`checkpoint`] defines the
+//! CRC-guarded `.nmfckpt` snapshot format, and every `fit_with` solver
+//! honors [`options::NmfOptions::with_checkpoint`] (atomic snapshot every
+//! N sweeps) and [`options::NmfOptions::with_resume_from`] (restore and
+//! continue **bit-identically** to the uninterrupted run).
 
+pub mod checkpoint;
 pub mod compressed_mu;
 pub mod hals;
 pub mod init;

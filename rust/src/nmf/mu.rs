@@ -17,6 +17,7 @@ use crate::linalg::mat::Mat;
 use crate::linalg::norms;
 use crate::linalg::sparse::{self, NmfInput};
 use crate::linalg::workspace::Workspace;
+use crate::nmf::checkpoint::{self, SolverKind};
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
 use crate::nmf::options::NmfOptions;
@@ -33,11 +34,13 @@ const MU_EPS: f64 = 1e-12;
 pub struct MuScratch {
     /// The buffer pool every matrix of the fit is drawn from.
     pub ws: Workspace,
+    /// Reusable staging buffer for checkpoint serialization.
+    ckpt_buf: Vec<u8>,
 }
 
 impl MuScratch {
     pub fn new() -> Self {
-        MuScratch { ws: Workspace::new() }
+        MuScratch { ws: Workspace::new(), ckpt_buf: Vec::new() }
     }
 }
 
@@ -80,6 +83,9 @@ impl Mu {
         let o = &self.opts;
         let (m, n) = x.shape();
         o.validate(m, n)?;
+        if let NmfInput::Dense(d) = x {
+            o.validate_dense(d)?;
+        }
         if x.is_sparse() {
             o.validate_sparse()?;
         }
@@ -98,6 +104,22 @@ impl Mu {
         let mut pg_ratio = f64::NAN;
         let mut converged = false;
         let mut iters = 0usize;
+        let mut start_iter = 1usize;
+        let mut elapsed_offset = 0.0f64;
+        if let Some(ck) = checkpoint::load_for_resume(o, SolverKind::Mu, x_norm_sq, m, n, 0)? {
+            // Restore the complete loop state (MU carries no sweep order
+            // and no gradient across iterations — the factors, RNG, and
+            // pg bookkeeping are the whole of it).
+            w.as_mut_slice().copy_from_slice(ck.w.as_slice());
+            ht.as_mut_slice().copy_from_slice(ck.ht.as_slice());
+            rng = ck.rng;
+            pg0 = ck.pg0;
+            pg_ratio = ck.pg_ratio;
+            trace = ck.trace;
+            iters = ck.sweep;
+            start_iter = ck.sweep + 1;
+            elapsed_offset = ck.elapsed_s;
+        }
 
         // Per-solve buffers: the iteration loop below never allocates.
         let k = o.rank;
@@ -113,7 +135,7 @@ impl Mu {
             (scratch.ws.acquire_mat(0, 0), scratch.ws.acquire_mat(0, 0))
         };
 
-        for iter in 1..=o.max_iter {
+        for iter in start_iter..=o.max_iter {
             gemm::gram_into(&w, &mut s, &mut scratch.ws); // k×k
             // n×k  XᵀW: dense at_b / CSC row split / CSR scatter.
             sparse::input_at_b_into(x, &w, &mut at, &mut scratch.ws);
@@ -135,7 +157,7 @@ impl Mu {
                     let err = stopping::rel_err_from_grams(x_norm_sq, &at, &s, &ht);
                     trace.push(TracePoint {
                         iter: iter - 1,
-                        elapsed_s: start.elapsed().as_secs_f64(),
+                        elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
                         rel_err: err,
                         pg_norm_sq: pg,
                     });
@@ -158,6 +180,31 @@ impl Mu {
             mu_update(&mut w, &t, &denom_w);
 
             iters = iter;
+
+            if o.checkpoint_every > 0 && iter % o.checkpoint_every == 0 {
+                let path = o.checkpoint_path.as_ref().expect("validate: cadence implies path");
+                checkpoint::write(
+                    path,
+                    o.options_hash(),
+                    x_norm_sq,
+                    &checkpoint::CheckpointState {
+                        solver: SolverKind::Mu,
+                        sweep: iter,
+                        w: &w,
+                        ht: &ht,
+                        wt: None,
+                        rng: &rng,
+                        order_kind: o.update_order,
+                        order: &[],
+                        pg0,
+                        pgw_prev: None,
+                        pg_ratio,
+                        elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
+                        trace: &trace,
+                    },
+                    &mut scratch.ckpt_buf,
+                )?;
+            }
         }
 
         // Build the model: H = Htᵀ into workspace-drawn storage.
@@ -189,7 +236,7 @@ impl Mu {
         Ok(NmfFit {
             model,
             iters,
-            elapsed_s: start.elapsed().as_secs_f64(),
+            elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
             final_rel_err,
             pg_ratio,
             converged,

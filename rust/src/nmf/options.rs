@@ -120,6 +120,15 @@ pub struct NmfOptions {
     /// per sweep (one GEMM) instead of per column (paper-faithful). Same
     /// flop count, better cache/thread utilization; ablated in §Perf.
     pub batched_projection: bool,
+    /// Write a `.nmfckpt` checkpoint every this many sweeps
+    /// (0 = checkpointing off). Requires [`NmfOptions::checkpoint_path`].
+    pub checkpoint_every: usize,
+    /// Destination for checkpoints (written atomically: temp + fsync +
+    /// rename, so a kill mid-write never clobbers the previous one).
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Restore solver state from this checkpoint before iterating; the
+    /// resumed fit is bit-identical to the uninterrupted run.
+    pub resume_from: Option<std::path::PathBuf>,
 }
 
 impl NmfOptions {
@@ -140,6 +149,9 @@ impl NmfOptions {
             sketch: SketchKind::Uniform,
             trace_every: 0,
             batched_projection: false,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume_from: None,
         }
     }
 
@@ -203,6 +215,66 @@ impl NmfOptions {
         self
     }
 
+    /// Checkpoint to `path` every `every` sweeps (`every = 0` disables).
+    pub fn with_checkpoint(mut self, path: impl Into<std::path::PathBuf>, every: usize) -> Self {
+        self.checkpoint_path = Some(path.into());
+        self.checkpoint_every = every;
+        self
+    }
+
+    /// Resume a previous fit from the checkpoint at `path`.
+    pub fn with_resume_from(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    /// Stable 64-bit digest (FNV-1a over the field encoding) of every
+    /// option that shapes the *trajectory* of a fit. Stored in `.nmfckpt`
+    /// headers and verified on resume, so a checkpoint can never silently
+    /// continue under different hyperparameters.
+    ///
+    /// Deliberately excluded: `max_iter` (resuming with a larger cap is
+    /// the whole point — trajectory prefixes are identical) and the
+    /// checkpoint/resume paths and cadence themselves (where state is
+    /// saved does not change the state).
+    pub fn options_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        mix(self.rank as u64);
+        mix(self.tol.to_bits());
+        mix(self.seed);
+        mix(match self.init {
+            Init::Random => 0,
+            Init::Nndsvd => 1,
+            Init::NndsvdA => 2,
+        });
+        mix(match self.update_order {
+            UpdateOrder::BlockedCyclic => 0,
+            UpdateOrder::InterleavedCyclic => 1,
+            UpdateOrder::Shuffled => 2,
+        });
+        mix(self.reg_w.l2.to_bits());
+        mix(self.reg_w.l1.to_bits());
+        mix(self.reg_h.l2.to_bits());
+        mix(self.reg_h.l1.to_bits());
+        mix(self.oversample as u64);
+        mix(self.power_iters as u64);
+        match self.sketch {
+            SketchKind::Uniform => mix(0),
+            SketchKind::Gaussian => mix(1),
+            SketchKind::SparseSign { nnz } => {
+                mix(2);
+                mix(nnz as u64);
+            }
+        }
+        mix(self.trace_every as u64);
+        mix(self.batched_projection as u64);
+        h
+    }
+
     /// Validate the configuration against a concrete data shape.
     pub fn validate(&self, m: usize, n: usize) -> anyhow::Result<()> {
         anyhow::ensure!(self.rank >= 1, "rank must be >= 1");
@@ -219,7 +291,35 @@ impl NmfOptions {
         if let SketchKind::SparseSign { nnz } = self.sketch {
             anyhow::ensure!(nnz >= 1, "sparse-sign sketch needs nnz >= 1");
         }
+        anyhow::ensure!(
+            self.checkpoint_every == 0 || self.checkpoint_path.is_some(),
+            "checkpoint_every = {} but no checkpoint_path set",
+            self.checkpoint_every
+        );
         Ok(())
+    }
+
+    /// Reject NaN/Inf entries in dense input before any factor buffer is
+    /// touched — the dense counterpart of [`NmfOptions::validate_sparse`]
+    /// (whose CSR constructor already rejects non-finite values). Every
+    /// solver calls this from `fit_with`; a poisoned matrix fails fast
+    /// with the offending coordinate instead of silently NaN-ing W/H.
+    pub fn validate_dense(&self, x: &crate::linalg::mat::Mat) -> anyhow::Result<()> {
+        if !x.has_non_finite() {
+            return Ok(());
+        }
+        let cols = x.cols();
+        for (idx, &v) in x.as_slice().iter().enumerate() {
+            if !v.is_finite() {
+                anyhow::bail!(
+                    "invalid input: X[{},{}] = {v} is not finite \
+                     (NaN/Inf entries are rejected at the fit boundary)",
+                    idx / cols,
+                    idx % cols
+                );
+            }
+        }
+        unreachable!("has_non_finite reported a non-finite entry that the scan did not find");
     }
 
     /// Additional constraints the *deterministic* solvers enforce on
@@ -287,6 +387,58 @@ mod tests {
         let mut o = NmfOptions::new(2);
         o.reg_w.l1 = -1.0;
         assert!(o.validate(10, 10).is_err());
+    }
+
+    #[test]
+    fn options_hash_tracks_trajectory_fields_only() {
+        let base = NmfOptions::new(4);
+        assert_eq!(base.options_hash(), NmfOptions::new(4).options_hash());
+        // Excluded: iteration cap and checkpoint plumbing.
+        assert_eq!(base.options_hash(), base.clone().with_max_iter(999).options_hash());
+        let ck = base.clone().with_checkpoint("/tmp/x.nmfckpt", 5);
+        assert_eq!(base.options_hash(), ck.options_hash());
+        let rs = base.clone().with_resume_from("/tmp/x.nmfckpt");
+        assert_eq!(base.options_hash(), rs.options_hash());
+        // Included: anything that shapes the iterate trajectory.
+        assert_ne!(base.options_hash(), base.clone().with_seed(1).options_hash());
+        assert_ne!(base.options_hash(), NmfOptions::new(5).options_hash());
+        assert_ne!(base.options_hash(), base.clone().with_tol(1e-3).options_hash());
+        assert_ne!(
+            base.options_hash(),
+            base.clone().with_update_order(UpdateOrder::Shuffled).options_hash()
+        );
+        assert_ne!(
+            base.options_hash(),
+            base.clone().with_reg_w(Regularization::lasso(0.1)).options_hash()
+        );
+        assert_ne!(base.options_hash(), base.clone().with_oversample(7).options_hash());
+        let gs = base.clone().with_sketch(SketchKind::Gaussian);
+        assert_ne!(base.options_hash(), gs.options_hash());
+        let bp = base.clone().with_batched_projection(true);
+        assert_ne!(base.options_hash(), bp.options_hash());
+    }
+
+    #[test]
+    fn checkpoint_cadence_requires_a_path() {
+        let mut o = NmfOptions::new(2);
+        o.checkpoint_every = 5;
+        assert!(o.validate(10, 10).is_err());
+        assert!(NmfOptions::new(2).with_checkpoint("/tmp/c.nmfckpt", 5).validate(10, 10).is_ok());
+    }
+
+    #[test]
+    fn validate_dense_rejects_non_finite() {
+        use crate::linalg::mat::Mat;
+        let o = NmfOptions::new(2);
+        let mut x = Mat::zeros(3, 4);
+        assert!(o.validate_dense(&x).is_ok());
+        x.set(1, 2, f64::NAN);
+        let err = o.validate_dense(&x).unwrap_err().to_string();
+        assert!(err.contains("X[1,2]"), "error should name the coordinate: {err}");
+        x.set(1, 2, f64::INFINITY);
+        assert!(o.validate_dense(&x).is_err());
+        x.set(1, 2, 0.0);
+        assert!(o.validate_dense(&x).is_ok());
     }
 
     #[test]

@@ -7,65 +7,145 @@
 //! m, k, n u64 ×3
 //! W       m×k f64 row-major
 //! H       k×n f64 row-major
+//! crc32   u32 over all preceding bytes (optional footer)
 //! ```
 //!
 //! Used by the `randnmf serve` transform service and by pipelines that fit
 //! offline and deploy the basis.
+//!
+//! Robustness contract: the loader never trusts the header — dimensions
+//! are bounds-checked with overflow-safe arithmetic *before* any
+//! allocation, factors are rejected if negative or non-finite, and the
+//! CRC32 footer (emitted by every writer since the checkpointing release;
+//! validated when present, so pre-footer files still load) catches
+//! on-disk bit rot. [`load`] reads through the hardened positional-read
+//! path of [`crate::data::robust`], so short reads and `EINTR` are
+//! absorbed and transient failures retried with bounded backoff.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::data::robust;
 use crate::linalg::mat::Mat;
 use crate::nmf::model::NmfModel;
 
 const MAGIC: &[u8; 8] = b"NMFMODL1";
 
-/// Serialize a model to a writer.
+/// Any dimension beyond this is treated as header corruption.
+const MAX_DIM: usize = 1 << 32;
+/// Factor payloads beyond this many bytes are rejected before allocation.
+const MAX_FACTOR_BYTES: usize = 1 << 40;
+
+/// Serialize a model to a writer (with the CRC32 footer).
 pub fn write_model(w: &mut impl Write, model: &NmfModel) -> Result<()> {
     let (m, k) = model.w.shape();
     let (_, n) = model.h.shape();
-    w.write_all(MAGIC)?;
+    let mut crc = 0u32;
+    let mut put = |w: &mut dyn Write, bytes: &[u8]| -> Result<()> {
+        crc = robust::crc32_update(crc, bytes);
+        w.write_all(bytes)?;
+        Ok(())
+    };
+    put(w, MAGIC)?;
     for dim in [m, k, n] {
-        w.write_all(&(dim as u64).to_le_bytes())?;
+        put(w, &(dim as u64).to_le_bytes())?;
     }
     for &v in model.w.as_slice() {
-        w.write_all(&v.to_le_bytes())?;
+        put(w, &v.to_le_bytes())?;
     }
     for &v in model.h.as_slice() {
-        w.write_all(&v.to_le_bytes())?;
+        put(w, &v.to_le_bytes())?;
     }
+    w.write_all(&crc.to_le_bytes())?;
     Ok(())
 }
 
 /// Deserialize a model from a reader.
+///
+/// Validates magic, dimension sanity (overflow-checked, bounded — a
+/// corrupt header can never trigger a huge allocation), factor
+/// nonnegativity and finiteness, and — when the footer is present — the
+/// CRC32 of everything read. Footer-less files from pre-CRC writers are
+/// accepted unchanged.
 pub fn read_model(r: &mut impl Read) -> Result<NmfModel> {
+    let mut crc = 0u32;
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("reading model magic")?;
+    crc = robust::crc32_update(crc, &magic);
     if &magic != MAGIC {
-        bail!("not an NMF model file");
+        bail!("{}", robust::corrupt(format!("not an NMF model file (magic {magic:?})")));
     }
     let mut dim = [0u8; 8];
     let mut dims = [0usize; 3];
     for d in dims.iter_mut() {
-        r.read_exact(&mut dim)?;
+        r.read_exact(&mut dim).context("reading model dims")?;
+        crc = robust::crc32_update(crc, &dim);
         *d = u64::from_le_bytes(dim) as usize;
     }
     let [m, k, n] = dims;
     anyhow::ensure!(m * k * n > 0, "degenerate model dims {m}x{k}x{n}");
-    let mut read_mat = |rows: usize, cols: usize| -> Result<Mat> {
-        let mut buf = vec![0u8; rows * cols * 8];
-        r.read_exact(&mut buf).context("reading factor data")?;
+    anyhow::ensure!(
+        m <= MAX_DIM && k <= MAX_DIM && n <= MAX_DIM && k <= m.max(n),
+        "{}",
+        robust::corrupt(format!("implausible model dims {m}x{k}x{n}"))
+    );
+    let mut read_mat = |rows: usize, cols: usize, name: &str| -> Result<Mat> {
+        let bytes = rows
+            .checked_mul(cols)
+            .and_then(|c| c.checked_mul(8))
+            .filter(|&b| b <= MAX_FACTOR_BYTES)
+            .ok_or_else(|| {
+                robust::corrupt(format!("factor {name} size {rows}x{cols} overflows bounds"))
+            })?;
+        let mut buf = vec![0u8; bytes];
+        r.read_exact(&mut buf).with_context(|| format!("reading factor {name}"))?;
+        crc = robust::crc32_update(crc, &buf);
         let data = buf
             .chunks_exact(8)
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect();
         Ok(Mat::from_vec(rows, cols, data))
     };
-    let w = read_mat(m, k)?;
-    let h = read_mat(k, n)?;
+    let w = read_mat(m, k, "W")?;
+    let h = read_mat(k, n, "H")?;
+    anyhow::ensure!(
+        !w.has_non_finite() && !h.has_non_finite(),
+        "{}",
+        robust::corrupt("model factors contain NaN/Inf")
+    );
     anyhow::ensure!(w.is_nonneg() && h.is_nonneg(), "model factors must be nonnegative");
+
+    // Optional CRC32 footer: absent (clean EOF) means a pre-CRC file;
+    // present means it must match; a torn footer is corruption.
+    let mut footer = [0u8; 4];
+    let mut got = 0usize;
+    loop {
+        match r.read(&mut footer[got..]) {
+            Ok(0) => break,
+            Ok(nread) => got += nread,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading model CRC footer"),
+        }
+        if got == 4 {
+            break;
+        }
+    }
+    match got {
+        0 => {} // legacy footer-less file
+        4 => {
+            let stored = u32::from_le_bytes(footer);
+            anyhow::ensure!(
+                stored == crc,
+                "{}",
+                robust::corrupt(format!(
+                    "model CRC mismatch: stored {stored:#010x}, computed {crc:#010x}"
+                ))
+            );
+        }
+        _ => bail!("{}", robust::corrupt(format!("model CRC footer truncated to {got} bytes"))),
+    }
     Ok(NmfModel { w, h })
 }
 
@@ -80,11 +160,25 @@ pub fn save(path: &Path, model: &NmfModel) -> Result<()> {
 }
 
 /// Load from a file path.
+///
+/// Reads the whole file through [`robust::pread_exact`] under the bounded
+/// retry policy, so the hardened-I/O guarantees (EINTR/short-read
+/// absorption, transient-retry, fault classification) apply to model
+/// loading — and the `failpoints` feature can inject faults here.
 pub fn load(path: &Path) -> Result<NmfModel> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    let f = std::fs::File::open(path)
+        .map_err(|e| robust::io_fault(&format!("opening {}", path.display()), e))?;
+    let len = f.metadata().map_err(|e| robust::io_fault("stat model file", e))?.len() as usize;
+    anyhow::ensure!(
+        len <= MAX_FACTOR_BYTES,
+        "{}",
+        robust::corrupt(format!("model file is implausibly large ({len} bytes)"))
     );
-    read_model(&mut f)
+    let mut buf = vec![0u8; len];
+    robust::with_retry("load model", || {
+        robust::pread_exact(&f, &mut buf, 0).map_err(|e| robust::io_fault("read model", e))?;
+        read_model(&mut buf.as_slice())
+    })
 }
 
 #[cfg(test)]
@@ -125,12 +219,79 @@ mod tests {
     }
 
     #[test]
+    fn rejects_non_finite_factors() {
+        for bad in [f64::NAN, f64::INFINITY] {
+            let mut w = Mat::zeros(2, 1);
+            w.set(1, 0, bad);
+            let model = NmfModel { w, h: Mat::zeros(1, 2) };
+            let mut bytes = Vec::new();
+            write_model(&mut bytes, &model).unwrap();
+            let err = read_model(&mut bytes.as_slice()).unwrap_err();
+            assert!(err.to_string().contains("NaN/Inf"), "{err}");
+        }
+    }
+
+    #[test]
     fn truncated_file_errors() {
         let mut rng = Pcg64::seed_from_u64(2);
         let model = NmfModel { w: rng.uniform_mat(5, 2), h: rng.uniform_mat(2, 5) };
         let mut bytes = Vec::new();
         write_model(&mut bytes, &model).unwrap();
-        bytes.truncate(bytes.len() - 9);
-        assert!(read_model(&mut bytes.as_slice()).is_err());
+        // Any truncation — mid-factor, mid-header, torn footer — errors.
+        for cut in [9, bytes.len() - 9, bytes.len() - 2] {
+            let mut t = bytes.clone();
+            t.truncate(cut);
+            assert!(read_model(&mut t.as_slice()).is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_regression() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let model = NmfModel { w: rng.uniform_mat(4, 2), h: rng.uniform_mat(2, 3) };
+        let mut bytes = Vec::new();
+        write_model(&mut bytes, &model).unwrap();
+        bytes[0] ^= 0xFF;
+        let err = read_model(&mut bytes.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("not an NMF model"), "{err}");
+        assert_eq!(robust::classify(&err), robust::FaultKind::Corrupt);
+    }
+
+    #[test]
+    fn crc_footer_catches_payload_bit_flip() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let model = NmfModel { w: rng.uniform_mat(6, 3), h: rng.uniform_mat(3, 5) };
+        let mut bytes = Vec::new();
+        write_model(&mut bytes, &model).unwrap();
+        // Flip a low-order mantissa bit: the value stays finite and
+        // nonnegative, so only the CRC can catch it.
+        let mid = 8 + 24 + 8; // into W's first entry
+        bytes[mid] ^= 0x01;
+        let err = read_model(&mut bytes.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        assert_eq!(robust::classify(&err), robust::FaultKind::Corrupt);
+    }
+
+    #[test]
+    fn legacy_footerless_file_still_loads() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let model = NmfModel { w: rng.uniform_mat(5, 2), h: rng.uniform_mat(2, 4) };
+        let mut bytes = Vec::new();
+        write_model(&mut bytes, &model).unwrap();
+        bytes.truncate(bytes.len() - 4); // exactly the pre-CRC format
+        let back = read_model(&mut bytes.as_slice()).unwrap();
+        assert_eq!(back.w, model.w);
+        assert_eq!(back.h, model.h);
+    }
+
+    #[test]
+    fn absurd_dims_rejected_before_allocation() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        for dim in [u64::MAX / 2, 1u64 << 60, 3] {
+            bytes.extend_from_slice(&dim.to_le_bytes());
+        }
+        let err = read_model(&mut bytes.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("implausible"), "{err}");
     }
 }

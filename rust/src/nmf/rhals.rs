@@ -56,6 +56,7 @@ use crate::linalg::mat::Mat;
 use crate::linalg::norms;
 use crate::linalg::sparse::NmfInput;
 use crate::linalg::workspace::Workspace;
+use crate::nmf::checkpoint::{self, SolverKind};
 use crate::nmf::hals::{sweep_factor, DEAD_EPS};
 use crate::nmf::init;
 use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
@@ -74,11 +75,13 @@ pub struct RhalsScratch {
     /// The buffer pool every matrix and vector of the fit is drawn from.
     pub ws: Workspace,
     order: OrderState,
+    /// Reusable staging buffer for checkpoint serialization.
+    ckpt_buf: Vec<u8>,
 }
 
 impl RhalsScratch {
     pub fn new() -> Self {
-        RhalsScratch { ws: Workspace::new(), order: OrderState::empty() }
+        RhalsScratch { ws: Workspace::new(), order: OrderState::empty(), ckpt_buf: Vec::new() }
     }
 }
 
@@ -119,6 +122,9 @@ impl RandomizedHals {
         let x = x.into();
         let (m, n) = x.shape();
         self.opts.validate(m, n)?;
+        if let NmfInput::Dense(d) = x {
+            self.opts.validate_dense(d)?;
+        }
         anyhow::ensure!(
             self.opts.update_order != UpdateOrder::InterleavedCyclic,
             "randomized HALS supports blocked-cyclic and shuffled orders only \
@@ -217,6 +223,11 @@ impl RandomizedHals {
         gemm::at_b_into(q, &w, &mut wt, &mut scratch.ws);
         let want_pg = o.tol > 0.0 || o.trace_every > 0;
         scratch.order.reset(k, o.update_order);
+        // A resumed fit re-runs the compression deterministically from the
+        // seed (identical Q/B) and then restores the post-compression loop
+        // state — including W̃, whose per-column accumulation history is
+        // not bit-recoverable from W alone.
+        let resume = checkpoint::load_for_resume(o, SolverKind::Rhals, x_norm_sq, m, n, l)?;
 
         // Per-solve buffers: the iteration loop below never allocates.
         let mut r = scratch.ws.acquire_mat(n, k); // BᵀW̃
@@ -239,7 +250,7 @@ impl RandomizedHals {
             )
         };
 
-        let mut pgw_prev = if want_pg {
+        let mut pgw_prev = if want_pg && resume.is_none() {
             gemm::gram_into(&ht, &mut v, &mut scratch.ws);
             gemm::matmul_into(b, &ht, &mut t, &mut scratch.ws); // l×k
             // grad_W ≈ W·V − Q·T (X·Hᵀ ≈ Q·B·Hᵀ)
@@ -256,8 +267,25 @@ impl RandomizedHals {
         let mut pg_ratio = f64::NAN;
         let mut converged = false;
         let mut iters = 0usize;
+        let mut start_iter = 1usize;
+        let mut elapsed_offset = 0.0f64;
+        if let Some(ck) = resume {
+            w.as_mut_slice().copy_from_slice(ck.w.as_slice());
+            ht.as_mut_slice().copy_from_slice(ck.ht.as_slice());
+            let ck_wt = ck.wt.as_ref().expect("verify: rhals checkpoint carries W̃");
+            wt.as_mut_slice().copy_from_slice(ck_wt.as_slice());
+            *rng = ck.rng;
+            scratch.order.restore(ck.order_kind, &ck.order);
+            pgw_prev = ck.pgw_prev;
+            pg0 = ck.pg0;
+            pg_ratio = ck.pg_ratio;
+            trace = ck.trace;
+            iters = ck.sweep;
+            start_iter = ck.sweep + 1;
+            elapsed_offset = ck.elapsed_s;
+        }
 
-        for iter in 1..=o.max_iter {
+        for iter in start_iter..=o.max_iter {
             // ---- line 12–13 ----
             gemm::at_b_into(b, &wt, &mut r, &mut scratch.ws); // n×k  BᵀW̃
             gemm::gram_into(&w, &mut s, &mut scratch.ws); // k×k  WᵀW (high-dim scaling, §3.2)
@@ -283,7 +311,7 @@ impl RandomizedHals {
                     scratch.ws.release_mat(wtw);
                     trace.push(TracePoint {
                         iter: iter - 1,
-                        elapsed_s: start.elapsed().as_secs_f64(),
+                        elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
                         rel_err: err,
                         pg_norm_sq: pg,
                     });
@@ -342,6 +370,31 @@ impl RandomizedHals {
                 pgw_prev = Some(stopping::projected_gradient_norm_sq(&w, &gw));
             }
             iters = iter;
+
+            if o.checkpoint_every > 0 && iter % o.checkpoint_every == 0 {
+                let path = o.checkpoint_path.as_ref().expect("validate: cadence implies path");
+                checkpoint::write(
+                    path,
+                    o.options_hash(),
+                    x_norm_sq,
+                    &checkpoint::CheckpointState {
+                        solver: SolverKind::Rhals,
+                        sweep: iter,
+                        w: &w,
+                        ht: &ht,
+                        wt: Some(&wt),
+                        rng: &*rng,
+                        order_kind: scratch.order.kind(),
+                        order: scratch.order.order(),
+                        pg0,
+                        pgw_prev,
+                        pg_ratio,
+                        elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
+                        trace: &trace,
+                    },
+                    &mut scratch.ckpt_buf,
+                )?;
+            }
         }
 
         // Compressed error estimate for the final iterate (`fit_with`
@@ -380,7 +433,7 @@ impl RandomizedHals {
         Ok(NmfFit {
             model,
             iters,
-            elapsed_s: start.elapsed().as_secs_f64(),
+            elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
             final_rel_err,
             pg_ratio,
             converged,

@@ -63,6 +63,20 @@ impl OrderState {
     pub fn order(&self) -> &[usize] {
         &self.order
     }
+
+    /// The configured order kind (serialized into checkpoints).
+    pub fn kind(&self) -> UpdateOrder {
+        self.kind
+    }
+
+    /// Restore a checkpointed state: kind plus the exact permutation the
+    /// interrupted sweep had advanced to. Reuses the existing buffer
+    /// capacity (no allocation once capacity covers `order.len()`).
+    pub fn restore(&mut self, kind: UpdateOrder, order: &[usize]) {
+        self.kind = kind;
+        self.order.clear();
+        self.order.extend_from_slice(order);
+    }
 }
 
 #[cfg(test)]
@@ -99,6 +113,24 @@ mod tests {
         st.reset(4, UpdateOrder::BlockedCyclic);
         assert_eq!(st.order(), &[0, 1, 2, 3]);
         assert_eq!(st.order.as_ptr(), cap_ptr, "reset within capacity must not reallocate");
+    }
+
+    #[test]
+    fn restore_round_trips_shuffled_state() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let mut st = OrderState::new(12, UpdateOrder::Shuffled);
+        st.advance(&mut rng);
+        let saved: Vec<usize> = st.order().to_vec();
+        let kind = st.kind();
+        let mut restored = OrderState::empty();
+        restored.restore(kind, &saved);
+        assert_eq!(restored.kind(), UpdateOrder::Shuffled);
+        assert_eq!(restored.order(), saved.as_slice());
+        // Both continue identically from the same RNG state.
+        let mut r2 = rng.clone();
+        st.advance(&mut rng);
+        restored.advance(&mut r2);
+        assert_eq!(st.order(), restored.order());
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //! });
 //! ```
 
+#[cfg(feature = "failpoints")]
+pub mod failpoints;
+
 use crate::linalg::mat::Mat;
 use crate::linalg::rng::Pcg64;
 

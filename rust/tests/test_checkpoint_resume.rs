@@ -1,0 +1,296 @@
+//! Kill-and-resume bit-identity for the `.nmfckpt` checkpoint layer.
+//!
+//! The contract under test: a fit that is interrupted after any completed
+//! sweep and resumed from its last checkpoint finishes **bit-identical**
+//! to the uninterrupted run — same factors, same iteration count, same
+//! convergence flag, same projected-gradient ratio, same trace (wall-clock
+//! excepted). The property sweeps all three solvers (HALS, MU, randomized
+//! HALS), dense and sparse input, both sweep orders, random shapes and
+//! checkpoint cadences. The CI thread matrix runs this binary under
+//! `RANDNMF_THREADS=1` and `=4`, covering both thread regimes.
+//!
+//! Deterministic edge cases ride along: a stale `.tmp` left by a kill
+//! between temp-write and rename, resuming a converged fit, mismatched
+//! options/solver/data (clean errors, never silent divergence), and
+//! corrupt/truncated/missing checkpoint files.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use randnmf::data::robust;
+use randnmf::linalg::gemm;
+use randnmf::linalg::mat::Mat;
+use randnmf::linalg::rng::Pcg64;
+use randnmf::linalg::sparse::{CsrMat, NmfInput};
+use randnmf::nmf::checkpoint;
+use randnmf::nmf::hals::Hals;
+use randnmf::nmf::model::NmfFit;
+use randnmf::nmf::mu::Mu;
+use randnmf::nmf::options::{NmfOptions, UpdateOrder};
+use randnmf::nmf::rhals::RandomizedHals;
+use randnmf::nmf::solver::NmfSolver;
+use randnmf::prop_assert;
+use randnmf::testing::forall;
+
+fn dir() -> PathBuf {
+    let d = std::env::temp_dir().join("randnmf_ckpt_resume");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Unique checkpoint path per case (the property runs many cases; tests in
+/// this binary may run concurrently).
+fn ckpt_path(tag: &str) -> PathBuf {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    dir().join(format!("{tag}_{n}.nmfckpt"))
+}
+
+fn fit(solver_id: usize, opts: NmfOptions, x: NmfInput<'_>) -> anyhow::Result<NmfFit> {
+    match solver_id {
+        0 => Hals::new(opts).fit_input(x),
+        1 => Mu::new(opts).fit_input(x),
+        _ => RandomizedHals::new(opts).fit_input(x),
+    }
+}
+
+fn solver_name(solver_id: usize) -> &'static str {
+    ["hals", "mu", "rhals"][solver_id]
+}
+
+/// Compare two fits bit for bit, ignoring only wall-clock fields.
+fn assert_fits_bit_identical(a: &NmfFit, b: &NmfFit, what: &str) -> Result<(), String> {
+    prop_assert!(a.model.w == b.model.w, "{what}: W differs");
+    prop_assert!(a.model.h == b.model.h, "{what}: H differs");
+    prop_assert!(a.iters == b.iters, "{what}: iters {} vs {}", a.iters, b.iters);
+    prop_assert!(a.converged == b.converged, "{what}: converged flag differs");
+    prop_assert!(
+        a.pg_ratio.to_bits() == b.pg_ratio.to_bits(),
+        "{what}: pg_ratio {} vs {}",
+        a.pg_ratio,
+        b.pg_ratio
+    );
+    prop_assert!(
+        a.final_rel_err.to_bits() == b.final_rel_err.to_bits(),
+        "{what}: final_rel_err {} vs {}",
+        a.final_rel_err,
+        b.final_rel_err
+    );
+    prop_assert!(
+        a.trace.len() == b.trace.len(),
+        "{what}: trace length {} vs {}",
+        a.trace.len(),
+        b.trace.len()
+    );
+    for (ta, tb) in a.trace.iter().zip(&b.trace) {
+        prop_assert!(
+            ta.iter == tb.iter
+                && ta.rel_err.to_bits() == tb.rel_err.to_bits()
+                && ta.pg_norm_sq.to_bits() == tb.pg_norm_sq.to_bits(),
+            "{what}: trace point at iter {} differs",
+            ta.iter
+        );
+    }
+    Ok(())
+}
+
+/// The tentpole property: interrupt at a random sweep, resume, and the fit
+/// must be indistinguishable (bit for bit) from never having been killed.
+#[test]
+fn killed_and_resumed_fits_are_bit_identical() {
+    forall("kill/resume bit identity", 14, |g| {
+        let solver_id = g.usize_in(0, 2);
+        let m = g.usize_in(30, 48);
+        let n = g.usize_in(30, 48);
+        let k = g.usize_in(2, 4);
+        let sparse = g.bool();
+        let total = g.usize_in(6, 14);
+        let every = g.usize_in(1, 3);
+        // Kill somewhere after the first checkpoint, before the end.
+        let cut = g.usize_in(every, total - 1);
+        let order = *g.choose(&[UpdateOrder::BlockedCyclic, UpdateOrder::Shuffled]);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+
+        let mut x = g.mat(m, n);
+        if sparse {
+            // ~60% of entries zeroed: exercises the CSR solver paths.
+            for v in x.as_mut_slice().iter_mut() {
+                if *v < 0.6 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let csr = CsrMat::from_dense(&x);
+        let input = || if sparse { NmfInput::Sparse(&csr) } else { NmfInput::Dense(&x) };
+
+        let base = NmfOptions::new(k)
+            .with_seed(seed)
+            .with_tol(0.0) // never converge early: both runs sweep to max_iter
+            .with_trace_every(3)
+            .with_update_order(order)
+            .with_oversample(8);
+        let path = ckpt_path("prop");
+        let what = format!(
+            "{} {m}x{n} k={k} sparse={sparse} order={order:?} total={total} \
+             every={every} cut={cut}",
+            solver_name(solver_id)
+        );
+
+        let uninterrupted = fit(solver_id, base.clone().with_max_iter(total), input())
+            .map_err(|e| format!("{what}: uninterrupted fit failed: {e}"))?;
+
+        // "Kill": the interrupted run simply stops at `cut` sweeps, having
+        // published a checkpoint at the last cadence multiple <= cut.
+        let interrupted = fit(
+            solver_id,
+            base.clone().with_max_iter(cut).with_checkpoint(&path, every),
+            input(),
+        )
+        .map_err(|e| format!("{what}: interrupted fit failed: {e}"))?;
+        prop_assert!(interrupted.iters == cut, "{what}: interrupted ran {}", interrupted.iters);
+        prop_assert!(path.exists(), "{what}: no checkpoint published");
+
+        let resumed = fit(
+            solver_id,
+            base.clone().with_max_iter(total).with_resume_from(&path),
+            input(),
+        )
+        .map_err(|e| format!("{what}: resumed fit failed: {e}"))?;
+        std::fs::remove_file(&path).ok();
+
+        prop_assert!(resumed.iters == total, "{what}: resumed ran {} iters", resumed.iters);
+        assert_fits_bit_identical(&uninterrupted, &resumed, &what)
+    });
+}
+
+fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let u = rng.uniform_mat(m, r);
+    let v = rng.uniform_mat(r, n);
+    gemm::matmul(&u, &v)
+}
+
+/// A kill between temp-write and rename leaves a stale `.tmp`; the next
+/// checkpointed fit must plow through it and the resume must still match.
+#[test]
+fn stale_temp_file_never_breaks_checkpoint_or_resume() {
+    let x = low_rank(36, 28, 3, 11);
+    let path = ckpt_path("staletmp");
+    let base = NmfOptions::new(3).with_seed(7).with_tol(0.0).with_trace_every(2);
+
+    let uninterrupted = Hals::new(base.clone().with_max_iter(10)).fit(&x).unwrap();
+
+    // Garbage where the next write will stage its temp file.
+    std::fs::write(checkpoint::tmp_path(&path), b"half-written garbage from a kill").unwrap();
+    let interrupted =
+        Hals::new(base.clone().with_max_iter(6).with_checkpoint(&path, 2)).fit(&x).unwrap();
+    assert_eq!(interrupted.iters, 6);
+    assert!(!checkpoint::tmp_path(&path).exists(), "publish must consume the temp file");
+
+    let resumed =
+        Hals::new(base.clone().with_max_iter(10).with_resume_from(&path)).fit(&x).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(resumed.iters, 10);
+    assert_eq!(resumed.model.w, uninterrupted.model.w);
+    assert_eq!(resumed.model.h, uninterrupted.model.h);
+}
+
+/// Resuming a fit that already converged re-detects convergence at the
+/// restored sweep and returns the identical result — no extra updates.
+#[test]
+fn checkpoint_of_converged_fit_resumes_cleanly() {
+    let x = low_rank(40, 30, 3, 13);
+    let path = ckpt_path("converged");
+    let base = NmfOptions::new(3).with_seed(5).with_tol(1e-3).with_trace_every(1);
+
+    let first =
+        Hals::new(base.clone().with_max_iter(400).with_checkpoint(&path, 1)).fit(&x).unwrap();
+    assert!(first.converged, "fixture must converge (ran {} iters)", first.iters);
+
+    let resumed =
+        Hals::new(base.clone().with_max_iter(400).with_resume_from(&path)).fit(&x).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(resumed.converged);
+    assert_eq!(resumed.iters, first.iters);
+    assert_eq!(resumed.model.w, first.model.w);
+    assert_eq!(resumed.model.h, first.model.h);
+    assert_eq!(resumed.pg_ratio.to_bits(), first.pg_ratio.to_bits());
+}
+
+/// Every mismatch between a checkpoint and the fit consuming it is a
+/// clean, specific error — wrong options, wrong solver, wrong data.
+#[test]
+fn mismatched_resume_is_a_clean_error() {
+    let x = low_rank(32, 24, 3, 17);
+    let path = ckpt_path("mismatch");
+    let base = NmfOptions::new(3).with_seed(9).with_tol(0.0);
+    Hals::new(base.clone().with_max_iter(4).with_checkpoint(&path, 2)).fit(&x).unwrap();
+
+    // Different seed -> different options hash.
+    let err = Hals::new(base.clone().with_seed(10).with_max_iter(8).with_resume_from(&path))
+        .fit(&x)
+        .unwrap_err();
+    assert!(err.to_string().contains("hash"), "{err}");
+
+    // Different solver.
+    let err =
+        Mu::new(base.clone().with_max_iter(8).with_resume_from(&path)).fit(&x).unwrap_err();
+    assert!(err.to_string().contains("solver"), "{err}");
+
+    // Different data (same shape, different ||X||^2 fingerprint).
+    let y = low_rank(32, 24, 3, 18);
+    let err = Hals::new(base.clone().with_max_iter(8).with_resume_from(&path))
+        .fit(&y)
+        .unwrap_err();
+    assert!(err.to_string().contains("different matrix"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Damaged or absent checkpoint files surface typed errors, never panics
+/// or silent fresh starts.
+#[test]
+fn corrupt_truncated_or_missing_checkpoint_is_rejected() {
+    let x = low_rank(28, 22, 2, 19);
+    let path = ckpt_path("corrupt");
+    let base = NmfOptions::new(2).with_seed(3).with_tol(0.0);
+    Hals::new(base.clone().with_max_iter(3).with_checkpoint(&path, 1)).fit(&x).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Bit flip in the factor payload: CRC catches it, classified Corrupt.
+    let mut bad = good.clone();
+    let mid = good.len() / 2;
+    bad[mid] ^= 0x01;
+    std::fs::write(&path, &bad).unwrap();
+    let err = Hals::new(base.clone().with_max_iter(8).with_resume_from(&path))
+        .fit(&x)
+        .unwrap_err();
+    assert!(err.to_string().contains("CRC"), "{err}");
+    assert_eq!(robust::classify(&err), robust::FaultKind::Corrupt);
+
+    // Truncation.
+    std::fs::write(&path, &good[..good.len() / 3]).unwrap();
+    let err = Hals::new(base.clone().with_max_iter(8).with_resume_from(&path))
+        .fit(&x)
+        .unwrap_err();
+    assert_eq!(robust::classify(&err), robust::FaultKind::Corrupt, "{err}");
+
+    // Missing file.
+    std::fs::remove_file(&path).ok();
+    assert!(Hals::new(base.clone().with_max_iter(8).with_resume_from(&path)).fit(&x).is_err());
+}
+
+/// The interleaved ablation path refuses checkpoint/resume up front
+/// instead of silently ignoring the request.
+#[test]
+fn interleaved_order_rejects_checkpointing_up_front() {
+    let x = low_rank(20, 16, 2, 23);
+    let path = ckpt_path("interleaved");
+    let opts = NmfOptions::new(2)
+        .with_seed(1)
+        .with_max_iter(4)
+        .with_update_order(UpdateOrder::InterleavedCyclic)
+        .with_checkpoint(&path, 1);
+    let err = Hals::new(opts).fit(&x).unwrap_err();
+    assert!(err.to_string().contains("checkpoint"), "{err}");
+    assert!(!path.exists());
+}

@@ -1,0 +1,213 @@
+//! Fault-injection sweeps over every hardened I/O path (`--features
+//! failpoints` only).
+//!
+//! The contract: with the registry armed, each operation either succeeds
+//! with a result **bit-identical** to the clean run, or fails with a
+//! typed, classifiable error — never a panic, and never silently-consumed
+//! corrupt data. Injected in-flight bit flips must heal through the
+//! CRC-triggered corrupt retry; EINTR and short reads must be absorbed
+//! invisibly; transient faults must be retried up to the bounded budget.
+//!
+//! Every schedule is seed-driven, so a failing seed replays exactly.
+
+#![cfg(feature = "failpoints")]
+
+use std::path::PathBuf;
+
+use randnmf::data::robust::{self, FaultKind};
+use randnmf::data::store::{write_csc, write_mat, NmfStore, SparseNmfStore};
+use randnmf::linalg::rng::Pcg64;
+use randnmf::linalg::sparse::{CscMat, CsrMat};
+use randnmf::nmf::hals::Hals;
+use randnmf::nmf::model::NmfModel;
+use randnmf::nmf::options::NmfOptions;
+use randnmf::nmf::persist;
+use randnmf::testing::failpoints::{FailpointConfig, Session};
+
+fn dir(sub: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("randnmf_failpoints").join(sub);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Faults on the read path only (write probability zeroed).
+fn read_faults(p: f64) -> FailpointConfig {
+    FailpointConfig { p_transient_write: 0.0, ..FailpointConfig::all(p) }
+}
+
+/// A failure under injection must carry a non-fatal classification — the
+/// injected classes are transient and corrupt, and the retry wrapper must
+/// preserve the marker even after giving up.
+fn assert_injected(err: &anyhow::Error) {
+    assert_ne!(
+        robust::classify(err),
+        FaultKind::Fatal,
+        "injected fault surfaced untyped: {err}"
+    );
+}
+
+#[test]
+fn dense_store_reads_survive_failpoint_injection() {
+    let mut rng = Pcg64::seed_from_u64(1);
+    let x = rng.uniform_mat(19, 37);
+    let path = dir("dense").join("reads.nmfstore");
+    write_mat(&path, &x, 7).unwrap();
+
+    let (mut ok, mut faults) = (0u32, 0u64);
+    for seed in 0..40u64 {
+        let fp = Session::arm(seed, read_faults(0.06));
+        let r = NmfStore::open(&path).and_then(|s| {
+            s.verify_integrity()?;
+            s.read_all()
+        });
+        faults += fp.hits();
+        drop(fp);
+        match r {
+            Ok(y) => {
+                assert_eq!(y, x, "seed {seed}: injected read returned wrong data");
+                ok += 1;
+            }
+            Err(e) => assert_injected(&e),
+        }
+    }
+    assert!(faults > 0, "injection never fired");
+    assert!(ok > 0, "no seed survived — the retry policy is not absorbing faults");
+}
+
+#[test]
+fn dense_store_writes_survive_failpoint_injection() {
+    let mut rng = Pcg64::seed_from_u64(2);
+    let x = rng.uniform_mat(23, 18);
+    let path = dir("dense").join("writes.nmfstore");
+
+    let (mut ok, mut faults) = (0u32, 0u64);
+    for seed in 0..30u64 {
+        let cfg = FailpointConfig { p_transient_write: 0.15, ..Default::default() };
+        let fp = Session::arm(seed, cfg);
+        let r = write_mat(&path, &x, 6);
+        faults += fp.hits();
+        drop(fp);
+        match r {
+            Ok(()) => {
+                // Whatever the write endured, the published file is whole.
+                let back = NmfStore::open(&path).unwrap();
+                back.verify_integrity().unwrap();
+                assert_eq!(back.read_all().unwrap(), x, "seed {seed}: torn write published");
+                ok += 1;
+            }
+            Err(e) => assert_injected(&e),
+        }
+    }
+    assert!(faults > 0, "injection never fired");
+    assert!(ok > 0, "no write survived the transient-retry budget");
+}
+
+#[test]
+fn sparse_store_failpoint_injection_roundtrip() {
+    let mut rng = Pcg64::seed_from_u64(3);
+    let mut dense = rng.uniform_mat(21, 16);
+    for v in dense.as_mut_slice().iter_mut() {
+        if *v < 0.7 {
+            *v = 0.0;
+        }
+    }
+    let csc = CscMat::from_csr(&CsrMat::from_dense(&dense));
+    let path = dir("sparse").join("roundtrip.nmfsparse");
+
+    let (mut ok, mut faults) = (0u32, 0u64);
+    for seed in 0..30u64 {
+        let fp = Session::arm(seed, FailpointConfig::all(0.05));
+        let r = write_csc(&path, &csc, 5).and_then(|()| {
+            let s = SparseNmfStore::open(&path)?;
+            s.verify_integrity()?;
+            s.read_all()
+        });
+        faults += fp.hits();
+        drop(fp);
+        match r {
+            Ok(back) => {
+                assert!(back == csc, "seed {seed}: injected round-trip returned wrong data");
+                ok += 1;
+            }
+            Err(e) => assert_injected(&e),
+        }
+    }
+    assert!(faults > 0, "injection never fired");
+    assert!(ok > 0, "no seed survived the sparse round-trip");
+}
+
+#[test]
+fn model_persist_failpoint_injection() {
+    let mut rng = Pcg64::seed_from_u64(4);
+    let model = NmfModel { w: rng.uniform_mat(14, 3), h: rng.uniform_mat(3, 11) };
+    let path = dir("persist").join("model.nmfmodel");
+    persist::save(&path, &model).unwrap();
+
+    let (mut ok, mut faults) = (0u32, 0u64);
+    for seed in 0..40u64 {
+        let fp = Session::arm(seed, read_faults(0.06));
+        let r = persist::load(&path);
+        faults += fp.hits();
+        drop(fp);
+        match r {
+            Ok(back) => {
+                assert_eq!(back.w, model.w, "seed {seed}: W corrupted in flight");
+                assert_eq!(back.h, model.h, "seed {seed}: H corrupted in flight");
+                ok += 1;
+            }
+            Err(e) => assert_injected(&e),
+        }
+    }
+    assert!(faults > 0, "injection never fired");
+    assert!(ok > 0, "no load survived injection");
+}
+
+/// Checkpoint writes under injection either publish a whole checkpoint
+/// (resume is then bit-identical to the uninterrupted fit) or fail typed;
+/// a resume under read injection heals or fails typed — never diverges.
+#[test]
+fn checkpoint_write_and_resume_survive_failpoint_injection() {
+    let mut rng = Pcg64::seed_from_u64(5);
+    let x = {
+        let u = rng.uniform_mat(30, 3);
+        let v = rng.uniform_mat(3, 24);
+        randnmf::linalg::gemm::matmul(&u, &v)
+    };
+    let base = NmfOptions::new(3).with_seed(21).with_tol(0.0).with_trace_every(2);
+    let uninterrupted = Hals::new(base.clone().with_max_iter(9)).fit(&x).unwrap();
+    let path = dir("ckpt").join("inject.nmfckpt");
+
+    let (mut ok, mut faults) = (0u32, 0u64);
+    for seed in 0..12u64 {
+        std::fs::remove_file(&path).ok();
+
+        // Interrupted fit with checkpoint writes under write injection.
+        let cfg = FailpointConfig { p_transient_write: 0.1, ..Default::default() };
+        let fp = Session::arm(seed, cfg);
+        let r = Hals::new(base.clone().with_max_iter(5).with_checkpoint(&path, 1)).fit(&x);
+        faults += fp.hits();
+        drop(fp);
+        if let Err(e) = r {
+            assert_injected(&e);
+            continue;
+        }
+
+        // Resume under read injection: heal or fail typed.
+        let fp = Session::arm(seed.wrapping_add(1000), read_faults(0.04));
+        let r = Hals::new(base.clone().with_max_iter(9).with_resume_from(&path)).fit(&x);
+        faults += fp.hits();
+        drop(fp);
+        match r {
+            Ok(resumed) => {
+                assert_eq!(resumed.model.w, uninterrupted.model.w, "seed {seed}: W diverged");
+                assert_eq!(resumed.model.h, uninterrupted.model.h, "seed {seed}: H diverged");
+                assert_eq!(resumed.iters, uninterrupted.iters);
+                ok += 1;
+            }
+            Err(e) => assert_injected(&e),
+        }
+    }
+    std::fs::remove_file(&path).ok();
+    assert!(faults > 0, "injection never fired");
+    assert!(ok > 0, "no kill/resume cycle survived injection");
+}

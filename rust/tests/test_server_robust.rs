@@ -1,0 +1,187 @@
+//! Hostile-client robustness for the transform service edge.
+//!
+//! Raw-socket clients exercise the failure paths the friendly
+//! `TransformClient` never hits: an absurd length prefix (must be
+//! rejected *before* allocation, with an error reply and a closed
+//! connection), a half-written request that stalls (must be dropped at
+//! the read deadline without pinning a thread), a connection flood past
+//! the bounded queue (must shed with explicit overload replies, never
+//! grow memory), and a shutdown with requests in flight (must drain —
+//! every accepted request gets its reply).
+//!
+//! After every attack, a healthy client on a fresh connection must still
+//! be served: one hostile peer can never degrade the service for others.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use randnmf::coordinator::server::{ServerOptions, TransformClient, TransformServer};
+use randnmf::linalg::mat::Mat;
+use randnmf::linalg::rng::Pcg64;
+use randnmf::nmf::model::NmfModel;
+
+const M: usize = 16;
+const K: usize = 3;
+
+fn test_model(seed: u64) -> NmfModel {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    NmfModel { w: rng.uniform_mat(M, K).map(|v| v + 0.05), h: Mat::zeros(K, 1) }
+}
+
+/// Read one wire-format reply off a raw socket; `Err` is the server's
+/// error message.
+fn read_reply(s: &mut TcpStream) -> Result<Vec<f64>, String> {
+    let mut hdr = [0u8; 4];
+    s.read_exact(&mut hdr).expect("reply header");
+    let k = u32::from_le_bytes(hdr);
+    if k == u32::MAX {
+        s.read_exact(&mut hdr).expect("error length");
+        let mut msg = vec![0u8; u32::from_le_bytes(hdr) as usize];
+        s.read_exact(&mut msg).expect("error body");
+        return Err(String::from_utf8_lossy(&msg).into_owned());
+    }
+    let mut data = vec![0u8; k as usize * 8];
+    s.read_exact(&mut data).expect("reply body");
+    Ok(data.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// The service must answer a well-formed request on a fresh connection.
+fn assert_healthy(addr: std::net::SocketAddr) {
+    let mut client = TransformClient::connect(addr).unwrap();
+    let code = client.transform(&vec![0.5; M]).unwrap();
+    assert_eq!(code.len(), K);
+    assert!(code.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
+#[test]
+fn oversized_length_prefix_gets_error_reply_then_close() {
+    let server =
+        TransformServer::start("127.0.0.1:0", test_model(1), ServerOptions::default()).unwrap();
+
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // Claim a gigantic request; never send the payload. The reply must
+    // arrive before any payload-sized buffer could have been allocated.
+    s.write_all(&(1u32 << 24).to_le_bytes()).unwrap();
+    let err = read_reply(&mut s).unwrap_err();
+    assert!(err.contains("exceeds server limit"), "{err}");
+
+    // The connection is closed — the unread payload cannot be resynced.
+    let mut probe = [0u8; 1];
+    match s.read(&mut probe) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("connection should be closed, read {n} more bytes"),
+    }
+
+    assert_healthy(server.addr());
+    server.shutdown();
+}
+
+#[test]
+fn stalled_half_written_request_is_dropped_at_deadline() {
+    let opts = ServerOptions { read_timeout: Duration::from_millis(300), ..Default::default() };
+    let server = TransformServer::start("127.0.0.1:0", test_model(2), opts).unwrap();
+
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // A valid prefix, then 5 of the 16 promised f64s — and silence.
+    s.write_all(&(M as u32).to_le_bytes()).unwrap();
+    s.write_all(&[0u8; 40]).unwrap();
+
+    // The server must give up within the deadline (plus slack), closing
+    // the connection rather than pinning its thread forever.
+    let start = Instant::now();
+    let mut probe = [0u8; 1];
+    match s.read(&mut probe) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("stalled connection should be dropped, read {n} bytes"),
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(8),
+        "drop took {:?} — stall deadline not enforced",
+        start.elapsed()
+    );
+
+    assert_healthy(server.addr());
+    server.shutdown();
+}
+
+#[test]
+fn connection_flood_is_shed_with_bounded_queue() {
+    let opts = ServerOptions {
+        batch_window: Duration::from_millis(200),
+        max_queue: 2,
+        ..Default::default()
+    };
+    let server = TransformServer::start("127.0.0.1:0", test_model(3), opts).unwrap();
+    let addr = server.addr();
+
+    let nreq = 20;
+    let barrier = Barrier::new(nreq);
+    let mut served = 0u32;
+    let mut shed = 0u32;
+    std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..nreq)
+            .map(|_| {
+                let barrier = &barrier;
+                sc.spawn(move || {
+                    let mut client = TransformClient::connect(addr).unwrap();
+                    barrier.wait(); // all requests hit the queue together
+                    client.transform(&vec![0.5; M]).map_err(|e| e.to_string())
+                })
+            })
+            .collect();
+        for h in handles {
+            // Every connection gets *some* reply: a code or an explicit
+            // overload error — never a hang, never a dropped socket.
+            match h.join().unwrap() {
+                Ok(code) => {
+                    assert_eq!(code.len(), K);
+                    served += 1;
+                }
+                Err(e) => {
+                    assert!(e.contains("overloaded"), "unexpected reply: {e}");
+                    shed += 1;
+                }
+            }
+        }
+    });
+    assert_eq!(served + shed, nreq as u32);
+    assert!(served > 0, "flood starved every request");
+    assert!(
+        server.shed_count() > 0 && shed > 0,
+        "queue bound never triggered (served {served}, shed {shed})"
+    );
+
+    assert_healthy(addr);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_requests_in_flight() {
+    let opts =
+        ServerOptions { batch_window: Duration::from_millis(300), ..ServerOptions::default() };
+    let server = TransformServer::start("127.0.0.1:0", test_model(4), opts).unwrap();
+    let addr = server.addr();
+
+    std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                sc.spawn(move || {
+                    let mut client = TransformClient::connect(addr).unwrap();
+                    client.transform(&vec![0.5; M])
+                })
+            })
+            .collect();
+        // Requests are now queued inside the solver's batch window;
+        // shutting down must answer them all before the threads join.
+        std::thread::sleep(Duration::from_millis(120));
+        server.shutdown();
+        for h in handles {
+            let code = h.join().unwrap().expect("request in flight at shutdown lost its reply");
+            assert_eq!(code.len(), K);
+        }
+    });
+}

@@ -307,4 +307,32 @@ fn steady_state_iterations_do_not_allocate() {
             );
         }
     }
+
+    // --- (g) checkpointing armed but not firing costs exactly zero: with
+    //     a cadence the fit never reaches, the checkpoint plumbing must
+    //     not disturb the allocation fixed point of a warm fit_with ---
+    let ckpt = std::env::temp_dir().join("randnmf_zero_alloc_unfired.nmfckpt");
+    std::fs::remove_file(&ckpt).ok();
+    let solver = RandomizedHals::new(
+        NmfOptions::new(4)
+            .with_max_iter(15)
+            .with_tol(0.0)
+            .with_seed(21)
+            .with_oversample(6)
+            .with_checkpoint(&ckpt, 1000),
+    );
+    let mut scratch = RhalsScratch::new();
+    for _ in 0..3 {
+        let fit = solver.fit_with(&x, &mut scratch).unwrap();
+        fit.recycle(&mut scratch.ws);
+    }
+    for round in 0..3 {
+        let n = warm_fit_with_allocs(&solver, &x, &mut scratch);
+        assert_eq!(
+            n, 0,
+            "checkpoint-armed (cadence never firing) warm fit_with round {round} \
+             performed {n} heap allocations"
+        );
+    }
+    assert!(!ckpt.exists(), "an unfired cadence must write nothing");
 }

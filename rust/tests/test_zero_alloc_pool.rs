@@ -301,4 +301,35 @@ fn threaded_steady_state_iterations_do_not_allocate() {
             );
         }
     }
+
+    // --- (g) checkpointing armed but not firing costs exactly zero on the
+    //     pool path too: the checkpoint plumbing must not disturb the
+    //     allocation fixed point of a warm threaded fit_with ---
+    let ckpt = std::env::temp_dir().join("randnmf_zero_alloc_pool_unfired.nmfckpt");
+    std::fs::remove_file(&ckpt).ok();
+    let solver = RandomizedHals::new(
+        NmfOptions::new(8)
+            .with_max_iter(12)
+            .with_tol(0.0)
+            .with_seed(21)
+            .with_oversample(6)
+            .with_checkpoint(&ckpt, 1000),
+    );
+    let mut scratch = RhalsScratch::new();
+    for _ in 0..3 {
+        let fit = solver.fit_with(&x, &mut scratch).unwrap();
+        fit.recycle(&mut scratch.ws);
+    }
+    for round in 0..3 {
+        let before = allocs();
+        let fit = solver.fit_with(&x, &mut scratch).unwrap();
+        let n = allocs() - before;
+        fit.recycle(&mut scratch.ws);
+        assert_eq!(
+            n, 0,
+            "checkpoint-armed (cadence never firing) warm threaded fit_with \
+             round {round} performed {n} heap allocations"
+        );
+    }
+    assert!(!ckpt.exists(), "an unfired cadence must write nothing");
 }
