@@ -1,0 +1,108 @@
+//! Hot transform serving: stream a corpus into an online fit, then serve
+//! frozen-`W` NNLS projections over TCP with request batching, a bounded
+//! queue, and latency percentiles.
+//!
+//! **Reproduces:** the §2.2 pinned-factor HALS half-step as a serving
+//! primitive (`update_H` with `W` frozen), fed by the §3 randomized
+//! compression accumulated incrementally over column chunks.
+//!
+//! ```sh
+//! cargo run --release --example transform_serving
+//! ```
+
+use std::time::Duration;
+
+use randnmf::coordinator::server::{ServerOptions, TransformClient, TransformServer};
+use randnmf::nmf::transform::{Transform, TransformOptions, TransformScratch};
+use randnmf::prelude::*;
+use randnmf::sketch::streaming::OnlineNmf;
+
+fn main() -> anyhow::Result<()> {
+    // A rank-12 corpus, arriving as a stream of ragged column chunks.
+    let (m, n, r) = (100usize, 300usize, 12usize);
+    let mut rng = Pcg64::seed_from_u64(0);
+    let u = rng.uniform_mat(m, r);
+    let v = rng.uniform_mat(r, n);
+    let x = randnmf::linalg::gemm::matmul(&u, &v);
+
+    // Online fit: push chunks as they "arrive", then refresh. The sketch
+    // is chunking-invariant, so any arrival pattern yields the same model.
+    let opts = NmfOptions::new(r).with_max_iter(60).with_seed(1).with_oversample(8);
+    let mut online = OnlineNmf::new(m, opts)?;
+    let mut j0 = 0;
+    for chunk in [64usize, 7, 129, 100] {
+        let j1 = (j0 + chunk).min(n);
+        online.push_columns(&x.col_block(j0, j1))?;
+        j0 = j1;
+    }
+    let fit = online.refresh()?;
+    println!(
+        "online fit: {} cols streamed, {} iters, relative error {:.6}",
+        n, fit.iters, fit.final_rel_err
+    );
+
+    // Serve the fitted basis. Requests landing within one batch window
+    // are fused into a single pinned-W HALS solve on a warm scratch.
+    let sopts = ServerOptions {
+        batch_window: Duration::from_millis(5),
+        max_batch: 32,
+        ..Default::default()
+    };
+    let nnls_sweeps = sopts.nnls_sweeps;
+    let server = TransformServer::start("127.0.0.1:0", fit.model.clone(), sopts)?;
+    let addr = server.addr();
+    println!("serving on {addr}");
+
+    // Three concurrent clients, twenty projections each.
+    let per_client = 20usize;
+    let nclients = 3usize;
+    std::thread::scope(|sc| {
+        let x = &x;
+        let handles: Vec<_> = (0..nclients)
+            .map(|c| {
+                sc.spawn(move || -> anyhow::Result<()> {
+                    let mut client = TransformClient::connect(addr)?;
+                    for i in 0..per_client {
+                        let col = (c * per_client + i) % x.cols();
+                        let input: Vec<f64> = (0..x.rows()).map(|j| x.get(j, col)).collect();
+                        let code = client.transform(&input)?;
+                        anyhow::ensure!(code.len() == r, "bad code length {}", code.len());
+                        anyhow::ensure!(code.iter().all(|v| v.is_finite() && *v >= 0.0));
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client thread").expect("transform request");
+        }
+    });
+
+    let (served, batches) = server.stats();
+    let lat = server.latency_summary();
+    println!(
+        "served {served} requests in {batches} batches ({:.1} req/batch), shed {}",
+        served as f64 / batches.max(1) as f64,
+        server.shed_count()
+    );
+    println!(
+        "latency: p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms  max {:.2}ms over {} requests",
+        lat.p50 * 1e3,
+        lat.p90 * 1e3,
+        lat.p99 * 1e3,
+        lat.max * 1e3,
+        lat.count
+    );
+    server.shutdown();
+
+    // The served codes are the same pinned-W solve the library exposes
+    // directly — reproduce one locally for the record.
+    let topts = TransformOptions::default().with_sweeps(nnls_sweeps);
+    let t = Transform::new(fit.model.w.clone(), topts)?;
+    let mut scratch = TransformScratch::new();
+    let h = t.transform_with(&x.col_block(0, 8), &mut scratch)?;
+    let err = randnmf::linalg::norms::relative_error(&x.col_block(0, 8), &fit.model.w, &h);
+    println!("local batch of 8: projection relative error {err:.6}");
+    scratch.recycle(h);
+    Ok(())
+}

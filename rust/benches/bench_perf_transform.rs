@@ -1,0 +1,138 @@
+//! Perf P7 — frozen-`W` transform throughput (the serving hot path).
+//!
+//! Times the batched NNLS projection `Transform::transform_with` on
+//! serving-shaped batches (`m×b`, k ∈ {16, 64}): a cold allocating call
+//! (first-request cost, scratch built and dropped inside), the warm
+//! zero-allocation dense path, the warm CSR sparse path, and the
+//! Gillis-accelerated variant (`inner_tol` early exit). The headline
+//! number is **rows/s** — batch columns solved per second — since that
+//! is the unit the serving loop budgets in.
+//!
+//! Rows merge into `BENCH_gemm.json` keyed `(kernel, m, n, k, threads)`;
+//! `n` records the batch size `b`, so rows/s is recoverable from any row
+//! as `n / median_s`. The `gflops` column uses the fixed-sweep flop
+//! model `2·m·b·k + sweeps · 2·b·k²` (numerator plus HALS sweeps); the
+//! accelerated row's sweep count is data-dependent, so its gflops is
+//! reported as 0.
+//!
+//! Set `RANDNMF_THREADS` to sweep thread regimes (the CI bench job runs
+//! both 1 and 4) and `RANDNMF_BENCH_SCALE` to shrink the shapes.
+
+use randnmf::bench::{banner, bench_scale, update_bench_json, write_csv, BenchJsonRow, Bencher};
+use randnmf::coordinator::metrics::Table;
+use randnmf::linalg::gemm;
+use randnmf::nmf::transform::{Transform, TransformOptions, TransformScratch};
+use randnmf::prelude::*;
+
+/// HALS sweeps per solve (fixed so the flop model is well-defined).
+const SWEEPS: usize = 30;
+
+struct Row {
+    kernel: &'static str,
+    m: usize,
+    b: usize,
+    k: usize,
+    median_s: f64,
+    gflops: f64,
+}
+
+fn main() {
+    banner("Perf P7", "frozen-W transform (serving hot path, dense + CSR)");
+    let s = bench_scale(1.0);
+    let m = ((1_024.0 * s) as usize).max(64);
+    let b = ((512.0 * s) as usize).max(32);
+    let mut rng = Pcg64::seed_from_u64(0);
+    let x = rng.uniform_mat(m, b); // dense batch, columns = requests
+    let xs = CsrMat::from_dense(&x.map(|v| if v < 0.5 { 0.0 } else { v }));
+
+    let bencher = Bencher::new(1, 5);
+    let mut table = Table::new(&["Kernel", "Shape", "Median (ms)", "rows/s", "GFLOP/s"]);
+    let mut rows: Vec<Row> = Vec::new();
+
+    for k in [16usize, 64] {
+        let w = rng.uniform_mat(m, k).map(|v| v + 0.05);
+        let flops = (2 * m * b * k + SWEEPS * 2 * b * k * k) as f64;
+        let opts = TransformOptions::default().with_sweeps(SWEEPS);
+        let t = Transform::new(w.clone(), opts).expect("basis");
+
+        let mut push = |rows: &mut Vec<Row>, kernel: &'static str, fl: f64, med: f64| {
+            let gflops = if fl > 0.0 { fl / med / 1e9 } else { 0.0 };
+            rows.push(Row { kernel, m, b, k, median_s: med, gflops });
+        };
+
+        // Cold call: per-call scratch, the price of the first request.
+        let st = bencher.time(|| t.transform(&x).expect("cold transform"));
+        push(&mut rows, "transform_cold", flops, st.median_s);
+
+        // Warm steady state: the exact serving-loop path (zero-alloc,
+        // enforced by both zero-alloc suites).
+        let mut scratch = TransformScratch::new();
+        let h = t.transform_with(&x, &mut scratch).expect("warmup");
+        scratch.recycle(h);
+        let st = bencher.time(|| {
+            let h = t.transform_with(&x, &mut scratch).expect("dense warm");
+            let probe = h.get(0, 0);
+            scratch.recycle(h);
+            probe
+        });
+        push(&mut rows, "transform_dense_warm", flops, st.median_s);
+
+        let st = bencher.time(|| {
+            let h = t.transform_with(&xs, &mut scratch).expect("csr warm");
+            let probe = h.get(0, 0);
+            scratch.recycle(h);
+            probe
+        });
+        push(&mut rows, "transform_csr_warm", flops, st.median_s);
+
+        // Gillis-accelerated: sweep count is data-dependent, so only the
+        // wall time is meaningful (gflops recorded as 0).
+        let aopts = TransformOptions::default().with_sweeps(SWEEPS).with_inner_tol(1e-8);
+        let ta = Transform::new(w.clone(), aopts).expect("basis");
+        let st = bencher.time(|| {
+            let h = ta.transform_with(&x, &mut scratch).expect("accel warm");
+            let probe = h.get(0, 0);
+            scratch.recycle(h);
+            probe
+        });
+        push(&mut rows, "transform_accel_warm", 0.0, st.median_s);
+    }
+
+    let mut csv = Vec::new();
+    for r in &rows {
+        let rows_per_s = r.b as f64 / r.median_s;
+        table.row(&[
+            r.kernel.into(),
+            format!("{}x{} k={}", r.m, r.b, r.k),
+            format!("{:.2}", r.median_s * 1e3),
+            format!("{rows_per_s:.0}"),
+            format!("{:.2}", r.gflops),
+        ]);
+        csv.push(format!(
+            "{},{}x{},{},{:.6},{:.1},{:.3}",
+            r.kernel, r.m, r.b, r.k, r.median_s, rows_per_s, r.gflops
+        ));
+    }
+    print!("{}", table.render());
+    println!("threads = {}", gemm::num_threads());
+
+    let p = write_csv("perf_transform.csv", "kernel,shape,k,median_s,rows_per_s,gflops", &csv);
+    println!("csv: {}", p.display());
+
+    // Machine-readable trajectory rows, merged into the shared artifact
+    // next to the GEMM and sketch rows (n = batch size b).
+    let json_rows: Vec<BenchJsonRow> = rows
+        .iter()
+        .map(|r| BenchJsonRow {
+            kernel: r.kernel.to_string(),
+            m: r.m,
+            n: r.b,
+            k: r.k,
+            threads: gemm::num_threads(),
+            median_s: r.median_s,
+            gflops: r.gflops,
+        })
+        .collect();
+    update_bench_json("BENCH_gemm.json", &json_rows);
+    println!("json: BENCH_gemm.json");
+}

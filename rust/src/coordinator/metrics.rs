@@ -158,18 +158,90 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Median (copies + sorts).
+/// Median (copies + sorts). Equivalent to `percentile(xs, 50.0)`; like it,
+/// total-order sorting makes a stray NaN sample sort to the end instead of
+/// panicking the comparator (the pre-PR-7 `partial_cmp().unwrap()` bug).
 pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolation percentile (the NIST/numpy `linear` definition):
+/// rank `p/100·(n−1)` in the sorted copy, interpolated between the two
+/// surrounding order statistics. `p` is clamped to `[0, 100]`, so
+/// `percentile(xs, 0.0)` is the min and `percentile(xs, 100.0)` the max.
+/// Empty input returns NaN. Sorting uses [`f64::total_cmp`], so NaN
+/// samples cannot panic (they sort last and only distort the top ranks).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = v.len();
-    if n % 2 == 1 {
-        v[n / 2]
-    } else {
-        0.5 * (v[n / 2 - 1] + v[n / 2])
+    v.sort_by(f64::total_cmp);
+    let p = if p.is_nan() { 50.0 } else { p.clamp(0.0, 100.0) };
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] + (v[hi] - v[lo]) * frac
+}
+
+/// Bounded sliding-window latency sampler for the serving path.
+///
+/// Records are kept in a fixed-capacity ring (oldest evicted first), so a
+/// long-lived server summarizes *recent* behavior in O(window) memory.
+/// `count` in the summary is lifetime-total; the percentiles and max are
+/// over the current window.
+#[derive(Clone, Debug)]
+pub struct LatencyRecorder {
+    window: Vec<f64>,
+    cap: usize,
+    next: usize,
+    total: usize,
+}
+
+/// Percentile snapshot from a [`LatencyRecorder`] (seconds). All
+/// statistics are NaN while no samples have been recorded.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    /// Lifetime number of samples recorded (not capped by the window).
+    pub count: usize,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        LatencyRecorder::with_capacity(4096)
+    }
+}
+
+impl LatencyRecorder {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        LatencyRecorder { window: Vec::with_capacity(cap), cap, next: 0, total: 0 }
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn record(&mut self, secs: f64) {
+        if self.window.len() < self.cap {
+            self.window.push(secs);
+        } else {
+            self.window[self.next] = secs;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.total += 1;
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.total,
+            p50: percentile(&self.window, 50.0),
+            p90: percentile(&self.window, 90.0),
+            p99: percentile(&self.window, 99.0),
+            max: percentile(&self.window, 100.0),
+        }
     }
 }
 
@@ -251,5 +323,59 @@ mod tests {
         assert_eq!(fmt_secs(123.4), "123");
         assert_eq!(fmt_secs(8.93), "8.93");
         assert_eq!(fmt_secs(0.01324), "0.0132");
+    }
+
+    #[test]
+    fn percentile_empty_and_single_sample() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert!(median(&[]).is_nan());
+        for p in [0.0, 37.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[4.2], p), 4.2, "p={p}");
+        }
+    }
+
+    #[test]
+    fn percentile_interpolates_and_clamps() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        // p99 on small n interpolates near the top instead of snapping to
+        // the max: rank 0.99·3 = 2.97 → 3 + 0.97·(4−3).
+        assert!((percentile(&xs, 99.0) - 3.97).abs() < 1e-12);
+        // Out-of-range p clamps rather than indexing out of bounds.
+        assert_eq!(percentile(&xs, -5.0), 1.0);
+        assert_eq!(percentile(&xs, 250.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_handles_ties_and_nan_without_panicking() {
+        let ties = [2.0, 2.0, 2.0, 2.0, 7.0];
+        assert_eq!(percentile(&ties, 50.0), 2.0);
+        assert_eq!(median(&ties), 2.0);
+        // A stray NaN sample used to panic `median`'s
+        // `partial_cmp().unwrap()`; total_cmp sorts it last instead.
+        let with_nan = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&with_nan, 0.0), 1.0);
+        assert_eq!(median(&with_nan), 2.5);
+        assert!(percentile(&with_nan, 100.0).is_nan());
+        assert_eq!(percentile(&[1.0, 2.0], f64::NAN), 1.5);
+    }
+
+    #[test]
+    fn latency_recorder_window_evicts_oldest() {
+        let mut rec = LatencyRecorder::with_capacity(4);
+        assert!(rec.summary().p50.is_nan());
+        assert_eq!(rec.summary().count, 0);
+        for v in 1..=6 {
+            rec.record(v as f64);
+        }
+        let s = rec.summary();
+        // Lifetime count, but window statistics over the last 4 samples
+        // [3, 4, 5, 6].
+        assert_eq!(s.count, 6);
+        assert_eq!(s.max, 6.0);
+        assert_eq!(s.p50, 4.5);
+        assert!(s.p99 > s.p50 && s.p99 <= s.max);
     }
 }

@@ -7,9 +7,14 @@
 //!
 //! * accepts length-prefixed binary requests (one `m`-vector each),
 //! * **batches** concurrent requests: the solver thread drains whatever
-//!   has queued (up to `max_batch`) and runs one batched HALS-NNLS solve —
-//!   the Gram `WᵀW` is shared across the whole batch, so batching `b`
-//!   requests costs far less than `b` singles,
+//!   has queued (up to `max_batch`) and runs one batched NNLS solve on a
+//!   [`crate::nmf::transform::Transform`] prepared at startup — the Gram
+//!   `WᵀW` is computed once for the lifetime of the server and shared
+//!   across every batch, and the solver thread's warm
+//!   [`TransformScratch`] makes steady-state solves allocation-free,
+//! * records queue→reply latency per request into a sliding-window
+//!   [`LatencyRecorder`] — [`TransformServer::latency_summary`] exposes
+//!   p50/p90/p99/max for dashboards and the serving bench,
 //! * responds with the `k`-vector code.
 //!
 //! Wire format (little-endian): request = `u32 m` + `m×f64`; response =
@@ -45,18 +50,21 @@ use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::linalg::gemm;
+use crate::coordinator::metrics::{LatencyRecorder, LatencySummary};
 use crate::linalg::mat::Mat;
 use crate::nmf::model::NmfModel;
+use crate::nmf::transform::{Transform, TransformOptions, TransformScratch};
 
-/// A queued request: the input vector and the slot for its reply.
+/// A queued request: the input vector, the slot for its reply, and when
+/// it entered the queue (for latency accounting).
 struct Pending {
     input: Vec<f64>,
     reply: std::sync::mpsc::Sender<Result<Vec<f64>, String>>,
+    enqueued: Instant,
 }
 
 /// Shared server state.
@@ -68,6 +76,14 @@ struct Shared {
     batches: AtomicUsize,
     /// Requests rejected because the queue was at `max_queue`.
     shed: AtomicUsize,
+    /// Queue→reply latency of recently answered requests.
+    latency: Mutex<LatencyRecorder>,
+}
+
+/// Record one answered request's queue→reply latency.
+fn note_latency(shared: &Shared, enqueued: Instant) {
+    let mut rec = shared.latency.lock().unwrap_or_else(|e| e.into_inner());
+    rec.record(enqueued.elapsed().as_secs_f64());
 }
 
 /// Configuration of the transform service.
@@ -122,8 +138,15 @@ impl TransformServer {
             served: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
             shed: AtomicUsize::new(0),
+            latency: Mutex::new(LatencyRecorder::default()),
         });
-        let (model_m, _) = model.w.shape();
+        // Freeze the basis once: the Gram is precomputed here and every
+        // batch for the server's lifetime reuses it. Rejects degenerate
+        // bases (empty, negative entries) before any thread spawns.
+        let topts = TransformOptions::default().with_sweeps(opts.nnls_sweeps);
+        let transform =
+            Transform::new(model.w.clone(), topts).context("preparing the serving basis")?;
+        let model_m = transform.rows();
 
         let mut threads = Vec::new();
 
@@ -131,7 +154,7 @@ impl TransformServer {
         {
             let shared = shared.clone();
             let opts = opts.clone();
-            threads.push(std::thread::spawn(move || solver_loop(&shared, &model, &opts)));
+            threads.push(std::thread::spawn(move || solver_loop(&shared, &transform, &opts)));
         }
 
         // Accept loop: one lightweight thread per connection. Connection
@@ -180,6 +203,15 @@ impl TransformServer {
         self.shared.shed.load(Ordering::Relaxed)
     }
 
+    /// Queue→answer latency percentiles over the recent request window
+    /// (enqueue to solve completion; `count` is lifetime-total and
+    /// statistics are NaN before the first answered request). Noted
+    /// before the reply is sent, so a client holding its answer is
+    /// always visible here.
+    pub fn latency_summary(&self) -> LatencySummary {
+        self.shared.latency.lock().unwrap_or_else(|e| e.into_inner()).summary()
+    }
+
     /// Signal shutdown, drain, and join all threads.
     ///
     /// The solver thread answers everything already queued before it
@@ -195,11 +227,15 @@ impl TransformServer {
     }
 }
 
-fn solver_loop(shared: &Shared, model: &NmfModel, opts: &ServerOptions) {
-    let (m, k) = model.w.shape();
-    // Precompute what every solve shares.
-    let gram = gemm::gram(&model.w); // k×k
-    let order: Vec<usize> = (0..k).collect();
+fn solver_loop(shared: &Shared, transform: &Transform, opts: &ServerOptions) {
+    let m = transform.rows();
+    let k = transform.rank();
+    // Warm per-thread state: after the first few batches every solve
+    // draws all of its buffers from this scratch pool and the reused
+    // batch panel, so the steady-state hot path allocates only the reply
+    // vectors that leave the thread.
+    let mut scratch = TransformScratch::new();
+    let mut y = Mat::zeros(1, 1);
 
     loop {
         // Wait for work (or stop).
@@ -235,11 +271,15 @@ fn solver_loop(shared: &Shared, model: &NmfModel, opts: &ServerOptions) {
         // and cannot poison the batch it rode in with.
         let mut valid = Vec::new();
         for p in batch.drain(..) {
+            // Latency is noted *before* the reply is sent, so a client
+            // that has its answer is guaranteed to be in the recorder.
             if p.input.len() != m {
+                note_latency(shared, p.enqueued);
                 let _ = p
                     .reply
                     .send(Err(format!("expected {m}-dim input, got {}", p.input.len())));
             } else if p.input.iter().any(|v| !v.is_finite()) {
+                note_latency(shared, p.enqueued);
                 let _ = p.reply.send(Err("input contains NaN/Inf".to_string()));
             } else {
                 valid.push(p);
@@ -250,41 +290,34 @@ fn solver_loop(shared: &Shared, model: &NmfModel, opts: &ServerOptions) {
         }
         let b = valid.len();
 
-        // Batched NNLS: shared Gram, per-column independence. The solve
-        // runs under `catch_unwind` — a panicking batch replies errors
+        // Batched NNLS on the frozen basis: the precomputed Gram and the
+        // warm scratch are shared across the whole batch. The solve runs
+        // under `catch_unwind` — a panicking batch replies errors
         // instead of killing the solver thread (and the service with it).
-        let solved = catch_unwind(AssertUnwindSafe(|| {
-            let mut y = Mat::zeros(m, b);
-            for (j, p) in valid.iter().enumerate() {
-                y.set_col(j, &p.input);
-            }
-            let at = gemm::at_b(&model.w, &y); // k×b  (WᵀY)
-            let mut ct = at.transpose(); // b×k tall-skinny panel
-            // init: diag-scaled clamp
-            for r in 0..b {
-                for j in 0..k {
-                    let d = gram.get(j, j).max(1e-12);
-                    let v = (ct.get(r, j) / d).max(0.0);
-                    ct.set(r, j, v);
-                }
-            }
-            let num = at.transpose();
-            for _ in 0..opts.nnls_sweeps {
-                crate::nmf::hals::sweep_factor(
-                    &mut ct,
-                    &num,
-                    &gram,
-                    crate::nmf::options::Regularization::NONE,
-                    &order,
-                    true,
-                );
-            }
-            ct
-        }));
+        y.resize(m, b); // flat resize; every column is overwritten below
+        for (j, p) in valid.iter().enumerate() {
+            y.set_col(j, &p.input);
+        }
+        let solved =
+            catch_unwind(AssertUnwindSafe(|| transform.transform_with(&y, &mut scratch)));
         match solved {
-            Ok(ct) => {
+            Ok(Ok(h)) => {
+                // h is k×b: reply column j to request j, then hand the
+                // panel back to the pool for the next batch.
                 for (j, p) in valid.into_iter().enumerate() {
-                    let _ = p.reply.send(Ok(ct.row(j).to_vec()));
+                    let code: Vec<f64> = (0..k).map(|i| h.get(i, j)).collect();
+                    note_latency(shared, p.enqueued);
+                    let _ = p.reply.send(Ok(code));
+                }
+                scratch.recycle(h);
+            }
+            Ok(Err(e)) => {
+                // Unreachable given per-request validation above, but a
+                // refused batch still answers rather than hanging clients.
+                let msg = e.to_string();
+                for p in valid {
+                    note_latency(shared, p.enqueued);
+                    let _ = p.reply.send(Err(msg.clone()));
                 }
             }
             Err(payload) => {
@@ -293,6 +326,7 @@ fn solver_loop(shared: &Shared, model: &NmfModel, opts: &ServerOptions) {
                     crate::coordinator::scheduler::panic_message(payload)
                 );
                 for p in valid {
+                    note_latency(shared, p.enqueued);
                     let _ = p.reply.send(Err(msg.clone()));
                 }
             }
@@ -325,6 +359,9 @@ fn handle_conn(
     let wire_cap = model_m.saturating_mul(4).max(4096);
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
+    // Payload buffer hoisted out of the request loop: a chatty
+    // connection reuses one allocation sized to its largest request.
+    let mut data: Vec<u8> = Vec::new();
     loop {
         // Request: u32 m + m f64s. Clean EOF ends the connection.
         let mut len_buf = [0u8; 4];
@@ -355,7 +392,8 @@ fn handle_conn(
             writer.flush()?;
             anyhow::bail!("oversized request dimension {m} (limit {wire_cap})");
         }
-        let mut data = vec![0u8; m * 8];
+        data.clear();
+        data.resize(m * 8, 0);
         // The payload may arrive across several packets; resume across
         // read timeouts (unlike `read_exact`, which cannot) but give up
         // once the peer stalls mid-message for longer than the deadline.
@@ -371,7 +409,7 @@ fn handle_conn(
             if q.len() >= opts.max_queue {
                 false
             } else {
-                q.push(Pending { input, reply: tx });
+                q.push(Pending { input, reply: tx, enqueued: Instant::now() });
                 true
             }
         };
@@ -485,6 +523,7 @@ impl TransformClient {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gemm;
     use crate::linalg::rng::Pcg64;
 
     fn test_model(m: usize, k: usize, seed: u64) -> NmfModel {
@@ -517,6 +556,10 @@ mod tests {
             / y.iter().map(|v| v * v).sum::<f64>().sqrt();
         assert!(err < 1e-4, "reconstruction err {err}");
         assert!(code.iter().all(|&v| v >= 0.0));
+        let lat = server.latency_summary();
+        assert_eq!(lat.count, 1);
+        assert!(lat.p50.is_finite() && lat.p50 >= 0.0, "p50 {}", lat.p50);
+        assert_eq!(lat.max, lat.p50, "single sample: every percentile is that sample");
         server.shutdown();
     }
 

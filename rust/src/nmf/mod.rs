@@ -12,6 +12,7 @@
 //! | [`regularized`] | ℓ2 / ℓ1 / elastic-net update terms | §3.4, Eqs. 30–34 |
 //! | [`init`] | Random / NNDSVD / NNDSVDa initialization | Remark 2 |
 //! | [`stopping`] | Projected-gradient stopping rule | §3.3, Eqs. 26–27 |
+//! | [`transform`] | Frozen-`W` NNLS projection (serving) | §2.2 half-step |
 //! | [`update_order`] | Cyclic / interleaved / shuffled sweeps | Eqs. 23–24 |
 //!
 //! All solvers implement [`solver::NmfSolver`] and produce an
@@ -62,6 +63,7 @@ pub mod regularized;
 pub mod rhals;
 pub mod solver;
 pub mod stopping;
+pub mod transform;
 pub mod update_order;
 
 pub use model::{NmfFit, NmfModel, TracePoint};

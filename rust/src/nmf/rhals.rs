@@ -208,6 +208,65 @@ impl RandomizedHals {
         rng: &mut crate::linalg::rng::Pcg64,
         scratch: &mut RhalsScratch,
     ) -> Result<NmfFit> {
+        // ---- Initialization (line 10) ----
+        let (w, ht) = init::initialize_from_qb_with(
+            &factors.q,
+            &factors.b,
+            x_mean,
+            &self.opts,
+            rng,
+            &mut scratch.ws,
+        );
+        self.iterate_seeded(factors, x_norm_sq, start, rng, scratch, w, ht)
+    }
+
+    /// Warm-started compressed iterations: like
+    /// [`RandomizedHals::iterate_compressed_with`], but resuming from a
+    /// caller-provided iterate instead of a fresh initialization — the
+    /// online-fit refresh path ([`crate::sketch::streaming::OnlineNmf`]),
+    /// where each refresh continues from the previous model's factors.
+    /// `w` is the high-dimensional `m×k` basis and `ht` the `n×k`
+    /// transposed coefficient matrix (rows for columns the previous model
+    /// never saw are typically zero — the first H sweep revives them).
+    /// Both must be nonnegative; draw them from `scratch.ws` so the
+    /// returned fit's [`NmfFit::recycle`] hands them back to the pool.
+    #[allow(clippy::too_many_arguments)]
+    pub fn iterate_compressed_warm_with(
+        &self,
+        factors: &QbFactors,
+        x_norm_sq: f64,
+        start: Instant,
+        rng: &mut crate::linalg::rng::Pcg64,
+        scratch: &mut RhalsScratch,
+        w: Mat,
+        ht: Mat,
+    ) -> Result<NmfFit> {
+        let m = factors.q.rows();
+        let n = factors.b.cols();
+        let k = self.opts.rank;
+        anyhow::ensure!(
+            w.shape() == (m, k) && ht.shape() == (n, k),
+            "warm start: W must be {m}x{k} and Ht {n}x{k}, got {:?} and {:?}",
+            w.shape(),
+            ht.shape()
+        );
+        anyhow::ensure!(w.is_nonneg() && ht.is_nonneg(), "warm start: factors must be >= 0");
+        self.iterate_seeded(factors, x_norm_sq, start, rng, scratch, w, ht)
+    }
+
+    /// The compressed HALS loop proper, starting from the given iterate
+    /// (shared by the cold- and warm-start entry points above).
+    #[allow(clippy::too_many_arguments)]
+    fn iterate_seeded(
+        &self,
+        factors: &QbFactors,
+        x_norm_sq: f64,
+        start: Instant,
+        rng: &mut crate::linalg::rng::Pcg64,
+        scratch: &mut RhalsScratch,
+        mut w: Mat,
+        mut ht: Mat,
+    ) -> Result<NmfFit> {
         let o = &self.opts;
         let q = &factors.q;
         let b = &factors.b;
@@ -216,9 +275,6 @@ impl RandomizedHals {
         let k = o.rank;
         let b_norm_sq = norms::fro_norm_sq(b);
 
-        // ---- Initialization (line 10) ----
-        let (mut w, mut ht) =
-            init::initialize_from_qb_with(q, b, x_mean, o, rng, &mut scratch.ws);
         let mut wt = scratch.ws.acquire_mat(l, k); // W̃ = QᵀW : l×k
         gemm::at_b_into(q, &w, &mut wt, &mut scratch.ws);
         let want_pg = o.tol > 0.0 || o.trace_every > 0;
@@ -788,6 +844,100 @@ mod tests {
         )
         .fit(&x);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn warm_start_with_cold_init_matches_cold_path_bitwise() {
+        // iterate_compressed_warm_with seeded with exactly the iterate the
+        // cold path would build must reproduce the cold fit bit for bit.
+        let x = low_rank(80, 50, 3, 20);
+        let opts = NmfOptions::new(3).with_max_iter(30).with_tol(0.0).with_seed(21);
+        let solver = RandomizedHals::new(opts.clone());
+        let qb_opts = QbOptions::new(opts.rank)
+            .with_oversample(opts.oversample)
+            .with_power_iters(opts.power_iters)
+            .with_sketch(opts.sketch);
+        let (m, n) = x.shape();
+        let l = qb_opts.sketch_width(m, n);
+        let mut ws = Workspace::new();
+        let mut q = Mat::zeros(m, l);
+        let mut b = Mat::zeros(l, n);
+        let mut r1 = Pcg64::seed_from_u64(opts.seed);
+        qb_into(&x, qb_opts, &mut r1, &mut q, &mut b, &mut ws);
+        let factors = QbFactors { q, b };
+        let x_mean = x.sum() / (m * n) as f64;
+        let x_norm_sq = norms::fro_norm_sq(&x);
+
+        let mut r_cold = r1.clone();
+        let cold = solver
+            .iterate_compressed_with(
+                &factors,
+                x_mean,
+                x_norm_sq,
+                Instant::now(),
+                &mut r_cold,
+                &mut RhalsScratch::new(),
+            )
+            .unwrap();
+
+        let mut r_warm = r1.clone();
+        let mut scratch = RhalsScratch::new();
+        let (w0, ht0) = init::initialize_from_qb_with(
+            &factors.q,
+            &factors.b,
+            x_mean,
+            &opts,
+            &mut r_warm,
+            &mut scratch.ws,
+        );
+        let warm = solver
+            .iterate_compressed_warm_with(
+                &factors,
+                x_norm_sq,
+                Instant::now(),
+                &mut r_warm,
+                &mut scratch,
+                w0,
+                ht0,
+            )
+            .unwrap();
+        assert_eq!(warm.model.w, cold.model.w, "warm(cold init) W != cold W");
+        assert_eq!(warm.model.h, cold.model.h, "warm(cold init) H != cold H");
+        assert_eq!(warm.final_rel_err.to_bits(), cold.final_rel_err.to_bits());
+    }
+
+    #[test]
+    fn warm_start_validates_shapes_and_sign() {
+        let x = low_rank(30, 20, 2, 22);
+        let opts = NmfOptions::new(2).with_max_iter(5).with_seed(23);
+        let solver = RandomizedHals::new(opts.clone());
+        let qb_opts = QbOptions::new(2)
+            .with_oversample(opts.oversample)
+            .with_power_iters(opts.power_iters);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let factors = crate::sketch::qb::qb(&x, qb_opts, &mut rng);
+        // Wrong Ht shape.
+        let bad = solver.iterate_compressed_warm_with(
+            &factors,
+            1.0,
+            Instant::now(),
+            &mut rng,
+            &mut RhalsScratch::new(),
+            Mat::full(30, 2, 0.1),
+            Mat::full(19, 2, 0.1),
+        );
+        assert!(bad.is_err());
+        // Negative warm factors.
+        let bad = solver.iterate_compressed_warm_with(
+            &factors,
+            1.0,
+            Instant::now(),
+            &mut rng,
+            &mut RhalsScratch::new(),
+            Mat::full(30, 2, -0.1),
+            Mat::full(20, 2, 0.1),
+        );
+        assert!(bad.is_err());
     }
 
     #[test]

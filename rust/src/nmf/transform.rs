@@ -1,0 +1,411 @@
+//! Hot inference path: project fresh batches onto a frozen basis `W`.
+//!
+//! Serving traffic is mostly *transform*, not fit: given the trained
+//! `W (m×k)`, each incoming batch `X (m×b)` needs the H-only NNLS
+//! subproblem
+//!
+//! ```text
+//! min_{H ≥ 0} ‖X − W·H‖_F²
+//! ```
+//!
+//! which is exactly one half of a HALS iteration with the other factor
+//! pinned (the sklearn `update_H=False` idiom): the numerator `XᵀW` and
+//! the Gram `WᵀW` are formed once, then [`sweep_factor`] sweeps the
+//! coefficient panel. Because `W` never changes, the Gram is computed
+//! **once at construction** and every request only pays `O(m·b·k)` for
+//! the numerator plus `O(b·k²)` per sweep.
+//!
+//! Gillis & Glineur (arXiv:1107.5194) observe that repeating the inner
+//! coordinate sweeps pays off as long as they still move the iterate;
+//! [`TransformOptions::inner_tol`] enables exactly their stopping rule —
+//! sweep until the per-sweep change drops below `inner_tol` times the
+//! first sweep's change (0 keeps the fixed sweep count).
+//!
+//! ## Allocation discipline
+//!
+//! [`Transform::transform_with`] draws every buffer — numerator, the
+//! coefficient panel, the acceleration snapshot, and the returned `H` —
+//! from a caller [`TransformScratch`]; recycle results with
+//! [`TransformScratch::recycle`] and a warm transform performs **zero
+//! heap allocations in both thread regimes** (asserted by
+//! `tests/test_zero_alloc.rs` and `tests/test_zero_alloc_pool.rs`).
+//! Dense and sparse (CSR / dual-storage) batches are accepted via
+//! [`NmfInput`]; the sparse numerator runs on the `O(nnz·k)` kernels.
+
+use anyhow::Result;
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Pcg64;
+use crate::linalg::sparse::{self, NmfInput};
+use crate::linalg::workspace::Workspace;
+use crate::nmf::hals::sweep_factor;
+use crate::nmf::options::{Regularization, UpdateOrder};
+use crate::nmf::update_order::OrderState;
+
+/// Options for the pinned-basis NNLS solve.
+#[derive(Clone, Copy, Debug)]
+pub struct TransformOptions {
+    /// Maximum HALS sweeps per batch (the fixed count when
+    /// [`inner_tol`](TransformOptions::inner_tol) is 0).
+    pub sweeps: usize,
+    /// Gillis-style inner-repeat acceleration: stop sweeping once the
+    /// per-sweep max-abs change drops to `inner_tol ×` the first sweep's
+    /// change. `0.0` (default) disables the early stop.
+    pub inner_tol: f64,
+    /// Component sweep order (blocked-cyclic or shuffled; the
+    /// interleaved order is rejected — it defeats the Gram reuse).
+    pub order: UpdateOrder,
+    /// Seed for the shuffled order's per-sweep permutations (ignored by
+    /// the cyclic order). Each call reseeds, so transforms are
+    /// deterministic and independent of request history.
+    pub seed: u64,
+    /// ℓ1/ℓ2 regularization applied to the coefficients.
+    pub reg: Regularization,
+}
+
+impl Default for TransformOptions {
+    fn default() -> Self {
+        TransformOptions {
+            sweeps: 60,
+            inner_tol: 0.0,
+            order: UpdateOrder::BlockedCyclic,
+            seed: 0,
+            reg: Regularization::NONE,
+        }
+    }
+}
+
+impl TransformOptions {
+    pub fn with_sweeps(mut self, sweeps: usize) -> Self {
+        self.sweeps = sweeps;
+        self
+    }
+
+    pub fn with_inner_tol(mut self, tol: f64) -> Self {
+        self.inner_tol = tol;
+        self
+    }
+
+    pub fn with_order(mut self, order: UpdateOrder) -> Self {
+        self.order = order;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_reg(mut self, reg: Regularization) -> Self {
+        self.reg = reg;
+        self
+    }
+}
+
+/// Reusable cross-request scratch for [`Transform::transform_with`]: a
+/// [`Workspace`] buffer pool plus the sweep-order permutation. Keep one
+/// alive per connection/worker and warm transforms allocate nothing.
+#[derive(Default)]
+pub struct TransformScratch {
+    /// The buffer pool every matrix of the solve is drawn from.
+    pub ws: Workspace,
+    order: OrderState,
+}
+
+impl TransformScratch {
+    pub fn new() -> Self {
+        TransformScratch { ws: Workspace::new(), order: OrderState::empty() }
+    }
+
+    /// Hand a finished transform's `H` storage back to the pool, so the
+    /// next warm call reuses it.
+    pub fn recycle(&mut self, h: Mat) {
+        self.ws.release_mat(h);
+    }
+}
+
+/// A frozen basis prepared for serving: `W` plus its precomputed Gram
+/// `WᵀW`. Construct once per model, then call
+/// [`transform_with`](Transform::transform_with) per batch.
+pub struct Transform {
+    w: Mat,
+    gram: Mat,
+    opts: TransformOptions,
+}
+
+impl Transform {
+    /// Prepare a nonnegative basis `W (m×k)` for serving (computes the
+    /// `k×k` Gram once).
+    pub fn new(w: Mat, opts: TransformOptions) -> Result<Self> {
+        anyhow::ensure!(w.rows() > 0 && w.cols() > 0, "transform: empty basis");
+        anyhow::ensure!(w.is_nonneg(), "transform: basis must be nonnegative");
+        anyhow::ensure!(
+            opts.order != UpdateOrder::InterleavedCyclic,
+            "transform supports blocked-cyclic and shuffled orders only \
+             (the interleaved order defeats the Gram reuse the pinned solve relies on)"
+        );
+        anyhow::ensure!(opts.sweeps >= 1, "transform: sweeps must be >= 1");
+        anyhow::ensure!(
+            opts.inner_tol >= 0.0 && opts.inner_tol.is_finite(),
+            "transform: inner_tol must be finite and nonnegative"
+        );
+        let gram = gemm::gram(&w);
+        Ok(Transform { w, gram, opts })
+    }
+
+    /// Number of rows `m` a batch must have.
+    pub fn rows(&self) -> usize {
+        self.w.rows()
+    }
+
+    /// Rank `k` of the basis (rows of the returned `H`).
+    pub fn rank(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// The frozen basis.
+    pub fn basis(&self) -> &Mat {
+        &self.w
+    }
+
+    /// The configured options.
+    pub fn options(&self) -> &TransformOptions {
+        &self.opts
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`transform_with`](Transform::transform_with).
+    pub fn transform<'a>(&self, x: impl Into<NmfInput<'a>>) -> Result<Mat> {
+        self.transform_with(x, &mut TransformScratch::new())
+    }
+
+    /// Solve `min_{H ≥ 0} ‖X − W·H‖` for a dense or sparse batch
+    /// `X (m×b)`, returning `H (k×b)` drawn from `scratch.ws` (recycle it
+    /// with [`TransformScratch::recycle`]).
+    ///
+    /// The solve is the exact pinned-`W` HALS H-step: numerator `XᵀW`
+    /// via the shared [`sparse::input_at_b_into`] dispatch, the scaled
+    /// NNLS diagonal initialization, then [`sweep_factor`] sweeps with
+    /// the precomputed Gram — so the output bit-matches a `Hals` fit
+    /// whose W-update is frozen (property-tested in
+    /// `tests/test_properties.rs`, KKT stationarity included). Warm
+    /// calls perform zero heap allocations.
+    pub fn transform_with<'a>(
+        &self,
+        x: impl Into<NmfInput<'a>>,
+        scratch: &mut TransformScratch,
+    ) -> Result<Mat> {
+        let x = x.into();
+        let (rows, b) = x.shape();
+        anyhow::ensure!(
+            rows == self.w.rows(),
+            "transform: batch has {rows} rows, expected {}",
+            self.w.rows()
+        );
+        anyhow::ensure!(b > 0, "transform: empty batch");
+        let k = self.w.cols();
+
+        // Numerator XᵀW (b×k) — the only O(m) work per request.
+        let mut num = scratch.ws.acquire_mat(b, k);
+        sparse::input_at_b_into(x, &self.w, &mut num, &mut scratch.ws);
+
+        // Scaled NNLS init: Ct = [XᵀW · diag(WᵀW)⁻¹]₊ (the
+        // `NmfModel::transform` initialization, sample-major).
+        let mut ct = scratch.ws.acquire_mat(b, k);
+        for r in 0..b {
+            let nrow = num.row(r);
+            let crow = ct.row_mut(r);
+            for j in 0..k {
+                let d = self.gram.get(j, j).max(1e-12);
+                crow[j] = (nrow[j] / d).max(0.0);
+            }
+        }
+
+        scratch.order.reset(k, self.opts.order);
+        let mut rng = Pcg64::seed_from_u64(self.opts.seed);
+        let accel = self.opts.inner_tol > 0.0;
+        let mut prev = if accel {
+            scratch.ws.acquire_mat(b, k)
+        } else {
+            scratch.ws.acquire_mat(0, 0)
+        };
+        let mut delta0 = 0.0f64;
+        for sweep in 0..self.opts.sweeps {
+            if accel {
+                prev.as_mut_slice().copy_from_slice(ct.as_slice());
+            }
+            scratch.order.advance(&mut rng);
+            sweep_factor(&mut ct, &num, &self.gram, self.opts.reg, scratch.order.order(), true);
+            if accel {
+                let delta = ct.max_abs_diff(&prev);
+                if sweep == 0 {
+                    delta0 = delta;
+                    if delta0 == 0.0 {
+                        break; // init already stationary
+                    }
+                } else if delta <= self.opts.inner_tol * delta0 {
+                    break; // Gillis rule: sweeps stopped paying off
+                }
+            }
+        }
+
+        let mut h = scratch.ws.acquire_mat(k, b);
+        ct.transpose_into(&mut h);
+        scratch.ws.release_mat(prev);
+        scratch.ws.release_mat(ct);
+        scratch.ws.release_mat(num);
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms;
+    use crate::linalg::sparse::CsrMat;
+    use crate::nmf::model::NmfModel;
+
+    fn basis(m: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        rng.uniform_mat(m, k).map(|v| v + 0.05)
+    }
+
+    #[test]
+    fn matches_model_transform_oracle() {
+        // Same init, same cyclic sweeps — the serving path must agree
+        // with the existing k×n-orientation oracle to roundoff.
+        let w = basis(30, 4, 1);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let c_true = rng.uniform_mat(4, 9);
+        let x = gemm::matmul(&w, &c_true);
+        let t = Transform::new(w.clone(), TransformOptions::default().with_sweeps(50)).unwrap();
+        let h = t.transform(&x).unwrap();
+        let model = NmfModel { w, h: Mat::zeros(4, 1) };
+        let oracle = model.transform(&x, 50);
+        assert_eq!(h.shape(), (4, 9));
+        assert!(h.max_abs_diff(&oracle) < 1e-12, "diff {}", h.max_abs_diff(&oracle));
+    }
+
+    #[test]
+    fn recovers_codes_and_accelerated_agrees() {
+        let w = basis(40, 5, 3);
+        let mut rng = Pcg64::seed_from_u64(4);
+        let c_true = rng.uniform_mat(5, 12);
+        let x = gemm::matmul(&w, &c_true);
+        let full = Transform::new(w.clone(), TransformOptions::default().with_sweeps(200))
+            .unwrap()
+            .transform(&x)
+            .unwrap();
+        let rec = gemm::matmul(&w, &full);
+        let err = norms::fro_norm(&rec.sub(&x)) / norms::fro_norm(&x);
+        assert!(err < 1e-6, "err={err}");
+        // The Gillis early stop must land at (numerically) the same
+        // solution — it only skips sweeps that no longer move the iterate.
+        let accel = Transform::new(
+            w.clone(),
+            TransformOptions::default().with_sweeps(200).with_inner_tol(1e-6),
+        )
+        .unwrap()
+        .transform(&x)
+        .unwrap();
+        assert!(accel.max_abs_diff(&full) < 1e-6, "diff {}", accel.max_abs_diff(&full));
+        // Zero batch: the init is already stationary, the accelerated
+        // path breaks after one sweep, and the answer is exactly zero.
+        let zero = Transform::new(w, TransformOptions::default().with_inner_tol(1e-3))
+            .unwrap()
+            .transform(&Mat::zeros(40, 3))
+            .unwrap();
+        assert!(zero.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dense_and_sparse_batches_agree() {
+        let w = basis(25, 3, 5);
+        let mut rng = Pcg64::seed_from_u64(6);
+        let dense = rng.uniform_mat(25, 8).map(|v| if v < 0.6 { 0.0 } else { v });
+        let csr = CsrMat::from_dense(&dense);
+        let t = Transform::new(w, TransformOptions::default().with_sweeps(40)).unwrap();
+        let hd = t.transform(&dense).unwrap();
+        let hs = t.transform(&csr).unwrap();
+        assert!(hd.max_abs_diff(&hs) < 1e-12, "diff {}", hd.max_abs_diff(&hs));
+        assert!(hd.is_nonneg());
+    }
+
+    #[test]
+    fn warm_scratch_is_bit_stable_and_pool_stops_growing() {
+        let w = basis(35, 4, 7);
+        let mut rng = Pcg64::seed_from_u64(8);
+        let x = rng.uniform_mat(35, 10);
+        let t = Transform::new(
+            w,
+            TransformOptions::default().with_sweeps(30).with_order(UpdateOrder::Shuffled),
+        )
+        .unwrap();
+        let mut scratch = TransformScratch::new();
+        let h1 = t.transform_with(&x, &mut scratch).unwrap();
+        let first = h1.clone();
+        scratch.recycle(h1);
+        let h2 = t.transform_with(&x, &mut scratch).unwrap();
+        assert_eq!(h2, first, "shuffled transform must reseed per call");
+        scratch.recycle(h2);
+        let pooled = scratch.ws.pooled();
+        let h3 = t.transform_with(&x, &mut scratch).unwrap();
+        scratch.recycle(h3);
+        assert_eq!(scratch.ws.pooled(), pooled, "warm transform grew the pool");
+    }
+
+    #[test]
+    fn l1_regularization_sparsifies_codes() {
+        let w = basis(30, 6, 9);
+        let mut rng = Pcg64::seed_from_u64(10);
+        let x = rng.uniform_mat(30, 15);
+        let plain = Transform::new(w.clone(), TransformOptions::default())
+            .unwrap()
+            .transform(&x)
+            .unwrap();
+        let l1 = Transform::new(
+            w,
+            TransformOptions::default().with_reg(Regularization::lasso(0.8)),
+        )
+        .unwrap()
+        .transform(&x)
+        .unwrap();
+        assert!(
+            l1.zero_fraction() > plain.zero_fraction(),
+            "l1: {} vs {}",
+            l1.zero_fraction(),
+            plain.zero_fraction()
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        let w = basis(20, 3, 11);
+        assert!(
+            Transform::new(w.clone().map(|v| -v), TransformOptions::default()).is_err(),
+            "negative basis"
+        );
+        assert!(
+            Transform::new(
+                w.clone(),
+                TransformOptions::default().with_order(UpdateOrder::InterleavedCyclic)
+            )
+            .is_err(),
+            "interleaved order"
+        );
+        assert!(
+            Transform::new(w.clone(), TransformOptions::default().with_sweeps(0)).is_err(),
+            "zero sweeps"
+        );
+        assert!(
+            Transform::new(w.clone(), TransformOptions::default().with_inner_tol(f64::NAN))
+                .is_err(),
+            "NaN inner_tol"
+        );
+        let t = Transform::new(w, TransformOptions::default()).unwrap();
+        assert!(t.transform(&Mat::zeros(19, 2)).is_err(), "row mismatch");
+        assert_eq!(t.rows(), 20);
+        assert_eq!(t.rank(), 3);
+    }
+}

@@ -125,7 +125,7 @@ impl ColumnBlockSource for MatSource<'_> {
 /// so a `block_cols` equal to a store's native slab width keeps reads
 /// whole-slab (one contiguous `pread`) while the compute-chunk grid stays
 /// absolute.
-fn read_width(block_cols: usize) -> usize {
+pub(crate) fn read_width(block_cols: usize) -> usize {
     if block_cols >= 2 * COMPUTE_COLS {
         (block_cols / COMPUTE_COLS) * COMPUTE_COLS
     } else {
@@ -140,7 +140,7 @@ fn read_width(block_cols: usize) -> usize {
 /// chunk-aligned slabs into `io` and chunks are carved out. Either way
 /// the chunk grid — and therefore every FP accumulation grouping — is
 /// independent of `block_cols`.
-fn for_each_chunk(
+pub(crate) fn for_each_chunk(
     src: &dyn ColumnBlockSource,
     block_cols: usize,
     io: &mut Mat,
@@ -469,7 +469,7 @@ impl SparseColumnBlockSource for CscSource<'_> {
 /// nothing to gain from wider-than-chunk slab reads); the chunk grid —
 /// and therefore every accumulation grouping — is independent of
 /// `block_cols`, which is what buys bit-determinism across block sizes.
-fn for_each_sparse_chunk(
+pub(crate) fn for_each_sparse_chunk(
     src: &dyn SparseColumnBlockSource,
     block_cols: usize,
     block: &mut CscBlock,
@@ -497,7 +497,7 @@ fn for_each_sparse_chunk(
 /// data column, then ascending row within the column — per output
 /// element this is the dense chunk GEMM's accumulation order with exact
 /// zeros omitted, so single-chunk results bit-match the dense engine.
-fn csc_chunk_sketch_dense(block: &CscBlock, c0: usize, omega: &Mat, y: &mut Mat) {
+pub(crate) fn csc_chunk_sketch_dense(block: &CscBlock, c0: usize, omega: &Mat, y: &mut Mat) {
     debug_assert_eq!(omega.cols(), y.cols());
     for j in 0..block.ncols() {
         let orow = omega.row(c0 + j);
@@ -514,7 +514,7 @@ fn csc_chunk_sketch_dense(block: &CscBlock, c0: usize, omega: &Mat, y: &mut Mat)
 /// `Y += X_chunk · Ω[c0.., :]` for the implicit sparse-sign `Ω` encoded
 /// in `(cols, vals)` tables — `O(nnz_chunk · s)` work, same per-element
 /// order as [`sparse_sketch_apply_block`] with the chunk's zeros omitted.
-fn csc_chunk_sketch_sign(
+pub(crate) fn csc_chunk_sketch_sign(
     block: &CscBlock,
     c0: usize,
     cols: &[f64],
@@ -538,7 +538,7 @@ fn csc_chunk_sketch_sign(
 /// Rows `[c0, c0 + ncols)` of `Z = XᵀQ`: output row `c0 + j` is the
 /// whole ascending-row accumulation of chunk column `j` — the streaming
 /// twin of [`crate::linalg::sparse::csc_at_b_into`].
-fn csc_chunk_at_b(block: &CscBlock, c0: usize, q: &Mat, z: &mut Mat) {
+pub(crate) fn csc_chunk_at_b(block: &CscBlock, c0: usize, q: &Mat, z: &mut Mat) {
     debug_assert_eq!(q.cols(), z.cols());
     for j in 0..block.ncols() {
         let zrow = z.row_mut(c0 + j);

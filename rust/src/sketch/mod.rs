@@ -6,6 +6,12 @@
 //! * [`blocked`] — the pass-efficient out-of-core variant (paper
 //!   Appendix A / Algorithm 2) that builds the same factors while only ever
 //!   touching one column block of `A` at a time.
+//! * [`streaming`] — the incremental variant for *growing* corpora:
+//!   [`streaming::StreamingSketch`] / [`streaming::StreamingSparseSketch`]
+//!   accumulate `Y = XΩ` as column chunks arrive (bit-identical to the
+//!   blocked engine on the concatenation, for any chunking), and
+//!   [`streaming::OnlineNmf`] runs warm-started compressed HALS refreshes
+//!   on top.
 //!
 //! The QB products (`XΩ`, `XᵀQ`, `QᵀX`) are the compression stage's whole
 //! cost, so both variants are built as one **workspace-drawn, pool-parallel
@@ -36,3 +42,4 @@
 
 pub mod blocked;
 pub mod qb;
+pub mod streaming;

@@ -1,0 +1,1236 @@
+//! Incremental (streaming) QB sketch and online NMF refresh.
+//!
+//! The out-of-core engine ([`super::blocked`]) already streams column
+//! blocks, but it re-reads the *whole* corpus on every decomposition. For
+//! a growing corpus — new samples arriving in chunks — that is wasteful:
+//! the rank-`l` range sketch `Y = XΩ` is a **sum over column chunks**
+//! (`Y = Σ_c X_c Ω_c`), so it can be accumulated as data arrives and the
+//! expensive pass-1 work never has to be repeated.
+//!
+//! [`StreamingSketch`] (dense) and [`StreamingSparseSketch`] (CSC) do
+//! exactly that: each [`push_columns`](StreamingSketch::push_columns)
+//! extends the sketch table `Ω` by the new columns' rows (the per-column
+//! draws are sequential, so the incremental table is bit-identical to the
+//! batch draw), folds every completed [`COMPUTE_COLS`]-wide cell of the
+//! fixed absolute chunk grid into the running `Y`, and retains the raw
+//! columns for the power-iteration and `B = QᵀX` passes (those
+//! genuinely need all data; sources that cannot be re-read must be
+//! retained somewhere, and this store doubles as that somewhere).
+//! [`factors`](StreamingSketch::factors) then finishes the remaining
+//! `1 + 2q` passes and returns factors **bit-identical to
+//! [`super::blocked::qb_blocked_with`] on the concatenation** — for any
+//! chunking of the arrivals, any sketch kind, both thread regimes
+//! (asserted by the tests below and by `test_properties.rs`).
+//!
+//! [`OnlineNmf`] stacks the paper's compressed HALS on top: each
+//! [`refresh`](OnlineNmf::refresh) decomposes the sketch accumulated so
+//! far and runs [`RandomizedHals`] on it —  cold on the first refresh,
+//! warm-started from the previous model's factors afterwards
+//! ([`RandomizedHals::iterate_compressed_warm_with`]), so the model
+//! tracks the growing corpus without ever re-initializing.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::blocked::{
+    csc_chunk_at_b, csc_chunk_sketch_dense, csc_chunk_sketch_sign, for_each_chunk,
+    for_each_sparse_chunk, qb_blocked_sparse_with, qb_blocked_with, read_width,
+    ColumnBlockSource, CscBlock, SparseColumnBlockSource, COMPUTE_COLS,
+};
+use super::qb::{fill_sparse_sign, sparse_sketch_apply_block, QbFactors, QbOptions, SketchKind};
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::qr::orthonormalize_into;
+use crate::linalg::rng::Pcg64;
+use crate::linalg::workspace::Workspace;
+use crate::nmf::model::{NmfFit, NmfModel};
+use crate::nmf::options::{NmfOptions, UpdateOrder};
+use crate::nmf::rhals::{RandomizedHals, RhalsScratch};
+
+/// The sketch tables `Ω`, grown row-by-row as columns arrive. Dense kinds
+/// store the explicit row-major `ncols×l` table; the sparse-sign kind
+/// stores the implicit `(cols, vals)` encoding of
+/// [`super::qb::fill_sparse_sign`]. Both draws are per-row sequential,
+/// so extending the table continues the exact stream the batch engines
+/// would have drawn in one shot.
+enum SketchTables {
+    Dense(Vec<f64>),
+    Sign { cols: Vec<f64>, vals: Vec<f64>, s: usize },
+}
+
+/// Replay the batch engines' sketch draw at width `l_now` on a pristine
+/// seed clone — used when the corpus is still narrower than the
+/// provisional sketch width, where [`StreamingSketch::factors`] falls
+/// back to the batch path and the post-draw RNG state must match *that*
+/// draw, not the incremental one.
+fn replayed_post_draw(opts: &QbOptions, seed_rng: &Pcg64, m: usize, n: usize) -> Pcg64 {
+    let l_now = opts.sketch_width(m, n);
+    let mut rng = seed_rng.clone();
+    match opts.sketch {
+        SketchKind::Uniform => {
+            let mut buf = vec![0.0; n * l_now];
+            rng.fill_uniform(&mut buf);
+        }
+        SketchKind::Gaussian => {
+            let mut buf = vec![0.0; n * l_now];
+            rng.fill_gaussian(&mut buf);
+        }
+        SketchKind::SparseSign { nnz } => {
+            let s = nnz.clamp(1, l_now);
+            let mut cols = vec![0.0; n * s];
+            let mut vals = vec![0.0; n * s];
+            fill_sparse_sign(&mut rng, l_now, s, &mut cols, &mut vals);
+        }
+    }
+    rng
+}
+
+/// Gather columns `[c0, c1)` of a column-major store into a row-major
+/// [`Mat`] (the dense chunk staging the blocked engine computes over).
+fn gather_block(data: &[f64], m: usize, c0: usize, c1: usize, out: &mut Mat) {
+    out.resize(m, c1 - c0);
+    for i in 0..m {
+        let row = out.row_mut(i);
+        for (t, j) in (c0..c1).enumerate() {
+            row[t] = data[j * m + i];
+        }
+    }
+}
+
+/// The retained dense column store viewed as a [`ColumnBlockSource`], so
+/// the power-iteration and `B` passes run on the stock chunk driver.
+struct StoreSource<'a> {
+    m: usize,
+    n: usize,
+    data: &'a [f64],
+}
+
+impl ColumnBlockSource for StoreSource<'_> {
+    fn rows(&self) -> usize {
+        self.m
+    }
+    fn cols(&self) -> usize {
+        self.n
+    }
+    fn read_block(&self, j0: usize, j1: usize) -> Result<Mat> {
+        let mut out = Mat::zeros(1, 1);
+        self.read_block_into(j0, j1, &mut out)?;
+        Ok(out)
+    }
+    fn read_block_into(&self, j0: usize, j1: usize, out: &mut Mat) -> Result<()> {
+        anyhow::ensure!(j0 <= j1 && j1 <= self.n, "bad column range {j0}..{j1}");
+        gather_block(self.data, self.m, j0, j1, out);
+        Ok(())
+    }
+}
+
+/// Incrementally accumulated dense QB sketch over a growing corpus.
+///
+/// Push column chunks of any width in any grouping; the resulting
+/// [`factors`](StreamingSketch::factors) are bit-identical to
+/// [`qb_blocked_with`] on the concatenation with the same seed. Pass-1
+/// work (`Y = XΩ`) is done eagerly at push time over the fixed absolute
+/// [`COMPUTE_COLS`] chunk grid — only whole cells are folded in, so the
+/// accumulation grouping never depends on how arrivals were chunked.
+///
+/// Scalar side data needed by the compressed solver — the running entry
+/// sum and squared Frobenius norm — is accumulated **per stored entry in
+/// column-major push order**, which makes it chunking-invariant bitwise
+/// (but equal to the row-major [`Mat::sum`] only up to roundoff).
+pub struct StreamingSketch {
+    opts: QbOptions,
+    m: usize,
+    /// Provisional sketch width `min(rank + oversample, m)` — final once
+    /// the corpus has at least that many columns.
+    l: usize,
+    /// RNG the incremental table draws advance (clone of `seed_rng`).
+    draw: Pcg64,
+    /// Pristine RNG at the seed, for the narrow-corpus batch fallback.
+    seed_rng: Pcg64,
+    tables: SketchTables,
+    /// Retained corpus, column-major (`data[j*m + i]`).
+    data: Vec<f64>,
+    ncols: usize,
+    /// Running `Y = Σ X_cell Ω_cell` over completed grid cells.
+    y: Mat,
+    /// Columns folded into `y` so far (a multiple of [`COMPUTE_COLS`]).
+    flushed: usize,
+    stage: Mat,
+    omega_chunk: Mat,
+    ws: Workspace,
+    sum_acc: f64,
+    norm_acc: f64,
+}
+
+impl StreamingSketch {
+    /// A sketch for an `m`-row corpus; `seed` plays the role of the batch
+    /// engines' RNG argument (same seed ⇒ same `Ω` ⇒ same factors).
+    pub fn new(m: usize, opts: QbOptions, seed: u64) -> Self {
+        assert!(m > 0, "streaming sketch: zero rows");
+        let l = opts.sketch_width(m, usize::MAX);
+        let seed_rng = Pcg64::seed_from_u64(seed);
+        let tables = match opts.sketch {
+            SketchKind::Uniform | SketchKind::Gaussian => SketchTables::Dense(Vec::new()),
+            SketchKind::SparseSign { nnz } => {
+                SketchTables::Sign { cols: Vec::new(), vals: Vec::new(), s: nnz.clamp(1, l) }
+            }
+        };
+        StreamingSketch {
+            opts,
+            m,
+            l,
+            draw: seed_rng.clone(),
+            seed_rng,
+            tables,
+            data: Vec::new(),
+            ncols: 0,
+            y: Mat::zeros(m, l),
+            flushed: 0,
+            stage: Mat::zeros(1, 1),
+            omega_chunk: Mat::zeros(1, 1),
+            ws: Workspace::new(),
+            sum_acc: 0.0,
+            norm_acc: 0.0,
+        }
+    }
+
+    /// Append a chunk of columns (an `m×w` block) to the corpus: extends
+    /// `Ω`, retains the data, and folds every newly completed grid cell
+    /// into the running `Y`.
+    pub fn push_columns(&mut self, block: &Mat) -> Result<()> {
+        anyhow::ensure!(
+            block.rows() == self.m,
+            "streaming sketch: block has {} rows, expected {}",
+            block.rows(),
+            self.m
+        );
+        let w = block.cols();
+        if w == 0 {
+            return Ok(());
+        }
+        let old = self.ncols;
+        self.data.reserve(self.m * w);
+        for j in 0..w {
+            for i in 0..self.m {
+                let v = block.get(i, j);
+                self.data.push(v);
+                self.sum_acc += v;
+                self.norm_acc += v * v;
+            }
+        }
+        self.ncols = old + w;
+        self.extend_tables(old);
+        self.flush_full_cells();
+        Ok(())
+    }
+
+    /// Stream every column of `src` into the sketch in reads of
+    /// `block_cols` — the adapter that lets the existing column-block
+    /// sources (in-memory matrices, the on-disk store) feed an
+    /// incremental sketch.
+    pub fn push_source(&mut self, src: &dyn ColumnBlockSource, block_cols: usize) -> Result<()> {
+        anyhow::ensure!(block_cols > 0, "streaming sketch: zero block size");
+        anyhow::ensure!(
+            src.rows() == self.m,
+            "streaming sketch: source has {} rows, expected {}",
+            src.rows(),
+            self.m
+        );
+        let n = src.cols();
+        let mut buf = Mat::zeros(1, 1);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + block_cols).min(n);
+            src.read_block_into(j0, j1, &mut buf)?;
+            self.push_columns(&buf)?;
+            j0 = j1;
+        }
+        Ok(())
+    }
+
+    /// Draw `Ω` rows for columns `[old, ncols)` — continuing the exact
+    /// sequence one batch draw over all `ncols` would have produced (the
+    /// uniform/sign streams are element-sequential; the gaussian stream's
+    /// Box–Muller spare lives in the RNG, so it survives the segmenting).
+    fn extend_tables(&mut self, old: usize) {
+        let new = self.ncols;
+        let l = self.l;
+        match &mut self.tables {
+            SketchTables::Dense(table) => {
+                table.resize(new * l, 0.0);
+                let slot = &mut table[old * l..];
+                match self.opts.sketch {
+                    SketchKind::Uniform => self.draw.fill_uniform(slot),
+                    SketchKind::Gaussian => self.draw.fill_gaussian(slot),
+                    SketchKind::SparseSign { .. } => {
+                        unreachable!("sign sketches use the Sign tables")
+                    }
+                }
+            }
+            SketchTables::Sign { cols, vals, s } => {
+                let s = *s;
+                cols.resize(new * s, 0.0);
+                vals.resize(new * s, 0.0);
+                fill_sparse_sign(
+                    &mut self.draw,
+                    l,
+                    s,
+                    &mut cols[old * s..],
+                    &mut vals[old * s..],
+                );
+            }
+        }
+    }
+
+    /// Fold every completed [`COMPUTE_COLS`] cell into `y` — the same
+    /// per-cell products, in the same ascending-cell order, as the batch
+    /// engine's pass 1.
+    fn flush_full_cells(&mut self) {
+        while self.ncols - self.flushed >= COMPUTE_COLS {
+            let c0 = self.flushed;
+            let c1 = c0 + COMPUTE_COLS;
+            gather_block(&self.data, self.m, c0, c1, &mut self.stage);
+            match &self.tables {
+                SketchTables::Dense(table) => {
+                    self.omega_chunk.resize(COMPUTE_COLS, self.l);
+                    self.omega_chunk
+                        .as_mut_slice()
+                        .copy_from_slice(&table[c0 * self.l..c1 * self.l]);
+                    let (stage, y) = (&self.stage, &mut self.y);
+                    gemm::matmul_acc_into(stage, &self.omega_chunk, y, &mut self.ws);
+                }
+                SketchTables::Sign { cols, vals, s } => {
+                    sparse_sketch_apply_block(&self.stage, c0, cols, vals, *s, &mut self.y);
+                }
+            }
+            self.flushed = c1;
+        }
+    }
+
+    /// Finish the decomposition of everything pushed so far: apply the
+    /// unflushed tail cell to a copy of the running `Y`, then run the
+    /// power-iteration and `B = QᵀX` passes over the retained store —
+    /// bit-identical to [`qb_blocked_with`] on the concatenation. The
+    /// sketch is not consumed; more columns can be pushed afterwards.
+    ///
+    /// While the corpus is still narrower than the provisional sketch
+    /// width (`n < l`), the incremental table has the wrong shape and
+    /// this falls back to the batch engine on a pristine seed clone —
+    /// still bitwise the batch answer ([`Self::post_draw_rng`] replays
+    /// the matching draw).
+    pub fn factors(&self, ws: &mut Workspace) -> Result<QbFactors> {
+        anyhow::ensure!(self.ncols > 0, "streaming sketch: no columns pushed yet");
+        let (m, n) = (self.m, self.ncols);
+        let src = StoreSource { m, n, data: &self.data };
+        if self.opts.sketch_width(m, n) != self.l {
+            let mut rng = self.seed_rng.clone();
+            return qb_blocked_with(&src, self.opts, COMPUTE_COLS, &mut rng, ws);
+        }
+        let l = self.l;
+        let block_cols = COMPUTE_COLS;
+        let mut io = ws.acquire_mat(m, read_width(block_cols).min(n));
+        let mut chunk = ws.acquire_mat(m, COMPUTE_COLS.min(n));
+        let mut omega_chunk = ws.acquire_mat(1, 1);
+
+        // Pass 1 happened at push time; copy the running Y and fold in
+        // the tail cell (the same "last partial chunk" the batch engine
+        // folds in last).
+        let mut y = ws.acquire_mat(m, l);
+        y.as_mut_slice().copy_from_slice(self.y.as_slice());
+        if self.flushed < n {
+            gather_block(&self.data, m, self.flushed, n, &mut chunk);
+            match &self.tables {
+                SketchTables::Dense(table) => {
+                    let w = n - self.flushed;
+                    omega_chunk.resize(w, l);
+                    omega_chunk
+                        .as_mut_slice()
+                        .copy_from_slice(&table[self.flushed * l..n * l]);
+                    gemm::matmul_acc_into(&chunk, &omega_chunk, &mut y, ws);
+                }
+                SketchTables::Sign { cols, vals, s } => {
+                    sparse_sketch_apply_block(&chunk, self.flushed, cols, vals, *s, &mut y);
+                }
+            }
+        }
+
+        let mut q = ws.acquire_mat(m, l);
+
+        // Subspace iterations: identical to the batch engine's passes.
+        if self.opts.power_iters > 0 {
+            let mut z = ws.acquire_mat(n, l);
+            let mut qz = ws.acquire_mat(n, l);
+            let mut zb = ws.acquire_mat(1, 1);
+            let mut qz_chunk = ws.acquire_mat(1, 1);
+            for _ in 0..self.opts.power_iters {
+                orthonormalize_into(&y, &mut q, ws);
+                for_each_chunk(&src, block_cols, &mut io, &mut chunk, |c0, xb| {
+                    let w = xb.cols();
+                    zb.resize(w, l);
+                    gemm::at_b_into(xb, &q, &mut zb, ws);
+                    z.as_mut_slice()[c0 * l..(c0 + w) * l].copy_from_slice(zb.as_slice());
+                    Ok(())
+                })?;
+                orthonormalize_into(&z, &mut qz, ws);
+                y.as_mut_slice().fill(0.0);
+                for_each_chunk(&src, block_cols, &mut io, &mut chunk, |c0, xb| {
+                    let w = xb.cols();
+                    qz_chunk.resize(w, l);
+                    qz_chunk
+                        .as_mut_slice()
+                        .copy_from_slice(&qz.as_slice()[c0 * l..(c0 + w) * l]);
+                    gemm::matmul_acc_into(xb, &qz_chunk, &mut y, ws);
+                    Ok(())
+                })?;
+            }
+            ws.release_mat(qz_chunk);
+            ws.release_mat(zb);
+            ws.release_mat(qz);
+            ws.release_mat(z);
+        }
+
+        orthonormalize_into(&y, &mut q, ws);
+
+        // Final pass: B(:, chunk) = Qᵀ X_c.
+        let mut b = ws.acquire_mat(l, n);
+        let mut bb = ws.acquire_mat(1, 1);
+        for_each_chunk(&src, block_cols, &mut io, &mut chunk, |c0, xb| {
+            bb.resize(l, xb.cols());
+            gemm::at_b_into(&q, xb, &mut bb, ws);
+            b.set_col_block(c0, &bb);
+            Ok(())
+        })?;
+
+        ws.release_mat(bb);
+        ws.release_mat(y);
+        ws.release_mat(omega_chunk);
+        ws.release_mat(chunk);
+        ws.release_mat(io);
+        Ok(QbFactors { q, b })
+    }
+
+    /// The RNG state a batch decomposition of the current corpus would
+    /// hold right after drawing `Ω` — what a solver seeded from the same
+    /// seed should continue with (initialization draws, shuffles).
+    pub fn post_draw_rng(&self) -> Pcg64 {
+        if self.ncols == 0 || self.opts.sketch_width(self.m, self.ncols) == self.l {
+            return self.draw.clone();
+        }
+        replayed_post_draw(&self.opts, &self.seed_rng, self.m, self.ncols)
+    }
+
+    /// Number of rows `m`.
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    /// Columns pushed so far.
+    pub fn cols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Running entry sum (column-major accumulation; see the type docs).
+    pub fn sum(&self) -> f64 {
+        self.sum_acc
+    }
+
+    /// Running squared Frobenius norm (column-major accumulation).
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.norm_acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse streaming: the CSC analogue.
+// ---------------------------------------------------------------------------
+
+/// Append columns `[j0, j1)` of a CSC store to a [`CscBlock`].
+fn append_store_cols(
+    colptr: &[usize],
+    rows: &[usize],
+    vals: &[f64],
+    j0: usize,
+    j1: usize,
+    out: &mut CscBlock,
+) {
+    for j in j0..j1 {
+        let (lo, hi) = (colptr[j], colptr[j + 1]);
+        out.push_col(&rows[lo..hi], &vals[lo..hi]);
+    }
+}
+
+/// `Y += X_cell · Ω[c0.., :]` with the dense `Ω` table held as a raw
+/// row-major slice — the identical loop structure (and therefore bitwise
+/// the identical accumulation) as [`csc_chunk_sketch_dense`], which takes
+/// the table as a [`Mat`].
+fn csc_cell_sketch_dense_tab(block: &CscBlock, c0: usize, table: &[f64], l: usize, y: &mut Mat) {
+    for j in 0..block.ncols() {
+        let orow = &table[(c0 + j) * l..(c0 + j + 1) * l];
+        let (is, vs) = block.col(j);
+        for (i, v) in is.iter().zip(vs.iter()) {
+            let yrow = y.row_mut(*i);
+            for (yv, ov) in yrow.iter_mut().zip(orow.iter()) {
+                *yv += *v * *ov;
+            }
+        }
+    }
+}
+
+/// The retained CSC store viewed as a [`SparseColumnBlockSource`].
+struct SparseStoreSource<'a> {
+    m: usize,
+    colptr: &'a [usize],
+    rows: &'a [usize],
+    vals: &'a [f64],
+}
+
+impl SparseColumnBlockSource for SparseStoreSource<'_> {
+    fn rows(&self) -> usize {
+        self.m
+    }
+    fn cols(&self) -> usize {
+        self.colptr.len() - 1
+    }
+    fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+    fn read_block_into(&self, j0: usize, j1: usize, out: &mut CscBlock) -> Result<()> {
+        anyhow::ensure!(j0 <= j1 && j1 <= self.cols(), "bad column range {j0}..{j1}");
+        append_store_cols(self.colptr, self.rows, self.vals, j0, j1, out);
+        Ok(())
+    }
+}
+
+/// Incrementally accumulated **sparse** QB sketch: the CSC twin of
+/// [`StreamingSketch`], with `O(nnz·l)` pass-1 work folded in at push
+/// time and an `O(nnz)` retained store. Factors are bit-identical to
+/// [`qb_blocked_sparse_with`] on the concatenation for any chunking.
+pub struct StreamingSparseSketch {
+    opts: QbOptions,
+    m: usize,
+    l: usize,
+    draw: Pcg64,
+    seed_rng: Pcg64,
+    tables: SketchTables,
+    /// Retained corpus in CSC form (`colptr` starts at `[0]`).
+    colptr: Vec<usize>,
+    rows_idx: Vec<usize>,
+    vals: Vec<f64>,
+    ncols: usize,
+    y: Mat,
+    flushed: usize,
+    stage: CscBlock,
+    sum_acc: f64,
+    norm_acc: f64,
+}
+
+impl StreamingSparseSketch {
+    /// See [`StreamingSketch::new`]; the sparse path is not under the
+    /// zero-allocation contract, so there is no internal workspace.
+    pub fn new(m: usize, opts: QbOptions, seed: u64) -> Self {
+        assert!(m > 0, "streaming sketch: zero rows");
+        let l = opts.sketch_width(m, usize::MAX);
+        let seed_rng = Pcg64::seed_from_u64(seed);
+        let tables = match opts.sketch {
+            SketchKind::Uniform | SketchKind::Gaussian => SketchTables::Dense(Vec::new()),
+            SketchKind::SparseSign { nnz } => {
+                SketchTables::Sign { cols: Vec::new(), vals: Vec::new(), s: nnz.clamp(1, l) }
+            }
+        };
+        StreamingSparseSketch {
+            opts,
+            m,
+            l,
+            draw: seed_rng.clone(),
+            seed_rng,
+            tables,
+            colptr: vec![0],
+            rows_idx: Vec::new(),
+            vals: Vec::new(),
+            ncols: 0,
+            y: Mat::zeros(m, l),
+            flushed: 0,
+            stage: CscBlock::new(),
+            sum_acc: 0.0,
+            norm_acc: 0.0,
+        }
+    }
+
+    /// Append a chunk of CSC columns. Row indices must lie in `[0, m)`
+    /// (ascending within a column — the [`CscBlock`] invariant); the
+    /// whole block is validated before any state changes.
+    pub fn push_columns(&mut self, block: &CscBlock) -> Result<()> {
+        for j in 0..block.ncols() {
+            let (is, _) = block.col(j);
+            if let Some(&last) = is.last() {
+                anyhow::ensure!(
+                    last < self.m,
+                    "streaming sketch: row index {last} out of range for {} rows",
+                    self.m
+                );
+            }
+        }
+        if block.ncols() == 0 {
+            return Ok(());
+        }
+        let old = self.ncols;
+        for j in 0..block.ncols() {
+            let (is, vs) = block.col(j);
+            self.rows_idx.extend_from_slice(is);
+            self.vals.extend_from_slice(vs);
+            for v in vs {
+                self.sum_acc += *v;
+                self.norm_acc += *v * *v;
+            }
+            self.ncols += 1;
+            self.colptr.push(self.rows_idx.len());
+        }
+        self.extend_tables(old);
+        self.flush_full_cells();
+        Ok(())
+    }
+
+    /// Stream every column of `src` into the sketch in reads of
+    /// `block_cols` columns.
+    pub fn push_source(
+        &mut self,
+        src: &dyn SparseColumnBlockSource,
+        block_cols: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(block_cols > 0, "streaming sketch: zero block size");
+        anyhow::ensure!(
+            src.rows() == self.m,
+            "streaming sketch: source has {} rows, expected {}",
+            src.rows(),
+            self.m
+        );
+        let n = src.cols();
+        let mut buf = CscBlock::new();
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + block_cols).min(n);
+            buf.clear();
+            src.read_block_into(j0, j1, &mut buf)?;
+            self.push_columns(&buf)?;
+            j0 = j1;
+        }
+        Ok(())
+    }
+
+    /// Identical draw-extension logic to the dense sketch's.
+    fn extend_tables(&mut self, old: usize) {
+        let new = self.ncols;
+        let l = self.l;
+        match &mut self.tables {
+            SketchTables::Dense(table) => {
+                table.resize(new * l, 0.0);
+                let slot = &mut table[old * l..];
+                match self.opts.sketch {
+                    SketchKind::Uniform => self.draw.fill_uniform(slot),
+                    SketchKind::Gaussian => self.draw.fill_gaussian(slot),
+                    SketchKind::SparseSign { .. } => {
+                        unreachable!("sign sketches use the Sign tables")
+                    }
+                }
+            }
+            SketchTables::Sign { cols, vals, s } => {
+                let s = *s;
+                cols.resize(new * s, 0.0);
+                vals.resize(new * s, 0.0);
+                fill_sparse_sign(
+                    &mut self.draw,
+                    l,
+                    s,
+                    &mut cols[old * s..],
+                    &mut vals[old * s..],
+                );
+            }
+        }
+    }
+
+    fn flush_full_cells(&mut self) {
+        while self.ncols - self.flushed >= COMPUTE_COLS {
+            let c0 = self.flushed;
+            let c1 = c0 + COMPUTE_COLS;
+            self.stage.clear();
+            append_store_cols(&self.colptr, &self.rows_idx, &self.vals, c0, c1, &mut self.stage);
+            match &self.tables {
+                SketchTables::Dense(table) => {
+                    csc_cell_sketch_dense_tab(&self.stage, c0, table, self.l, &mut self.y);
+                }
+                SketchTables::Sign { cols, vals, s } => {
+                    csc_chunk_sketch_sign(&self.stage, c0, cols, vals, *s, &mut self.y);
+                }
+            }
+            self.flushed = c1;
+        }
+    }
+
+    /// See [`StreamingSketch::factors`] — the sparse passes, bit-identical
+    /// to [`qb_blocked_sparse_with`] on the concatenation.
+    pub fn factors(&self, ws: &mut Workspace) -> Result<QbFactors> {
+        anyhow::ensure!(self.ncols > 0, "streaming sketch: no columns pushed yet");
+        let (m, n) = (self.m, self.ncols);
+        let src = SparseStoreSource {
+            m,
+            colptr: &self.colptr,
+            rows: &self.rows_idx,
+            vals: &self.vals,
+        };
+        let mut block = CscBlock::new();
+        if self.opts.sketch_width(m, n) != self.l {
+            let mut rng = self.seed_rng.clone();
+            return qb_blocked_sparse_with(&src, self.opts, COMPUTE_COLS, &mut rng, ws, &mut block);
+        }
+        let l = self.l;
+
+        let mut y = ws.acquire_mat(m, l);
+        y.as_mut_slice().copy_from_slice(self.y.as_slice());
+        if self.flushed < n {
+            block.clear();
+            let (c0, c1) = (self.flushed, n);
+            append_store_cols(&self.colptr, &self.rows_idx, &self.vals, c0, c1, &mut block);
+            match &self.tables {
+                SketchTables::Dense(table) => {
+                    csc_cell_sketch_dense_tab(&block, self.flushed, table, l, &mut y);
+                }
+                SketchTables::Sign { cols, vals, s } => {
+                    csc_chunk_sketch_sign(&block, self.flushed, cols, vals, *s, &mut y);
+                }
+            }
+        }
+
+        let mut q = ws.acquire_mat(m, l);
+
+        if self.opts.power_iters > 0 {
+            let mut z = ws.acquire_mat(n, l);
+            let mut qz = ws.acquire_mat(n, l);
+            for _ in 0..self.opts.power_iters {
+                orthonormalize_into(&y, &mut q, ws);
+                for_each_sparse_chunk(&src, COMPUTE_COLS, &mut block, |c0, xb| {
+                    csc_chunk_at_b(xb, c0, &q, &mut z);
+                    Ok(())
+                })?;
+                orthonormalize_into(&z, &mut qz, ws);
+                y.as_mut_slice().fill(0.0);
+                for_each_sparse_chunk(&src, COMPUTE_COLS, &mut block, |c0, xb| {
+                    csc_chunk_sketch_dense(xb, c0, &qz, &mut y);
+                    Ok(())
+                })?;
+            }
+            ws.release_mat(qz);
+            ws.release_mat(z);
+        }
+
+        orthonormalize_into(&y, &mut q, ws);
+
+        // Final pass: B = (XᵀQ)ᵀ, matching the batch sparse engine.
+        let mut xtq = ws.acquire_mat(n, l);
+        for_each_sparse_chunk(&src, COMPUTE_COLS, &mut block, |c0, xb| {
+            csc_chunk_at_b(xb, c0, &q, &mut xtq);
+            Ok(())
+        })?;
+        let mut b = ws.acquire_mat(l, n);
+        xtq.transpose_into(&mut b);
+        ws.release_mat(xtq);
+        ws.release_mat(y);
+        Ok(QbFactors { q, b })
+    }
+
+    /// See [`StreamingSketch::post_draw_rng`].
+    pub fn post_draw_rng(&self) -> Pcg64 {
+        if self.ncols == 0 || self.opts.sketch_width(self.m, self.ncols) == self.l {
+            return self.draw.clone();
+        }
+        replayed_post_draw(&self.opts, &self.seed_rng, self.m, self.ncols)
+    }
+
+    /// Number of rows `m`.
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    /// Columns pushed so far.
+    pub fn cols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Stored entries retained so far.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Running entry sum (stored entries, push order).
+    pub fn sum(&self) -> f64 {
+        self.sum_acc
+    }
+
+    /// Running squared Frobenius norm (stored entries, push order).
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.norm_acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Online NMF: warm-started refreshes over the streaming sketch.
+// ---------------------------------------------------------------------------
+
+/// Which streaming backend an [`OnlineNmf`] accumulates into.
+enum StreamStore {
+    Dense(StreamingSketch),
+    Sparse(StreamingSparseSketch),
+}
+
+/// Online randomized NMF over a growing corpus: push column chunks as
+/// they arrive, call [`refresh`](OnlineNmf::refresh) whenever an
+/// up-to-date model is wanted. The first refresh is a cold compressed
+/// fit; later refreshes warm-start from the previous factors
+/// ([`RandomizedHals::iterate_compressed_warm_with`]) — rows of `Hᵀ` for
+/// columns the previous model never saw start at zero and are revived by
+/// the first sweep — so the model tracks the corpus without
+/// re-initializing and without re-reading old data for pass 1.
+///
+/// The reported [`NmfFit::final_rel_err`] is the **compressed estimate**
+/// (as in the out-of-core path): `X` only exists inside the sketch, so
+/// the exact epilogue of [`RandomizedHals::fit_with`] is unavailable.
+pub struct OnlineNmf {
+    solver: RandomizedHals,
+    store: StreamStore,
+    scratch: RhalsScratch,
+    model: Option<NmfModel>,
+    refreshes: usize,
+}
+
+impl OnlineNmf {
+    /// An online fit over a dense `m`-row stream.
+    pub fn new(m: usize, opts: NmfOptions) -> Result<Self> {
+        Self::build(m, opts, false)
+    }
+
+    /// An online fit over a sparse (CSC-chunk) `m`-row stream.
+    pub fn new_sparse(m: usize, opts: NmfOptions) -> Result<Self> {
+        Self::build(m, opts, true)
+    }
+
+    fn build(m: usize, opts: NmfOptions, sparse: bool) -> Result<Self> {
+        anyhow::ensure!(m > 0, "online fit: zero rows");
+        anyhow::ensure!(
+            opts.update_order != UpdateOrder::InterleavedCyclic,
+            "randomized HALS supports blocked-cyclic and shuffled orders only \
+             (the interleaved order defeats the Gram reuse the compression relies on)"
+        );
+        anyhow::ensure!(
+            opts.checkpoint_every == 0 && opts.resume_from.is_none(),
+            "online fit does not support checkpoint/resume \
+             (each refresh is already a fresh compressed solve)"
+        );
+        let qb_opts = QbOptions::new(opts.rank)
+            .with_oversample(opts.oversample)
+            .with_power_iters(opts.power_iters)
+            .with_sketch(opts.sketch);
+        let seed = opts.seed;
+        let store = if sparse {
+            StreamStore::Sparse(StreamingSparseSketch::new(m, qb_opts, seed))
+        } else {
+            StreamStore::Dense(StreamingSketch::new(m, qb_opts, seed))
+        };
+        Ok(OnlineNmf {
+            solver: RandomizedHals::new(opts),
+            store,
+            scratch: RhalsScratch::new(),
+            model: None,
+            refreshes: 0,
+        })
+    }
+
+    /// Append a dense chunk of columns (dense streams only).
+    pub fn push_columns(&mut self, block: &Mat) -> Result<()> {
+        match &mut self.store {
+            StreamStore::Dense(s) => s.push_columns(block),
+            StreamStore::Sparse(_) => {
+                anyhow::bail!("online fit: dense push into a sparse stream")
+            }
+        }
+    }
+
+    /// Append a CSC chunk of columns (sparse streams only).
+    pub fn push_sparse_columns(&mut self, block: &CscBlock) -> Result<()> {
+        match &mut self.store {
+            StreamStore::Sparse(s) => s.push_columns(block),
+            StreamStore::Dense(_) => {
+                anyhow::bail!("online fit: sparse push into a dense stream")
+            }
+        }
+    }
+
+    /// Stream every column of a dense source into the sketch.
+    pub fn push_source(&mut self, src: &dyn ColumnBlockSource, block_cols: usize) -> Result<()> {
+        match &mut self.store {
+            StreamStore::Dense(s) => s.push_source(src, block_cols),
+            StreamStore::Sparse(_) => {
+                anyhow::bail!("online fit: dense push into a sparse stream")
+            }
+        }
+    }
+
+    /// Stream every column of a sparse source into the sketch.
+    pub fn push_sparse_source(
+        &mut self,
+        src: &dyn SparseColumnBlockSource,
+        block_cols: usize,
+    ) -> Result<()> {
+        match &mut self.store {
+            StreamStore::Sparse(s) => s.push_source(src, block_cols),
+            StreamStore::Dense(_) => {
+                anyhow::bail!("online fit: sparse push into a dense stream")
+            }
+        }
+    }
+
+    /// Decompose the sketch accumulated so far and solve the compressed
+    /// problem — cold on the first call, warm-started from the previous
+    /// model afterwards. Returns the fit (recycle it with
+    /// [`OnlineNmf::recycle`] when done with the factors).
+    pub fn refresh(&mut self) -> Result<NmfFit> {
+        let m = self.rows();
+        let n = self.cols();
+        anyhow::ensure!(n > 0, "online fit: no columns pushed yet");
+        self.solver.opts.validate(m, n)?;
+        let start = Instant::now();
+        let factors = match &self.store {
+            StreamStore::Dense(s) => s.factors(&mut self.scratch.ws)?,
+            StreamStore::Sparse(s) => s.factors(&mut self.scratch.ws)?,
+        };
+        let mut rng = match &self.store {
+            StreamStore::Dense(s) => s.post_draw_rng(),
+            StreamStore::Sparse(s) => s.post_draw_rng(),
+        };
+        let (sum, norm_sq) = match &self.store {
+            StreamStore::Dense(s) => (s.sum(), s.fro_norm_sq()),
+            StreamStore::Sparse(s) => (s.sum(), s.fro_norm_sq()),
+        };
+        let x_mean = sum / (m * n) as f64;
+        let k = self.solver.opts.rank;
+        let fit = match &self.model {
+            None => self.solver.iterate_compressed_with(
+                &factors,
+                x_mean,
+                norm_sq,
+                start,
+                &mut rng,
+                &mut self.scratch,
+            )?,
+            Some(prev) => {
+                let mut w0 = self.scratch.ws.acquire_mat(m, k);
+                w0.as_mut_slice().copy_from_slice(prev.w.as_slice());
+                let mut ht0 = self.scratch.ws.acquire_mat(n, k);
+                ht0.as_mut_slice().fill(0.0);
+                let n_prev = prev.h.cols().min(n);
+                for j in 0..n_prev {
+                    for c in 0..k {
+                        ht0.set(j, c, prev.h.get(c, j));
+                    }
+                }
+                self.solver.iterate_compressed_warm_with(
+                    &factors,
+                    norm_sq,
+                    start,
+                    &mut rng,
+                    &mut self.scratch,
+                    w0,
+                    ht0,
+                )?
+            }
+        };
+        factors.recycle(&mut self.scratch.ws);
+        self.model = Some(fit.model.clone());
+        self.refreshes += 1;
+        Ok(fit)
+    }
+
+    /// Hand a finished refresh's factor storage back to the internal
+    /// workspace pool.
+    pub fn recycle(&mut self, fit: NmfFit) {
+        fit.recycle(&mut self.scratch.ws);
+    }
+
+    /// The most recent refreshed model, if any refresh has run.
+    pub fn model(&self) -> Option<&NmfModel> {
+        self.model.as_ref()
+    }
+
+    /// Number of rows `m`.
+    pub fn rows(&self) -> usize {
+        match &self.store {
+            StreamStore::Dense(s) => s.rows(),
+            StreamStore::Sparse(s) => s.rows(),
+        }
+    }
+
+    /// Columns pushed so far.
+    pub fn cols(&self) -> usize {
+        match &self.store {
+            StreamStore::Dense(s) => s.cols(),
+            StreamStore::Sparse(s) => s.cols(),
+        }
+    }
+
+    /// Refreshes completed so far.
+    pub fn refreshes(&self) -> usize {
+        self.refreshes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms;
+    use crate::linalg::sparse::{CscMat, CsrMat};
+    use crate::sketch::blocked::{qb_blocked_sparse, CscSource, MatSource};
+    use crate::testing::fixtures;
+
+    #[test]
+    fn streaming_dense_factors_bitwise_across_chunk_sizes() {
+        // Any chunking of the arrivals — including crossing the 256-wide
+        // grid-cell boundary — must reproduce the batch blocked engine
+        // bit for bit, for every sketch kind. l = 7 (odd) exercises the
+        // gaussian Box–Muller spare across segment boundaries.
+        let x = fixtures::low_rank(40, 301, 4, 17);
+        for sketch in [SketchKind::Uniform, SketchKind::Gaussian, SketchKind::sparse_sign()] {
+            let opts =
+                QbOptions::new(4).with_oversample(3).with_power_iters(1).with_sketch(sketch);
+            let mut r_batch = Pcg64::seed_from_u64(5);
+            let reference = qb_blocked_with(
+                &MatSource(&x),
+                opts,
+                COMPUTE_COLS,
+                &mut r_batch,
+                &mut Workspace::new(),
+            )
+            .unwrap();
+            for chunk in [1usize, 7, 37, 100, 301] {
+                let mut sk = StreamingSketch::new(40, opts, 5);
+                let mut j0 = 0;
+                while j0 < 301 {
+                    let j1 = (j0 + chunk).min(301);
+                    sk.push_columns(&x.col_block(j0, j1)).unwrap();
+                    j0 = j1;
+                }
+                let f = sk.factors(&mut Workspace::new()).unwrap();
+                assert_eq!(f.q, reference.q, "{sketch:?} chunk={chunk}: Q differs");
+                assert_eq!(f.b, reference.b, "{sketch:?} chunk={chunk}: B differs");
+                // The post-draw RNG must continue exactly where the batch
+                // engine's rng argument left off.
+                let mut a = sk.post_draw_rng();
+                let mut b = r_batch.clone();
+                for _ in 0..4 {
+                    assert_eq!(a.uniform().to_bits(), b.uniform().to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_push_source_matches_push_columns() {
+        let x = fixtures::low_rank(25, 90, 3, 29);
+        let opts = QbOptions::new(3).with_oversample(4).with_power_iters(1);
+        let mut by_cols = StreamingSketch::new(25, opts, 11);
+        by_cols.push_columns(&x).unwrap();
+        let mut by_src = StreamingSketch::new(25, opts, 11);
+        by_src.push_source(&MatSource(&x), 13).unwrap();
+        let fa = by_cols.factors(&mut Workspace::new()).unwrap();
+        let fb = by_src.factors(&mut Workspace::new()).unwrap();
+        assert_eq!(fa.q, fb.q);
+        assert_eq!(fa.b, fb.b);
+        assert_eq!(by_cols.sum().to_bits(), by_src.sum().to_bits());
+        assert_eq!(by_cols.fro_norm_sq().to_bits(), by_src.fro_norm_sq().to_bits());
+    }
+
+    #[test]
+    fn streaming_few_columns_falls_back_to_batch_bitwise() {
+        // Fewer columns than the provisional sketch width: the effective
+        // l shrinks to n and the incremental table has the wrong shape —
+        // the fallback must still be bitwise the batch answer, and the
+        // post-draw rng must replay the narrow draw.
+        let x = fixtures::low_rank(40, 6, 2, 19);
+        let opts = QbOptions::new(4).with_oversample(3).with_power_iters(2);
+        let mut sk = StreamingSketch::new(40, opts, 7);
+        for j0 in [0usize, 2, 4] {
+            sk.push_columns(&x.col_block(j0, j0 + 2)).unwrap();
+        }
+        let f = sk.factors(&mut Workspace::new()).unwrap();
+        let mut r_batch = Pcg64::seed_from_u64(7);
+        let reference = qb_blocked_with(
+            &MatSource(&x),
+            opts,
+            COMPUTE_COLS,
+            &mut r_batch,
+            &mut Workspace::new(),
+        )
+        .unwrap();
+        assert_eq!(f.q, reference.q);
+        assert_eq!(f.b, reference.b);
+        let mut a = sk.post_draw_rng();
+        for _ in 0..4 {
+            assert_eq!(a.uniform().to_bits(), r_batch.uniform().to_bits());
+        }
+    }
+
+    #[test]
+    fn streaming_sparse_factors_bitwise_across_chunk_sizes() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        let dense = rng.uniform_mat(30, 280).map(|v| if v < 0.7 { 0.0 } else { v });
+        let csc = CscMat::from_csr(&CsrMat::from_dense(&dense));
+        for sketch in [SketchKind::Uniform, SketchKind::Gaussian, SketchKind::sparse_sign()] {
+            let opts =
+                QbOptions::new(3).with_oversample(4).with_power_iters(1).with_sketch(sketch);
+            let mut r_batch = Pcg64::seed_from_u64(9);
+            let reference =
+                qb_blocked_sparse(&CscSource(&csc), opts, COMPUTE_COLS, &mut r_batch).unwrap();
+            for chunk in [1usize, 11, 64, 280] {
+                let mut sk = StreamingSparseSketch::new(30, opts, 9);
+                sk.push_source(&CscSource(&csc), chunk).unwrap();
+                let f = sk.factors(&mut Workspace::new()).unwrap();
+                assert_eq!(f.q, reference.q, "{sketch:?} chunk={chunk}: Q differs");
+                assert_eq!(f.b, reference.b, "{sketch:?} chunk={chunk}: B differs");
+                let mut a = sk.post_draw_rng();
+                let mut b = r_batch.clone();
+                for _ in 0..4 {
+                    assert_eq!(a.uniform().to_bits(), b.uniform().to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn online_refresh_matches_out_of_core_oracle_bitwise() {
+        // One cold refresh == blocked QB + iterate_compressed_with on the
+        // concatenation, bit for bit (same sketch, same rng continuation,
+        // same column-major scalar accumulation).
+        let (m, n, k) = (50, 300, 4);
+        let x = fixtures::low_rank(m, n, k, 31);
+        let opts = NmfOptions::new(k)
+            .with_max_iter(25)
+            .with_tol(0.0)
+            .with_seed(32)
+            .with_oversample(4);
+        let mut online = OnlineNmf::new(m, opts.clone()).unwrap();
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + 123).min(n);
+            online.push_columns(&x.col_block(j0, j1)).unwrap();
+            j0 = j1;
+        }
+        let fit = online.refresh().unwrap();
+
+        let qb_opts = QbOptions::new(opts.rank)
+            .with_oversample(opts.oversample)
+            .with_power_iters(opts.power_iters)
+            .with_sketch(opts.sketch);
+        let mut rng = Pcg64::seed_from_u64(opts.seed);
+        let factors = qb_blocked_with(
+            &MatSource(&x),
+            qb_opts,
+            COMPUTE_COLS,
+            &mut rng,
+            &mut Workspace::new(),
+        )
+        .unwrap();
+        // Column-major scalar accumulation, matching the push order.
+        let (mut sum, mut nsq) = (0.0f64, 0.0f64);
+        for j in 0..n {
+            for i in 0..m {
+                let v = x.get(i, j);
+                sum += v;
+                nsq += v * v;
+            }
+        }
+        let solver = RandomizedHals::new(opts);
+        let oracle = solver
+            .iterate_compressed_with(
+                &factors,
+                sum / (m * n) as f64,
+                nsq,
+                Instant::now(),
+                &mut rng,
+                &mut RhalsScratch::new(),
+            )
+            .unwrap();
+        assert_eq!(fit.model.w, oracle.model.w, "online W != out-of-core oracle");
+        assert_eq!(fit.model.h, oracle.model.h, "online H != out-of-core oracle");
+        assert_eq!(fit.final_rel_err.to_bits(), oracle.final_rel_err.to_bits());
+        assert_eq!(online.refreshes(), 1);
+    }
+
+    #[test]
+    fn online_warm_refreshes_track_growing_corpus_chunking_invariant() {
+        let (m, n1, n, k) = (50, 180, 300, 4);
+        let x = fixtures::low_rank(m, n, k, 33);
+        let opts = NmfOptions::new(k)
+            .with_max_iter(60)
+            .with_tol(0.0)
+            .with_seed(34)
+            .with_oversample(4);
+        let run = |c1: usize, c2: usize| -> (Mat, Mat) {
+            let mut online = OnlineNmf::new(m, opts.clone()).unwrap();
+            let mut j0 = 0;
+            while j0 < n1 {
+                let j1 = (j0 + c1).min(n1);
+                online.push_columns(&x.col_block(j0, j1)).unwrap();
+                j0 = j1;
+            }
+            let first = online.refresh().unwrap();
+            online.recycle(first);
+            while j0 < n {
+                let j1 = (j0 + c2).min(n);
+                online.push_columns(&x.col_block(j0, j1)).unwrap();
+                j0 = j1;
+            }
+            let second = online.refresh().unwrap();
+            assert_eq!(online.refreshes(), 2);
+            (second.model.w.clone(), second.model.h.clone())
+        };
+        let (wa, ha) = run(61, 40);
+        let (wb, hb) = run(180, 120);
+        assert_eq!(wa, wb, "warm refresh depends on arrival chunking");
+        assert_eq!(ha, hb);
+        assert!(wa.is_nonneg() && ha.is_nonneg());
+        // The warm-started second refresh actually fits the full corpus.
+        let err = norms::relative_error_with(&x, &wa, &ha, &mut Workspace::new());
+        assert!(err < 5e-2, "exact rel err after warm refresh: {err}");
+    }
+
+    #[test]
+    fn streaming_validation_and_online_guards() {
+        let opts = QbOptions::new(2).with_oversample(2);
+        let mut sk = StreamingSketch::new(10, opts, 1);
+        assert!(sk.push_columns(&Mat::zeros(9, 2)).is_err(), "row mismatch must fail");
+        assert!(sk.factors(&mut Workspace::new()).is_err(), "empty sketch must fail");
+        let mut sp = StreamingSparseSketch::new(5, opts, 1);
+        let mut bad = CscBlock::new();
+        bad.push_col(&[6], &[1.0]);
+        assert!(sp.push_columns(&bad).is_err(), "out-of-range row must fail");
+        assert_eq!(sp.cols(), 0, "failed push must not change state");
+        assert!(sp.factors(&mut Workspace::new()).is_err());
+
+        assert!(OnlineNmf::new(0, NmfOptions::new(2)).is_err(), "zero rows");
+        assert!(
+            OnlineNmf::new(
+                8,
+                NmfOptions::new(2).with_update_order(UpdateOrder::InterleavedCyclic)
+            )
+            .is_err(),
+            "interleaved order"
+        );
+        assert!(
+            OnlineNmf::new(8, NmfOptions::new(2).with_checkpoint("unused.nmfckpt", 5)).is_err(),
+            "checkpointing"
+        );
+        let mut online = OnlineNmf::new_sparse(5, NmfOptions::new(2)).unwrap();
+        assert!(online.push_columns(&Mat::zeros(5, 1)).is_err(), "dense into sparse");
+        assert!(online.refresh().is_err(), "refresh before any push");
+        let mut dense = OnlineNmf::new(5, NmfOptions::new(2)).unwrap();
+        assert!(dense.push_sparse_columns(&CscBlock::new()).is_err(), "sparse into dense");
+    }
+}

@@ -1,0 +1,56 @@
+//! Shared synthetic fixtures for the integration-test binaries.
+//!
+//! Several test suites need the same deterministic "exactly rank-`r`
+//! nonnegative matrix" generator; before PR 7 each binary carried its own
+//! copy. The canonical versions live here so a fixture tweak propagates
+//! to every suite at once. (Property tests that generate inputs from a
+//! [`crate::testing::Gen`] keep using `Gen::mat_low_rank`, which logs the
+//! draw for shrinking — these helpers are for the deterministic,
+//! seed-addressed cases.)
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::rng::Pcg64;
+
+/// Exactly rank-`r` nonnegative `m×n` matrix: `U·V` with uniform factors,
+/// fully determined by `seed`.
+pub fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let u = rng.uniform_mat(m, r);
+    let v = rng.uniform_mat(r, n);
+    gemm::matmul(&u, &v)
+}
+
+/// [`low_rank`] plus `eps`-scaled uniform noise (drawn from `noise_seed`).
+/// Noisy data keeps sketches full-rank, driving the CholeskyQR2 path where
+/// exact low-rank data would fall back to Householder.
+pub fn noisy_low_rank(m: usize, n: usize, r: usize, seed: u64, noise_seed: u64, eps: f64) -> Mat {
+    let mut x = low_rank(m, n, r, seed);
+    let mut rng = Pcg64::seed_from_u64(noise_seed);
+    let noise = rng.uniform_mat(m, n);
+    x.axpy(eps, &noise);
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_rank_is_deterministic_and_rank_deficient() {
+        let a = low_rank(12, 9, 2, 42);
+        let b = low_rank(12, 9, 2, 42);
+        assert_eq!(a, b);
+        assert!(a.is_nonneg());
+        let svd = crate::linalg::svd::jacobi_svd(&a);
+        assert!(svd.s[2] < 1e-8 * svd.s[0], "third singular value {}", svd.s[2]);
+    }
+
+    #[test]
+    fn noisy_low_rank_perturbs_but_stays_close() {
+        let clean = low_rank(10, 8, 2, 7);
+        let noisy = noisy_low_rank(10, 8, 2, 7, 11, 1e-3);
+        let diff = clean.max_abs_diff(&noisy);
+        assert!(diff > 0.0 && diff <= 1e-3, "diff {diff}");
+    }
+}

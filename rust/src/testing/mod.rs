@@ -19,6 +19,7 @@
 
 #[cfg(feature = "failpoints")]
 pub mod failpoints;
+pub mod fixtures;
 
 use crate::linalg::mat::Mat;
 use crate::linalg::rng::Pcg64;

@@ -18,9 +18,6 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use randnmf::data::robust;
-use randnmf::linalg::gemm;
-use randnmf::linalg::mat::Mat;
-use randnmf::linalg::rng::Pcg64;
 use randnmf::linalg::sparse::{CsrMat, NmfInput};
 use randnmf::nmf::checkpoint;
 use randnmf::nmf::hals::Hals;
@@ -30,6 +27,7 @@ use randnmf::nmf::options::{NmfOptions, UpdateOrder};
 use randnmf::nmf::rhals::RandomizedHals;
 use randnmf::nmf::solver::NmfSolver;
 use randnmf::prop_assert;
+use randnmf::testing::fixtures::low_rank;
 use randnmf::testing::forall;
 
 fn dir() -> PathBuf {
@@ -161,13 +159,6 @@ fn killed_and_resumed_fits_are_bit_identical() {
         prop_assert!(resumed.iters == total, "{what}: resumed ran {} iters", resumed.iters);
         assert_fits_bit_identical(&uninterrupted, &resumed, &what)
     });
-}
-
-fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
-    let mut rng = Pcg64::seed_from_u64(seed);
-    let u = rng.uniform_mat(m, r);
-    let v = rng.uniform_mat(r, n);
-    gemm::matmul(&u, &v)
 }
 
 /// A kill between temp-write and rename leaves a stale `.tmp`; the next

@@ -1,16 +1,22 @@
 //! Cross-module property tests (the mini-proptest framework exercising the
 //! invariants DESIGN.md §9 lists).
 
-use randnmf::linalg::sparse::{csc_at_b_into, csr_at_b_into, csr_matmul_into, CscMat, CsrMat};
+use randnmf::linalg::rng::Pcg64;
+use randnmf::linalg::sparse::{
+    csc_at_b_into, csr_at_b_into, csr_matmul_into, input_at_b_into, CscMat, CsrMat, NmfInput,
+};
 use randnmf::linalg::workspace::Workspace;
 use randnmf::linalg::{gemm, mat::Mat, norms, qr, svd};
 use randnmf::nmf::hals::{sweep_factor, Hals};
 use randnmf::nmf::mu::Mu;
 use randnmf::nmf::options::{NmfOptions, Regularization, UpdateOrder};
 use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
+use randnmf::nmf::transform::{Transform, TransformOptions, TransformScratch};
+use randnmf::nmf::update_order::OrderState;
 use randnmf::prop_assert;
 use randnmf::sketch::blocked::{qb_blocked, qb_blocked_sparse, CscSource, MatSource};
 use randnmf::sketch::qb::{qb, QbOptions, SketchKind};
+use randnmf::sketch::streaming::OnlineNmf;
 use randnmf::testing::forall;
 
 #[test]
@@ -629,6 +635,155 @@ fn prop_config_parser_roundtrips_generated_docs() {
                 "lost {sec}.{key}"
             );
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transform_matches_pinned_fit() {
+    // The serving path IS the pinned-W HALS H-step: for any basis, batch
+    // (dense and its CSR mirror), update order, sweep count and seed,
+    // `Transform::transform_with` must **bit-match** a hand-rolled fit
+    // that freezes W — same `input_at_b_into` numerator, same diag-scaled
+    // init, same `sweep_factor` calls under the same `OrderState` draws.
+    forall("transform == pinned-W fit (bitwise)", 10, |g| {
+        let m = g.usize_in(10, 50);
+        let k = g.usize_in(1, 6);
+        let b = g.usize_in(1, 20);
+        let w = g.mat(m, k).map(|v| v + 0.05);
+        let dense = g.mat(m, b).map(|v| if v < 0.4 { 0.0 } else { v });
+        let csr = CsrMat::from_dense(&dense);
+        let sweeps = g.usize_in(5, 40);
+        let order = *g.choose(&[UpdateOrder::BlockedCyclic, UpdateOrder::Shuffled]);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let topts = TransformOptions::default()
+            .with_sweeps(sweeps)
+            .with_order(order)
+            .with_seed(seed);
+        let t = Transform::new(w.clone(), topts).map_err(|e| e.to_string())?;
+        let mut scratch = TransformScratch::new();
+        let mut ws = Workspace::new();
+        let gram = gemm::gram(&w);
+
+        for sparse_input in [false, true] {
+            // Pinned-fit oracle from the same primitives, same sequence.
+            let input: NmfInput = if sparse_input { (&csr).into() } else { (&dense).into() };
+            let mut num = Mat::zeros(b, k);
+            input_at_b_into(input, &w, &mut num, &mut ws);
+            let mut ct = Mat::zeros(b, k);
+            for r in 0..b {
+                for j in 0..k {
+                    let d = gram.get(j, j).max(1e-12);
+                    ct.set(r, j, (num.get(r, j) / d).max(0.0));
+                }
+            }
+            let mut ord = OrderState::new(k, order);
+            let mut rng = Pcg64::seed_from_u64(seed);
+            for _ in 0..sweeps {
+                ord.advance(&mut rng);
+                sweep_factor(&mut ct, &num, &gram, Regularization::NONE, ord.order(), true);
+            }
+            let oracle = ct.transpose();
+
+            let h = if sparse_input {
+                t.transform_with(&csr, &mut scratch)
+            } else {
+                t.transform_with(&dense, &mut scratch)
+            }
+            .map_err(|e| e.to_string())?;
+            prop_assert!(
+                h == oracle,
+                "{order:?} sparse={sparse_input}: transform != pinned fit (max diff {})",
+                h.max_abs_diff(&oracle)
+            );
+            prop_assert!(h.is_nonneg(), "H negative");
+            scratch.recycle(h);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transform_kkt_stationarity_at_convergence() {
+    // Run the pinned solve until the inner iteration goes quiet, then
+    // check the NNLS first-order (KKT) conditions of
+    // min_{H≥0} ½‖X − WH‖²: with G = WᵀW·H − WᵀX, every positive entry
+    // must have |G| ≈ 0 and every zero entry must have G ≥ 0, to 1e-8
+    // relative to the numerator scale.
+    forall("converged transform satisfies KKT to 1e-8", 8, |g| {
+        let m = g.usize_in(10, 40);
+        let k = g.usize_in(1, 5);
+        let b = g.usize_in(1, 10);
+        // Boost one distinct row per column: keeps the Gram's condition
+        // number bounded, so coordinate descent actually reaches 1e-8
+        // stationarity within the sweep budget for every drawn basis.
+        let mut w = g.mat(m, k).map(|v| v + 0.05);
+        for j in 0..k {
+            w.set(j, j, w.get(j, j) + 2.0);
+        }
+        let x = g.mat(m, b);
+        let topts = TransformOptions::default().with_sweeps(4000).with_inner_tol(1e-15);
+        let t = Transform::new(w.clone(), topts).map_err(|e| e.to_string())?;
+        let h = t.transform(&x).map_err(|e| e.to_string())?;
+        let gram = gemm::gram(&w);
+        let num = gemm::at_b(&w, &x); // k×b (WᵀX)
+        let grad = gemm::matmul(&gram, &h).sub(&num);
+        let scale = num.as_slice().iter().fold(1.0f64, |a, v| a.max(v.abs()));
+        let tol = 1e-8 * scale;
+        for i in 0..k {
+            for j in 0..b {
+                let gij = grad.get(i, j);
+                if h.get(i, j) > 0.0 {
+                    prop_assert!(gij.abs() <= tol, "interior grad {gij} at ({i},{j})");
+                } else {
+                    prop_assert!(gij >= -tol, "active-set grad {gij} at ({i},{j})");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_online_fit_matches_batch() {
+    // Streaming pushes + one refresh must be bit-deterministic in the
+    // chunking (any two chunk sizes give identical factors), and land at
+    // the same reconstruction quality as the batch randomized fit of the
+    // concatenated matrix (the two compress with differently-ordered
+    // accumulations, so factors agree in quality, not bitwise — the
+    // documented tolerance is 5e-2 on exactly low-rank data).
+    forall("online fit == batch fit (chunking-invariant)", 6, |g| {
+        let m = g.usize_in(20, 50);
+        let n = g.usize_in(30, 80);
+        let r = g.usize_in(2, 4);
+        let x = g.mat_low_rank(m, n, r);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let opts = NmfOptions::new(r)
+            .with_max_iter(30)
+            .with_tol(0.0)
+            .with_seed(seed)
+            .with_oversample(4);
+        let c1 = g.usize_in(1, n);
+        let c2 = g.usize_in(1, n);
+        let run = |chunk: usize| -> Result<(Mat, Mat, f64), String> {
+            let mut online = OnlineNmf::new(m, opts.clone()).map_err(|e| e.to_string())?;
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + chunk).min(n);
+                online.push_columns(&x.col_block(j0, j1)).map_err(|e| e.to_string())?;
+                j0 = j1;
+            }
+            let fit = online.refresh().map_err(|e| e.to_string())?;
+            let err = norms::relative_error(&x, &fit.model.w, &fit.model.h);
+            Ok((fit.model.w.clone(), fit.model.h.clone(), err))
+        };
+        let (w1, h1, e1) = run(c1)?;
+        let (w2, h2, _) = run(c2)?;
+        prop_assert!(w1 == w2, "chunk {c1} vs {c2} changed W");
+        prop_assert!(h1 == h2, "chunk {c1} vs {c2} changed H");
+        let batch = RandomizedHals::new(opts).fit(&x).map_err(|e| e.to_string())?;
+        let eb = norms::relative_error(&x, &batch.model.w, &batch.model.h);
+        prop_assert!((e1 - eb).abs() < 5e-2, "online err {e1} vs batch err {eb}");
         Ok(())
     });
 }

@@ -6,8 +6,10 @@
 //! connection), a half-written request that stalls (must be dropped at
 //! the read deadline without pinning a thread), a connection flood past
 //! the bounded queue (must shed with explicit overload replies, never
-//! grow memory), and a shutdown with requests in flight (must drain —
-//! every accepted request gets its reply).
+//! grow memory), a combined storm of concurrent transforms racing both
+//! hostile riders (served + shed accounting and the latency recorder
+//! must stay exact), and a shutdown with requests in flight (must
+//! drain — every accepted request gets its reply).
 //!
 //! After every attack, a healthy client on a fresh connection must still
 //! be served: one hostile peer can never degrade the service for others.
@@ -154,6 +156,90 @@ fn connection_flood_is_shed_with_bounded_queue() {
         server.shed_count() > 0 && shed > 0,
         "queue bound never triggered (served {served}, shed {shed})"
     );
+
+    assert_healthy(addr);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_transform_storm_keeps_accounting_exact() {
+    // A flood of well-formed transform requests races two hostile
+    // riders — an absurd length prefix and a half-written staller —
+    // against a deliberately tight queue. Accounting must stay exact:
+    // every well-formed request is served or explicitly shed, the
+    // riders appear in neither counter, and the latency recorder holds
+    // precisely the answered requests.
+    let opts = ServerOptions {
+        batch_window: Duration::from_millis(60),
+        max_batch: 8,
+        max_queue: 4,
+        read_timeout: Duration::from_millis(300),
+        ..Default::default()
+    };
+    let server = TransformServer::start("127.0.0.1:0", test_model(5), opts).unwrap();
+    let addr = server.addr();
+
+    let nreq = 16;
+    let barrier = Barrier::new(nreq + 2);
+    let mut served = 0u32;
+    let mut shed = 0u32;
+    std::thread::scope(|sc| {
+        // Rider 1: oversized batch claim fired mid-storm. Must be
+        // refused before allocation without disturbing the flood.
+        sc.spawn(|| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            barrier.wait();
+            s.write_all(&(1u32 << 26).to_le_bytes()).unwrap();
+            let err = read_reply(&mut s).unwrap_err();
+            assert!(err.contains("exceeds server limit"), "{err}");
+        });
+        // Rider 2: valid prefix, 3 of the 16 promised f64s, then
+        // silence. The read deadline must reap it mid-storm.
+        sc.spawn(|| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            barrier.wait();
+            s.write_all(&(M as u32).to_le_bytes()).unwrap();
+            s.write_all(&[0u8; 24]).unwrap();
+            let mut probe = [0u8; 1];
+            match s.read(&mut probe) {
+                Ok(0) | Err(_) => {}
+                Ok(n) => panic!("stalled rider should be dropped, read {n} bytes"),
+            }
+        });
+        let handles: Vec<_> = (0..nreq)
+            .map(|_| {
+                let barrier = &barrier;
+                sc.spawn(move || {
+                    let mut client = TransformClient::connect(addr).unwrap();
+                    barrier.wait();
+                    client.transform(&vec![0.5; M]).map_err(|e| e.to_string())
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join().unwrap() {
+                Ok(code) => {
+                    assert_eq!(code.len(), K);
+                    served += 1;
+                }
+                Err(e) => {
+                    assert!(e.contains("overloaded"), "unexpected reply: {e}");
+                    shed += 1;
+                }
+            }
+        }
+    });
+
+    assert_eq!(served + shed, nreq as u32);
+    assert!(served > 0, "storm starved every request");
+    assert_eq!(server.stats().0 as u32, served, "served-counter drift");
+    assert_eq!(server.shed_count() as u32, shed, "shed-counter drift");
+    let lat = server.latency_summary();
+    assert_eq!(lat.count as u32, served, "latency recorder missed answered requests");
+    assert!(lat.p50.is_finite() && lat.p50 >= 0.0, "p50 = {}", lat.p50);
+    assert!(lat.p50 <= lat.p90 && lat.p90 <= lat.p99 && lat.p99 <= lat.max, "{lat:?}");
 
     assert_healthy(addr);
     server.shutdown();

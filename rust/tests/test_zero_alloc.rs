@@ -11,7 +11,9 @@
 //! and (d) the strongest form: a **warm `RandomizedHals::fit_with` on a
 //! reused `RhalsScratch` performs exactly zero heap allocations for the
 //! entire fit, compression stage included** (factors recycled between
-//! fits; random init, tracing off).
+//! fits; random init, tracing off). The serving hot path gets the same
+//! treatment: a warm `Transform::transform_with` on a reused
+//! `TransformScratch` allocates exactly zero for dense and CSR batches.
 //!
 //! Everything runs in a single `#[test]` so `RANDNMF_THREADS=1` is set
 //! before the thread-count `OnceLock` is first touched. This binary
@@ -54,19 +56,14 @@ fn allocs() -> u64 {
 use randnmf::linalg::gemm;
 use randnmf::linalg::mat::Mat;
 use randnmf::linalg::rng::Pcg64;
-use randnmf::linalg::sparse::SparseMat;
+use randnmf::linalg::sparse::{CsrMat, SparseMat};
 use randnmf::linalg::workspace::Workspace;
 use randnmf::nmf::hals::{Hals, HalsScratch};
 use randnmf::nmf::mu::{Mu, MuScratch};
-use randnmf::nmf::options::NmfOptions;
+use randnmf::nmf::options::{NmfOptions, UpdateOrder};
 use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
-
-fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
-    let mut rng = Pcg64::seed_from_u64(seed);
-    let u = rng.uniform_mat(m, r);
-    let v = rng.uniform_mat(r, n);
-    gemm::matmul(&u, &v)
-}
+use randnmf::nmf::transform::{Transform, TransformOptions, TransformScratch};
+use randnmf::testing::fixtures::low_rank;
 
 /// Allocation count of one `fit_with` on an already-warm scratch (the
 /// factors are recycled back into the pool afterwards, so consecutive
@@ -335,4 +332,47 @@ fn steady_state_iterations_do_not_allocate() {
         );
     }
     assert!(!ckpt.exists(), "an unfired cadence must write nothing");
+
+    // --- (h) serving path: a warm `Transform::transform_with` — dense
+    //     and CSR batches, fixed and Gillis-accelerated sweeps, cyclic
+    //     and shuffled orders — performs exactly zero heap allocations
+    //     once its `TransformScratch` is warm ---
+    let mut trng = Pcg64::seed_from_u64(40);
+    let w = trng.uniform_mat(120, 6).map(|v| v + 0.05);
+    let xb = trng.uniform_mat(120, 40);
+    let xs_batch = CsrMat::from_dense(&xb.map(|v| if v < 0.5 { 0.0 } else { v }));
+    let accel = TransformOptions::default().with_sweeps(25).with_inner_tol(1e-10);
+    let shuffled = TransformOptions::default()
+        .with_sweeps(25)
+        .with_order(UpdateOrder::Shuffled);
+    let variants = [
+        ("cyclic", TransformOptions::default().with_sweeps(25)),
+        ("accelerated", accel),
+        ("shuffled", shuffled),
+    ];
+    for (label, topts) in variants {
+        let t = Transform::new(w.clone(), topts).unwrap();
+        let mut scratch = TransformScratch::new();
+        for _ in 0..3 {
+            // Warmup: drives the scratch pool to its capacity fixed point
+            // for both the dense and the CSR numerator path.
+            let h = t.transform_with(&xb, &mut scratch).unwrap();
+            scratch.recycle(h);
+            let h = t.transform_with(&xs_batch, &mut scratch).unwrap();
+            scratch.recycle(h);
+        }
+        for round in 0..3 {
+            let before = allocs();
+            let h = t.transform_with(&xb, &mut scratch).unwrap();
+            scratch.recycle(h);
+            let h = t.transform_with(&xs_batch, &mut scratch).unwrap();
+            scratch.recycle(h);
+            let n = allocs() - before;
+            assert_eq!(
+                n, 0,
+                "{label}: warm transform_with round {round} performed {n} heap \
+                 allocations (the serving hot path must be allocation-free)"
+            );
+        }
+    }
 }

@@ -15,7 +15,10 @@
 //!   of the iteration count,
 //! * a warm `RandomizedHals::fit_with` on a reused `RhalsScratch` — the
 //!   whole Algorithm 1 pipeline, compression stage included — performs
-//!   exactly zero heap allocations.
+//!   exactly zero heap allocations,
+//! * a warm `Transform::transform_with` stays allocation-free even when
+//!   the batch is big enough that the NNLS sweep itself fans out onto
+//!   the pool (the `b·k²` sweep gate and the GEMM gate both tripped).
 //!
 //! Caveat: the counting allocator sees every thread, so the warmup phase
 //! must drive each worker's scratch (pack panels + partial buffers) to
@@ -59,19 +62,14 @@ use randnmf::linalg::gemm;
 use randnmf::linalg::mat::Mat;
 use randnmf::linalg::pool;
 use randnmf::linalg::rng::Pcg64;
-use randnmf::linalg::sparse::SparseMat;
+use randnmf::linalg::sparse::{CsrMat, SparseMat};
 use randnmf::linalg::workspace::Workspace;
 use randnmf::nmf::hals::{Hals, HalsScratch};
 use randnmf::nmf::mu::{Mu, MuScratch};
 use randnmf::nmf::options::NmfOptions;
 use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
-
-fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
-    let mut rng = Pcg64::seed_from_u64(seed);
-    let u = rng.uniform_mat(m, r);
-    let v = rng.uniform_mat(r, n);
-    gemm::matmul(&u, &v)
-}
+use randnmf::nmf::transform::{Transform, TransformOptions, TransformScratch};
+use randnmf::testing::fixtures::low_rank;
 
 fn hals_fit_allocs(x: &Mat, iters: usize) -> u64 {
     let solver =
@@ -332,4 +330,40 @@ fn threaded_steady_state_iterations_do_not_allocate() {
         );
     }
     assert!(!ckpt.exists(), "an unfired cadence must write nothing");
+
+    // --- (h) serving path on the pool: batch shapes chosen to trip BOTH
+    //     threading gates — b·k² = 1024·16² = 2¹⁸ fans the HALS sweep
+    //     onto `run_row_split`, and 2·m·b·k = 2·512·1024·16 = 2²⁴ puts
+    //     the XᵀW numerator on the threaded GEMM path — and a warm
+    //     `Transform::transform_with` must still allocate exactly zero,
+    //     for dense and CSR batches alike ---
+    let mut trng = Pcg64::seed_from_u64(40);
+    let wt = trng.uniform_mat(512, 16).map(|v| v + 0.05);
+    let xb = trng.uniform_mat(512, 1024);
+    let xs_batch = CsrMat::from_dense(&xb.map(|v| if v < 0.5 { 0.0 } else { v }));
+    assert!(xb.cols() * 16 * 16 >= 1 << 18, "batch must trip the sweep threading gate");
+    assert!(2 * wt.rows() * xb.cols() * 16 >= 1 << 20, "batch must trip the GEMM gate");
+    let t = Transform::new(wt, TransformOptions::default().with_sweeps(12)).unwrap();
+    let mut scratch = TransformScratch::new();
+    for _ in 0..3 {
+        // Warmup: settles the scratch pool and each pool worker's
+        // persistent scratch at their capacity fixed points.
+        let h = t.transform_with(&xb, &mut scratch).unwrap();
+        scratch.recycle(h);
+        let h = t.transform_with(&xs_batch, &mut scratch).unwrap();
+        scratch.recycle(h);
+    }
+    for round in 0..3 {
+        let before = allocs();
+        let h = t.transform_with(&xb, &mut scratch).unwrap();
+        scratch.recycle(h);
+        let h = t.transform_with(&xs_batch, &mut scratch).unwrap();
+        scratch.recycle(h);
+        let n = allocs() - before;
+        assert_eq!(
+            n, 0,
+            "serving path: warm threaded transform_with round {round} performed \
+             {n} heap allocations (both thread-gates tripped)"
+        );
+    }
 }
