@@ -3,11 +3,12 @@
 //! Times the stages the randomized fit's speedup argument rests on, at
 //! the acceptance shape (`2000×500`, `k ∈ {16, 64}`, `p = 20`, `q = 2`):
 //!
-//! * `sketch_*` — one `Y = XΩ` application per [`SketchKind`]. All three
+//! * `sketch_*` — one `Y = XΩ` application per [`SketchKind`]. All four
 //!   report GFLOP/s under the **dense-equivalent** `2·m·n·l` convention
 //!   (like `gram_wide`'s full-flop convention), so the sparse-sign
-//!   sketch's `O(m·n·nnz)` structured apply shows up directly as a
-//!   higher apparent rate.
+//!   sketch's `O(m·n·nnz)` structured apply and the SRHT's
+//!   `O(m·n·log n)` fast transform show up directly as higher apparent
+//!   rates.
 //! * `qb_*` — the full cold QB decomposition (sketch + `q` power
 //!   iterations + projection) per sketch kind, at the conventional
 //!   `2·m·n·l·(2 + 2q)` flop count (the GEMM-dominated passes; the
@@ -17,6 +18,9 @@
 //!   `RandomizedHals::fit_with` runs.
 //! * `qb_blocked_warm` — the out-of-core engine over an in-memory
 //!   source (block 256), measuring the chunked engine's overhead.
+//! * `fit_rhals_k*` / `fit_twosided_k*` — warm full fits of the
+//!   one-sided randomized HALS vs the two-sided compressed solver at
+//!   matched options (wall time only; no flop convention).
 //!
 //! Results go to `perf_qb.csv` and are **merged** into the shared
 //! `BENCH_gemm.json` (keyed by kernel/shape, preserving
@@ -60,6 +64,7 @@ fn main() {
         ("uniform", SketchKind::Uniform),
         ("gaussian", SketchKind::Gaussian),
         ("sparse_sign", SketchKind::sparse_sign()),
+        ("srht", SketchKind::Srht),
     ];
 
     for rank in [16usize, 64] {
@@ -132,6 +137,45 @@ fn main() {
         push(&mut rows, "qb_blocked_warm".to_string(), l, qb_flops, st.median_s);
     }
 
+    // --- compressed fit head-to-head: one-sided rHALS vs the two-sided
+    //     solver, identical options on warm scratch (wall time only —
+    //     there is no flop convention for a whole fit, so GFLOP/s is 0;
+    //     the `k` column carries the rank) ---
+    {
+        use randnmf::nmf::twosided::{TwoSidedHals, TwoSidedScratch};
+        for rank in [16usize, 64] {
+            let fit_opts = NmfOptions::new(rank)
+                .with_max_iter(20)
+                .with_tol(0.0)
+                .with_seed(5)
+                .with_oversample(20)
+                .with_power_iters(2);
+            let one = RandomizedHals::new(fit_opts.clone());
+            let mut s1 = RhalsScratch::new();
+            let warm = one.fit_with(&x, &mut s1).unwrap();
+            warm.recycle(&mut s1.ws);
+            let st = bencher.time(|| {
+                let f = one.fit_with(&x, &mut s1).unwrap();
+                let v = f.model.w.get(0, 0);
+                f.recycle(&mut s1.ws);
+                v
+            });
+            push(&mut rows, format!("fit_rhals_k{rank}"), rank, 0.0, st.median_s);
+
+            let two = TwoSidedHals::new(fit_opts);
+            let mut s2 = TwoSidedScratch::new();
+            let warm = two.fit_with(&x, &mut s2).unwrap();
+            warm.recycle(&mut s2.ws);
+            let st = bencher.time(|| {
+                let f = two.fit_with(&x, &mut s2).unwrap();
+                let v = f.model.w.get(0, 0);
+                f.recycle(&mut s2.ws);
+                v
+            });
+            push(&mut rows, format!("fit_twosided_k{rank}"), rank, 0.0, st.median_s);
+        }
+    }
+
     let mut csv = Vec::new();
     for r in &rows {
         table.row(&[
@@ -160,6 +204,19 @@ fn main() {
                 d.median_s / r.median_s,
                 d.gflops,
                 r.gflops
+            );
+        }
+    }
+    // Two-sided vs one-sided fit headline at each rank.
+    for r in rows.iter().filter(|r| r.kernel.starts_with("fit_twosided_k")) {
+        let suffix = &r.kernel["fit_twosided_".len()..];
+        if let Some(d) = rows.iter().find(|d| d.kernel == format!("fit_rhals_{suffix}")) {
+            println!(
+                "fit speedup twosided/rhals @ {}: {:.2}x ({:.1} ms -> {:.1} ms)",
+                suffix,
+                d.median_s / r.median_s,
+                d.median_s * 1e3,
+                r.median_s * 1e3
             );
         }
     }

@@ -43,6 +43,15 @@
 //!   compression stage (dense or sparse-sign sketches, power iterations,
 //!   `B = QᵀX`) dispatches its large products onto the same pool.
 //!
+//! The compression layer offers four test-matrix families
+//! ([`sketch::qb::SketchKind`]: uniform, gaussian, sparse-sign, and the
+//! SRHT fast sketch of [`sketch::srht`]) and two compression topologies
+//! (one-sided QB, and the two-sided row+column compression of
+//! [`sketch::twosided`] consumed by [`nmf::twosided::TwoSidedHals`]).
+//! The full decision table — cost models, determinism guarantees, and
+//! the workspace discipline a new sketch kind must follow — lives in
+//! `docs/COMPRESSION.md`.
+//!
 //! Inputs may be dense ([`linalg::mat::Mat`]), sparse CSR
 //! ([`linalg::sparse::CsrMat`]), or dual-storage sparse
 //! ([`linalg::sparse::SparseMat`] — CSR plus a lazily built CSC mirror
@@ -90,5 +99,7 @@ pub mod prelude {
     pub use crate::nmf::mu::{Mu, MuScratch};
     pub use crate::nmf::options::{Init, NmfOptions, Regularization, UpdateOrder};
     pub use crate::nmf::rhals::{RandomizedHals, RhalsScratch};
+    pub use crate::nmf::twosided::{TwoSidedHals, TwoSidedScratch};
     pub use crate::sketch::qb::{qb, QbOptions, SketchKind};
+    pub use crate::sketch::twosided::{two_sided, TwoSidedFactors};
 }

@@ -67,6 +67,7 @@ pub enum SolverKind {
     Hals,
     Mu,
     Rhals,
+    TwoSided,
 }
 
 impl SolverKind {
@@ -75,6 +76,7 @@ impl SolverKind {
             SolverKind::Hals => 0,
             SolverKind::Mu => 1,
             SolverKind::Rhals => 2,
+            SolverKind::TwoSided => 3,
         }
     }
 
@@ -83,6 +85,7 @@ impl SolverKind {
             0 => Some(SolverKind::Hals),
             1 => Some(SolverKind::Mu),
             2 => Some(SolverKind::Rhals),
+            3 => Some(SolverKind::TwoSided),
             _ => None,
         }
     }
@@ -92,6 +95,7 @@ impl SolverKind {
             SolverKind::Hals => "hals",
             SolverKind::Mu => "mu",
             SolverKind::Rhals => "rhals",
+            SolverKind::TwoSided => "twosided",
         }
     }
 }

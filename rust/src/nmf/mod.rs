@@ -7,6 +7,7 @@
 //! |---|---|---|
 //! | [`hals`] | Deterministic HALS | §3.1, Eqs. 14–15 |
 //! | [`rhals`] | **Randomized HALS** | §3.2, Algorithm 1, Eqs. 19–22 |
+//! | [`twosided`] | Two-sided compressed HALS | §3.2 extension (`docs/COMPRESSION.md`) |
 //! | [`mu`] | Multiplicative updates (Lee–Seung) | §2.2 |
 //! | [`compressed_mu`] | Compressed MU (Tepper–Sapiro) | §1, §4 |
 //! | [`regularized`] | ℓ2 / ℓ1 / elastic-net update terms | §3.4, Eqs. 30–34 |
@@ -64,6 +65,7 @@ pub mod rhals;
 pub mod solver;
 pub mod stopping;
 pub mod transform;
+pub mod twosided;
 pub mod update_order;
 
 pub use model::{NmfFit, NmfModel, TracePoint};

@@ -111,7 +111,10 @@ pub struct NmfOptions {
     /// Random test matrix for the compression stage (randomized solvers).
     /// Default [`SketchKind::Uniform`] per the paper's Remark 1;
     /// [`SketchKind::SparseSign`] trades it for a structured sketch
-    /// applied in `O(mn·nnz)` instead of `O(mnl)`.
+    /// applied in `O(mn·nnz)` instead of `O(mnl)`, and
+    /// [`SketchKind::Srht`] for the fast Hadamard sketch in
+    /// `O(mn·log n)` (in-memory engines only; see `docs/COMPRESSION.md`
+    /// for the decision table).
     pub sketch: SketchKind,
     /// Record a trace point every this many iterations (0 = only at the
     /// end). Traces power the convergence figures.
@@ -269,6 +272,7 @@ impl NmfOptions {
                 mix(2);
                 mix(nnz as u64);
             }
+            SketchKind::Srht => mix(3),
         }
         mix(self.trace_every as u64);
         mix(self.batched_projection as u64);
@@ -414,6 +418,9 @@ mod tests {
         assert_ne!(base.options_hash(), base.clone().with_oversample(7).options_hash());
         let gs = base.clone().with_sketch(SketchKind::Gaussian);
         assert_ne!(base.options_hash(), gs.options_hash());
+        let sr = base.clone().with_sketch(SketchKind::Srht);
+        assert_ne!(base.options_hash(), sr.options_hash());
+        assert_ne!(gs.options_hash(), sr.options_hash());
         let bp = base.clone().with_batched_projection(true);
         assert_ne!(base.options_hash(), bp.options_hash());
     }

@@ -1,0 +1,582 @@
+//! Two-sided compressed HALS — randomized NMF where **each factor sweep
+//! reads `X` through the view that compresses the dimension it iterates
+//! over** (see `docs/COMPRESSION.md` for the full architecture).
+//!
+//! The one-sided solver ([`crate::nmf::rhals`]) compresses rows only
+//! (`X ≈ Q·B`, `B = QᵀX` is `l×n`): the H sweep runs fully compressed,
+//! but the W update must round-trip through `Q` every iteration to
+//! enforce nonnegativity in high dimension (paper Eqs. 20–22). The
+//! two-sided variant adds the symmetric *column* compression
+//! `X ≈ C·Pᵀ` (`P (n×l)` orthonormal, `C = X·P` is `m×l`) from
+//! [`crate::sketch::twosided`], giving each sweep a natural host:
+//!
+//! ```text
+//! H sweep (row-compressed view, exactly Algorithm 1 lines 12–16):
+//!     R = BᵀW̃ (n×k) ≈ XᵀW      S = WᵀW (k×k, exact)
+//!     sweep H rows against (R, S)                      — O(lnk + k²n)
+//! W sweep (column-compressed view, no projection round trip):
+//!     T = C·(PᵀHᵀ) (m×k) ≈ XHᵀ  V = HHᵀ (k×k, exact)
+//!     sweep W rows against (T, V), clamping natively   — O(lnk + mlk)
+//! ```
+//!
+//! Because `W` is updated *directly* in high dimension, nonnegativity and
+//! the ℓ1 shrink are handled natively by the HALS cell update
+//! ([`crate::nmf::hals::sweep_factor`]) — there is no `W̃` sweep, no
+//! `[Q·W̃]₊` projection, and the `batched_projection` option is
+//! irrelevant (ignored). The compressed factor `W̃ = QᵀW` is still
+//! maintained (one `l×k` GEMM per iteration) because the next H sweep's
+//! `R = BᵀW̃` and the compressed error estimate both need it.
+//!
+//! The error stays bounded for the same reason as one-sided rHALS: each
+//! sweep solves the exact subproblem against a *projected* data matrix
+//! (`QQᵀX` on the H side, `XPPᵀ` on the W side), and with `l = k + p`
+//! oversampled columns plus power iterations both projections capture the
+//! dominant rank-`k` subspace — so each compressed objective differs from
+//! the exact one by the (small) tail energy `‖X − QQᵀX‖` resp.
+//! `‖X − XPPᵀ‖`. `tests/test_properties.rs` asserts the end-to-end
+//! consequence: two-sided final error within a constant factor of
+//! one-sided rHALS on noisy low-rank data.
+//!
+//! Scope: **dense input only.** The column-compressed pass needs
+//! transpose-side products that the sparse engine routes through its CSC
+//! mirror; wiring a sparse two-sided path is a ROADMAP item. Sparse
+//! callers get a clean error from [`NmfSolver::fit_input`].
+//!
+//! ## Allocation discipline
+//!
+//! [`TwoSidedHals::fit_with`] runs the entire fit — both compressions and
+//! all iterations — out of a caller-owned [`TwoSidedScratch`], exactly
+//! like the one-sided solver: warm fits perform **zero heap allocations**
+//! in both thread regimes (asserted by `tests/test_zero_alloc.rs` and
+//! `tests/test_zero_alloc_pool.rs`; guaranteed for `Init::Random` with
+//! tracing disabled). Checkpoint/resume uses the shared
+//! [`crate::nmf::checkpoint`] format with [`SolverKind::TwoSided`]; a
+//! resumed fit replays both compressions deterministically from the seed
+//! and restores the post-compression loop state including `W̃`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::norms;
+use crate::linalg::sparse::NmfInput;
+use crate::nmf::checkpoint::{self, SolverKind};
+use crate::nmf::hals::sweep_factor;
+use crate::nmf::init;
+use crate::nmf::model::{NmfFit, NmfModel, TracePoint};
+use crate::nmf::options::{NmfOptions, UpdateOrder};
+use crate::nmf::solver::NmfSolver;
+use crate::nmf::stopping;
+use crate::nmf::update_order::OrderState;
+use crate::sketch::qb::QbOptions;
+use crate::sketch::twosided::{two_sided_into, TwoSidedFactors};
+
+/// Reusable cross-fit scratch for [`TwoSidedHals::fit_with`]: a
+/// [`Workspace`](crate::linalg::workspace::Workspace) buffer pool plus
+/// the non-`f64` per-fit state. Keep one alive across fits and warm fits
+/// allocate nothing.
+#[derive(Default)]
+pub struct TwoSidedScratch {
+    /// The buffer pool every matrix and vector of the fit is drawn from.
+    pub ws: crate::linalg::workspace::Workspace,
+    order: OrderState,
+    /// Reusable staging buffer for checkpoint serialization.
+    ckpt_buf: Vec<u8>,
+}
+
+impl TwoSidedScratch {
+    pub fn new() -> Self {
+        TwoSidedScratch {
+            ws: crate::linalg::workspace::Workspace::new(),
+            order: OrderState::empty(),
+            ckpt_buf: Vec::new(),
+        }
+    }
+}
+
+/// Two-sided compressed HALS solver (see the module docs).
+pub struct TwoSidedHals {
+    pub opts: NmfOptions,
+}
+
+impl TwoSidedHals {
+    pub fn new(opts: NmfOptions) -> Self {
+        TwoSidedHals { opts }
+    }
+
+    /// Compress `x` on both sides and run the two-sided compressed HALS
+    /// iterations (allocating convenience wrapper over
+    /// [`TwoSidedHals::fit_with`]).
+    pub fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        self.fit_with(x, &mut TwoSidedScratch::new())
+    }
+
+    /// The full fit — both compressions *and* iterations — with every
+    /// buffer drawn from `scratch`. See the module docs for the
+    /// zero-allocation contract; results are identical to
+    /// [`TwoSidedHals::fit`].
+    pub fn fit_with(&self, x: &Mat, scratch: &mut TwoSidedScratch) -> Result<NmfFit> {
+        let (m, n) = x.shape();
+        self.opts.validate(m, n)?;
+        self.opts.validate_dense(x)?;
+        anyhow::ensure!(
+            self.opts.update_order != UpdateOrder::InterleavedCyclic,
+            "two-sided compressed HALS supports blocked-cyclic and shuffled orders only \
+             (the interleaved order defeats the Gram reuse the compression relies on)"
+        );
+        let start = Instant::now();
+        let mut rng = crate::linalg::rng::Pcg64::seed_from_u64(self.opts.seed);
+
+        // ---- Compression stage: right QB first (bit-identical to the
+        // one-sided draw with the same seed), then the left factors. ----
+        let qb_opts = QbOptions::new(self.opts.rank)
+            .with_oversample(self.opts.oversample)
+            .with_power_iters(self.opts.power_iters)
+            .with_sketch(self.opts.sketch);
+        let l = qb_opts.sketch_width(m, n);
+        let mut q = scratch.ws.acquire_mat(m, l);
+        let mut b = scratch.ws.acquire_mat(l, n);
+        let mut p = scratch.ws.acquire_mat(n, l);
+        let mut c = scratch.ws.acquire_mat(m, l);
+        two_sided_into(x, qb_opts, &mut rng, &mut q, &mut b, &mut p, &mut c, &mut scratch.ws);
+        let factors = TwoSidedFactors { q, b, p, c };
+        let x_mean = x.sum() / (m * n) as f64;
+        let x_norm_sq = norms::fro_norm_sq(x);
+
+        // ---- Initialization (from the right-side factors, exactly like
+        // the one-sided solver). ----
+        let (w, ht) = init::initialize_from_qb_with(
+            &factors.q,
+            &factors.b,
+            x_mean,
+            &self.opts,
+            &mut rng,
+            &mut scratch.ws,
+        );
+        let mut state =
+            self.iterate_seeded(&factors, x_norm_sq, start, &mut rng, scratch, w, ht)?;
+
+        // Exact final error on the real data (the tables report this).
+        state.final_rel_err =
+            norms::relative_error_with(x, &state.model.w, &state.model.h, &mut scratch.ws);
+        factors.recycle(&mut scratch.ws);
+        Ok(state)
+    }
+
+    /// The two-sided compressed HALS loop proper.
+    #[allow(clippy::too_many_arguments)]
+    fn iterate_seeded(
+        &self,
+        factors: &TwoSidedFactors,
+        x_norm_sq: f64,
+        start: Instant,
+        rng: &mut crate::linalg::rng::Pcg64,
+        scratch: &mut TwoSidedScratch,
+        mut w: Mat,
+        mut ht: Mat,
+    ) -> Result<NmfFit> {
+        let o = &self.opts;
+        let q = &factors.q;
+        let b = &factors.b;
+        let p = &factors.p;
+        let c = &factors.c;
+        let (l, n) = b.shape();
+        let m = q.rows();
+        let k = o.rank;
+        let b_norm_sq = norms::fro_norm_sq(b);
+
+        let mut wt = scratch.ws.acquire_mat(l, k); // W̃ = QᵀW : l×k
+        gemm::at_b_into(q, &w, &mut wt, &mut scratch.ws);
+        let want_pg = o.tol > 0.0 || o.trace_every > 0;
+        scratch.order.reset(k, o.update_order);
+        // A resumed fit re-runs both compressions deterministically from
+        // the seed (identical Q/B/P/C) and then restores the
+        // post-compression loop state — including W̃, whose accumulation
+        // history is not bit-recoverable from W alone.
+        let resume = checkpoint::load_for_resume(o, SolverKind::TwoSided, x_norm_sq, m, n, l)?;
+
+        // Per-solve buffers: the iteration loop below never allocates.
+        let mut r = scratch.ws.acquire_mat(n, k); // BᵀW̃ ≈ XᵀW
+        let mut s = scratch.ws.acquire_mat(k, k); // WᵀW
+        let mut hp = scratch.ws.acquire_mat(l, k); // PᵀHᵀ
+        let mut t = scratch.ws.acquire_mat(m, k); // C·(PᵀHᵀ) ≈ XHᵀ
+        let mut v = scratch.ws.acquire_mat(k, k); // HHᵀ
+        let (mut gh, mut gw) = if want_pg {
+            (scratch.ws.acquire_mat(n, k), scratch.ws.acquire_mat(m, k))
+        } else {
+            (scratch.ws.acquire_mat(0, 0), scratch.ws.acquire_mat(0, 0))
+        };
+
+        let mut pgw_prev = if want_pg && resume.is_none() {
+            gemm::gram_into(&ht, &mut v, &mut scratch.ws);
+            gemm::at_b_into(p, &ht, &mut hp, &mut scratch.ws); // l×k
+            gemm::matmul_into(c, &hp, &mut t, &mut scratch.ws); // m×k
+            // grad_W ≈ W·V − C·PᵀHᵀ (X·Hᵀ ≈ C·Pᵀ·Hᵀ)
+            gemm::matmul_into(&w, &v, &mut gw, &mut scratch.ws);
+            gw.axpy(-1.0, &t);
+            Some(stopping::projected_gradient_norm_sq(&w, &gw))
+        } else {
+            None
+        };
+
+        let mut trace: Vec<TracePoint> = Vec::new();
+        let mut pg0: Option<f64> = None;
+        let mut pg_ratio = f64::NAN;
+        let mut converged = false;
+        let mut iters = 0usize;
+        let mut start_iter = 1usize;
+        let mut elapsed_offset = 0.0f64;
+        if let Some(ck) = resume {
+            w.as_mut_slice().copy_from_slice(ck.w.as_slice());
+            ht.as_mut_slice().copy_from_slice(ck.ht.as_slice());
+            let ck_wt = ck.wt.as_ref().expect("verify: twosided checkpoint carries W̃");
+            wt.as_mut_slice().copy_from_slice(ck_wt.as_slice());
+            *rng = ck.rng;
+            scratch.order.restore(ck.order_kind, &ck.order);
+            pgw_prev = ck.pgw_prev;
+            pg0 = ck.pg0;
+            pg_ratio = ck.pg_ratio;
+            trace = ck.trace;
+            iters = ck.sweep;
+            start_iter = ck.sweep + 1;
+            elapsed_offset = ck.elapsed_s;
+        }
+
+        for iter in start_iter..=o.max_iter {
+            // ---- H-side products (row-compressed view) ----
+            gemm::at_b_into(b, &wt, &mut r, &mut scratch.ws); // n×k  BᵀW̃
+            gemm::gram_into(&w, &mut s, &mut scratch.ws); // k×k  WᵀW (exact)
+
+            if want_pg {
+                gemm::matmul_into(&ht, &s, &mut gh, &mut scratch.ws);
+                gh.axpy(-1.0, &r); // ∇H = Ht·S − R
+                let pgh = stopping::projected_gradient_norm_sq(&ht, &gh);
+                let pg = pgh + pgw_prev.take().unwrap_or(0.0);
+                let pg0v = *pg0.get_or_insert(pg);
+                pg_ratio = if pg0v > 0.0 { pg / pg0v } else { 0.0 };
+                if o.trace_every > 0 && (iter - 1) % o.trace_every == 0 {
+                    let mut wtw = scratch.ws.acquire_mat(k, k);
+                    gemm::gram_into(&wt, &mut wtw, &mut scratch.ws);
+                    let err = stopping::rel_err_compressed_with(
+                        x_norm_sq,
+                        b_norm_sq,
+                        &r,
+                        &wtw,
+                        &ht,
+                        &mut scratch.ws,
+                    );
+                    scratch.ws.release_mat(wtw);
+                    trace.push(TracePoint {
+                        iter: iter - 1,
+                        elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
+                        rel_err: err,
+                        pg_norm_sq: pg,
+                    });
+                }
+                if o.tol > 0.0 && pg0v > 0.0 && pg < o.tol * pg0v {
+                    converged = true;
+                    break;
+                }
+            }
+
+            // ---- H sweep (row-compressed numerator, exact Gram) ----
+            scratch.order.advance(rng);
+            sweep_factor(&mut ht, &r, &s, o.reg_h, scratch.order.order(), true);
+
+            // ---- W sweep (column-compressed numerator, exact Gram) ----
+            gemm::at_b_into(p, &ht, &mut hp, &mut scratch.ws); // l×k  PᵀHᵀ
+            gemm::matmul_into(c, &hp, &mut t, &mut scratch.ws); // m×k  C·(PᵀHᵀ)
+            gemm::gram_into(&ht, &mut v, &mut scratch.ws); // k×k  HHᵀ
+            scratch.order.advance(rng);
+            // W lives in high dimension throughout: the cell update
+            // clamps natively and applies the ℓ1/ℓ2 terms directly — no
+            // projection round trip.
+            sweep_factor(&mut w, &t, &v, o.reg_w, scratch.order.order(), true);
+            gemm::at_b_into(q, &w, &mut wt, &mut scratch.ws); // refresh W̃ = QᵀW
+
+            if want_pg {
+                // grad_W ≈ W·V − T, with T = C·PᵀHᵀ for the current H.
+                gemm::matmul_into(&w, &v, &mut gw, &mut scratch.ws);
+                gw.axpy(-1.0, &t);
+                pgw_prev = Some(stopping::projected_gradient_norm_sq(&w, &gw));
+            }
+            iters = iter;
+
+            if o.checkpoint_every > 0 && iter % o.checkpoint_every == 0 {
+                let path = o.checkpoint_path.as_ref().expect("validate: cadence implies path");
+                checkpoint::write(
+                    path,
+                    o.options_hash(),
+                    x_norm_sq,
+                    &checkpoint::CheckpointState {
+                        solver: SolverKind::TwoSided,
+                        sweep: iter,
+                        w: &w,
+                        ht: &ht,
+                        wt: Some(&wt),
+                        rng: &*rng,
+                        order_kind: scratch.order.kind(),
+                        order: scratch.order.order(),
+                        pg0,
+                        pgw_prev,
+                        pg_ratio,
+                        elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
+                        trace: &trace,
+                    },
+                    &mut scratch.ckpt_buf,
+                )?;
+            }
+        }
+
+        // Compressed error estimate for the final iterate (`fit_with`
+        // overwrites it with the exact value on the real data).
+        let mut wtw = scratch.ws.acquire_mat(k, k);
+        gemm::gram_into(&wt, &mut wtw, &mut scratch.ws);
+        gemm::at_b_into(b, &wt, &mut r, &mut scratch.ws);
+        let final_rel_err = stopping::rel_err_compressed_with(
+            x_norm_sq,
+            b_norm_sq,
+            &r,
+            &wtw,
+            &ht,
+            &mut scratch.ws,
+        );
+        scratch.ws.release_mat(wtw);
+
+        // Build the model: H = Htᵀ into workspace-drawn storage.
+        let mut h = scratch.ws.acquire_mat(k, n);
+        ht.transpose_into(&mut h);
+        scratch.ws.release_mat(ht);
+        let model = NmfModel { w, h };
+        debug_assert!(model.w.is_nonneg() && model.h.is_nonneg());
+
+        // Return all per-solve scratch to the pool.
+        scratch.ws.release_mat(gw);
+        scratch.ws.release_mat(gh);
+        scratch.ws.release_mat(v);
+        scratch.ws.release_mat(t);
+        scratch.ws.release_mat(hp);
+        scratch.ws.release_mat(s);
+        scratch.ws.release_mat(r);
+        scratch.ws.release_mat(wt);
+        Ok(NmfFit {
+            model,
+            iters,
+            elapsed_s: elapsed_offset + start.elapsed().as_secs_f64(),
+            final_rel_err,
+            pg_ratio,
+            converged,
+            trace,
+        })
+    }
+}
+
+impl NmfSolver for TwoSidedHals {
+    fn fit(&self, x: &Mat) -> Result<NmfFit> {
+        TwoSidedHals::fit(self, x)
+    }
+    fn fit_input(&self, x: NmfInput<'_>) -> Result<NmfFit> {
+        match x {
+            NmfInput::Dense(d) => self.fit(d),
+            NmfInput::Sparse(_) | NmfInput::SparseDual(_) => anyhow::bail!(
+                "two-sided compressed HALS is dense-only for now (the column-compressed \
+                 pass needs transpose-side sparse kernels; see ROADMAP); use the \
+                 one-sided randomized HALS for sparse input"
+            ),
+        }
+    }
+    fn name(&self) -> &'static str {
+        "twosided"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+    use crate::nmf::hals::Hals;
+    use crate::nmf::options::Regularization;
+    use crate::nmf::rhals::RandomizedHals;
+    use crate::sketch::qb::SketchKind;
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = rng.uniform_mat(m, r);
+        let v = rng.uniform_mat(r, n);
+        gemm::matmul(&u, &v)
+    }
+
+    #[test]
+    fn fits_low_rank_near_deterministic_quality() {
+        let x = low_rank(200, 80, 5, 1);
+        let opts = NmfOptions::new(5).with_max_iter(300).with_seed(2);
+        let det = Hals::new(opts.clone()).fit(&x).unwrap();
+        let one = RandomizedHals::new(opts.clone()).fit(&x).unwrap();
+        let two = TwoSidedHals::new(opts).fit(&x).unwrap();
+        assert!(two.model.w.is_nonneg() && two.model.h.is_nonneg());
+        assert!(
+            two.final_rel_err < det.final_rel_err + 5e-3,
+            "twosided={} hals={}",
+            two.final_rel_err,
+            det.final_rel_err
+        );
+        assert!(
+            two.final_rel_err < one.final_rel_err + 5e-3,
+            "twosided={} rhals={}",
+            two.final_rel_err,
+            one.final_rel_err
+        );
+        assert!(two.final_rel_err < 1e-2);
+    }
+
+    #[test]
+    fn srht_sketch_fits_comparably() {
+        let x = low_rank(150, 70, 5, 12);
+        let dense = TwoSidedHals::new(NmfOptions::new(5).with_max_iter(200).with_seed(13))
+            .fit(&x)
+            .unwrap();
+        let srht = TwoSidedHals::new(
+            NmfOptions::new(5)
+                .with_max_iter(200)
+                .with_seed(13)
+                .with_sketch(SketchKind::Srht),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(srht.model.w.is_nonneg() && srht.model.h.is_nonneg());
+        assert!(
+            srht.final_rel_err < dense.final_rel_err + 1e-2,
+            "srht={} uniform={}",
+            srht.final_rel_err,
+            dense.final_rel_err
+        );
+    }
+
+    #[test]
+    fn fit_with_matches_fit_and_recycles() {
+        let x = low_rank(90, 60, 4, 2);
+        let opts = NmfOptions::new(4).with_max_iter(60).with_seed(3).with_tol(0.0);
+        let solver = TwoSidedHals::new(opts);
+        let plain = solver.fit(&x).unwrap();
+        let mut scratch = TwoSidedScratch::new();
+        let f1 = solver.fit_with(&x, &mut scratch).unwrap();
+        assert_eq!(f1.model.w, plain.model.w, "fit_with must equal fit bitwise");
+        assert_eq!(f1.model.h, plain.model.h);
+        assert_eq!(f1.final_rel_err, plain.final_rel_err);
+        f1.recycle(&mut scratch.ws);
+        let f2 = solver.fit_with(&x, &mut scratch).unwrap();
+        assert_eq!(f2.model.w, plain.model.w);
+        f2.recycle(&mut scratch.ws);
+        let pooled = scratch.ws.pooled();
+        let f3 = solver.fit_with(&x, &mut scratch).unwrap();
+        f3.recycle(&mut scratch.ws);
+        assert_eq!(scratch.ws.pooled(), pooled, "warm fit grew the workspace pool");
+    }
+
+    #[test]
+    fn nonnegativity_invariant_every_config() {
+        let x = low_rank(60, 50, 3, 5);
+        for (seed, init) in [
+            (1u64, crate::nmf::options::Init::Random),
+            (2, crate::nmf::options::Init::Nndsvd),
+            (3, crate::nmf::options::Init::NndsvdA),
+        ] {
+            let fit = TwoSidedHals::new(
+                NmfOptions::new(3).with_max_iter(40).with_seed(seed).with_init(init),
+            )
+            .fit(&x)
+            .unwrap();
+            assert!(fit.model.w.is_nonneg(), "W nonneg (seed {seed})");
+            assert!(fit.model.h.is_nonneg(), "H nonneg (seed {seed})");
+            assert!(!fit.model.w.has_non_finite());
+        }
+    }
+
+    #[test]
+    fn l1_sparsifies_w() {
+        let x = low_rank(100, 60, 6, 6);
+        let base = TwoSidedHals::new(NmfOptions::new(5).with_max_iter(120).with_seed(7))
+            .fit(&x)
+            .unwrap();
+        let sparse = TwoSidedHals::new(
+            NmfOptions::new(5)
+                .with_max_iter(120)
+                .with_seed(7)
+                .with_reg_w(Regularization::lasso(0.9)),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(
+            sparse.model.w.zero_fraction() > base.model.w.zero_fraction(),
+            "l1: {} vs {}",
+            sparse.model.w.zero_fraction(),
+            base.model.w.zero_fraction()
+        );
+    }
+
+    #[test]
+    fn trace_is_recorded_and_error_decreases() {
+        let x = low_rank(120, 70, 4, 8);
+        let fit = TwoSidedHals::new(
+            NmfOptions::new(4).with_max_iter(80).with_seed(9).with_trace_every(1),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(fit.trace.len() >= 60);
+        let first = fit.trace.first().unwrap().rel_err;
+        let last = fit.trace.last().unwrap().rel_err;
+        assert!(last < first, "error should decrease: {first} -> {last}");
+        for w in fit.trace.windows(2) {
+            assert!(w[1].elapsed_s >= w[0].elapsed_s);
+        }
+    }
+
+    #[test]
+    fn converges_by_projected_gradient() {
+        let x = low_rank(80, 60, 3, 10);
+        let fit = TwoSidedHals::new(
+            NmfOptions::new(3).with_max_iter(5000).with_tol(1e-10).with_seed(11),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(fit.converged, "pg_ratio={}", fit.pg_ratio);
+        assert!(fit.iters < 5000);
+    }
+
+    #[test]
+    fn rejects_interleaved_order() {
+        let x = low_rank(20, 20, 2, 12);
+        let err = TwoSidedHals::new(
+            NmfOptions::new(2).with_update_order(UpdateOrder::InterleavedCyclic),
+        )
+        .fit(&x);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_sparse_input() {
+        let mut rng = Pcg64::seed_from_u64(30);
+        let dense = rng.uniform_mat(20, 15).map(|v| if v < 0.8 { 0.0 } else { v });
+        let x = crate::linalg::sparse::CsrMat::from_dense(&dense);
+        let solver = TwoSidedHals::new(NmfOptions::new(2).with_max_iter(5));
+        let err = solver.fit_input(NmfInput::from(&x));
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("dense-only"));
+    }
+
+    #[test]
+    fn shuffled_order_works() {
+        let x = low_rank(60, 40, 3, 13);
+        let fit = TwoSidedHals::new(
+            NmfOptions::new(3)
+                .with_max_iter(150)
+                .with_seed(14)
+                .with_update_order(UpdateOrder::Shuffled),
+        )
+        .fit(&x)
+        .unwrap();
+        assert!(fit.final_rel_err < 5e-2, "err={}", fit.final_rel_err);
+    }
+}

@@ -238,6 +238,12 @@ pub fn qb_blocked_with(
             fill_sparse_sign(rng, l, s, &mut cols, &mut vals);
             sparse = Some((cols, vals, s));
         }
+        SketchKind::Srht => anyhow::bail!(
+            "the SRHT sketch needs the whole coordinate range per transform and \
+             cannot be applied column-chunk by column-chunk; the blocked/out-of-core \
+             engine supports uniform, gaussian, and sparse-sign sketches only \
+             (use the in-memory qb_into path for SketchKind::Srht)"
+        ),
     }
 
     // `io` holds one read: up to a chunk for fine-grained sources, up to
@@ -603,6 +609,12 @@ pub fn qb_blocked_sparse_with(
             fill_sparse_sign(rng, l, s, &mut cols, &mut vals);
             sparse_tab = Some((cols, vals, s));
         }
+        SketchKind::Srht => anyhow::bail!(
+            "the SRHT sketch needs the whole coordinate range per transform and \
+             cannot be applied column-chunk by column-chunk; the blocked/out-of-core \
+             engine supports uniform, gaussian, and sparse-sign sketches only \
+             (use the in-memory qb_into path for SketchKind::Srht)"
+        ),
     }
 
     // Pass 1: Y = Σ_chunks X_c · Ω_c, streamed over stored entries.

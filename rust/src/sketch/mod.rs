@@ -12,6 +12,15 @@
 //!   blocked engine on the concatenation, for any chunking), and
 //!   [`streaming::OnlineNmf`] runs warm-started compressed HALS refreshes
 //!   on top.
+//! * [`srht`] — the subsampled-randomized-Hadamard fast sketch backing
+//!   [`qb::SketchKind::Srht`]: `Y = XΩ` in `O(m·n_pad·log n_pad)` via an
+//!   in-place fast Walsh–Hadamard transform, never materializing `Ω`.
+//! * [`twosided`] — two-sided compression: the usual row-compressed
+//!   `B = QᵀX` *plus* a column-compressed `C = X·P`, so a solver can
+//!   read `X` through whichever view compresses the dimension it sweeps
+//!   ([`crate::nmf::twosided`]). The whole architecture — which factor
+//!   sees which view and why the error stays bounded — is documented in
+//!   `docs/COMPRESSION.md`.
 //!
 //! The QB products (`XΩ`, `XᵀQ`, `QᵀX`) are the compression stage's whole
 //! cost, so both variants are built as one **workspace-drawn, pool-parallel
@@ -42,4 +51,6 @@
 
 pub mod blocked;
 pub mod qb;
+pub mod srht;
 pub mod streaming;
+pub mod twosided;

@@ -58,6 +58,13 @@
 //!   `nnz` entries of `±1/√nnz` in distinct random columns. `Y = XΩ` is
 //!   applied **without materializing Ω** in `O(m·n·nnz)` work instead of
 //!   the dense `O(m·n·l)`, pool-parallel over output rows.
+//! * `Srht` — subsampled randomized Hadamard transform (Tropp 2011):
+//!   `Ω = D·H·S/√l`, applied via an in-place fast Walsh–Hadamard
+//!   transform in `O(m·n_pad·log n_pad)` with no materialized `Ω` — see
+//!   [`crate::sketch::srht`]. In-memory engine only.
+//!
+//! The full decision table — cost model, when each kind wins, and the
+//! determinism guarantees — lives in `docs/COMPRESSION.md`.
 
 use crate::linalg::gemm;
 use crate::linalg::mat::Mat;
@@ -84,6 +91,14 @@ pub enum SketchKind {
         /// Nonzeros per row of `Ω`.
         nnz: usize,
     },
+    /// Subsampled randomized Hadamard transform `Ω = D·H·S/√l` (Tropp
+    /// 2011), applied without materializing `Ω` via an in-place fast
+    /// Walsh–Hadamard transform in `O(m·n_pad·log n_pad)` — see
+    /// [`crate::sketch::srht`] for the padding and determinism
+    /// contracts. In-memory engine only: the blocked/out-of-core and
+    /// streaming engines reject it (one transform needs the whole
+    /// coordinate range).
+    Srht,
 }
 
 impl SketchKind {
@@ -307,6 +322,7 @@ pub fn sketch_apply<'a>(
             ws.release_vec(vals);
             ws.release_vec(cols);
         }
+        SketchKind::Srht => crate::sketch::srht::srht_sketch_apply(a, l, rng, y, ws),
     }
 }
 
@@ -317,8 +333,8 @@ pub(crate) fn fill_dense_sketch(kind: SketchKind, rng: &mut Pcg64, omega: &mut M
     match kind {
         SketchKind::Uniform => rng.fill_uniform(omega.as_mut_slice()),
         SketchKind::Gaussian => rng.fill_gaussian(omega.as_mut_slice()),
-        SketchKind::SparseSign { .. } => {
-            unreachable!("sparse sketches are applied, never materialized")
+        SketchKind::SparseSign { .. } | SketchKind::Srht => {
+            unreachable!("structured sketches are applied, never materialized")
         }
     }
 }
@@ -506,7 +522,12 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let a = low_rank(50, 40, 5, 9);
-        for sketch in [SketchKind::Uniform, SketchKind::Gaussian, SketchKind::sparse_sign()] {
+        for sketch in [
+            SketchKind::Uniform,
+            SketchKind::Gaussian,
+            SketchKind::sparse_sign(),
+            SketchKind::Srht,
+        ] {
             let mut r1 = Pcg64::seed_from_u64(10);
             let mut r2 = Pcg64::seed_from_u64(10);
             let opts = QbOptions::new(5).with_sketch(sketch);
@@ -543,6 +564,22 @@ mod tests {
             .with_oversample(10)
             .with_power_iters(2)
             .with_sketch(SketchKind::sparse_sign());
+        let f = qb(&a, opts, &mut rng);
+        assert!(f.relative_error(&a) < 1e-8, "err={}", f.relative_error(&a));
+        let l = f.q.cols();
+        assert!(gemm::gram(&f.q).max_abs_diff(&Mat::eye(l)) < 1e-9);
+    }
+
+    #[test]
+    fn srht_recovers_exact_low_rank() {
+        // Non-power-of-two column count, so the padded-transform path is
+        // exercised end to end through the range finder.
+        let a = low_rank(100, 70, 5, 23);
+        let mut rng = Pcg64::seed_from_u64(24);
+        let opts = QbOptions::new(5)
+            .with_oversample(10)
+            .with_power_iters(2)
+            .with_sketch(SketchKind::Srht);
         let f = qb(&a, opts, &mut rng);
         assert!(f.relative_error(&a) < 1e-8, "err={}", f.relative_error(&a));
         let l = f.q.cols();
@@ -591,7 +628,12 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(18);
         let dense = rng.uniform_mat(48, 36).map(|v| if v < 0.8 { 0.0 } else { v });
         let x = crate::linalg::sparse::CsrMat::from_dense(&dense);
-        for sketch in [SketchKind::Uniform, SketchKind::Gaussian, SketchKind::sparse_sign()] {
+        for sketch in [
+            SketchKind::Uniform,
+            SketchKind::Gaussian,
+            SketchKind::sparse_sign(),
+            SketchKind::Srht,
+        ] {
             let opts = QbOptions::new(3).with_oversample(4).with_power_iters(1).with_sketch(sketch);
             let l = opts.sketch_width(48, 36);
             let mut ws = Workspace::new();
@@ -617,7 +659,12 @@ mod tests {
         let dense = rng.uniform_mat(52, 34).map(|v| if v < 0.8 { 0.0 } else { v });
         let csr = crate::linalg::sparse::CsrMat::from_dense(&dense);
         let dual = crate::linalg::sparse::SparseMat::from_dense(&dense);
-        for sketch in [SketchKind::Uniform, SketchKind::Gaussian, SketchKind::sparse_sign()] {
+        for sketch in [
+            SketchKind::Uniform,
+            SketchKind::Gaussian,
+            SketchKind::sparse_sign(),
+            SketchKind::Srht,
+        ] {
             let opts = QbOptions::new(3).with_oversample(4).with_power_iters(2).with_sketch(sketch);
             let l = opts.sketch_width(52, 34);
             let mut ws = Workspace::new();

@@ -1,0 +1,461 @@
+//! Subsampled randomized Hadamard transform (SRHT) — the fast structured
+//! sketch ([`SketchKind::Srht`](crate::sketch::qb::SketchKind)).
+//!
+//! The test matrix is `Ω = D·H·S / √l` (Tropp 2011; cf. Tepper & Sapiro
+//! 2016 on structured projections for compressed NMF):
+//!
+//! * `D` — diagonal of iid random signs `±1` over the data's coordinate
+//!   range,
+//! * `H` — the (unnormalized) Walsh–Hadamard matrix
+//!   `H[r,c] = (−1)^popcount(r & c)` of order `n_pad`,
+//! * `S` — a column sampler selecting `l` *distinct* coordinates of the
+//!   transformed range uniformly at random.
+//!
+//! `Ω` is never materialized: one sketch row `Y[i,:] = X[i,:]·Ω` costs an
+//! in-place fast Walsh–Hadamard transform (FWHT) plus an `l`-gather —
+//! `O(n_pad·log n_pad)` instead of the dense `O(n·l)` — so the full
+//! sketch is `O(m·n_pad·log n_pad)` work with `O(n_pad)` staging memory.
+//!
+//! ## Padding semantics
+//!
+//! The Hadamard recursion needs a power-of-two order, so the coordinate
+//! range `n` is padded to `n_pad = next_power_of_two(n)` (`n_pad = 1` for
+//! `n = 1`; `n_pad = n` when `n` is already a power of two, so no work is
+//! wasted). Data is *implicitly* zero-padded: the staging buffer's tail
+//! `[n, n_pad)` is zeroed before every transform, and the sample set `S`
+//! draws from the full padded range `[0, n_pad)` — a sampled coordinate
+//! is a mixture of **all** `n` true coordinates regardless of padding
+//! (every column of `H` touches every row), so padding never produces a
+//! dead sketch column. Unit-tested for `n = 1`, exact powers of two, and
+//! `n_pad/2 < n < n_pad`.
+//!
+//! ## Sampling determinism
+//!
+//! The RNG draw order is: `n` sign draws (one per true coordinate —
+//! padded rows multiply zeros and need no sign), then `l` rejection-
+//! sampled *distinct* indices in `[0, n_pad)` (termination is guaranteed
+//! by `l ≤ n ≤ n_pad`, which [`crate::sketch::qb::QbOptions::sketch_width`]
+//! enforces). The order depends only on `(n, l)` — never on the input
+//! representation — so a fixed seed draws the same `Ω` for dense, CSR,
+//! and dual-storage input.
+//!
+//! ## Bit-determinism scope
+//!
+//! Each output row's FWHT runs serially (the pool splits over *rows*,
+//! never inside a transform), so results are **bit-identical across
+//! thread counts** — stronger than the dense GEMM sketch, whose packed
+//! accumulation order is only fixed per thread count. Across input
+//! representations the results are `==`-equal: the dense path multiplies
+//! explicit zeros by signs (which can flip a zero's sign bit), the sparse
+//! paths skip them, and IEEE addition erases the difference everywhere a
+//! sum is nonzero — `assert_eq!` (which treats `-0.0 == 0.0`) holds
+//! throughout, as the qb representation-equivalence tests check.
+//!
+//! Because one transform mixes the **whole** coordinate range, the
+//! blocked/out-of-core and streaming engines — which see the data in
+//! column chunks — reject this kind with a clear error (see
+//! [`crate::sketch::blocked`] / [`crate::sketch::streaming`]); use the
+//! in-memory [`crate::sketch::qb::qb_into`] path.
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::pool;
+use crate::linalg::rng::Pcg64;
+use crate::linalg::sparse::NmfInput;
+use crate::linalg::workspace::Workspace;
+
+/// Hadamard order for a coordinate range of `n`: the next power of two
+/// (`1` for `n ≤ 1`). See the module docs for the padding semantics.
+pub fn padded_len(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// Draw the SRHT tables: one `±1.0` sign per true coordinate
+/// (`signs.len()` of them), then `samples.len()` **distinct** sampled
+/// indices in `[0, n_pad)` encoded as `f64` (exact for any realizable
+/// order). Draw order is signs first, then rejection-sampled indices —
+/// the contract the module docs pin down.
+pub fn fill_srht(rng: &mut Pcg64, n_pad: usize, signs: &mut [f64], samples: &mut [f64]) {
+    debug_assert!(samples.len() <= n_pad, "srht: need l <= n_pad for distinct samples");
+    for s in signs.iter_mut() {
+        *s = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+    }
+    for t in 0..samples.len() {
+        // Distinct indices via rejection against the prior picks, exactly
+        // like the sparse-sign table draw (l ≪ n_pad in practice).
+        loop {
+            let c = rng.uniform_usize(n_pad);
+            if !samples[..t].iter().any(|&p| p as usize == c) {
+                samples[t] = c as f64;
+                break;
+            }
+        }
+    }
+}
+
+/// In-place iterative fast Walsh–Hadamard transform (unnormalized):
+/// `buf ← H·buf` with `H[r,c] = (−1)^popcount(r & c)`. `buf.len()` must
+/// be a power of two (or ≤ 1, a no-op). Butterfly stages run smallest
+/// stride first (LSB-first); a recursive halves-then-combine evaluation
+/// performs the identical per-element operation DAG, which is what makes
+/// the bitwise oracle in `test_properties.rs` well-defined.
+pub fn fwht(buf: &mut [f64]) {
+    let n = buf.len();
+    debug_assert!(n <= 1 || n.is_power_of_two(), "fwht: length {n} is not a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = buf[j];
+                let y = buf[j + h];
+                buf[j] = x + y;
+                buf[j + h] = x - y;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Threading-gate flop estimate: `2·rows·n_pad·log2(n_pad)` butterfly
+/// ops, playing the GEMM's `2·m·n·k` role in [`gemm::row_chunks`].
+fn fwht_flops(rows: usize, n_pad: usize) -> usize {
+    let lg = (n_pad.trailing_zeros() as usize).max(1);
+    2usize.saturating_mul(rows).saturating_mul(n_pad).saturating_mul(lg)
+}
+
+/// Right sketch `Y = X·Ω` (`y: m×l`) with `Ω` the SRHT over `X`'s
+/// **column** range: per data row, stage the sign-flipped row into the
+/// zero-padded buffer, FWHT in place, gather the `l` sampled coordinates
+/// scaled by `1/√l`. Pool-parallel over output rows when the work
+/// crosses the GEMM threading threshold; the staging buffer comes from
+/// the caller workspace (serial) or the persistent per-worker scratch
+/// (threaded), so warm calls allocate nothing in either regime.
+pub fn srht_sketch_apply(
+    a: NmfInput<'_>,
+    l: usize,
+    rng: &mut Pcg64,
+    y: &mut Mat,
+    ws: &mut Workspace,
+) {
+    let (m, n) = a.shape();
+    assert_eq!(y.shape(), (m, l), "srht apply: y must be {m}x{l}");
+    let n_pad = padded_len(n);
+    assert!(l <= n_pad, "srht apply: l = {l} exceeds the padded range {n_pad}");
+    let mut signs = ws.acquire_vec(n);
+    let mut samples = ws.acquire_vec(l);
+    fill_srht(rng, n_pad, &mut signs, &mut samples);
+    let scale = 1.0 / (l as f64).sqrt();
+    let nchunks = gemm::row_chunks(m, fwht_flops(m, n_pad));
+    if nchunks <= 1 {
+        let mut stage = ws.acquire_vec(n_pad);
+        srht_rows(a, &signs, &samples, scale, &mut stage, y.as_mut_slice(), l, 0, m);
+        ws.release_vec(stage);
+    } else {
+        pool::run_row_split(nchunks, m, l, y.as_mut_slice(), &|yslice, i0, i1, scratch| {
+            scratch.pa.resize(n_pad, 0.0);
+            srht_rows(a, &signs, &samples, scale, &mut scratch.pa, yslice, l, i0, i1);
+        });
+    }
+    ws.release_vec(samples);
+    ws.release_vec(signs);
+}
+
+/// Rows `[i0, i1)` of the SRHT right apply; `yslice` holds exactly those
+/// output rows and `stage` is an `n_pad` scratch row.
+#[allow(clippy::too_many_arguments)]
+fn srht_rows(
+    a: NmfInput<'_>,
+    signs: &[f64],
+    samples: &[f64],
+    scale: f64,
+    stage: &mut [f64],
+    yslice: &mut [f64],
+    l: usize,
+    i0: usize,
+    i1: usize,
+) {
+    let n = signs.len();
+    for i in i0..i1 {
+        match a {
+            NmfInput::Dense(x) => {
+                let row = x.row(i);
+                for r in 0..n {
+                    stage[r] = row[r] * signs[r];
+                }
+                for s in stage[n..].iter_mut() {
+                    *s = 0.0;
+                }
+            }
+            NmfInput::Sparse(x) => {
+                stage.fill(0.0);
+                let (js, vs) = x.row(i);
+                for (j, v) in js.iter().zip(vs.iter()) {
+                    stage[*j] = *v * signs[*j];
+                }
+            }
+            NmfInput::SparseDual(x) => {
+                stage.fill(0.0);
+                let (js, vs) = x.csr().row(i);
+                for (j, v) in js.iter().zip(vs.iter()) {
+                    stage[*j] = *v * signs[*j];
+                }
+            }
+        }
+        fwht(stage);
+        let yrow = &mut yslice[(i - i0) * l..(i - i0 + 1) * l];
+        for (t, yv) in yrow.iter_mut().enumerate() {
+            *yv = stage[samples[t] as usize] * scale;
+        }
+    }
+}
+
+/// Left sketch `Yᵗ = Xᵀ·Ω` (`yt: n×l`) with `Ω` the SRHT over `X`'s
+/// **row** range — the two-sided engine's column-compression stage
+/// ([`crate::sketch::twosided`]). Per data *column*, stage the
+/// sign-flipped column into the zero-padded buffer (a strided gather —
+/// dense input only), FWHT, gather the samples. Same draw-order,
+/// padding, and bit-determinism contracts as [`srht_sketch_apply`] with
+/// `m` playing the coordinate-range role; pool-parallel over `yt`'s `n`
+/// output rows.
+pub fn srht_left_apply(x: &Mat, l: usize, rng: &mut Pcg64, yt: &mut Mat, ws: &mut Workspace) {
+    let (m, n) = x.shape();
+    assert_eq!(yt.shape(), (n, l), "srht left apply: yt must be {n}x{l}");
+    let m_pad = padded_len(m);
+    assert!(l <= m_pad, "srht left apply: l = {l} exceeds the padded range {m_pad}");
+    let mut signs = ws.acquire_vec(m);
+    let mut samples = ws.acquire_vec(l);
+    fill_srht(rng, m_pad, &mut signs, &mut samples);
+    let scale = 1.0 / (l as f64).sqrt();
+    let nchunks = gemm::row_chunks(n, fwht_flops(n, m_pad));
+    if nchunks <= 1 {
+        let mut stage = ws.acquire_vec(m_pad);
+        srht_cols(x, &signs, &samples, scale, &mut stage, yt.as_mut_slice(), l, 0, n);
+        ws.release_vec(stage);
+    } else {
+        pool::run_row_split(nchunks, n, l, yt.as_mut_slice(), &|ytslice, j0, j1, scratch| {
+            scratch.pa.resize(m_pad, 0.0);
+            srht_cols(x, &signs, &samples, scale, &mut scratch.pa, ytslice, l, j0, j1);
+        });
+    }
+    ws.release_vec(samples);
+    ws.release_vec(signs);
+}
+
+/// Output rows `[j0, j1)` of the SRHT left apply (data columns `j`).
+#[allow(clippy::too_many_arguments)]
+fn srht_cols(
+    x: &Mat,
+    signs: &[f64],
+    samples: &[f64],
+    scale: f64,
+    stage: &mut [f64],
+    ytslice: &mut [f64],
+    l: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let m = signs.len();
+    for j in j0..j1 {
+        for i in 0..m {
+            stage[i] = x.get(i, j) * signs[i];
+        }
+        for s in stage[m..].iter_mut() {
+            *s = 0.0;
+        }
+        fwht(stage);
+        let yrow = &mut ytslice[(j - j0) * l..(j - j0 + 1) * l];
+        for (t, yv) in yrow.iter_mut().enumerate() {
+            *yv = stage[samples[t] as usize] * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Materialize `Ω[r,t] = signs[r]·(−1)^popcount(r & samples[t])·scale`
+    /// over the padded range (padded rows get sign +1; they multiply
+    /// zeros anyway).
+    fn materialize_omega(signs: &[f64], samples: &[f64], n_pad: usize, scale: f64) -> Mat {
+        let l = samples.len();
+        let mut omega = Mat::zeros(n_pad, l);
+        for r in 0..n_pad {
+            let sr = if r < signs.len() { signs[r] } else { 1.0 };
+            for (t, &sc) in samples.iter().enumerate() {
+                let parity = (r & sc as usize).count_ones() % 2;
+                let h = if parity == 0 { 1.0 } else { -1.0 };
+                omega.set(r, t, sr * h * scale);
+            }
+        }
+        omega
+    }
+
+    #[test]
+    fn padded_len_edge_cases() {
+        assert_eq!(padded_len(0), 1);
+        assert_eq!(padded_len(1), 1);
+        assert_eq!(padded_len(2), 2);
+        assert_eq!(padded_len(3), 4);
+        assert_eq!(padded_len(8), 8);
+        assert_eq!(padded_len(9), 16);
+        assert_eq!(padded_len(1000), 1024);
+    }
+
+    #[test]
+    fn fwht_matches_hadamard_matrix() {
+        // H[r,c] = (−1)^popcount(r&c) applied as a dense matvec.
+        for npow in [1usize, 2, 4, 8, 16] {
+            let mut rng = Pcg64::seed_from_u64(npow as u64);
+            let mut buf: Vec<f64> = (0..npow).map(|_| rng.uniform()).collect();
+            let orig = buf.clone();
+            fwht(&mut buf);
+            for c in 0..npow {
+                let mut want = 0.0;
+                for (r, &v) in orig.iter().enumerate() {
+                    let h = if (r & c).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+                    want += h * v;
+                }
+                assert!((buf[c] - want).abs() < 1e-12, "n={npow} c={c}: {} vs {want}", buf[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_is_self_inverse_up_to_n() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let mut buf: Vec<f64> = (0..32).map(|_| rng.uniform()).collect();
+        let orig = buf.clone();
+        fwht(&mut buf);
+        fwht(&mut buf);
+        for (b, o) in buf.iter().zip(orig.iter()) {
+            assert!((b / 32.0 - o).abs() < 1e-12, "H·H = n·I");
+        }
+    }
+
+    #[test]
+    fn tables_are_valid_and_deterministic() {
+        let n = 37usize;
+        let n_pad = padded_len(n); // 64
+        let l = 9usize;
+        let mut s1 = vec![0.0; n];
+        let mut c1 = vec![0.0; l];
+        let mut s2 = vec![0.0; n];
+        let mut c2 = vec![0.0; l];
+        let mut r1 = Pcg64::seed_from_u64(3);
+        let mut r2 = Pcg64::seed_from_u64(3);
+        fill_srht(&mut r1, n_pad, &mut s1, &mut c1);
+        fill_srht(&mut r2, n_pad, &mut s2, &mut c2);
+        assert_eq!(s1, s2);
+        assert_eq!(c1, c2);
+        assert!(s1.iter().all(|&s| s == 1.0 || s == -1.0));
+        let mut seen: Vec<usize> = c1.iter().map(|&c| c as usize).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), l, "sampled indices must be distinct");
+        assert!(seen.iter().all(|&c| c < n_pad));
+    }
+
+    #[test]
+    fn apply_matches_materialized_omega_padded_and_unpadded() {
+        // Both an exact power-of-two range (no padding) and a range that
+        // pads up: Y from the fast path must match X_pad·Ω to roundoff.
+        for (m, n) in [(13usize, 16usize), (11, 21), (5, 1)] {
+            let mut rng = Pcg64::seed_from_u64(n as u64);
+            let x = rng.uniform_mat(m, n);
+            let l = 4.min(n);
+            let n_pad = padded_len(n);
+            let mut ws = Workspace::new();
+            let mut y = Mat::zeros(m, l);
+            let mut ra = Pcg64::seed_from_u64(50);
+            srht_sketch_apply(NmfInput::Dense(&x), l, &mut ra, &mut y, &mut ws);
+            // Re-draw the same tables and materialize.
+            let mut signs = vec![0.0; n];
+            let mut samples = vec![0.0; l];
+            let mut rb = Pcg64::seed_from_u64(50);
+            fill_srht(&mut rb, n_pad, &mut signs, &mut samples);
+            let scale = 1.0 / (l as f64).sqrt();
+            let omega = materialize_omega(&signs, &samples, n_pad, scale);
+            let mut xpad = Mat::zeros(m, n_pad);
+            for i in 0..m {
+                for j in 0..n {
+                    xpad.set(i, j, x.get(i, j));
+                }
+            }
+            let want = gemm::matmul(&xpad, &omega);
+            assert!(
+                y.max_abs_diff(&want) < 1e-12,
+                "{m}x{n}: fast apply diverged from materialized Ω"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_representation_equivalence() {
+        // Dense, CSR, and dual-storage input produce `==`-equal sketches
+        // (same draws, same per-row transform; see the module docs).
+        let mut rng = Pcg64::seed_from_u64(21);
+        let dense = rng.uniform_mat(40, 27).map(|v| if v < 0.7 { 0.0 } else { v });
+        let csr = crate::linalg::sparse::CsrMat::from_dense(&dense);
+        let dual = crate::linalg::sparse::SparseMat::from_dense(&dense);
+        let l = 6usize;
+        let mut ws = Workspace::new();
+        let mut yd = Mat::zeros(40, l);
+        let mut ys = Mat::zeros(40, l);
+        let mut yu = Mat::zeros(40, l);
+        let mut r1 = Pcg64::seed_from_u64(22);
+        let mut r2 = Pcg64::seed_from_u64(22);
+        let mut r3 = Pcg64::seed_from_u64(22);
+        srht_sketch_apply(NmfInput::Dense(&dense), l, &mut r1, &mut yd, &mut ws);
+        srht_sketch_apply(NmfInput::Sparse(&csr), l, &mut r2, &mut ys, &mut ws);
+        srht_sketch_apply(NmfInput::SparseDual(&dual), l, &mut r3, &mut yu, &mut ws);
+        assert_eq!(ys, yd, "CSR sketch differs from densified");
+        assert_eq!(yu, yd, "dual-storage sketch differs from densified");
+    }
+
+    #[test]
+    fn left_apply_matches_materialized_omega() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        let x = rng.uniform_mat(19, 12); // m = 19 pads to 32
+        let (m, n) = x.shape();
+        let l = 5usize;
+        let m_pad = padded_len(m);
+        let mut ws = Workspace::new();
+        let mut yt = Mat::zeros(n, l);
+        let mut ra = Pcg64::seed_from_u64(60);
+        srht_left_apply(&x, l, &mut ra, &mut yt, &mut ws);
+        let mut signs = vec![0.0; m];
+        let mut samples = vec![0.0; l];
+        let mut rb = Pcg64::seed_from_u64(60);
+        fill_srht(&mut rb, m_pad, &mut signs, &mut samples);
+        let scale = 1.0 / (l as f64).sqrt();
+        let omega = materialize_omega(&signs, &samples, m_pad, scale);
+        let mut xpad = Mat::zeros(m_pad, n);
+        for i in 0..m {
+            for j in 0..n {
+                xpad.set(i, j, x.get(i, j));
+            }
+        }
+        let want = gemm::at_b(&xpad, &omega);
+        assert!(yt.max_abs_diff(&want) < 1e-12, "left apply diverged from materialized Ω");
+    }
+
+    #[test]
+    fn warm_apply_is_bit_identical_and_pool_stable() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        let x = rng.uniform_mat(30, 24);
+        let l = 7usize;
+        let mut ws = Workspace::new();
+        let mut y1 = Mat::zeros(30, l);
+        let mut y2 = Mat::zeros(30, l);
+        let mut r1 = Pcg64::seed_from_u64(42);
+        srht_sketch_apply(NmfInput::Dense(&x), l, &mut r1, &mut y1, &mut ws);
+        let pooled = ws.pooled();
+        let mut r2 = Pcg64::seed_from_u64(42);
+        srht_sketch_apply(NmfInput::Dense(&x), l, &mut r2, &mut y2, &mut ws);
+        assert_eq!(y2, y1, "warm SRHT apply must be bit-identical");
+        assert_eq!(ws.pooled(), pooled, "warm SRHT apply grew the workspace pool");
+    }
+}

@@ -82,6 +82,9 @@ fn replayed_post_draw(opts: &QbOptions, seed_rng: &Pcg64, m: usize, n: usize) ->
             let mut vals = vec![0.0; n * s];
             fill_sparse_sign(&mut rng, l_now, s, &mut cols, &mut vals);
         }
+        SketchKind::Srht => {
+            unreachable!("the streaming constructors reject SketchKind::Srht")
+        }
     }
     rng
 }
@@ -175,6 +178,11 @@ impl StreamingSketch {
             SketchKind::SparseSign { nnz } => {
                 SketchTables::Sign { cols: Vec::new(), vals: Vec::new(), s: nnz.clamp(1, l) }
             }
+            SketchKind::Srht => panic!(
+                "streaming sketch: SketchKind::Srht is not supported (the SRHT mixes \
+                 the whole coordinate range per transform, so its draw cannot be \
+                 extended column-incrementally); use uniform, gaussian, or sparse-sign"
+            ),
         };
         StreamingSketch {
             opts,
@@ -265,6 +273,9 @@ impl StreamingSketch {
                     SketchKind::Gaussian => self.draw.fill_gaussian(slot),
                     SketchKind::SparseSign { .. } => {
                         unreachable!("sign sketches use the Sign tables")
+                    }
+                    SketchKind::Srht => {
+                        unreachable!("the streaming constructors reject SketchKind::Srht")
                     }
                 }
             }
@@ -537,6 +548,11 @@ impl StreamingSparseSketch {
             SketchKind::SparseSign { nnz } => {
                 SketchTables::Sign { cols: Vec::new(), vals: Vec::new(), s: nnz.clamp(1, l) }
             }
+            SketchKind::Srht => panic!(
+                "streaming sketch: SketchKind::Srht is not supported (the SRHT mixes \
+                 the whole coordinate range per transform, so its draw cannot be \
+                 extended column-incrementally); use uniform, gaussian, or sparse-sign"
+            ),
         };
         StreamingSparseSketch {
             opts,
@@ -631,6 +647,9 @@ impl StreamingSparseSketch {
                     SketchKind::Gaussian => self.draw.fill_gaussian(slot),
                     SketchKind::SparseSign { .. } => {
                         unreachable!("sign sketches use the Sign tables")
+                    }
+                    SketchKind::Srht => {
+                        unreachable!("the streaming constructors reject SketchKind::Srht")
                     }
                 }
             }
@@ -824,6 +843,12 @@ impl OnlineNmf {
             opts.checkpoint_every == 0 && opts.resume_from.is_none(),
             "online fit does not support checkpoint/resume \
              (each refresh is already a fresh compressed solve)"
+        );
+        anyhow::ensure!(
+            opts.sketch != SketchKind::Srht,
+            "online fit does not support SketchKind::Srht (the SRHT mixes the whole \
+             coordinate range per transform, so its draw cannot be extended \
+             column-incrementally); use uniform, gaussian, or sparse-sign"
         );
         let qb_opts = QbOptions::new(opts.rank)
             .with_oversample(opts.oversample)

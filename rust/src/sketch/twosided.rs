@@ -1,0 +1,346 @@
+//! Two-sided compression: row- **and** column-compressed views of `X`
+//! (Tepper & Sapiro 2016, "Compressed NMF is fast and accurate"; cf.
+//! arXiv:1712.02248).
+//!
+//! The one-sided QB decomposition of [`crate::sketch::qb`] compresses
+//! only the row space: `B = QᵀX` is `l×n`, so solver passes that read the
+//! data through `B` still touch every column. The two-sided engine adds
+//! the mirror-image factorization of the **column** space:
+//!
+//! ```text
+//! right (row-compressed):   X ≈ Q·B,   Q: m×l orthonormal, B = QᵀX: l×n
+//! left (column-compressed): X ≈ C·Pᵀ,  P: n×l orthonormal, C = X·P: m×l
+//! ```
+//!
+//! `P` is the QB basis of `Xᵀ`, computed **without materializing the
+//! transpose**: the left sketch `Yᵗ = Xᵀ·Ω_left` runs column-wise over
+//! `X` ([`left_sketch_apply`]), the power iterations mirror the right
+//! side's through [`orthonormalize_into`] and transpose-product GEMMs,
+//! and `C = X·P` is one final product. Both sides share one
+//! [`QbOptions`]: the sketch width `l = sketch_width(m, n)` (which is
+//! symmetric in `m, n`), the sketch kind, and the power-iteration count
+//! apply to each side.
+//!
+//! A downstream solver then reads `X` through whichever view compresses
+//! the dimension it iterates over — `B` for `H`-updates (`n`-sized
+//! passes against an `l×n` matrix), `C` for `W`-updates (`m`-sized
+//! passes against an `m×l` matrix); see [`crate::nmf::twosided`] and
+//! `docs/COMPRESSION.md` for why the error stays bounded by the two
+//! one-sided compression errors.
+//!
+//! ## Determinism
+//!
+//! The right side draws first and consumes exactly the draws of a
+//! one-sided [`qb_into`] — so for a fixed seed, `(Q, B)` are
+//! bit-identical to the one-sided decomposition (unit-tested), and the
+//! left tables are drawn after with order depending only on `(m, l)`.
+//! Dense input only: the column-wise left passes need column access, and
+//! the sparse path's CSC mirror is a planned extension (see ROADMAP).
+
+use crate::linalg::gemm;
+use crate::linalg::mat::Mat;
+use crate::linalg::pool;
+use crate::linalg::qr::orthonormalize_into;
+use crate::linalg::rng::Pcg64;
+use crate::linalg::workspace::Workspace;
+use crate::sketch::qb::{fill_dense_sketch, fill_sparse_sign, qb_into, QbOptions, SketchKind};
+use crate::sketch::srht;
+
+/// The four factors of a two-sided compression (see the module docs).
+pub struct TwoSidedFactors {
+    /// Orthonormal basis of the (approximate) column space, `m×l`.
+    pub q: Mat,
+    /// Row-compressed view `B = QᵀX`, `l×n` — the `H`-update surrogate.
+    pub b: Mat,
+    /// Orthonormal basis of the (approximate) row space, `n×l`.
+    pub p: Mat,
+    /// Column-compressed view `C = X·P`, `m×l` — the `W`-update surrogate.
+    pub c: Mat,
+}
+
+impl TwoSidedFactors {
+    /// Relative error of the **right** (row-compressed) reconstruction
+    /// `‖X − QB‖_F / ‖X‖_F`.
+    pub fn right_relative_error(&self, x: &Mat) -> f64 {
+        rel_err_of(x, &gemm::matmul(&self.q, &self.b))
+    }
+
+    /// Relative error of the **left** (column-compressed) reconstruction
+    /// `‖X − CPᵀ‖_F / ‖X‖_F`.
+    pub fn left_relative_error(&self, x: &Mat) -> f64 {
+        rel_err_of(x, &gemm::a_bt(&self.c, &self.p))
+    }
+
+    /// Hand all four factors' storage back to a workspace pool (the
+    /// zero-allocation `fit_with` loops recycle through this).
+    pub fn recycle(self, ws: &mut Workspace) {
+        ws.release_mat(self.c);
+        ws.release_mat(self.p);
+        ws.release_mat(self.b);
+        ws.release_mat(self.q);
+    }
+}
+
+fn rel_err_of(x: &Mat, rec: &Mat) -> f64 {
+    let xn = crate::linalg::norms::fro_norm(x);
+    if xn == 0.0 {
+        0.0
+    } else {
+        crate::linalg::norms::fro_norm(&rec.sub(x)) / xn
+    }
+}
+
+/// Two-sided compression of `x` (allocating convenience wrapper over
+/// [`two_sided_with`] with a throwaway workspace).
+pub fn two_sided(x: &Mat, opts: QbOptions, rng: &mut Pcg64) -> TwoSidedFactors {
+    two_sided_with(x, opts, rng, &mut Workspace::new())
+}
+
+/// [`two_sided`] with the factor storage and every temporary drawn from
+/// `ws`; recycle the result with [`TwoSidedFactors::recycle`] to keep a
+/// warm workspace allocation-free across decompositions.
+pub fn two_sided_with(
+    x: &Mat,
+    opts: QbOptions,
+    rng: &mut Pcg64,
+    ws: &mut Workspace,
+) -> TwoSidedFactors {
+    let (m, n) = x.shape();
+    let l = opts.sketch_width(m, n);
+    let mut q = ws.acquire_mat(m, l);
+    let mut b = ws.acquire_mat(l, n);
+    let mut p = ws.acquire_mat(n, l);
+    let mut c = ws.acquire_mat(m, l);
+    two_sided_into(x, opts, rng, &mut q, &mut b, &mut p, &mut c, ws);
+    TwoSidedFactors { q, b, p, c }
+}
+
+/// The two-sided compression engine: right QB into `q (m×l)` / `b (l×n)`
+/// — bit-identical to a one-sided [`qb_into`] with the same seed — then
+/// the left factorization into `p (n×l)` / `c (m×l)`, with every
+/// temporary drawn from `ws` (`l = opts.sketch_width(m, n)`). Zero heap
+/// allocations once the workspace is warm; deterministic for a fixed
+/// seed and thread count (bit-identical across thread counts for
+/// [`SketchKind::Srht`], whose transforms never split).
+pub fn two_sided_into(
+    x: &Mat,
+    opts: QbOptions,
+    rng: &mut Pcg64,
+    q: &mut Mat,
+    b: &mut Mat,
+    p: &mut Mat,
+    c: &mut Mat,
+    ws: &mut Workspace,
+) {
+    let (m, n) = x.shape();
+    assert!(m > 0 && n > 0, "two_sided: empty input");
+    let l = opts.sketch_width(m, n);
+    assert_eq!(p.shape(), (n, l), "two_sided_into: p must be {n}x{l}");
+    assert_eq!(c.shape(), (m, l), "two_sided_into: c must be {m}x{l}");
+
+    // ---- Right side (consumes the one-sided draw sequence) ----
+    qb_into(x, opts, rng, q, b, ws);
+
+    // ---- Left side: QB of Xᵀ without materializing Xᵀ ----
+    let mut yt = ws.acquire_mat(n, l); // Yᵗ = Xᵀ·Ω_left
+    left_sketch_apply(x, opts.sketch, l, rng, &mut yt, ws);
+    if opts.power_iters > 0 {
+        let mut z = ws.acquire_mat(m, l);
+        let mut qz = ws.acquire_mat(m, l);
+        for _ in 0..opts.power_iters {
+            orthonormalize_into(&yt, p, ws);
+            gemm::matmul_into(x, p, &mut z, ws); // X·P : m×l
+            orthonormalize_into(&z, &mut qz, ws);
+            gemm::at_b_into(x, &qz, &mut yt, ws); // Xᵀ·Q̃ : n×l
+        }
+        ws.release_mat(qz);
+        ws.release_mat(z);
+    }
+    orthonormalize_into(&yt, p, ws);
+    gemm::matmul_into(x, p, c, ws); // C = X·P : m×l
+    ws.release_mat(yt);
+}
+
+/// One left sketch stage `Yᵗ = Xᵀ·Ω` with `Ω (m×l)` drawn from `rng` —
+/// the transpose counterpart of [`crate::sketch::qb::sketch_apply`],
+/// computed column-wise so `Xᵀ` is never materialized. The dense kinds
+/// materialize `Ω` (`m×l`, never `m×n`) and run one transpose-product
+/// GEMM; [`SketchKind::SparseSign`] scatters the implicit tables over
+/// data columns in `O(m·n·nnz)`; [`SketchKind::Srht`] runs the fast
+/// column transform of [`crate::sketch::srht`] in `O(n·m_pad·log m_pad)`.
+/// `yt` must be `n×l`. Allocation-free once `ws` is warm; the draw order
+/// depends only on `(kind, m, l)`.
+pub(crate) fn left_sketch_apply(
+    x: &Mat,
+    kind: SketchKind,
+    l: usize,
+    rng: &mut Pcg64,
+    yt: &mut Mat,
+    ws: &mut Workspace,
+) {
+    let (m, n) = x.shape();
+    assert_eq!(yt.shape(), (n, l), "left_sketch_apply: yt must be {n}x{l}");
+    match kind {
+        SketchKind::Uniform | SketchKind::Gaussian => {
+            let mut omega = ws.acquire_mat(m, l);
+            fill_dense_sketch(kind, rng, &mut omega);
+            gemm::at_b_into(x, &omega, yt, ws);
+            ws.release_mat(omega);
+        }
+        SketchKind::SparseSign { nnz } => {
+            let s = nnz.clamp(1, l);
+            let mut cols = ws.acquire_vec(m * s);
+            let mut vals = ws.acquire_vec(m * s);
+            fill_sparse_sign(rng, l, s, &mut cols, &mut vals);
+            yt.as_mut_slice().fill(0.0);
+            left_sign_apply(x, &cols, &vals, s, yt);
+            ws.release_vec(vals);
+            ws.release_vec(cols);
+        }
+        SketchKind::Srht => srht::srht_left_apply(x, l, rng, yt, ws),
+    }
+}
+
+/// `Yᵗ[j,:] += Σ_i X[i,j]·Ω[i,:]` for the sparse-sign `Ω` encoded in
+/// `(cols, vals)` tables (`nnz` targets per `Ω` row). Each output row
+/// accumulates its column's contributions in ascending data-row order;
+/// pool-parallel over `Yᵗ`'s rows (disjoint split, no scratch), so warm
+/// calls allocate nothing and results are bit-identical across thread
+/// counts. The caller zeroes `yt`.
+fn left_sign_apply(x: &Mat, cols: &[f64], vals: &[f64], nnz: usize, yt: &mut Mat) {
+    let (m, n) = x.shape();
+    let l = yt.cols();
+    if m == 0 || n == 0 {
+        return;
+    }
+    let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(nnz);
+    let nchunks = gemm::row_chunks(n, flops);
+    if nchunks <= 1 {
+        left_sign_rows(x, cols, vals, nnz, yt.as_mut_slice(), l, 0, n);
+        return;
+    }
+    pool::run_row_split(nchunks, n, l, yt.as_mut_slice(), &|ytslice, j0, j1, _scratch| {
+        left_sign_rows(x, cols, vals, nnz, ytslice, l, j0, j1);
+    });
+}
+
+/// Output rows `[j0, j1)` (data columns `j`) of the left sign apply.
+fn left_sign_rows(
+    x: &Mat,
+    cols: &[f64],
+    vals: &[f64],
+    nnz: usize,
+    ytslice: &mut [f64],
+    l: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let m = x.rows();
+    for j in j0..j1 {
+        let yrow = &mut ytslice[(j - j0) * l..(j - j0 + 1) * l];
+        for i in 0..m {
+            let xv = x.get(i, j);
+            if xv != 0.0 {
+                let base = i * nnz;
+                for t in 0..nnz {
+                    yrow[cols[base + t] as usize] += vals[base + t] * xv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+
+    fn low_rank(m: usize, n: usize, r: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = rng.uniform_mat(m, r);
+        let v = rng.uniform_mat(r, n);
+        gemm::matmul(&u, &v)
+    }
+
+    #[test]
+    fn both_sides_recover_exact_low_rank() {
+        let x = low_rank(90, 70, 5, 1);
+        for sketch in [
+            SketchKind::Uniform,
+            SketchKind::Gaussian,
+            SketchKind::sparse_sign(),
+            SketchKind::Srht,
+        ] {
+            let mut rng = Pcg64::seed_from_u64(2);
+            let opts = QbOptions::new(5).with_oversample(10).with_sketch(sketch);
+            let f = two_sided(&x, opts, &mut rng);
+            assert!(f.right_relative_error(&x) < 1e-8, "{sketch:?}: right err");
+            assert!(f.left_relative_error(&x) < 1e-8, "{sketch:?}: left err");
+            let l = f.q.cols();
+            assert!(gemm::gram(&f.q).max_abs_diff(&Mat::eye(l)) < 1e-9, "{sketch:?}: QᵀQ");
+            assert!(gemm::gram(&f.p).max_abs_diff(&Mat::eye(l)) < 1e-9, "{sketch:?}: PᵀP");
+        }
+    }
+
+    #[test]
+    fn right_side_matches_one_sided_qb_bitwise() {
+        // The right factors must be exactly the one-sided decomposition:
+        // same seed, same draw sequence, same arithmetic.
+        let x = low_rank(60, 45, 4, 3);
+        let opts = QbOptions::new(4).with_oversample(6);
+        let mut r1 = Pcg64::seed_from_u64(4);
+        let mut r2 = Pcg64::seed_from_u64(4);
+        let two = two_sided(&x, opts, &mut r1);
+        let one = crate::sketch::qb::qb(&x, opts, &mut r2);
+        assert_eq!(two.q, one.q, "two-sided Q differs from one-sided");
+        assert_eq!(two.b, one.b, "two-sided B differs from one-sided");
+    }
+
+    #[test]
+    fn left_sketch_matches_materialized_omega() {
+        // The implicit left applies must equal Xᵀ·Ω for the explicitly
+        // drawn Ω (dense kinds are literally that; sparse-sign to 1e-12).
+        let mut rng = Pcg64::seed_from_u64(5);
+        let x = rng.uniform_mat(29, 17);
+        let (m, n) = x.shape();
+        let l = 6usize;
+        let nnz = 3usize;
+        let mut cols = vec![0.0; m * nnz];
+        let mut vals = vec![0.0; m * nnz];
+        let mut rs = Pcg64::seed_from_u64(6);
+        fill_sparse_sign(&mut rs, l, nnz, &mut cols, &mut vals);
+        let mut omega = Mat::zeros(m, l);
+        for r in 0..m {
+            for t in 0..nnz {
+                let c = cols[r * nnz + t] as usize;
+                omega.set(r, c, omega.get(r, c) + vals[r * nnz + t]);
+            }
+        }
+        let want = gemm::at_b(&x, &omega);
+        let mut yt = Mat::zeros(n, l);
+        let mut ws = Workspace::new();
+        let mut ra = Pcg64::seed_from_u64(6);
+        left_sketch_apply(&x, SketchKind::SparseSign { nnz }, l, &mut ra, &mut yt, &mut ws);
+        assert!(yt.max_abs_diff(&want) < 1e-12, "left sparse-sign apply diverged");
+    }
+
+    #[test]
+    fn warm_two_sided_is_bit_identical_and_pool_stable() {
+        let x = low_rank(50, 40, 3, 7);
+        let opts = QbOptions::new(3).with_oversample(5).with_sketch(SketchKind::Srht);
+        let mut ws = Workspace::new();
+        let mut r1 = Pcg64::seed_from_u64(8);
+        let f1 = two_sided_with(&x, opts, &mut r1, &mut ws);
+        let (q1, b1, p1, c1) = (f1.q.clone(), f1.b.clone(), f1.p.clone(), f1.c.clone());
+        f1.recycle(&mut ws);
+        let pooled = ws.pooled();
+        let mut r2 = Pcg64::seed_from_u64(8);
+        let f2 = two_sided_with(&x, opts, &mut r2, &mut ws);
+        assert_eq!(f2.q, q1);
+        assert_eq!(f2.b, b1);
+        assert_eq!(f2.p, p1);
+        assert_eq!(f2.c, c1);
+        f2.recycle(&mut ws);
+        assert_eq!(ws.pooled(), pooled, "warm two-sided compression grew the pool");
+    }
+}

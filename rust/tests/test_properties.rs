@@ -12,10 +12,12 @@ use randnmf::nmf::mu::Mu;
 use randnmf::nmf::options::{NmfOptions, Regularization, UpdateOrder};
 use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
 use randnmf::nmf::transform::{Transform, TransformOptions, TransformScratch};
+use randnmf::nmf::twosided::TwoSidedHals;
 use randnmf::nmf::update_order::OrderState;
 use randnmf::prop_assert;
 use randnmf::sketch::blocked::{qb_blocked, qb_blocked_sparse, CscSource, MatSource};
 use randnmf::sketch::qb::{qb, QbOptions, SketchKind};
+use randnmf::sketch::srht;
 use randnmf::sketch::streaming::OnlineNmf;
 use randnmf::testing::forall;
 
@@ -784,6 +786,105 @@ fn prop_online_fit_matches_batch() {
         let batch = RandomizedHals::new(opts).fit(&x).map_err(|e| e.to_string())?;
         let eb = norms::relative_error(&x, &batch.model.w, &batch.model.h);
         prop_assert!((e1 - eb).abs() < 5e-2, "online err {e1} vs batch err {eb}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_srht_apply_matches_padded_wht_oracle() {
+    // The fast SRHT apply against an explicitly staged padded-WHT oracle,
+    // **bitwise**. The oracle evaluates the transform recursively
+    // (halves, then one stride-n/2 combine); the production kernel runs
+    // the iterative LSB-first butterflies — same per-element operation
+    // DAG, so outputs must agree bit for bit on these sub-KC
+    // single-threaded shapes (and the draw-order contract means a cloned
+    // RNG re-draws the exact tables).
+    fn recursive_wht(buf: &mut [f64]) {
+        let n = buf.len();
+        if n <= 1 {
+            return;
+        }
+        let h = n / 2;
+        let (lo, hi) = buf.split_at_mut(h);
+        recursive_wht(lo);
+        recursive_wht(hi);
+        for i in 0..h {
+            let x = lo[i];
+            let y = hi[i];
+            lo[i] = x + y;
+            hi[i] = x - y;
+        }
+    }
+    forall("srht apply == padded WHT oracle (bitwise)", 25, |g| {
+        let m = g.usize_in(1, 20);
+        let n = g.usize_in(1, 40);
+        let l = g.usize_in(1, 8.min(n));
+        let x = g.mat_gaussian(m, n);
+        let n_pad = srht::padded_len(n);
+        let mut ws = Workspace::new();
+        let mut y = Mat::zeros(m, l);
+        let mut rng = g.rng();
+        let mut rng_oracle = rng.clone();
+        srht::srht_sketch_apply(NmfInput::Dense(&x), l, &mut rng, &mut y, &mut ws);
+        // Oracle: re-draw the tables from the cloned RNG, then stage each
+        // sign-flipped zero-padded row and transform it recursively.
+        let mut signs = vec![0.0; n];
+        let mut samples = vec![0.0; l];
+        srht::fill_srht(&mut rng_oracle, n_pad, &mut signs, &mut samples);
+        let scale = 1.0 / (l as f64).sqrt();
+        let mut want = Mat::zeros(m, l);
+        let mut stage = vec![0.0; n_pad];
+        for i in 0..m {
+            stage.fill(0.0);
+            for (r, s) in stage[..n].iter_mut().enumerate() {
+                *s = x.get(i, r) * signs[r];
+            }
+            recursive_wht(&mut stage);
+            for t in 0..l {
+                want.set(i, t, stage[samples[t] as usize] * scale);
+            }
+        }
+        prop_assert!(
+            y == want,
+            "{m}x{n} l={l}: fast SRHT apply != recursive-WHT oracle (max diff {})",
+            y.max_abs_diff(&want)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_twosided_within_constant_factor_of_rhals() {
+    // The acceptance property for the two-sided solver: on noisy
+    // low-rank data its final relative error must stay within a constant
+    // factor of one-sided randomized HALS — the column-compressed W
+    // numerator replaces the exact X·Hᵀ, and with oversampling + power
+    // iterations the left projection's tail loss is of the same order as
+    // the right's (see docs/COMPRESSION.md).
+    forall("two-sided err ≤ C · one-sided err", 8, |g| {
+        let m = g.usize_in(30, 80);
+        let n = g.usize_in(25, 60);
+        let r = g.usize_in(1, 4.min(m.min(n)));
+        let mut x = g.mat_low_rank(m, n, r);
+        let noise = g.mat_gaussian(m, n).map(|v| v.abs());
+        x.axpy(1e-3, &noise);
+        let sketch = *g.choose(&[SketchKind::Uniform, SketchKind::Srht]);
+        let opts = NmfOptions::new(r)
+            .with_max_iter(60)
+            .with_tol(0.0)
+            .with_seed(g.usize_in(0, 1 << 30) as u64)
+            .with_oversample(8)
+            .with_power_iters(2)
+            .with_sketch(sketch);
+        let one = RandomizedHals::new(opts.clone()).fit(&x).map_err(|e| e.to_string())?;
+        let two = TwoSidedHals::new(opts).fit(&x).map_err(|e| e.to_string())?;
+        prop_assert!(two.model.w.is_nonneg() && two.model.h.is_nonneg(), "infeasible factors");
+        prop_assert!(
+            two.final_rel_err <= 3.0 * one.final_rel_err + 1e-6,
+            "{sketch:?}: twosided err {} vs rhals err {} (>3x)",
+            two.final_rel_err,
+            one.final_rel_err
+        );
         Ok(())
     });
 }

@@ -63,6 +63,9 @@ use randnmf::nmf::mu::{Mu, MuScratch};
 use randnmf::nmf::options::{NmfOptions, UpdateOrder};
 use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
 use randnmf::nmf::transform::{Transform, TransformOptions, TransformScratch};
+use randnmf::nmf::twosided::{TwoSidedHals, TwoSidedScratch};
+use randnmf::sketch::qb::{qb_into, QbOptions, SketchKind};
+use randnmf::sketch::srht::srht_sketch_apply;
 use randnmf::testing::fixtures::low_rank;
 
 /// Allocation count of one `fit_with` on an already-warm scratch (the
@@ -372,6 +375,67 @@ fn steady_state_iterations_do_not_allocate() {
                 n, 0,
                 "{label}: warm transform_with round {round} performed {n} heap \
                  allocations (the serving hot path must be allocation-free)"
+            );
+        }
+    }
+
+    // --- (i) SRHT sketch: a warm `qb_into` with the fast-Hadamard sketch
+    //     — sign/sample tables, padded staging row, FWHT, QR — draws
+    //     everything from the caller workspace and allocates exactly zero
+    //     once warm, and so does the bare `srht_sketch_apply` kernel ---
+    {
+        let srht_opts = QbOptions::new(4).with_oversample(6).with_sketch(SketchKind::Srht);
+        let l = srht_opts.sketch_width(x.rows(), x.cols());
+        let mut ws = Workspace::new();
+        let mut q = Mat::zeros(x.rows(), l);
+        let mut bm = Mat::zeros(l, x.cols());
+        let mut y = Mat::zeros(x.rows(), l);
+        for _ in 0..3 {
+            let mut rng = Pcg64::seed_from_u64(50);
+            qb_into(&x, srht_opts, &mut rng, &mut q, &mut bm, &mut ws);
+            srht_sketch_apply((&x).into(), l, &mut rng, &mut y, &mut ws);
+        }
+        for round in 0..3 {
+            let before = allocs();
+            let mut rng = Pcg64::seed_from_u64(50);
+            qb_into(&x, srht_opts, &mut rng, &mut q, &mut bm, &mut ws);
+            srht_sketch_apply((&x).into(), l, &mut rng, &mut y, &mut ws);
+            let n = allocs() - before;
+            assert_eq!(
+                n, 0,
+                "SRHT sketch: warm qb_into/apply round {round} performed {n} heap \
+                 allocations (the fast-Hadamard path must be allocation-free)"
+            );
+        }
+    }
+
+    // --- (j) two-sided fit: a warm `TwoSidedHals::fit_with` — both
+    //     compressions (right QB + left sketch, power iterations on each
+    //     side) and the full iteration loop — performs exactly zero heap
+    //     allocations on a reused `TwoSidedScratch` ---
+    for sketch in [SketchKind::Uniform, SketchKind::Srht] {
+        let solver = TwoSidedHals::new(
+            NmfOptions::new(4)
+                .with_max_iter(15)
+                .with_tol(0.0)
+                .with_seed(51)
+                .with_oversample(6)
+                .with_sketch(sketch),
+        );
+        let mut scratch = TwoSidedScratch::new();
+        for _ in 0..3 {
+            let fit = solver.fit_with(&x, &mut scratch).unwrap();
+            fit.recycle(&mut scratch.ws);
+        }
+        for round in 0..3 {
+            let before = allocs();
+            let fit = solver.fit_with(&x, &mut scratch).unwrap();
+            let n = allocs() - before;
+            fit.recycle(&mut scratch.ws);
+            assert_eq!(
+                n, 0,
+                "{sketch:?}: warm two-sided fit_with round {round} performed {n} heap \
+                 allocations (both compressions and the loop must be allocation-free)"
             );
         }
     }

@@ -69,6 +69,9 @@ use randnmf::nmf::mu::{Mu, MuScratch};
 use randnmf::nmf::options::NmfOptions;
 use randnmf::nmf::rhals::{RandomizedHals, RhalsScratch};
 use randnmf::nmf::transform::{Transform, TransformOptions, TransformScratch};
+use randnmf::nmf::twosided::{TwoSidedHals, TwoSidedScratch};
+use randnmf::sketch::qb::{qb_into, QbOptions, SketchKind};
+use randnmf::sketch::srht::srht_sketch_apply;
 use randnmf::testing::fixtures::low_rank;
 
 fn hals_fit_allocs(x: &Mat, iters: usize) -> u64 {
@@ -365,5 +368,71 @@ fn threaded_steady_state_iterations_do_not_allocate() {
             "serving path: warm threaded transform_with round {round} performed \
              {n} heap allocations (both thread-gates tripped)"
         );
+    }
+
+    // --- (i) SRHT sketch on the pool path: 500×300 pads to n_pad = 512,
+    //     so the FWHT flop estimate 2·500·512·9 ≈ 2²² clears the 2²⁰ gate
+    //     and the per-row transforms fan out onto `run_row_split`, staging
+    //     from each worker's persistent scratch — a warm `qb_into` with
+    //     the SRHT sketch (and the bare apply) must still allocate zero ---
+    {
+        assert!(
+            2 * x.rows() * 512 * 9 >= 1 << 20,
+            "shape must trip the FWHT threading gate"
+        );
+        let srht_opts = QbOptions::new(8).with_oversample(6).with_sketch(SketchKind::Srht);
+        let l = srht_opts.sketch_width(x.rows(), x.cols());
+        let mut q = Mat::zeros(x.rows(), l);
+        let mut bm = Mat::zeros(l, x.cols());
+        let mut y = Mat::zeros(x.rows(), l);
+        for _ in 0..3 {
+            let mut rng = Pcg64::seed_from_u64(50);
+            qb_into(&x, srht_opts, &mut rng, &mut q, &mut bm, &mut ws);
+            srht_sketch_apply((&x).into(), l, &mut rng, &mut y, &mut ws);
+        }
+        for round in 0..3 {
+            let before = allocs();
+            let mut rng = Pcg64::seed_from_u64(50);
+            qb_into(&x, srht_opts, &mut rng, &mut q, &mut bm, &mut ws);
+            srht_sketch_apply((&x).into(), l, &mut rng, &mut y, &mut ws);
+            let n = allocs() - before;
+            assert_eq!(
+                n, 0,
+                "SRHT sketch: warm threaded qb_into/apply round {round} performed \
+                 {n} heap allocations"
+            );
+        }
+    }
+
+    // --- (j) two-sided fit on the pool path: both compressions (right QB
+    //     + left sketch over the 500-row range) and the iteration loop's
+    //     big products (BᵀW̃, C·PᵀHᵀ, QᵀW) all fan out onto the pool, and
+    //     a warm `TwoSidedHals::fit_with` must still allocate exactly
+    //     zero on a reused `TwoSidedScratch` ---
+    for sketch in [SketchKind::Uniform, SketchKind::Srht] {
+        let solver = TwoSidedHals::new(
+            NmfOptions::new(8)
+                .with_max_iter(10)
+                .with_tol(0.0)
+                .with_seed(51)
+                .with_oversample(6)
+                .with_sketch(sketch),
+        );
+        let mut scratch = TwoSidedScratch::new();
+        for _ in 0..3 {
+            let fit = solver.fit_with(&x, &mut scratch).unwrap();
+            fit.recycle(&mut scratch.ws);
+        }
+        for round in 0..3 {
+            let before = allocs();
+            let fit = solver.fit_with(&x, &mut scratch).unwrap();
+            let n = allocs() - before;
+            fit.recycle(&mut scratch.ws);
+            assert_eq!(
+                n, 0,
+                "{sketch:?}: warm threaded two-sided fit_with round {round} \
+                 performed {n} heap allocations"
+            );
+        }
     }
 }
