@@ -43,7 +43,8 @@ fn main() {
                 format!("{:.5}", fit.final_rel_err),
                 format!("{:.2}", fit.elapsed_s),
             ]);
-            rows.push(format!("{algo},{},{:.6},{:.4}", init.name(), fit.final_rel_err, fit.elapsed_s));
+            let name = init.name();
+            rows.push(format!("{algo},{name},{:.6},{:.4}", fit.final_rel_err, fit.elapsed_s));
         }
     }
     print!("{}", table.render());

@@ -30,7 +30,11 @@ fn main() {
     let workers = randnmf::linalg::gemm::num_threads();
 
     for (panel, m, n) in [
-        ("a: tall-and-skinny", ((100_000.0 * s) as usize).max(800), ((5_000.0 * s) as usize).max(160)),
+        (
+            "a: tall-and-skinny",
+            ((100_000.0 * s) as usize).max(800),
+            ((5_000.0 * s) as usize).max(160),
+        ),
         ("b: fat", ((25_000.0 * s) as usize).max(400), ((25_000.0 * s) as usize).max(400)),
     ] {
         let r_true = 40.min(n / 4).max(4);

@@ -72,6 +72,9 @@ impl Bencher {
 pub fn keep<T>(value: T) -> T {
     // A volatile read of a stack byte defeats dead-code elimination of the
     // value's computation without perturbing timing measurably.
+    // SAFETY: `value` is a live stack local, so its first byte is valid
+    // for reads; read_volatile makes no aliasing or alignment claims
+    // beyond `*const u8`, and the value is returned untouched.
     unsafe {
         let b = &value as *const T as *const u8;
         std::ptr::read_volatile(b);

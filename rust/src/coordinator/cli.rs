@@ -34,14 +34,18 @@ impl Args {
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
-            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {s:?}")),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {s:?}")),
         }
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
-            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got {s:?}")),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {s:?}")),
         }
     }
 

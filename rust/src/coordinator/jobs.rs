@@ -174,8 +174,11 @@ pub struct Job {
 impl Job {
     pub fn from_config(cfg: &Config) -> Result<Job> {
         let solvers_raw = cfg.get_str("job", "solvers", "hals,rhals");
-        let solvers: Vec<String> =
-            solvers_raw.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+        let solvers: Vec<String> = solvers_raw
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
         anyhow::ensure!(!solvers.is_empty(), "no solvers configured");
         Ok(Job {
             dataset: dataset_from_config(cfg)?,

@@ -102,7 +102,10 @@ impl<'a> Parser<'a> {
     fn expect(&mut self, b: u8) -> Result<()> {
         match self.bump() {
             Some(x) if x == b => Ok(()),
-            other => bail!("expected {:?} at byte {}, got {:?}", b as char, self.pos, other.map(|c| c as char)),
+            other => {
+                let got = other.map(|c| c as char);
+                bail!("expected {:?} at byte {}, got {:?}", b as char, self.pos, got)
+            }
         }
     }
 
@@ -209,8 +212,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
             self.pos += 1;
         }
         let txt = std::str::from_utf8(&self.bytes[start..self.pos])?;

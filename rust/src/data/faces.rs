@@ -196,7 +196,8 @@ mod tests {
 
     #[test]
     fn shapes_and_nonnegativity() {
-        let spec = FacesSpec { height: 12, width: 10, n_images: 20, n_parts: 6, noise: 0.01, seed: 1 };
+        let spec =
+            FacesSpec { height: 12, width: 10, n_images: 20, n_parts: 6, noise: 0.01, seed: 1 };
         let d = generate(&spec);
         assert_eq!(d.x.shape(), (120, 20));
         assert_eq!(d.parts.shape(), (120, 6));
@@ -218,7 +219,8 @@ mod tests {
     #[test]
     fn effective_rank_close_to_parts() {
         // Spectrum should drop sharply after n_parts (+1 for illumination).
-        let spec = FacesSpec { height: 16, width: 14, n_images: 60, n_parts: 6, noise: 0.001, seed: 2 };
+        let spec =
+            FacesSpec { height: 16, width: 14, n_images: 60, n_parts: 6, noise: 0.001, seed: 2 };
         let d = generate(&spec);
         let svd = crate::linalg::svd::jacobi_svd(&d.x.transpose());
         let head: f64 = svd.s[..6].iter().map(|s| s * s).sum();
@@ -228,7 +230,8 @@ mod tests {
 
     #[test]
     fn perfect_recovery_scores_one() {
-        let spec = FacesSpec { height: 10, width: 10, n_images: 5, n_parts: 5, noise: 0.0, seed: 3 };
+        let spec =
+            FacesSpec { height: 10, width: 10, n_images: 5, n_parts: 5, noise: 0.0, seed: 3 };
         let d = generate(&spec);
         let score = part_recovery_score(&d.parts, &d.parts);
         assert!((score - 1.0).abs() < 1e-9);
@@ -240,7 +243,8 @@ mod tests {
 
     #[test]
     fn nmf_recovers_parts_better_than_random_basis() {
-        let spec = FacesSpec { height: 16, width: 14, n_images: 80, n_parts: 5, noise: 0.01, seed: 5 };
+        let spec =
+            FacesSpec { height: 16, width: 14, n_images: 80, n_parts: 5, noise: 0.01, seed: 5 };
         let d = generate(&spec);
         let fit = crate::nmf::hals::Hals::new(
             crate::nmf::options::NmfOptions::new(5).with_max_iter(200).with_seed(6),

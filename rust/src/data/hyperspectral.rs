@@ -182,7 +182,8 @@ mod tests {
 
     #[test]
     fn shapes_and_simplex() {
-        let d = generate(&HyperspectralSpec { bands: 20, side: 8, endmembers: 4, noise: 0.01, seed: 1 });
+        let spec = HyperspectralSpec { bands: 20, side: 8, endmembers: 4, noise: 0.01, seed: 1 };
+        let d = generate(&spec);
         assert_eq!(d.x.shape(), (20, 64));
         assert_eq!(d.endmembers.shape(), (20, 4));
         assert_eq!(d.abundances.shape(), (4, 64));
@@ -207,7 +208,8 @@ mod tests {
 
     #[test]
     fn nmf_recovers_endmembers() {
-        let d = generate(&HyperspectralSpec { bands: 30, side: 16, endmembers: 4, noise: 0.005, seed: 2 });
+        let spec = HyperspectralSpec { bands: 30, side: 16, endmembers: 4, noise: 0.005, seed: 2 };
+        let d = generate(&spec);
         let fit = crate::nmf::hals::Hals::new(
             crate::nmf::options::NmfOptions::new(4)
                 .with_max_iter(400)

@@ -52,6 +52,14 @@
 //! the workspace discipline a new sketch kind must follow — lives in
 //! `docs/COMPRESSION.md`.
 //!
+//! Both hot-path rules — plus the `SAFETY` audit over the pool's
+//! lifetime-erased dispatch and the dispatch-exhaustiveness tripwires
+//! over [`sketch::qb::SketchKind`] / `SolverKind` — are machine-checked:
+//! the `tools/randnmf-lint` workspace member lints the tree in CI
+//! (`cargo run -p randnmf-lint -- rust/src`), and loom/Miri/TSan jobs
+//! check the pool mailbox protocol ([`linalg::pool`]). Rules, annotation
+//! syntax, and the soundness matrix live in `docs/STATIC_ANALYSIS.md`.
+//!
 //! Inputs may be dense ([`linalg::mat::Mat`]), sparse CSR
 //! ([`linalg::sparse::CsrMat`]), or dual-storage sparse
 //! ([`linalg::sparse::SparseMat`] — CSR plus a lazily built CSC mirror

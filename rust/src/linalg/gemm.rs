@@ -120,6 +120,7 @@ impl Op<'_> {
 /// compile-time-known slice lengths, so the tile loops fully unroll and
 /// vectorize.
 #[inline(always)]
+// lint: zero-alloc
 fn micro_kernel(apanel: &[f64], bpanel: &[f64], acc: &mut [f64; MR * NR]) {
     for (ap, bp) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
         for r in 0..MR {
@@ -135,6 +136,7 @@ fn micro_kernel(apanel: &[f64], bpanel: &[f64], acc: &mut [f64; MR * NR]) {
 /// Pack `B[pc..pc+kc, jc..jc+nc]` (logical view) into `n_panels` `kc×NR`
 /// column panels, contiguous in micro-kernel consumption order,
 /// zero-padding the ragged last panel.
+// lint: zero-alloc
 fn pack_b_panels(
     b: Op<'_>,
     pc: usize,
@@ -161,6 +163,7 @@ fn pack_b_panels(
 /// Pack `A[i0+ic .. i0+ic+mc, pc..pc+kc]` (logical view) into `m_panels`
 /// `kc×MR` row panels, zero-padding the ragged last panel.
 #[allow(clippy::too_many_arguments)]
+// lint: zero-alloc
 fn pack_a_panels(
     a: Op<'_>,
     i0: usize,
@@ -192,6 +195,7 @@ fn pack_a_panels(
 /// The caller zeroes `c` before the first call; this routine only
 /// accumulates, which is what makes both the `KC` depth blocking and the
 /// inner-dimension-split threading correct.
+// lint: zero-alloc
 fn packed_gemm(
     a: Op<'_>,
     b: Op<'_>,
@@ -278,6 +282,7 @@ thread_local! {
 /// The strict lower triangle is left untouched (zeros from the caller);
 /// [`driver_gram`] mirrors it from the upper triangle in one pass, which
 /// also makes the result exactly symmetric.
+// lint: zero-alloc
 fn packed_gram(
     a: Op<'_>,
     b: Op<'_>,
@@ -353,6 +358,7 @@ fn packed_gram(
 /// output is tall (`matmul`, `a_bt`). Jobs run on the persistent pool
 /// (the caller is job 0); pack scratch comes from each worker's
 /// [`pool::WorkerScratch`], so warm dispatches allocate nothing.
+// lint: zero-alloc
 fn driver_row_split(
     a: Op<'_>,
     b: Op<'_>,
@@ -393,6 +399,7 @@ fn driver_row_split(
 /// Crate-visible because the CSR kernels ([`crate::linalg::sparse`])
 /// split their inner dimension on the same scaffolding (the pack-panel
 /// scratch arguments are simply unused there).
+// lint: zero-alloc
 pub(crate) fn inner_split_reduce(
     depth: usize,
     flops: usize,
@@ -442,6 +449,7 @@ pub(crate) fn inner_split_reduce(
 }
 
 /// Drive the packed engine with inner-dimension threading (`at_b`).
+// lint: zero-alloc
 fn driver_inner_split(
     a: Op<'_>,
     b: Op<'_>,
@@ -460,6 +468,7 @@ fn driver_inner_split(
 /// Drive the triangle-aware Gram sweep: [`inner_split_reduce`] over
 /// `packed_gram` on the symmetric `kdim×kdim` output (upper triangle
 /// only), then mirror the strict lower triangle in one pass.
+// lint: zero-alloc
 fn driver_gram(
     a: Op<'_>,
     b: Op<'_>,
@@ -496,6 +505,7 @@ fn mirror_upper(g: &mut Mat) {
 // ---------------------------------------------------------------------------
 
 /// `C = A·B` into `c` for `A (m×k)`, `B (k×n)`, `c (m×n)`.
+// lint: zero-alloc
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
     let (m, k) = a.shape();
     let (kb, n) = b.shape();
@@ -509,6 +519,7 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
 /// per-chunk contributions `Y += X_b·Ω_b` into one output). Same packed
 /// engine and threading; the only difference is that `c` is not zeroed
 /// first, which is sound because the packed core only ever accumulates.
+// lint: zero-alloc
 pub fn matmul_acc_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
     let (m, k) = a.shape();
     let (kb, n) = b.shape();
@@ -518,6 +529,7 @@ pub fn matmul_acc_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
 }
 
 /// `C = Aᵀ·B` into `c` for `A (m×k)`, `B (m×n)`, `c (k×n)`.
+// lint: zero-alloc
 pub fn at_b_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
     let (m, k) = a.shape();
     let (mb, n) = b.shape();
@@ -527,6 +539,7 @@ pub fn at_b_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
 }
 
 /// `C = A·Bᵀ` into `c` for `A (m×k)`, `B (n×k)`, `c (m×n)`.
+// lint: zero-alloc
 pub fn a_bt_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
@@ -542,6 +555,7 @@ pub fn a_bt_into(a: &Mat, b: &Mat, c: &mut Mat, ws: &mut Workspace) {
 /// triangle are computed (≈half the flops of the full `k×k` product) and
 /// the strict lower triangle is mirrored in one pass. Parallel over the
 /// (large) inner dimension `m`.
+// lint: zero-alloc
 pub fn gram_into(a: &Mat, g: &mut Mat, ws: &mut Workspace) {
     let (m, k) = a.shape();
     assert_eq!(g.shape(), (k, k), "gram_into: output must be {k}x{k}");
@@ -551,6 +565,7 @@ pub fn gram_into(a: &Mat, g: &mut Mat, ws: &mut Workspace) {
 /// Gram matrix `G = AAᵀ` into `g` for `A (k×n)`, `g (k×k)`. Same
 /// triangle-aware sweep as [`gram_into`], parallel over the (large) inner
 /// dimension `n`.
+// lint: zero-alloc
 pub fn gram_t_into(a: &Mat, g: &mut Mat, ws: &mut Workspace) {
     let (k, n) = a.shape();
     assert_eq!(g.shape(), (k, k), "gram_t_into: output must be {k}x{k}");
@@ -601,6 +616,7 @@ pub fn gram_t(a: &Mat) -> Mat {
 // ---------------------------------------------------------------------------
 
 #[inline(always)]
+// lint: zero-alloc
 fn saxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     // y += alpha * x ; written so LLVM auto-vectorizes.
     for (yi, xi) in y.iter_mut().zip(x.iter()) {
@@ -609,6 +625,7 @@ fn saxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
 }
 
 #[inline(always)]
+// lint: zero-alloc
 fn dot(a: &[f64], b: &[f64]) -> f64 {
     // Unrolled 4-way dot product; ~2x faster than the naive fold because it
     // breaks the serial FP dependency chain.
@@ -636,6 +653,7 @@ pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
 }
 
 /// Matrix–vector product into a caller-owned buffer (`y.len() == a.rows()`).
+// lint: zero-alloc
 pub fn matvec_into(a: &Mat, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.cols(), x.len());
     assert_eq!(a.rows(), y.len());
@@ -653,6 +671,7 @@ pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
 
 /// Transposed matrix–vector product into a caller-owned buffer
 /// (`y.len() == a.cols()`).
+// lint: zero-alloc
 pub fn matvec_t_into(a: &Mat, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.rows(), x.len());
     assert_eq!(a.cols(), y.len());

@@ -39,7 +39,8 @@ impl Mat {
 
     /// Build from a row-major data vector. Panics if the length mismatches.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
-        assert_eq!(data.len(), rows * cols, "Mat::from_vec: length {} != {rows}x{cols}", data.len());
+        let len = data.len();
+        assert_eq!(len, rows * cols, "Mat::from_vec: length {len} != {rows}x{cols}");
         Mat { rows, cols, data }
     }
 
@@ -114,6 +115,9 @@ impl Mat {
     #[inline(always)]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
+        // SAFETY: i < rows and j < cols (debug-asserted above; every caller
+        // iterates shapes taken from this Mat), so the row-major index
+        // i*cols + j is in bounds of the rows*cols backing vector.
         unsafe { *self.data.get_unchecked(i * self.cols + j) }
     }
 
@@ -121,6 +125,8 @@ impl Mat {
     #[inline(always)]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
+        // SAFETY: same bounds argument as `get` — i*cols + j < rows*cols,
+        // the exact length `from_vec`/`zeros` construct the buffer with.
         unsafe { *self.data.get_unchecked_mut(i * self.cols + j) = v }
     }
 
@@ -381,7 +387,8 @@ impl fmt::Debug for Mat {
         let show_rows = self.rows.min(6);
         for i in 0..show_rows {
             let show_cols = self.cols.min(8);
-            let row: Vec<String> = (0..show_cols).map(|j| format!("{:>10.4}", self.get(i, j))).collect();
+            let row: Vec<String> =
+                (0..show_cols).map(|j| format!("{:>10.4}", self.get(i, j))).collect();
             let ell = if self.cols > show_cols { ", ..." } else { "" };
             writeln!(f, "  [{}{}]", row.join(", "), ell)?;
         }

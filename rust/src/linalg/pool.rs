@@ -15,6 +15,10 @@
 //!   single-slot mailbox (`state` atomic + job pointer) the dispatcher
 //!   fills while the worker is idle. Publishing a job is one
 //!   release-store plus an `unpark`; no queue, no channel, no allocation.
+//!   The state machine itself lives in [`mailbox`] so the exact
+//!   transition code is also what the loom model checker exercises
+//!   (`RUSTFLAGS="--cfg loom" cargo test --release loom_`; see
+//!   `docs/STATIC_ANALYSIS.md`).
 //! * **Pre-partitioned ranges** — callers split their iteration space
 //!   *before* dispatch and pass one closure; job `j` of `njobs` computes
 //!   its own tile/row/depth range from `j`. The closure is shared by
@@ -38,13 +42,16 @@
 //! the single-threaded zero-allocation path of `tests/test_zero_alloc.rs`
 //! is untouched.
 
-use std::cell::{Cell, UnsafeCell};
+pub(crate) mod mailbox;
+
+use std::cell::Cell;
 use std::mem::transmute;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::thread::{self, Thread};
 use std::time::Duration;
+
+use self::mailbox::{Mailbox, Slot};
 
 /// Number of worker threads used by the threaded kernels (pool size is
 /// this minus one: the caller is always worker 0).
@@ -92,12 +99,6 @@ pub struct WorkerScratch {
     pub part: Vec<f64>,
 }
 
-/// Job mailbox states. IDLE → (dispatcher) READY → (worker) DONE →
-/// (dispatcher) IDLE.
-const IDLE: u8 = 0;
-const READY: u8 = 1;
-const DONE: u8 = 2;
-
 /// The type every dispatched job is erased to: `job(index, scratch)` with
 /// `index ∈ 0..njobs` (0 = the caller itself).
 type JobFn<'a> = &'a (dyn Fn(usize, &mut WorkerScratch) + Sync);
@@ -118,29 +119,25 @@ struct JobMsg {
 // while the dispatcher is blocked in `Session::run`; the pointee is Sync.
 unsafe impl Send for JobMsg {}
 
-/// One worker's mailbox + scratch. The `state` atomic carries the
-/// happens-before edges: the dispatcher's job write is published by the
-/// READY store and the worker's scratch writes by the DONE store.
+/// One worker's mailbox + payload slots. The [`Mailbox`] state word
+/// carries the happens-before edges: the dispatcher's job write is
+/// published by the READY store and the worker's scratch writes by the
+/// DONE store — see [`mailbox`] for the protocol and its loom model.
 struct WorkerCell {
-    state: AtomicU8,
-    job: UnsafeCell<Option<JobMsg>>,
-    scratch: UnsafeCell<WorkerScratch>,
+    mailbox: Mailbox,
+    job: Slot<Option<JobMsg>>,
+    scratch: Slot<WorkerScratch>,
     /// Set by the worker (before DONE) if the job panicked.
-    panicked: UnsafeCell<bool>,
+    panicked: Slot<bool>,
 }
-
-// SAFETY: the UnsafeCell fields are accessed under the state protocol
-// above (never concurrently by both sides), and dispatchers are
-// serialized by the pool mutex.
-unsafe impl Sync for WorkerCell {}
 
 impl WorkerCell {
     fn new() -> Self {
         WorkerCell {
-            state: AtomicU8::new(IDLE),
-            job: UnsafeCell::new(None),
-            scratch: UnsafeCell::new(WorkerScratch::default()),
-            panicked: UnsafeCell::new(false),
+            mailbox: Mailbox::new(),
+            job: Slot::new(None),
+            scratch: Slot::new(WorkerScratch::default()),
+            panicked: Slot::new(false),
         }
     }
 }
@@ -177,26 +174,28 @@ fn pool() -> &'static Pool {
     })
 }
 
+// lint: zero-alloc
 fn worker_loop(cell: &'static WorkerCell) {
     IN_POOL_CONTEXT.with(|f| f.set(true));
     loop {
-        while cell.state.load(Ordering::Acquire) != READY {
-            thread::park();
-        }
+        cell.mailbox.await_ready(thread::park);
         // SAFETY: READY (acquire) publishes the dispatcher's job write;
         // the dispatcher won't touch the cell again until we store DONE.
-        let msg = unsafe { (*cell.job.get()).take() }.expect("READY cell without a job");
-        {
-            // SAFETY: scratch is ours alone between READY and DONE.
-            let scratch = unsafe { &mut *cell.scratch.get() };
-            // SAFETY: the closure outlives the dispatch (dispatcher blocks).
-            let func = unsafe { &*msg.func };
-            if catch_unwind(AssertUnwindSafe(|| func(msg.index, scratch))).is_err() {
-                // SAFETY: same exclusivity as scratch.
-                unsafe { *cell.panicked.get() = true };
-            }
+        let msg = unsafe { cell.job.with_mut(|j| j.take()) }.expect("READY cell without a job");
+        // SAFETY: the closure behind `func` outlives the dispatch (the
+        // dispatcher blocks in `Session::run` until we store DONE).
+        let func = unsafe { &*msg.func };
+        // SAFETY: scratch is ours alone between READY and DONE.
+        let ok = unsafe {
+            cell.scratch.with_mut(|scratch| {
+                catch_unwind(AssertUnwindSafe(|| func(msg.index, scratch))).is_ok()
+            })
+        };
+        if !ok {
+            // SAFETY: same exclusivity as scratch.
+            unsafe { cell.panicked.with_mut(|p| *p = true) };
         }
-        cell.state.store(DONE, Ordering::Release);
+        cell.mailbox.complete();
         msg.caller.unpark();
     }
 }
@@ -244,12 +243,12 @@ pub fn trim_scratch() {
     let mut guard = p.dispatch.lock().unwrap_or_else(|e| e.into_inner());
     *guard = WorkerScratch::default();
     for w in &p.workers {
-        debug_assert_eq!(w.cell.state.load(Ordering::Relaxed), IDLE);
+        debug_assert_eq!(w.cell.mailbox.state_relaxed(), mailbox::IDLE);
         // SAFETY: we hold the dispatch lock and the worker is idle
         // (parked), so nothing else can touch its scratch; the previous
         // dispatcher's mutex unlock ordered the worker's writes before
         // our lock acquisition.
-        unsafe { *w.cell.scratch.get() = WorkerScratch::default() };
+        unsafe { w.cell.scratch.with_mut(|s| *s = WorkerScratch::default()) };
     }
 }
 
@@ -273,6 +272,7 @@ impl Session {
     // trait-object pointer the mailbox stores (sound because `run` joins
     // every worker before returning — see the SAFETY note below).
     #[allow(clippy::useless_transmute, clippy::transmutes_expressible_as_ptr_casts)]
+    // lint: zero-alloc
     pub fn run(&mut self, njobs: usize, job: JobFn<'_>) {
         assert!(njobs >= 1, "run: njobs must be >= 1");
         let nworkers = njobs - 1;
@@ -287,14 +287,17 @@ impl Session {
             unsafe { transmute(job) };
         let caller = thread::current();
         for (t, w) in self.pool.workers[..nworkers].iter().enumerate() {
-            debug_assert_eq!(w.cell.state.load(Ordering::Relaxed), IDLE);
+            debug_assert_eq!(w.cell.mailbox.state_relaxed(), mailbox::IDLE);
             // SAFETY: the cell is IDLE, so the worker is not reading it;
-            // the READY store below publishes this write.
+            // `publish` below release-stores READY over this write.
             unsafe {
-                *w.cell.job.get() =
-                    Some(JobMsg { func, index: t + 1, caller: caller.clone() });
+                w.cell.job.with_mut(|j| {
+                    // lint: allow(zero-alloc): Thread handle clone is an Arc
+                    // refcount bump, not a heap allocation.
+                    *j = Some(JobMsg { func, index: t + 1, caller: caller.clone() });
+                });
             }
-            w.cell.state.store(READY, Ordering::Release);
+            w.cell.mailbox.publish();
             w.thread.unpark();
         }
         self.active = nworkers;
@@ -308,25 +311,19 @@ impl Session {
 
         let mut worker_panicked = false;
         for w in &self.pool.workers[..nworkers] {
-            let mut spins = 0u32;
-            while w.cell.state.load(Ordering::Acquire) != DONE {
-                spins += 1;
-                if spins < 1 << 14 {
+            w.cell.mailbox.await_done(|attempt| {
+                if attempt < 1 << 14 {
                     std::hint::spin_loop();
                 } else {
                     // Workers unpark us on DONE; the timeout only guards
                     // against the permit being consumed by another cell.
                     thread::park_timeout(Duration::from_micros(100));
                 }
-            }
+            });
             // SAFETY: DONE (acquire) gives us back exclusive cell access.
-            unsafe {
-                if *w.cell.panicked.get() {
-                    worker_panicked = true;
-                    *w.cell.panicked.get() = false;
-                }
-            }
-            w.cell.state.store(IDLE, Ordering::Release);
+            let p = unsafe { w.cell.panicked.with_mut(|p| std::mem::replace(p, false)) };
+            worker_panicked |= p;
+            w.cell.mailbox.reclaim();
         }
 
         if let Err(payload) = caller_result {
@@ -346,7 +343,7 @@ impl Session {
         assert!((1..=self.active).contains(&j), "scratch: job {j} not in last run");
         // SAFETY: worker j-1 is IDLE (we observed DONE with acquire and
         // store IDLE ourselves), and `&mut self` prevents aliased access.
-        unsafe { &mut *self.pool.workers[j - 1].cell.scratch.get() }
+        unsafe { &mut *self.pool.workers[j - 1].cell.scratch.get_ptr() }
     }
 }
 
@@ -366,6 +363,7 @@ unsafe impl Send for SyncPtr {}
 /// CholeskyQR triangular solve, the sparse-sign sketch apply, and the
 /// HALS factor sweep. Callers handle `nchunks <= 1` themselves (the
 /// single-threaded path must not touch the pool).
+// lint: zero-alloc
 pub(crate) fn run_row_split(
     nchunks: usize,
     rows: usize,
@@ -394,7 +392,7 @@ pub(crate) fn run_row_split(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn runs_every_job_exactly_once() {

@@ -1,0 +1,353 @@
+//! The single-slot mailbox protocol of the worker pool, isolated so the
+//! exact transition code the real pool runs is also the code the `loom`
+//! model checks.
+//!
+//! A [`Mailbox`] is one worker's state word. The life of a dispatch is
+//!
+//! ```text
+//! IDLE --publish (dispatcher, Release)--> READY
+//! READY --complete (worker, Release)--> DONE
+//! DONE --reclaim (dispatcher, Release)--> IDLE
+//! ```
+//!
+//! with the two data-carrying edges observed through acquire loads
+//! ([`Mailbox::is_ready`] on the worker side, [`Mailbox::is_done`] on the
+//! dispatcher side). The payload itself — the job message and the
+//! worker-owned scratch — lives in [`Slot`]s next to the mailbox: plain
+//! `UnsafeCell`s whose exclusivity is *protocol-guaranteed*, never
+//! lock-guaranteed. The state word carries the happens-before edges: the
+//! dispatcher's job write is published by the READY store, the worker's
+//! scratch/flag writes by the DONE store.
+//!
+//! The wait loops are parameterized by a blocking closure so the real
+//! pool (spin-then-`park_timeout`) and the loom model (`loom`'s `park`)
+//! drive the *same* transition code and differ only in how they idle.
+//!
+//! Under `--cfg loom` the state word and the [`Slot`] exclusivity guard
+//! switch to `loom`'s permuted atomics; see `loom_tests` at the bottom
+//! and `docs/STATIC_ANALYSIS.md` for what the model does and does not
+//! cover (the vendored loom explores interleavings under sequential
+//! consistency — the weak-memory axis is covered by Miri and TSan).
+
+use std::cell::UnsafeCell;
+
+#[cfg(not(loom))]
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicU8, Ordering};
+
+/// Mailbox states. IDLE → (dispatcher) READY → (worker) DONE →
+/// (dispatcher) IDLE.
+pub(crate) const IDLE: u8 = 0;
+pub(crate) const READY: u8 = 1;
+pub(crate) const DONE: u8 = 2;
+
+/// One worker's job-state word. See the module docs for the protocol.
+pub(crate) struct Mailbox {
+    state: AtomicU8,
+}
+
+impl Mailbox {
+    pub(crate) fn new() -> Self {
+        Mailbox { state: AtomicU8::new(IDLE) }
+    }
+
+    /// Current state, relaxed — for debug assertions only (never use the
+    /// result to justify touching a [`Slot`]).
+    pub(crate) fn state_relaxed(&self) -> u8 {
+        self.state.load(Ordering::Relaxed)
+    }
+
+    /// Dispatcher edge IDLE → READY. The release store publishes every
+    /// slot write the dispatcher made while the cell was IDLE.
+    // lint: zero-alloc
+    pub(crate) fn publish(&self) {
+        self.state.store(READY, Ordering::Release);
+    }
+
+    /// Worker-side acquire probe: true once the dispatcher's READY store
+    /// — and therefore its job write — is visible.
+    // lint: zero-alloc
+    pub(crate) fn is_ready(&self) -> bool {
+        self.state.load(Ordering::Acquire) == READY
+    }
+
+    /// Worker edge READY → DONE. The release store publishes the worker's
+    /// scratch and panic-flag writes.
+    // lint: zero-alloc
+    pub(crate) fn complete(&self) {
+        self.state.store(DONE, Ordering::Release);
+    }
+
+    /// Dispatcher-side acquire probe: true once the worker's DONE store —
+    /// and therefore its scratch/flag writes — is visible.
+    // lint: zero-alloc
+    pub(crate) fn is_done(&self) -> bool {
+        self.state.load(Ordering::Acquire) == DONE
+    }
+
+    /// Dispatcher edge DONE → IDLE, after it has read back the results.
+    // lint: zero-alloc
+    pub(crate) fn reclaim(&self) {
+        self.state.store(IDLE, Ordering::Release);
+    }
+
+    /// Worker-side wait: block in `park` until the mailbox turns READY.
+    /// `park` must be a "wait for an unpark token" primitive — the
+    /// dispatcher unparks the worker right after [`publish`](Self::publish).
+    // lint: zero-alloc
+    pub(crate) fn await_ready(&self, mut park: impl FnMut()) {
+        while !self.is_ready() {
+            park();
+        }
+    }
+
+    /// Dispatcher-side join: wait until the mailbox turns DONE, calling
+    /// `backoff(attempt)` between probes (the real pool spins then
+    /// `park_timeout`s; the loom model parks).
+    // lint: zero-alloc
+    pub(crate) fn await_done(&self, mut backoff: impl FnMut(u32)) {
+        let mut attempt = 0u32;
+        while !self.is_done() {
+            attempt = attempt.wrapping_add(1);
+            backoff(attempt);
+        }
+    }
+}
+
+/// A payload cell whose exclusivity is guaranteed by the [`Mailbox`]
+/// protocol rather than a lock. Zero-cost over `UnsafeCell` in normal
+/// builds; under `--cfg loom` every access runs an atomic enter/exit
+/// guard, so the model checker fails loudly if any interleaving lets the
+/// dispatcher and the worker touch the same slot concurrently.
+pub(crate) struct Slot<T> {
+    value: UnsafeCell<T>,
+    /// 0 = vacant, 1 = mid-access. Loom builds only: two scheduling
+    /// points per access let the checker interleave a racing access
+    /// between them and trip the guard.
+    #[cfg(loom)]
+    accessing: AtomicU8,
+}
+
+// SAFETY: all access goes through `with_mut`/`get_ptr`, whose callers
+// must hold the protocol-defined exclusive phase (see the module docs);
+// the mailbox state word provides the cross-thread synchronization.
+unsafe impl<T: Send> Sync for Slot<T> {}
+
+impl<T> Slot<T> {
+    pub(crate) fn new(value: T) -> Self {
+        Slot {
+            value: UnsafeCell::new(value),
+            #[cfg(loom)]
+            accessing: AtomicU8::new(0),
+        }
+    }
+
+    /// Run `f` with exclusive access to the payload.
+    ///
+    /// # Safety
+    ///
+    /// The caller must be in the protocol phase that owns this slot
+    /// (dispatcher while IDLE/DONE, worker between READY and DONE), and
+    /// `f` must not recurse into the same slot.
+    // lint: zero-alloc
+    pub(crate) unsafe fn with_mut<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        #[cfg(loom)]
+        assert_eq!(
+            self.accessing.swap(1, Ordering::AcqRel),
+            0,
+            "Slot protocol violation: concurrent access"
+        );
+        // SAFETY: exclusivity is the caller's contract (checked under
+        // loom by the guard above).
+        let out = f(unsafe { &mut *self.value.get() });
+        #[cfg(loom)]
+        self.accessing.store(0, Ordering::Release);
+        out
+    }
+
+    /// Raw pointer to the payload for borrow-returning accessors
+    /// (`Session::scratch`). Dereferencing it has the same contract as
+    /// [`with_mut`](Self::with_mut) but bypasses the loom guard — keep it
+    /// out of modeled code paths.
+    pub(crate) fn get_ptr(&self) -> *mut T {
+        self.value.get()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_machine_round_trip() {
+        let m = Mailbox::new();
+        assert_eq!(m.state_relaxed(), IDLE);
+        assert!(!m.is_ready() && !m.is_done());
+        m.publish();
+        assert!(m.is_ready() && !m.is_done());
+        m.complete();
+        assert!(!m.is_ready() && m.is_done());
+        m.reclaim();
+        assert_eq!(m.state_relaxed(), IDLE);
+    }
+
+    #[test]
+    fn await_loops_observe_transitions() {
+        let m = Mailbox::new();
+        m.publish();
+        let mut parks = 0;
+        m.await_ready(|| parks += 1);
+        assert_eq!(parks, 0, "READY mailbox must not park");
+        m.complete();
+        let mut backoffs = 0;
+        m.await_done(|_| backoffs += 1);
+        assert_eq!(backoffs, 0, "DONE mailbox must not back off");
+    }
+
+    #[test]
+    fn slot_round_trips_payload() {
+        let s = Slot::new(41u64);
+        // SAFETY: single-threaded test — trivially exclusive.
+        let prev = unsafe { s.with_mut(|v| std::mem::replace(v, 42)) };
+        assert_eq!(prev, 41);
+        // SAFETY: as above.
+        assert_eq!(unsafe { s.with_mut(|v| *v) }, 42);
+    }
+}
+
+/// Exhaustive interleaving checks of one dispatch round, run under
+/// `RUSTFLAGS="--cfg loom" cargo test --release loom_`. The model is the
+/// mailbox protocol verbatim — the same [`Mailbox`] methods the real pool
+/// calls — with loom's `park`/`unpark` standing in for the OS calls.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// What the dispatcher hands the model worker: a payload to double
+    /// and the dispatcher's thread handle to unpark on completion —
+    /// mirroring `JobMsg` minus the erased closure pointer.
+    struct ModelJob {
+        input: u64,
+        caller: loom::thread::Thread,
+    }
+
+    struct ModelCell {
+        mailbox: Mailbox,
+        job: Slot<Option<ModelJob>>,
+        result: Slot<u64>,
+        panicked: Slot<bool>,
+    }
+
+    impl ModelCell {
+        fn new() -> Self {
+            ModelCell {
+                mailbox: Mailbox::new(),
+                job: Slot::new(None),
+                result: Slot::new(0),
+                panicked: Slot::new(false),
+            }
+        }
+    }
+
+    /// One full dispatch round — IDLE → READY → DONE → IDLE with
+    /// park/unpark on both edges — explored over every interleaving:
+    /// the worker may park before or after the dispatcher publishes, the
+    /// dispatcher may park before or after the worker completes, and the
+    /// slot guards verify no interleaving ever lets both sides touch the
+    /// job/result/panicked slots at once.
+    #[test]
+    fn loom_one_dispatch_round() {
+        loom::model(|| {
+            let cell = Arc::new(ModelCell::new());
+
+            let wcell = Arc::clone(&cell);
+            let worker = loom::thread::spawn(move || {
+                // Worker side of `worker_loop`: wait READY, take the
+                // job, run it, store DONE, unpark the dispatcher.
+                wcell.mailbox.await_ready(loom::thread::park);
+                // SAFETY: READY observed with acquire — the worker owns
+                // the slots until it stores DONE.
+                let job = unsafe { wcell.job.with_mut(|j| j.take()) }
+                    .expect("READY mailbox without a job");
+                // SAFETY: same ownership phase as the job slot.
+                unsafe { wcell.result.with_mut(|r| *r = job.input * 2) };
+                wcell.mailbox.complete();
+                job.caller.unpark();
+            });
+
+            // Dispatcher side of `Session::run`: write the job while the
+            // cell is IDLE, publish, unpark, join, read back, reclaim.
+            let me = loom::thread::current();
+            // SAFETY: the cell is IDLE — the worker does not touch the
+            // slots until it observes READY.
+            unsafe {
+                cell.job.with_mut(|j| *j = Some(ModelJob { input: 21, caller: me }));
+            }
+            cell.mailbox.publish();
+            worker.thread().unpark();
+
+            cell.mailbox.await_done(|_| loom::thread::park());
+            // SAFETY: DONE observed with acquire — the dispatcher owns
+            // the slots again.
+            let (result, panicked) = unsafe {
+                (cell.result.with_mut(|r| *r), cell.panicked.with_mut(|p| *p))
+            };
+            assert_eq!(result, 42, "worker result must be visible after DONE");
+            assert!(!panicked);
+            cell.mailbox.reclaim();
+            assert_eq!(cell.mailbox.state_relaxed(), IDLE);
+
+            worker.join().expect("model worker must not panic");
+        });
+    }
+
+    /// Two sequential rounds over the same cell: the reclaim edge must
+    /// hand the slots back cleanly so a second publish starts from the
+    /// same state as the first (the steady-state loop of the real pool).
+    #[test]
+    fn loom_two_rounds_reuse_cell() {
+        loom::model(|| {
+            let cell = Arc::new(ModelCell::new());
+
+            let wcell = Arc::clone(&cell);
+            let worker = loom::thread::spawn(move || {
+                // The steady-state worker loop body, twice: the second
+                // `await_ready` naturally spans the dispatcher's read-back
+                // and reclaim (the mailbox reads DONE, then IDLE, then
+                // READY again — `await_ready` parks through all of it).
+                for _ in 0..2 {
+                    wcell.mailbox.await_ready(loom::thread::park);
+                    // SAFETY: READY observed — worker ownership phase.
+                    let job = unsafe { wcell.job.with_mut(|j| j.take()) }
+                        .expect("READY mailbox without a job");
+                    // SAFETY: same ownership phase.
+                    unsafe { wcell.result.with_mut(|r| *r += job.input) };
+                    wcell.mailbox.complete();
+                    job.caller.unpark();
+                }
+            });
+
+            let mut total = 0u64;
+            for round in 0..2u64 {
+                let me = loom::thread::current();
+                // SAFETY: cell is IDLE (round 0) or reclaimed (round 1).
+                unsafe {
+                    cell.job.with_mut(|j| {
+                        *j = Some(ModelJob { input: round + 1, caller: me })
+                    });
+                }
+                cell.mailbox.publish();
+                worker.thread().unpark();
+                cell.mailbox.await_done(|_| loom::thread::park());
+                // SAFETY: DONE observed — dispatcher ownership phase.
+                total = unsafe { cell.result.with_mut(|r| *r) };
+                cell.mailbox.reclaim();
+            }
+            assert_eq!(total, 3, "both rounds' contributions must land");
+            worker.join().expect("model worker must not panic");
+        });
+    }
+}

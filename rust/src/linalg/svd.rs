@@ -258,8 +258,10 @@ mod tests {
         let mut rng2 = Pcg64::seed_from_u64(7);
         let svd = randomized_svd(&a, RsvdOptions::new(8), &mut rng2);
         let rec = svd.reconstruct();
+        let sdiag = Mat::from_fn(8, 8, |i, j| if i == j { svd.s[i] } else { 0.0 });
+        let sv = gemm::matmul(&sdiag, &svd.v.transpose());
         assert!(
-            relative_error_explicit(&a, &svd.u, &gemm::matmul(&Mat::from_fn(8, 8, |i, j| if i == j { svd.s[i] } else { 0.0 }), &svd.v.transpose())) < 1e-6
+            relative_error_explicit(&a, &svd.u, &sv) < 1e-6
                 || fro_norm(&rec.sub(&a)) / fro_norm(&a) < 1e-6
         );
     }

@@ -88,6 +88,8 @@ impl Workspace {
     /// [`Workspace::release_mat`] so the capacity is reused — this is how
     /// the sketch engine and the `fit_with` solver entry points keep whole
     /// decompositions allocation-free once warm.
+    // lint: transfers-buffers: checkout API — the matrix is handed to the caller and
+    // comes back through `release_mat`.
     pub fn acquire_mat(&mut self, rows: usize, cols: usize) -> crate::linalg::mat::Mat {
         crate::linalg::mat::Mat::from_vec(rows, cols, self.acquire_vec(rows * cols))
     }

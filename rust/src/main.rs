@@ -32,7 +32,11 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
 fn opt_specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "config", takes_value: true, help: "job config file (run)" },
-        OptSpec { name: "algo", takes_value: true, help: "solver: hals|rhals|mu|compressed-mu|rhals-xla" },
+        OptSpec {
+            name: "algo",
+            takes_value: true,
+            help: "solver: hals|rhals|mu|compressed-mu|rhals-xla",
+        },
         OptSpec { name: "rank", takes_value: true, help: "target rank k" },
         OptSpec { name: "max-iter", takes_value: true, help: "iteration cap" },
         OptSpec { name: "tol", takes_value: true, help: "projected-gradient tolerance (Eq. 27)" },
@@ -47,9 +51,21 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "out", takes_value: true, help: "output path (gen-data)" },
         OptSpec { name: "block", takes_value: true, help: "store column-block width" },
         OptSpec { name: "blocked", takes_value: false, help: "out-of-core QB compression" },
-        OptSpec { name: "artifacts-dir", takes_value: true, help: "artifact directory (artifacts)" },
-        OptSpec { name: "save-model", takes_value: true, help: "write fitted factors to this path (factorize)" },
-        OptSpec { name: "addr", takes_value: true, help: "listen address (serve), default 127.0.0.1:7878" },
+        OptSpec {
+            name: "artifacts-dir",
+            takes_value: true,
+            help: "artifact directory (artifacts)",
+        },
+        OptSpec {
+            name: "save-model",
+            takes_value: true,
+            help: "write fitted factors to this path (factorize)",
+        },
+        OptSpec {
+            name: "addr",
+            takes_value: true,
+            help: "listen address (serve), default 127.0.0.1:7878",
+        },
         OptSpec { name: "max-batch", takes_value: true, help: "dynamic batching cap (serve)" },
     ]
 }

@@ -71,6 +71,7 @@ pub enum SolverKind {
 }
 
 impl SolverKind {
+    // lint: dispatch(SolverKind)
     fn id(self) -> u8 {
         match self {
             SolverKind::Hals => 0,
@@ -80,6 +81,7 @@ impl SolverKind {
         }
     }
 
+    // lint: dispatch(SolverKind)
     fn from_id(id: u8) -> Option<SolverKind> {
         match id {
             0 => Some(SolverKind::Hals),
@@ -90,6 +92,7 @@ impl SolverKind {
         }
     }
 
+    // lint: dispatch(SolverKind)
     pub fn name(self) -> &'static str {
         match self {
             SolverKind::Hals => "hals",

@@ -65,6 +65,7 @@ pub(crate) const DEAD_EPS: f64 = 1e-12;
 /// persistent worker pool ([`crate::linalg::pool`]) — like the GEMM
 /// kernels, a threaded sweep performs no per-call thread spawning and no
 /// heap allocation.
+// lint: zero-alloc
 pub fn sweep_factor(
     fac: &mut Mat,
     num: &Mat,
@@ -89,6 +90,7 @@ pub fn sweep_factor(
     });
 }
 
+// lint: zero-alloc
 fn sweep_rows(
     fac: &mut [f64],
     num: &[f64],
@@ -123,6 +125,7 @@ fn sweep_rows(
 
 /// Convenience wrapper used by [`crate::nmf::model::NmfModel::transform`]:
 /// one sweep of the `H` subproblem in the paper's `k×n` orientation.
+// lint: zero-alloc
 pub fn update_h_sweep(h: &mut Mat, a: &Mat, s: &Mat, reg: Regularization, order: &[usize]) {
     // h: k×n, a = WᵀX : k×n → transpose into the tall-skinny layout.
     let mut ht = h.transpose();
@@ -228,6 +231,8 @@ impl Hals {
     /// at any thread count (verified by `tests/test_zero_alloc.rs` under
     /// `RANDNMF_THREADS=1` and `tests/test_zero_alloc_pool.rs` under
     /// `RANDNMF_THREADS=4`, dense and sparse input alike).
+    // lint: transfers-buffers: returns the model W/H in workspace-drawn storage
+    // (recycle the fit to hand them back); the want_pg arms duplicate two textual acquires.
     fn fit_blocked(&self, x: NmfInput<'_>, scratch: &mut HalsScratch) -> Result<NmfFit> {
         let o = &self.opts;
         let (m, n) = x.shape();

@@ -154,6 +154,7 @@ fn mean_of(x: &Mat) -> f64 {
 /// Workspace-drawn scaled nonnegative-Gaussian factor: `avg·|N(0,1)|`,
 /// filled in the same draw order as `gaussian_mat(..).map(..)` so seeds
 /// reproduce the seed implementation's initialization exactly.
+// lint: transfers-buffers: returns the initialized factor in workspace-drawn storage.
 fn random_factor(rows: usize, k: usize, avg: f64, rng: &mut Pcg64, ws: &mut Workspace) -> Mat {
     let mut f = ws.acquire_mat(rows, k);
     rng.fill_gaussian(f.as_mut_slice());

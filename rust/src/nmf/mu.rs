@@ -74,6 +74,8 @@ impl Mu {
     /// size `m×n` is ever materialized; the denominators (`Ht·S`, `W·V`)
     /// only ever touch the `k`-width factors. Requires `Init::Random`
     /// for sparse input ([`NmfOptions::validate_sparse`]).
+    // lint: transfers-buffers: returns the model W/H in workspace-drawn storage
+    // (recycle the fit to hand them back); the want_pg arms duplicate two textual acquires.
     pub fn fit_with<'a>(
         &self,
         x: impl Into<NmfInput<'a>>,

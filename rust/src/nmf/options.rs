@@ -240,6 +240,7 @@ impl NmfOptions {
     /// the whole point — trajectory prefixes are identical) and the
     /// checkpoint/resume paths and cadence themselves (where state is
     /// saved does not change the state).
+    // lint: dispatch(SketchKind)
     pub fn options_hash(&self) -> u64 {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         let mut mix = |v: u64| {

@@ -257,6 +257,9 @@ impl RandomizedHals {
     /// The compressed HALS loop proper, starting from the given iterate
     /// (shared by the cold- and warm-start entry points above).
     #[allow(clippy::too_many_arguments)]
+    // lint: transfers-buffers: returns H in workspace-drawn storage and releases the
+    // caller's Hᵀ in its place; the want_pg arms duplicate three textual acquires.
+    // lint: zero-alloc
     fn iterate_seeded(
         &self,
         factors: &QbFactors,
@@ -318,6 +321,8 @@ impl RandomizedHals {
             None
         };
 
+        // lint: allow(zero-alloc): empty Vec::new does not allocate; the
+        // trace only grows when tracing is enabled (cold path).
         let mut trace: Vec<TracePoint> = Vec::new();
         let mut pg0: Option<f64> = None;
         let mut pg_ratio = f64::NAN;
@@ -510,6 +515,7 @@ struct ColScratch {
 }
 
 impl ColScratch {
+    // lint: transfers-buffers: checkout constructor — `release` hands the buffers back.
     fn acquire(m: usize, l: usize, ws: &mut Workspace) -> Self {
         ColScratch {
             new_col: ws.acquire_vec(l),
@@ -529,6 +535,7 @@ impl ColScratch {
 /// `W̃(:,j)` (Eq. 20), project `W(:,j) = [QW̃(:,j) − β/denom]₊` (Eq. 21 with
 /// the ℓ1 shrink), and rotate back `W̃(:,j) = QᵀW(:,j)` (Eq. 22).
 #[allow(clippy::too_many_arguments)]
+// lint: zero-alloc
 fn per_column_projection(
     q: &Mat,
     w: &mut Mat,
@@ -575,6 +582,7 @@ fn per_column_projection(
 /// Batched projection: `W = [QW̃ − β/V_jj]₊` applied column-wise after the
 /// full unclamped sweep. `shrink` is caller-owned scratch (length grows to
 /// `k` on first use, then reused).
+// lint: zero-alloc
 fn apply_l1_shrink_and_clamp(
     w: &mut Mat,
     v: &Mat,

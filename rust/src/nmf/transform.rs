@@ -191,6 +191,8 @@ impl Transform {
     /// whose W-update is frozen (property-tested in
     /// `tests/test_properties.rs`, KKT stationarity included). Warm
     /// calls perform zero heap allocations.
+    // lint: transfers-buffers: returns H in workspace-drawn storage (release it via
+    // `Transform::recycle`); the accel arms duplicate one textual acquire.
     pub fn transform_with<'a>(
         &self,
         x: impl Into<NmfInput<'a>>,

@@ -167,6 +167,9 @@ impl TwoSidedHals {
 
     /// The two-sided compressed HALS loop proper.
     #[allow(clippy::too_many_arguments)]
+    // lint: transfers-buffers: returns H in workspace-drawn storage and releases the
+    // caller's Hᵀ in its place; the want_pg arms duplicate textual acquires.
+    // lint: zero-alloc
     fn iterate_seeded(
         &self,
         factors: &TwoSidedFactors,
@@ -221,6 +224,8 @@ impl TwoSidedHals {
             None
         };
 
+        // lint: allow(zero-alloc): empty Vec::new does not allocate; the
+        // trace only grows when tracing is enabled (cold path).
         let mut trace: Vec<TracePoint> = Vec::new();
         let mut pg0: Option<f64> = None;
         let mut pg_ratio = f64::NAN;

@@ -99,7 +99,11 @@ impl ArtifactRegistry {
             };
             entries.insert((op, key), entry);
         }
-        Ok(ArtifactRegistry { dir: dir.to_path_buf(), entries, cache: RefCell::new(HashMap::new()) })
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            entries,
+            cache: RefCell::new(HashMap::new()),
+        })
     }
 
     /// Default registry location (`$RANDNMF_ARTIFACTS` or `./artifacts`).

@@ -210,6 +210,9 @@ pub fn qb_blocked(
 /// subspace as [`super::qb::qb`] and, thanks to the fixed compute-chunk
 /// grid, bit-identical factors across block sizes (see the module docs).
 /// Recycle the returned factors with [`QbFactors::recycle`].
+// lint: transfers-buffers: returns QbFactors in workspace-drawn storage
+// (`QbFactors::recycle` hands Q/B back); the sketch arms duplicate textual acquires.
+// lint: dispatch(SketchKind)
 pub fn qb_blocked_with(
     src: &dyn ColumnBlockSource,
     opts: QbOptions,
@@ -580,6 +583,9 @@ pub fn qb_blocked_sparse(
 /// across block sizes for a fixed seed; when `n ≤ COMPUTE_COLS` they are
 /// bit-identical to the in-memory sparse decomposition. Recycle the
 /// returned factors with [`QbFactors::recycle`].
+// lint: transfers-buffers: returns QbFactors in workspace-drawn storage
+// (`QbFactors::recycle` hands Q/B back); the sketch arms duplicate textual acquires.
+// lint: dispatch(SketchKind)
 pub fn qb_blocked_sparse_with(
     src: &dyn SparseColumnBlockSource,
     opts: QbOptions,

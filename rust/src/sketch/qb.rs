@@ -204,6 +204,8 @@ pub fn qb(a: &Mat, opts: QbOptions, rng: &mut Pcg64) -> QbFactors {
 /// QB decomposition with factors and scratch drawn from `ws`. Recycle the
 /// returned factors with [`QbFactors::recycle`] to keep a warm workspace
 /// allocation-free across decompositions.
+// lint: transfers-buffers: returns QbFactors in workspace-drawn storage
+// (`QbFactors::recycle` hands Q/B back).
 pub fn qb_with(a: &Mat, opts: QbOptions, rng: &mut Pcg64, ws: &mut Workspace) -> QbFactors {
     let (m, n) = a.shape();
     let l = opts.sketch_width(m, n);
@@ -228,6 +230,7 @@ pub fn qb_with(a: &Mat, opts: QbOptions, rng: &mut Pcg64, ws: &mut Workspace) ->
 /// dense. The RNG draw order is identical for every input kind, so a
 /// sparse decomposition reproduces the densified one (bit-for-bit on
 /// small single-threaded shapes — see the `sparse` module docs).
+// lint: zero-alloc
 pub fn qb_into<'a>(
     a: impl Into<NmfInput<'a>>,
     opts: QbOptions,
@@ -288,6 +291,8 @@ pub fn qb_into<'a>(
 /// and `bench_perf_sparse` can time the sketch stages head-to-head. The
 /// RNG draw order depends only on `kind`, `n`, and `l` — never on the
 /// input representation.
+// lint: dispatch(SketchKind)
+// lint: zero-alloc
 pub fn sketch_apply<'a>(
     a: impl Into<NmfInput<'a>>,
     kind: SketchKind,

@@ -75,6 +75,7 @@ pub fn padded_len(n: usize) -> usize {
 /// indices in `[0, n_pad)` encoded as `f64` (exact for any realizable
 /// order). Draw order is signs first, then rejection-sampled indices —
 /// the contract the module docs pin down.
+// lint: zero-alloc
 pub fn fill_srht(rng: &mut Pcg64, n_pad: usize, signs: &mut [f64], samples: &mut [f64]) {
     debug_assert!(samples.len() <= n_pad, "srht: need l <= n_pad for distinct samples");
     for s in signs.iter_mut() {
@@ -99,6 +100,7 @@ pub fn fill_srht(rng: &mut Pcg64, n_pad: usize, signs: &mut [f64], samples: &mut
 /// stride first (LSB-first); a recursive halves-then-combine evaluation
 /// performs the identical per-element operation DAG, which is what makes
 /// the bitwise oracle in `test_properties.rs` well-defined.
+// lint: zero-alloc
 pub fn fwht(buf: &mut [f64]) {
     let n = buf.len();
     debug_assert!(n <= 1 || n.is_power_of_two(), "fwht: length {n} is not a power of two");
@@ -132,6 +134,7 @@ fn fwht_flops(rows: usize, n_pad: usize) -> usize {
 /// crosses the GEMM threading threshold; the staging buffer comes from
 /// the caller workspace (serial) or the persistent per-worker scratch
 /// (threaded), so warm calls allocate nothing in either regime.
+// lint: zero-alloc
 pub fn srht_sketch_apply(
     a: NmfInput<'_>,
     l: usize,
@@ -165,6 +168,7 @@ pub fn srht_sketch_apply(
 /// Rows `[i0, i1)` of the SRHT right apply; `yslice` holds exactly those
 /// output rows and `stage` is an `n_pad` scratch row.
 #[allow(clippy::too_many_arguments)]
+// lint: zero-alloc
 fn srht_rows(
     a: NmfInput<'_>,
     signs: &[f64],
@@ -219,6 +223,7 @@ fn srht_rows(
 /// padding, and bit-determinism contracts as [`srht_sketch_apply`] with
 /// `m` playing the coordinate-range role; pool-parallel over `yt`'s `n`
 /// output rows.
+// lint: zero-alloc
 pub fn srht_left_apply(x: &Mat, l: usize, rng: &mut Pcg64, yt: &mut Mat, ws: &mut Workspace) {
     let (m, n) = x.shape();
     assert_eq!(yt.shape(), (n, l), "srht left apply: yt must be {n}x{l}");
@@ -245,6 +250,7 @@ pub fn srht_left_apply(x: &Mat, l: usize, rng: &mut Pcg64, yt: &mut Mat, ws: &mu
 
 /// Output rows `[j0, j1)` of the SRHT left apply (data columns `j`).
 #[allow(clippy::too_many_arguments)]
+// lint: zero-alloc
 fn srht_cols(
     x: &Mat,
     signs: &[f64],

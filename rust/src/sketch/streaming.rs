@@ -169,6 +169,7 @@ pub struct StreamingSketch {
 impl StreamingSketch {
     /// A sketch for an `m`-row corpus; `seed` plays the role of the batch
     /// engines' RNG argument (same seed ⇒ same `Ω` ⇒ same factors).
+    // lint: dispatch(SketchKind)
     pub fn new(m: usize, opts: QbOptions, seed: u64) -> Self {
         assert!(m > 0, "streaming sketch: zero rows");
         let l = opts.sketch_width(m, usize::MAX);
@@ -261,6 +262,7 @@ impl StreamingSketch {
     /// sequence one batch draw over all `ncols` would have produced (the
     /// uniform/sign streams are element-sequential; the gaussian stream's
     /// Box–Muller spare lives in the RNG, so it survives the segmenting).
+    // lint: dispatch(SketchKind)
     fn extend_tables(&mut self, old: usize) {
         let new = self.ncols;
         let l = self.l;
@@ -330,6 +332,8 @@ impl StreamingSketch {
     /// this falls back to the batch engine on a pristine seed clone —
     /// still bitwise the batch answer ([`Self::post_draw_rng`] replays
     /// the matching draw).
+    // lint: transfers-buffers: returns QbFactors in workspace-drawn storage
+    // (`QbFactors::recycle` hands Q/B back); the finalize arms duplicate textual acquires.
     pub fn factors(&self, ws: &mut Workspace) -> Result<QbFactors> {
         anyhow::ensure!(self.ncols > 0, "streaming sketch: no columns pushed yet");
         let (m, n) = (self.m, self.ncols);
@@ -539,6 +543,7 @@ pub struct StreamingSparseSketch {
 impl StreamingSparseSketch {
     /// See [`StreamingSketch::new`]; the sparse path is not under the
     /// zero-allocation contract, so there is no internal workspace.
+    // lint: dispatch(SketchKind)
     pub fn new(m: usize, opts: QbOptions, seed: u64) -> Self {
         assert!(m > 0, "streaming sketch: zero rows");
         let l = opts.sketch_width(m, usize::MAX);
@@ -635,6 +640,7 @@ impl StreamingSparseSketch {
     }
 
     /// Identical draw-extension logic to the dense sketch's.
+    // lint: dispatch(SketchKind)
     fn extend_tables(&mut self, old: usize) {
         let new = self.ncols;
         let l = self.l;
@@ -688,6 +694,8 @@ impl StreamingSparseSketch {
 
     /// See [`StreamingSketch::factors`] — the sparse passes, bit-identical
     /// to [`qb_blocked_sparse_with`] on the concatenation.
+    // lint: transfers-buffers: returns QbFactors in workspace-drawn storage
+    // (`QbFactors::recycle` hands Q/B back); the finalize arms duplicate textual acquires.
     pub fn factors(&self, ws: &mut Workspace) -> Result<QbFactors> {
         anyhow::ensure!(self.ncols > 0, "streaming sketch: no columns pushed yet");
         let (m, n) = (self.m, self.ncols);

@@ -99,6 +99,8 @@ pub fn two_sided(x: &Mat, opts: QbOptions, rng: &mut Pcg64) -> TwoSidedFactors {
 /// [`two_sided`] with the factor storage and every temporary drawn from
 /// `ws`; recycle the result with [`TwoSidedFactors::recycle`] to keep a
 /// warm workspace allocation-free across decompositions.
+// lint: transfers-buffers: returns TwoSidedFactors in workspace-drawn storage
+// (`TwoSidedFactors::recycle` hands Q/B/P/C back).
 pub fn two_sided_with(
     x: &Mat,
     opts: QbOptions,

@@ -121,7 +121,8 @@ pub fn cp_hals(x: &Tensor3, opts: &CpOptions) -> Result<CpFit> {
     }
 
     let err = rel_err(x, &factors);
-    Ok(CpFit { factors, iters: opts.max_iter, elapsed_s: start.elapsed().as_secs_f64(), rel_err: err })
+    let elapsed_s = start.elapsed().as_secs_f64();
+    Ok(CpFit { factors, iters: opts.max_iter, elapsed_s, rel_err: err })
 }
 
 /// Randomized nonnegative CP-HALS: per-mode QB compression + compressed
@@ -185,7 +186,8 @@ pub fn cp_rhals(x: &Tensor3, opts: &CpOptions) -> Result<CpFit> {
     }
 
     let err = rel_err(x, &factors);
-    Ok(CpFit { factors, iters: opts.max_iter, elapsed_s: start.elapsed().as_secs_f64(), rel_err: err })
+    let elapsed_s = start.elapsed().as_secs_f64();
+    Ok(CpFit { factors, iters: opts.max_iter, elapsed_s, rel_err: err })
 }
 
 #[cfg(test)]

@@ -17,7 +17,12 @@ impl Tensor3 {
         Tensor3 { i, j, k, data: vec![0.0; i * j * k] }
     }
 
-    pub fn from_fn(i: usize, j: usize, k: usize, mut f: impl FnMut(usize, usize, usize) -> f64) -> Tensor3 {
+    pub fn from_fn(
+        i: usize,
+        j: usize,
+        k: usize,
+        mut f: impl FnMut(usize, usize, usize) -> f64,
+    ) -> Tensor3 {
         let mut t = Tensor3::zeros(i, j, k);
         for a in 0..i {
             for b in 0..j {

@@ -1,0 +1,677 @@
+//! Offline mini-loom: an exhaustive-interleaving model checker with the
+//! subset of the real `loom` crate's API that `randnmf`'s pool-mailbox
+//! model needs (`loom::model`, `loom::thread::{spawn, park, current,
+//! yield_now}`, `loom::sync::atomic::{AtomicU8, AtomicUsize, AtomicBool,
+//! Ordering}`).
+//!
+//! ## How it explores
+//!
+//! [`model`] runs the closure repeatedly. Each run is one *execution*: a
+//! cooperative schedule in which exactly one model thread is runnable at
+//! a time and every atomic operation, `park`, `unpark`, `spawn`, `join`
+//! and `yield_now` is a *scheduling point* where the scheduler picks the
+//! next thread to run. The first execution always picks choice 0; the
+//! sequence of (choice, alternatives) pairs is recorded, and subsequent
+//! executions replay a prefix and take the next untried branch —
+//! depth-first search over the whole scheduling tree. `model` returns
+//! once every branch has been explored, so for terminating models the
+//! check is exhaustive over thread interleavings.
+//!
+//! `park`/`unpark` follow `std::thread` permit semantics (an `unpark`
+//! before `park` is not lost) and a parked thread is *blocked* — removed
+//! from the runnable set — which both bounds the schedule tree and lets
+//! the checker detect missed-wakeup bugs: an execution in which every
+//! unfinished thread is parked or join-blocked panics with a deadlock
+//! report, and the scheduling prefix that produced it is deterministic,
+//! so the failure replays.
+//!
+//! ## What it does *not* model
+//!
+//! Atomics execute under **sequential consistency** regardless of the
+//! `Ordering` argument. The real loom tracks release/acquire causality
+//! and can catch missing-`Acquire` bugs; this mini-loom cannot — an
+//! interleaving it explores is always an SC interleaving. The repo
+//! covers the weak-memory axis with Miri (which *does* model
+//! release/acquire) and ThreadSanitizer in CI — see
+//! `docs/STATIC_ANALYSIS.md` for the matrix. Likewise there is no object
+//! tracking (`loom::cell`), no `loom::sync::Mutex`/`Condvar`, and no
+//! preemption bounding: the state space is explored in full, which is
+//! fine for the small protocol models this crate exists for.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Hard cap on executions explored per [`model`] call — a runaway-loop
+/// backstop (the mailbox models explore well under 10⁵), not a soundness
+/// bound: hitting it panics rather than silently passing.
+const MAX_EXECUTIONS: usize = 2_000_000;
+
+/// Hard cap on model threads alive at once within one execution.
+const MAX_THREADS: usize = 8;
+
+// ---------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------
+
+/// One recorded scheduling decision: which of `total` runnable threads
+/// was chosen at this point in the execution.
+struct Decision {
+    chosen: usize,
+    total: usize,
+}
+
+#[derive(Default)]
+struct ThreadState {
+    /// Eligible to be scheduled (not parked / join-blocked / finished).
+    runnable: bool,
+    /// Blocked in `park` without a pending permit.
+    parked: bool,
+    /// A stored `unpark` permit (std semantics: at most one).
+    permit: bool,
+    finished: bool,
+    /// Threads blocked in `join` on this one, to wake at finish.
+    joined_by: Vec<usize>,
+}
+
+impl ThreadState {
+    fn new_runnable() -> Self {
+        ThreadState { runnable: true, ..Default::default() }
+    }
+}
+
+struct SchedState {
+    threads: Vec<ThreadState>,
+    active: usize,
+    decisions: Vec<Decision>,
+    depth: usize,
+    /// First failure (assertion panic in a model thread, or deadlock).
+    /// Set once; every blocked thread wakes and aborts the execution.
+    failure: Option<String>,
+}
+
+struct Scheduler {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+impl Scheduler {
+    fn new(replay: Vec<Decision>) -> Self {
+        let mut threads = Vec::with_capacity(MAX_THREADS);
+        threads.push(ThreadState::new_runnable()); // main = thread 0
+        Scheduler {
+            state: Mutex::new(SchedState {
+                threads,
+                active: 0,
+                decisions: replay,
+                depth: 0,
+                failure: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Pick the next thread to run (recording or replaying the decision)
+    /// and mark it active. Caller holds the lock. Returns `false` when
+    /// every thread has finished (nothing left to schedule).
+    fn schedule_next(&self, st: &mut SchedState) -> bool {
+        let runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.runnable && !t.finished)
+            .map(|(i, _)| i)
+            .collect();
+        if runnable.is_empty() {
+            if st.threads.iter().all(|t| t.finished) {
+                self.cv.notify_all();
+                return false;
+            }
+            let blocked: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| !t.finished)
+                .map(|(i, _)| i)
+                .collect();
+            st.failure.get_or_insert_with(|| {
+                format!(
+                    "deadlock: threads {blocked:?} are all parked or join-blocked \
+                     with no runnable thread to wake them"
+                )
+            });
+            self.cv.notify_all();
+            return false;
+        }
+        let idx = if st.depth < st.decisions.len() {
+            let d = &st.decisions[st.depth];
+            debug_assert_eq!(
+                d.total,
+                runnable.len(),
+                "mini-loom replay divergence: the model is not deterministic \
+                 (same schedule prefix produced a different runnable set)"
+            );
+            d.chosen.min(runnable.len() - 1)
+        } else {
+            st.decisions.push(Decision { chosen: 0, total: runnable.len() });
+            0
+        };
+        st.depth += 1;
+        st.active = runnable[idx];
+        self.cv.notify_all();
+        true
+    }
+
+    /// A scheduling point for thread `me`: choose the next thread, then
+    /// block until `me` is active and runnable again. Panics (aborting
+    /// the execution) on recorded failure or detected deadlock.
+    fn switch(&self, me: usize) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(f) = &st.failure {
+            let msg = f.clone();
+            drop(st);
+            panic!("loom execution aborted: {msg}");
+        }
+        if !self.schedule_next(&mut st) {
+            if let Some(f) = &st.failure {
+                let msg = f.clone();
+                drop(st);
+                panic!("loom: {msg}");
+            }
+            return; // everything finished — let the caller unwind out
+        }
+        while st.active != me || !st.threads[me].runnable {
+            if let Some(f) = &st.failure {
+                let msg = f.clone();
+                drop(st);
+                panic!("loom execution aborted: {msg}");
+            }
+            if st.threads.iter().all(|t| t.finished) {
+                return;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Block until this (freshly spawned) thread is first scheduled.
+    fn wait_until_scheduled(&self, me: usize) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.active != me || !st.threads[me].runnable {
+            if let Some(f) = &st.failure {
+                let msg = f.clone();
+                drop(st);
+                panic!("loom execution aborted: {msg}");
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Mark `me` finished, wake joiners, record `failure` if the thread
+    /// panicked, and hand the schedule to the next runnable thread.
+    fn finish(&self, me: usize, failure: Option<String>) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.threads[me].finished = true;
+        st.threads[me].runnable = false;
+        let joiners = std::mem::take(&mut st.threads[me].joined_by);
+        for j in joiners {
+            st.threads[j].runnable = true;
+        }
+        if let Some(msg) = failure {
+            st.failure.get_or_insert(msg);
+            self.cv.notify_all();
+            return;
+        }
+        self.schedule_next(&mut st);
+    }
+
+    /// Main-thread epilogue: wait for every spawned thread to finish (or
+    /// for a failure), driving the schedule as needed.
+    fn main_done(&self) {
+        self.finish(0, None);
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while !st.threads.iter().all(|t| t.finished) {
+            if st.failure.is_some() {
+                return; // model() reports it after reaping OS threads
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-OS-thread binding to the current model execution
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static CURRENT: std::cell::RefCell<Option<(Arc<Scheduler>, usize)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn with_current<R>(f: impl FnOnce(&Arc<Scheduler>, usize) -> R) -> R {
+    CURRENT.with(|c| {
+        let b = c.borrow();
+        let (sched, id) = b
+            .as_ref()
+            .expect("loom primitive used outside loom::model (run under loom::model)");
+        f(sched, *id)
+    })
+}
+
+/// A scheduling point in the current thread (every atomic op routes
+/// through this).
+fn sched_point() {
+    with_current(|sched, me| sched.switch(me));
+}
+
+// ---------------------------------------------------------------------
+// model()
+// ---------------------------------------------------------------------
+
+/// Explore every thread interleaving of `f` (see the crate docs for the
+/// exact semantics and the SC caveat). Panics on the first failing
+/// execution — assertion failure in any model thread, or deadlock — with
+/// that execution's scheduling already deterministic for replay.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    let f = Arc::new(f);
+    let mut replay: Vec<Decision> = Vec::new();
+    let mut executions = 0usize;
+    loop {
+        executions += 1;
+        assert!(
+            executions <= MAX_EXECUTIONS,
+            "mini-loom: exceeded {MAX_EXECUTIONS} executions — model too large \
+             (add blocking structure or shrink the model)"
+        );
+
+        let sched = Arc::new(Scheduler::new(replay));
+        let os_handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched), 0)));
+        OS_HANDLES.with(|h| *h.borrow_mut() = Some(Arc::clone(&os_handles)));
+
+        let body = Arc::clone(&f);
+        let main_result = catch_unwind(AssertUnwindSafe(|| body()));
+        if main_result.is_ok() {
+            sched.main_done();
+        } else {
+            // Record the main thread's panic so blocked spawned threads
+            // wake up and abort instead of hanging the harness.
+            let mut st = sched.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.threads[0].finished = true;
+            st.threads[0].runnable = false;
+            st.failure.get_or_insert_with(|| "main model thread panicked".to_string());
+            sched.cv.notify_all();
+            drop(st);
+        }
+
+        // Reap this execution's OS threads (failure wakes blocked ones).
+        let handles = std::mem::take(&mut *os_handles.lock().unwrap_or_else(|e| e.into_inner()));
+        for h in handles {
+            let _ = h.join();
+        }
+        CURRENT.with(|c| *c.borrow_mut() = None);
+        OS_HANDLES.with(|h| *h.borrow_mut() = None);
+
+        if let Err(payload) = main_result {
+            resume_unwind(payload);
+        }
+        let (failure, decisions) = {
+            let mut st = sched.state.lock().unwrap_or_else(|e| e.into_inner());
+            (st.failure.take(), std::mem::take(&mut st.decisions))
+        };
+        if let Some(msg) = failure {
+            panic!("loom found a failing execution (#{executions}): {msg}");
+        }
+
+        // Depth-first advance: next untried branch, or done.
+        replay = decisions;
+        loop {
+            match replay.last_mut() {
+                None => return,
+                Some(d) if d.chosen + 1 < d.total => {
+                    d.chosen += 1;
+                    break;
+                }
+                Some(_) => {
+                    replay.pop();
+                }
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// The current execution's spawned-OS-thread handles (main thread
+    /// only), so `model` can reap them between executions.
+    static OS_HANDLES: std::cell::RefCell<
+        Option<Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>>,
+    > = const { std::cell::RefCell::new(None) };
+}
+
+// ---------------------------------------------------------------------
+// thread
+// ---------------------------------------------------------------------
+
+/// Mirror of `std::thread` for model code.
+pub mod thread {
+    use super::*;
+
+    /// Handle to a model thread (mirrors `std::thread::Thread`).
+    #[derive(Clone)]
+    pub struct Thread {
+        sched: Arc<Scheduler>,
+        id: usize,
+    }
+
+    impl Thread {
+        /// Store a permit / wake the target if parked, std semantics.
+        /// A scheduling point for the calling thread.
+        pub fn unpark(&self) {
+            {
+                let mut st = self.sched.state.lock().unwrap_or_else(|e| e.into_inner());
+                let t = &mut st.threads[self.id];
+                if t.parked {
+                    t.parked = false;
+                    t.runnable = true;
+                } else if !t.finished {
+                    t.permit = true;
+                }
+            }
+            sched_point();
+        }
+    }
+
+    /// The current model thread's handle.
+    pub fn current() -> Thread {
+        with_current(|sched, me| Thread { sched: Arc::clone(sched), id: me })
+    }
+
+    /// Block until unparked (or consume a pending permit). A scheduling
+    /// point either way. No spurious wakeups in the model.
+    pub fn park() {
+        let (sched, me) = with_current(|s, m| (Arc::clone(s), m));
+        {
+            let mut st = sched.state.lock().unwrap_or_else(|e| e.into_inner());
+            let t = &mut st.threads[me];
+            if t.permit {
+                t.permit = false;
+            } else {
+                t.parked = true;
+                t.runnable = false;
+            }
+        }
+        sched.switch(me);
+    }
+
+    /// A bare scheduling point.
+    pub fn yield_now() {
+        sched_point();
+    }
+
+    /// Handle to join a spawned model thread (mirrors
+    /// `std::thread::JoinHandle`).
+    pub struct JoinHandle<T> {
+        thread: Thread,
+        result: Arc<Mutex<Option<std::thread::Result<T>>>>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn thread(&self) -> &Thread {
+            &self.thread
+        }
+
+        /// Block until the thread finishes; returns its result (`Err` =
+        /// the thread panicked, as with `std::thread`).
+        pub fn join(self) -> std::thread::Result<T> {
+            let (sched, me) = with_current(|s, m| (Arc::clone(s), m));
+            let target = self.thread.id;
+            loop {
+                {
+                    let mut st = sched.state.lock().unwrap_or_else(|e| e.into_inner());
+                    if st.threads[target].finished {
+                        break;
+                    }
+                    st.threads[me].runnable = false;
+                    st.threads[target].joined_by.push(me);
+                }
+                sched.switch(me);
+            }
+            sched_point();
+            self.result
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+                .expect("loom JoinHandle: result already taken")
+        }
+    }
+
+    /// Spawn a model thread (backed by a real OS thread that only runs
+    /// when the model scheduler hands it the single execution token).
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let (sched, me) = with_current(|s, m| (Arc::clone(s), m));
+        let id = {
+            let mut st = sched.state.lock().unwrap_or_else(|e| e.into_inner());
+            assert!(
+                st.threads.len() < MAX_THREADS,
+                "mini-loom: more than {MAX_THREADS} model threads"
+            );
+            st.threads.push(ThreadState::new_runnable());
+            st.threads.len() - 1
+        };
+        let result: Arc<Mutex<Option<std::thread::Result<T>>>> = Arc::new(Mutex::new(None));
+        let result2 = Arc::clone(&result);
+        let sched2 = Arc::clone(&sched);
+        let os = std::thread::Builder::new()
+            .name(format!("loom-model-{id}"))
+            .spawn(move || {
+                CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched2), id)));
+                sched2.wait_until_scheduled(id);
+                let r = catch_unwind(AssertUnwindSafe(f));
+                let failure = r.as_ref().err().map(|p| {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "model thread panicked".to_string());
+                    format!("model thread {id} panicked: {msg}")
+                });
+                *result2.lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+                sched2.finish(id, failure);
+            })
+            .expect("spawning loom model thread");
+        OS_HANDLES.with(|h| {
+            if let Some(v) = h.borrow().as_ref() {
+                v.lock().unwrap_or_else(|e| e.into_inner()).push(os);
+            }
+        });
+        sched_point(); // spawning is a scheduling point
+        JoinHandle { thread: Thread { sched, id }, result }
+    }
+}
+
+// ---------------------------------------------------------------------
+// sync::atomic
+// ---------------------------------------------------------------------
+
+/// Mirror of `std::sync` for model code.
+pub mod sync {
+    pub use std::sync::Arc;
+
+    /// Model atomics: every operation is a scheduling point; all execute
+    /// with sequential consistency regardless of `Ordering` (crate docs).
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        use std::sync::atomic::Ordering::SeqCst;
+
+        use crate::sched_point;
+
+        macro_rules! model_atomic {
+            ($name:ident, $std:ident, $val:ty) => {
+                /// Model atomic — every op is a scheduling point; SC only.
+                #[derive(Default)]
+                pub struct $name(std::sync::atomic::$std);
+
+                impl $name {
+                    pub fn new(v: $val) -> Self {
+                        Self(std::sync::atomic::$std::new(v))
+                    }
+
+                    pub fn load(&self, _o: Ordering) -> $val {
+                        sched_point();
+                        self.0.load(SeqCst)
+                    }
+
+                    pub fn store(&self, v: $val, _o: Ordering) {
+                        sched_point();
+                        self.0.store(v, SeqCst)
+                    }
+
+                    pub fn swap(&self, v: $val, _o: Ordering) -> $val {
+                        sched_point();
+                        self.0.swap(v, SeqCst)
+                    }
+
+                    pub fn compare_exchange(
+                        &self,
+                        cur: $val,
+                        new: $val,
+                        _s: Ordering,
+                        _f: Ordering,
+                    ) -> Result<$val, $val> {
+                        sched_point();
+                        self.0.compare_exchange(cur, new, SeqCst, SeqCst)
+                    }
+                }
+            };
+        }
+
+        model_atomic!(AtomicU8, AtomicU8, u8);
+        model_atomic!(AtomicBool, AtomicBool, bool);
+
+        /// Model atomic — every op is a scheduling point; SC only.
+        #[derive(Default)]
+        pub struct AtomicUsize(std::sync::atomic::AtomicUsize);
+
+        impl AtomicUsize {
+            pub fn new(v: usize) -> Self {
+                Self(std::sync::atomic::AtomicUsize::new(v))
+            }
+
+            pub fn load(&self, _o: Ordering) -> usize {
+                sched_point();
+                self.0.load(SeqCst)
+            }
+
+            pub fn store(&self, v: usize, _o: Ordering) {
+                sched_point();
+                self.0.store(v, SeqCst)
+            }
+
+            pub fn fetch_add(&self, v: usize, _o: Ordering) -> usize {
+                sched_point();
+                self.0.fetch_add(v, SeqCst)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+    use std::collections::BTreeSet;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn explores_both_store_orders() {
+        // Two racing stores: across the explored executions the final
+        // value must take *both* possible values, proving the scheduler
+        // actually permutes and does not just run one interleaving.
+        let seen: Arc<Mutex<BTreeSet<u8>>> = Arc::new(Mutex::new(BTreeSet::new()));
+        let seen2 = Arc::clone(&seen);
+        super::model(move || {
+            let cell = Arc::new(AtomicU8::new(0));
+            let c1 = Arc::clone(&cell);
+            let c2 = Arc::clone(&cell);
+            let t1 = super::thread::spawn(move || c1.store(1, Ordering::SeqCst));
+            let t2 = super::thread::spawn(move || c2.store(2, Ordering::SeqCst));
+            t1.join().unwrap();
+            t2.join().unwrap();
+            seen2.lock().unwrap().insert(cell.load(Ordering::SeqCst));
+        });
+        let seen = seen.lock().unwrap();
+        assert_eq!(*seen, BTreeSet::from([1, 2]), "both orders must be explored");
+    }
+
+    #[test]
+    fn counts_every_increment_in_every_interleaving() {
+        super::model(|| {
+            let n = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let n = Arc::clone(&n);
+                    super::thread::spawn(move || {
+                        n.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    fn unpark_before_park_is_not_lost() {
+        super::model(|| {
+            super::thread::current().unpark(); // store the permit
+            super::thread::park(); // consume it — must not block
+        });
+    }
+
+    #[test]
+    fn park_then_unpark_round_trip() {
+        super::model(|| {
+            let me = super::thread::current();
+            let t = super::thread::spawn(move || me.unpark());
+            super::thread::park();
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn deadlock_is_detected() {
+        let res = std::panic::catch_unwind(|| {
+            super::model(|| {
+                super::thread::park(); // nobody will unpark us
+            });
+        });
+        assert!(res.is_err(), "a never-unparked park must fail the model");
+    }
+
+    #[test]
+    fn model_thread_panic_fails_the_model() {
+        let res = std::panic::catch_unwind(|| {
+            super::model(|| {
+                let t = super::thread::spawn(|| panic!("model assertion failed"));
+                let _ = t.join();
+            });
+        });
+        assert!(res.is_err(), "a panicking model thread must fail the model");
+    }
+
+    #[test]
+    fn join_returns_the_thread_result() {
+        super::model(|| {
+            let t = super::thread::spawn(|| 7u64);
+            assert_eq!(t.join().unwrap(), 7);
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! Failpoints tripwire conforming fixture: gated within 3 lines.
+
+#[cfg(feature = "failpoints")]
+pub fn trigger() {
+    crate::testing::failpoints::hit("qb_after_sketch");
+}
+
+pub fn always() -> u32 {
+    #[cfg(feature = "failpoints")]
+    crate::testing::failpoints::hit("qb_before_solve");
+    7
+}

@@ -1,0 +1,5 @@
+//! Failpoints tripwire violating fixture: symbol without a cfg gate.
+
+pub fn trigger() {
+    crate::testing::failpoints::hit("qb_after_sketch");
+}

@@ -1,0 +1,22 @@
+//! L1 conforming fixture: balanced, recycled, or explicitly waived.
+
+pub fn balanced(pool: &mut Pool) {
+    let a = pool.acquire_vec(8);
+    pool.release_vec(a);
+}
+
+pub fn bulk(pool: &mut Pool) {
+    let a = pool.acquire_mat(4, 4);
+    let b = pool.acquire_mat(4, 4);
+    pool.recycle(&mut [a, b]);
+}
+
+// lint: transfers-buffers: the factor matrices move out to the caller.
+pub fn mover(pool: &mut Pool) -> usize {
+    pool.acquire_mat(4, 4)
+}
+
+// lint: allow(acquire-release): ledger audited by the drop guard.
+pub fn guarded(pool: &mut Pool) -> usize {
+    pool.acquire_vec(3)
+}

@@ -1,0 +1,16 @@
+//! L1 violating fixture: acquires outnumber releases, no recycle.
+
+pub struct Pool;
+impl Pool {
+    pub fn acquire_mat(&mut self, _r: usize, _c: usize) -> usize {
+        0
+    }
+    pub fn release_mat(&mut self, _m: usize) {}
+}
+
+pub fn leaky(pool: &mut Pool) -> usize {
+    let a = pool.acquire_mat(4, 4);
+    let b = pool.acquire_mat(2, 2);
+    pool.release_mat(a);
+    b
+}

@@ -1,0 +1,13 @@
+//! L2 violating fixture: every banned allocation token in a zero-alloc fn.
+
+// lint: zero-alloc
+pub fn hot(xs: &[f64]) -> usize {
+    let a: Vec<f64> = Vec::new();
+    let b = vec![0.0; 4];
+    let c = xs.to_vec();
+    let d = c.clone();
+    let e = format!("{}", xs.len());
+    let f = Box::new(1.0);
+    let g = String::from("x");
+    a.len() + b.len() + d.len() + e.len() + g.len() + (*f as usize)
+}

@@ -1,0 +1,18 @@
+//! L2 conforming fixture: waivers honored, unannotated fns unchecked.
+
+// lint: zero-alloc
+pub fn hot(xs: &[f64], ws: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (x, w) in xs.iter().zip(ws.iter()) {
+        acc += x * w;
+    }
+    let t: Vec<f64> = Vec::new(); // lint: allow(zero-alloc): empty, no alloc
+    // lint: allow(zero-alloc): empty Vec::new does not allocate; the
+    // trace only grows on the cold path.
+    let u: Vec<f64> = Vec::new();
+    acc + (t.len() + u.len()) as f64
+}
+
+pub fn cold(xs: &[f64]) -> Vec<f64> {
+    xs.to_vec()
+}

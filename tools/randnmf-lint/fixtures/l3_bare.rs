@@ -1,0 +1,8 @@
+//! L3 violating fixture: unsafe with no SAFETY comment anywhere near.
+
+pub fn read_raw(p: *const f64) -> f64 {
+    let x = 1.0;
+    let y = 2.0;
+    let z = 3.0;
+    unsafe { *p + x + y + z }
+}

@@ -1,0 +1,34 @@
+//! L3 conforming fixture: every unsafe is covered by a SAFETY audit —
+//! same-line, block-above, through attributes, grouped unsafe impls,
+//! and a split statement within the two-code-line tolerance.
+
+pub fn same_line(p: *const f64) -> f64 {
+    unsafe { *p } // SAFETY: caller guarantees p is valid.
+}
+
+pub fn above(p: *const f64) -> f64 {
+    // SAFETY: caller guarantees p is valid for reads.
+    unsafe { *p }
+}
+
+pub fn through_attrs(p: *const f64) -> f64 {
+    // SAFETY: caller guarantees p is valid for reads.
+    #[allow(clippy::let_and_return)]
+    let v = unsafe { *p };
+    v
+}
+
+pub struct SendA(*mut f64);
+pub struct SendB(*mut f64);
+
+// SAFETY: both wrappers hand out the pointer only behind &mut self.
+unsafe impl Send for SendA {}
+unsafe impl Send for SendB {}
+
+pub fn mid_statement(p: *const f64) -> f64 {
+    // SAFETY: caller guarantees p is valid; the statement below is
+    // split across lines.
+    let value =
+        unsafe { *p };
+    value
+}

@@ -1,0 +1,16 @@
+//! L4 violating fixture: a dispatch surface missing a variant.
+
+pub enum Strategy {
+    Direct,
+    Blocked,
+    Streaming,
+}
+
+// lint: dispatch(Strategy)
+pub fn pick(s: &Strategy) -> u8 {
+    match s {
+        Strategy::Direct => 0,
+        Strategy::Blocked => 1,
+        _ => 2,
+    }
+}

@@ -1,0 +1,12 @@
+//! L4 violating fixture: a core kind enum with no registered surface.
+
+pub enum SketchKind {
+    Uniform,
+    Gaussian,
+    SparseSign,
+    Srht,
+}
+
+pub fn uses(k: &SketchKind) -> bool {
+    matches!(k, SketchKind::Srht)
+}

@@ -1,0 +1,14 @@
+//! L5 conforming fixture: brackets in strings/comments don't count.
+
+pub fn tricky<'a>(s: &'a str) -> &'a str {
+    // prose with an unmatched ( bracket and } brace
+    let _r = r#"raw with } and ) and ""#;
+    let _c = ')';
+    let _esc = '\'';
+    let msg = "string with ] and } and (";
+    if !msg.is_empty() && !s.is_empty() {
+        s
+    } else {
+        "fallback"
+    }
+}

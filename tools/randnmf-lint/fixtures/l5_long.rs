@@ -1,0 +1,6 @@
+//! L5 violating fixture: one line over 100 columns.
+
+pub fn long_line() -> u32 {
+    let x = 1; // xxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx
+    x
+}

@@ -1,0 +1,5 @@
+//! L5 violating fixture: an unbalanced bracket on the masked view.
+
+pub fn broken() {
+    let pair = (1, 2];
+}

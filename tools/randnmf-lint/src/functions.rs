@@ -1,0 +1,277 @@
+//! Function-region and enum extraction over the masked line view.
+//!
+//! Brace-depth tracking on masked text gives each `fn` a body line range
+//! with nested `fn` bodies excluded (each line belongs to the innermost
+//! open function). Trait method *signatures* (terminated by `;` at
+//! paren/bracket depth 0) produce no body. `// lint:` annotations are
+//! collected from the contiguous comment/attribute block immediately
+//! above the `fn` line.
+
+use crate::lexer::{find_word, Lexed};
+
+/// One extracted function region.
+pub struct FnInfo {
+    pub name: String,
+    /// 0-based line of the `fn` keyword.
+    pub sig_line: usize,
+    /// 0-based line indices of the body (innermost-ownership: nested fn
+    /// bodies belong to the nested fn, not the parent).
+    pub body: Vec<usize>,
+    /// `// lint: <annotation>` strings from the block above the fn.
+    pub annos: Vec<String>,
+}
+
+/// An enum declaration and its variant names.
+pub struct EnumInfo {
+    pub name: String,
+    /// 0-based line of the `enum` keyword.
+    pub sig_line: usize,
+    pub variants: Vec<String>,
+}
+
+/// Identifier starting at `s[at..]` (ASCII ident chars).
+pub(crate) fn ident_at(s: &str, at: usize) -> &str {
+    let b = s.as_bytes();
+    let mut end = at;
+    while end < b.len() && (b[end] == b'_' || b[end].is_ascii_alphanumeric()) {
+        end += 1;
+    }
+    &s[at..end]
+}
+
+/// `fn <name>` on a masked line → the name (first occurrence only,
+/// mirroring the validated prototype).
+pub fn fn_decl_name(masked_line: &str) -> Option<String> {
+    let mut base = 0;
+    while let Some(rel) = find_word(&masked_line[base..], "fn") {
+        let at = base + rel;
+        let rest = &masked_line[at + 2..];
+        let trimmed = rest.trim_start();
+        // `fn` must be followed by whitespace and a name — an `fn(...)`
+        // pointer type is not a declaration; keep scanning the line.
+        if trimmed.len() < rest.len() {
+            let name = ident_at(trimmed, 0);
+            if !name.is_empty() {
+                return Some(name.to_string());
+            }
+        }
+        base = at + 2;
+    }
+    None
+}
+
+/// Collect `lint:` annotations from the contiguous comment/attr block
+/// immediately above line `idx`.
+fn parse_annotations(lx: &Lexed, idx: usize) -> Vec<String> {
+    let mut annos = Vec::new();
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let com = lx.comments[j].trim();
+        let code = lx.masked[j].trim();
+        if !com.is_empty() && code.is_empty() {
+            if let Some(at) = com.find("lint:") {
+                annos.push(com[at + 5..].trim().to_string());
+            }
+            continue;
+        }
+        if code.starts_with("#[") || code.starts_with("#![") {
+            continue;
+        }
+        break;
+    }
+    annos
+}
+
+/// Walk the masked lines tracking brace depth; collect every fn region.
+pub fn extract_fns(lx: &Lexed) -> Vec<FnInfo> {
+    let mut fns: Vec<FnInfo> = Vec::new();
+    let mut stack: Vec<(FnInfo, usize)> = Vec::new(); // (fn, entry depth)
+    let mut depth = 0usize;
+    let mut pdepth = 0isize; // paren/bracket depth: `;` in `[u8; 8]` is no terminator
+    let mut pending: Option<(FnInfo, usize)> = None;
+
+    for (i, line) in lx.masked.iter().enumerate() {
+        if pending.is_none() {
+            if let Some(name) = fn_decl_name(line) {
+                let info = FnInfo {
+                    name,
+                    sig_line: i,
+                    body: Vec::new(),
+                    annos: parse_annotations(lx, i),
+                };
+                pending = Some((info, depth));
+            }
+        }
+        for ch in line.chars() {
+            match ch {
+                '(' | '[' => pdepth += 1,
+                ')' | ']' => pdepth -= 1,
+                '{' => {
+                    if let Some((_, d)) = &pending {
+                        if depth == *d {
+                            let (info, d) = pending.take().expect("pending fn");
+                            stack.push((info, d));
+                        }
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if let Some((_, d)) = stack.last() {
+                        if depth == *d {
+                            let (mut info, _) = stack.pop().expect("open fn");
+                            info.body.push(i);
+                            fns.push(info);
+                        }
+                    }
+                }
+                ';' => {
+                    if let Some((_, d)) = &pending {
+                        if depth == *d && pdepth == 0 {
+                            pending = None; // trait signature, no body
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some((info, _)) = stack.last_mut() {
+            info.body.push(i);
+        }
+    }
+    fns
+}
+
+/// Collect enum declarations and their variant names (multi-line enums;
+/// variant lines are `Ident,` / `Ident {` / `Ident(` / bare `Ident`).
+pub fn collect_enums(lx: &Lexed) -> Vec<EnumInfo> {
+    let mut enums = Vec::new();
+    let mut depth = 0usize;
+    // (name, decl line, entry depth, variants, body brace seen)
+    let mut cur: Option<(String, usize, usize, Vec<String>, bool)> = None;
+
+    for (i, line) in lx.masked.iter().enumerate() {
+        if cur.is_none() {
+            if let Some(at) = find_word(line, "enum") {
+                let rest = line[at + 4..].trim_start();
+                let name = ident_at(rest, 0);
+                if !name.is_empty() {
+                    cur = Some((name.to_string(), i, depth, Vec::new(), false));
+                }
+            }
+        }
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    if let Some((_, _, d, _, seen)) = &mut cur {
+                        if !*seen && depth == *d {
+                            *seen = true;
+                        }
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    let close = matches!(&cur, Some((_, _, d, _, true)) if depth == *d);
+                    if close {
+                        let (name, sig_line, _, variants, _) = cur.take().expect("open enum");
+                        enums.push(EnumInfo { name, sig_line, variants });
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some((_, _, _, variants, true)) = &mut cur {
+            if let Some(v) = variant_name(line) {
+                variants.push(v);
+            }
+        }
+    }
+    enums
+}
+
+/// `  Ident,` / `Ident {` / `Ident(` / bare `Ident` at line start (after
+/// whitespace), uppercase first letter — an enum variant line.
+fn variant_name(masked_line: &str) -> Option<String> {
+    let t = masked_line.trim_start();
+    let first = t.chars().next()?;
+    if !first.is_ascii_uppercase() {
+        return None;
+    }
+    let name = ident_at(t, 0);
+    let rest = t[name.len()..].trim_start();
+    match rest.chars().next() {
+        None | Some(',') | Some('{') | Some('(') => Some(name.to_string()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn extracts_fn_with_annotations_and_excludes_nested() {
+        let src = "\
+// lint: zero-alloc
+// lint: transfers-buffers: moves out
+#[inline]
+pub fn outer(x: usize) -> usize {
+    let a = [0u8; 8];
+    fn inner() -> usize {
+        99
+    }
+    inner() + x + a.len()
+}
+";
+        let fns = extract_fns(&lex(src));
+        assert_eq!(fns.len(), 2);
+        let inner = &fns[0];
+        let outer = &fns[1];
+        assert_eq!(inner.name, "inner");
+        assert_eq!(outer.name, "outer");
+        assert_eq!(outer.sig_line, 3);
+        // collected closest-first walking up from the signature
+        assert_eq!(
+            outer.annos,
+            vec!["transfers-buffers: moves out".to_string(), "zero-alloc".to_string()]
+        );
+        // the nested fn's body line (99) belongs to inner, not outer
+        assert!(inner.body.contains(&6));
+        assert!(!outer.body.contains(&6));
+    }
+
+    #[test]
+    fn trait_signatures_have_no_body() {
+        let src = "\
+trait T {
+    fn sig_only(&self, x: [u8; 8]) -> usize;
+    fn with_default(&self) -> usize {
+        1
+    }
+}
+";
+        let fns = extract_fns(&lex(src));
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "with_default");
+    }
+
+    #[test]
+    fn collects_enum_variants() {
+        let src = "\
+pub enum SketchKind {
+    /// docs
+    Uniform,
+    Gaussian,
+    SparseSign { nnz: usize },
+    Srht,
+}
+";
+        let enums = collect_enums(&lex(src));
+        assert_eq!(enums.len(), 1);
+        assert_eq!(enums[0].name, "SketchKind");
+        assert_eq!(enums[0].variants, vec!["Uniform", "Gaussian", "SparseSign", "Srht"]);
+    }
+}

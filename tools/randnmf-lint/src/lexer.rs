@@ -1,0 +1,266 @@
+//! Comment/string-aware line lexer.
+//!
+//! The lints never parse Rust properly — they work on three parallel
+//! per-line views of a source file:
+//!
+//! * **raw** — the line exactly as written (line-length checks, and the
+//!   failpoints guard, whose feature name lives inside a string literal);
+//! * **masked** — comments, string/char literals and their contents
+//!   blanked to spaces, so token searches and brace matching never match
+//!   inside prose or data;
+//! * **comments** — the concatenated comment text of the line (line
+//!   comments, doc comments, and block-comment interiors), which is where
+//!   `// lint:` annotations and `// SAFETY:` audits live.
+//!
+//! The state machine understands line comments, nested block comments,
+//! string literals with escapes, byte strings, raw strings (`r"…"`,
+//! `r#"…"#`, any hash depth), char literals, and the lifetime-vs-char
+//! ambiguity (`'a` vs `'a'`). It does not understand raw identifiers
+//! (`r#fn`) — the tree doesn't use them.
+
+/// Per-line views of one source file. All three vectors have the same
+/// length (one entry per line).
+pub struct Lexed {
+    pub raw: Vec<String>,
+    pub masked: Vec<String>,
+    pub comments: Vec<String>,
+}
+
+#[derive(PartialEq)]
+enum State {
+    Normal,
+    Line,
+    Block,
+    Str,
+    RawStr,
+    Char,
+}
+
+/// Lex `text` into per-line raw/masked/comment views.
+pub fn lex(text: &str) -> Lexed {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let raw: Vec<String> = text.split('\n').map(str::to_string).collect();
+
+    let mut masked = Vec::with_capacity(raw.len());
+    let mut comments = Vec::with_capacity(raw.len());
+    let mut line_out = String::new();
+    let mut line_com = String::new();
+
+    let mut state = State::Normal;
+    let mut depth = 0usize; // block-comment nesting
+    let mut hashes = 0usize; // raw-string hash count
+    let mut i = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+        if c == '\n' {
+            if state == State::Line {
+                state = State::Normal;
+            }
+            masked.push(std::mem::take(&mut line_out));
+            comments.push(std::mem::take(&mut line_com));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                if c == '/' && nxt == '/' {
+                    state = State::Line;
+                    line_out.push_str("  ");
+                    i += 2;
+                } else if c == '/' && nxt == '*' {
+                    state = State::Block;
+                    depth = 1;
+                    line_out.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    line_out.push(' ');
+                    i += 1;
+                } else if c == 'r' && (nxt == '"' || nxt == '#') {
+                    // raw string r"…" or r#"…"# (any hash depth)
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && chars[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        state = State::RawStr;
+                        hashes = h;
+                        for _ in i..=j {
+                            line_out.push(' ');
+                        }
+                        i = j + 1;
+                    } else {
+                        line_out.push(c);
+                        i += 1;
+                    }
+                } else if c == 'b' && nxt == '"' {
+                    state = State::Str;
+                    line_out.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    // lifetime ('a not followed by a closing quote) or char
+                    let is_lifetime = (nxt.is_alphanumeric() || nxt == '_')
+                        && !(i + 2 < n && chars[i + 2] == '\'');
+                    if is_lifetime {
+                        line_out.push(c);
+                        i += 1;
+                    } else {
+                        state = State::Char;
+                        line_out.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    line_out.push(c);
+                    i += 1;
+                }
+            }
+            State::Line => {
+                line_com.push(c);
+                line_out.push(' ');
+                i += 1;
+            }
+            State::Block => {
+                if c == '*' && nxt == '/' {
+                    depth -= 1;
+                    line_out.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        state = State::Normal;
+                    }
+                } else if c == '/' && nxt == '*' {
+                    depth += 1;
+                    line_out.push_str("  ");
+                    i += 2;
+                } else {
+                    line_com.push(c);
+                    line_out.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    line_out.push_str("  ");
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        state = State::Normal;
+                    }
+                    line_out.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && chars[j] == '#' && h < hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == hashes {
+                        state = State::Normal;
+                        for _ in 0..=h {
+                            line_out.push(' ');
+                        }
+                        i = j;
+                        continue;
+                    }
+                }
+                line_out.push(' ');
+                i += 1;
+            }
+            State::Char => {
+                if c == '\\' {
+                    line_out.push_str("  ");
+                    i += 2;
+                } else {
+                    if c == '\'' {
+                        state = State::Normal;
+                    }
+                    line_out.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    masked.push(line_out);
+    comments.push(line_com);
+    Lexed { raw, masked, comments }
+}
+
+/// True iff `word` occurs in `hay` delimited by non-identifier chars on
+/// both sides (the `\bword\b` of the design notes, without a regex dep).
+pub fn word_in(hay: &str, word: &str) -> bool {
+    find_word(hay, word).is_some()
+}
+
+/// Byte offset of the first word-boundary occurrence of `word` in `hay`.
+pub fn find_word(hay: &str, word: &str) -> Option<usize> {
+    let hb = hay.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(word) {
+        let at = from + rel;
+        let before_ok = at == 0 || !is_ident_byte(hb[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= hb.len() || !is_ident_byte(hb[end]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_line_and_block_comments() {
+        let l = lex("let x = 1; // unsafe here\n/* unsafe\n   block */ let y = 2;");
+        assert!(!l.masked[0].contains("unsafe"));
+        assert!(l.comments[0].contains("unsafe here"));
+        assert!(!l.masked[1].contains("unsafe"));
+        assert!(l.comments[1].contains("unsafe"));
+        assert!(l.masked[2].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn masks_strings_and_raw_strings() {
+        let l = lex("let s = \"vec! { )\"; let r = r#\"unsafe \" }\"#; done();");
+        assert!(!l.masked[0].contains("vec!"));
+        assert!(!l.masked[0].contains("unsafe"));
+        assert!(l.masked[0].contains("done();"));
+        // masking must not fabricate unbalanced brackets
+        let opens = l.masked[0].matches(['(', '{']).count();
+        let closes = l.masked[0].matches([')', '}']).count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) -> &'a str { x } // ok");
+        assert!(l.masked[0].contains("<'a>"));
+        assert!(l.masked[0].contains("&'a str"));
+        let l2 = lex("let c = 'x'; let esc = '\\''; after();");
+        assert!(!l2.masked[0].contains('x'));
+        assert!(l2.masked[0].contains("after();"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(word_in("x unsafe {", "unsafe"));
+        assert!(!word_in("make_unsafe_name()", "unsafe"));
+        assert!(!word_in("unsafely()", "unsafe"));
+        assert!(word_in("unsafe", "unsafe"));
+    }
+}

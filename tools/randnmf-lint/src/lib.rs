@@ -1,0 +1,81 @@
+//! randnmf-lint — repo-invariant static analysis for the randnmf tree.
+//!
+//! A self-contained, dependency-free text/token-level analyzer (no rustc
+//! internals; runs on the same pinned stable toolchain as the main
+//! crate). It enforces the invariants that used to live in a per-PR
+//! hand-audit checklist:
+//!
+//! * **L1** buffer-pool discipline (`acquire_*` / `release_*` / `recycle`)
+//! * **L2** zero-alloc hygiene in annotated warm-path fns
+//! * **L3** `// SAFETY:` comments on every `unsafe`
+//! * **L4** dispatch exhaustiveness over `SketchKind` / `SolverKind`,
+//!   plus the failpoints feature-gating tripwire
+//! * **L5** 100-column lines and comment/string-aware bracket balance
+//!
+//! Rules, rationale, and the annotation/waiver syntax are documented in
+//! `docs/STATIC_ANALYSIS.md`. Run it from the repo root:
+//!
+//! ```text
+//! cargo run -p randnmf-lint -- rust/src
+//! ```
+//!
+//! Exit status is 0 when the tree is clean, 1 with `path:line: [Lx] ...`
+//! findings on stdout otherwise, 2 on I/O errors.
+
+pub mod functions;
+pub mod lexer;
+pub mod lints;
+
+pub use lints::{Finding, SourceFile, BANNED, REQUIRED_DISPATCH};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Outcome of a lint run.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+/// Lint every `.rs` file under `roots` (each root may be a file or a
+/// directory). Deterministic: files are visited in sorted path order.
+pub fn run(roots: &[String]) -> Result<Report, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in roots {
+        let p = Path::new(root);
+        if p.is_file() {
+            files.push(p.to_path_buf());
+        } else if p.is_dir() {
+            walk(p, &mut files)?;
+        } else {
+            return Err(format!("{root}: not a file or directory"));
+        }
+    }
+    files.sort();
+    files.dedup();
+
+    let mut parsed: Vec<SourceFile> = Vec::with_capacity(files.len());
+    for path in &files {
+        let text = fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        parsed.push(SourceFile::parse(&path.display().to_string(), &text));
+    }
+    Ok(Report { findings: lints::lint(&parsed), files_scanned: files.len() })
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        entries.push(entry.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,595 @@
+//! The lint passes.
+//!
+//! Each pass works on the [`Lexed`] views plus the extracted fn/enum
+//! regions; none of them parse Rust properly. The rules (and their
+//! waiver annotations) are documented in `docs/STATIC_ANALYSIS.md`:
+//!
+//! * **L1** — workspace discipline: a fn that `acquire_mat`/`acquire_vec`s
+//!   more than it `release_*`s, with no `recycle(...)` bulk return, leaks
+//!   pool buffers. Waive with `// lint: transfers-buffers: <why>` (the
+//!   buffers move out on purpose) or `// lint: allow(acquire-release): <why>`.
+//! * **L2** — zero-alloc hygiene: fns annotated `// lint: zero-alloc` must
+//!   not contain the banned allocation tokens. Waive a single line with a
+//!   trailing `// lint: allow(zero-alloc): <why>` comment (or the same on
+//!   comment-only lines immediately above it).
+//! * **L3** — every `unsafe` must be covered by a `SAFETY` comment on the
+//!   same line, or in the contiguous comment/attribute block above it.
+//! * **L4** — dispatch exhaustiveness: a fn annotated
+//!   `// lint: dispatch(EnumName)` must mention every variant of that
+//!   enum in its body, and the core kind enums (`SketchKind`,
+//!   `SolverKind`) must each have at least one registered surface.
+//!   Also the failpoints tripwire: outside `failpoints.rs`, the
+//!   `failpoints` symbol must sit within 3 lines of a
+//!   `cfg(feature = "failpoints")` gate.
+//! * **L5** — raw lines at most 100 columns; brackets balanced on the
+//!   masked view (so strings/comments can't fake or hide imbalance).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::functions::{collect_enums, extract_fns, ident_at, EnumInfo, FnInfo};
+use crate::lexer::{find_word, lex, word_in, Lexed};
+
+/// Tokens banned inside `// lint: zero-alloc` fns. Substring matches,
+/// mirroring the warm-path audit checklist these lints replace.
+pub const BANNED: [&str; 7] =
+    ["Vec::new", "vec!", ".to_vec()", ".clone()", "format!", "Box::new", "String::from"];
+
+/// Enums that must have at least one registered dispatch surface when
+/// they appear in the scanned tree: a refactor that renames or re-homes
+/// them must re-register its match sites, not silently drop the check.
+pub const REQUIRED_DISPATCH: [&str; 2] = ["SketchKind", "SolverKind"];
+
+/// One lint finding. `line` is 1-based (editor-clickable `path:line`).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.code, self.message)
+    }
+}
+
+/// A parsed source file, ready to lint.
+pub struct SourceFile {
+    pub path: String,
+    pub lx: Lexed,
+    pub fns: Vec<FnInfo>,
+    pub enums: Vec<EnumInfo>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> Self {
+        let lx = lex(text);
+        let fns = extract_fns(&lx);
+        let enums = collect_enums(&lx);
+        SourceFile { path: path.to_string(), lx, fns, enums }
+    }
+}
+
+/// Run every pass over the parsed files; findings come back sorted by
+/// (path, line, code, message) and deduplicated.
+pub fn lint(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings: Vec<Finding> = Vec::new();
+    // name -> (file index, enum index); later declarations shadow earlier
+    // ones, which only matters if two scanned files declare the same enum.
+    let mut enums: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    // (file index, fn index, target enum name)
+    let mut surfaces: Vec<(usize, usize, String)> = Vec::new();
+
+    for (fi, file) in files.iter().enumerate() {
+        for (ei, e) in file.enums.iter().enumerate() {
+            enums.insert(e.name.as_str(), (fi, ei));
+        }
+    }
+    for (fi, file) in files.iter().enumerate() {
+        lint_file(file, fi, &mut findings, &mut surfaces);
+    }
+
+    // L4 dispatch resolution: every registered surface must mention every
+    // variant of its enum somewhere in the fn body.
+    for (fi, fni, ename) in &surfaces {
+        let file = &files[*fi];
+        let f = &file.fns[*fni];
+        let Some(&(efi, ei)) = enums.get(ename.as_str()) else {
+            findings.push(Finding {
+                path: file.path.clone(),
+                line: f.sig_line + 1,
+                code: "L4",
+                message: format!("dispatch({ename}): enum not found in tree"),
+            });
+            continue;
+        };
+        let body: String = f
+            .body
+            .iter()
+            .map(|&ln| file.lx.masked[ln].as_str())
+            .collect::<Vec<_>>()
+            .join("\n");
+        for v in &files[efi].enums[ei].variants {
+            if !word_in(&body, v) {
+                findings.push(Finding {
+                    path: file.path.clone(),
+                    line: f.sig_line + 1,
+                    code: "L4",
+                    message: format!("fn {}: missing {ename}::{v}", f.name),
+                });
+            }
+        }
+    }
+    // L4 minimum-surface tripwire for the core kind enums.
+    for name in REQUIRED_DISPATCH {
+        if let Some(&(efi, ei)) = enums.get(name) {
+            if !surfaces.iter().any(|(_, _, e)| e.as_str() == name) {
+                findings.push(Finding {
+                    path: files[efi].path.clone(),
+                    line: files[efi].enums[ei].sig_line + 1,
+                    code: "L4",
+                    message: format!(
+                        "enum {name}: no registered dispatch surface \
+                         (annotate one with `// lint: dispatch({name})`)"
+                    ),
+                });
+            }
+        }
+    }
+
+    findings.sort();
+    findings.dedup();
+    findings
+}
+
+fn lint_file(
+    file: &SourceFile,
+    fi: usize,
+    findings: &mut Vec<Finding>,
+    surfaces: &mut Vec<(usize, usize, String)>,
+) {
+    let path = &file.path;
+    let lx = &file.lx;
+    let report = |findings: &mut Vec<Finding>, line: usize, code: &'static str, message: String| {
+        findings.push(Finding { path: path.clone(), line: line + 1, code, message });
+    };
+
+    // ---- L5a: line length (raw text — what the reader actually sees).
+    for (i, line) in lx.raw.iter().enumerate() {
+        let cols = line.chars().count();
+        if cols > 100 {
+            report(findings, i, "L5", format!("line exceeds 100 columns ({cols})"));
+        }
+    }
+
+    // ---- L5b: bracket balance on the masked view. One report per file,
+    // then stop — everything after a mismatch is noise.
+    let mut stack: Vec<(char, usize)> = Vec::new();
+    let mut broken = false;
+    'outer: for (i, line) in lx.masked.iter().enumerate() {
+        for ch in line.chars() {
+            match ch {
+                '(' | '[' | '{' => stack.push((ch, i)),
+                ')' | ']' | '}' => {
+                    let want = match ch {
+                        ')' => '(',
+                        ']' => '[',
+                        _ => '{',
+                    };
+                    if stack.last().map(|&(c, _)| c) != Some(want) {
+                        report(findings, i, "L5", format!("unbalanced bracket '{ch}'"));
+                        broken = true;
+                        break 'outer;
+                    }
+                    stack.pop();
+                }
+                _ => {}
+            }
+        }
+    }
+    if !broken {
+        if let Some(&(ch, i)) = stack.first() {
+            report(findings, i, "L5", format!("bracket '{ch}' never closed"));
+        }
+    }
+
+    // ---- L3: unsafe audit.
+    for (i, line) in lx.masked.iter().enumerate() {
+        if !word_in(line, "unsafe") {
+            continue;
+        }
+        if lx.comments[i].contains("SAFETY") {
+            continue;
+        }
+        // Walk upward: through the contiguous comment/attribute chain,
+        // other one-line `unsafe impl ... {}` lines (one comment may cover
+        // a group), and up to 2 plain code lines (the `unsafe` may sit
+        // mid-statement after a line break).
+        let mut ok = false;
+        let mut code_skips = 2;
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let com = lx.comments[j].trim();
+            let code = lx.masked[j].trim();
+            if !com.is_empty() && (com.contains("SAFETY") || com.contains("# Safety")) {
+                ok = true;
+                break;
+            }
+            if !com.is_empty() && code.is_empty() {
+                continue;
+            }
+            if code.starts_with("#[") || code.starts_with("#![") {
+                continue;
+            }
+            if word_in(code, "unsafe") && code.ends_with("{}") {
+                continue;
+            }
+            if !code.is_empty() && code_skips > 0 {
+                code_skips -= 1;
+                continue;
+            }
+            break;
+        }
+        if !ok {
+            report(findings, i, "L3", "unsafe not preceded by a SAFETY comment".to_string());
+        }
+    }
+
+    // ---- Failpoints tripwire (filed under L4). The symbol is detected on
+    // MASKED text (doc-comment mentions don't count); the guard is
+    // detected on RAW text (the feature name lives inside a string
+    // literal, which masking blanks).
+    if !path.ends_with("failpoints.rs") {
+        let guard = "cfg(feature = \"failpoints\")";
+        for (i, line) in lx.masked.iter().enumerate() {
+            if !word_in(line, "failpoints") {
+                continue;
+            }
+            let lo = i.saturating_sub(3);
+            if !lx.raw[lo..=i].iter().any(|r| r.contains(guard)) {
+                report(
+                    findings,
+                    i,
+                    "L4",
+                    "failpoints symbol not cfg-gated within 3 lines".to_string(),
+                );
+            }
+        }
+    }
+
+    // ---- Per-fn lints.
+    for (fni, f) in file.fns.iter().enumerate() {
+        // L1 workspace discipline: acquires balanced by releases/recycle.
+        let mut acq = 0usize;
+        let mut rel = 0usize;
+        let mut rec = 0usize;
+        for &ln in &f.body {
+            // Don't count the fn's own declaration as a call.
+            let code = blank_fn_decls(&lx.masked[ln]);
+            acq += count_calls(&code, &["acquire_mat", "acquire_vec"]);
+            rel += count_calls(&code, &["release_mat", "release_vec"]);
+            rec += count_calls(&code, &["recycle"]);
+        }
+        let waived = f.annos.iter().any(|a| {
+            a.starts_with("transfers-buffers") || a.starts_with("allow(acquire-release)")
+        });
+        if acq > rel && rec == 0 && !waived {
+            report(
+                findings,
+                f.sig_line,
+                "L1",
+                format!(
+                    "fn {}: {acq} acquire(s) vs {rel} release(s), no recycle \
+                     (annotate `// lint: transfers-buffers: <why>` if ownership moves out)",
+                    f.name
+                ),
+            );
+        }
+
+        // L2 zero-alloc hygiene.
+        if f.annos.iter().any(|a| a == "zero-alloc") {
+            for (bi, &ln) in f.body.iter().enumerate() {
+                let mut waived = lx.comments[ln].contains("allow(zero-alloc)");
+                // Also honor a waiver on comment-only lines immediately
+                // above the flagged line.
+                let mut j = bi;
+                while !waived && j > 0 {
+                    j -= 1;
+                    let pln = f.body[j];
+                    if !lx.masked[pln].trim().is_empty() || lx.comments[pln].is_empty() {
+                        break;
+                    }
+                    if lx.comments[pln].contains("allow(zero-alloc)") {
+                        waived = true;
+                    }
+                }
+                if waived {
+                    continue;
+                }
+                for tok in BANNED {
+                    if lx.masked[ln].contains(tok) {
+                        report(
+                            findings,
+                            ln,
+                            "L2",
+                            format!("fn {}: `{tok}` in zero-alloc fn", f.name),
+                        );
+                    }
+                }
+            }
+        }
+
+        // L4 dispatch surface registration (resolved once all files are
+        // parsed, so the enum may live in another file).
+        for a in &f.annos {
+            if let Some(ename) = dispatch_target(a) {
+                surfaces.push((fi, fni, ename.to_string()));
+            }
+        }
+    }
+}
+
+/// `dispatch(EnumName)` annotation → `EnumName`.
+fn dispatch_target(anno: &str) -> Option<&str> {
+    let rest = anno.strip_prefix("dispatch(")?;
+    let name = ident_at(rest, 0);
+    if !name.is_empty() && rest[name.len()..].starts_with(')') {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+/// Blank every `fn <name>` declaration on the line so the name is not
+/// counted as a call by [`count_calls`].
+fn blank_fn_decls(line: &str) -> String {
+    let mut chars: Vec<char> = line.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let word_fn = chars[i] == 'f'
+            && i + 1 < chars.len()
+            && chars[i + 1] == 'n'
+            && (i == 0 || !is_ident(chars[i - 1]))
+            && (i + 2 >= chars.len() || !is_ident(chars[i + 2]));
+        if word_fn {
+            let mut j = i + 2;
+            while j < chars.len() && chars[j].is_whitespace() {
+                j += 1;
+            }
+            if j > i + 2 && j < chars.len() && is_ident(chars[j]) {
+                while j < chars.len() && is_ident(chars[j]) {
+                    j += 1;
+                }
+                for c in chars[i..j].iter_mut() {
+                    *c = ' ';
+                }
+                i = j;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    chars.into_iter().collect()
+}
+
+fn is_ident(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Count call sites: a word-boundary occurrence of any `name`, followed
+/// by optional whitespace and `(`.
+fn count_calls(code: &str, names: &[&str]) -> usize {
+    let mut total = 0;
+    for name in names {
+        let mut base = 0;
+        while let Some(rel) = find_word(&code[base..], name) {
+            let at = base + rel;
+            if code[at + name.len()..].trim_start().starts_with('(') {
+                total += 1;
+            }
+            base = at + name.len();
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_one(src: &str) -> Vec<Finding> {
+        lint(&[SourceFile::parse("test.rs", src)])
+    }
+
+    #[test]
+    fn l1_flags_leak_and_honors_waiver() {
+        let leak = "\
+fn leaky(pool: &mut Pool) {
+    let a = pool.acquire_mat(4, 4);
+    let b = pool.acquire_vec(4);
+    pool.release_vec(b);
+}
+";
+        let f = run_one(leak);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].code, "L1");
+        assert_eq!(f[0].line, 1);
+        assert!(f[0].message.contains("2 acquire(s) vs 1 release(s)"));
+
+        let waived = "\
+// lint: transfers-buffers: caller owns the result
+fn mover(pool: &mut Pool) -> Mat {
+    pool.acquire_mat(4, 4)
+}
+";
+        assert!(run_one(waived).is_empty());
+
+        let recycled = "\
+fn bulk(pool: &mut Pool) {
+    let a = pool.acquire_mat(4, 4);
+    let b = pool.acquire_mat(4, 4);
+    pool.recycle(&mut [a, b]);
+}
+";
+        assert!(run_one(recycled).is_empty());
+    }
+
+    #[test]
+    fn l1_does_not_count_declarations_as_calls() {
+        let src = "\
+fn acquire_mat(pool: &mut Pool) -> Mat {
+    pool.make()
+}
+";
+        assert!(run_one(src).is_empty());
+    }
+
+    #[test]
+    fn l2_flags_banned_tokens_only_in_annotated_fns() {
+        let src = "\
+// lint: zero-alloc
+fn hot(xs: &[f64]) -> Vec<f64> {
+    let v = xs.to_vec();
+    v
+}
+
+fn cold(xs: &[f64]) -> Vec<f64> {
+    xs.to_vec()
+}
+";
+        let f = run_one(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].code, "L2");
+        assert_eq!(f[0].line, 3);
+        assert!(f[0].message.contains(".to_vec()"));
+    }
+
+    #[test]
+    fn l2_waiver_on_same_line_and_above() {
+        let src = "\
+// lint: zero-alloc
+fn hot(n: usize) {
+    let a = Vec::new(); // lint: allow(zero-alloc): empty vec, no alloc
+    // lint: allow(zero-alloc): justified on the
+    // preceding comment lines
+    let b = Vec::new();
+    drop((a, b, n));
+}
+";
+        assert!(run_one(src).is_empty());
+    }
+
+    #[test]
+    fn l3_unsafe_needs_safety_comment() {
+        let bare = "\
+fn f(p: *const f64) -> f64 {
+    unsafe { *p }
+}
+";
+        let f = run_one(bare);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].code, "L3");
+        assert_eq!(f[0].line, 2);
+
+        let audited = "\
+fn f(p: *const f64) -> f64 {
+    // SAFETY: caller guarantees p is valid.
+    unsafe { *p }
+}
+";
+        assert!(run_one(audited).is_empty());
+
+        let same_line = "\
+fn f(p: *const f64) -> f64 {
+    unsafe { *p } // SAFETY: caller guarantees p is valid.
+}
+";
+        assert!(run_one(same_line).is_empty());
+    }
+
+    #[test]
+    fn l4_dispatch_missing_variant() {
+        let src = "\
+pub enum Kind {
+    Alpha,
+    Beta,
+}
+
+// lint: dispatch(Kind)
+fn pick(k: Kind) -> u8 {
+    match k {
+        Kind::Alpha => 0,
+        _ => 1,
+    }
+}
+";
+        let f = run_one(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].code, "L4");
+        assert_eq!(f[0].line, 7);
+        assert!(f[0].message.contains("missing Kind::Beta"));
+    }
+
+    #[test]
+    fn l4_required_enums_need_a_surface() {
+        let src = "\
+pub enum SketchKind {
+    Uniform,
+    Gaussian,
+}
+";
+        let f = run_one(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].code, "L4");
+        assert_eq!(f[0].line, 1);
+        assert!(f[0].message.contains("no registered dispatch surface"));
+    }
+
+    #[test]
+    fn failpoints_symbol_must_be_gated() {
+        let gated = "\
+#[cfg(feature = \"failpoints\")]
+use crate::testing::failpoints;
+";
+        assert!(run_one(gated).is_empty());
+
+        let bare = "\
+use crate::testing::failpoints;
+";
+        let f = run_one(bare);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].code, "L4");
+        assert!(f[0].message.contains("not cfg-gated"));
+    }
+
+    #[test]
+    fn l5_long_lines_and_brackets() {
+        let long = format!("fn f() {{ let x = 1; }} // {}\n", "x".repeat(100));
+        let f = run_one(&long);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].code, "L5");
+        assert!(f[0].message.contains("exceeds 100 columns"));
+
+        let unbalanced = "fn f() { (]\n}\n";
+        let f = run_one(unbalanced);
+        assert!(f.iter().any(|w| w.code == "L5" && w.message.contains("unbalanced")));
+
+        let unclosed = "fn f() {\n";
+        let f = run_one(unclosed);
+        assert!(f.iter().any(|w| w.code == "L5" && w.message.contains("never closed")));
+    }
+
+    #[test]
+    fn l5_ignores_brackets_in_strings_and_comments() {
+        let src = "\
+fn f() -> &'static str {
+    // an ( unmatched bracket in prose
+    \"}{)(\"
+}
+";
+        assert!(run_one(src).is_empty());
+    }
+}

@@ -1,0 +1,30 @@
+//! CLI entry point. `randnmf-lint [PATH...]` — defaults to `rust/src`
+//! (run from the repo root, as CI does).
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots = if args.is_empty() {
+        vec!["rust/src".to_string()]
+    } else {
+        args
+    };
+    match randnmf_lint::run(&roots) {
+        Ok(report) => {
+            for f in &report.findings {
+                println!("{f}");
+            }
+            eprintln!("-- {} findings over {} files", report.findings.len(), report.files_scanned);
+            if report.findings.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("randnmf-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Exact-count / exact-position assertions over the fixtures corpus.
+//!
+//! Each violating fixture must produce precisely its intended findings
+//! (right rule, right line); each conforming fixture must lint clean.
+//! This is what keeps the lints honest: a rule that silently stops
+//! firing fails these tests before it lets a regression into the tree.
+
+use randnmf_lint::{run, Finding};
+
+fn lint_fixture(name: &str) -> Vec<Finding> {
+    let path = format!("{}/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    run(&[path]).expect("fixture readable").findings
+}
+
+fn assert_clean(name: &str) {
+    let f = lint_fixture(name);
+    assert!(f.is_empty(), "{name} should lint clean, got:\n{}", render(&f));
+}
+
+fn render(f: &[Finding]) -> String {
+    f.iter().map(|w| w.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn l1_leak_is_flagged_at_the_fn() {
+    let f = lint_fixture("l1_leak.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L1");
+    assert_eq!(f[0].line, 11);
+    assert!(f[0].message.contains("fn leaky: 2 acquire(s) vs 1 release(s)"));
+}
+
+#[test]
+fn l1_balanced_recycled_and_waived_are_clean() {
+    assert_clean("l1_clean.rs");
+}
+
+#[test]
+fn l2_every_banned_token_is_flagged_once() {
+    let f = lint_fixture("l2_banned.rs");
+    let expected: [(usize, &str); 7] = [
+        (5, "Vec::new"),
+        (6, "vec!"),
+        (7, ".to_vec()"),
+        (8, ".clone()"),
+        (9, "format!"),
+        (10, "Box::new"),
+        (11, "String::from"),
+    ];
+    assert_eq!(f.len(), expected.len(), "{}", render(&f));
+    for (line, tok) in expected {
+        assert!(
+            f.iter().any(|w| w.code == "L2"
+                && w.line == line
+                && w.message == format!("fn hot: `{tok}` in zero-alloc fn")),
+            "missing `{tok}` at line {line} in:\n{}",
+            render(&f)
+        );
+    }
+}
+
+#[test]
+fn l2_waivers_and_unannotated_fns_are_clean() {
+    assert_clean("l2_clean.rs");
+}
+
+#[test]
+fn l3_bare_unsafe_is_flagged() {
+    let f = lint_fixture("l3_bare.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L3");
+    assert_eq!(f[0].line, 7);
+}
+
+#[test]
+fn l3_all_audit_placements_are_accepted() {
+    assert_clean("l3_safety.rs");
+}
+
+#[test]
+fn l4_missing_variant_is_flagged_at_the_surface() {
+    let f = lint_fixture("l4_missing.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L4");
+    assert_eq!(f[0].line, 10);
+    assert!(f[0].message.contains("fn pick: missing Strategy::Streaming"));
+}
+
+#[test]
+fn l4_complete_surface_is_clean() {
+    assert_clean("l4_complete.rs");
+}
+
+#[test]
+fn l4_core_enum_without_surface_trips_the_wire() {
+    let f = lint_fixture("l4_unregistered.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L4");
+    assert_eq!(f[0].line, 3);
+    assert!(f[0].message.contains("enum SketchKind: no registered dispatch surface"));
+}
+
+#[test]
+fn failpoints_symbol_without_gate_is_flagged() {
+    let f = lint_fixture("fp_ungated.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L4");
+    assert_eq!(f[0].line, 4);
+    assert!(f[0].message.contains("not cfg-gated"));
+}
+
+#[test]
+fn failpoints_gated_within_three_lines_is_clean() {
+    assert_clean("fp_gated.rs");
+}
+
+#[test]
+fn l5_long_line_reports_its_width() {
+    let f = lint_fixture("l5_long.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L5");
+    assert_eq!(f[0].line, 4);
+    assert!(f[0].message.contains("exceeds 100 columns (108)"));
+}
+
+#[test]
+fn l5_unbalanced_bracket_is_flagged_once() {
+    let f = lint_fixture("l5_unbalanced.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L5");
+    assert_eq!(f[0].line, 4);
+    assert!(f[0].message.contains("unbalanced bracket ']'"));
+}
+
+#[test]
+fn l5_brackets_in_strings_and_comments_are_clean() {
+    assert_clean("l5_clean.rs");
+}
+
+#[test]
+fn whole_corpus_totals_are_stable() {
+    let dir = format!("{}/fixtures", env!("CARGO_MANIFEST_DIR"));
+    let report = run(&[dir]).expect("fixtures readable");
+    assert_eq!(report.files_scanned, 14);
+    // 1 L1 + 7 L2 + 1 L3 + 3 L4 (missing variant, unregistered core
+    // enum, ungated failpoints) + 2 L5.
+    assert_eq!(report.findings.len(), 14, "{}", render(&report.findings));
+    let count = |c: &str| report.findings.iter().filter(|w| w.code == c).count();
+    assert_eq!(count("L1"), 1);
+    assert_eq!(count("L2"), 7);
+    assert_eq!(count("L3"), 1);
+    assert_eq!(count("L4"), 3);
+    assert_eq!(count("L5"), 2);
+}

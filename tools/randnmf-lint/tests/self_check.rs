@@ -1,0 +1,20 @@
+//! The real tree must lint clean.
+//!
+//! The fixtures prove the lints can fire; this proves `rust/src`
+//! satisfies every invariant. Run from anywhere — the path is anchored
+//! to this crate's manifest.
+
+#[test]
+fn real_tree_is_clean() {
+    let root = format!("{}/../../rust/src", env!("CARGO_MANIFEST_DIR"));
+    let report = randnmf_lint::run(&[root]).expect("rust/src readable");
+    let msgs: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(msgs.is_empty(), "lint findings in rust/src:\n{}", msgs.join("\n"));
+    // Guard against the walker silently scanning an empty directory and
+    // declaring victory.
+    assert!(
+        report.files_scanned >= 60,
+        "expected the full tree, scanned only {} files",
+        report.files_scanned
+    );
+}
