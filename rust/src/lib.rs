@@ -53,12 +53,15 @@
 //! `docs/COMPRESSION.md`.
 //!
 //! Both hot-path rules — plus the `SAFETY` audit over the pool's
-//! lifetime-erased dispatch and the dispatch-exhaustiveness tripwires
-//! over [`sketch::qb::SketchKind`] / `SolverKind` — are machine-checked:
-//! the `tools/randnmf-lint` workspace member lints the tree in CI
-//! (`cargo run -p randnmf-lint -- rust/src`), and loom/Miri/TSan jobs
-//! check the pool mailbox protocol ([`linalg::pool`]). Rules, annotation
-//! syntax, and the soundness matrix live in `docs/STATIC_ANALYSIS.md`.
+//! lifetime-erased dispatch, the dispatch-exhaustiveness tripwires over
+//! [`sketch::qb::SketchKind`] / `SolverKind`, a call-graph closure that
+//! makes zero-alloc transitive, per-binding acquire/release dataflow,
+//! and determinism rules over the numeric tree — are machine-checked:
+//! the `tools/randnmf-lint` workspace member lints the whole workspace
+//! in CI (`cargo run -p randnmf-lint -- rust/src rust/tests
+//! rust/benches tools`), and loom/Miri/TSan jobs check the pool mailbox
+//! protocol ([`linalg::pool`]). Rules, annotation syntax, and the
+//! soundness matrix live in `docs/STATIC_ANALYSIS.md`.
 //!
 //! Inputs may be dense ([`linalg::mat::Mat`]), sparse CSR
 //! ([`linalg::sparse::CsrMat`]), or dual-storage sparse

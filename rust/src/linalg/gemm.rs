@@ -385,6 +385,8 @@ fn driver_row_split(
         ws.release_vec(pb);
         return;
     }
+    // lint: deterministic-reduce(disjoint row chunks, each worker writes
+    // only its own output rows — no cross-chunk accumulation)
     pool::run_row_split(nchunks, m, n, c.as_mut_slice(), &|cslice, i0, i1, scratch| {
         packed_gemm(a, b, i0, i1, n, 0, k, cslice, &mut scratch.pa, &mut scratch.pb);
     });
@@ -460,6 +462,8 @@ fn driver_inner_split(
     ws: &mut Workspace,
 ) {
     debug_assert_eq!(c.shape(), (m, n));
+    // lint: deterministic-reduce(inner-dim partials are summed into C in
+    // fixed chunk-index order, independent of worker completion order)
     inner_split_reduce(k, flop_estimate(m, n, k), c, ws, &|cs, l0, l1, pa, pb| {
         packed_gemm(a, b, 0, m, n, l0, l1, cs, pa, pb)
     });
@@ -478,6 +482,8 @@ fn driver_gram(
     ws: &mut Workspace,
 ) {
     debug_assert_eq!(g.shape(), (kdim, kdim));
+    // lint: deterministic-reduce(inner-dim partials are summed into G in
+    // fixed chunk-index order, independent of worker completion order)
     inner_split_reduce(
         depth,
         flop_estimate(kdim, kdim, depth),

@@ -157,6 +157,9 @@ struct Pool {
 
 static POOL: OnceLock<Pool> = OnceLock::new();
 
+// lint: allow(zero-alloc-closure): the `Box::new` runs once, inside the
+// `OnceLock` initializer that spawns the worker threads at first use;
+// every later call is a plain static read.
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
         let extra = num_threads().saturating_sub(1);

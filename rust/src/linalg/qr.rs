@@ -185,6 +185,8 @@ fn trsm_right_upper_in_place(q: &mut Mat, r: &Mat) {
         trsm_rows(q.as_mut_slice(), n, r);
         return;
     }
+    // lint: deterministic-reduce(disjoint row chunks of Q, each solved
+    // against the same fixed R — no cross-chunk accumulation)
     pool::run_row_split(nthreads, m, n, q.as_mut_slice(), &|rows, _i0, _i1, _scratch| {
         trsm_rows(rows, n, r);
     });

@@ -488,6 +488,8 @@ impl SparseMat {
     /// The column-major mirror, built and cached on first call (the only
     /// allocating operation on a [`SparseMat`]; call once before a
     /// zero-allocation-sensitive loop, e.g. via [`SparseMat::warm`]).
+    // lint: allow(zero-alloc-closure): the CSC build runs once inside the
+    // `OnceCell` initializer; warmed callers hit the cached mirror.
     pub fn csc(&self) -> &CscMat {
         self.csc.get_or_init(|| CscMat::from_csr(&self.csr))
     }
@@ -707,6 +709,8 @@ pub fn csr_matmul_into(x: &CsrMat, b: &Mat, y: &mut Mat) {
         csr_matmul_rows(x, b, y.as_mut_slice(), l, 0, m);
         return;
     }
+    // lint: deterministic-reduce(disjoint CSR row chunks, each worker
+    // writes only its own output rows — no cross-chunk accumulation)
     pool::run_row_split(nchunks, m, l, y.as_mut_slice(), &|yslice, i0, i1, _scratch| {
         csr_matmul_rows(x, b, yslice, l, i0, i1);
     });
@@ -740,6 +744,8 @@ pub fn csr_at_b_into(x: &CsrMat, q: &Mat, c: &mut Mat, ws: &mut Workspace) {
     let (mq, l) = q.shape();
     assert_eq!(m, mq, "csr_at_b: outer dims {m} != {mq}");
     assert_eq!(c.shape(), (n, l), "csr_at_b_into: output must be {n}x{l}");
+    // lint: deterministic-reduce(row-range partials of XᵀQ are summed in
+    // fixed chunk-index order, independent of worker completion order)
     gemm::inner_split_reduce(m, csr_flops(x, l), c, ws, &|cs, i0, i1, _pa, _pb| {
         for i in i0..i1 {
             let qrow = q.row(i);
@@ -783,6 +789,8 @@ pub fn csc_at_b_into(x: &CscMat, q: &Mat, c: &mut Mat) {
         csc_at_b_cols(x, q, c.as_mut_slice(), l, 0, n);
         return;
     }
+    // lint: deterministic-reduce(disjoint CSC column chunks, each worker
+    // writes only its own output rows — no cross-chunk accumulation)
     pool::run_row_split(nchunks, n, l, c.as_mut_slice(), &|cslice, j0, j1, _scratch| {
         csc_at_b_cols(x, q, cslice, l, j0, j1);
     });
@@ -828,6 +836,8 @@ pub(crate) fn csr_sparse_sign_apply(
         csr_sign_rows(x, cols, vals, nnz, y.as_mut_slice(), l, 0, m);
         return;
     }
+    // lint: deterministic-reduce(disjoint CSR row chunks, each worker
+    // writes only its own output rows — no cross-chunk accumulation)
     pool::run_row_split(nchunks, m, l, y.as_mut_slice(), &|yslice, i0, i1, _scratch| {
         csr_sign_rows(x, cols, vals, nnz, yslice, l, i0, i1);
     });

@@ -49,6 +49,9 @@ impl Workspace {
     }
 
     /// Check out a buffer of length `len` (contents unspecified).
+    // lint: allow(zero-alloc-closure): the `Vec::new` runs only on a cold
+    // pool miss — warm iterations reuse pooled capacity and never allocate
+    // (asserted by tests/test_zero_alloc{,_pool}.rs).
     pub fn acquire_vec(&mut self, len: usize) -> Vec<f64> {
         // Best fit: the smallest pooled capacity that holds `len`.
         let mut best: Option<usize> = None;

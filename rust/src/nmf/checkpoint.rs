@@ -253,6 +253,9 @@ fn put_mat(buf: &mut Vec<u8>, m: &Mat) {
 /// failures are retried under the bounded policy of
 /// [`robust::with_retry`]; a kill at any point leaves the previous
 /// checkpoint intact.
+// lint: allow(zero-alloc-closure): checkpointing is I/O on a cadence, not
+// the per-iteration hot loop — the `format!` it reaches lives on the
+// fault-handling error path.
 pub fn write(
     path: &Path,
     options_hash: u64,

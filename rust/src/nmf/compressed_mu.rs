@@ -54,6 +54,8 @@ impl CompressedMu {
     /// `W`/`H` storage) drawn from `ws`. Recycle finished fits with
     /// [`NmfFit::recycle`] and warm fits allocate nothing (for
     /// `Init::Random` with tracing disabled).
+    // lint: transfers-buffers: `h` is drawn from the pool and moves out
+    // inside the returned model; every other per-solve buffer is released.
     pub fn fit_with(&self, x: &Mat, ws: &mut Workspace) -> Result<NmfFit> {
         let o = &self.opts;
         let (m, n) = x.shape();

@@ -84,6 +84,8 @@ pub fn sweep_factor(
         return;
     }
     let ndata = num.as_slice();
+    // lint: deterministic-reduce(disjoint factor-row chunks against the
+    // same fixed Gram matrix — no cross-chunk accumulation)
     pool::run_row_split(nthreads, r, k, fac.as_mut_slice(), &|fchunk, r0, r1, _scratch| {
         let nchunk = &ndata[r0 * k..r1 * k];
         sweep_rows(fchunk, nchunk, gram, reg, order, clamp, k);

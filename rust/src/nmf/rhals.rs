@@ -146,14 +146,24 @@ impl RandomizedHals {
         let x_mean = x.sum() / (m * n) as f64;
         let x_norm_sq = x.fro_norm_sq();
 
-        let mut state = self.iterate_compressed_with(
+        let mut state = match self.iterate_compressed_with(
             &factors,
             x_mean,
             x_norm_sq,
             start,
             &mut rng,
             scratch,
-        )?;
+        ) {
+            Ok(state) => state,
+            Err(e) => {
+                // Give the compression factors back to the pool before
+                // propagating: the error path must not strand pool buffers.
+                factors.recycle(&mut scratch.ws);
+                // lint: allow(leak-on-error): qmat/bmat moved into
+                // `factors`, recycled on the line above.
+                return Err(e);
+            }
+        };
 
         // Exact final error on the real data (the tables report this) —
         // factored residual for dense X, the O(nnz·k) CSR form for sparse.

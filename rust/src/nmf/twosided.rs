@@ -156,7 +156,19 @@ impl TwoSidedHals {
             &mut scratch.ws,
         );
         let mut state =
-            self.iterate_seeded(&factors, x_norm_sq, start, &mut rng, scratch, w, ht)?;
+            match self.iterate_seeded(&factors, x_norm_sq, start, &mut rng, scratch, w, ht) {
+                Ok(state) => state,
+                Err(e) => {
+                    // Give the compression factors back to the pool before
+                    // propagating: the error path must not strand buffers.
+                    factors.recycle(&mut scratch.ws);
+                    // lint: allow(leak-on-error): q/b/p/c moved into
+                    // `factors`, recycled on the line above; w/ht are owned
+                    // by iterate_seeded and dropped on its error path
+                    // (heap-freed, the pool just loses reuse of them).
+                    return Err(e);
+                }
+            };
 
         // Exact final error on the real data (the tables report this).
         state.final_rel_err =

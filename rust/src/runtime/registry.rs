@@ -7,7 +7,7 @@
 //! two shapes).
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -17,7 +17,7 @@ use crate::coordinator::json::Json;
 use crate::runtime::client::Executable;
 
 /// Operations the AOT pipeline emits.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum ArtifactOp {
     /// One randomized-HALS iteration `(B, Q, W, W̃, Hᵗ) → (W, W̃, Hᵗ)`.
     RhalsIter,
@@ -58,8 +58,11 @@ pub struct ArtifactEntry {
 /// coordinator's request loop.
 pub struct ArtifactRegistry {
     dir: PathBuf,
-    entries: HashMap<(ArtifactOp, ShapeKey), ArtifactEntry>,
-    cache: RefCell<HashMap<(ArtifactOp, ShapeKey), Rc<Executable>>>,
+    // BTreeMap, not HashMap: `entries()` feeds diagnostics/CLI listings,
+    // and the determinism lint (L7) wants every iteration in a numeric
+    // path to have a fixed order.
+    entries: BTreeMap<(ArtifactOp, ShapeKey), ArtifactEntry>,
+    cache: RefCell<BTreeMap<(ArtifactOp, ShapeKey), Rc<Executable>>>,
 }
 
 impl ArtifactRegistry {
@@ -69,7 +72,7 @@ impl ArtifactRegistry {
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {}", manifest_path.display()))?;
         let doc = Json::parse(&text).context("parsing manifest.json")?;
-        let mut entries = HashMap::new();
+        let mut entries = BTreeMap::new();
         for e in doc.get("entries")?.as_arr().unwrap_or(&[]) {
             let op = ArtifactOp::parse(e.get("op")?.as_str().unwrap_or(""))?;
             let key = (
@@ -102,7 +105,7 @@ impl ArtifactRegistry {
         Ok(ArtifactRegistry {
             dir: dir.to_path_buf(),
             entries,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
         })
     }
 

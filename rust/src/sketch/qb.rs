@@ -407,6 +407,8 @@ pub(crate) fn sparse_sketch_apply_block(
         sparse_apply_rows(xb, r0, cols, vals, nnz, y.as_mut_slice(), l, 0, m);
         return;
     }
+    // lint: deterministic-reduce(disjoint row chunks, each worker writes
+    // only its own output rows — no cross-chunk accumulation)
     pool::run_row_split(nchunks, m, l, y.as_mut_slice(), &|yslice, i0, i1, _scratch| {
         sparse_apply_rows(xb, r0, cols, vals, nnz, yslice, l, i0, i1);
     });

@@ -156,6 +156,8 @@ pub fn srht_sketch_apply(
         srht_rows(a, &signs, &samples, scale, &mut stage, y.as_mut_slice(), l, 0, m);
         ws.release_vec(stage);
     } else {
+        // lint: deterministic-reduce(disjoint row chunks with per-worker
+        // Hadamard stages — no cross-chunk accumulation)
         pool::run_row_split(nchunks, m, l, y.as_mut_slice(), &|yslice, i0, i1, scratch| {
             scratch.pa.resize(n_pad, 0.0);
             srht_rows(a, &signs, &samples, scale, &mut scratch.pa, yslice, l, i0, i1);
@@ -239,6 +241,8 @@ pub fn srht_left_apply(x: &Mat, l: usize, rng: &mut Pcg64, yt: &mut Mat, ws: &mu
         srht_cols(x, &signs, &samples, scale, &mut stage, yt.as_mut_slice(), l, 0, n);
         ws.release_vec(stage);
     } else {
+        // lint: deterministic-reduce(disjoint column chunks with per-worker
+        // Hadamard stages — no cross-chunk accumulation)
         pool::run_row_split(nchunks, n, l, yt.as_mut_slice(), &|ytslice, j0, j1, scratch| {
             scratch.pa.resize(m_pad, 0.0);
             srht_cols(x, &signs, &samples, scale, &mut scratch.pa, ytslice, l, j0, j1);

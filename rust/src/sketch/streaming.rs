@@ -965,7 +965,7 @@ impl OnlineNmf {
                         ht0.set(j, c, prev.h.get(c, j));
                     }
                 }
-                self.solver.iterate_compressed_warm_with(
+                match self.solver.iterate_compressed_warm_with(
                     &factors,
                     norm_sq,
                     start,
@@ -973,7 +973,19 @@ impl OnlineNmf {
                     &mut self.scratch,
                     w0,
                     ht0,
-                )?
+                ) {
+                    Ok(fit) => fit,
+                    Err(e) => {
+                        // Return the QB factors to the pool before
+                        // propagating; the warm solver owns w0/ht0.
+                        factors.recycle(&mut self.scratch.ws);
+                        // lint: allow(leak-on-error): w0/ht0 moved into the
+                        // warm solver and dropped on its error path
+                        // (heap-freed, the pool just loses their reuse);
+                        // factors recycled on the line above.
+                        return Err(e);
+                    }
+                }
             }
         };
         factors.recycle(&mut self.scratch.ws);

@@ -221,6 +221,8 @@ fn left_sign_apply(x: &Mat, cols: &[f64], vals: &[f64], nnz: usize, yt: &mut Mat
         left_sign_rows(x, cols, vals, nnz, yt.as_mut_slice(), l, 0, n);
         return;
     }
+    // lint: deterministic-reduce(disjoint column chunks, each worker
+    // writes only its own output rows — no cross-chunk accumulation)
     pool::run_row_split(nchunks, n, l, yt.as_mut_slice(), &|ytslice, j0, j1, _scratch| {
         left_sign_rows(x, cols, vals, nnz, ytslice, l, j0, j1);
     });

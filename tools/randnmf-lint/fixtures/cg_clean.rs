@@ -1,0 +1,29 @@
+//! Callgraph conforming fixture: annotated, waived, ambiguous, and
+//! std-shadowed callees all stop the walk.
+
+// lint: zero-alloc
+fn root(xs: &[f64], s: &mut State) -> f64 {
+    audited(xs) + waived(xs) + ambiguous(xs) + s.items.take().unwrap_or(0.0)
+}
+
+// lint: zero-alloc
+fn audited(xs: &[f64]) -> f64 {
+    xs[0]
+}
+
+// lint: allow(zero-alloc-closure): cold path, allocates by design
+fn waived(xs: &[f64]) -> f64 {
+    xs.to_vec()[0]
+}
+
+fn ambiguous(xs: &[f64]) -> f64 {
+    xs[0] + 1.0
+}
+
+fn ambiguous(xs: &[f64]) -> f64 {
+    xs.to_vec()[0]
+}
+
+fn take(r: &mut Reader) -> Buf {
+    r.data.to_vec()
+}

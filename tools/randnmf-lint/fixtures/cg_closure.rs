@@ -1,0 +1,16 @@
+//! Callgraph violating fixture: a zero-alloc fn reaches an allocating
+//! callee two hops away.
+
+// lint: zero-alloc
+fn root(xs: &[f64]) -> f64 {
+    middle(xs)
+}
+
+fn middle(xs: &[f64]) -> f64 {
+    leaf(xs)
+}
+
+fn leaf(xs: &[f64]) -> f64 {
+    let v = xs.to_vec();
+    v[0]
+}

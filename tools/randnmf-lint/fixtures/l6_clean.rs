@@ -1,0 +1,31 @@
+//! L6 conforming fixture: balanced pairs, caller-owned releases,
+//! recycle, fn-level waivers, and line-level leak waivers all pass.
+
+fn balanced(pool: &mut Pool) {
+    let a = pool.acquire_mat(4, 4);
+    pool.release_mat(a);
+}
+
+fn caller_owned(pool: &mut Pool, m: Mat) {
+    pool.release_mat(m);
+}
+
+fn recycled(pool: &mut Pool) {
+    let a = pool.acquire_mat(4, 4);
+    let b = pool.acquire_vec(8);
+    pool.recycle(&mut [a, b]);
+}
+
+// lint: transfers-buffers: the result moves out to the caller
+fn mover(pool: &mut Pool) -> Result<Mat, E> {
+    let out = pool.acquire_mat(4, 4);
+    fallible()?;
+    Ok(out)
+}
+
+fn waived_line(pool: &mut Pool) -> Result<(), E> {
+    let a = pool.acquire_vec(8);
+    fallible()?; // lint: allow(leak-on-error): pool is rebuilt on error
+    pool.release_vec(a);
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! L6 violating fixture: the same binding is released twice.
+
+fn double_release(pool: &mut Pool) {
+    let a = pool.acquire_mat(4, 4);
+    pool.release_mat(a);
+    pool.release_mat(a);
+}

@@ -1,0 +1,7 @@
+//! L6 violating fixture: acquired as one buffer kind, released as the
+//! other.
+
+fn kind_mismatch(pool: &mut Pool) {
+    let m = pool.acquire_mat(4, 4);
+    pool.release_vec(m);
+}

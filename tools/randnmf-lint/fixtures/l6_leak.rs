@@ -1,0 +1,16 @@
+//! L6 violating fixture: early exits leak outstanding pool buffers.
+
+fn leak_on_try(pool: &mut Pool) -> Result<(), E> {
+    let a = pool.acquire_mat(4, 4);
+    fallible()?;
+    pool.release_mat(a);
+    Ok(())
+}
+
+fn leak_on_return(pool: &mut Pool, bail: bool) {
+    let b = pool.acquire_vec(8);
+    if bail {
+        return;
+    }
+    pool.release_vec(b);
+}

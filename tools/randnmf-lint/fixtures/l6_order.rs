@@ -1,0 +1,7 @@
+//! L6 violating fixture: a binding is released before it is acquired.
+
+fn release_first(pool: &mut Pool) {
+    pool.release_vec(v);
+    let v = pool.acquire_vec(8);
+    pool.release_vec(v);
+}

@@ -1,0 +1,7 @@
+//! L7 violating fixture: split/reduce call sites without a
+//! deterministic-reduce annotation.
+
+fn drive(pool: &mut Pool, out: &mut [f64]) {
+    pool.run_row_split(4, 8, 8, out, &noop);
+    pool.inner_split_reduce(4, 100, out, &acc);
+}

@@ -1,0 +1,12 @@
+//! L7 conforming fixture: every split/reduce call site names why its
+//! reduce order is fixed, and a declaration is not a call site.
+
+fn drive(pool: &mut Pool, out: &mut [f64]) {
+    // lint: deterministic-reduce(disjoint row chunks, no accumulation)
+    pool.run_row_split(4, 8, 8, out, &noop);
+    pool.inner_split_reduce(4, 100, out, &acc); // lint: deterministic-reduce(fixed order)
+}
+
+fn run_row_split(n: usize) -> usize {
+    n
+}

@@ -1,0 +1,11 @@
+//! L7 conforming fixture: unordered collections carry determinism
+//! waivers naming why order is never observed.
+
+// lint: allow(determinism): membership set, iteration order never observed
+use std::collections::HashSet;
+
+fn seen(xs: &[u32]) -> usize {
+    // lint: allow(determinism): only len() is read, which is order-free
+    let s: HashSet<u32> = xs.iter().copied().collect();
+    s.len()
+}

@@ -1,0 +1,12 @@
+//! L7 violating fixture: unordered collections in a determinism-scoped
+//! path (this fixture lives under a `runtime/` segment on purpose).
+
+use std::collections::HashMap;
+
+fn tally(xs: &[u32]) -> HashMap<u32, u32> {
+    let mut m = HashMap::new();
+    for x in xs {
+        *m.entry(*x).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,383 @@
+//! Inter-procedural zero-alloc closure over the intra-tree call graph.
+//!
+//! L2 checks banned tokens *inside* a `// lint: zero-alloc` fn. This pass
+//! extends the obligation through calls: every fn reachable from an
+//! annotated fn must itself be annotated, explicitly waived with
+//! `// lint: allow(zero-alloc-closure): <why>` above its declaration, or
+//! transitively free of banned allocation tokens. A violation reports the
+//! offending call path (`a -> b -> c`) at the root call site, plus the
+//! callee location carrying the banned token.
+//!
+//! Resolution limits (documented in `docs/STATIC_ANALYSIS.md`):
+//!
+//! * call edges are followed only when the callee name resolves to
+//!   exactly **one** fn definition in the scanned tree — ambiguous names
+//!   are skipped rather than guessed;
+//! * method-style calls (`.name(...)`) whose name shadows a common std
+//!   method (`clone`, `take`, `push`, …) are not followed: the receiver
+//!   type is unknown at the token level, so such edges would mis-resolve
+//!   onto same-named tree fns. Path-style calls (`checkpoint::write(...)`)
+//!   are still followed;
+//! * trait-object, closure, and macro-expanded calls are invisible;
+//! * an `// lint: allow(zero-alloc)` line waiver vouches for the whole
+//!   line — its call edges are not followed either.
+
+use std::collections::BTreeSet;
+
+use crate::lexer::find_word;
+use crate::lints::{blank_fn_decls, Finding, SourceFile, BANNED};
+
+const KEYWORDS: [&str; 39] = [
+    "if", "while", "for", "match", "return", "loop", "fn", "move", "in", "let", "else", "unsafe",
+    "as", "ref", "mut", "box", "dyn", "impl", "where", "use", "pub", "crate", "self", "Self",
+    "super", "async", "await", "break", "continue", "const", "static", "struct", "enum", "trait",
+    "type", "mod", "extern", "true", "false",
+];
+
+/// Common std/core method names: method-style calls to these are never
+/// followed as edges (see module docs).
+const STD_METHODS: [&str; 38] = [
+    "clone", "take", "write", "read", "flush", "next", "len", "push", "pop", "insert", "remove",
+    "get", "drop", "min", "max", "abs", "sum", "new", "default", "from", "into", "lock", "borrow",
+    "borrow_mut", "as_ref", "as_mut", "to_owned", "resize", "extend", "clear", "swap", "iter",
+    "map", "filter", "collect", "join", "send", "recv",
+];
+
+fn is_ident_ch(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Identifier tokens immediately followed by `(` — call sites. Skips
+/// keywords, macro invocations (`name!`), and method-style std names.
+fn call_names(code: &str) -> Vec<String> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if is_ident_ch(b[i]) {
+            let start = i;
+            let mut j = i;
+            while j < n && is_ident_ch(b[j]) {
+                j += 1;
+            }
+            let name = &code[start..j];
+            let mut k = j;
+            while k < n && b[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            let method_style = start > 0 && b[start - 1] == b'.';
+            if k < n
+                && b[k] == b'('
+                && !KEYWORDS.contains(&name)
+                && !name.as_bytes()[0].is_ascii_digit()
+                && !(j < n && b[j] == b'!')
+                && !(method_style && STD_METHODS.contains(&name))
+            {
+                out.push(name.to_string());
+            }
+            i = j.max(start + 1);
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn fn_is_waived(f: &crate::functions::FnInfo) -> bool {
+    f.annos.iter().any(|a| a.starts_with("allow(zero-alloc-closure)"))
+}
+
+fn fn_is_annotated(f: &crate::functions::FnInfo) -> bool {
+    f.annos.iter().any(|a| a == "zero-alloc")
+}
+
+/// L2's line-waiver lookup (same line or contiguous comment block above).
+fn line_is_waived(file: &SourceFile, body: &[usize], bi: usize) -> bool {
+    let lx = &file.lx;
+    if lx.comments[body[bi]].contains("allow(zero-alloc)") {
+        return true;
+    }
+    let mut j = bi;
+    while j > 0 {
+        j -= 1;
+        let pln = body[j];
+        if !lx.masked[pln].trim().is_empty() || lx.comments[pln].is_empty() {
+            return false;
+        }
+        if lx.comments[pln].contains("allow(zero-alloc)") {
+            return true;
+        }
+    }
+    false
+}
+
+/// First (body line, token) in `f` carrying a banned token without an
+/// `allow(zero-alloc)` waiver — mirrors the L2 line rules.
+fn banned_line(file: &SourceFile, f: &crate::functions::FnInfo) -> Option<(usize, &'static str)> {
+    for (bi, &ln) in f.body.iter().enumerate() {
+        if line_is_waived(file, &f.body, bi) {
+            continue;
+        }
+        for tok in BANNED {
+            if file.lx.masked[ln].contains(tok) {
+                return Some((ln, tok));
+            }
+        }
+    }
+    None
+}
+
+struct Graph {
+    /// name -> fn definitions carrying it.
+    defs: std::collections::BTreeMap<String, Vec<(usize, usize)>>,
+    /// per (file, fn): outgoing (callee name, call line) edges.
+    edges: Vec<Vec<Vec<(String, usize)>>>,
+}
+
+fn build(files: &[SourceFile]) -> Graph {
+    let mut defs: std::collections::BTreeMap<String, Vec<(usize, usize)>> =
+        std::collections::BTreeMap::new();
+    for (fi, file) in files.iter().enumerate() {
+        for (fni, f) in file.fns.iter().enumerate() {
+            defs.entry(f.name.clone()).or_default().push((fi, fni));
+        }
+    }
+    let mut edges: Vec<Vec<Vec<(String, usize)>>> = Vec::with_capacity(files.len());
+    for file in files {
+        let mut per_fn = Vec::with_capacity(file.fns.len());
+        for f in &file.fns {
+            let mut calls: Vec<(String, usize)> = Vec::new();
+            let mut seen: BTreeSet<String> = BTreeSet::new();
+            for (bi, &ln) in f.body.iter().enumerate() {
+                if line_is_waived(file, &f.body, bi) {
+                    continue;
+                }
+                let code = blank_fn_decls(&file.lx.masked[ln]);
+                for name in call_names(&code) {
+                    if name != f.name && seen.insert(name.clone()) {
+                        calls.push((name, ln));
+                    }
+                }
+            }
+            per_fn.push(calls);
+        }
+        edges.push(per_fn);
+    }
+    Graph { defs, edges }
+}
+
+/// Run the zero-alloc closure pass; findings are filed under L2.
+pub fn lint_callgraph(files: &[SourceFile], findings: &mut Vec<Finding>) {
+    let g = build(files);
+
+    // DFS from each annotated root. `visited` is shared per root so
+    // diamond-shaped subgraphs are walked once; `reported` dedups by
+    // (root, callee, token) so one bad callee yields one finding per root.
+    struct Dfs<'a> {
+        files: &'a [SourceFile],
+        g: &'a Graph,
+        findings: &'a mut Vec<Finding>,
+    }
+
+    impl Dfs<'_> {
+        #[allow(clippy::too_many_arguments)]
+        fn visit(
+            &mut self,
+            node: (usize, usize),
+            path: &mut Vec<String>,
+            root_file: usize,
+            root_call_line: usize,
+            reported: &mut BTreeSet<(String, String, &'static str)>,
+            visited: &mut BTreeSet<(usize, usize)>,
+        ) {
+            if !visited.insert(node) {
+                return;
+            }
+            let (fi, fni) = node;
+            let file = &self.files[fi];
+            let f = &file.fns[fni];
+            if let Some((ln, tok)) = banned_line(file, f) {
+                let key = (path[0].clone(), f.name.clone(), tok);
+                if reported.insert(key) {
+                    let mut chain = path.join(" -> ");
+                    chain.push_str(" -> ");
+                    chain.push_str(&f.name);
+                    self.findings.push(Finding {
+                        path: self.files[root_file].path.clone(),
+                        line: root_call_line + 1,
+                        code: "L2",
+                        message: format!(
+                            "zero-alloc call path {chain}: `{tok}` at {}:{} \
+                             (annotate the callee or waive it with \
+                             `// lint: allow(zero-alloc-closure): <why>`)",
+                            file.path,
+                            ln + 1
+                        ),
+                    });
+                }
+                return;
+            }
+            path.push(f.name.clone());
+            for (name, _ln) in &self.g.edges[fi][fni] {
+                let Some(cands) = self.g.defs.get(name) else { continue };
+                if cands.len() != 1 {
+                    continue;
+                }
+                let (cfi, cfni) = cands[0];
+                let cf = &self.files[cfi].fns[cfni];
+                if fn_is_annotated(cf) || fn_is_waived(cf) {
+                    continue;
+                }
+                self.visit((cfi, cfni), path, root_file, root_call_line, reported, visited);
+            }
+            path.pop();
+        }
+    }
+
+    let mut dfs = Dfs { files, g: &g, findings };
+    for (fi, file) in files.iter().enumerate() {
+        for (fni, f) in file.fns.iter().enumerate() {
+            if !fn_is_annotated(f) {
+                continue;
+            }
+            let mut reported = BTreeSet::new();
+            let mut visited: BTreeSet<(usize, usize)> = BTreeSet::new();
+            visited.insert((fi, fni));
+            for (name, ln) in &dfs.g.edges[fi][fni] {
+                let Some(cands) = dfs.g.defs.get(name) else { continue };
+                if cands.len() != 1 {
+                    continue;
+                }
+                let (cfi, cfni) = cands[0];
+                let cf = &files[cfi].fns[cfni];
+                if fn_is_annotated(cf) || fn_is_waived(cf) {
+                    continue;
+                }
+                let mut path = vec![f.name.clone()];
+                dfs.visit((cfi, cfni), &mut path, fi, *ln, &mut reported, &mut visited);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(srcs: &[(&str, &str)]) -> Vec<Finding> {
+        let files: Vec<SourceFile> =
+            srcs.iter().map(|(p, s)| SourceFile::parse(p, s)).collect();
+        let mut findings = Vec::new();
+        lint_callgraph(&files, &mut findings);
+        findings.sort();
+        findings
+    }
+
+    #[test]
+    fn transitive_alloc_reported_with_call_path() {
+        let src = "\
+// lint: zero-alloc
+fn root(x: &[f64]) -> f64 {
+    middle(x)
+}
+
+fn middle(x: &[f64]) -> f64 {
+    leaf(x)
+}
+
+fn leaf(x: &[f64]) -> f64 {
+    let v = x.to_vec();
+    v[0]
+}
+";
+        let f = run(&[("a.rs", src)]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].code, "L2");
+        assert_eq!(f[0].line, 3); // root's call site
+        assert!(f[0].message.contains("root -> middle -> leaf"));
+        assert!(f[0].message.contains("`.to_vec()` at a.rs:11"));
+    }
+
+    #[test]
+    fn annotated_or_waived_callees_stop_the_walk() {
+        let src = "\
+// lint: zero-alloc
+fn root(x: &[f64]) -> f64 {
+    audited(x) + waived(x)
+}
+
+// lint: zero-alloc
+fn audited(x: &[f64]) -> f64 {
+    x[0]
+}
+
+// lint: allow(zero-alloc-closure): cold path, allocates by design
+fn waived(x: &[f64]) -> f64 {
+    x.to_vec()[0]
+}
+";
+        assert!(run(&[("a.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn ambiguous_names_are_not_followed() {
+        let a = "\
+// lint: zero-alloc
+fn root() {
+    helper();
+}
+";
+        let b = "fn helper() { let v = vec![1]; drop(v); }\n";
+        let c = "fn helper() -> u8 { 0 }\n";
+        assert!(run(&[("a.rs", a), ("b.rs", b), ("c.rs", c)]).is_empty());
+    }
+
+    #[test]
+    fn method_style_std_names_are_not_followed() {
+        let a = "\
+// lint: zero-alloc
+fn root(s: &mut State) {
+    s.spare.take();
+}
+
+fn take(r: &mut Reader) -> Buf {
+    r.data.to_vec()
+}
+";
+        assert!(run(&[("a.rs", a)]).is_empty());
+    }
+
+    #[test]
+    fn line_waiver_suppresses_the_edge() {
+        let src = "\
+// lint: zero-alloc
+fn root() {
+    cold_init(); // lint: allow(zero-alloc): startup only
+}
+
+fn cold_init() {
+    let v = Vec::new();
+    drop(v);
+}
+";
+        assert!(run(&[("a.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn clean_transitive_callees_pass() {
+        let src = "\
+// lint: zero-alloc
+fn root(x: &mut [f64]) {
+    scale(x);
+}
+
+fn scale(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= 2.0;
+    }
+}
+";
+        assert!(run(&[("a.rs", src)]).is_empty());
+    }
+}

@@ -1,0 +1,482 @@
+//! L6 — per-binding workspace-buffer dataflow.
+//!
+//! L1 checks that acquire/release *counts* balance per fn. This pass
+//! tracks each binding through the acquire → release lifecycle and
+//! catches what counting cannot:
+//!
+//! * **double release** — `release_mat(a)` twice for one acquire;
+//! * **release before acquire** — the release textually precedes every
+//!   acquire of that binding;
+//! * **kind mismatch** — acquired with `acquire_mat` but returned with
+//!   `release_vec` (or vice versa);
+//! * **early-exit leaks** — a `return` or `?` while acquired buffers are
+//!   outstanding silently drops them on the error path (the pool never
+//!   gets them back). Waive a deliberate site with a trailing
+//!   `// lint: allow(leak-on-error): <why>`;
+//! * **per-binding leak** — a binding acquired and never released even
+//!   though the fn-level totals balance (two releases of `b` masking zero
+//!   releases of `a`), where L1 stays silent.
+//!
+//! The analysis is conservative by design: bindings are simple `a.b.c`
+//! paths read off the assignment (`let m = pool.acquire_mat(...)`) or the
+//! first call argument (`pool.release_mat(m)`). Anything harder — tuple
+//! destructuring, bindings built by macros, releases through collections —
+//! degrades to the anonymous counter, where only L1's totals apply.
+//! `// lint: transfers-buffers:` / `// lint: allow(acquire-release):`
+//! waive the whole fn; a `recycle(...)` bulk return waives the per-binding
+//! end-of-fn leak check (L6e) but NOT the early-exit checks — `recycle`
+//! on the success path does not run when `?` propagates an error.
+
+use crate::lexer::find_word;
+use crate::lints::{blank_fn_decls, count_calls, Finding, SourceFile};
+
+/// (call token, buffer kind, is_acquire)
+const CALLS: [(&str, &str, bool); 4] = [
+    ("acquire_mat", "mat", true),
+    ("acquire_vec", "vec", true),
+    ("release_mat", "mat", false),
+    ("release_vec", "vec", false),
+];
+
+/// Same-line or contiguous-comment-block-above waiver, mirroring L2's
+/// line-waiver lookup but scoped to the fn body.
+fn line_waived(file: &SourceFile, body: &[usize], bi: usize, marker: &str) -> bool {
+    let lx = &file.lx;
+    if lx.comments[body[bi]].contains(marker) {
+        return true;
+    }
+    let mut j = bi;
+    while j > 0 {
+        j -= 1;
+        let pln = body[j];
+        if !lx.masked[pln].trim().is_empty() || lx.comments[pln].is_empty() {
+            return false;
+        }
+        if lx.comments[pln].contains(marker) {
+            return true;
+        }
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b == b'.' || b.is_ascii_alphanumeric()
+}
+
+/// Identifier/path ending at byte `end` (exclusive), walking back over
+/// ident chars and dots.
+fn ident_back(s: &[u8], end: usize) -> String {
+    let mut start = end;
+    while start > 0 && is_ident_byte(s[start - 1]) {
+        start -= 1;
+    }
+    String::from_utf8_lossy(&s[start..end]).into_owned()
+}
+
+/// First argument of the call whose `(` is at byte `open_paren`, if it is
+/// a simple path (idents, dots, optional leading `&` / `&mut`). `None`
+/// for anything more complex — those degrade to anonymous counting.
+fn first_arg(code: &str, open_paren: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut depth = 0usize;
+    let mut i = open_paren;
+    let start = open_paren + 1;
+    let mut end = None;
+    while i < b.len() {
+        match b[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = Some(i);
+                    break;
+                }
+            }
+            b',' if depth == 1 => {
+                end = Some(i);
+                break;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    let end = end?;
+    let mut arg = String::from_utf8_lossy(&b[start..end]).trim().to_string();
+    for pre in ["&mut ", "&"] {
+        if let Some(rest) = arg.strip_prefix(pre) {
+            arg = rest.trim().to_string();
+            break;
+        }
+    }
+    if arg.is_empty() || !arg.bytes().all(is_ident_byte) {
+        return None;
+    }
+    Some(arg)
+}
+
+/// Binding a `<binding> = ... acquire_*(...)` assigns to. Looks left of
+/// the `=` on the same line, or on the previous line when the statement
+/// wraps (previous line ending with `=`).
+fn binding_of_acquire(lines: &[String], li: usize, at: usize) -> Option<String> {
+    let code = lines[li].as_bytes();
+    let mut eq: Option<usize> = None;
+    let mut i = at;
+    while i > 0 {
+        i -= 1;
+        match code[i] {
+            b'=' => {
+                // `==`, `!=`, `<=`, `+=`, … are comparisons/compound ops,
+                // not assignments a binding can be read off.
+                if i > 0 && b"=!<>+-*/%&|^".contains(&code[i - 1]) {
+                    return None;
+                }
+                if i + 1 < code.len() && code[i + 1] == b'=' {
+                    return None;
+                }
+                eq = Some(i);
+                break;
+            }
+            b';' => break,
+            _ => {}
+        }
+    }
+    let (line, eq) = match eq {
+        Some(e) => (code, e),
+        None => {
+            if li == 0 {
+                return None;
+            }
+            let prev = lines[li - 1].trim_end();
+            if !prev.ends_with('=') {
+                return None;
+            }
+            (prev.as_bytes(), prev.len() - 1)
+        }
+    };
+    let mut j = eq;
+    while j > 0 && line[j - 1].is_ascii_whitespace() {
+        j -= 1;
+    }
+    let name = ident_back(line, j);
+    if name.is_empty() || name.contains('.') {
+        return None;
+    }
+    Some(name)
+}
+
+/// Byte offsets of word-boundary immediately-called occurrences of
+/// `name` in `code`: `(match start, '(' position)` pairs.
+fn find_calls(code: &str, name: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut base = 0;
+    while let Some(rel) = find_word(&code[base..], name) {
+        let at = base + rel;
+        let rest = &code[at + name.len()..];
+        let stripped = rest.trim_start();
+        if stripped.starts_with('(') {
+            out.push((at, at + name.len() + (rest.len() - stripped.len())));
+        }
+        base = at + name.len();
+    }
+    out
+}
+
+#[derive(Clone)]
+struct Event {
+    bi: usize,
+    is_acq: bool,
+    kind: &'static str,
+    binding: Option<String>,
+}
+
+fn analyze_fn(file: &SourceFile, f: &crate::functions::FnInfo, findings: &mut Vec<Finding>) {
+    let mut report = |ln: usize, msg: String| {
+        findings.push(Finding { path: file.path.clone(), line: ln + 1, code: "L6", message: msg });
+    };
+    let waived = f.annos.iter().any(|a| {
+        a.starts_with("transfers-buffers") || a.starts_with("allow(acquire-release)")
+    });
+    let lines: Vec<String> =
+        f.body.iter().map(|&ln| blank_fn_decls(&file.lx.masked[ln])).collect();
+    let has_recycle = lines.iter().any(|c| count_calls(c, &["recycle"]) > 0);
+
+    // Pass 1: collect acquire/release events in textual order.
+    let mut events: Vec<Event> = Vec::new();
+    for (bi, code) in lines.iter().enumerate() {
+        let mut evs: Vec<(usize, bool, &'static str, usize)> = Vec::new();
+        for (name, kind, is_acq) in CALLS {
+            for (at, op) in find_calls(code, name) {
+                evs.push((at, is_acq, kind, op));
+            }
+        }
+        evs.sort();
+        for (at, is_acq, kind, op) in evs {
+            let binding = if is_acq {
+                binding_of_acquire(&lines, bi, at)
+            } else {
+                first_arg(code, op)
+            };
+            events.push(Event { bi, is_acq, kind, binding });
+        }
+    }
+
+    // binding -> body indices of its acquires (for before/after ordering).
+    let mut acquires: std::collections::BTreeMap<&str, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for e in &events {
+        if e.is_acq {
+            if let Some(b) = &e.binding {
+                acquires.entry(b.as_str()).or_default().push(e.bi);
+            }
+        }
+    }
+    let total_acq = events.iter().filter(|e| e.is_acq).count();
+    let total_rel = events.len() - total_acq;
+
+    // Pass 2: walk lines and events, tracking per-binding availability.
+    // binding -> (outstanding count, kind it was acquired as)
+    let mut avail: std::collections::BTreeMap<String, (usize, Option<&'static str>)> =
+        std::collections::BTreeMap::new();
+    let mut anon = 0usize;
+    let mut ei = 0usize;
+    for (bi, code) in lines.iter().enumerate() {
+        // L6d: early-return / `?` leak checks run per line, before the
+        // line's own events (a `return` line never releases first).
+        if !waived {
+            let outstanding: Vec<&str> =
+                avail.iter().filter(|(_, (c, _))| *c > 0).map(|(b, _)| b.as_str()).collect();
+            if !outstanding.is_empty() || anon > 0 {
+                let is_tail = bi + 1 == lines.len();
+                let early_return = !is_tail && find_word(code, "return").is_some();
+                let try_op = code.contains('?');
+                if (early_return || (try_op && !is_tail))
+                    && !line_waived(file, &f.body, bi, "allow(leak-on-error)")
+                {
+                    let what = if outstanding.is_empty() {
+                        "buffer(s)".to_string()
+                    } else {
+                        outstanding.join(", ")
+                    };
+                    let via = if early_return { "return" } else { "`?`" };
+                    report(
+                        f.body[bi],
+                        format!(
+                            "fn {}: early {via} leaks acquired {what} \
+                             (release before propagating, or waive the fn)",
+                            f.name
+                        ),
+                    );
+                }
+            }
+        }
+        while ei < events.len() && events[ei].bi == bi {
+            let e = events[ei].clone();
+            ei += 1;
+            let Some(b) = e.binding else {
+                if e.is_acq {
+                    anon += 1;
+                } else {
+                    anon = anon.saturating_sub(1);
+                }
+                continue;
+            };
+            if e.is_acq {
+                let entry = avail.entry(b).or_insert((0, None));
+                entry.0 += 1;
+                entry.1 = Some(e.kind);
+            } else {
+                let (c, k) = avail.get(&b).copied().unwrap_or((0, None));
+                if c > 0 {
+                    if let Some(k) = k {
+                        if k != e.kind {
+                            report(
+                                f.body[bi],
+                                format!(
+                                    "fn {}: `{b}` acquired as {k} but released as {}",
+                                    f.name, e.kind
+                                ),
+                            );
+                        }
+                    }
+                    avail.insert(b, (c - 1, k));
+                } else if let Some(acqs) = acquires.get(b.as_str()) {
+                    if acqs.iter().any(|&a| a > bi) && !acqs.iter().any(|&a| a <= bi) {
+                        report(
+                            f.body[bi],
+                            format!("fn {}: `{b}` released before it is acquired", f.name),
+                        );
+                    } else {
+                        report(f.body[bi], format!("fn {}: `{b}` released twice", f.name));
+                    }
+                }
+                // Releases of bindings never acquired here are caller-owned
+                // buffers being returned to the pool: legitimate.
+            }
+        }
+    }
+
+    // L6e: per-binding leak when the fn-level totals balance (L1 silent).
+    if !waived && !has_recycle && total_acq == total_rel {
+        for (b, (c, _)) in &avail {
+            if *c > 0 {
+                if let Some(acqs) = acquires.get(b.as_str()) {
+                    report(
+                        f.body[acqs[0]],
+                        format!("fn {}: `{b}` acquired here is never released", f.name),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Run the L6 dataflow pass over one file.
+pub fn lint_dataflow(file: &SourceFile, findings: &mut Vec<Finding>) {
+    for f in &file.fns {
+        analyze_fn(file, f, findings);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_one(src: &str) -> Vec<Finding> {
+        let file = SourceFile::parse("test.rs", src);
+        let mut findings = Vec::new();
+        lint_dataflow(&file, &mut findings);
+        findings.sort();
+        findings
+    }
+
+    #[test]
+    fn double_release_is_flagged() {
+        let src = "\
+fn f(pool: &mut Pool) {
+    let a = pool.acquire_mat(4, 4);
+    pool.release_mat(a);
+    pool.release_mat(a);
+}
+";
+        let f = run_one(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("`a` released twice"));
+    }
+
+    #[test]
+    fn release_before_acquire_is_flagged() {
+        let src = "\
+fn f(pool: &mut Pool) {
+    pool.release_mat(a);
+    let a = pool.acquire_mat(4, 4);
+    pool.release_mat(a);
+}
+";
+        let f = run_one(src);
+        // one ordering finding; the trailing release balances the acquire
+        assert!(f.iter().any(|w| w.line == 2 && w.message.contains("released before")));
+    }
+
+    #[test]
+    fn kind_mismatch_is_flagged() {
+        let src = "\
+fn f(pool: &mut Pool) {
+    let a = pool.acquire_mat(4, 4);
+    pool.release_vec(a);
+}
+";
+        let f = run_one(src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("acquired as mat but released as vec"));
+    }
+
+    #[test]
+    fn early_try_leak_and_waiver() {
+        let src = "\
+fn f(pool: &mut Pool) -> Result<(), E> {
+    let a = pool.acquire_mat(4, 4);
+    step()?;
+    pool.release_mat(a);
+    Ok(())
+}
+";
+        let f = run_one(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+        assert!(f[0].message.contains("early `?` leaks acquired a"));
+
+        let waived = "\
+fn f(pool: &mut Pool) -> Result<(), E> {
+    let a = pool.acquire_mat(4, 4);
+    step()?; // lint: allow(leak-on-error): pool rebuilt on error path
+    pool.release_mat(a);
+    Ok(())
+}
+";
+        assert!(run_one(waived).is_empty());
+    }
+
+    #[test]
+    fn early_return_leak() {
+        let src = "\
+fn f(pool: &mut Pool, bail: bool) {
+    let a = pool.acquire_vec(8);
+    if bail {
+        return;
+    }
+    pool.release_vec(a);
+}
+";
+        let f = run_one(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].message.contains("early return leaks acquired a"));
+    }
+
+    #[test]
+    fn per_binding_leak_with_balanced_totals() {
+        let src = "\
+fn f(pool: &mut Pool) {
+    let a = pool.acquire_vec(8);
+    let b = pool.acquire_vec(8);
+    pool.release_vec(b);
+    pool.release_vec(b);
+}
+";
+        let f = run_one(src);
+        assert!(f.iter().any(|w| w.message.contains("`b` released twice")));
+        assert!(f
+            .iter()
+            .any(|w| w.line == 2 && w.message.contains("`a` acquired here is never released")));
+    }
+
+    #[test]
+    fn caller_owned_release_and_recycle_are_clean() {
+        let src = "\
+fn f(pool: &mut Pool, m: Mat) {
+    pool.release_mat(m);
+}
+
+fn g(pool: &mut Pool) {
+    let a = pool.acquire_mat(4, 4);
+    let b = pool.acquire_mat(4, 4);
+    pool.recycle(&mut [a, b]);
+}
+";
+        assert!(run_one(src).is_empty());
+    }
+
+    #[test]
+    fn transfers_buffers_waives_the_fn() {
+        let src = "\
+// lint: transfers-buffers: ownership moves into the model
+fn f(pool: &mut Pool) -> Result<Mat, E> {
+    let a = pool.acquire_mat(4, 4);
+    step()?;
+    Ok(a)
+}
+";
+        assert!(run_one(src).is_empty());
+    }
+}

@@ -144,8 +144,16 @@ pub fn lex(text: &str) -> Lexed {
             }
             State::Str => {
                 if c == '\\' {
-                    line_out.push_str("  ");
-                    i += 2;
+                    // A backslash escaping the newline (string continuation)
+                    // must NOT swallow it: the `\n` has to reach the top of
+                    // the loop so the per-line vectors stay in sync.
+                    if nxt == '\n' {
+                        line_out.push(' ');
+                        i += 1;
+                    } else {
+                        line_out.push_str("  ");
+                        i += 2;
+                    }
                 } else {
                     if c == '"' {
                         state = State::Normal;
@@ -176,8 +184,14 @@ pub fn lex(text: &str) -> Lexed {
             }
             State::Char => {
                 if c == '\\' {
-                    line_out.push_str("  ");
-                    i += 2;
+                    // Same newline guard as Str: never skip past a `\n`.
+                    if nxt == '\n' {
+                        line_out.push(' ');
+                        i += 1;
+                    } else {
+                        line_out.push_str("  ");
+                        i += 2;
+                    }
                 } else {
                     if c == '\'' {
                         state = State::Normal;
@@ -254,6 +268,55 @@ mod tests {
         let l2 = lex("let c = 'x'; let esc = '\\''; after();");
         assert!(!l2.masked[0].contains('x'));
         assert!(l2.masked[0].contains("after();"));
+    }
+
+    #[test]
+    fn raw_string_hashes_inside_nested_block_comments() {
+        // The `r#"…"#` inside a comment is prose, not a string: the
+        // comment state machine must keep nesting, and the code after the
+        // outer close must survive on the masked view.
+        let l = lex("/* outer /* r#\"deep\"# */ tail */ let a = vec![1];");
+        assert!(l.masked[0].contains("let a = vec![1];"));
+        assert!(l.comments[0].contains("r#\"deep\"#"));
+        // And the dual: a block-comment opener inside a raw string is data.
+        let l2 = lex("let s = r#\"/* not a comment \"quote\" */\"#; after();");
+        assert!(l2.masked[0].contains("after();"));
+        assert!(!l2.masked[0].contains("not a comment"));
+    }
+
+    #[test]
+    fn byte_char_literals_are_masked_not_lifetimes() {
+        let l = lex("let b = b'x'; after();");
+        assert!(!l.masked[0].contains('x'));
+        assert!(l.masked[0].contains("after();"));
+        let esc = lex("let b = b'\\''; after();");
+        assert!(esc.masked[0].contains("after();"));
+        // A generic lifetime and a byte char on the same line must not
+        // bleed into each other.
+        let both = lex("fn f<'a>(x: &'a [u8]) { let c = b'a'; g(c); }");
+        assert!(both.masked[0].contains("<'a>"));
+        assert!(both.masked[0].contains("g(c);"));
+    }
+
+    #[test]
+    fn static_lifetime_adjacent_to_angle_bracket() {
+        let l = lex("let m: Map<'static, u8> = m2; after();");
+        assert!(l.masked[0].contains("<'static, u8>"));
+        assert!(l.masked[0].contains("after();"));
+        let bound = lex("fn g<'s>() where 's: 'static {}");
+        assert!(bound.masked[0].contains("'s: 'static"));
+    }
+
+    #[test]
+    fn backslash_newline_in_string_keeps_line_vectors_in_sync() {
+        // A string continuation (`\` at end of line) used to swallow the
+        // newline, desyncing raw vs masked/comments line counts.
+        let l = lex("let s = \"line one \\\n  continued\"; after();\nlast();");
+        assert_eq!(l.raw.len(), 3);
+        assert_eq!(l.masked.len(), 3);
+        assert_eq!(l.comments.len(), 3);
+        assert!(l.masked[1].contains("after();"));
+        assert!(l.masked[2].contains("last();"));
     }
 
     #[test]

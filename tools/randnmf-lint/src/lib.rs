@@ -6,27 +6,41 @@
 //! hand-audit checklist:
 //!
 //! * **L1** buffer-pool discipline (`acquire_*` / `release_*` / `recycle`)
-//! * **L2** zero-alloc hygiene in annotated warm-path fns
+//! * **L2** zero-alloc hygiene in annotated warm-path fns, including the
+//!   inter-procedural call-path closure (`callgraph`)
 //! * **L3** `// SAFETY:` comments on every `unsafe`
 //! * **L4** dispatch exhaustiveness over `SketchKind` / `SolverKind`,
 //!   plus the failpoints feature-gating tripwire
 //! * **L5** 100-column lines and comment/string-aware bracket balance
+//! * **L6** per-binding buffer dataflow: double release, release before
+//!   acquire, kind mismatch, early-`return`/`?` leak paths (`dataflow`)
+//! * **L7** determinism: no `HashMap`/`HashSet` in numeric paths,
+//!   `deterministic-reduce(<reason>)` on every split/reduce call site
 //!
 //! Rules, rationale, and the annotation/waiver syntax are documented in
 //! `docs/STATIC_ANALYSIS.md`. Run it from the repo root:
 //!
 //! ```text
-//! cargo run -p randnmf-lint -- rust/src
+//! cargo run -p randnmf-lint -- rust/src rust/tests rust/benches tools
 //! ```
 //!
 //! Exit status is 0 when the tree is clean, 1 with `path:line: [Lx] ...`
-//! findings on stdout otherwise, 2 on I/O errors.
+//! findings on stdout otherwise, 2 on I/O errors. `--format sarif`
+//! switches stdout to a SARIF 2.1.0 document for code-scanning upload.
+//!
+//! Directory recursion skips subdirectories named `fixtures` — they hold
+//! the intentionally-violating lint corpus. Passing such a directory as
+//! an explicit root still scans it (that is how the corpus tests run).
 
+pub mod callgraph;
+pub mod dataflow;
 pub mod functions;
 pub mod lexer;
 pub mod lints;
+pub mod sarif;
 
 pub use lints::{Finding, SourceFile, BANNED, REQUIRED_DISPATCH};
+pub use sarif::to_sarif;
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -72,6 +86,11 @@ fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
     entries.sort();
     for p in entries {
         if p.is_dir() {
+            // The fixtures corpus violates the lints on purpose; it is
+            // only scanned when passed as an explicit root.
+            if p.file_name().is_some_and(|n| n == "fixtures") {
+                continue;
+            }
             walk(&p, out)?;
         } else if p.extension().is_some_and(|x| x == "rs") {
             out.push(p);

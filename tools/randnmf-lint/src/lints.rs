@@ -40,6 +40,17 @@ pub const BANNED: [&str; 7] =
 /// them must re-register its match sites, not silently drop the check.
 pub const REQUIRED_DISPATCH: [&str; 2] = ["SketchKind", "SolverKind"];
 
+/// Path segments marking determinism-scoped code (L7a): anything under
+/// these directories feeds the reproducible numeric pipeline.
+pub const DET_SCOPED: [&str; 5] = ["linalg/", "sketch/", "nmf/", "runtime/", "coordinator/"];
+
+/// Unordered std collections banned in determinism-scoped paths (L7a).
+pub const UNORDERED: [&str; 2] = ["HashMap", "HashSet"];
+
+/// Split/reduce entry points whose call sites must justify a fixed
+/// reduce order (L7b).
+pub const REDUCE_CALLS: [&str; 2] = ["run_row_split", "inner_split_reduce"];
+
 /// One lint finding. `line` is 1-based (editor-clickable `path:line`).
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Finding {
@@ -89,7 +100,9 @@ pub fn lint(files: &[SourceFile]) -> Vec<Finding> {
     }
     for (fi, file) in files.iter().enumerate() {
         lint_file(file, fi, &mut findings, &mut surfaces);
+        crate::dataflow::lint_dataflow(file, &mut findings);
     }
+    crate::callgraph::lint_callgraph(files, &mut findings);
 
     // L4 dispatch resolution: every registered surface must mention every
     // variant of its enum somewhere in the fn body.
@@ -260,6 +273,9 @@ fn lint_file(
         }
     }
 
+    // ---- L7: determinism rules.
+    lint_determinism(file, findings);
+
     // ---- Per-fn lints.
     for (fni, f) in file.fns.iter().enumerate() {
         // L1 workspace discipline: acquires balanced by releases/recycle.
@@ -332,6 +348,83 @@ fn lint_file(
     }
 }
 
+/// L7 — determinism rules.
+///
+/// * **L7a**: `HashMap`/`HashSet` are banned in determinism-scoped paths
+///   ([`DET_SCOPED`]) — iteration order is unordered, and float
+///   accumulation over an unordered collection is non-reproducible.
+///   Waive a line with `// lint: allow(determinism): <why>`.
+/// * **L7b**: every `run_row_split` / `inner_split_reduce` call site must
+///   carry a `// lint: deterministic-reduce(<reason>)` annotation (same
+///   line or the contiguous comment block above) naming why its reduce
+///   order is fixed.
+fn lint_determinism(file: &SourceFile, findings: &mut Vec<Finding>) {
+    let lx = &file.lx;
+    let mut report = |line: usize, message: String| {
+        findings.push(Finding { path: file.path.clone(), line: line + 1, code: "L7", message });
+    };
+
+    // Same-line or contiguous comment/attribute block above the call.
+    let line_waived = |i: usize, marker: &str| -> bool {
+        if lx.comments[i].contains(marker) {
+            return true;
+        }
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let code = lx.masked[j].trim();
+            let com = &lx.comments[j];
+            if !com.is_empty() && code.is_empty() {
+                if com.contains(marker) {
+                    return true;
+                }
+                continue;
+            }
+            if code.starts_with("#[") || code.starts_with("#![") {
+                continue;
+            }
+            return false;
+        }
+        false
+    };
+
+    let det_path = {
+        let p = file.path.replace('\\', "/");
+        DET_SCOPED.iter().any(|seg| p.contains(seg))
+    };
+    if det_path {
+        for (i, line) in lx.masked.iter().enumerate() {
+            for ty in UNORDERED {
+                if find_word(line, ty).is_some() && !line_waived(i, "allow(determinism)") {
+                    report(
+                        i,
+                        format!(
+                            "`{ty}` in a determinism-scoped path (unordered iteration; \
+                             use BTreeMap/BTreeSet or waive: \
+                             `// lint: allow(determinism): <why>`)"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    for (i, line) in lx.masked.iter().enumerate() {
+        let code = blank_fn_decls(line);
+        for name in REDUCE_CALLS {
+            if count_calls(&code, &[name]) > 0 && !line_waived(i, "deterministic-reduce(") {
+                report(
+                    i,
+                    format!(
+                        "`{name}` call site lacks a `// lint: deterministic-reduce(<reason>)` \
+                         annotation naming why its reduce order is fixed"
+                    ),
+                );
+            }
+        }
+    }
+}
+
 /// `dispatch(EnumName)` annotation → `EnumName`.
 fn dispatch_target(anno: &str) -> Option<&str> {
     let rest = anno.strip_prefix("dispatch(")?;
@@ -345,7 +438,7 @@ fn dispatch_target(anno: &str) -> Option<&str> {
 
 /// Blank every `fn <name>` declaration on the line so the name is not
 /// counted as a call by [`count_calls`].
-fn blank_fn_decls(line: &str) -> String {
+pub(crate) fn blank_fn_decls(line: &str) -> String {
     let mut chars: Vec<char> = line.chars().collect();
     let mut i = 0;
     while i < chars.len() {
@@ -381,7 +474,7 @@ fn is_ident(c: char) -> bool {
 
 /// Count call sites: a word-boundary occurrence of any `name`, followed
 /// by optional whitespace and `(`.
-fn count_calls(code: &str, names: &[&str]) -> usize {
+pub(crate) fn count_calls(code: &str, names: &[&str]) -> usize {
     let mut total = 0;
     for name in names {
         let mut base = 0;
@@ -563,6 +656,63 @@ use crate::testing::failpoints;
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].code, "L4");
         assert!(f[0].message.contains("not cfg-gated"));
+    }
+
+    #[test]
+    fn l7_unordered_collections_scoped_to_det_paths() {
+        let src =
+            "use std::collections::HashMap;\nfn f(m: &HashMap<u32, f64>) -> usize { m.len() }\n";
+        // Determinism-scoped path: both mentions flagged.
+        let f = lint(&[SourceFile::parse("rust/src/runtime/registry.rs", src)]);
+        let l7: Vec<_> = f.iter().filter(|w| w.code == "L7").collect();
+        assert_eq!(l7.len(), 2);
+        assert!(l7[0].message.contains("`HashMap` in a determinism-scoped path"));
+        // Outside the scoped paths: clean.
+        let f = lint(&[SourceFile::parse("rust/src/io/loader.rs", src)]);
+        assert!(f.iter().all(|w| w.code != "L7"));
+    }
+
+    #[test]
+    fn l7_determinism_waiver() {
+        let src = "\
+// lint: allow(determinism): keys are read once, order never observed
+use std::collections::HashMap;
+fn f(m: &HashMap<u32, f64>) -> usize {
+    // lint: allow(determinism): len() is order-free
+    m.len()
+}
+";
+        let f = lint(&[SourceFile::parse("rust/src/runtime/registry.rs", src)]);
+        // line 3 (the fn signature mention) has no waiver and still fires
+        let l7: Vec<_> = f.iter().filter(|w| w.code == "L7").collect();
+        assert_eq!(l7.len(), 1);
+        assert_eq!(l7[0].line, 3);
+    }
+
+    #[test]
+    fn l7_reduce_call_sites_need_annotation() {
+        let bare = "\
+fn f(pool: &mut Pool) {
+    pool.run_row_split(8, |r| r.sum());
+}
+";
+        let f = run_one(bare);
+        assert_eq!(f.iter().filter(|w| w.code == "L7").count(), 1);
+        assert!(f
+            .iter()
+            .any(|w| w.code == "L7" && w.message.contains("`run_row_split` call site lacks")));
+
+        let annotated = "\
+fn f(pool: &mut Pool) {
+    // lint: deterministic-reduce(row chunks joined in index order)
+    pool.run_row_split(8, |r| r.sum());
+    pool.inner_split_reduce(4, acc); // lint: deterministic-reduce(fixed tree)
+}
+";
+        assert!(run_one(annotated).iter().all(|w| w.code != "L7"));
+        // The definition of the entry point itself is not a call site.
+        let decl = "fn run_row_split(n: usize) -> usize {\n    n\n}\n";
+        assert!(run_one(decl).iter().all(|w| w.code != "L7"));
     }
 
     #[test]

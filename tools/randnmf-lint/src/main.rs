@@ -1,19 +1,47 @@
-//! CLI entry point. `randnmf-lint [PATH...]` — defaults to `rust/src`
-//! (run from the repo root, as CI does).
+//! CLI entry point. `randnmf-lint [--format text|sarif] [PATH...]` —
+//! defaults to `rust/src` (run from the repo root, as CI does).
 
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let roots = if args.is_empty() {
-        vec!["rust/src".to_string()]
-    } else {
-        args
-    };
+    let mut format = String::from("text");
+    let mut roots: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--format" {
+            match args.next() {
+                Some(f) if f == "text" || f == "sarif" => format = f,
+                Some(f) => {
+                    eprintln!("randnmf-lint: unknown format `{f}` (expected text|sarif)");
+                    return ExitCode::from(2);
+                }
+                None => {
+                    eprintln!("randnmf-lint: --format requires a value (text|sarif)");
+                    return ExitCode::from(2);
+                }
+            }
+        } else if let Some(f) = a.strip_prefix("--format=") {
+            if f == "text" || f == "sarif" {
+                format = f.to_string();
+            } else {
+                eprintln!("randnmf-lint: unknown format `{f}` (expected text|sarif)");
+                return ExitCode::from(2);
+            }
+        } else {
+            roots.push(a);
+        }
+    }
+    if roots.is_empty() {
+        roots.push("rust/src".to_string());
+    }
     match randnmf_lint::run(&roots) {
         Ok(report) => {
-            for f in &report.findings {
-                println!("{f}");
+            if format == "sarif" {
+                print!("{}", randnmf_lint::to_sarif(&report.findings));
+            } else {
+                for f in &report.findings {
+                    println!("{f}");
+                }
             }
             eprintln!("-- {} findings over {} files", report.findings.len(), report.files_scanned);
             if report.findings.is_empty() {

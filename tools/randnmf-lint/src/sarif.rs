@@ -1,0 +1,127 @@
+//! SARIF 2.1.0 output for CI code-scanning upload.
+//!
+//! Hand-rolled JSON (the tool is dependency-free by design): the schema
+//! subset emitted here is the minimum GitHub code scanning consumes —
+//! one run, a `tool.driver` with per-rule metadata, and one `result` per
+//! finding with a `physicalLocation`. Paths are emitted exactly as
+//! scanned (repo-root-relative when the tool is run from the repo root,
+//! as CI does), which is what the upload action expects.
+
+use crate::lints::Finding;
+
+/// (rule id, short description) — one entry per lint family.
+const RULES: [(&str, &str); 7] = [
+    ("L1", "workspace buffer-pool acquire/release balance"),
+    ("L2", "zero-alloc hygiene in annotated warm-path fns (incl. call-path closure)"),
+    ("L3", "SAFETY comments on unsafe"),
+    ("L4", "dispatch exhaustiveness and failpoints gating"),
+    ("L5", "line length and bracket balance"),
+    ("L6", "per-binding buffer dataflow (double release, leaks, kind mismatch)"),
+    ("L7", "determinism (unordered collections, reduce-order annotations)"),
+];
+
+/// Escape a string for embedding in a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render `findings` as a SARIF 2.1.0 document.
+pub fn to_sarif(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"$schema\": \"https://json.schemastore.org/sarif-2.1.0.json\",\n");
+    out.push_str("  \"version\": \"2.1.0\",\n");
+    out.push_str("  \"runs\": [\n    {\n");
+    out.push_str("      \"tool\": {\n        \"driver\": {\n");
+    out.push_str("          \"name\": \"randnmf-lint\",\n");
+    out.push_str(
+        "          \"informationUri\": \
+         \"https://example.invalid/randnmf/docs/STATIC_ANALYSIS.md\",\n",
+    );
+    out.push_str("          \"rules\": [\n");
+    for (i, (id, desc)) in RULES.iter().enumerate() {
+        out.push_str(&format!(
+            "            {{\"id\": \"{id}\", \"shortDescription\": {{\"text\": \"{}\"}}}}{}\n",
+            esc(desc),
+            if i + 1 < RULES.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("          ]\n        }\n      },\n");
+    out.push_str("      \"results\": [\n");
+    for (i, f) in findings.iter().enumerate() {
+        out.push_str("        {\n");
+        out.push_str(&format!("          \"ruleId\": \"{}\",\n", esc(f.code)));
+        out.push_str("          \"level\": \"error\",\n");
+        out.push_str(&format!(
+            "          \"message\": {{\"text\": \"{}\"}},\n",
+            esc(&f.message)
+        ));
+        out.push_str("          \"locations\": [\n            {\n");
+        out.push_str("              \"physicalLocation\": {\n");
+        out.push_str(&format!(
+            "                \"artifactLocation\": {{\"uri\": \"{}\"}},\n",
+            esc(&f.path)
+        ));
+        out.push_str(&format!(
+            "                \"region\": {{\"startLine\": {}}}\n",
+            f.line
+        ));
+        out.push_str("              }\n            }\n          ]\n");
+        out.push_str(&format!(
+            "        }}{}\n",
+            if i + 1 < findings.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("      ]\n    }\n  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_schema_rules_and_one_result_per_finding() {
+        let findings = vec![
+            Finding {
+                path: "rust/src/a.rs".to_string(),
+                line: 7,
+                code: "L2",
+                message: "fn hot: `vec!` in zero-alloc fn".to_string(),
+            },
+            Finding {
+                path: "rust/src/b.rs".to_string(),
+                line: 12,
+                code: "L7",
+                message: "quote \" and backslash \\ survive".to_string(),
+            },
+        ];
+        let s = to_sarif(&findings);
+        assert!(s.contains("\"version\": \"2.1.0\""));
+        assert!(s.contains("\"name\": \"randnmf-lint\""));
+        assert_eq!(s.matches("\"ruleId\"").count(), 2);
+        assert!(s.contains("\"uri\": \"rust/src/a.rs\""));
+        assert!(s.contains("\"startLine\": 7"));
+        // escaping: the quote/backslash in the message must be JSON-escaped
+        assert!(s.contains("quote \\\" and backslash \\\\ survive"));
+        // all seven rule families are declared
+        for (id, _) in RULES {
+            assert!(s.contains(&format!("\"id\": \"{id}\"")));
+        }
+        // empty findings → an empty results array, still valid
+        let empty = to_sarif(&[]);
+        assert!(empty.contains("\"results\": [\n      ]"));
+    }
+}

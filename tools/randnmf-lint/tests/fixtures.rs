@@ -138,17 +138,150 @@ fn l5_brackets_in_strings_and_comments_are_clean() {
 }
 
 #[test]
+fn l6_double_release_is_flagged_at_the_second_release() {
+    let f = lint_fixture("l6_double.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L6");
+    assert_eq!(f[0].line, 6);
+    assert!(f[0].message.contains("fn double_release: `a` released twice"));
+}
+
+#[test]
+fn l6_release_before_acquire_is_flagged() {
+    let f = lint_fixture("l6_order.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L6");
+    assert_eq!(f[0].line, 4);
+    assert!(f[0].message.contains("`v` released before it is acquired"));
+}
+
+#[test]
+fn l6_kind_mismatch_is_flagged_at_the_release() {
+    let f = lint_fixture("l6_kind.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L6");
+    assert_eq!(f[0].line, 6);
+    assert!(f[0].message.contains("`m` acquired as mat but released as vec"));
+}
+
+#[test]
+fn l6_early_exits_with_outstanding_buffers_are_flagged() {
+    let f = lint_fixture("l6_leak.rs");
+    assert_eq!(f.len(), 2, "{}", render(&f));
+    assert!(f.iter().all(|w| w.code == "L6"));
+    assert!(
+        f.iter().any(|w| w.line == 5 && w.message.contains("early `?` leaks acquired a")),
+        "{}",
+        render(&f)
+    );
+    assert!(
+        f.iter().any(|w| w.line == 13 && w.message.contains("early return leaks acquired b")),
+        "{}",
+        render(&f)
+    );
+}
+
+#[test]
+fn l6_waivers_recycle_and_caller_owned_releases_are_clean() {
+    assert_clean("l6_clean.rs");
+}
+
+#[test]
+fn l7_unordered_collections_in_scoped_path_are_flagged_per_line() {
+    let f = lint_fixture("runtime/l7_unordered.rs");
+    assert_eq!(f.len(), 3, "{}", render(&f));
+    for line in [4, 6, 7] {
+        assert!(
+            f.iter().any(|w| w.code == "L7"
+                && w.line == line
+                && w.message.contains("`HashMap` in a determinism-scoped path")),
+            "missing HashMap finding at line {line} in:\n{}",
+            render(&f)
+        );
+    }
+}
+
+#[test]
+fn l7_waived_unordered_collections_are_clean() {
+    assert_clean("runtime/l7_clean.rs");
+}
+
+#[test]
+fn l7_unannotated_reduce_call_sites_are_flagged() {
+    let f = lint_fixture("l7_reduce.rs");
+    assert_eq!(f.len(), 2, "{}", render(&f));
+    assert!(
+        f.iter().any(|w| w.code == "L7"
+            && w.line == 5
+            && w.message.contains("`run_row_split` call site lacks")),
+        "{}",
+        render(&f)
+    );
+    assert!(
+        f.iter().any(|w| w.code == "L7"
+            && w.line == 6
+            && w.message.contains("`inner_split_reduce` call site lacks")),
+        "{}",
+        render(&f)
+    );
+}
+
+#[test]
+fn l7_annotated_reduce_sites_and_declarations_are_clean() {
+    assert_clean("l7_reduce_clean.rs");
+}
+
+#[test]
+fn callgraph_closure_reports_the_full_path_to_the_allocation() {
+    let f = lint_fixture("cg_closure.rs");
+    assert_eq!(f.len(), 1, "{}", render(&f));
+    assert_eq!(f[0].code, "L2");
+    assert_eq!(f[0].line, 6);
+    assert!(
+        f[0].message.contains("zero-alloc call path root -> middle -> leaf"),
+        "{}",
+        render(&f)
+    );
+    assert!(f[0].message.contains("cg_closure.rs:14"), "{}", render(&f));
+}
+
+#[test]
+fn callgraph_stops_at_annotated_waived_ambiguous_and_std_names() {
+    assert_clean("cg_clean.rs");
+}
+
+#[test]
 fn whole_corpus_totals_are_stable() {
     let dir = format!("{}/fixtures", env!("CARGO_MANIFEST_DIR"));
     let report = run(&[dir]).expect("fixtures readable");
-    assert_eq!(report.files_scanned, 14);
-    // 1 L1 + 7 L2 + 1 L3 + 3 L4 (missing variant, unregistered core
-    // enum, ungated failpoints) + 2 L5.
-    assert_eq!(report.findings.len(), 14, "{}", render(&report.findings));
+    assert_eq!(report.files_scanned, 25);
+    // 1 L1 + 8 L2 (7 banned tokens + 1 closure path) + 1 L3 + 3 L4
+    // (missing variant, unregistered core enum, ungated failpoints)
+    // + 2 L5 + 5 L6 + 5 L7.
+    assert_eq!(report.findings.len(), 25, "{}", render(&report.findings));
     let count = |c: &str| report.findings.iter().filter(|w| w.code == c).count();
     assert_eq!(count("L1"), 1);
-    assert_eq!(count("L2"), 7);
+    assert_eq!(count("L2"), 8);
     assert_eq!(count("L3"), 1);
     assert_eq!(count("L4"), 3);
     assert_eq!(count("L5"), 2);
+    assert_eq!(count("L6"), 5);
+    assert_eq!(count("L7"), 5);
+}
+
+#[test]
+fn fixture_ledger_matches_byte_for_byte() {
+    // The golden ledger pins every finding — rule, position, and full
+    // message text — across the whole corpus. CI re-derives it from a
+    // `cargo run` over `fixtures/` and diffs; this test does the same
+    // in-process so a drifting message fails before it reaches CI.
+    let manifest = env!("CARGO_MANIFEST_DIR");
+    let report = run(&[format!("{manifest}/fixtures")]).expect("fixtures readable");
+    let rendered: String = report
+        .findings
+        .iter()
+        .map(|f| f.to_string().replace(&format!("{manifest}/"), "") + "\n")
+        .collect();
+    let golden = include_str!("../fixtures/LEDGER.txt");
+    assert_eq!(rendered, golden, "fixtures/LEDGER.txt is stale; regenerate it");
 }

@@ -1,0 +1,91 @@
+//! Seeded-defect regression tests.
+//!
+//! The fixtures prove the rules fire on synthetic code; these prove
+//! they fire on the *real* tree. Each test copies a production file
+//! into a scratch directory, removes exactly one invariant-carrying
+//! line (a pool release, a deterministic-reduce annotation), and
+//! asserts the lint run flips to failure with the offending site named
+//! in the message. If a rule rots to the point where it no longer
+//! catches the very defect it was built for, this is what fails.
+
+use std::fs;
+use std::path::PathBuf;
+
+fn scratch(sub: &str) -> PathBuf {
+    let tag = format!("randnmf-lint-seeded-{}-{sub}", std::process::id());
+    let dir = std::env::temp_dir().join(tag);
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+fn real_source(rel: &str) -> String {
+    let path = format!("{}/../../{rel}", env!("CARGO_MANIFEST_DIR"));
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"))
+}
+
+#[test]
+fn removing_one_release_from_srht_flips_the_lint_to_failure() {
+    let src = real_source("rust/src/sketch/srht.rs");
+    let needle = "ws.release_vec(stage);";
+    assert!(src.contains(needle), "seed target moved; update this test");
+    let mut dropped = false;
+    let mutated: String = src
+        .lines()
+        .filter(|l| {
+            if !dropped && l.trim() == needle {
+                dropped = true;
+                return false;
+            }
+            true
+        })
+        .map(|l| format!("{l}\n"))
+        .collect();
+    assert!(dropped, "no line matched the seed target exactly");
+
+    let dir = scratch("srht");
+    fs::write(dir.join("srht.rs"), mutated).expect("write mutated copy");
+    let report = randnmf_lint::run(&[dir.display().to_string()]).expect("scratch readable");
+    let _ = fs::remove_dir_all(&dir);
+
+    assert!(!report.findings.is_empty(), "seeded leak went undetected");
+    assert!(
+        report
+            .findings
+            .iter()
+            .any(|f| f.code == "L1" && f.message.contains("fn srht_sketch_apply")),
+        "expected an L1 finding naming srht_sketch_apply, got:\n{}",
+        report.findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn removing_one_reduce_annotation_from_gemm_flips_the_lint_to_failure() {
+    let src = real_source("rust/src/linalg/gemm.rs");
+    // The annotation is a two-line comment block; drop both lines so
+    // the call site below is genuinely unannotated.
+    let marker = "deterministic-reduce(disjoint row chunks";
+    assert!(src.contains(marker), "seed target moved; update this test");
+    let lines: Vec<&str> = src.lines().collect();
+    let at = lines.iter().position(|l| l.contains(marker)).unwrap();
+    let mutated: String = lines
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != at && *i != at + 1)
+        .map(|(_, l)| format!("{l}\n"))
+        .collect();
+
+    let dir = scratch("gemm");
+    fs::write(dir.join("gemm.rs"), mutated).expect("write mutated copy");
+    let report = randnmf_lint::run(&[dir.display().to_string()]).expect("scratch readable");
+    let _ = fs::remove_dir_all(&dir);
+
+    assert!(
+        report
+            .findings
+            .iter()
+            .any(|f| f.code == "L7" && f.message.contains("`run_row_split` call site lacks")),
+        "expected an L7 finding at the stripped call site, got:\n{}",
+        report.findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
